@@ -1,0 +1,62 @@
+//! Figure 1: DCD vs s-step DCD convergence (duality gap) for K-SVM-L1 and
+//! K-SVM-L2 — duke- and diabetes-like datasets, linear / poly(d=3,c=0) /
+//! rbf(σ=1) kernels.
+//!
+//! Reproduction target: the s-step series (s up to 64) overlays the
+//! classical series at every sampled iteration, for every dataset ×
+//! kernel × variant — i.e. the s-step method is numerically stable and
+//! attains the same solution, the paper's §5.1 claim.
+
+use kcd::bench_harness::{quick_mode, section};
+use kcd::coordinator::figures::{max_series_deviation, svm_gap_series};
+use kcd::coordinator::report::Table;
+use kcd::data::paper_dataset;
+use kcd::kernelfn::Kernel;
+use kcd::solvers::SvmVariant;
+
+fn main() {
+    let quick = quick_mode();
+    let h = if quick { 384 } else { 4096 };
+    let every = h / 16;
+    let s_values = [4usize, 16, 64];
+
+    section("Figure 1 — K-SVM duality-gap convergence, DCD vs s-step DCD");
+    println!("H = {h}, gap sampled every {every} iters; overlay = max |gap_s − gap_classical|\n");
+
+    let mut worst: f64 = 0.0;
+    for name in ["duke", "diabetes"] {
+        let scale = if quick && name == "diabetes" { 0.15 } else { 1.0 };
+        let ds = paper_dataset(name).unwrap().generate_scaled(scale);
+        let mut t = Table::new(vec![
+            "kernel", "variant", "gap@0", "final gap", "overlay s=4", "s=16", "s=64",
+        ]);
+        for kernel in [Kernel::Linear, Kernel::paper_poly(), Kernel::paper_rbf()] {
+            for variant in [SvmVariant::L1, SvmVariant::L2] {
+                let classical = svm_gap_series(&ds, kernel, variant, 1.0, h, 1, 21, every);
+                let devs: Vec<f64> = s_values
+                    .iter()
+                    .map(|&s| {
+                        let ss = svm_gap_series(&ds, kernel, variant, 1.0, h, s, 21, every);
+                        max_series_deviation(&classical, &ss)
+                    })
+                    .collect();
+                worst = worst.max(devs.iter().cloned().fold(0.0, f64::max));
+                t.row(vec![
+                    kernel.name().to_string(),
+                    format!("{variant:?}"),
+                    format!("{:.3e}", classical.first().unwrap().1),
+                    format!("{:.3e}", classical.last().unwrap().1),
+                    format!("{:.1e}", devs[0]),
+                    format!("{:.1e}", devs[1]),
+                    format!("{:.1e}", devs[2]),
+                ]);
+            }
+        }
+        println!("### {} ({}×{})", ds.name, ds.m(), ds.n());
+        print!("{}", t.markdown());
+        println!();
+    }
+    println!("worst overlay deviation across all configurations: {worst:.2e}");
+    assert!(worst < 1e-7, "Figure 1 reproduction failed: s-step diverged from DCD");
+    println!("Fig 1 shape reproduced: s-step DCD ≡ DCD at every sampled iteration ✓");
+}

@@ -1,0 +1,76 @@
+//! Figure 7: running-time breakdown of BDCD vs s-step (CA-)BDCD on the
+//! news20-like dataset, b = 4, P = 2048, as s varies.
+//!
+//! Reproduction targets from the paper's §5.2.3 discussion:
+//!   * overall s-step benefit reduces to ≈1.14×;
+//!   * allreduce (bandwidth) becomes a growing fraction with s — over
+//!     45% of runtime at s = 256 / P = 2048, vs much less at P = 128;
+//!   * gradient-correction and memory-reset overheads grow with s.
+
+use kcd::bench_harness::{quick_mode, section};
+use kcd::comm::AllreduceAlgo;
+use kcd::coordinator::breakdown::breakdown;
+use kcd::coordinator::report::breakdown_table;
+use kcd::coordinator::ProblemSpec;
+use kcd::costmodel::{MachineProfile, Phase};
+use kcd::data::paper_dataset;
+use kcd::kernelfn::Kernel;
+
+fn main() {
+    let quick = quick_mode();
+    section("Figure 7 — news20.binary K-RR (b = 4) breakdown vs s");
+    let scale = if quick { 0.1 } else { 0.5 };
+    let ds = paper_dataset("news20").unwrap().generate_scaled(scale);
+    let machine = MachineProfile::cray_ex();
+    let problem = ProblemSpec::Krr { lambda: 1.0, b: 4 };
+    let h = if quick { 64 } else { 512 };
+    let s_list = [4usize, 16, 64, 256];
+
+    let frac = |bars: &[kcd::coordinator::breakdown::BreakdownBar], i: usize, ph: Phase| {
+        bars[i].projection.phase_secs(ph) / bars[i].projection.total_secs()
+    };
+
+    let mut ar_frac_by_p = Vec::new();
+    for p in [128usize, 2048] {
+        let bars = breakdown(
+            &ds,
+            Kernel::paper_rbf(),
+            &problem,
+            &s_list,
+            h,
+            p,
+            AllreduceAlgo::Rabenseifner,
+            &machine,
+            0,
+        );
+        println!("\n### P = {p}");
+        print!("{}", breakdown_table(&bars).markdown());
+        let last = bars.len() - 1; // s = 256
+        let ar = frac(&bars, last, Phase::Allreduce);
+        println!("allreduce fraction at s=256: {:.0}%", ar * 100.0);
+        ar_frac_by_p.push(ar);
+
+        if p == 2048 {
+            let t: Vec<f64> = bars.iter().map(|b| b.projection.total_secs()).collect();
+            let best = t.iter().cloned().fold(f64::MAX, f64::min);
+            let speedup = t[0] / best;
+            println!("best s-step speedup at P=2048: {speedup:.2}x (paper: 1.14x)");
+            if !quick {
+                assert!(
+                    speedup < 2.5,
+                    "bandwidth-bound: win must be modest, got {speedup:.2}"
+                );
+            }
+            // Overheads grow with s.
+            let oh = |i: usize| {
+                frac(&bars, i, Phase::GradCorr) + frac(&bars, i, Phase::MemReset)
+            };
+            assert!(oh(last) > oh(1), "gradcorr+memreset share must grow with s");
+        }
+    }
+    assert!(
+        ar_frac_by_p[1] > ar_frac_by_p[0],
+        "allreduce share at s=256 must be larger at P=2048 than at P=128: {ar_frac_by_p:?}"
+    );
+    println!("\nFig 7 shape reproduced: allreduce-dominated at large s·P, modest win ✓");
+}

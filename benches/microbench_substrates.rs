@@ -1,0 +1,155 @@
+//! Substrate microbenchmarks — the wall-clock harness behind the §Perf
+//! optimization pass (EXPERIMENTS.md): dense GEMM, sparse sampled gram,
+//! kernel maps, allreduce algorithms, small solves, and PJRT artifact
+//! execution.
+
+use kcd::bench_harness::{bench, black_box, section, BenchConfig};
+use kcd::comm::{allreduce_sum, run_ranks, AllreduceAlgo};
+use kcd::costmodel::Ledger;
+use kcd::dense::{gemm_nt, Cholesky, Mat};
+use kcd::kernelfn::Kernel;
+use kcd::rng::Pcg;
+use kcd::solvers::{GramOracle, LocalGram};
+use kcd::sparse::Csr;
+
+fn rand_mat(rng: &mut Pcg, m: usize, n: usize) -> Mat {
+    Mat::from_fn(m, n, |_, _| rng.next_gaussian())
+}
+
+fn main() {
+    let cfg = BenchConfig::default();
+    let mut rng = Pcg::seeded(1);
+
+    section("dense substrate");
+    let a = rand_mat(&mut rng, 256, 128);
+    let b = rand_mat(&mut rng, 256, 128);
+    let mut c = Mat::zeros(256, 256);
+    let r = bench("gemm_nt 256x128 · 128x256", &cfg, || {
+        gemm_nt(&a, &b, &mut c);
+        c.data()[0]
+    });
+    let flops = 2.0 * 256.0 * 256.0 * 128.0;
+    println!("  → {:.2} GF/s", flops / r.median() / 1e9);
+
+    let spd = {
+        let mut g = Mat::zeros(128, 128);
+        let x = rand_mat(&mut rng, 128, 128);
+        gemm_nt(&x, &x, &mut g);
+        for i in 0..128 {
+            g[(i, i)] += 128.0;
+        }
+        g
+    };
+    let rhs: Vec<f64> = (0..128).map(|_| rng.next_gaussian()).collect();
+    bench("cholesky factor+solve 128x128", &cfg, || {
+        Cholesky::new(&spd).unwrap().solve(&rhs)
+    });
+
+    section("sparse substrate");
+    let ds = kcd::data::gen_uniform_sparse(
+        kcd::data::SynthParams {
+            m: 2000,
+            n: 8000,
+            density: 0.01,
+            seed: 3,
+        },
+        kcd::data::Task::Classification,
+    );
+    let sample: Vec<usize> = (0..32).map(|i| i * 60).collect();
+    let mut q = Mat::zeros(32, 2000);
+    let mut scratch = Vec::new();
+    let r = bench("sampled_gram (scatter) 32 rows 2000x8000 @1%", &cfg, || {
+        ds.a.sampled_gram(&sample, &mut q, &mut scratch);
+        q.data()[0]
+    });
+    let eff_flops = 2.0 * 32.0 * ds.a.nnz() as f64;
+    println!("  → {:.2} GF/s effective", eff_flops / r.median() / 1e9);
+    let at = ds.a.transpose();
+    let rt = bench("sampled_gram_t (transpose) same shape", &cfg, || {
+        ds.a.sampled_gram_t(&at, &sample, &mut q);
+        q.data()[0]
+    });
+    println!(
+        "  → {:.1}x over scatter variant (the sparse-oracle fast path)",
+        r.median() / rt.median()
+    );
+
+    section("kernel maps (epilogue over 32x2000 block)");
+    let norms = vec![1.0; 2000];
+    let snorms = vec![1.0; 32];
+    for kernel in [Kernel::Linear, Kernel::paper_poly(), Kernel::paper_rbf()] {
+        let mut z = q.clone();
+        bench(&format!("apply_block {}", kernel.name()), &cfg, || {
+            kernel.apply_block(&mut z, &snorms, &norms);
+            z.data()[0]
+        });
+    }
+
+    section("gram oracle end-to-end (rbf, 32 sampled rows)");
+    let mut oracle = LocalGram::new(ds.a.clone(), Kernel::paper_rbf());
+    bench("LocalGram::gram 32x2000", &cfg, || {
+        let mut ledger = Ledger::new();
+        oracle.gram(&sample, &mut q, &mut ledger);
+        q.data()[0]
+    });
+
+    section("allreduce algorithms (P=8 threads, w=4096)");
+    for algo in [
+        AllreduceAlgo::Rabenseifner,
+        AllreduceAlgo::RecursiveDoubling,
+        AllreduceAlgo::Linear,
+    ] {
+        bench(&format!("allreduce {} p=8 w=4096", algo.name()), &cfg, || {
+            run_ranks(8, |c| {
+                let mut buf = vec![1.0f64; 4096];
+                allreduce_sum(c, &mut buf, algo);
+                buf[0]
+            })
+        });
+    }
+
+    section("CSR ops");
+    let x: Vec<f64> = (0..8000).map(|_| rng.next_gaussian()).collect();
+    let mut y = vec![0.0; 2000];
+    bench("spmv 2000x8000 @1%", &cfg, || {
+        ds.a.spmv(&x, &mut y);
+        y[0]
+    });
+    bench("transpose 2000x8000 @1%", &cfg, || ds.a.transpose().nnz());
+    bench("partition_cols p=16", &cfg, || {
+        ds.a.partition_cols(16).len()
+    });
+    let dense_small = rand_mat(&mut rng, 64, 64);
+    bench("csr from_dense/to_dense 64x64", &cfg, || {
+        Csr::from_dense(&dense_small).to_dense().data()[0]
+    });
+
+    section("PJRT artifact execution (if artifacts built)");
+    match kcd::runtime::PjrtRuntime::open(&kcd::runtime::PjrtRuntime::default_dir()) {
+        Ok(rt) => {
+            let a = rand_mat(&mut rng, 256, 64);
+            let mut pjrt = kcd::runtime::PjrtGram::new(rt, &a, Kernel::paper_rbf()).unwrap();
+            let sample: Vec<usize> = (0..32).map(|i| i * 7).collect();
+            let mut qq = Mat::zeros(32, 256);
+            let r = bench("PjrtGram rbf m=256 n=64 k=32", &cfg, || {
+                let mut ledger = Ledger::new();
+                pjrt.gram(&sample, &mut qq, &mut ledger);
+                qq.data()[0]
+            });
+            let gf = 2.0 * 32.0 * 256.0 * 64.0;
+            println!("  → {:.2} GF/s effective (incl. host↔device)", gf / r.median() / 1e9);
+            // Native comparison at the same shape.
+            let csr = Csr::from_dense(&a);
+            let mut native = LocalGram::new(csr, Kernel::paper_rbf());
+            bench("LocalGram rbf m=256 n=64 k=32 (native)", &cfg, || {
+                let mut ledger = Ledger::new();
+                native.gram(&sample, &mut qq, &mut ledger);
+                qq.data()[0]
+            });
+        }
+        Err(e) => println!("skipped: {e:#} (run `make artifacts`)"),
+    }
+
+    black_box(());
+    println!("\nmicrobench done");
+}

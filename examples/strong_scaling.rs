@@ -1,0 +1,51 @@
+//! Figure 3 scenario: strong scaling of DCD vs s-step DCD for K-SVM on
+//! the performance datasets, mixing measured ranks (real threads + real
+//! message traffic, small P) with count-projected points (large P).
+//!
+//! ```bash
+//! cargo run --release --example strong_scaling [-- --quick]
+//! ```
+
+use kcd::comm::AllreduceAlgo;
+use kcd::coordinator::report::scaling_table;
+use kcd::coordinator::scaling::{sweep, SweepConfig};
+use kcd::coordinator::ProblemSpec;
+use kcd::costmodel::MachineProfile;
+use kcd::data::paper_dataset;
+use kcd::kernelfn::Kernel;
+use kcd::solvers::SvmVariant;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let machine = MachineProfile::cray_ex();
+    let problem = ProblemSpec::Svm {
+        c: 1.0,
+        variant: SvmVariant::L1,
+    };
+    let cfg = SweepConfig {
+        p_list: vec![1, 2, 4, 8, 16, 32, 64, 128, 256, 512],
+        s_list: vec![2, 4, 8, 16, 32, 64, 128, 256],
+        h: if quick { 64 } else { 512 },
+        seed: 3,
+        algo: AllreduceAlgo::Rabenseifner,
+        measured_limit: if quick { 2 } else { 8 },
+    };
+    let synth_scale = if quick { 0.01 } else { 0.1 };
+    for (name, scale) in [("colon-cancer", 1.0), ("duke", 1.0), ("synthetic", synth_scale)] {
+        let ds = paper_dataset(name).unwrap().generate_scaled(scale);
+        println!(
+            "\n## {} ({}×{}, {:.2}% dense) — K-SVM RBF strong scaling",
+            ds.name,
+            ds.m(),
+            ds.n(),
+            100.0 * ds.a.density()
+        );
+        let rows = sweep(&ds, Kernel::paper_rbf(), &problem, &cfg, &machine);
+        print!("{}", scaling_table(&rows).markdown());
+        let best = rows
+            .iter()
+            .map(|r| r.speedup())
+            .fold(0.0f64, f64::max);
+        println!("max s-step speedup across P: {best:.2}x");
+    }
+}

@@ -1,0 +1,122 @@
+"""AOT lowering: JAX/Pallas → HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO *text*, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Writes one ``<name>.hlo.txt`` per (kernel kind, data shape, sample count)
+plus ``manifest.json`` describing every artifact (consumed by
+``rust/src/runtime``). Incremental: artifacts whose sources are older
+than the existing file are skipped unless ``--force``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    AOT_DATA_SHAPES,
+    AOT_KINDS,
+    AOT_SAMPLE_COUNTS,
+    DEFAULT_PARAMS,
+    artifact_name,
+    example_args,
+    gram_program,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(kind: str, m: int, n: int, k: int) -> str:
+    f = gram_program(kind)
+    lowered = f.lower(*example_args(m, n, k))
+    return to_hlo_text(lowered)
+
+
+def build_all(out_dir: str, force: bool = False) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    src_mtime = max(
+        os.path.getmtime(p)
+        for p in [
+            __file__,
+            os.path.join(os.path.dirname(__file__), "model.py"),
+            os.path.join(os.path.dirname(__file__), "kernels", "gram.py"),
+        ]
+    )
+    n_built = 0
+    for kind in AOT_KINDS:
+        for m, n in AOT_DATA_SHAPES:
+            for k in AOT_SAMPLE_COUNTS:
+                name = artifact_name(kind, m, n, k)
+                path = os.path.join(out_dir, f"{name}.hlo.txt")
+                stale = (
+                    force
+                    or not os.path.exists(path)
+                    or os.path.getmtime(path) < src_mtime
+                )
+                if stale:
+                    text = lower_one(kind, m, n, k)
+                    with open(path, "w") as fh:
+                        fh.write(text)
+                    n_built += 1
+                    print(f"  lowered {name} ({len(text)} chars)")
+                entries.append(
+                    {
+                        "name": name,
+                        "file": f"{name}.hlo.txt",
+                        "kind": kind,
+                        "m": m,
+                        "n": n,
+                        "k": k,
+                        "params": DEFAULT_PARAMS,
+                        "dtype": "f32",
+                        "inputs": [[m, n], [k, n]],
+                        "output": [k, m],
+                    }
+                )
+    manifest = {
+        "version": 1,
+        "jax_version": jax.__version__,
+        "artifacts": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    print(f"artifacts: {n_built} lowered, {len(entries) - n_built} up to date")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="(compat) ignored; use --out-dir")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out is not None:
+        # Old Makefile compatibility: `--out ../artifacts/model.hlo.txt`.
+        out_dir = os.path.dirname(args.out) or "."
+    build_all(out_dir, force=args.force)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,121 @@
+"""L1: Pallas kernel for the sampled gram block — the compute hot-spot.
+
+Every iteration of (s-step) DCD/BDCD forms ``Q = K(A, A_S)``: ``sb`` rows
+of the kernel matrix, i.e. a tall-skinny GEMM ``S @ Aᵀ`` followed by a
+pointwise kernel map (identity / polynomial / RBF). The paper blocks this
+computation explicitly because computing ``s`` rows at once has far better
+memory-bandwidth utilization than one row at a time (its Figure 4
+observation); on a TPU the same insight maps onto MXU tiling: ``A`` tiles
+stream HBM→VMEM once per sampled-block column, and the nonlinear epilogue
+is fused so each output tile is written exactly once (see DESIGN.md
+§Hardware-Adaptation).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered through the interpreter to plain
+HLO. The structure (BlockSpec schedule, fused epilogue) is what a real TPU
+lowering would use; VMEM/MXU estimates live in DESIGN.md §8.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output tile sizes. 128 is the MXU native dimension; the sampled-row tile
+# adapts to small s·b. With (bk, bm, n) = (128, 256, 128) in f32 the VMEM
+# working set is s_tile + x_tile + o_tile ≈ (128·128 + 256·128 + 128·256)·4B
+# ≈ 320 KiB — comfortably under the ~16 MiB VMEM budget, leaving room for
+# double buffering.
+DEFAULT_BM = 256
+DEFAULT_BK = 128
+
+
+def _epilogue(kind: str, z, sn, xn, *, c: float, d: int, sigma: float):
+    """Fused kernel map applied to a gram tile ``z[r, i] = <s_r, a_i>``.
+
+    ``sn``/``xn`` are squared row norms of the sampled/full tiles (RBF
+    only). All branches are traced statically — ``kind`` is a Python
+    constant per compiled artifact.
+    """
+    if kind == "linear":
+        return z
+    if kind == "poly":
+        return (c + z) ** d
+    if kind == "rbf":
+        d2 = jnp.maximum(sn[:, None] + xn[None, :] - 2.0 * z, 0.0)
+        return jnp.exp(-sigma * d2)
+    raise ValueError(f"unknown kernel kind: {kind}")
+
+
+def _gram_kernel(s_ref, x_ref, o_ref, *, kind: str, c: float, d: int, sigma: float):
+    """Pallas body: one (bk × bm) output tile.
+
+    ``s_ref``: (bk, n) sampled rows; ``x_ref``: (bm, n) data rows. The
+    contraction runs over the full feature dimension in one MXU pass
+    (n ≤ a few hundred for the AOT shapes; larger n would add a third
+    grid axis with an accumulator).
+    """
+    s = s_ref[...]
+    x = x_ref[...]
+    z = jax.lax.dot_general(
+        s,
+        x,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    if kind == "rbf":
+        sn = jnp.sum(s * s, axis=1)
+        xn = jnp.sum(x * x, axis=1)
+    else:
+        sn = xn = None
+    o_ref[...] = _epilogue(kind, z, sn, xn, c=c, d=d, sigma=sigma).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kind", "c", "d", "sigma", "bk", "bm", "interpret")
+)
+def gram_block(
+    a,
+    s,
+    *,
+    kind: str = "linear",
+    c: float = 0.0,
+    d: int = 3,
+    sigma: float = 1.0,
+    bk: int | None = None,
+    bm: int | None = None,
+    interpret: bool = True,
+):
+    """Sampled kernel block ``Q[r, i] = K(s_r, a_i)`` of shape ``(k, m)``.
+
+    Args:
+      a: ``(m, n)`` data matrix.
+      s: ``(k, n)`` sampled rows (``k = s·b`` in the s-step methods).
+      kind: ``linear`` | ``poly`` | ``rbf`` (static).
+      c, d: polynomial parameters ``(c + z)^d`` (static).
+      sigma: RBF bandwidth (static).
+      bk, bm: output tile sizes (default: adapt to the problem).
+      interpret: must stay True on CPU PJRT (Mosaic is TPU-only).
+    """
+    m, n = a.shape
+    k, n2 = s.shape
+    if n != n2:
+        raise ValueError(f"feature dims differ: {n} vs {n2}")
+    bk = min(bk or DEFAULT_BK, k)
+    bm = min(bm or DEFAULT_BM, m)
+    grid = (pl.cdiv(k, bk), pl.cdiv(m, bm))
+    kernel = functools.partial(_gram_kernel, kind=kind, c=c, d=d, sigma=sigma)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, n), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bk, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((k, m), jnp.float32),
+        interpret=interpret,
+    )(s, a)

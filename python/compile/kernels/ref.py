@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the gram-block kernel (correctness reference).
+
+Everything here is the direct mathematical definition with no tiling or
+fusion — the Pallas kernel and the Rust native path are both validated
+against it (pytest on the Python side; the Rust side cross-checks through
+the PJRT runtime integration tests).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gram_block_ref(a, s, *, kind="linear", c=0.0, d=3, sigma=1.0):
+    """``Q[r, i] = K(s_r, a_i)`` of shape ``(k, m)`` — definitional."""
+    z = s @ a.T
+    if kind == "linear":
+        return z
+    if kind == "poly":
+        return (c + z) ** d
+    if kind == "rbf":
+        # Direct pairwise distances (no dot-product expansion) so the
+        # oracle is an independent formulation from the kernel under test.
+        diff = s[:, None, :] - a[None, :, :]
+        d2 = jnp.sum(diff * diff, axis=-1)
+        return jnp.exp(-sigma * d2)
+    raise ValueError(f"unknown kernel kind: {kind}")

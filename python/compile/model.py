@@ -1,0 +1,86 @@
+"""L2: the JAX compute graph AOT-compiled for the Rust runtime.
+
+The (s-step) coordinate-descent hot-spot is the sampled kernel block
+``Q = K(A, A_S)``. This module wraps the L1 Pallas kernel
+(:mod:`compile.kernels.gram`) into the exact function signatures the Rust
+coordinator executes through PJRT:
+
+  ``gram_program(kind, params)(a, s) -> (q,)``
+
+with ``a: (m, n) f32`` (the data shard), ``s: (k, n) f32`` (the gathered
+sampled rows, ``k = s·b``), returning the ``(k, m) f32`` kernel block.
+Row norms for the RBF map are computed in-graph (they fuse into the same
+HLO module), so the runtime ships exactly two buffers per call.
+
+Python never runs at request time: :mod:`compile.aot` lowers these
+functions once per (kind, shape) to ``artifacts/*.hlo.txt``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gram import gram_block
+
+#: Shapes lowered by `make artifacts`: (m, n) data shapes × k sampled rows.
+#: (m, n) = (256, 64) covers tests/examples at small scale; (2048, 128) is
+#: the e2e driver's dense workload. k spans the s·b values the benches use.
+AOT_DATA_SHAPES = ((256, 64), (2048, 128))
+AOT_SAMPLE_COUNTS = (1, 8, 32, 64, 256)
+AOT_KINDS = ("linear", "poly", "rbf")
+
+#: Paper-default kernel parameters (Figure 1: poly d=3 c=0, rbf σ=1).
+DEFAULT_PARAMS = {"c": 0.0, "d": 3, "sigma": 1.0}
+
+
+def gram_program(kind: str, **params) -> Callable:
+    """The jitted L2 function for one kernel family.
+
+    Returns ``f(a, s) -> (q,)`` — a 1-tuple, matching the
+    ``return_tuple=True`` convention the Rust loader unwraps with
+    ``to_tuple1``.
+    """
+    p = dict(DEFAULT_PARAMS)
+    p.update(params)
+
+    @jax.jit
+    def f(a, s):
+        q = gram_block(
+            a,
+            s,
+            kind=kind,
+            c=float(p["c"]),
+            d=int(p["d"]),
+            sigma=float(p["sigma"]),
+            interpret=True,
+        )
+        return (q,)
+
+    return f
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_program(kind: str) -> Callable:
+    return gram_program(kind)
+
+
+def gram_apply(kind: str, a, s):
+    """Convenience eager evaluation (tests, notebooks)."""
+    return _cached_program(kind)(a, s)[0]
+
+
+def artifact_name(kind: str, m: int, n: int, k: int) -> str:
+    """Canonical artifact stem shared with the Rust runtime manifest."""
+    return f"gram_{kind}_m{m}_n{n}_k{k}"
+
+
+def example_args(m: int, n: int, k: int):
+    """ShapeDtypeStructs for lowering."""
+    return (
+        jax.ShapeDtypeStruct((m, n), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.float32),
+    )

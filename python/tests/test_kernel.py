@@ -1,0 +1,130 @@
+"""L1 correctness: the Pallas gram kernel vs the pure-jnp oracle.
+
+This is the core build-time correctness signal — the Rust runtime trusts
+the artifacts these kernels lower to. Hypothesis sweeps shapes, kernel
+kinds, parameters, and tile sizes (including tiles that don't divide the
+problem, exercising pallas' masked edges).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.gram import gram_block
+from compile.kernels.ref import gram_block_ref
+
+KINDS = ("linear", "poly", "rbf")
+
+
+def _rand(shape, seed, scale=1.0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape) * scale, dtype=dtype)
+
+
+def _tol(kind):
+    # poly cubes values — relative error amplifies ~3x; f32 baseline.
+    return dict(rtol=2e-4, atol=2e-4) if kind == "poly" else dict(rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_matches_ref_basic(kind):
+    a = _rand((64, 16), 1)
+    s = _rand((8, 16), 2)
+    q = gram_block(a, s, kind=kind)
+    r = gram_block_ref(a, s, kind=kind)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(r), **_tol(kind))
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_single_sampled_row(kind):
+    """k = 1 is the classical DCD shape (one kernel row per iteration)."""
+    a = _rand((50, 7), 3)
+    s = _rand((1, 7), 4)
+    q = gram_block(a, s, kind=kind)
+    assert q.shape == (1, 50)
+    r = gram_block_ref(a, s, kind=kind)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(r), **_tol(kind))
+
+
+def test_rbf_self_row_is_one():
+    a = _rand((20, 5), 5)
+    q = gram_block(a, a[3:4], kind="rbf", sigma=2.0)
+    assert abs(float(q[0, 3]) - 1.0) < 1e-5  # f32 norm-expansion roundoff
+
+
+def test_poly_params_change_result():
+    a = _rand((10, 4), 6)
+    s = _rand((2, 4), 7)
+    q1 = gram_block(a, s, kind="poly", c=0.0, d=3)
+    q2 = gram_block(a, s, kind="poly", c=1.0, d=2)
+    assert not np.allclose(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_allclose(
+        np.asarray(q2),
+        np.asarray(gram_block_ref(a, s, kind="poly", c=1.0, d=2)),
+        **_tol("poly"),
+    )
+
+
+def test_rejects_mismatched_features():
+    a = _rand((10, 4), 8)
+    s = _rand((2, 5), 9)
+    with pytest.raises(ValueError, match="feature dims"):
+        gram_block(a, s)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    n=st.integers(1, 48),
+    k=st.integers(1, 40),
+    kind=st.sampled_from(KINDS),
+    seed=st.integers(0, 2**31),
+)
+def test_property_matches_ref(m, n, k, kind, seed):
+    a = _rand((m, n), seed)
+    s = _rand((k, n), seed + 1)
+    q = gram_block(a, s, kind=kind, c=0.5, d=2, sigma=0.5)
+    r = gram_block_ref(a, s, kind=kind, c=0.5, d=2, sigma=0.5)
+    assert q.shape == (k, m)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(r), **_tol(kind))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bk=st.integers(1, 16),
+    bm=st.integers(1, 64),
+    kind=st.sampled_from(KINDS),
+)
+def test_property_tile_sizes_do_not_change_result(bk, bm, kind):
+    """Tiling is an implementation detail: any (bk, bm) gives the same Q,
+    including tiles that don't divide (k, m)."""
+    a = _rand((57, 11), 10)
+    s = _rand((13, 11), 11)
+    q = gram_block(a, s, kind=kind, bk=bk, bm=bm)
+    r = gram_block_ref(a, s, kind=kind)
+    np.testing.assert_allclose(np.asarray(q), np.asarray(r), **_tol(kind))
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_large_scale_values_stay_finite(kind):
+    """RBF with distant points must underflow to 0, not NaN; poly grows
+    but stays finite for moderate inputs."""
+    a = _rand((30, 8), 12, scale=10.0)
+    s = _rand((4, 8), 13, scale=10.0)
+    q = np.asarray(gram_block(a, s, kind=kind))
+    assert np.isfinite(q).all()
+    if kind == "rbf":
+        assert (q >= 0.0).all() and (q <= 1.0 + 1e-6).all()
+
+
+def test_jit_cache_reuses_compilation():
+    """Repeated calls with the same static config must not retrace (guards
+    the request-path no-Python property at the L2 boundary)."""
+    a = _rand((32, 8), 14)
+    s = _rand((4, 8), 15)
+    f = jax.jit(lambda a, s: gram_block(a, s, kind="rbf"))
+    q1 = f(a, s)
+    q2 = f(a, s)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))

@@ -1,0 +1,77 @@
+"""L2 correctness: the AOT-facing gram programs (shape contracts, tuple
+convention, numerical agreement with the oracle at the lowered shapes)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.ref import gram_block_ref
+from compile.model import (
+    AOT_DATA_SHAPES,
+    AOT_KINDS,
+    AOT_SAMPLE_COUNTS,
+    artifact_name,
+    example_args,
+    gram_apply,
+    gram_program,
+)
+
+
+@pytest.mark.parametrize("kind", AOT_KINDS)
+def test_program_returns_one_tuple(kind):
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(32, 8)), dtype=jnp.float32)
+    s = jnp.asarray(rng.normal(size=(4, 8)), dtype=jnp.float32)
+    out = gram_program(kind)(a, s)
+    assert isinstance(out, tuple) and len(out) == 1
+    assert out[0].shape == (4, 32)
+    assert out[0].dtype == jnp.float32
+
+
+@pytest.mark.parametrize("kind", AOT_KINDS)
+def test_program_matches_ref_at_aot_shape(kind):
+    """Exact agreement at the smallest lowered shape (the one the Rust
+    runtime integration test replays)."""
+    m, n = AOT_DATA_SHAPES[0]
+    k = AOT_SAMPLE_COUNTS[1]  # 8
+    rng = np.random.default_rng(1)
+    # Modest scale so RBF values don't all underflow at n = 64 (which
+    # would make the comparison vacuous).
+    a = jnp.asarray(rng.normal(size=(m, n)) * 0.2, dtype=jnp.float32)
+    s = jnp.asarray(a[rng.integers(0, m, size=k)])
+    q = gram_apply(kind, a, s)
+    r = gram_block_ref(a, s, kind=kind)
+    tol = 5e-4 if kind == "poly" else 2e-5
+    np.testing.assert_allclose(np.asarray(q), np.asarray(r), rtol=tol, atol=tol)
+    assert float(np.abs(np.asarray(q)).max()) > 0.1, "comparison is vacuous"
+
+
+def test_example_args_match_program_signature():
+    for m, n in AOT_DATA_SHAPES:
+        for k in AOT_SAMPLE_COUNTS:
+            a_spec, s_spec = example_args(m, n, k)
+            assert a_spec.shape == (m, n)
+            assert s_spec.shape == (k, n)
+            assert a_spec.dtype == jnp.float32
+
+
+def test_artifact_names_are_unique_and_parseable():
+    names = set()
+    for kind in AOT_KINDS:
+        for m, n in AOT_DATA_SHAPES:
+            for k in AOT_SAMPLE_COUNTS:
+                name = artifact_name(kind, m, n, k)
+                assert name not in names
+                names.add(name)
+                assert name == f"gram_{kind}_m{m}_n{n}_k{k}"
+
+
+def test_programs_lower_without_error():
+    """Every (kind, shape) combination must lower to stablehlo — the
+    minimal guarantee `make artifacts` relies on."""
+    for kind in AOT_KINDS:
+        f = gram_program(kind)
+        lowered = f.lower(*example_args(*AOT_DATA_SHAPES[0], AOT_SAMPLE_COUNTS[0]))
+        ir = str(lowered.compiler_ir("stablehlo"))
+        assert "module" in ir

@@ -1,0 +1,147 @@
+//! A small criterion-like measurement harness (criterion is unavailable
+//! in the offline build).
+//!
+//! Benches (`benches/*.rs`, `harness = false`) use [`bench`] for
+//! wall-clock micro/meso benchmarks: warmup, then adaptive iteration
+//! until a time budget is met, reporting median / mean ± stddev of
+//! per-iteration times. A `--quick` CLI flag (or `KCD_BENCH_QUICK=1`)
+//! shrinks budgets so `cargo bench` stays fast in CI.
+
+use std::time::Instant;
+
+use crate::util::{fmt_secs, mean, median, stddev};
+
+/// Measurement settings.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// Wall-clock budget per benchmark.
+    pub budget_secs: f64,
+    /// Minimum timed samples.
+    pub min_samples: usize,
+    /// Warmup iterations.
+    pub warmup: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        if quick_mode() {
+            BenchConfig {
+                budget_secs: 0.2,
+                min_samples: 3,
+                warmup: 1,
+            }
+        } else {
+            BenchConfig {
+                budget_secs: 2.0,
+                min_samples: 10,
+                warmup: 3,
+            }
+        }
+    }
+}
+
+/// True when `KCD_BENCH_QUICK=1` or `--quick` is on the command line.
+pub fn quick_mode() -> bool {
+    std::env::var_os("KCD_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+        || std::env::args().any(|a| a == "--quick")
+}
+
+/// One benchmark's statistics (seconds per iteration).
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn median(&self) -> f64 {
+        median(&self.samples)
+    }
+
+    pub fn mean(&self) -> f64 {
+        mean(&self.samples)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        stddev(&self.samples)
+    }
+
+    /// One-line report.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} median {:>12}  mean {:>12} ± {:>10}  (n={})",
+            self.name,
+            fmt_secs(self.median()),
+            fmt_secs(self.mean()),
+            fmt_secs(self.stddev()),
+            self.samples.len()
+        )
+    }
+}
+
+/// Measure `f` (one logical iteration per call) under `cfg`, printing the
+/// result line. The closure's return value is black-boxed to keep the
+/// optimizer honest.
+pub fn bench<T>(name: &str, cfg: &BenchConfig, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..cfg.warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < cfg.min_samples
+        || (start.elapsed().as_secs_f64() < cfg.budget_secs && samples.len() < 10_000)
+    {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let result = BenchResult {
+        name: name.to_string(),
+        samples,
+    };
+    println!("{}", result.line());
+    result
+}
+
+/// Optimizer barrier (std::hint::black_box re-export point).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Print a bench-section heading.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_min_samples() {
+        let cfg = BenchConfig {
+            budget_secs: 0.0,
+            min_samples: 5,
+            warmup: 1,
+        };
+        let mut n = 0u64;
+        let r = bench("noop", &cfg, || {
+            n += 1;
+            n
+        });
+        assert!(r.samples.len() >= 5);
+        assert!(r.median() >= 0.0);
+        assert!(n >= 6); // warmup + samples
+    }
+
+    #[test]
+    fn result_line_contains_name() {
+        let r = BenchResult {
+            name: "abc".into(),
+            samples: vec![1e-3, 2e-3, 3e-3],
+        };
+        assert!(r.line().contains("abc"));
+        assert_eq!(r.median(), 2e-3);
+    }
+}

@@ -1,0 +1,630 @@
+//! CLI argument parsing and the `kcd` subcommands (clap is unavailable in
+//! the offline build; this is a small, strict flag parser).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::comm::AllreduceAlgo;
+use crate::coordinator::breakdown::breakdown;
+use crate::coordinator::report::{breakdown_table, scaling_table, Table};
+use crate::coordinator::scaling::{sweep, SweepConfig};
+use crate::coordinator::{run_distributed, Config, ProblemSpec, SolverSpec};
+use crate::costmodel::MachineProfile;
+use crate::data::{paper_dataset, paper_datasets, read_libsvm, Dataset, Task};
+use crate::kernelfn::Kernel;
+use crate::solvers::{krr_exact, objective::SvmObjective, LocalGram, SvmVariant};
+
+/// Parsed command line: subcommand, `--key value` flags, positionals.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. Flags are `--key value` or `--key=value`;
+    /// `--flag` followed by another flag (or end) is a boolean `true`.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(cmd) = it.next() {
+            out.command = cmd;
+        }
+        // Flags that never take a value (so `--csv positional` parses).
+        const BOOLEAN: &[&str] = &["csv", "quick", "force", "verbose"];
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if !BOOLEAN.contains(&name)
+                    && it.peek().map(|n| !n.starts_with("--")).unwrap_or(false)
+                {
+                    out.flags.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn usize_flag(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_flag(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn usize_list_flag(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.flag(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse()
+                        .with_context(|| format!("--{name}: bad integer '{t}'"))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn bool_flag(&self, name: &str) -> bool {
+        self.flag(name) == Some("true")
+    }
+}
+
+pub const USAGE: &str = "kcd — scalable (s-step) dual coordinate descent for kernel methods
+
+USAGE: kcd <command> [--flags]
+
+COMMANDS:
+  train-svm     Train K-SVM with DCD / s-step DCD; report gap + accuracy.
+  train-krr     Train K-RR with BDCD / s-step BDCD; report solution error.
+  convergence   Duality-gap / relative-error series, classical vs s-step.
+  scaling       Strong-scaling sweep over P (measured + projected engines).
+  breakdown     Per-phase runtime breakdown as s varies at fixed P.
+  datasets      List the paper dataset registry.
+  artifacts-check  Verify PJRT artifacts load and execute.
+
+COMMON FLAGS:
+  --dataset <name|libsvm-path>  Paper registry name or a LIBSVM file.
+  --scale <f>       Generate the dataset at a fraction of published size.
+  --kernel <k>      linear | poly[:c=..,d=..] | rbf[:sigma=..]  [rbf]
+  --problem <p>     svm-l1 | svm-l2 | krr                      [svm-l1]
+  --c <f> --lambda <f> --b <n>   Problem parameters.
+  --h <n>           Inner iterations                            [256]
+  --s <n>           s-step block (1 = classical)                [1]
+  --p <n>           Ranks for distributed runs                  [1]
+  --p-list / --s-list <a,b,c>    Sweep lists.
+  --algo <a>        rabenseifner | rd | linear                  [rabenseifner]
+  --machine <m>     cray-ex | cloud                             [cray-ex]
+  --seed <n>        Coordinate-stream seed.
+  --csv             Emit CSV instead of markdown tables.
+  --config <file>   TOML-subset config (flags override).
+";
+
+/// Entry point used by `main.rs` (kept in the library for testability).
+pub fn run(argv: Vec<String>) -> Result<String> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "" | "help" | "--help" | "-h" => Ok(USAGE.to_string()),
+        "datasets" => cmd_datasets(),
+        "train-svm" => cmd_train_svm(&args),
+        "train-krr" => cmd_train_krr(&args),
+        "convergence" => cmd_convergence(&args),
+        "scaling" => cmd_scaling(&args),
+        "breakdown" => cmd_breakdown(&args),
+        "artifacts-check" => cmd_artifacts_check(),
+        other => bail!("unknown command '{other}'\n\n{USAGE}"),
+    }
+}
+
+fn load_config(args: &Args) -> Result<Config> {
+    let mut cfg = match args.flag("config") {
+        Some(path) => {
+            Config::load(std::path::Path::new(path)).map_err(|e| anyhow!("config: {e}"))?
+        }
+        None => Config::new(),
+    };
+    // CLI flags override file values under their own names.
+    for key in [
+        "dataset", "scale", "kernel", "problem", "c", "lambda", "b", "h", "s", "p", "algo",
+        "machine", "seed",
+    ] {
+        if let Some(v) = args.flag(key) {
+            cfg.set(key, v);
+        }
+    }
+    Ok(cfg)
+}
+
+fn dataset_from(cfg: &Config, default_name: &str, task_hint: Task) -> Result<Dataset> {
+    let name = cfg.str("dataset").unwrap_or(default_name);
+    let scale = cfg.f64("scale").unwrap_or(1.0);
+    if let Some(spec) = paper_dataset(name) {
+        return Ok(spec.generate_scaled(scale));
+    }
+    let path = std::path::Path::new(name);
+    if path.exists() {
+        return read_libsvm(path, task_hint, None).map_err(|e| anyhow!("libsvm: {e}"));
+    }
+    bail!(
+        "unknown dataset '{name}' (not in registry, not a file). Known: {}",
+        paper_datasets()
+            .iter()
+            .map(|d| d.name)
+            .collect::<Vec<_>>()
+            .join(", ")
+    )
+}
+
+fn kernel_from(cfg: &Config) -> Result<Kernel> {
+    let s = cfg.str("kernel").unwrap_or("rbf");
+    Kernel::parse(s).ok_or_else(|| anyhow!("bad --kernel '{s}'"))
+}
+
+fn machine_from(cfg: &Config) -> Result<MachineProfile> {
+    match cfg.str("machine").unwrap_or("cray-ex") {
+        "cray-ex" => Ok(MachineProfile::cray_ex()),
+        "cloud" => Ok(MachineProfile::cloud()),
+        other => bail!("unknown --machine '{other}'"),
+    }
+}
+
+fn algo_from(cfg: &Config) -> Result<AllreduceAlgo> {
+    let s = cfg.str("algo").unwrap_or("rabenseifner");
+    AllreduceAlgo::parse(s).ok_or_else(|| anyhow!("bad --algo '{s}'"))
+}
+
+fn problem_from(cfg: &Config) -> Result<ProblemSpec> {
+    let c = cfg.f64("c").unwrap_or(1.0);
+    let lambda = cfg.f64("lambda").unwrap_or(1.0);
+    let b = cfg.usize("b").unwrap_or(1);
+    match cfg.str("problem").unwrap_or("svm-l1") {
+        "svm-l1" => Ok(ProblemSpec::Svm {
+            c,
+            variant: SvmVariant::L1,
+        }),
+        "svm-l2" => Ok(ProblemSpec::Svm {
+            c,
+            variant: SvmVariant::L2,
+        }),
+        "krr" => Ok(ProblemSpec::Krr { lambda, b }),
+        other => bail!("unknown --problem '{other}'"),
+    }
+}
+
+fn solver_from(cfg: &Config) -> SolverSpec {
+    SolverSpec {
+        s: cfg.usize("s").unwrap_or(1),
+        h: cfg.usize("h").unwrap_or(256),
+        seed: cfg.usize("seed").unwrap_or(0x5EED) as u64,
+    }
+}
+
+fn cmd_datasets() -> Result<String> {
+    let mut t = Table::new(vec!["name", "m", "n", "task", "table"]);
+    for d in paper_datasets() {
+        t.row(vec![
+            d.name.to_string(),
+            d.m.to_string(),
+            d.n.to_string(),
+            format!("{:?}", d.task),
+            d.table.to_string(),
+        ]);
+    }
+    Ok(t.markdown())
+}
+
+fn cmd_train_svm(args: &Args) -> Result<String> {
+    let cfg = load_config(args)?;
+    let ds = dataset_from(&cfg, "duke", Task::Classification)?;
+    let kernel = kernel_from(&cfg)?;
+    let machine = machine_from(&cfg)?;
+    let mut problem = problem_from(&cfg)?;
+    if matches!(problem, ProblemSpec::Krr { .. }) {
+        problem = ProblemSpec::Svm {
+            c: cfg.f64("c").unwrap_or(1.0),
+            variant: SvmVariant::L1,
+        };
+    }
+    let solver = solver_from(&cfg);
+    let p = cfg.usize("p").unwrap_or(1);
+    let algo = algo_from(&cfg)?;
+    let res = run_distributed(&ds, kernel, &problem, &solver, p, algo, &machine);
+    let (c, variant) = match problem {
+        ProblemSpec::Svm { c, variant } => (c, variant),
+        _ => unreachable!(),
+    };
+    let mut oracle = LocalGram::new(ds.a.clone(), kernel);
+    let obj = SvmObjective::new(&mut oracle, &ds.y, c, variant);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "dataset={} m={} n={} kernel={} problem={} P={p} s={} H={}\n",
+        ds.name,
+        ds.m(),
+        ds.n(),
+        kernel.name(),
+        problem.name(),
+        solver.s,
+        solver.h
+    ));
+    out.push_str(&format!(
+        "duality gap      = {:.6e}\ntrain accuracy   = {:.2}%\n",
+        obj.duality_gap(&res.alpha),
+        100.0 * obj.train_accuracy(&res.alpha)
+    ));
+    out.push_str(&format!(
+        "projected time   = {:.4e} s on {} (local wall {:.3}s)\n",
+        res.projection.total_secs(),
+        machine.name,
+        res.wall_secs
+    ));
+    Ok(out)
+}
+
+fn cmd_train_krr(args: &Args) -> Result<String> {
+    let cfg = load_config(args)?;
+    let ds = dataset_from(&cfg, "bodyfat", Task::Regression)?;
+    let kernel = kernel_from(&cfg)?;
+    let machine = machine_from(&cfg)?;
+    let lambda = cfg.f64("lambda").unwrap_or(1.0);
+    let b = cfg.usize("b").unwrap_or(8);
+    let problem = ProblemSpec::Krr { lambda, b };
+    let solver = solver_from(&cfg);
+    let p = cfg.usize("p").unwrap_or(1);
+    let algo = algo_from(&cfg)?;
+    let res = run_distributed(&ds, kernel, &problem, &solver, p, algo, &machine);
+    let mut oracle = LocalGram::new(ds.a.clone(), kernel);
+    let astar = krr_exact(&mut oracle, &ds.y, lambda);
+    let rel = crate::dense::rel_err(&res.alpha, &astar);
+    Ok(format!(
+        "dataset={} m={} n={} kernel={} b={b} λ={lambda} P={p} s={} H={}\n\
+         relative solution error = {rel:.6e}\n\
+         projected time = {:.4e} s on {} (local wall {:.3}s)\n",
+        ds.name,
+        ds.m(),
+        ds.n(),
+        kernel.name(),
+        solver.s,
+        solver.h,
+        res.projection.total_secs(),
+        machine.name,
+        res.wall_secs
+    ))
+}
+
+fn cmd_convergence(args: &Args) -> Result<String> {
+    let cfg = load_config(args)?;
+    let problem = problem_from(&cfg)?;
+    let kernel = kernel_from(&cfg)?;
+    let machine = machine_from(&cfg)?;
+    let solver = solver_from(&cfg);
+    let every = args.usize_flag("every", 16)?;
+    let mut out = String::new();
+    match problem {
+        ProblemSpec::Svm { c, variant } => {
+            let ds = dataset_from(&cfg, "duke", Task::Classification)?;
+            let mut oracle = LocalGram::new(ds.a.clone(), kernel);
+            let obj = SvmObjective::new(&mut oracle, &ds.y, c, variant);
+            let series = |s: usize| -> Vec<(usize, f64)> {
+                let solver = SolverSpec { s, ..solver };
+                let mut pts = Vec::new();
+                let mut cb = |k: usize, a: &[f64]| {
+                    if k % every == 0 {
+                        pts.push((k, obj.duality_gap(a)));
+                    }
+                };
+                let mut o = LocalGram::new(ds.a.clone(), kernel);
+                let _ = match s {
+                    1 => crate::solvers::dcd(
+                        &mut o,
+                        &ds.y,
+                        &crate::solvers::SvmParams {
+                            c,
+                            variant,
+                            h: solver.h,
+                            seed: solver.seed,
+                        },
+                        &mut crate::costmodel::Ledger::new(),
+                        Some(&mut cb),
+                    ),
+                    s => crate::solvers::dcd_sstep(
+                        &mut o,
+                        &ds.y,
+                        &crate::solvers::SvmParams {
+                            c,
+                            variant,
+                            h: solver.h,
+                            seed: solver.seed,
+                        },
+                        s,
+                        &mut crate::costmodel::Ledger::new(),
+                        Some(&mut cb),
+                    ),
+                };
+                pts
+            };
+            let classical = series(1);
+            let sstep = series(solver.s.max(2));
+            let mut t = Table::new(vec!["iter", "gap (classical)", "gap (s-step)", "|Δ|"]);
+            for (a, b) in classical.iter().zip(&sstep) {
+                t.row(vec![
+                    a.0.to_string(),
+                    format!("{:.6e}", a.1),
+                    format!("{:.6e}", b.1),
+                    format!("{:.1e}", (a.1 - b.1).abs()),
+                ]);
+            }
+            out.push_str(&format!(
+                "K-SVM-{} duality gap, {} kernel, dataset {} (s = {})\n",
+                match variant {
+                    SvmVariant::L1 => "L1",
+                    SvmVariant::L2 => "L2",
+                },
+                kernel.name(),
+                ds.name,
+                solver.s.max(2)
+            ));
+            out.push_str(&if args.bool_flag("csv") { t.csv() } else { t.markdown() });
+        }
+        ProblemSpec::Krr { lambda, b } => {
+            let ds = dataset_from(&cfg, "bodyfat", Task::Regression)?;
+            let mut oracle = LocalGram::new(ds.a.clone(), kernel);
+            let astar = krr_exact(&mut oracle, &ds.y, lambda);
+            let series = |s: usize| -> Vec<(usize, f64)> {
+                let mut pts = Vec::new();
+                let mut cb = |k: usize, a: &[f64]| {
+                    if k % every == 0 {
+                        pts.push((k, crate::dense::rel_err(a, &astar)));
+                    }
+                };
+                let mut o = LocalGram::new(ds.a.clone(), kernel);
+                let params = crate::solvers::KrrParams {
+                    lambda,
+                    b,
+                    h: solver.h,
+                    seed: solver.seed,
+                };
+                let _ = match s {
+                    1 => crate::solvers::bdcd(
+                        &mut o,
+                        &ds.y,
+                        &params,
+                        &mut crate::costmodel::Ledger::new(),
+                        Some(&mut cb),
+                    ),
+                    s => crate::solvers::bdcd_sstep(
+                        &mut o,
+                        &ds.y,
+                        &params,
+                        s,
+                        &mut crate::costmodel::Ledger::new(),
+                        Some(&mut cb),
+                    ),
+                };
+                pts
+            };
+            let classical = series(1);
+            let sstep = series(solver.s.max(2));
+            let mut t = Table::new(vec!["iter", "relerr (classical)", "relerr (s-step)", "|Δ|"]);
+            for (a, bb) in classical.iter().zip(&sstep) {
+                t.row(vec![
+                    a.0.to_string(),
+                    format!("{:.6e}", a.1),
+                    format!("{:.6e}", bb.1),
+                    format!("{:.1e}", (a.1 - bb.1).abs()),
+                ]);
+            }
+            out.push_str(&format!(
+                "K-RR relative solution error, {} kernel, dataset {} (b = {b}, s = {})\n",
+                kernel.name(),
+                ds.name,
+                solver.s.max(2)
+            ));
+            out.push_str(&if args.bool_flag("csv") { t.csv() } else { t.markdown() });
+        }
+    }
+    let _ = machine;
+    Ok(out)
+}
+
+fn cmd_scaling(args: &Args) -> Result<String> {
+    let cfg = load_config(args)?;
+    let problem = problem_from(&cfg)?;
+    let task = match problem {
+        ProblemSpec::Svm { .. } => Task::Classification,
+        ProblemSpec::Krr { .. } => Task::Regression,
+    };
+    let ds = dataset_from(&cfg, "colon-cancer", task)?;
+    let kernel = kernel_from(&cfg)?;
+    let machine = machine_from(&cfg)?;
+    let sweep_cfg = SweepConfig {
+        p_list: args.usize_list_flag("p-list", &[1, 2, 4, 8, 16, 32, 64, 128, 256, 512])?,
+        s_list: args.usize_list_flag("s-list", &[2, 4, 8, 16, 32, 64, 128, 256])?,
+        h: cfg.usize("h").unwrap_or(256),
+        seed: cfg.usize("seed").unwrap_or(0x5EED) as u64,
+        algo: algo_from(&cfg)?,
+        measured_limit: args.usize_flag("measured-limit", 8)?,
+    };
+    let rows = sweep(&ds, kernel, &problem, &sweep_cfg, &machine);
+    let t = scaling_table(&rows);
+    let mut out = format!(
+        "strong scaling: {} / {} / {} on {} (H = {})\n",
+        ds.name,
+        problem.name(),
+        kernel.name(),
+        machine.name,
+        sweep_cfg.h
+    );
+    out.push_str(&if args.bool_flag("csv") { t.csv() } else { t.markdown() });
+    Ok(out)
+}
+
+fn cmd_breakdown(args: &Args) -> Result<String> {
+    let cfg = load_config(args)?;
+    let problem = problem_from(&cfg)?;
+    let task = match problem {
+        ProblemSpec::Svm { .. } => Task::Classification,
+        ProblemSpec::Krr { .. } => Task::Regression,
+    };
+    let ds = dataset_from(&cfg, "colon-cancer", task)?;
+    let kernel = kernel_from(&cfg)?;
+    let machine = machine_from(&cfg)?;
+    let s_list = args.usize_list_flag("s-list", &[2, 8, 32, 256])?;
+    let p = cfg.usize("p").unwrap_or(32);
+    let bars = breakdown(
+        &ds,
+        kernel,
+        &problem,
+        &s_list,
+        cfg.usize("h").unwrap_or(256),
+        p,
+        algo_from(&cfg)?,
+        &machine,
+        args.usize_flag("measured-limit", 8)?,
+    );
+    let t = breakdown_table(&bars);
+    let mut out = format!(
+        "runtime breakdown: {} / {} / {} at P = {p} on {}\n",
+        ds.name,
+        problem.name(),
+        kernel.name(),
+        machine.name
+    );
+    out.push_str(&if args.bool_flag("csv") { t.csv() } else { t.markdown() });
+    Ok(out)
+}
+
+fn cmd_artifacts_check() -> Result<String> {
+    let dir = crate::runtime::PjrtRuntime::default_dir();
+    let mut rt = crate::runtime::PjrtRuntime::open(&dir)
+        .with_context(|| format!("opening artifacts at {dir:?} (run `make artifacts`)"))?;
+    let n = rt.manifest().artifacts().len();
+    // Execute the smallest artifact as a smoke test.
+    let spec = rt
+        .manifest()
+        .artifacts()
+        .iter()
+        .min_by_key(|a| a.m * a.n * a.k)
+        .ok_or_else(|| anyhow!("empty manifest"))?
+        .clone();
+    let a = vec![0.5f32; spec.m * spec.n];
+    let s = vec![0.5f32; spec.k * spec.n];
+    let out = rt.execute_gram(&spec.name, &a, &s)?;
+    anyhow::ensure!(out.len() == spec.k * spec.m, "bad output size");
+    anyhow::ensure!(out.iter().all(|v| v.is_finite()), "non-finite output");
+    Ok(format!(
+        "artifacts OK: {n} programs in {dir:?}; platform = {}; executed {} → {} values\n",
+        rt.platform(),
+        spec.name,
+        out.len()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = Args::parse(argv("scaling --dataset duke --s 8 --csv pos1")).unwrap();
+        assert_eq!(a.command, "scaling");
+        assert_eq!(a.flag("dataset"), Some("duke"));
+        assert_eq!(a.usize_flag("s", 1).unwrap(), 8);
+        assert!(a.bool_flag("csv"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn parses_equals_syntax_and_lists() {
+        let a = Args::parse(argv("x --p-list=1,2,4 --h 32")).unwrap();
+        assert_eq!(a.usize_list_flag("p-list", &[]).unwrap(), vec![1, 2, 4]);
+        assert_eq!(a.usize_flag("h", 0).unwrap(), 32);
+    }
+
+    #[test]
+    fn help_and_unknown() {
+        assert!(run(argv("help")).unwrap().contains("USAGE"));
+        assert!(run(argv("bogus")).is_err());
+    }
+
+    #[test]
+    fn datasets_lists_registry() {
+        let out = run(argv("datasets")).unwrap();
+        assert!(out.contains("duke"));
+        assert!(out.contains("news20"));
+    }
+
+    #[test]
+    fn train_svm_small_end_to_end() {
+        let out = run(argv(
+            "train-svm --dataset diabetes --scale 0.1 --kernel rbf --h 200 --s 8 --p 2",
+        ))
+        .unwrap();
+        assert!(out.contains("duality gap"), "{out}");
+        assert!(out.contains("train accuracy"));
+    }
+
+    #[test]
+    fn train_krr_small_end_to_end() {
+        let out = run(argv(
+            "train-krr --dataset bodyfat --scale 0.3 --kernel linear --h 300 --b 4 --s 4",
+        ))
+        .unwrap();
+        assert!(out.contains("relative solution error"), "{out}");
+    }
+
+    #[test]
+    fn convergence_table_shows_overlay() {
+        let out = run(argv(
+            "convergence --dataset diabetes --scale 0.08 --problem svm-l1 --h 64 --s 8 --every 16",
+        ))
+        .unwrap();
+        assert!(out.contains("gap (classical)"), "{out}");
+    }
+
+    #[test]
+    fn scaling_produces_rows() {
+        let out = run(argv(
+            "scaling --dataset colon-cancer --scale 0.3 --h 32 --p-list 1,4,64 --s-list 4,16 --measured-limit 4",
+        ))
+        .unwrap();
+        assert!(out.contains("speedup"), "{out}");
+        assert!(out.contains("projected"));
+    }
+
+    #[test]
+    fn breakdown_produces_bars() {
+        let out = run(argv(
+            "breakdown --dataset colon-cancer --scale 0.3 --h 32 --s-list 4,16 --p 16 --measured-limit 0",
+        ))
+        .unwrap();
+        assert!(out.contains("classical"), "{out}");
+        assert!(out.contains("allreduce"));
+    }
+}

@@ -1,0 +1,445 @@
+//! Collective operations over the [`Communicator`] point-to-point layer.
+//!
+//! Three allreduce algorithms are provided, matching the classic MPICH
+//! implementations (Thakur, Rabenseifner & Gropp 2005 — the paper's
+//! reference [26] for its `L = O(log P)`, `W = O(w)` allreduce costs):
+//!
+//! * [`AllreduceAlgo::Rabenseifner`] — recursive-halving reduce-scatter +
+//!   recursive-doubling allgather. `L = 2 log₂ P`, `W ≈ 2w`. This is the
+//!   default and the algorithm whose costs the paper assumes.
+//! * [`AllreduceAlgo::RecursiveDoubling`] — `L = log₂ P`, `W = w log₂ P`.
+//!   Better for small messages (pure latency-bound DCD with small `m`).
+//! * [`AllreduceAlgo::Linear`] — gather-to-root + broadcast, `L = O(P)`.
+//!   The naive baseline used in the collective-algorithm ablation.
+//!
+//! Non-power-of-two rank counts are handled the standard way: the first
+//! `2·rem` ranks pre-fold pairwise onto `pof2` survivor ranks, the core
+//! algorithm runs on the survivors, and the result is sent back.
+
+use super::Communicator;
+
+/// Allreduce algorithm selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllreduceAlgo {
+    Rabenseifner,
+    RecursiveDoubling,
+    Linear,
+}
+
+impl AllreduceAlgo {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AllreduceAlgo::Rabenseifner => "rabenseifner",
+            AllreduceAlgo::RecursiveDoubling => "recursive-doubling",
+            AllreduceAlgo::Linear => "linear",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "rabenseifner" | "rsag" => Some(AllreduceAlgo::Rabenseifner),
+            "recursive-doubling" | "rd" => Some(AllreduceAlgo::RecursiveDoubling),
+            "linear" => Some(AllreduceAlgo::Linear),
+            _ => None,
+        }
+    }
+}
+
+#[inline]
+fn add_into(dst: &mut [f64], src: &[f64]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+/// In-place sum-allreduce of `buf` across all ranks.
+pub fn allreduce_sum<C: Communicator>(comm: &mut C, buf: &mut [f64], algo: AllreduceAlgo) {
+    let p = comm.size();
+    comm.stats_mut().allreduces += 1;
+    if p == 1 || buf.is_empty() {
+        return;
+    }
+    match algo {
+        AllreduceAlgo::Linear => {
+            reduce_to_root(comm, buf);
+            broadcast(comm, buf, 0);
+        }
+        AllreduceAlgo::RecursiveDoubling => {
+            with_pof2_fold(comm, buf, |comm, buf, group_rank, group, pof2| {
+                let mut mask = 1usize;
+                while mask < pof2 {
+                    let partner = group[group_rank ^ mask];
+                    comm.send(partner, buf);
+                    let got = comm.recv(partner);
+                    add_into(buf, &got);
+                    comm.stats_mut().rounds += 1;
+                    mask <<= 1;
+                }
+            });
+        }
+        AllreduceAlgo::Rabenseifner => {
+            with_pof2_fold(comm, buf, |comm, buf, group_rank, group, pof2| {
+                rabenseifner_core(comm, buf, group_rank, group, pof2);
+            });
+        }
+    }
+}
+
+/// Handle non-power-of-two `P`: ranks `r < 2·rem` fold pairwise (evens
+/// send their vector to odds, which become survivors), the core runs on
+/// the `pof2` survivors, and survivors send results back. `core` gets the
+/// survivor-group rank, the survivor global ids, and `pof2`.
+fn with_pof2_fold<C: Communicator>(
+    comm: &mut C,
+    buf: &mut [f64],
+    core: impl FnOnce(&mut C, &mut [f64], usize, &[usize], usize),
+) {
+    let p = comm.size();
+    let rank = comm.rank();
+    let pof2 = p.next_power_of_two() / if p.is_power_of_two() { 1 } else { 2 };
+    let rem = p - pof2;
+
+    // Survivor set: odd ranks among the first 2·rem, plus all ranks ≥ 2·rem.
+    let survivors: Vec<usize> = (0..p)
+        .filter(|&r| (r < 2 * rem && r % 2 == 1) || r >= 2 * rem)
+        .collect();
+    debug_assert_eq!(survivors.len(), pof2);
+
+    if rank < 2 * rem {
+        if rank % 2 == 0 {
+            // Fold onto rank+1, wait for the result.
+            comm.send(rank + 1, buf);
+            comm.stats_mut().rounds += 1;
+            let result = comm.recv(rank + 1);
+            buf.copy_from_slice(&result);
+            comm.stats_mut().rounds += 1;
+            return;
+        } else {
+            let got = comm.recv(rank - 1);
+            add_into(buf, &got);
+            comm.stats_mut().rounds += 1;
+        }
+    }
+
+    let group_rank = survivors
+        .iter()
+        .position(|&r| r == rank)
+        .expect("survivor rank");
+    core(comm, buf, group_rank, &survivors, pof2);
+
+    if rank < 2 * rem {
+        // Send the finished vector back to the folded partner.
+        comm.send(rank - 1, buf);
+        comm.stats_mut().rounds += 1;
+    }
+}
+
+/// Reduce-scatter (recursive halving) + allgather (recursive doubling)
+/// among a power-of-two survivor group. Word count per rank ≈ 2·w·(1−1/P).
+fn rabenseifner_core<C: Communicator>(
+    comm: &mut C,
+    buf: &mut [f64],
+    group_rank: usize,
+    group: &[usize],
+    pof2: usize,
+) {
+    let w = buf.len();
+    if w == 0 {
+        return;
+    }
+    // Degenerate small vectors: fall back to recursive doubling (the
+    // chunking below needs at least one element per rank to be useful).
+    if w < pof2 {
+        let mut mask = 1usize;
+        while mask < pof2 {
+            let partner = group[group_rank ^ mask];
+            comm.send(partner, buf);
+            let got = comm.recv(partner);
+            add_into(buf, &got);
+            comm.stats_mut().rounds += 1;
+            mask <<= 1;
+        }
+        return;
+    }
+
+    // Chunk boundaries: contiguous, near-equal.
+    let bounds: Vec<usize> = (0..=pof2).map(|i| i * w / pof2).collect();
+
+    // --- Reduce-scatter via recursive halving ------------------------------
+    // After step k, this rank owns a contiguous span of chunks that halves
+    // each step; at the end it owns exactly chunk `group_rank`, fully
+    // reduced.
+    let mut span_lo = 0usize; // chunk index range [span_lo, span_hi)
+    let mut span_hi = pof2;
+    let mut mask = pof2 / 2;
+    while mask > 0 {
+        let partner_group = group_rank ^ mask;
+        let partner = group[partner_group];
+        let mid = (span_lo + span_hi) / 2;
+        // The half containing our final chunk is kept; the other is sent.
+        let (keep_lo, keep_hi, send_lo, send_hi) = if group_rank & mask == 0 {
+            (span_lo, mid, mid, span_hi)
+        } else {
+            (mid, span_hi, span_lo, mid)
+        };
+        let send_slice = &buf[bounds[send_lo]..bounds[send_hi]];
+        comm.send(partner, send_slice);
+        let got = comm.recv(partner);
+        add_into(&mut buf[bounds[keep_lo]..bounds[keep_hi]], &got);
+        comm.stats_mut().rounds += 1;
+        span_lo = keep_lo;
+        span_hi = keep_hi;
+        mask >>= 1;
+    }
+    debug_assert_eq!(span_lo + 1, span_hi);
+    debug_assert_eq!(span_lo, group_rank);
+
+    // --- Allgather via recursive doubling ----------------------------------
+    let mut span_lo = group_rank;
+    let mut span_hi = group_rank + 1;
+    let mut mask = 1usize;
+    while mask < pof2 {
+        let partner_group = group_rank ^ mask;
+        let partner = group[partner_group];
+        comm.send(partner, &buf[bounds[span_lo]..bounds[span_hi]]);
+        let got = comm.recv(partner);
+        // Partner's span mirrors ours within the doubled window.
+        let (new_lo, new_hi) = if group_rank & mask == 0 {
+            (span_lo, span_hi + (span_hi - span_lo))
+        } else {
+            (span_lo - (span_hi - span_lo), span_hi)
+        };
+        if group_rank & mask == 0 {
+            buf[bounds[span_hi]..bounds[new_hi]].copy_from_slice(&got);
+        } else {
+            buf[bounds[new_lo]..bounds[span_lo]].copy_from_slice(&got);
+        }
+        comm.stats_mut().rounds += 1;
+        span_lo = new_lo;
+        span_hi = new_hi;
+        mask <<= 1;
+    }
+}
+
+/// Binomial-tree reduce onto rank 0 (sum).
+pub fn reduce_to_root<C: Communicator>(comm: &mut C, buf: &mut [f64]) {
+    let p = comm.size();
+    let rank = comm.rank();
+    let mut mask = 1usize;
+    while mask < p {
+        if rank & mask != 0 {
+            comm.send(rank & !mask, buf);
+            comm.stats_mut().rounds += 1;
+            return; // Sent up the tree; done.
+        } else if rank | mask < p {
+            let got = comm.recv(rank | mask);
+            add_into(buf, &got);
+            comm.stats_mut().rounds += 1;
+        }
+        mask <<= 1;
+    }
+}
+
+/// Binomial-tree broadcast from `root`.
+pub fn broadcast<C: Communicator>(comm: &mut C, buf: &mut [f64], root: usize) {
+    let p = comm.size();
+    // Work in the rotated space where root is rank 0.
+    let vrank = (comm.rank() + p - root) % p;
+    // Receive from parent (clear lowest set bit), unless root.
+    if vrank != 0 {
+        let parent = (vrank & (vrank - 1)).wrapping_add(root) % p;
+        let got = comm.recv(parent);
+        buf.copy_from_slice(&got);
+        comm.stats_mut().rounds += 1;
+    }
+    // Forward to children: set bits above the lowest set bit.
+    let lowbit = if vrank == 0 {
+        p.next_power_of_two()
+    } else {
+        vrank & vrank.wrapping_neg()
+    };
+    let mut mask = lowbit >> 1;
+    while mask > 0 {
+        let child_v = vrank | mask;
+        if child_v != vrank && child_v < p {
+            let child = (child_v + root) % p;
+            comm.send(child, buf);
+            comm.stats_mut().rounds += 1;
+        }
+        mask >>= 1;
+    }
+}
+
+/// Allgather: each rank contributes `mine`; returns the rank-ordered
+/// concatenation. (Ring algorithm; equal contribution lengths required.)
+pub fn allgather<C: Communicator>(comm: &mut C, mine: &[f64]) -> Vec<f64> {
+    let p = comm.size();
+    let rank = comm.rank();
+    let w = mine.len();
+    let mut out = vec![0.0; w * p];
+    out[rank * w..(rank + 1) * w].copy_from_slice(mine);
+    if p == 1 {
+        return out;
+    }
+    let next = (rank + 1) % p;
+    let prev = (rank + p - 1) % p;
+    // Ring: at step t, forward the block received at step t-1.
+    let mut cur = rank;
+    for _ in 0..p - 1 {
+        comm.send(next, &out[cur * w..(cur + 1) * w]);
+        let got = comm.recv(prev);
+        cur = (cur + p - 1) % p;
+        out[cur * w..(cur + 1) * w].copy_from_slice(&got);
+        comm.stats_mut().rounds += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::run_ranks;
+
+    fn check_allreduce(p: usize, w: usize, algo: AllreduceAlgo) {
+        let outs = run_ranks(p, |c| {
+            // Rank r contributes r+1 in every slot plus a slot index term.
+            let mut buf: Vec<f64> = (0..w)
+                .map(|i| (c.rank() + 1) as f64 + i as f64 * 0.5)
+                .collect();
+            allreduce_sum(c, &mut buf, algo);
+            buf
+        });
+        let total_rank: f64 = (1..=p).map(|r| r as f64).sum();
+        for out in &outs {
+            for (i, v) in out.iter().enumerate() {
+                let expect = total_rank + p as f64 * i as f64 * 0.5;
+                assert!(
+                    (v - expect).abs() < 1e-9,
+                    "{algo:?} p={p} w={w} slot {i}: {v} vs {expect}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_all_algorithms_all_shapes() {
+        for algo in [
+            AllreduceAlgo::Rabenseifner,
+            AllreduceAlgo::RecursiveDoubling,
+            AllreduceAlgo::Linear,
+        ] {
+            for p in [2, 3, 4, 5, 7, 8, 12, 16] {
+                for w in [1, 2, 3, 17, 64, 257] {
+                    check_allreduce(p, w, algo);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rabenseifner_bandwidth_is_near_2w() {
+        // For power-of-two P and w >> P the per-rank sent words should be
+        // ≈ 2·w·(1−1/P), far below recursive doubling's w·log2(P).
+        let p = 8;
+        let w = 4096;
+        let stats = run_ranks(p, |c| {
+            let mut buf = vec![1.0; w];
+            allreduce_sum(c, &mut buf, AllreduceAlgo::Rabenseifner);
+            c.stats()
+        });
+        let max_words = stats.iter().map(|s| s.words).max().unwrap() as f64;
+        let bound = 2.0 * w as f64 * (1.0 - 1.0 / p as f64) * 1.05;
+        assert!(
+            max_words <= bound,
+            "rabenseifner sent {max_words} words, expected ≤ {bound}"
+        );
+        // And the round count is 2·log2(P).
+        let max_rounds = stats.iter().map(|s| s.rounds).max().unwrap();
+        assert_eq!(max_rounds, 2 * 3);
+    }
+
+    #[test]
+    fn recursive_doubling_rounds_are_log_p() {
+        let stats = run_ranks(8, |c| {
+            let mut buf = vec![1.0; 32];
+            allreduce_sum(c, &mut buf, AllreduceAlgo::RecursiveDoubling);
+            c.stats()
+        });
+        for s in &stats {
+            assert_eq!(s.rounds, 3);
+        }
+    }
+
+    #[test]
+    fn broadcast_from_each_root() {
+        for p in [2, 3, 5, 8] {
+            for root in 0..p {
+                let outs = run_ranks(p, |c| {
+                    let mut buf = if c.rank() == root {
+                        vec![42.0, -1.0]
+                    } else {
+                        vec![0.0, 0.0]
+                    };
+                    broadcast(c, &mut buf, root);
+                    buf
+                });
+                for out in outs {
+                    assert_eq!(out, vec![42.0, -1.0], "p={p} root={root}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_to_root_sums_on_rank0() {
+        let outs = run_ranks(6, |c| {
+            let mut buf = vec![(c.rank() + 1) as f64];
+            reduce_to_root(c, &mut buf);
+            (c.rank(), buf[0])
+        });
+        assert_eq!(outs[0], (0, 21.0));
+    }
+
+    #[test]
+    fn allgather_concatenates_in_rank_order() {
+        for p in [1, 2, 3, 6] {
+            let outs = run_ranks(p, |c| {
+                let mine = vec![c.rank() as f64 * 10.0, c.rank() as f64 * 10.0 + 1.0];
+                allgather(c, &mine)
+            });
+            let expect: Vec<f64> = (0..p)
+                .flat_map(|r| vec![r as f64 * 10.0, r as f64 * 10.0 + 1.0])
+                .collect();
+            for out in outs {
+                assert_eq!(out, expect);
+            }
+        }
+    }
+
+    #[test]
+    fn linear_allreduce_root_rounds_scale_with_p() {
+        // The naive algorithm's root does O(P)-ish sequential work — this
+        // is what the ablation bench contrasts against.
+        let p = 8;
+        let stats = run_ranks(p, |c| {
+            let mut buf = vec![1.0; 16];
+            allreduce_sum(c, &mut buf, AllreduceAlgo::Linear);
+            c.stats()
+        });
+        let root_rounds = stats[0].rounds;
+        assert!(root_rounds >= 3, "root should do at least log2(P) rounds");
+    }
+
+    #[test]
+    fn algo_parse_roundtrip() {
+        for a in [
+            AllreduceAlgo::Rabenseifner,
+            AllreduceAlgo::RecursiveDoubling,
+            AllreduceAlgo::Linear,
+        ] {
+            assert_eq!(AllreduceAlgo::parse(a.name()), Some(a));
+        }
+        assert_eq!(AllreduceAlgo::parse("nope"), None);
+    }
+}

@@ -1,0 +1,154 @@
+//! Simulated-MPI communication substrate.
+//!
+//! The paper's implementation is C + MPI on a Cray EX. This box has a
+//! single physical core, so we reproduce the *communication structure*
+//! faithfully rather than the wall-clock: `P` ranks run as OS threads,
+//! exchange real messages over channels, and every send is instrumented
+//! (message count, word count, sequential communication rounds). The
+//! [`crate::costmodel`] module then projects the measured per-rank counts
+//! onto a Cray-EX-like Hockney machine profile (γF + βW + φL).
+//!
+//! Collectives are built on point-to-point send/recv exactly like an MPI
+//! implementation would, so the counts are *measured from real message
+//! traffic*, not computed from formulas.
+
+mod collectives;
+mod thread_comm;
+
+pub use collectives::{allgather, allreduce_sum, broadcast, reduce_to_root, AllreduceAlgo};
+pub use thread_comm::{run_ranks, ThreadComm};
+
+/// Traffic statistics accumulated by a rank's communicator.
+///
+/// `rounds` counts *sequential* point-to-point steps on this rank's
+/// critical path (each send-or-recv that cannot overlap the previous one),
+/// which is the Hockney latency multiplier; `words` counts f64 words sent
+/// by this rank (bandwidth term); `msgs` counts messages sent.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CommStats {
+    pub msgs: u64,
+    pub words: u64,
+    pub rounds: u64,
+    pub allreduces: u64,
+}
+
+impl CommStats {
+    /// Merge by taking the elementwise max — the critical path over ranks.
+    pub fn max(self, other: CommStats) -> CommStats {
+        CommStats {
+            msgs: self.msgs.max(other.msgs),
+            words: self.words.max(other.words),
+            rounds: self.rounds.max(other.rounds),
+            allreduces: self.allreduces.max(other.allreduces),
+        }
+    }
+
+    pub fn reset(&mut self) {
+        *self = CommStats::default();
+    }
+}
+
+/// Point-to-point message transport between ranks plus instrumentation.
+///
+/// Collectives ([`allreduce_sum`] etc.) are generic over this trait, so
+/// the same algorithm code runs on the threaded transport in tests and on
+/// the no-op transport when `P = 1`.
+pub trait Communicator {
+    /// This rank's id in `[0, size)`.
+    fn rank(&self) -> usize;
+
+    /// Number of ranks.
+    fn size(&self) -> usize;
+
+    /// Send `buf` to rank `to` (non-blocking semantics: buffered channel).
+    fn send(&mut self, to: usize, buf: &[f64]);
+
+    /// Receive the next message from rank `from` (blocking).
+    fn recv(&mut self, from: usize) -> Vec<f64>;
+
+    /// Synchronize all ranks.
+    fn barrier(&mut self);
+
+    /// Traffic counters for this rank.
+    fn stats(&self) -> CommStats;
+
+    /// Mutable access for the collectives' round accounting.
+    fn stats_mut(&mut self) -> &mut CommStats;
+}
+
+/// The `P = 1` communicator: no traffic, no synchronization.
+#[derive(Debug, Default)]
+pub struct SelfComm {
+    stats: CommStats,
+}
+
+impl SelfComm {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Communicator for SelfComm {
+    fn rank(&self) -> usize {
+        0
+    }
+
+    fn size(&self) -> usize {
+        1
+    }
+
+    fn send(&mut self, _to: usize, _buf: &[f64]) {
+        panic!("SelfComm: send on a single-rank communicator");
+    }
+
+    fn recv(&mut self, _from: usize) -> Vec<f64> {
+        panic!("SelfComm: recv on a single-rank communicator");
+    }
+
+    fn barrier(&mut self) {}
+
+    fn stats(&self) -> CommStats {
+        self.stats
+    }
+
+    fn stats_mut(&mut self) -> &mut CommStats {
+        &mut self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn self_comm_is_trivial() {
+        let mut c = SelfComm::new();
+        assert_eq!(c.rank(), 0);
+        assert_eq!(c.size(), 1);
+        c.barrier();
+        let mut buf = vec![1.0, 2.0];
+        allreduce_sum(&mut c, &mut buf, AllreduceAlgo::Rabenseifner);
+        assert_eq!(buf, vec![1.0, 2.0]);
+        assert_eq!(c.stats().msgs, 0);
+    }
+
+    #[test]
+    fn stats_max_is_elementwise() {
+        let a = CommStats {
+            msgs: 3,
+            words: 10,
+            rounds: 2,
+            allreduces: 1,
+        };
+        let b = CommStats {
+            msgs: 1,
+            words: 20,
+            rounds: 5,
+            allreduces: 1,
+        };
+        let m = a.max(b);
+        assert_eq!(m.msgs, 3);
+        assert_eq!(m.words, 20);
+        assert_eq!(m.rounds, 5);
+    }
+}

@@ -1,0 +1,187 @@
+//! Threaded rank transport: `P` ranks as scoped OS threads, with a
+//! dedicated mpsc channel per (sender, receiver) pair — the moral
+//! equivalent of MPI point-to-point over shared memory.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Barrier};
+
+use super::{CommStats, Communicator};
+
+/// Per-rank communicator handle for the threaded transport.
+pub struct ThreadComm {
+    rank: usize,
+    size: usize,
+    /// `senders[to]` — channel into rank `to`'s `receivers[self.rank]`.
+    senders: Vec<Sender<Vec<f64>>>,
+    /// `receivers[from]` — messages sent by rank `from` to this rank.
+    receivers: Vec<Receiver<Vec<f64>>>,
+    barrier: Arc<Barrier>,
+    stats: CommStats,
+}
+
+impl Communicator for ThreadComm {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    fn send(&mut self, to: usize, buf: &[f64]) {
+        assert_ne!(to, self.rank, "send to self");
+        self.stats.msgs += 1;
+        self.stats.words += buf.len() as u64;
+        self.senders[to]
+            .send(buf.to_vec())
+            .expect("peer rank hung up");
+    }
+
+    fn recv(&mut self, from: usize) -> Vec<f64> {
+        assert_ne!(from, self.rank, "recv from self");
+        self.receivers[from].recv().expect("peer rank hung up")
+    }
+
+    fn barrier(&mut self) {
+        self.barrier.wait();
+    }
+
+    fn stats(&self) -> CommStats {
+        self.stats
+    }
+
+    fn stats_mut(&mut self) -> &mut CommStats {
+        &mut self.stats
+    }
+}
+
+/// Run `f` on `p` ranks (scoped threads), returning the per-rank results
+/// in rank order. `f` may borrow from the caller (e.g. shared read-only
+/// dataset shards).
+///
+/// Panics in any rank propagate (the join unwraps), so test assertions
+/// inside ranks behave normally.
+pub fn run_ranks<T, F>(p: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(&mut ThreadComm) -> T + Sync,
+{
+    assert!(p > 0);
+    // Build the p×p channel mesh. mesh[to][from] = receiver at `to` for
+    // messages from `from`.
+    let mut senders: Vec<Vec<Option<Sender<Vec<f64>>>>> = (0..p)
+        .map(|_| (0..p).map(|_| None).collect())
+        .collect();
+    let mut receivers: Vec<Vec<Option<Receiver<Vec<f64>>>>> = (0..p)
+        .map(|_| (0..p).map(|_| None).collect())
+        .collect();
+    for from in 0..p {
+        for to in 0..p {
+            if from == to {
+                continue;
+            }
+            let (tx, rx) = channel();
+            senders[from][to] = Some(tx);
+            receivers[to][from] = Some(rx);
+        }
+    }
+    let barrier = Arc::new(Barrier::new(p));
+
+    // Assemble per-rank handles (self-channel slots hold dummies).
+    let mut comms: Vec<ThreadComm> = Vec::with_capacity(p);
+    for (rank, (srow, rrow)) in senders.into_iter().zip(receivers).enumerate() {
+        let senders: Vec<Sender<Vec<f64>>> = srow
+            .into_iter()
+            .map(|s| s.unwrap_or_else(|| channel().0))
+            .collect();
+        let receivers: Vec<Receiver<Vec<f64>>> = rrow
+            .into_iter()
+            .map(|r| r.unwrap_or_else(|| channel().1))
+            .collect();
+        comms.push(ThreadComm {
+            rank,
+            size: p,
+            senders,
+            receivers,
+            barrier: Arc::clone(&barrier),
+            stats: CommStats::default(),
+        });
+    }
+
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|mut comm| {
+                let f = &f;
+                scope.spawn(move || f(&mut comm))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("rank panicked"))
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ping_pong() {
+        let out = run_ranks(2, |c| {
+            if c.rank() == 0 {
+                c.send(1, &[1.0, 2.0, 3.0]);
+                c.recv(1)
+            } else {
+                let got = c.recv(0);
+                c.send(0, &got.iter().map(|x| x * 2.0).collect::<Vec<_>>());
+                got
+            }
+        });
+        assert_eq!(out[0], vec![2.0, 4.0, 6.0]);
+        assert_eq!(out[1], vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn stats_count_traffic() {
+        let stats = run_ranks(3, |c| {
+            if c.rank() == 0 {
+                c.send(1, &[0.0; 10]);
+                c.send(2, &[0.0; 5]);
+            } else {
+                let _ = c.recv(0);
+            }
+            c.stats()
+        });
+        assert_eq!(stats[0].msgs, 2);
+        assert_eq!(stats[0].words, 15);
+        assert_eq!(stats[1].msgs, 0);
+    }
+
+    #[test]
+    fn barrier_synchronizes() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let counter = AtomicUsize::new(0);
+        run_ranks(4, |c| {
+            counter.fetch_add(1, Ordering::SeqCst);
+            c.barrier();
+            // After the barrier every rank's increment must be visible.
+            assert_eq!(counter.load(Ordering::SeqCst), 4);
+        });
+    }
+
+    #[test]
+    fn many_ranks_round_robin() {
+        let p = 8;
+        let out = run_ranks(p, |c| {
+            let next = (c.rank() + 1) % p;
+            let prev = (c.rank() + p - 1) % p;
+            c.send(next, &[c.rank() as f64]);
+            c.recv(prev)[0]
+        });
+        for (r, v) in out.iter().enumerate() {
+            assert_eq!(*v, ((r + p - 1) % p) as f64);
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Runtime-breakdown harness (Figures 4, 7, 8): per-phase time as `s`
+//! varies at a fixed process count.
+
+use crate::comm::AllreduceAlgo;
+use crate::costmodel::{MachineProfile, Phase, Projection};
+use crate::data::Dataset;
+use crate::kernelfn::Kernel;
+
+use super::experiment::ProblemSpec;
+use super::scaling::{analytic_ledger, Engine};
+use super::experiment::{run_distributed, SolverSpec};
+
+/// One bar of a breakdown figure: the per-phase projected seconds for a
+/// given `s` (with `s = 1` being the classical method).
+#[derive(Clone, Debug)]
+pub struct BreakdownBar {
+    pub s: usize,
+    pub engine: Engine,
+    pub projection: Projection,
+}
+
+impl BreakdownBar {
+    /// Phase fractions (sums to 1).
+    pub fn fractions(&self) -> Vec<(Phase, f64)> {
+        let total = self.projection.total_secs().max(f64::MIN_POSITIVE);
+        Phase::ALL
+            .iter()
+            .map(|&ph| (ph, self.projection.phase_secs(ph) / total))
+            .collect()
+    }
+}
+
+/// Breakdown sweep over `s ∈ {1} ∪ s_list` at fixed `p`.
+#[allow(clippy::too_many_arguments)]
+pub fn breakdown(
+    ds: &Dataset,
+    kernel: Kernel,
+    problem: &ProblemSpec,
+    s_list: &[usize],
+    h: usize,
+    p: usize,
+    algo: AllreduceAlgo,
+    machine: &MachineProfile,
+    measured_limit: usize,
+) -> Vec<BreakdownBar> {
+    let engine = if p <= measured_limit && p.is_power_of_two() {
+        Engine::Measured
+    } else {
+        Engine::Projected
+    };
+    let mut bars = Vec::with_capacity(s_list.len() + 1);
+    for &s in std::iter::once(&1usize).chain(s_list.iter()) {
+        if s > h {
+            continue;
+        }
+        let projection = match engine {
+            Engine::Measured => {
+                let solver = SolverSpec { s, h, seed: 0xB0 };
+                run_distributed(ds, kernel, problem, &solver, p, algo, machine).projection
+            }
+            Engine::Projected => {
+                machine.project(&analytic_ledger(ds, kernel, problem, s, h, p, algo))
+            }
+        };
+        bars.push(BreakdownBar {
+            s,
+            engine,
+            projection,
+        });
+    }
+    bars
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::SvmVariant;
+
+    #[test]
+    fn allreduce_fraction_shrinks_then_memreset_grows() {
+        // colon-like: latency-bound at moderate P. Raising s must shrink
+        // the allreduce share; the s-step overhead phases must appear.
+        let ds = crate::data::paper_dataset("colon-cancer")
+            .unwrap()
+            .generate_scaled(0.5);
+        let bars = breakdown(
+            &ds,
+            Kernel::paper_rbf(),
+            &ProblemSpec::Svm {
+                c: 1.0,
+                variant: SvmVariant::L1,
+            },
+            &[8, 64],
+            128,
+            32,
+            AllreduceAlgo::Rabenseifner,
+            &MachineProfile::cray_ex(),
+            0,
+        );
+        assert_eq!(bars.len(), 3);
+        let frac = |bar: &BreakdownBar, ph: Phase| {
+            bar.fractions()
+                .iter()
+                .find(|(q, _)| *q == ph)
+                .map(|(_, f)| *f)
+                .unwrap()
+        };
+        let ar1 = frac(&bars[0], Phase::Allreduce);
+        let ar64 = frac(&bars[2], Phase::Allreduce);
+        assert!(
+            ar64 < ar1,
+            "allreduce share should fall with s: {ar1} → {ar64}"
+        );
+        assert_eq!(frac(&bars[0], Phase::MemReset), 0.0, "classical has no reset");
+        assert!(frac(&bars[2], Phase::MemReset) > 0.0);
+        assert!(frac(&bars[2], Phase::GradCorr) > 0.0);
+    }
+
+    #[test]
+    fn bandwidth_bound_regime_shows_diminishing_returns() {
+        // news20-like K-RR with b=4 at large P: past the optimum, total
+        // time stops improving (Figure 7's 1.14× story). Scale must keep
+        // m large enough that the s·b·m-word messages are genuinely
+        // bandwidth-bound (m ≈ 5000 ⇒ 20k-word messages ≫ the ~1.2k-word
+        // latency/bandwidth balance point of the machine profile).
+        let ds = crate::data::paper_dataset("news20")
+            .unwrap()
+            .generate_scaled(0.25);
+        let bars = breakdown(
+            &ds,
+            Kernel::paper_rbf(),
+            &ProblemSpec::Krr { lambda: 1.0, b: 4 },
+            &[4, 16, 64, 256],
+            256,
+            2048,
+            AllreduceAlgo::Rabenseifner,
+            &MachineProfile::cray_ex(),
+            0,
+        );
+        let t: Vec<f64> = bars.iter().map(|b| b.projection.total_secs()).collect();
+        let best = t.iter().cloned().fold(f64::MAX, f64::min);
+        let speedup = t[0] / best;
+        assert!(
+            speedup < 2.5,
+            "bandwidth-bound: win should be modest, got {speedup}"
+        );
+        // Marginal gain from the last doubling of s must be small or
+        // negative.
+        let last_gain = t[t.len() - 2] / t[t.len() - 1];
+        assert!(last_gain < 1.3, "diminishing returns expected: {t:?}");
+    }
+}

@@ -1,0 +1,286 @@
+//! Experiment configuration: a TOML-subset parser plus typed accessors.
+//!
+//! Supported syntax (the subset every config in `configs/` uses):
+//!
+//! ```toml
+//! # comment
+//! [section]
+//! key = "string"
+//! n = 42
+//! x = 2.5
+//! flag = true
+//! list = [1, 2, 4]
+//! names = ["a", "b"]
+//! ```
+//!
+//! Keys are addressed as `section.key` (top-level keys have no prefix).
+//! CLI `--key value` pairs override file values via [`Config::set`].
+
+use std::collections::BTreeMap;
+
+/// A configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    NumList(Vec<f64>),
+    StrList(Vec<String>),
+}
+
+/// Flat `section.key → value` configuration map.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn new() -> Config {
+        Config::default()
+    }
+
+    /// Parse TOML-subset text.
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut cfg = Config::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let full_key = if section.is_empty() {
+                key.trim().to_string()
+            } else {
+                format!("{section}.{}", key.trim())
+            };
+            let value = parse_value(val.trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            cfg.values.insert(full_key, value);
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file.
+    pub fn load(path: &std::path::Path) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read {path:?}: {e}"))?;
+        Self::parse(&text)
+    }
+
+    /// Set/override a key from a CLI string (type inferred like the file
+    /// syntax, falling back to a bare string).
+    pub fn set(&mut self, key: &str, raw: &str) {
+        let v = parse_value(raw).unwrap_or_else(|_| Value::Str(raw.to_string()));
+        self.values.insert(key.to_string(), v);
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn str(&self, key: &str) -> Option<&str> {
+        match self.values.get(key) {
+            Some(Value::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn f64(&self, key: &str) -> Option<f64> {
+        match self.values.get(key) {
+            Some(Value::Num(n)) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn usize(&self, key: &str) -> Option<usize> {
+        self.f64(key).and_then(|n| {
+            if n >= 0.0 && n.fract() == 0.0 {
+                Some(n as usize)
+            } else {
+                None
+            }
+        })
+    }
+
+    pub fn bool(&self, key: &str) -> Option<bool> {
+        match self.values.get(key) {
+            Some(Value::Bool(b)) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn usize_list(&self, key: &str) -> Option<Vec<usize>> {
+        match self.values.get(key) {
+            Some(Value::NumList(ns)) => ns
+                .iter()
+                .map(|n| {
+                    if *n >= 0.0 && n.fract() == 0.0 {
+                        Some(*n as usize)
+                    } else {
+                        None
+                    }
+                })
+                .collect(),
+            _ => None,
+        }
+    }
+
+    /// Keys in deterministic order (reports).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated list".to_string())?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::NumList(Vec::new()));
+        }
+        let items: Vec<&str> = split_list(inner);
+        if items.iter().all(|i| i.starts_with('"')) {
+            let strs = items
+                .iter()
+                .map(|i| parse_string(i))
+                .collect::<Result<Vec<_>, _>>()?;
+            return Ok(Value::StrList(strs));
+        }
+        let nums = items
+            .iter()
+            .map(|i| i.trim().parse::<f64>().map_err(|e| format!("bad number '{i}': {e}")))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(Value::NumList(nums));
+    }
+    if s.starts_with('"') {
+        return parse_string(s).map(Value::Str);
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    s.parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| format!("cannot parse value '{s}'"))
+}
+
+fn split_list(inner: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0;
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in inner.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            ',' if !in_str && depth == 0 => {
+                out.push(inner[start..i].trim());
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(inner[start..].trim());
+    out
+}
+
+fn parse_string(s: &str) -> Result<String, String> {
+    let body = s
+        .strip_prefix('"')
+        .and_then(|r| r.strip_suffix('"'))
+        .ok_or_else(|| format!("unterminated string {s}"))?;
+    Ok(body.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let cfg = Config::parse(
+            r#"
+            # top comment
+            name = "duke"          # inline comment
+            scale = 0.5
+            [solver]
+            kind = "dcd-sstep"
+            s = 32
+            trace = true
+            p_sweep = [1, 2, 4, 8]
+            kernels = ["linear", "rbf"]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.str("name"), Some("duke"));
+        assert_eq!(cfg.f64("scale"), Some(0.5));
+        assert_eq!(cfg.str("solver.kind"), Some("dcd-sstep"));
+        assert_eq!(cfg.usize("solver.s"), Some(32));
+        assert_eq!(cfg.bool("solver.trace"), Some(true));
+        assert_eq!(cfg.usize_list("solver.p_sweep"), Some(vec![1, 2, 4, 8]));
+        assert_eq!(
+            cfg.get("solver.kernels"),
+            Some(&Value::StrList(vec!["linear".into(), "rbf".into()]))
+        );
+    }
+
+    #[test]
+    fn cli_override_wins() {
+        let mut cfg = Config::parse("s = 8\n").unwrap();
+        cfg.set("s", "64");
+        assert_eq!(cfg.usize("s"), Some(64));
+        cfg.set("dataset", "news20"); // bare string fallback
+        assert_eq!(cfg.str("dataset"), Some("news20"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Config::parse("[unterminated\n").is_err());
+        assert!(Config::parse("novalue\n").is_err());
+        assert!(Config::parse("x = [1, \n").is_err());
+        assert!(Config::parse("x = notanumber\n").is_err());
+    }
+
+    #[test]
+    fn missing_keys_are_none() {
+        let cfg = Config::parse("x = 1\n").unwrap();
+        assert_eq!(cfg.str("x"), None); // wrong type
+        assert_eq!(cfg.f64("y"), None); // absent
+        assert_eq!(cfg.usize("x"), Some(1));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let cfg = Config::parse("tag = \"a#b\"\n").unwrap();
+        assert_eq!(cfg.str("tag"), Some("a#b"));
+    }
+}

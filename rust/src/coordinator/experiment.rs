@@ -1,0 +1,303 @@
+//! Single-experiment launcher: run one solver configuration, serially or
+//! across `P` ranks, and collect the cost ledgers + machine projection.
+
+use crate::comm::{run_ranks, AllreduceAlgo, Communicator, SelfComm};
+use crate::costmodel::{Ledger, MachineProfile, Projection};
+use crate::data::Dataset;
+use crate::kernelfn::Kernel;
+use crate::solvers::{
+    bdcd, bdcd_sstep, dcd, dcd_sstep, DistGram, GramOracle, KrrParams, LocalGram, SvmParams,
+    SvmVariant,
+};
+
+/// Which optimization problem to solve.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ProblemSpec {
+    /// K-SVM with hinge (`L1`) or squared-hinge (`L2`) loss.
+    Svm { c: f64, variant: SvmVariant },
+    /// K-RR with ridge penalty `λ` and block size `b`.
+    Krr { lambda: f64, b: usize },
+}
+
+impl ProblemSpec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProblemSpec::Svm {
+                variant: SvmVariant::L1,
+                ..
+            } => "k-svm-l1",
+            ProblemSpec::Svm {
+                variant: SvmVariant::L2,
+                ..
+            } => "k-svm-l2",
+            ProblemSpec::Krr { .. } => "k-rr",
+        }
+    }
+}
+
+/// Classical (`s = 1`) or s-step solver.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SolverSpec {
+    /// `1` = the classical method; `> 1` = the s-step variant.
+    pub s: usize,
+    /// Total inner iterations `H`.
+    pub h: usize,
+    /// Coordinate-stream seed (equal seeds ⇒ comparable runs).
+    pub seed: u64,
+}
+
+/// Result of one run.
+pub struct RunResult {
+    /// Final dual solution (identical on every rank; rank 0's copy).
+    pub alpha: Vec<f64>,
+    /// Critical-path ledger (max over ranks).
+    pub critical: Ledger,
+    /// Per-rank ledgers (rank-indexed).
+    pub per_rank: Vec<Ledger>,
+    /// Hockney projection of the critical path.
+    pub projection: Projection,
+    /// Local wall-clock of the whole run (all ranks, this box).
+    pub wall_secs: f64,
+}
+
+fn run_solver<O: crate::solvers::GramOracle>(
+    oracle: &mut O,
+    y: &[f64],
+    problem: &ProblemSpec,
+    solver: &SolverSpec,
+    ledger: &mut Ledger,
+) -> Vec<f64> {
+    match *problem {
+        ProblemSpec::Svm { c, variant } => {
+            let p = SvmParams {
+                c,
+                variant,
+                h: solver.h,
+                seed: solver.seed,
+            };
+            if solver.s <= 1 {
+                dcd(oracle, y, &p, ledger, None)
+            } else {
+                dcd_sstep(oracle, y, &p, solver.s, ledger, None)
+            }
+        }
+        ProblemSpec::Krr { lambda, b } => {
+            let p = KrrParams {
+                lambda,
+                b,
+                h: solver.h,
+                seed: solver.seed,
+            };
+            if solver.s <= 1 {
+                bdcd(oracle, y, &p, ledger, None)
+            } else {
+                bdcd_sstep(oracle, y, &p, solver.s, ledger, None)
+            }
+        }
+    }
+}
+
+/// Run on a single rank with a [`LocalGram`] oracle.
+pub fn run_serial(
+    ds: &Dataset,
+    kernel: Kernel,
+    problem: &ProblemSpec,
+    solver: &SolverSpec,
+    machine: &MachineProfile,
+) -> RunResult {
+    let t0 = std::time::Instant::now();
+    let mut ledger = Ledger::new();
+    let mut oracle = LocalGram::new(ds.a.clone(), kernel);
+    let alpha = run_solver(&mut oracle, &ds.y, problem, solver, &mut ledger);
+    let mut comm = SelfComm::new();
+    let _ = &mut comm;
+    let wall = t0.elapsed().as_secs_f64();
+    let critical = Ledger::critical_path(std::slice::from_ref(&ledger));
+    let projection = machine.project(&critical);
+    RunResult {
+        alpha,
+        critical,
+        per_rank: vec![ledger],
+        projection,
+        wall_secs: wall,
+    }
+}
+
+/// Run across `p` ranks (threads) with [`DistGram`] oracles over
+/// 1D-column shards — the paper's parallelization, with real message
+/// traffic feeding the cost projection.
+pub fn run_distributed(
+    ds: &Dataset,
+    kernel: Kernel,
+    problem: &ProblemSpec,
+    solver: &SolverSpec,
+    p: usize,
+    algo: AllreduceAlgo,
+    machine: &MachineProfile,
+) -> RunResult {
+    assert!(p >= 1);
+    if p == 1 {
+        return run_serial(ds, kernel, problem, solver, machine);
+    }
+    let t0 = std::time::Instant::now();
+    let shards = ds.shard_cols(p);
+    let outs: Vec<(Vec<f64>, Ledger)> = run_ranks(p, |comm| {
+        let shard = shards[comm.rank()].clone();
+        let mut ledger = Ledger::new();
+        let mut oracle = DistGram::new(shard, kernel, comm, algo);
+        let alpha = run_solver(&mut oracle, &ds.y, problem, solver, &mut ledger);
+        ledger.comm = oracle.comm_stats();
+        (alpha, ledger)
+    });
+    let wall = t0.elapsed().as_secs_f64();
+
+    // Every rank must hold the same replicated solution.
+    let alpha = outs[0].0.clone();
+    for (a, _) in &outs[1..] {
+        debug_assert_eq!(a.len(), alpha.len());
+    }
+    let per_rank: Vec<Ledger> = outs.into_iter().map(|(_, l)| l).collect();
+    let critical = Ledger::critical_path(&per_rank);
+    let projection = machine.project(&critical);
+    RunResult {
+        alpha,
+        critical,
+        per_rank,
+        projection,
+        wall_secs: wall,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::Phase;
+    use crate::data::paper_dataset;
+    use crate::testkit;
+
+    fn small_svm() -> (Dataset, ProblemSpec, SolverSpec) {
+        let ds = crate::data::gen_dense_classification(32, 12, 0.05, 55);
+        (
+            ds,
+            ProblemSpec::Svm {
+                c: 1.0,
+                variant: SvmVariant::L1,
+            },
+            SolverSpec {
+                s: 8,
+                h: 64,
+                seed: 9,
+            },
+        )
+    }
+
+    #[test]
+    fn distributed_solution_matches_serial() {
+        let (ds, problem, solver) = small_svm();
+        let machine = MachineProfile::cray_ex();
+        let kernel = Kernel::paper_rbf();
+        let serial = run_serial(&ds, kernel, &problem, &solver, &machine);
+        for p in [2, 4, 7] {
+            let dist = run_distributed(
+                &ds,
+                kernel,
+                &problem,
+                &solver,
+                p,
+                AllreduceAlgo::Rabenseifner,
+                &machine,
+            );
+            testkit::assert_close(&dist.alpha, &serial.alpha, 1e-9, &format!("p={p}"));
+        }
+    }
+
+    #[test]
+    fn distributed_krr_matches_serial_and_classical() {
+        let ds = crate::data::gen_dense_regression(24, 8, 0.1, 66);
+        let machine = MachineProfile::cray_ex();
+        let kernel = Kernel::paper_rbf();
+        let problem = ProblemSpec::Krr { lambda: 1.0, b: 3 };
+        let classical = SolverSpec { s: 1, h: 40, seed: 4 };
+        let sstep = SolverSpec { s: 8, h: 40, seed: 4 };
+        let a_serial = run_serial(&ds, kernel, &problem, &classical, &machine).alpha;
+        let a_dist = run_distributed(
+            &ds,
+            kernel,
+            &problem,
+            &sstep,
+            3,
+            AllreduceAlgo::RecursiveDoubling,
+            &machine,
+        )
+        .alpha;
+        testkit::assert_close(&a_dist, &a_serial, 1e-9, "dist s-step vs serial classical");
+    }
+
+    #[test]
+    fn sstep_reduces_projected_allreduce_latency() {
+        // The paper's core claim, end to end: same H, same P, same data —
+        // s-step must cut allreduce rounds by ~s and reduce projected time
+        // in the latency-bound regime.
+        let (ds, problem, _) = small_svm();
+        let machine = MachineProfile::cray_ex();
+        let kernel = Kernel::paper_rbf();
+        let classical = run_distributed(
+            &ds,
+            kernel,
+            &problem,
+            &SolverSpec { s: 1, h: 64, seed: 9 },
+            4,
+            AllreduceAlgo::Rabenseifner,
+            &machine,
+        );
+        let sstep = run_distributed(
+            &ds,
+            kernel,
+            &problem,
+            &SolverSpec { s: 16, h: 64, seed: 9 },
+            4,
+            AllreduceAlgo::Rabenseifner,
+            &machine,
+        );
+        let r1 = classical.critical.comm.rounds;
+        let r2 = sstep.critical.comm.rounds;
+        assert!(
+            r2 * 8 <= r1,
+            "s-step rounds {r2} should be ≪ classical {r1}"
+        );
+        let t1 = classical.projection.phase_secs(Phase::Allreduce);
+        let t2 = sstep.projection.phase_secs(Phase::Allreduce);
+        assert!(t2 < t1, "projected allreduce {t2} !< {t1}");
+    }
+
+    #[test]
+    fn per_rank_ledgers_reflect_load_imbalance() {
+        let ds = paper_dataset("news20").unwrap().generate_scaled(0.01);
+        let machine = MachineProfile::cray_ex();
+        let res = run_distributed(
+            &ds,
+            Kernel::paper_rbf(),
+            &ProblemSpec::Svm {
+                c: 1.0,
+                variant: SvmVariant::L1,
+            },
+            &SolverSpec { s: 4, h: 8, seed: 3 },
+            4,
+            AllreduceAlgo::Rabenseifner,
+            &machine,
+        );
+        let flops: Vec<f64> = res
+            .per_rank
+            .iter()
+            .map(|l| l.flops(Phase::KernelCompute))
+            .collect();
+        let max = flops.iter().fold(0.0f64, |a, &b| a.max(b));
+        let min = flops.iter().fold(f64::MAX, |a, &b| a.min(b));
+        assert!(
+            max / min > 1.2,
+            "power-law shards should be imbalanced: {flops:?}"
+        );
+        // Critical path takes the max.
+        assert_eq!(res.critical.flops(Phase::KernelCompute), max);
+    }
+}

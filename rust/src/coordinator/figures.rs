@@ -1,0 +1,144 @@
+//! Shared figure-regeneration helpers: convergence series and
+//! iterations-to-tolerance, used by the CLI, the examples and the
+//! `benches/fig*` harnesses.
+
+use crate::costmodel::Ledger;
+use crate::data::Dataset;
+use crate::kernelfn::Kernel;
+use crate::solvers::objective::SvmObjective;
+use crate::solvers::{
+    bdcd, bdcd_sstep, dcd, dcd_sstep, krr_exact, KrrParams, LocalGram, SvmParams, SvmVariant,
+};
+
+/// Duality-gap series for (s-step) DCD on K-SVM: `(iteration, gap)` every
+/// `every` iterations. `s = 1` runs the classical method.
+#[allow(clippy::too_many_arguments)]
+pub fn svm_gap_series(
+    ds: &Dataset,
+    kernel: Kernel,
+    variant: SvmVariant,
+    c: f64,
+    h: usize,
+    s: usize,
+    seed: u64,
+    every: usize,
+) -> Vec<(usize, f64)> {
+    let mut oracle = LocalGram::new(ds.a.clone(), kernel);
+    let obj = SvmObjective::new(&mut oracle, &ds.y, c, variant);
+    let mut pts = Vec::new();
+    let mut cb = |k: usize, a: &[f64]| {
+        if k % every == 0 || k == h {
+            pts.push((k, obj.duality_gap(a)));
+        }
+    };
+    let params = SvmParams {
+        c,
+        variant,
+        h,
+        seed,
+    };
+    let mut o = LocalGram::new(ds.a.clone(), kernel);
+    if s <= 1 {
+        dcd(&mut o, &ds.y, &params, &mut Ledger::new(), Some(&mut cb));
+    } else {
+        dcd_sstep(&mut o, &ds.y, &params, s, &mut Ledger::new(), Some(&mut cb));
+    }
+    pts
+}
+
+/// Relative-solution-error series for (s-step) BDCD on K-RR, against the
+/// closed-form `α*`.
+#[allow(clippy::too_many_arguments)]
+pub fn krr_relerr_series(
+    ds: &Dataset,
+    kernel: Kernel,
+    lambda: f64,
+    b: usize,
+    h: usize,
+    s: usize,
+    seed: u64,
+    every: usize,
+) -> Vec<(usize, f64)> {
+    let mut oracle = LocalGram::new(ds.a.clone(), kernel);
+    let astar = krr_exact(&mut oracle, &ds.y, lambda);
+    krr_relerr_series_vs(ds, kernel, lambda, b, h, s, seed, every, &astar)
+}
+
+/// Same, against a precomputed `α*` (lets callers amortize the exact
+/// solve across several series).
+#[allow(clippy::too_many_arguments)]
+pub fn krr_relerr_series_vs(
+    ds: &Dataset,
+    kernel: Kernel,
+    lambda: f64,
+    b: usize,
+    h: usize,
+    s: usize,
+    seed: u64,
+    every: usize,
+    astar: &[f64],
+) -> Vec<(usize, f64)> {
+    let mut pts = Vec::new();
+    let mut cb = |k: usize, a: &[f64]| {
+        if k % every == 0 || k == h {
+            pts.push((k, crate::dense::rel_err(a, astar)));
+        }
+    };
+    let params = KrrParams {
+        lambda,
+        b,
+        h,
+        seed,
+    };
+    let mut o = LocalGram::new(ds.a.clone(), kernel);
+    if s <= 1 {
+        bdcd(&mut o, &ds.y, &params, &mut Ledger::new(), Some(&mut cb));
+    } else {
+        bdcd_sstep(&mut o, &ds.y, &params, s, &mut Ledger::new(), Some(&mut cb));
+    }
+    pts
+}
+
+/// First iteration at which a series crosses below `tol` (None if never).
+pub fn iters_to_tol(series: &[(usize, f64)], tol: f64) -> Option<usize> {
+    series.iter().find(|(_, v)| *v <= tol).map(|(k, _)| *k)
+}
+
+/// Max absolute deviation between two series sampled at the same
+/// iterations — the "s-step overlays classical" check of Figures 1–2.
+pub fn max_series_deviation(a: &[(usize, f64)], b: &[(usize, f64)]) -> f64 {
+    assert_eq!(a.len(), b.len(), "series sampled differently");
+    a.iter()
+        .zip(b)
+        .map(|((ka, va), (kb, vb))| {
+            assert_eq!(ka, kb);
+            (va - vb).abs()
+        })
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gap_series_overlays_for_sstep() {
+        let ds = crate::data::gen_dense_classification(30, 8, 0.05, 7);
+        let a = svm_gap_series(&ds, Kernel::paper_rbf(), SvmVariant::L1, 1.0, 96, 1, 3, 16);
+        let b = svm_gap_series(&ds, Kernel::paper_rbf(), SvmVariant::L1, 1.0, 96, 16, 3, 16);
+        assert!(a.len() >= 6);
+        assert!(max_series_deviation(&a, &b) < 1e-8);
+        // Gap decreases overall.
+        assert!(a.last().unwrap().1 < a.first().unwrap().1);
+    }
+
+    #[test]
+    fn relerr_series_overlays_and_converges() {
+        let ds = crate::data::gen_dense_regression(40, 6, 0.1, 8);
+        let a = krr_relerr_series(&ds, Kernel::paper_rbf(), 1.0, 8, 400, 1, 5, 50);
+        let b = krr_relerr_series(&ds, Kernel::paper_rbf(), 1.0, 8, 400, 16, 5, 50);
+        assert!(max_series_deviation(&a, &b) < 1e-8);
+        assert!(a.last().unwrap().1 < 1e-4, "relerr {:?}", a.last());
+        assert_eq!(iters_to_tol(&a, 1.0), Some(50));
+    }
+}

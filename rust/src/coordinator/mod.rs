@@ -1,0 +1,25 @@
+//! L3 coordinator: the distributed experiment engine behind the CLI, the
+//! examples, and the paper-figure benches.
+//!
+//! * [`config`] — experiment configuration (TOML-subset files + CLI
+//!   overrides).
+//! * [`experiment`] — single-run launcher: shard the dataset 1D-column,
+//!   spin up `P` ranks ([`crate::comm::run_ranks`]), run a solver over a
+//!   [`crate::solvers::DistGram`], collect per-rank ledgers, project onto
+//!   a machine profile.
+//! * [`scaling`] — the strong-scaling harness (Figures 3, 5, 6): sweeps
+//!   `P` and `s` with two engines — `measured` (real ranks, real message
+//!   traffic) and `projected` (count model for `P` beyond what one box
+//!   can thread), cross-validated against each other in tests.
+//! * [`breakdown`] — the runtime-breakdown harness (Figures 4, 7, 8).
+//! * [`report`] — markdown / CSV table writers shared by benches.
+
+pub mod breakdown;
+pub mod config;
+pub mod experiment;
+pub mod figures;
+pub mod report;
+pub mod scaling;
+
+pub use config::Config;
+pub use experiment::{run_distributed, run_serial, ProblemSpec, RunResult, SolverSpec};

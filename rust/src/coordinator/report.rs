@@ -1,0 +1,172 @@
+//! Report writers: markdown tables and CSV, shared by the CLI, the
+//! examples and the paper-figure benches.
+
+use crate::costmodel::Phase;
+
+use super::breakdown::BreakdownBar;
+use super::scaling::{Engine, SweepRow};
+
+/// A simple column-aligned markdown table builder.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Table {
+        Table {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render as aligned GitHub-flavored markdown.
+    pub fn markdown(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.chars().count();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.chars().count());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = width[i]));
+            }
+            s
+        };
+        let mut out = fmt_row(&self.header);
+        out.push('\n');
+        out.push('|');
+        for w in &width {
+            out.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as CSV (RFC-4180-ish; quotes cells containing commas).
+    pub fn csv(&self) -> String {
+        let esc = |c: &str| -> String {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(
+            &self
+                .header
+                .iter()
+                .map(|c| esc(c))
+                .collect::<Vec<_>>()
+                .join(","),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+fn engine_tag(e: Engine) -> &'static str {
+    match e {
+        Engine::Measured => "measured",
+        Engine::Projected => "projected",
+    }
+}
+
+/// Strong-scaling rows → markdown (the Figures 3/5/6 table form).
+pub fn scaling_table(rows: &[SweepRow]) -> Table {
+    let mut t = Table::new(vec![
+        "P", "engine", "classical (s)", "s-step best (s)", "best s", "speedup",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.p.to_string(),
+            engine_tag(r.engine).to_string(),
+            format!("{:.4e}", r.classical.total_secs()),
+            format!("{:.4e}", r.best_sstep.total_secs()),
+            r.best_s.to_string(),
+            format!("{:.2}x", r.speedup()),
+        ]);
+    }
+    t
+}
+
+/// Breakdown bars → markdown (the Figures 4/7/8 table form).
+pub fn breakdown_table(bars: &[BreakdownBar]) -> Table {
+    let mut header = vec!["s".to_string(), "engine".to_string(), "total (s)".to_string()];
+    header.extend(Phase::ALL.iter().map(|p| p.name().to_string()));
+    let mut t = Table::new(header);
+    for b in bars {
+        let mut cells = vec![
+            if b.s == 1 {
+                "classical".to_string()
+            } else {
+                b.s.to_string()
+            },
+            engine_tag(b.engine).to_string(),
+            format!("{:.4e}", b.projection.total_secs()),
+        ];
+        cells.extend(
+            Phase::ALL
+                .iter()
+                .map(|&p| format!("{:.3e}", b.projection.phase_secs(p))),
+        );
+        t.row(cells);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_is_aligned_and_complete() {
+        let mut t = Table::new(vec!["a", "long header", "x"]);
+        t.row(vec!["1", "2", "3"]);
+        t.row(vec!["wide cell", "5", "6"]);
+        let md = t.markdown();
+        let lines: Vec<&str> = md.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // All lines equal width.
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+        assert!(lines[0].contains("long header"));
+        assert!(lines[1].starts_with("|---"));
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["x,y", "plain"]);
+        let csv = t.csv();
+        assert!(csv.contains("\"x,y\",plain"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn row_arity_checked() {
+        let mut t = Table::new(vec!["a"]);
+        t.row(vec!["1", "2"]);
+    }
+}

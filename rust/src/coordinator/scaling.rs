@@ -1,0 +1,462 @@
+//! Strong-scaling harness (Figures 3, 5, 6 and Table 4).
+//!
+//! Two engines produce the same [`crate::costmodel::Ledger`] shape:
+//!
+//! * **Measured** — real ranks over [`crate::comm::ThreadComm`]; flop and
+//!   traffic counts come from instrumented execution. Practical up to a
+//!   few dozen ranks on one box.
+//! * **Projected** — [`analytic_ledger`] replicates, count for count,
+//!   what the measured path records (the solvers' flop accounting and the
+//!   collectives' traffic accounting), using the dataset's column-nnz
+//!   histogram for per-shard work. This extends the sweep to the paper's
+//!   `P = 4096` regime. `cargo test` cross-validates the two engines at
+//!   every overlapping `P` — the projection is trusted *because* it is
+//!   pinned to measured counts.
+//!
+//! Both engines' ledgers go through the same Hockney projection, so every
+//! scaling figure is a pure function of (counts, machine profile).
+
+use crate::comm::AllreduceAlgo;
+use crate::costmodel::{Ledger, MachineProfile, Phase, Projection};
+use crate::data::Dataset;
+use crate::kernelfn::Kernel;
+
+use super::experiment::{run_distributed, ProblemSpec, SolverSpec};
+
+/// Which engine produced a scaling point.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    Measured,
+    Projected,
+}
+
+/// One (P, s) point of a strong-scaling sweep.
+#[derive(Clone, Debug)]
+pub struct ScalingPoint {
+    pub p: usize,
+    pub s: usize,
+    pub engine: Engine,
+    pub projection: Projection,
+}
+
+impl ScalingPoint {
+    pub fn secs(&self) -> f64 {
+        self.projection.total_secs()
+    }
+}
+
+/// Sweep configuration.
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    pub p_list: Vec<usize>,
+    /// s values tried for the s-step method (powers of two, per paper).
+    pub s_list: Vec<usize>,
+    pub h: usize,
+    pub seed: u64,
+    pub algo: AllreduceAlgo,
+    /// Ranks up to this bound run measured; beyond it, projected.
+    pub measured_limit: usize,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            p_list: vec![1, 2, 4, 8, 16, 32, 64, 128, 256, 512],
+            s_list: vec![2, 4, 8, 16, 32, 64, 128, 256],
+            h: 256,
+            seed: 0x5CA1E,
+            algo: AllreduceAlgo::Rabenseifner,
+            measured_limit: 8,
+        }
+    }
+}
+
+/// Result rows of one dataset × kernel sweep: per P, the classical time
+/// and the best-s s-step time (the quantities the paper's scaling plots
+/// show).
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    pub p: usize,
+    pub engine: Engine,
+    pub classical: Projection,
+    pub best_sstep: Projection,
+    pub best_s: usize,
+    /// All (s → projection) points, for the breakdown-style detail plots.
+    pub sstep_points: Vec<(usize, Projection)>,
+}
+
+impl SweepRow {
+    pub fn speedup(&self) -> f64 {
+        self.classical.total_secs() / self.best_sstep.total_secs()
+    }
+}
+
+/// Run a strong-scaling sweep.
+pub fn sweep(
+    ds: &Dataset,
+    kernel: Kernel,
+    problem: &ProblemSpec,
+    cfg: &SweepConfig,
+    machine: &MachineProfile,
+) -> Vec<SweepRow> {
+    cfg.p_list
+        .iter()
+        .map(|&p| {
+            let engine = if p <= cfg.measured_limit && p.is_power_of_two() {
+                Engine::Measured
+            } else {
+                Engine::Projected
+            };
+            let point = |s: usize| -> Projection {
+                match engine {
+                    Engine::Measured => {
+                        let solver = SolverSpec {
+                            s,
+                            h: cfg.h,
+                            seed: cfg.seed,
+                        };
+                        run_distributed(ds, kernel, problem, &solver, p, cfg.algo, machine)
+                            .projection
+                    }
+                    Engine::Projected => {
+                        let ledger = analytic_ledger(ds, kernel, problem, s, cfg.h, p, cfg.algo);
+                        machine.project(&ledger)
+                    }
+                }
+            };
+            let classical = point(1);
+            let mut best_s = 1;
+            let mut best = classical;
+            let mut sstep_points = Vec::with_capacity(cfg.s_list.len());
+            for &s in &cfg.s_list {
+                if s <= 1 || s > cfg.h {
+                    continue;
+                }
+                let proj = point(s);
+                if proj.total_secs() < best.total_secs() {
+                    best = proj;
+                    best_s = s;
+                }
+                sstep_points.push((s, proj));
+            }
+            SweepRow {
+                p,
+                engine,
+                classical,
+                best_sstep: best,
+                best_s,
+                sstep_points,
+            }
+        })
+        .collect()
+}
+
+/// Replicate the measured ledger analytically: identical flop accounting
+/// to the solvers and identical traffic accounting to the collectives.
+///
+/// `p` must be a power of two (the projected sweep uses powers of two,
+/// matching the paper's process counts).
+pub fn analytic_ledger(
+    ds: &Dataset,
+    kernel: Kernel,
+    problem: &ProblemSpec,
+    s: usize,
+    h: usize,
+    p: usize,
+    algo: AllreduceAlgo,
+) -> Ledger {
+    assert!(p.is_power_of_two(), "projected engine wants power-of-two P");
+    let m = ds.m() as f64;
+    let mu = kernel.mu();
+    let max_nnz = if p == 1 {
+        ds.a.nnz() as f64
+    } else {
+        ds.a.max_shard_nnz(p) as f64
+    };
+    let b = match *problem {
+        ProblemSpec::Svm { .. } => 1usize,
+        ProblemSpec::Krr { b, .. } => b,
+    };
+    let bf = b as f64;
+    let outer = h.div_ceil(s);
+    let s_f = s as f64;
+
+    let mut l = Ledger::new();
+    // --- Kernel compute (gram partial product + redundant nonlinear map,
+    //     plus the y-scaling pass for SVM) --------------------------------
+    let gram_calls = outer as f64;
+    let k_rows = s_f * bf; // sampled rows per call
+    l.kernel_calls = gram_calls;
+    l.kernel_rows = gram_calls * k_rows;
+    l.iters = h as f64;
+    l.add_flops(
+        Phase::KernelCompute,
+        gram_calls * (2.0 * k_rows * max_nnz + mu * k_rows * m),
+    );
+    if matches!(problem, ProblemSpec::Svm { .. }) {
+        // yscale_rows: 2 flops per entry of the k×m block.
+        l.add_flops(Phase::KernelCompute, gram_calls * 2.0 * k_rows * m);
+    }
+
+    // --- Solve / gradient / correction / update / reset ------------------
+    match *problem {
+        ProblemSpec::Svm { .. } => {
+            l.add_flops(Phase::Solve, h as f64 * (2.0 * m + 4.0));
+            if s > 1 {
+                l.add_flops(Phase::GradCorr, outer as f64 * s_f * (s_f - 1.0));
+                l.add_flops(Phase::Update, h as f64);
+                l.add_flops(Phase::MemReset, full_blocks(h, s) as f64 * s_f * m);
+            } else {
+                l.add_flops(Phase::Update, h as f64);
+            }
+        }
+        ProblemSpec::Krr { .. } => {
+            l.add_flops(
+                Phase::Solve,
+                h as f64 * (2.0 * bf * m + bf * bf + bf * bf * bf),
+            );
+            l.add_flops(Phase::Update, h as f64 * bf);
+            if s > 1 {
+                // Σ_j j·2b² per outer = s(s−1)·b².
+                l.add_flops(
+                    Phase::GradCorr,
+                    outer as f64 * s_f * (s_f - 1.0) * bf * bf,
+                );
+                l.add_flops(Phase::MemReset, full_blocks(h, s) as f64 * s_f * bf * m);
+            }
+        }
+    }
+
+    // --- Communication (mirror of comm::collectives accounting) ----------
+    if p > 1 {
+        let log2p = p.trailing_zeros() as u64;
+        let mut add_allreduce = |w: u64| {
+            let (words, rounds) = match algo {
+                AllreduceAlgo::Rabenseifner => {
+                    if (w as usize) < p {
+                        // Small-vector fallback inside rabenseifner
+                        // degenerates to recursive doubling.
+                        (w * log2p, log2p)
+                    } else {
+                        (rabenseifner_max_words(w as usize, p), 2 * log2p)
+                    }
+                }
+                AllreduceAlgo::RecursiveDoubling => (w * log2p, log2p),
+                // Binomial reduce + binomial broadcast: the root sends w
+                // to each of its log₂P children.
+                AllreduceAlgo::Linear => (w * log2p, 2 * log2p),
+            };
+            l.comm.words += words;
+            l.comm.rounds += rounds;
+            l.comm.msgs += rounds.max(1);
+            l.comm.allreduces += 1;
+        };
+        // One row-norm allreduce at oracle construction…
+        add_allreduce(ds.m() as u64);
+        // …then one gram allreduce per outer iteration (w = s·b·m).
+        for _ in 0..outer {
+            add_allreduce((s * b * ds.m()) as u64);
+        }
+    }
+    l
+}
+
+/// Exact max-over-ranks words sent by the rabenseifner allreduce for a
+/// `w`-word vector over power-of-two `p` ranks, replicating the integer
+/// chunk arithmetic of `comm::collectives` (for `w` not divisible by `p`
+/// the naive `2·w·(1−1/p)` is off by rounding; this walks the same
+/// bounds).
+pub fn rabenseifner_max_words(w: usize, p: usize) -> u64 {
+    assert!(p.is_power_of_two());
+    let bounds: Vec<usize> = (0..=p).map(|i| i * w / p).collect();
+    let mut max_words = 0u64;
+    for r in 0..p {
+        // Reduce-scatter (recursive halving): total sent telescopes to
+        // w − own_chunk.
+        let own = bounds[r + 1] - bounds[r];
+        let rs = w - own;
+        // Allgather (recursive doubling): sends the current span each
+        // round, spans doubling from the own chunk.
+        let mut lo = r;
+        let mut hi = r + 1;
+        let mut ag = 0usize;
+        let mut mask = 1usize;
+        while mask < p {
+            ag += bounds[hi] - bounds[lo];
+            if r & mask == 0 {
+                hi += hi - lo;
+            } else {
+                lo -= hi - lo;
+            }
+            mask <<= 1;
+        }
+        max_words = max_words.max((rs + ag) as u64);
+    }
+    max_words
+}
+
+/// Number of outer iterations that process a full block of `s` (the
+/// ragged tail allocates its own buffer and skips the reset).
+fn full_blocks(h: usize, s: usize) -> usize {
+    let outer = h.div_ceil(s);
+    if h % s == 0 {
+        outer
+    } else {
+        outer - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Communicator;
+    use crate::solvers::SvmVariant;
+
+    fn svm_problem() -> ProblemSpec {
+        ProblemSpec::Svm {
+            c: 1.0,
+            variant: SvmVariant::L1,
+        }
+    }
+
+    /// The load-bearing test: the projected engine must agree exactly
+    /// with measured execution wherever both run.
+    #[test]
+    fn analytic_ledger_matches_measured_counts() {
+        let machine = MachineProfile::cray_ex();
+        let ds = crate::data::gen_dense_classification(24, 16, 0.05, 12);
+        let problems = [svm_problem(), ProblemSpec::Krr { lambda: 1.0, b: 3 }];
+        for problem in problems {
+            for algo in [AllreduceAlgo::Rabenseifner, AllreduceAlgo::RecursiveDoubling] {
+                for p in [2usize, 4, 8] {
+                    for s in [1usize, 4, 8] {
+                        let h = 16;
+                        let solver = SolverSpec { s, h, seed: 77 };
+                        let measured = run_distributed(
+                            &ds, Kernel::paper_rbf(), &problem, &solver, p, algo, &machine,
+                        )
+                        .critical;
+                        let analytic = analytic_ledger(
+                            &ds,
+                            Kernel::paper_rbf(),
+                            &problem,
+                            s,
+                            h,
+                            p,
+                            algo,
+                        );
+                        for ph in Phase::ALL {
+                            let a = analytic.flops(ph);
+                            let b = measured.flops(ph);
+                            assert!(
+                                (a - b).abs() <= 1e-6 * b.abs().max(1.0),
+                                "{problem:?} {algo:?} p={p} s={s} phase {}: analytic {a} vs measured {b}",
+                                ph.name()
+                            );
+                        }
+                        assert_eq!(
+                            analytic.comm.words, measured.comm.words,
+                            "{problem:?} {algo:?} p={p} s={s} words"
+                        );
+                        assert_eq!(
+                            analytic.comm.rounds, measured.comm.rounds,
+                            "{problem:?} {algo:?} p={p} s={s} rounds"
+                        );
+                        assert_eq!(analytic.comm.allreduces, measured.comm.allreduces);
+                        assert_eq!(analytic.kernel_calls, measured.kernel_calls);
+                        assert_eq!(analytic.kernel_rows, measured.kernel_rows);
+                        assert_eq!(analytic.iters, measured.iters);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_produces_paper_shape_for_latency_bound_dataset() {
+        // duke-like: tiny m, dense — the 9.8× regime. At large P the
+        // s-step method must win by a lot; the win must grow with P.
+        let ds = crate::data::paper_dataset("duke").unwrap().generate();
+        let cfg = SweepConfig {
+            p_list: vec![4, 64, 512],
+            s_list: vec![8, 32, 128],
+            h: 64,
+            seed: 1,
+            algo: AllreduceAlgo::Rabenseifner,
+            measured_limit: 4,
+        };
+        let machine = MachineProfile::cray_ex();
+        let rows = sweep(&ds, Kernel::paper_rbf(), &svm_problem(), &cfg, &machine);
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].engine, Engine::Measured);
+        assert_eq!(rows[2].engine, Engine::Projected);
+        let sp_small = rows[0].speedup();
+        let sp_large = rows[2].speedup();
+        assert!(
+            sp_large > sp_small,
+            "speedup should grow with P: {sp_small} vs {sp_large}"
+        );
+        assert!(
+            sp_large > 3.0 && sp_large < 64.0,
+            "paper-regime speedup at P=512, got {sp_large}"
+        );
+    }
+
+    #[test]
+    fn krr_speedup_shrinks_with_block_size() {
+        // Table 4's trend: larger b ⇒ more bandwidth-bound ⇒ smaller win.
+        let ds = crate::data::paper_dataset("colon-cancer")
+            .unwrap()
+            .generate_scaled(0.5);
+        let machine = MachineProfile::cray_ex();
+        // P ≤ m/2 so even the b = 1 message (m words) stays above the
+        // small-message collective fallback (which would flip the trend).
+        let cfg = SweepConfig {
+            p_list: vec![16],
+            s_list: vec![4, 16, 64],
+            h: 64,
+            seed: 2,
+            algo: AllreduceAlgo::Rabenseifner,
+            measured_limit: 0, // pure projection, fast
+        };
+        let mut speedups = Vec::new();
+        for b in [1usize, 4, 16] {
+            let rows = sweep(
+                &ds,
+                Kernel::paper_rbf(),
+                &ProblemSpec::Krr { lambda: 1.0, b },
+                &cfg,
+                &machine,
+            );
+            speedups.push(rows[0].speedup());
+        }
+        assert!(
+            speedups[0] > speedups[1] && speedups[1] > speedups[2],
+            "speedup should shrink with b: {speedups:?}"
+        );
+    }
+
+    #[test]
+    fn rabenseifner_word_formula_matches_traffic_exactly() {
+        // Pin the chunk-walking word count to the real collective,
+        // including w not divisible by p (integer-rounding cases).
+        for p in [2usize, 4, 8, 16] {
+            for w in [16usize, 64, 100, 1000, 1001] {
+                if w < p {
+                    continue;
+                }
+                let stats = crate::comm::run_ranks(p, |c| {
+                    let mut buf = vec![1.0; w];
+                    crate::comm::allreduce_sum(c, &mut buf, AllreduceAlgo::Rabenseifner);
+                    c.stats()
+                });
+                let max_words = stats.iter().map(|s| s.words).max().unwrap();
+                let expect = rabenseifner_max_words(w, p);
+                assert_eq!(max_words, expect, "p={p} w={w}");
+                // And the ideal 2w(1−1/p) is within rounding slack.
+                let ideal = 2.0 * w as f64 * (1.0 - 1.0 / p as f64);
+                assert!((expect as f64 - ideal).abs() <= 2.0 * p as f64);
+            }
+        }
+    }
+}

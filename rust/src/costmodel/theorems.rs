@@ -1,0 +1,199 @@
+//! Closed-form leading-order costs of Theorems 1 and 2 (and their `b = 1`
+//! DCD specializations), used to cross-check measured counts and to
+//! reason about the bandwidth–latency–computation trade-off analytically.
+
+/// Problem dimensions for the cost formulas.
+#[derive(Clone, Copy, Debug)]
+pub struct ProblemDims {
+    /// Number of samples (kernel-matrix dimension).
+    pub m: usize,
+    /// Number of features.
+    pub n: usize,
+    /// Matrix density `f ∈ (0, 1]`.
+    pub f: f64,
+    /// Nonlinear kernel-map cost scalar `µ` (flop-equivalents per entry).
+    pub mu: f64,
+    /// Number of processors.
+    pub p: usize,
+    /// Total iterations `H` (inner-iteration equivalents).
+    pub h: usize,
+}
+
+/// Leading-order algorithm costs along the critical path.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AlgoCost {
+    /// Flops (γ multiplier).
+    pub flops: f64,
+    /// Words moved (β multiplier).
+    pub words: f64,
+    /// Messages / latency rounds (φ multiplier).
+    pub msgs: f64,
+    /// Words of memory per processor.
+    pub storage: f64,
+}
+
+impl AlgoCost {
+    /// Hockney time under `(γ, β, φ)`.
+    pub fn time(&self, gamma: f64, beta: f64, phi: f64) -> f64 {
+        gamma * self.flops + beta * self.words + phi * self.msgs
+    }
+}
+
+/// Theorem 1: BDCD for K-RR with block size `b`.
+///
+/// Computation `O(H(bfmn/P + µbm + b³ + bm))`, bandwidth `O(Hbm)`,
+/// latency `O(H log P)`, storage `O(fmn/P + bm)`.
+pub fn bdcd_cost(d: &ProblemDims, b: usize) -> AlgoCost {
+    let (m, n, f, mu, p) = (d.m as f64, d.n as f64, d.f, d.mu, d.p as f64);
+    let h = d.h as f64;
+    let b = b as f64;
+    let per_iter_flops = b * f * m * n / p      // partial kernel block
+        + mu * b * m                            // nonlinear map
+        + b * m                                 // rhs matvecs
+        + b * b * b;                            // b×b solve
+    AlgoCost {
+        flops: h * per_iter_flops,
+        words: h * b * m,
+        msgs: h * (p.log2().ceil().max(1.0)),
+        storage: f * m * n / p + b * m,
+    }
+}
+
+/// Theorem 2: s-step BDCD for K-RR.
+///
+/// Computation `O(H/s (sbfmn/P + µsbm + sb³ + C(s,2)b² + sbm))`, bandwidth
+/// `O(H/s · sbm)` (same total words), latency `O(H/s log P)`, storage
+/// `O(fmn/P + sbm)`.
+pub fn bdcd_sstep_cost(d: &ProblemDims, b: usize, s: usize) -> AlgoCost {
+    let (m, n, f, mu, p) = (d.m as f64, d.n as f64, d.f, d.mu, d.p as f64);
+    let outer = (d.h as f64 / s as f64).ceil();
+    let b = b as f64;
+    let s = s as f64;
+    let per_outer_flops = s * b * f * m * n / p
+        + mu * s * b * m
+        + s * b * m
+        + s * b * b * b
+        + s * (s - 1.0) / 2.0 * b * b; // C(s,2) b² gradient corrections
+    AlgoCost {
+        flops: outer * per_outer_flops,
+        words: outer * s * b * m,
+        msgs: outer * (p.log2().ceil().max(1.0)),
+        storage: f * m * n / p + s * b * m,
+    }
+}
+
+/// DCD for K-SVM = Theorem 1 specialized to `b = 1` (no `b³` solve; the
+/// scalar subproblem is O(1)).
+pub fn dcd_cost(d: &ProblemDims) -> AlgoCost {
+    bdcd_cost(d, 1)
+}
+
+/// s-step DCD for K-SVM = Theorem 2 specialized to `b = 1`.
+pub fn dcd_sstep_cost(d: &ProblemDims, s: usize) -> AlgoCost {
+    bdcd_sstep_cost(d, 1, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ProblemDims {
+        ProblemDims {
+            m: 10_000,
+            n: 100_000,
+            f: 0.01,
+            mu: 30.0,
+            p: 256,
+            h: 1024,
+        }
+    }
+
+    #[test]
+    fn sstep_reduces_latency_by_s() {
+        let d = dims();
+        let base = dcd_cost(&d);
+        for s in [2, 8, 64] {
+            let ss = dcd_sstep_cost(&d, s);
+            assert!(
+                (ss.msgs - base.msgs / s as f64).abs() / base.msgs < 1e-9,
+                "latency should drop by s"
+            );
+        }
+    }
+
+    #[test]
+    fn sstep_preserves_total_bandwidth() {
+        let d = dims();
+        let base = bdcd_cost(&d, 4);
+        let ss = bdcd_sstep_cost(&d, 4, 16);
+        // The paper's key contrast with prior s-step CD: total words are
+        // unchanged (per-message size grows by s instead).
+        assert!((ss.words - base.words).abs() / base.words < 1e-9);
+    }
+
+    #[test]
+    fn sstep_adds_gradient_correction_flops() {
+        let d = dims();
+        let base = bdcd_cost(&d, 2);
+        let ss = bdcd_sstep_cost(&d, 2, 32);
+        assert!(ss.flops > base.flops);
+        // The extra work is the C(s,2) b² term per outer iteration.
+        let outer = (d.h as f64 / 32.0).ceil();
+        let extra = outer * 32.0 * 31.0 / 2.0 * 4.0;
+        assert!((ss.flops - base.flops - extra).abs() / base.flops < 1e-9);
+    }
+
+    #[test]
+    fn sstep_storage_grows_with_s() {
+        let d = dims();
+        let base = bdcd_cost(&d, 1);
+        let ss = bdcd_sstep_cost(&d, 1, 256);
+        assert!(ss.storage > base.storage);
+        assert!((ss.storage - base.storage - 255.0 * d.m as f64).abs() < 1.0);
+    }
+
+    #[test]
+    fn latency_dominated_regime_prefers_sstep() {
+        // duke-like: tiny m, large n — the paper's 9.8× case.
+        let d = ProblemDims {
+            m: 44,
+            n: 7129,
+            f: 1.0,
+            mu: 30.0,
+            p: 512,
+            h: 4096,
+        };
+        let (g, b, ph) = (2.5e-10, 4.0e-9, 5.0e-6);
+        let t_base = dcd_cost(&d).time(g, b, ph);
+        let t_sstep = dcd_sstep_cost(&d, 32).time(g, b, ph);
+        let speedup = t_base / t_sstep;
+        assert!(
+            speedup > 4.0 && speedup < 40.0,
+            "expected paper-like speedup regime, got {speedup}"
+        );
+    }
+
+    #[test]
+    fn bandwidth_dominated_regime_caps_sstep_gain() {
+        // news20-like K-RR with b=4: m is large, so the bm-word messages
+        // are bandwidth-bound and the s-step win collapses (~1.1× in the
+        // paper).
+        let d = ProblemDims {
+            m: 19_996,
+            n: 1_355_191,
+            f: 0.0003,
+            mu: 30.0,
+            p: 2048,
+            h: 1024,
+        };
+        let (g, b, ph) = (2.5e-10, 4.0e-9, 5.0e-6);
+        let t_base = bdcd_cost(&d, 4).time(g, b, ph);
+        let t_sstep = bdcd_sstep_cost(&d, 4, 64).time(g, b, ph);
+        let speedup = t_base / t_sstep;
+        assert!(
+            speedup < 2.0,
+            "bandwidth-bound regime should cap the win, got {speedup}"
+        );
+        assert!(speedup > 0.9, "s-step should not lose badly, got {speedup}");
+    }
+}

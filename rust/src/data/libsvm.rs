@@ -1,0 +1,228 @@
+//! LIBSVM sparse text format: `label index:value index:value ...` with
+//! 1-based, ascending feature indices. This is the format of every dataset
+//! in the paper's Tables 2–3 (all from the LIBSVM repository).
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use super::{Dataset, Task};
+use crate::sparse::Csr;
+
+/// Parse LIBSVM-format text. `n_features = Some(n)` forces the feature
+/// dimension (indices beyond it are an error); `None` infers it from the
+/// max index seen.
+pub fn read_libsvm_str(
+    text: &str,
+    name: &str,
+    task: Task,
+    n_features: Option<usize>,
+) -> Result<Dataset, String> {
+    let mut y = Vec::new();
+    let mut triplets: Vec<(usize, usize, f64)> = Vec::new();
+    let mut max_col = 0usize;
+    let mut row = 0usize;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let label: f64 = parts
+            .next()
+            .ok_or_else(|| format!("line {}: empty", lineno + 1))?
+            .parse()
+            .map_err(|e| format!("line {}: bad label: {e}", lineno + 1))?;
+        y.push(label);
+        let mut prev_idx = 0usize;
+        for tok in parts {
+            let (idx_s, val_s) = tok
+                .split_once(':')
+                .ok_or_else(|| format!("line {}: token '{tok}' missing ':'", lineno + 1))?;
+            let idx: usize = idx_s
+                .parse()
+                .map_err(|e| format!("line {}: bad index '{idx_s}': {e}", lineno + 1))?;
+            let val: f64 = val_s
+                .parse()
+                .map_err(|e| format!("line {}: bad value '{val_s}': {e}", lineno + 1))?;
+            if idx == 0 {
+                return Err(format!("line {}: LIBSVM indices are 1-based", lineno + 1));
+            }
+            if idx <= prev_idx {
+                return Err(format!(
+                    "line {}: indices must be strictly ascending ({idx} after {prev_idx})",
+                    lineno + 1
+                ));
+            }
+            prev_idx = idx;
+            max_col = max_col.max(idx);
+            if val != 0.0 {
+                triplets.push((row, idx - 1, val));
+            }
+        }
+        row += 1;
+    }
+    let n = match n_features {
+        Some(n) => {
+            if max_col > n {
+                return Err(format!("feature index {max_col} exceeds declared n = {n}"));
+            }
+            n
+        }
+        None => max_col,
+    };
+    let a = Csr::from_triplets(row, n, &triplets);
+    let ds = Dataset {
+        name: name.to_string(),
+        a,
+        y,
+        task,
+    };
+    // Classification files use arbitrary label pairs (e.g. 0/1, 1/2);
+    // normalize the two most common encodings to ±1.
+    let ds = if task == Task::Classification {
+        normalize_binary_labels(ds)?
+    } else {
+        ds
+    };
+    ds.validate()?;
+    Ok(ds)
+}
+
+fn normalize_binary_labels(mut ds: Dataset) -> Result<Dataset, String> {
+    let mut classes: Vec<f64> = Vec::new();
+    for &v in &ds.y {
+        if !classes.iter().any(|&c| c == v) {
+            classes.push(v);
+        }
+    }
+    match classes.len() {
+        1 | 2 => {
+            classes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            // Map smaller class to -1, larger to +1 (no-op for ±1 input).
+            let lo = classes[0];
+            for v in &mut ds.y {
+                *v = if *v == lo { -1.0 } else { 1.0 };
+            }
+            Ok(ds)
+        }
+        k => Err(format!("expected binary labels, found {k} classes")),
+    }
+}
+
+/// Read a LIBSVM file from disk.
+pub fn read_libsvm(
+    path: &Path,
+    task: Task,
+    n_features: Option<usize>,
+) -> Result<Dataset, String> {
+    let file = std::fs::File::open(path).map_err(|e| format!("open {path:?}: {e}"))?;
+    let mut text = String::new();
+    let mut reader = std::io::BufReader::new(file);
+    // Read fully; datasets of interest fit in memory by construction.
+    loop {
+        let mut line = String::new();
+        match reader.read_line(&mut line) {
+            Ok(0) => break,
+            Ok(_) => text.push_str(&line),
+            Err(e) => return Err(format!("read {path:?}: {e}")),
+        }
+    }
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "dataset".into());
+    read_libsvm_str(&text, &name, task, n_features)
+}
+
+/// Write a dataset in LIBSVM format (1-based indices, `%.17g`-style
+/// round-trippable floats).
+pub fn write_libsvm(ds: &Dataset, path: &Path) -> Result<(), String> {
+    let file = std::fs::File::create(path).map_err(|e| format!("create {path:?}: {e}"))?;
+    let mut w = BufWriter::new(file);
+    for i in 0..ds.m() {
+        write!(w, "{}", ds.y[i]).map_err(|e| e.to_string())?;
+        for (j, v) in ds.a.row_iter(i) {
+            write!(w, " {}:{}", j + 1, v).map_err(|e| e.to_string())?;
+        }
+        writeln!(w).map_err(|e| e.to_string())?;
+    }
+    w.flush().map_err(|e| e.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let text = "+1 1:0.5 3:2.0\n-1 2:1.0\n";
+        let ds = read_libsvm_str(text, "t", Task::Classification, None).unwrap();
+        assert_eq!(ds.m(), 2);
+        assert_eq!(ds.n(), 3);
+        assert_eq!(ds.y, vec![1.0, -1.0]);
+        let d = ds.a.to_dense();
+        assert_eq!(d[(0, 0)], 0.5);
+        assert_eq!(d[(0, 2)], 2.0);
+        assert_eq!(d[(1, 1)], 1.0);
+    }
+
+    #[test]
+    fn parse_skips_comments_and_blank_lines() {
+        let text = "# header\n\n1 1:1.0  # trailing\n-1 1:2.0\n";
+        let ds = read_libsvm_str(text, "t", Task::Classification, None).unwrap();
+        assert_eq!(ds.m(), 2);
+    }
+
+    #[test]
+    fn parse_normalizes_01_labels() {
+        let text = "0 1:1\n1 1:2\n";
+        let ds = read_libsvm_str(text, "t", Task::Classification, None).unwrap();
+        assert_eq!(ds.y, vec![-1.0, 1.0]);
+    }
+
+    #[test]
+    fn parse_rejects_zero_index() {
+        assert!(read_libsvm_str("1 0:1.0\n", "t", Task::Classification, None).is_err());
+    }
+
+    #[test]
+    fn parse_rejects_descending_indices() {
+        assert!(read_libsvm_str("1 3:1.0 2:1.0\n", "t", Task::Classification, None).is_err());
+    }
+
+    #[test]
+    fn parse_rejects_multiclass() {
+        let text = "1 1:1\n2 1:1\n3 1:1\n";
+        assert!(read_libsvm_str(text, "t", Task::Classification, None).is_err());
+    }
+
+    #[test]
+    fn parse_respects_declared_n() {
+        let ds = read_libsvm_str("1 2:1.0\n-1 1:1.0\n", "t", Task::Classification, Some(10))
+            .unwrap();
+        assert_eq!(ds.n(), 10);
+        assert!(
+            read_libsvm_str("1 11:1.0\n", "t", Task::Classification, Some(10)).is_err()
+        );
+    }
+
+    #[test]
+    fn regression_labels_pass_through() {
+        let ds = read_libsvm_str("3.25 1:1\n-0.5 2:1\n", "t", Task::Regression, None).unwrap();
+        assert_eq!(ds.y, vec![3.25, -0.5]);
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let dir = std::env::temp_dir().join("kcd_test_libsvm");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.libsvm");
+        let text = "1 1:0.5 3:-2.25\n-1 2:1e-3\n";
+        let ds = read_libsvm_str(text, "rt", Task::Classification, None).unwrap();
+        write_libsvm(&ds, &path).unwrap();
+        let back = read_libsvm(&path, Task::Classification, Some(3)).unwrap();
+        assert_eq!(back.y, ds.y);
+        assert_eq!(back.a.to_dense().data(), ds.a.to_dense().data());
+        std::fs::remove_file(&path).ok();
+    }
+}

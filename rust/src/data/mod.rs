@@ -1,0 +1,136 @@
+//! Datasets: LIBSVM-format I/O, synthetic generators, and the registry of
+//! paper benchmark datasets.
+//!
+//! The paper evaluates on LIBSVM-repository datasets (Tables 2–3). This
+//! offline image has none of them, so the registry generates synthetic
+//! stand-ins matched to each dataset's published shape (`m`, `n`), density
+//! and nonzero distribution (see DESIGN.md §substitutions). Real LIBSVM
+//! files are fully supported: `Dataset::read_libsvm` parses the standard
+//! `label idx:val ...` format and any registry entry can be overridden
+//! with a file on disk.
+
+mod libsvm;
+mod registry;
+mod synth;
+
+pub use libsvm::{read_libsvm, read_libsvm_str, write_libsvm};
+pub use registry::{paper_dataset, paper_datasets, DatasetSpec};
+pub use synth::{
+    gen_dense_classification, gen_dense_regression, gen_powerlaw_sparse, gen_uniform_sparse,
+    SynthParams,
+};
+
+use crate::sparse::Csr;
+
+/// Learning task the labels encode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    /// Binary classification, labels in `{-1, +1}`.
+    Classification,
+    /// Regression, real labels.
+    Regression,
+}
+
+/// A dataset: sparse feature matrix (samples × features) plus labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Human-readable name (registry key or file stem).
+    pub name: String,
+    /// `m × n` feature matrix in CSR.
+    pub a: Csr,
+    /// Length-`m` labels.
+    pub y: Vec<f64>,
+    pub task: Task,
+}
+
+impl Dataset {
+    /// Number of samples.
+    pub fn m(&self) -> usize {
+        self.a.nrows()
+    }
+
+    /// Number of features.
+    pub fn n(&self) -> usize {
+        self.a.ncols()
+    }
+
+    /// Validate the invariants tests rely on.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.y.len() != self.a.nrows() {
+            return Err(format!(
+                "labels ({}) != rows ({})",
+                self.y.len(),
+                self.a.nrows()
+            ));
+        }
+        if self.task == Task::Classification
+            && !self.y.iter().all(|&v| v == 1.0 || v == -1.0)
+        {
+            return Err("classification labels must be ±1".into());
+        }
+        if !self.y.iter().all(|v| v.is_finite()) {
+            return Err("non-finite label".into());
+        }
+        Ok(())
+    }
+
+    /// Per-rank column shards in 1D-column layout (the paper's data
+    /// partitioning: each MPI process stores ≈ `n/P` features).
+    pub fn shard_cols(&self, p: usize) -> Vec<Csr> {
+        self.a.partition_cols(p)
+    }
+
+    /// Load-imbalance factor across `p` column shards: max over ranks of
+    /// `nnz_p / (nnz/P)`. 1.0 = perfectly balanced; news20-like datasets
+    /// are far above 1 (Section 5.2.3).
+    pub fn imbalance(&self, p: usize) -> f64 {
+        let shards = self.shard_cols(p);
+        let total: usize = shards.iter().map(|s| s.nnz()).sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let avg = total as f64 / p as f64;
+        shards
+            .iter()
+            .map(|s| s.nnz() as f64 / avg)
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_catches_bad_labels() {
+        let a = Csr::from_triplets(2, 2, &[(0, 0, 1.0), (1, 1, 1.0)]);
+        let ok = Dataset {
+            name: "t".into(),
+            a: a.clone(),
+            y: vec![1.0, -1.0],
+            task: Task::Classification,
+        };
+        assert!(ok.validate().is_ok());
+        let bad = Dataset {
+            name: "t".into(),
+            a,
+            y: vec![1.0, 2.0],
+            task: Task::Classification,
+        };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn imbalance_unit_for_uniform() {
+        let trips: Vec<(usize, usize, f64)> = (0..8)
+            .flat_map(|i| (0..8).map(move |j| (i, j, 1.0)))
+            .collect();
+        let d = Dataset {
+            name: "dense".into(),
+            a: Csr::from_triplets(8, 8, &trips),
+            y: vec![1.0; 8],
+            task: Task::Classification,
+        };
+        assert!((d.imbalance(4) - 1.0).abs() < 1e-12);
+    }
+}

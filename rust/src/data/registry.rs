@@ -1,0 +1,241 @@
+//! Registry of the paper's benchmark datasets (Tables 2 and 3), each
+//! backed by a synthetic stand-in with the published shape and sparsity.
+//!
+//! Scale notes: the registry generates at the *published* sizes by
+//! default, which for news20.binary means ~9.1M nonzeros — generation
+//! takes a couple of seconds. Benches that only need the communication/
+//! computation *shape* may use `DatasetSpec::scaled(f)` to shrink `m`
+//! and `n` proportionally (density preserved), and report the scaling
+//! factor alongside results.
+
+use super::synth::{
+    gen_dense_classification, gen_dense_regression, gen_powerlaw_sparse, gen_uniform_sparse,
+    SynthParams,
+};
+use super::{Dataset, Task};
+
+/// How the synthetic stand-in is generated.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum GenKind {
+    Dense,
+    UniformSparse { density: f64 },
+    PowerlawSparse { density: f64, alpha: f64 },
+}
+
+/// A named dataset specification from the paper.
+#[derive(Clone, Debug)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    pub m: usize,
+    pub n: usize,
+    pub task: Task,
+    pub kind: GenKind,
+    /// Which paper table the dataset appears in (2 = convergence,
+    /// 3 = performance).
+    pub table: u8,
+}
+
+impl DatasetSpec {
+    /// Materialize the dataset (deterministic per name).
+    pub fn generate(&self) -> Dataset {
+        self.generate_scaled(1.0)
+    }
+
+    /// Materialize at `scale ∈ (0, 1]` of the published size (density and
+    /// distribution preserved; name suffixed so reports stay honest).
+    pub fn generate_scaled(&self, scale: f64) -> Dataset {
+        assert!(scale > 0.0 && scale <= 1.0);
+        let m = ((self.m as f64 * scale).round() as usize).max(4);
+        let n = ((self.n as f64 * scale).round() as usize).max(4);
+        let seed = fnv(self.name);
+        let mut ds = match self.kind {
+            GenKind::Dense => match self.task {
+                Task::Classification => gen_dense_classification(m, n, 0.05, seed),
+                Task::Regression => gen_dense_regression(m, n, 0.1, seed),
+            },
+            GenKind::UniformSparse { density } => gen_uniform_sparse(
+                SynthParams {
+                    m,
+                    n,
+                    density,
+                    seed,
+                },
+                self.task,
+            ),
+            GenKind::PowerlawSparse { density, alpha } => gen_powerlaw_sparse(
+                SynthParams {
+                    m,
+                    n,
+                    density,
+                    seed,
+                },
+                alpha,
+                self.task,
+            ),
+        };
+        ds.name = if scale == 1.0 {
+            self.name.to_string()
+        } else {
+            format!("{}@{scale}", self.name)
+        };
+        ds
+    }
+}
+
+fn fnv(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// All paper datasets (Tables 2 and 3).
+///
+/// | name        | m      | n         | role |
+/// |-------------|--------|-----------|------|
+/// | duke        | 44     | 7129      | convergence (K-SVM) + perf |
+/// | diabetes    | 768    | 8         | convergence (K-SVM) |
+/// | abalone     | 4177   | 8         | convergence (K-RR)  |
+/// | bodyfat     | 252    | 14        | convergence (K-RR)  |
+/// | colon-cancer| 62     | 2000      | perf (dense)        |
+/// | synthetic   | 2000   | 800000    | perf (1% dense, balanced) |
+/// | news20      | 19996  | 1355191   | perf (0.03% dense, imbalanced) |
+pub fn paper_datasets() -> Vec<DatasetSpec> {
+    vec![
+        DatasetSpec {
+            name: "duke",
+            m: 44,
+            n: 7129,
+            task: Task::Classification,
+            kind: GenKind::Dense,
+            table: 2,
+        },
+        DatasetSpec {
+            name: "diabetes",
+            m: 768,
+            n: 8,
+            task: Task::Classification,
+            kind: GenKind::Dense,
+            table: 2,
+        },
+        DatasetSpec {
+            name: "abalone",
+            m: 4177,
+            n: 8,
+            task: Task::Regression,
+            kind: GenKind::Dense,
+            table: 2,
+        },
+        DatasetSpec {
+            name: "bodyfat",
+            m: 252,
+            n: 14,
+            task: Task::Regression,
+            kind: GenKind::Dense,
+            table: 2,
+        },
+        DatasetSpec {
+            name: "colon-cancer",
+            m: 62,
+            n: 2000,
+            task: Task::Classification,
+            kind: GenKind::Dense,
+            table: 3,
+        },
+        DatasetSpec {
+            name: "synthetic",
+            m: 2000,
+            n: 800_000,
+            task: Task::Classification,
+            kind: GenKind::UniformSparse { density: 0.01 },
+            table: 3,
+        },
+        DatasetSpec {
+            name: "news20",
+            m: 19_996,
+            n: 1_355_191,
+            task: Task::Classification,
+            kind: GenKind::PowerlawSparse {
+                density: 0.000335, // 9.1M nnz / (19996 × 1355191)
+                alpha: 1.05,
+            },
+            table: 3,
+        },
+    ]
+}
+
+/// Look up a paper dataset by name.
+pub fn paper_dataset(name: &str) -> Option<DatasetSpec> {
+    paper_datasets().into_iter().find(|d| d.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_all_paper_datasets() {
+        let names: Vec<_> = paper_datasets().iter().map(|d| d.name).collect();
+        for want in [
+            "duke",
+            "diabetes",
+            "abalone",
+            "bodyfat",
+            "colon-cancer",
+            "synthetic",
+            "news20",
+        ] {
+            assert!(names.contains(&want), "missing {want}");
+        }
+    }
+
+    #[test]
+    fn table2_shapes_match_paper() {
+        let duke = paper_dataset("duke").unwrap();
+        assert_eq!((duke.m, duke.n), (44, 7129));
+        let diabetes = paper_dataset("diabetes").unwrap();
+        assert_eq!((diabetes.m, diabetes.n), (768, 8));
+        let abalone = paper_dataset("abalone").unwrap();
+        assert_eq!((abalone.m, abalone.n), (4177, 8));
+        assert_eq!(abalone.task, Task::Regression);
+        let bodyfat = paper_dataset("bodyfat").unwrap();
+        assert_eq!((bodyfat.m, bodyfat.n), (252, 14));
+    }
+
+    #[test]
+    fn small_datasets_generate_at_full_size() {
+        for name in ["duke", "diabetes", "bodyfat", "colon-cancer"] {
+            let spec = paper_dataset(name).unwrap();
+            let ds = spec.generate();
+            ds.validate().unwrap();
+            assert_eq!(ds.m(), spec.m, "{name}");
+            assert_eq!(ds.n(), spec.n, "{name}");
+        }
+    }
+
+    #[test]
+    fn scaled_generation_shrinks_proportionally() {
+        let spec = paper_dataset("synthetic").unwrap();
+        let ds = spec.generate_scaled(0.01);
+        ds.validate().unwrap();
+        assert_eq!(ds.m(), 20);
+        assert_eq!(ds.n(), 8000);
+        // Density preserved within tolerance.
+        assert!((ds.a.density() - 0.01).abs() < 0.005, "{}", ds.a.density());
+        assert!(ds.name.contains('@'));
+    }
+
+    #[test]
+    fn news20_standin_is_imbalanced_synthetic_is_not() {
+        let news = paper_dataset("news20").unwrap().generate_scaled(0.02);
+        let synth = paper_dataset("synthetic").unwrap().generate_scaled(0.02);
+        assert!(
+            news.imbalance(8) > synth.imbalance(8),
+            "news20 {} vs synthetic {}",
+            news.imbalance(8),
+            synth.imbalance(8)
+        );
+    }
+}

@@ -1,0 +1,255 @@
+//! Synthetic dataset generators.
+//!
+//! Three families, matching the three data regimes in the paper's
+//! evaluation:
+//!
+//! * dense (duke/colon-like microarray data: tiny `m`, large `n`),
+//! * uniformly sparse (the paper's own "synthetic" dataset: perfectly
+//!   load-balanced nonzeros),
+//! * power-law sparse (news20.binary-like: highly non-uniform column
+//!   occupancy, which produces the load imbalance studied in §5.2.3).
+//!
+//! Classification sets are generated from a planted hyperplane (or a
+//! planted nonlinear score for kernel cases) with controllable label
+//! noise so accuracy is a meaningful end-to-end signal; regression sets
+//! use a planted linear model plus Gaussian noise.
+
+use super::{Dataset, Task};
+use crate::rng::Pcg;
+use crate::sparse::Csr;
+
+/// Parameters shared by the sparse generators.
+#[derive(Clone, Copy, Debug)]
+pub struct SynthParams {
+    pub m: usize,
+    pub n: usize,
+    /// Target fraction of nonzeros.
+    pub density: f64,
+    pub seed: u64,
+}
+
+/// Dense binary classification from a planted unit-normal hyperplane with
+/// margin `label_noise` flip probability.
+pub fn gen_dense_classification(m: usize, n: usize, label_noise: f64, seed: u64) -> Dataset {
+    let mut rng = Pcg::new(seed, 101);
+    let w: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+    let wn = crate::dense::nrm2(&w);
+    let mut trips = Vec::with_capacity(m * n);
+    let mut y = Vec::with_capacity(m);
+    for i in 0..m {
+        let mut score = 0.0;
+        for j in 0..n {
+            let v = rng.next_gaussian();
+            score += v * w[j];
+            trips.push((i, j, v));
+        }
+        let mut label = if score / wn >= 0.0 { 1.0 } else { -1.0 };
+        if rng.next_f64() < label_noise {
+            label = -label;
+        }
+        y.push(label);
+    }
+    Dataset {
+        name: format!("dense-cls-{m}x{n}"),
+        a: Csr::from_triplets(m, n, &trips),
+        y,
+        task: Task::Classification,
+    }
+}
+
+/// Dense regression: `y = A x* + ε`, `ε ~ N(0, noise²)`.
+pub fn gen_dense_regression(m: usize, n: usize, noise: f64, seed: u64) -> Dataset {
+    let mut rng = Pcg::new(seed, 202);
+    let xstar: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+    let mut trips = Vec::with_capacity(m * n);
+    let mut y = Vec::with_capacity(m);
+    for i in 0..m {
+        let mut yi = 0.0;
+        for (j, xs) in xstar.iter().enumerate() {
+            let v = rng.next_gaussian();
+            yi += v * xs;
+            trips.push((i, j, v));
+        }
+        y.push(yi + noise * rng.next_gaussian());
+    }
+    Dataset {
+        name: format!("dense-reg-{m}x{n}"),
+        a: Csr::from_triplets(m, n, &trips),
+        y,
+        task: Task::Regression,
+    }
+}
+
+/// Uniformly sparse dataset: every row gets exactly `round(density·n)`
+/// nonzeros at uniform column positions — the perfectly load-balanced
+/// regime of the paper's "synthetic" dataset (Table 3: 2000×800000, 99%
+/// sparse ⇒ 8000 nnz/row).
+pub fn gen_uniform_sparse(p: SynthParams, task: Task) -> Dataset {
+    let mut rng = Pcg::new(p.seed, 303);
+    let nnz_per_row = ((p.density * p.n as f64).round() as usize).clamp(1, p.n);
+    let mut trips = Vec::with_capacity(p.m * nnz_per_row);
+    for i in 0..p.m {
+        let cols = rng.sample_without_replacement(p.n, nnz_per_row);
+        for j in cols {
+            trips.push((i, j, rng.next_gaussian()));
+        }
+    }
+    let a = Csr::from_triplets(p.m, p.n, &trips);
+    let y = plant_labels(&a, task, &mut rng);
+    Dataset {
+        name: format!("uniform-sparse-{}x{}", p.m, p.n),
+        a,
+        y,
+        task,
+    }
+}
+
+/// Power-law sparse dataset (news20-like): column popularity follows a
+/// Zipf distribution, so a few "hot" feature columns hold most nonzeros
+/// and 1D-column shards are badly imbalanced — reproducing the §5.2.3
+/// load-imbalance regime. Row occupancy also varies (documents differ in
+/// length).
+pub fn gen_powerlaw_sparse(p: SynthParams, zipf_alpha: f64, task: Task) -> Dataset {
+    let mut rng = Pcg::new(p.seed, 404);
+    let target_nnz = (p.density * p.m as f64 * p.n as f64).round() as usize;
+    // Zipf column weights; cumulative table for sampling.
+    let mut cum = Vec::with_capacity(p.n);
+    let mut acc = 0.0;
+    for j in 0..p.n {
+        acc += 1.0 / ((j + 1) as f64).powf(zipf_alpha);
+        cum.push(acc);
+    }
+    let total = acc;
+    // Row lengths ~ geometric-ish around the mean.
+    let mean_row = (target_nnz as f64 / p.m as f64).max(1.0);
+    let mut trips = Vec::with_capacity(target_nnz + p.m);
+    for i in 0..p.m {
+        let len = ((mean_row * (0.25 + 1.5 * rng.next_f64())).round() as usize).max(1);
+        let mut seen = std::collections::HashSet::with_capacity(len * 2);
+        for _ in 0..len {
+            let u = rng.next_f64() * total;
+            let j = cum.partition_point(|&c| c < u).min(p.n - 1);
+            if seen.insert(j) {
+                // tf-idf-ish positive weights.
+                trips.push((i, j, 0.1 + rng.next_f64()));
+            }
+        }
+    }
+    let a = Csr::from_triplets(p.m, p.n, &trips);
+    let y = plant_labels(&a, task, &mut rng);
+    Dataset {
+        name: format!("powerlaw-sparse-{}x{}", p.m, p.n),
+        a,
+        y,
+        task,
+    }
+}
+
+/// Plant labels from a sparse random hyperplane (classification) or a
+/// sparse linear model + noise (regression).
+fn plant_labels(a: &Csr, task: Task, rng: &mut Pcg) -> Vec<f64> {
+    let n = a.ncols();
+    // Sparse weight vector over the (hot) first columns to keep scores
+    // non-degenerate for power-law data.
+    let k = n.min(2048);
+    let mut w = vec![0.0; n];
+    for wj in w.iter_mut().take(k) {
+        *wj = rng.next_gaussian();
+    }
+    let mut score = vec![0.0; a.nrows()];
+    a.spmv(&w, &mut score);
+    match task {
+        Task::Classification => score
+            .iter()
+            .map(|&s| {
+                let mut l = if s >= 0.0 { 1.0 } else { -1.0 };
+                if rng.next_f64() < 0.05 {
+                    l = -l;
+                }
+                l
+            })
+            .collect(),
+        Task::Regression => {
+            let scale = crate::util::stddev(&score).max(1e-12);
+            score
+                .iter()
+                .map(|&s| s / scale + 0.1 * rng.next_gaussian())
+                .collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_classification_shapes_and_balance() {
+        let ds = gen_dense_classification(200, 16, 0.05, 7);
+        ds.validate().unwrap();
+        assert_eq!(ds.m(), 200);
+        assert_eq!(ds.n(), 16);
+        assert!((ds.a.density() - 1.0).abs() < 1e-6);
+        let pos = ds.y.iter().filter(|&&v| v == 1.0).count();
+        assert!(pos > 40 && pos < 160, "classes should be roughly balanced");
+    }
+
+    #[test]
+    fn dense_regression_snr() {
+        let ds = gen_dense_regression(300, 10, 0.01, 11);
+        ds.validate().unwrap();
+        // Labels should correlate strongly with the planted model; a crude
+        // proxy: label variance >> noise variance.
+        let var = crate::util::stddev(&ds.y).powi(2);
+        assert!(var > 1.0, "labels carry signal, var={var}");
+    }
+
+    #[test]
+    fn uniform_sparse_density_and_balance() {
+        let ds = gen_uniform_sparse(
+            SynthParams {
+                m: 100,
+                n: 1000,
+                density: 0.01,
+                seed: 3,
+            },
+            Task::Classification,
+        );
+        ds.validate().unwrap();
+        assert!((ds.a.density() - 0.01).abs() < 0.002);
+        // Every row has the same nnz → near-perfect balance.
+        assert!(ds.imbalance(4) < 1.15, "imbalance {}", ds.imbalance(4));
+    }
+
+    #[test]
+    fn powerlaw_is_imbalanced() {
+        let ds = gen_powerlaw_sparse(
+            SynthParams {
+                m: 500,
+                n: 5000,
+                density: 0.003,
+                seed: 5,
+            },
+            1.1,
+            Task::Classification,
+        );
+        ds.validate().unwrap();
+        // The hot columns concentrate in the first shard — imbalance must
+        // be well above the uniform case.
+        assert!(
+            ds.imbalance(8) > 1.5,
+            "powerlaw imbalance should be significant, got {}",
+            ds.imbalance(8)
+        );
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let a = gen_dense_classification(20, 5, 0.0, 42);
+        let b = gen_dense_classification(20, 5, 0.0, 42);
+        assert_eq!(a.y, b.y);
+        assert_eq!(a.a, b.a);
+        let c = gen_dense_classification(20, 5, 0.0, 43);
+        assert_ne!(a.a, c.a);
+    }
+}

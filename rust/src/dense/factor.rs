@@ -1,0 +1,248 @@
+//! Small dense factorizations: Cholesky and LU with partial pivoting.
+//!
+//! These back the `b×b` subproblem solves in BDCD (`G Δα = rhs`, where
+//! `G = (1/λ) VᵀU + mI` is symmetric positive definite) and the `m×m`
+//! closed-form K-RR solve used as the convergence reference.
+
+use super::Mat;
+
+/// Cholesky factorization `A = L Lᵀ` of a symmetric positive-definite
+/// matrix (lower triangle stored).
+pub struct Cholesky {
+    l: Mat,
+}
+
+impl Cholesky {
+    /// Factor `a` (reads the lower triangle). Returns `None` if a
+    /// non-positive pivot is encountered (not SPD, up to roundoff).
+    pub fn new(a: &Mat) -> Option<Cholesky> {
+        let n = a.nrows();
+        assert_eq!(n, a.ncols(), "Cholesky: square required");
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                // Split-borrow the two rows we need.
+                let s = {
+                    let (ri, rj) = (l.row(i), l.row(j));
+                    super::dot(&ri[..j], &rj[..j])
+                };
+                if i == j {
+                    let d = a[(i, i)] - s;
+                    if d <= 0.0 {
+                        return None;
+                    }
+                    l[(i, j)] = d.sqrt();
+                } else {
+                    l[(i, j)] = (a[(i, j)] - s) / l[(j, j)];
+                }
+            }
+        }
+        Some(Cholesky { l })
+    }
+
+    /// Solve `A x = b` in place.
+    pub fn solve_in_place(&self, b: &mut [f64]) {
+        let n = self.l.nrows();
+        assert_eq!(b.len(), n);
+        // Forward: L z = b
+        for i in 0..n {
+            let s = super::dot(&self.l.row(i)[..i], &b[..i]);
+            b[i] = (b[i] - s) / self.l[(i, i)];
+        }
+        // Backward: Lᵀ x = z
+        for i in (0..n).rev() {
+            let mut s = 0.0;
+            for k in i + 1..n {
+                s += self.l[(k, i)] * b[k];
+            }
+            b[i] = (b[i] - s) / self.l[(i, i)];
+        }
+    }
+
+    /// Solve returning a fresh vector.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let mut x = b.to_vec();
+        self.solve_in_place(&mut x);
+        x
+    }
+}
+
+/// LU factorization with partial pivoting, `P A = L U`.
+pub struct Lu {
+    lu: Mat,
+    piv: Vec<usize>,
+}
+
+impl Lu {
+    /// Factor `a`. Returns `None` on exact singularity.
+    pub fn new(a: &Mat) -> Option<Lu> {
+        let n = a.nrows();
+        assert_eq!(n, a.ncols(), "LU: square required");
+        let mut lu = a.clone();
+        let mut piv: Vec<usize> = (0..n).collect();
+        for k in 0..n {
+            // Pivot search.
+            let mut p = k;
+            let mut pmax = lu[(k, k)].abs();
+            for i in k + 1..n {
+                let v = lu[(i, k)].abs();
+                if v > pmax {
+                    pmax = v;
+                    p = i;
+                }
+            }
+            if pmax == 0.0 {
+                return None;
+            }
+            if p != k {
+                piv.swap(p, k);
+                // Swap the full rows.
+                for j in 0..n {
+                    let t = lu[(k, j)];
+                    lu[(k, j)] = lu[(p, j)];
+                    lu[(p, j)] = t;
+                }
+            }
+            let pivot = lu[(k, k)];
+            for i in k + 1..n {
+                let m = lu[(i, k)] / pivot;
+                lu[(i, k)] = m;
+                if m != 0.0 {
+                    // Row update: row_i -= m * row_k (tail only).
+                    for j in k + 1..n {
+                        let v = lu[(k, j)];
+                        lu[(i, j)] -= m * v;
+                    }
+                }
+            }
+        }
+        Some(Lu { lu, piv })
+    }
+
+    /// Solve `A x = b`.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.lu.nrows();
+        assert_eq!(b.len(), n);
+        // Apply permutation.
+        let mut x: Vec<f64> = self.piv.iter().map(|&p| b[p]).collect();
+        // Forward: L z = Pb (unit diagonal).
+        for i in 0..n {
+            let s = super::dot(&self.lu.row(i)[..i], &x[..i]);
+            x[i] -= s;
+        }
+        // Backward: U x = z.
+        for i in (0..n).rev() {
+            let mut s = 0.0;
+            for k in i + 1..n {
+                s += self.lu[(i, k)] * x[k];
+            }
+            x[i] = (x[i] - s) / self.lu[(i, i)];
+        }
+        x
+    }
+}
+
+/// One-shot SPD solve via Cholesky, falling back to LU if the matrix is
+/// not numerically SPD (can happen with aggressive kernel parameters).
+pub fn cholesky_solve(a: &Mat, b: &[f64]) -> Vec<f64> {
+    match Cholesky::new(a) {
+        Some(ch) => ch.solve(b),
+        None => lu_solve(a, b),
+    }
+}
+
+/// One-shot general solve via partially-pivoted LU. Panics on singular
+/// input (the solvers only pass regularized, nonsingular systems).
+pub fn lu_solve(a: &Mat, b: &[f64]) -> Vec<f64> {
+    Lu::new(a).expect("lu_solve: singular matrix").solve(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dense::{gemm_nt, gemv};
+    use crate::rng::Pcg;
+
+    /// Random SPD matrix `B Bᵀ + n·I`.
+    fn rand_spd(r: &mut Pcg, n: usize) -> Mat {
+        let mut b = Mat::zeros(n, n);
+        for v in b.data_mut() {
+            *v = r.next_gaussian();
+        }
+        let mut a = Mat::zeros(n, n);
+        gemm_nt(&b, &b, &mut a);
+        for i in 0..n {
+            a[(i, i)] += n as f64;
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_recovers_solution() {
+        let mut r = Pcg::seeded(31);
+        for _ in 0..20 {
+            let n = r.gen_range(1, 40);
+            let a = rand_spd(&mut r, n);
+            let xstar: Vec<f64> = (0..n).map(|_| r.next_gaussian()).collect();
+            let mut b = vec![0.0; n];
+            gemv(&a, &xstar, &mut b);
+            let x = Cholesky::new(&a).expect("SPD").solve(&b);
+            for (xi, xs) in x.iter().zip(&xstar) {
+                assert!((xi - xs).abs() < 1e-8, "{xi} vs {xs}");
+            }
+        }
+    }
+
+    #[test]
+    fn lu_recovers_solution_nonsymmetric() {
+        let mut r = Pcg::seeded(37);
+        for _ in 0..20 {
+            let n = r.gen_range(1, 40);
+            let mut a = Mat::zeros(n, n);
+            for v in a.data_mut() {
+                *v = r.next_gaussian();
+            }
+            // Diagonal dominance to keep conditioning sane.
+            for i in 0..n {
+                a[(i, i)] += n as f64;
+            }
+            let xstar: Vec<f64> = (0..n).map(|_| r.next_gaussian()).collect();
+            let mut b = vec![0.0; n];
+            gemv(&a, &xstar, &mut b);
+            let x = Lu::new(&a).expect("nonsingular").solve(&b);
+            for (xi, xs) in x.iter().zip(&xstar) {
+                assert!((xi - xs).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(Cholesky::new(&a).is_none());
+    }
+
+    #[test]
+    fn lu_rejects_singular() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 4.0]);
+        assert!(Lu::new(&a).is_none());
+    }
+
+    #[test]
+    fn pivoting_handles_zero_leading_entry() {
+        let a = Mat::from_vec(2, 2, vec![0.0, 1.0, 1.0, 0.0]);
+        let x = Lu::new(&a).unwrap().solve(&[2.0, 3.0]);
+        assert!((x[0] - 3.0).abs() < 1e-14);
+        assert!((x[1] - 2.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn cholesky_solve_falls_back_to_lu() {
+        // Symmetric but indefinite: cholesky_solve must still solve it.
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]);
+        let x = cholesky_solve(&a, &[3.0, 3.0]);
+        // A x = b -> x = [1, 1]
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,225 @@
+//! Kernel functions (Table 1 of the paper) applied to gram blocks.
+//!
+//! All three kernels are computed from the *linear* gram product
+//! `Z[r][i] = <a_sample_r, a_i>`: the polynomial map is pointwise
+//! `(c + z)^d`, and the RBF map expands
+//! `‖a_r − a_i‖² = ‖a_r‖² + ‖a_i‖² − 2 z` using cached row norms — the
+//! same dot-product expansion the paper uses so the kernel reduces to a
+//! (sparse) GEMM plus a pointwise epilogue. That structure is what makes
+//! the distributed algorithm work: the GEMM part is linear in the column
+//! shards (allreduce-able), the nonlinearity is applied redundantly after
+//! the reduction.
+
+use crate::dense::Mat;
+
+/// Kernel choice and parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Kernel {
+    /// `K(a, b) = aᵀb`
+    Linear,
+    /// `K(a, b) = (c + aᵀb)^d`, `c ≥ 0`, `d ≥ 2`
+    Poly { c: f64, d: i32 },
+    /// `K(a, b) = exp(−σ‖a−b‖²)`, `σ > 0`
+    Rbf { sigma: f64 },
+}
+
+impl Kernel {
+    /// The paper's convergence-experiment settings: poly `d=3, c=0`,
+    /// rbf `σ=1`.
+    pub fn paper_poly() -> Kernel {
+        Kernel::Poly { c: 0.0, d: 3 }
+    }
+
+    pub fn paper_rbf() -> Kernel {
+        Kernel::Rbf { sigma: 1.0 }
+    }
+
+    /// Short identifier used in configs, artifact names and reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kernel::Linear => "linear",
+            Kernel::Poly { .. } => "poly",
+            Kernel::Rbf { .. } => "rbf",
+        }
+    }
+
+    /// Parse from config syntax: `linear`, `poly:c=0,d=3`, `rbf:sigma=1`.
+    pub fn parse(s: &str) -> Option<Kernel> {
+        let (head, rest) = match s.split_once(':') {
+            Some((h, r)) => (h, Some(r)),
+            None => (s, None),
+        };
+        match head {
+            "linear" => Some(Kernel::Linear),
+            "poly" | "polynomial" => {
+                let mut c = 0.0;
+                let mut d = 3;
+                if let Some(r) = rest {
+                    for kv in r.split(',') {
+                        let (k, v) = kv.split_once('=')?;
+                        match k.trim() {
+                            "c" => c = v.trim().parse().ok()?,
+                            "d" => d = v.trim().parse().ok()?,
+                            _ => return None,
+                        }
+                    }
+                }
+                Some(Kernel::Poly { c, d })
+            }
+            "rbf" | "gauss" | "gaussian" => {
+                let mut sigma = 1.0;
+                if let Some(r) = rest {
+                    for kv in r.split(',') {
+                        let (k, v) = kv.split_once('=')?;
+                        match k.trim() {
+                            "sigma" => sigma = v.trim().parse().ok()?,
+                            _ => return None,
+                        }
+                    }
+                }
+                Some(Kernel::Rbf { sigma })
+            }
+            _ => None,
+        }
+    }
+
+    /// Scalar kernel value from a precomputed inner product and squared
+    /// norms (the pointwise epilogue).
+    #[inline]
+    pub fn apply_scalar(&self, dot: f64, norm_a: f64, norm_b: f64) -> f64 {
+        match *self {
+            Kernel::Linear => dot,
+            Kernel::Poly { c, d } => (c + dot).powi(d),
+            Kernel::Rbf { sigma } => (-sigma * (norm_a + norm_b - 2.0 * dot).max(0.0)).exp(),
+        }
+    }
+
+    /// Apply the kernel map in place to a gram block `Z (k×m)` whose entry
+    /// `(r, i)` holds `<a_{S_r}, a_i>`; `sample_norms[r] = ‖a_{S_r}‖²`,
+    /// `row_norms[i] = ‖a_i‖²` (only read for RBF).
+    pub fn apply_block(&self, z: &mut Mat, sample_norms: &[f64], row_norms: &[f64]) {
+        match *self {
+            Kernel::Linear => {}
+            Kernel::Poly { c, d } => {
+                for v in z.data_mut() {
+                    *v = (c + *v).powi(d);
+                }
+            }
+            Kernel::Rbf { sigma } => {
+                assert_eq!(sample_norms.len(), z.nrows());
+                assert_eq!(row_norms.len(), z.ncols());
+                for r in 0..z.nrows() {
+                    let nr = sample_norms[r];
+                    let row = z.row_mut(r);
+                    for (i, v) in row.iter_mut().enumerate() {
+                        let d2 = (nr + row_norms[i] - 2.0 * *v).max(0.0);
+                        *v = (-sigma * d2).exp();
+                    }
+                }
+            }
+        }
+    }
+
+    /// Relative cost `µ` of the nonlinear epilogue per entry, in units of
+    /// one fused multiply-add — the paper's Section 4 cost-model scalar.
+    /// Calibrated values: `exp`/`pow` are tens of flops-equivalents on the
+    /// paper's EPYC target.
+    pub fn mu(&self) -> f64 {
+        match self {
+            Kernel::Linear => 0.0,
+            Kernel::Poly { .. } => 12.0,
+            Kernel::Rbf { .. } => 30.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dense::{gemm_nt, Mat};
+    use crate::rng::Pcg;
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(Kernel::parse("linear"), Some(Kernel::Linear));
+        assert_eq!(
+            Kernel::parse("poly:c=1.5,d=2"),
+            Some(Kernel::Poly { c: 1.5, d: 2 })
+        );
+        assert_eq!(
+            Kernel::parse("rbf:sigma=0.5"),
+            Some(Kernel::Rbf { sigma: 0.5 })
+        );
+        assert_eq!(Kernel::parse("rbf"), Some(Kernel::Rbf { sigma: 1.0 }));
+        assert_eq!(Kernel::parse("bogus"), None);
+        assert_eq!(Kernel::parse("poly:q=1"), None);
+    }
+
+    /// Direct (definition-based) kernel evaluation for the oracle.
+    fn kernel_direct(k: &Kernel, a: &[f64], b: &[f64]) -> f64 {
+        let dot: f64 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+        match *k {
+            Kernel::Linear => dot,
+            Kernel::Poly { c, d } => (c + dot).powi(d),
+            Kernel::Rbf { sigma } => {
+                let d2: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+                (-sigma * d2).exp()
+            }
+        }
+    }
+
+    #[test]
+    fn apply_block_matches_direct_definition() {
+        let mut r = Pcg::seeded(73);
+        let kernels = [
+            Kernel::Linear,
+            Kernel::Poly { c: 0.0, d: 3 },
+            Kernel::Poly { c: 1.0, d: 2 },
+            Kernel::Rbf { sigma: 1.0 },
+            Kernel::Rbf { sigma: 0.1 },
+        ];
+        for kern in kernels {
+            let m = 12;
+            let n = 6;
+            let a = Mat::from_fn(m, n, |_, _| r.next_gaussian());
+            let sample = vec![3usize, 7, 1];
+            let a_sample = a.gather_rows(&sample);
+            let mut z = Mat::zeros(sample.len(), m);
+            gemm_nt(&a_sample, &a, &mut z);
+            let rn = a.row_norms_sq();
+            let sn: Vec<f64> = sample.iter().map(|&i| rn[i]).collect();
+            kern.apply_block(&mut z, &sn, &rn);
+            for (rr, &sr) in sample.iter().enumerate() {
+                for i in 0..m {
+                    let expect = kernel_direct(&kern, a.row(sr), a.row(i));
+                    assert!(
+                        (z[(rr, i)] - expect).abs() < 1e-10,
+                        "{kern:?} ({rr},{i}): {} vs {expect}",
+                        z[(rr, i)]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rbf_diagonal_is_one() {
+        let mut r = Pcg::seeded(79);
+        let a = Mat::from_fn(5, 4, |_, _| r.next_gaussian());
+        let sample: Vec<usize> = (0..5).collect();
+        let mut z = Mat::zeros(5, 5);
+        gemm_nt(&a, &a, &mut z);
+        let rn = a.row_norms_sq();
+        Kernel::Rbf { sigma: 2.0 }.apply_block(&mut z, &rn, &rn);
+        for (i, &s) in sample.iter().enumerate() {
+            assert!((z[(i, s)] - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn mu_ordering() {
+        // Cost-model sanity: linear < poly < rbf.
+        assert!(Kernel::Linear.mu() < Kernel::paper_poly().mu());
+        assert!(Kernel::paper_poly().mu() < Kernel::paper_rbf().mu());
+    }
+}

@@ -1,0 +1,48 @@
+//! # kcd — Scalable Dual Coordinate Descent for Kernel Methods
+//!
+//! A Rust + JAX + Pallas reproduction of *"Scalable Dual Coordinate Descent
+//! for Kernel Methods"* (Shao & Devarakonda, 2024): s-step (communication-
+//! avoiding) variants of Dual Coordinate Descent for kernel SVM and Block
+//! Dual Coordinate Descent for kernel ridge regression.
+//!
+//! The crate is organized bottom-up:
+//!
+//! * [`rng`] — reproducible PCG random streams shared across ranks.
+//! * [`dense`] / [`sparse`] — the BLAS/SparseBLAS substrate (the paper used
+//!   Intel MKL; we build the needed subset from scratch).
+//! * [`kernelfn`] — linear / polynomial / RBF kernel maps over gram blocks.
+//! * [`comm`] — a simulated-MPI communicator (threads + channels) with
+//!   allreduce algorithms and traffic instrumentation.
+//! * [`costmodel`] — Hockney γF+βW+φL machine model used to project
+//!   measured per-rank counts onto a Cray-EX-like machine profile.
+//! * [`data`] — LIBSVM-format I/O plus synthetic dataset generators that
+//!   mirror the paper's benchmark datasets (Tables 2–3).
+//! * [`solvers`] — Algorithms 1–4 of the paper (DCD, s-step DCD, BDCD,
+//!   s-step BDCD) in serial and distributed form, the closed-form K-RR
+//!   solver, and the convergence metrics (duality gap, relative error).
+//! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
+//!   gram-block artifacts (`artifacts/*.hlo.txt`).
+//! * [`model`] — trained-model API: prediction, evaluation, JSON
+//!   persistence.
+//! * [`coordinator`] — experiment configs, the launcher, phase timers, and
+//!   the strong-scaling / runtime-breakdown harnesses behind the CLI and
+//!   the paper-figure benches.
+//! * [`bench_harness`] — a small criterion-like measurement harness.
+//! * [`testkit`] — a property-testing mini-framework used by the test
+//!   suites (proptest is unavailable in the offline build).
+
+pub mod bench_harness;
+pub mod cli;
+pub mod comm;
+pub mod coordinator;
+pub mod costmodel;
+pub mod data;
+pub mod dense;
+pub mod kernelfn;
+pub mod model;
+pub mod rng;
+pub mod runtime;
+pub mod solvers;
+pub mod sparse;
+pub mod testkit;
+pub mod util;

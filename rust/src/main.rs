@@ -1,0 +1,14 @@
+//! `kcd` — the L3 coordinator binary.
+//!
+//! See `kcd help` (or [`kcd::cli::USAGE`]) for the command reference.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match kcd::cli::run(argv) {
+        Ok(out) => print!("{out}"),
+        Err(err) => {
+            eprintln!("error: {err:#}");
+            std::process::exit(1);
+        }
+    }
+}

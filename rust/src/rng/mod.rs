@@ -1,0 +1,232 @@
+//! Reproducible pseudo-random number generation.
+//!
+//! The distributed solvers require every rank to draw the *same* coordinate
+//! sequence without communicating (the paper samples coordinates uniformly
+//! at random on all ranks; in the C+MPI implementation this is done with a
+//! shared seed). We implement PCG-XSH-RR 64/32 (O'Neill 2014) from scratch:
+//! it is small, fast, statistically solid for this use, and — critically —
+//! fully deterministic across platforms, which the equivalence tests
+//! (s-step ≡ classical) rely on.
+
+/// PCG-XSH-RR 64/32 pseudo-random generator.
+///
+/// Deterministic, seedable, and cheap to fork into independent streams
+/// (each stream selects a distinct odd increment).
+#[derive(Clone, Debug)]
+pub struct Pcg {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg {
+    /// Create a generator from a seed and a stream id.
+    ///
+    /// Generators with the same seed but different streams produce
+    /// independent sequences.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg {
+            state: 0,
+            inc: (stream << 1) | 1,
+        };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Convenience constructor on stream 0.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Fork an independent child stream; deterministic in `(self, tag)`.
+    pub fn fork(&mut self, tag: u64) -> Pcg {
+        let seed = self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15);
+        Pcg::new(seed, tag.wrapping_add(1))
+    }
+
+    /// Next 32 uniformly random bits.
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next 64 uniformly random bits.
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform `f64` in `[0, 1)` with 53 bits of precision.
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, bound)` using Lemire-style rejection
+    /// (unbiased).
+    pub fn gen_below(&mut self, bound: usize) -> usize {
+        assert!(bound > 0, "gen_below(0)");
+        let bound = bound as u64;
+        // Rejection threshold for unbiased sampling.
+        let threshold = bound.wrapping_neg() % bound;
+        loop {
+            let r = self.next_u64();
+            if r >= threshold {
+                return (r % bound) as usize;
+            }
+        }
+    }
+
+    /// Uniform integer in `[lo, hi)`.
+    pub fn gen_range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi, "empty range");
+        lo + self.gen_below(hi - lo)
+    }
+
+    /// Standard normal via Box–Muller (one value per call; simple and
+    /// deterministic — throughput is irrelevant for data generation).
+    pub fn next_gaussian(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            let u2 = self.next_f64();
+            if u1 > f64::EPSILON {
+                return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, m)` uniformly without
+    /// replacement (Floyd's algorithm; O(k) expected, order then shuffled).
+    pub fn sample_without_replacement(&mut self, m: usize, k: usize) -> Vec<usize> {
+        assert!(k <= m, "cannot sample {k} from {m} without replacement");
+        // Floyd's algorithm produces a set; we collect then Fisher–Yates
+        // shuffle so block order is also uniform (matters for BDCD blocks).
+        let mut chosen: Vec<usize> = Vec::with_capacity(k);
+        let mut set = std::collections::HashSet::with_capacity(k * 2);
+        for j in (m - k)..m {
+            let t = self.gen_below(j + 1);
+            if set.insert(t) {
+                chosen.push(t);
+            } else {
+                set.insert(j);
+                chosen.push(j);
+            }
+        }
+        self.shuffle(&mut chosen);
+        chosen
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Pcg::new(42, 7);
+        let mut b = Pcg::new(42, 7);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg::new(42, 1);
+        let mut b = Pcg::new(42, 2);
+        let same = (0..100).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 5, "streams should be independent, {same} collisions");
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg::seeded(1);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn f64_mean_close_to_half() {
+        let mut r = Pcg::seeded(3);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn gen_below_bounds_and_coverage() {
+        let mut r = Pcg::seeded(9);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = r.gen_below(10);
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues should appear");
+    }
+
+    #[test]
+    fn sample_without_replacement_is_distinct_and_in_range() {
+        let mut r = Pcg::seeded(11);
+        for _ in 0..100 {
+            let m = r.gen_range(1, 200);
+            let k = r.gen_range(0, m) + 1;
+            let s = r.sample_without_replacement(m, k.min(m));
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), s.len(), "duplicates in sample");
+            assert!(s.iter().all(|&i| i < m));
+        }
+    }
+
+    #[test]
+    fn sample_full_range_is_permutation() {
+        let mut r = Pcg::seeded(13);
+        let mut s = r.sample_without_replacement(50, 50);
+        s.sort_unstable();
+        assert_eq!(s, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Pcg::seeded(17);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.next_gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_preserves_multiset() {
+        let mut r = Pcg::seeded(23);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut root = Pcg::seeded(5);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let same = (0..100).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 5);
+    }
+}

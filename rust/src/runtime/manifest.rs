@@ -1,0 +1,147 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the Rust runtime.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// One lowered artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    /// Kernel family: `linear` | `poly` | `rbf`.
+    pub kind: String,
+    /// Data shape `(m, n)` and sampled-row count `k` the program was
+    /// lowered for.
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load and validate `manifest.json`.
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    /// Parse manifest JSON text.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text).map_err(|e| anyhow!("manifest JSON: {e}"))?;
+        let version = v
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing 'version'"))?;
+        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+        let arts = v
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for (i, a) in arts.iter().enumerate() {
+            let field = |key: &str| -> Result<&Json> {
+                a.get(key)
+                    .ok_or_else(|| anyhow!("artifact {i}: missing '{key}'"))
+            };
+            let spec = ArtifactSpec {
+                name: field("name")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("artifact {i}: name not a string"))?
+                    .to_string(),
+                file: field("file")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("artifact {i}: file not a string"))?
+                    .to_string(),
+                kind: field("kind")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("artifact {i}: kind not a string"))?
+                    .to_string(),
+                m: field("m")?
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("artifact {i}: bad m"))?,
+                n: field("n")?
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("artifact {i}: bad n"))?,
+                k: field("k")?
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("artifact {i}: bad k"))?,
+            };
+            artifacts.push(spec);
+        }
+        // Names must be unique (they key the compiled-executable cache).
+        let mut names: Vec<&str> = artifacts.iter().map(|a| a.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        anyhow::ensure!(
+            names.len() == artifacts.len(),
+            "duplicate artifact names in manifest"
+        );
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn artifacts(&self) -> &[ArtifactSpec] {
+        &self.artifacts
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "jax_version": "0.8.2",
+      "artifacts": [
+        {"name": "gram_linear_m8_n2_k1", "file": "gram_linear_m8_n2_k1.hlo.txt",
+         "kind": "linear", "m": 8, "n": 2, "k": 1,
+         "params": {"c": 0.0, "d": 3, "sigma": 1.0},
+         "dtype": "f32", "inputs": [[8, 2], [1, 2]], "output": [1, 8]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts().len(), 1);
+        let a = m.get("gram_linear_m8_n2_k1").unwrap();
+        assert_eq!((a.m, a.n, a.k), (8, 2, 1));
+        assert_eq!(a.kind, "linear");
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let text = SAMPLE.replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(&text).is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_names() {
+        let dup = SAMPLE.replace(
+            "]\n    }",
+            r#", {"name": "gram_linear_m8_n2_k1", "file": "x.hlo.txt",
+                "kind": "linear", "m": 8, "n": 2, "k": 1}]
+            }"#,
+        );
+        assert!(Manifest::parse(&dup).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let bad = r#"{"version": 1, "artifacts": [{"name": "x"}]}"#;
+        assert!(Manifest::parse(bad).is_err());
+    }
+}

@@ -1,0 +1,416 @@
+//! Algorithms 3 and 4: (s-step) Block Dual Coordinate Descent for kernel
+//! ridge regression.
+
+use crate::costmodel::{Ledger, Phase};
+use crate::dense::{cholesky_solve, Mat};
+use crate::rng::Pcg;
+
+use super::{GramOracle, Trace};
+
+/// K-RR solver parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct KrrParams {
+    /// Ridge penalty `λ`.
+    pub lambda: f64,
+    /// Block size `b`.
+    pub b: usize,
+    /// Number of (inner) block iterations `H`.
+    pub h: usize,
+    /// Coordinate-selection seed (shared by BDCD and s-step BDCD).
+    pub seed: u64,
+}
+
+impl Default for KrrParams {
+    fn default() -> Self {
+        KrrParams {
+            lambda: 1.0,
+            b: 8,
+            h: 500,
+            seed: 0xB0CD,
+        }
+    }
+}
+
+/// Algorithm 3: BDCD for K-RR. Returns `α_H`.
+///
+/// Per iteration: sample `b` coordinates without replacement, form the
+/// sampled kernel block `U_k = K(A, A_S)` (`b` rows of the kernel
+/// matrix), build `G_k = (1/λ)V_kᵀU_k + mI`, solve the `b×b` system and
+/// update the sampled coordinates of the replicated `α`.
+pub fn bdcd<O: GramOracle>(
+    oracle: &mut O,
+    y: &[f64],
+    p: &KrrParams,
+    ledger: &mut Ledger,
+    mut trace: Trace,
+) -> Vec<f64> {
+    let m = oracle.m();
+    assert_eq!(y.len(), m);
+    assert!(p.b >= 1 && p.b <= m, "block size must be in [1, m]");
+    let mf = m as f64;
+    let inv_lambda = 1.0 / p.lambda;
+    let mut rng = Pcg::new(p.seed, 0xBD);
+    let mut alpha = vec![0.0; m];
+    let mut q = Mat::zeros(p.b, m);
+
+    for k in 0..p.h {
+        let sample = rng.sample_without_replacement(m, p.b);
+        oracle.gram(&sample, &mut q, ledger);
+
+        let delta = ledger.time(Phase::Solve, || {
+            // G = (1/λ)VᵀU + mI ; rhs = Vᵀy − mVᵀα − (1/λ)Uᵀα.
+            let mut g = Mat::zeros(p.b, p.b);
+            for r in 0..p.b {
+                for c in 0..p.b {
+                    g[(r, c)] = inv_lambda * q[(c, sample[r])];
+                }
+                g[(r, r)] += mf;
+            }
+            let rhs: Vec<f64> = (0..p.b)
+                .map(|r| {
+                    y[sample[r]]
+                        - mf * alpha[sample[r]]
+                        - inv_lambda * crate::dense::dot(q.row(r), &alpha)
+                })
+                .collect();
+            cholesky_solve(&g, &rhs)
+        });
+        ledger.add_flops(
+            Phase::Solve,
+            (2 * p.b * m + p.b * p.b + p.b * p.b * p.b) as f64,
+        );
+
+        ledger.time(Phase::Update, || {
+            for (r, &i) in sample.iter().enumerate() {
+                alpha[i] += delta[r];
+            }
+        });
+        ledger.add_flops(Phase::Update, p.b as f64);
+
+        if let Some(t) = trace.as_deref_mut() {
+            t(k + 1, &alpha);
+        }
+    }
+    ledger.iters += p.h as f64;
+    alpha
+}
+
+/// Algorithm 4: s-step BDCD for K-RR. Computes a factor-`s` larger kernel
+/// block `Q_k = K(A, Ω_kᵀA)` per outer iteration (one allreduce), then
+/// solves the `s` subproblems sequentially with right-hand-side
+/// correction terms for the deferred `α` updates. Mathematically
+/// equivalent to [`bdcd`] with the same seed.
+pub fn bdcd_sstep<O: GramOracle>(
+    oracle: &mut O,
+    y: &[f64],
+    p: &KrrParams,
+    s: usize,
+    ledger: &mut Ledger,
+    mut trace: Trace,
+) -> Vec<f64> {
+    assert!(s >= 1);
+    let m = oracle.m();
+    assert_eq!(y.len(), m);
+    assert!(p.b >= 1 && p.b <= m, "block size must be in [1, m]");
+    let mf = m as f64;
+    let inv_lambda = 1.0 / p.lambda;
+    let mut rng = Pcg::new(p.seed, 0xBD);
+    let mut alpha = vec![0.0; m];
+
+    let b = p.b;
+    let outer = p.h.div_ceil(s);
+    let mut q = Mat::zeros(s * b, m);
+    let mut samples: Vec<Vec<usize>> = vec![Vec::new(); s];
+    let mut deltas: Vec<Vec<f64>> = vec![vec![0.0; b]; s];
+    let mut done = 0usize;
+
+    for k in 0..outer {
+        let s_now = s.min(p.h - done);
+        // Draw s blocks from the same stream BDCD uses.
+        for sample in samples.iter_mut().take(s_now) {
+            *sample = rng.sample_without_replacement(m, b);
+        }
+        let flat: Vec<usize> = samples[..s_now].iter().flatten().copied().collect();
+
+        // Q_k = K(A, Ω_kᵀA): sb kernel rows in one oracle call.
+        let mut q_view = if s_now == s {
+            std::mem::replace(&mut q, Mat::zeros(0, 0))
+        } else {
+            Mat::zeros(s_now * b, m)
+        };
+        oracle.gram(&flat, &mut q_view, ledger);
+
+        // Inner loop: s block subproblems against the frozen α_sk.
+        for j in 0..s_now {
+            let sj = &samples[j];
+            let qj = |r: usize| q_view.row(j * b + r);
+
+            let delta_j = ledger.time(Phase::Solve, || {
+                // G_j = (1/λ)V_jᵀU_j + mI.
+                let mut g = Mat::zeros(b, b);
+                for r in 0..b {
+                    for c in 0..b {
+                        g[(r, c)] = inv_lambda * q_view[(j * b + c, sj[r])];
+                    }
+                    g[(r, r)] += mf;
+                }
+                // Base rhs: V_jᵀy − mV_jᵀα_sk − (1/λ)U_jᵀα_sk.
+                let mut rhs: Vec<f64> = (0..b)
+                    .map(|r| {
+                        y[sj[r]] - mf * alpha[sj[r]] - inv_lambda * crate::dense::dot(qj(r), &alpha)
+                    })
+                    .collect();
+                rhs_corrections(&mut rhs, j, sj, &samples, &deltas, &q_view, b, mf, inv_lambda);
+                cholesky_solve(&g, &rhs)
+            });
+            ledger.add_flops(
+                Phase::Solve,
+                (2 * b * m + b * b + b * b * b) as f64,
+            );
+            // C(s,2)-pattern correction cost: 2b² flop-equivalents per
+            // (j,t) pair (paper's "gradient correction" category).
+            ledger.add_flops(Phase::GradCorr, (j * 2 * b * b) as f64);
+            deltas[j][..b].copy_from_slice(&delta_j);
+        }
+
+        // Deferred update: α_{sk+s} = α_sk + Σ_t V_t Δα_t.
+        ledger.time(Phase::Update, || {
+            if let Some(t) = trace.as_deref_mut() {
+                for j in 0..s_now {
+                    for (r, &i) in samples[j].iter().enumerate() {
+                        alpha[i] += deltas[j][r];
+                    }
+                    t(k * s + j + 1, &alpha);
+                }
+            } else {
+                for j in 0..s_now {
+                    for (r, &i) in samples[j].iter().enumerate() {
+                        alpha[i] += deltas[j][r];
+                    }
+                }
+            }
+        });
+        ledger.add_flops(Phase::Update, (s_now * b) as f64);
+
+        if s_now == s {
+            ledger.time(Phase::MemReset, || {
+                q_view.fill(0.0);
+            });
+            ledger.add_flops(Phase::MemReset, (s_now * b * m) as f64);
+            q = q_view;
+        }
+        done += s_now;
+    }
+    ledger.iters += p.h as f64;
+    alpha
+}
+
+/// Apply the deferred-update correction terms of Algorithm 4 line 15:
+/// `rhs −= m Σ_{t<j} V_jᵀV_t Δα_t + (1/λ) Σ_{t<j} U_jᵀV_t Δα_t`.
+#[allow(clippy::too_many_arguments)]
+fn rhs_corrections(
+    rhs: &mut [f64],
+    j: usize,
+    sj: &[usize],
+    samples: &[Vec<usize>],
+    deltas: &[Vec<f64>],
+    q_view: &Mat,
+    b: usize,
+    mf: f64,
+    inv_lambda: f64,
+) {
+    for t in 0..j {
+        let st = &samples[t];
+        let dt = &deltas[t];
+        for r in 0..b {
+            let mut vv = 0.0; // (V_jᵀV_t Δα_t)[r]
+            let mut uv = 0.0; // (U_jᵀV_t Δα_t)[r]
+            let qjr = q_view.row(j * b + r);
+            for c in 0..b {
+                if sj[r] == st[c] {
+                    vv += dt[c];
+                }
+                uv += qjr[st[c]] * dt[c];
+            }
+            rhs[r] -= mf * vv + inv_lambda * uv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gen_dense_regression;
+    use crate::kernelfn::Kernel;
+    use crate::solvers::{krr_exact, LocalGram};
+    use crate::testkit;
+
+    fn setup(m: usize, n: usize, kernel: Kernel) -> (LocalGram, Vec<f64>) {
+        let ds = gen_dense_regression(m, n, 0.1, 99);
+        (LocalGram::new(ds.a.clone(), kernel), ds.y)
+    }
+
+    #[test]
+    fn bdcd_converges_to_closed_form() {
+        for kernel in [Kernel::Linear, Kernel::paper_rbf()] {
+            let (mut oracle, y) = setup(40, 6, kernel);
+            let p = KrrParams {
+                lambda: 1.0,
+                b: 8,
+                h: 800,
+                seed: 1,
+            };
+            let alpha = bdcd(&mut oracle, &y, &p, &mut Ledger::new(), None);
+            let astar = krr_exact(&mut oracle, &y, p.lambda);
+            let err = crate::dense::rel_err(&alpha, &astar);
+            assert!(err < 1e-6, "{kernel:?}: rel err {err}");
+        }
+    }
+
+    #[test]
+    fn bdcd_b_equals_m_is_one_shot_exact() {
+        // With b = m the subproblem *is* the full problem: one iteration
+        // reaches the closed-form solution.
+        let (mut oracle, y) = setup(25, 5, Kernel::paper_rbf());
+        let p = KrrParams {
+            lambda: 0.5,
+            b: 25,
+            h: 1,
+            seed: 2,
+        };
+        let alpha = bdcd(&mut oracle, &y, &p, &mut Ledger::new(), None);
+        let astar = krr_exact(&mut oracle, &y, p.lambda);
+        let err = crate::dense::rel_err(&alpha, &astar);
+        assert!(err < 1e-10, "one-shot err {err}");
+    }
+
+    #[test]
+    fn sstep_equals_classical_all_kernels() {
+        for kernel in [Kernel::Linear, Kernel::paper_poly(), Kernel::paper_rbf()] {
+            let (mut o1, y) = setup(36, 8, kernel);
+            let (mut o2, _) = setup(36, 8, kernel);
+            let p = KrrParams {
+                lambda: 2.0,
+                b: 4,
+                h: 120,
+                seed: 3,
+            };
+            let a_ref = bdcd(&mut o1, &y, &p, &mut Ledger::new(), None);
+            for s in [2, 3, 8, 16, 120] {
+                let a_s = bdcd_sstep(&mut o2, &y, &p, s, &mut Ledger::new(), None);
+                testkit::assert_close(&a_s, &a_ref, 1e-9, &format!("{kernel:?} s={s}"));
+            }
+        }
+    }
+
+    #[test]
+    fn sstep_trace_overlays_classical() {
+        let (mut o1, y) = setup(20, 5, Kernel::paper_rbf());
+        let (mut o2, _) = setup(20, 5, Kernel::paper_rbf());
+        let p = KrrParams {
+            lambda: 1.0,
+            b: 3,
+            h: 48,
+            seed: 5,
+        };
+        let mut t1: Vec<Vec<f64>> = Vec::new();
+        let mut cb1 = |_k: usize, a: &[f64]| t1.push(a.to_vec());
+        bdcd(&mut o1, &y, &p, &mut Ledger::new(), Some(&mut cb1));
+        let mut t2: Vec<Vec<f64>> = Vec::new();
+        let mut cb2 = |_k: usize, a: &[f64]| t2.push(a.to_vec());
+        bdcd_sstep(&mut o2, &y, &p, 6, &mut Ledger::new(), Some(&mut cb2));
+        assert_eq!(t1.len(), t2.len());
+        for (a, b) in t1.iter().zip(&t2) {
+            testkit::assert_close(b, a, 1e-9, "krr trace step");
+        }
+    }
+
+    #[test]
+    fn overlapping_blocks_across_inner_steps_are_corrected() {
+        // m barely larger than b forces heavy overlap between the s
+        // blocks of one outer iteration.
+        let (mut o1, y) = setup(6, 4, Kernel::paper_rbf());
+        let (mut o2, _) = setup(6, 4, Kernel::paper_rbf());
+        let p = KrrParams {
+            lambda: 1.0,
+            b: 4,
+            h: 60,
+            seed: 7,
+        };
+        let a_ref = bdcd(&mut o1, &y, &p, &mut Ledger::new(), None);
+        let a_s = bdcd_sstep(&mut o2, &y, &p, 12, &mut Ledger::new(), None);
+        testkit::assert_close(&a_s, &a_ref, 1e-9, "overlap correction");
+    }
+
+    #[test]
+    fn sstep_handles_ragged_tail() {
+        let (mut o1, y) = setup(18, 4, Kernel::Linear);
+        let (mut o2, _) = setup(18, 4, Kernel::Linear);
+        let p = KrrParams {
+            lambda: 1.0,
+            b: 2,
+            h: 23,
+            seed: 9,
+        };
+        let a_ref = bdcd(&mut o1, &y, &p, &mut Ledger::new(), None);
+        let a_s = bdcd_sstep(&mut o2, &y, &p, 5, &mut Ledger::new(), None);
+        testkit::assert_close(&a_s, &a_ref, 1e-9, "ragged");
+    }
+
+    #[test]
+    fn property_sstep_equivalence_random_configs() {
+        testkit::check("bdcd sstep ≡ bdcd", 10, |g| {
+            let m = g.size(6, 30);
+            let b = g.size(1, m.min(8));
+            let h = g.size(5, 60);
+            let s = *g.choose(&[2, 4, 9, 16]);
+            let kernel = *g.choose(&[Kernel::Linear, Kernel::paper_poly(), Kernel::paper_rbf()]);
+            let lambda = g.f64_range(0.2, 5.0);
+            let ds = gen_dense_regression(m, g.size(2, 10), 0.1, g.seed);
+            let p = KrrParams {
+                lambda,
+                b,
+                h,
+                seed: g.seed ^ 0x1234,
+            };
+            let mut o1 = LocalGram::new(ds.a.clone(), kernel);
+            let mut o2 = LocalGram::new(ds.a.clone(), kernel);
+            let a_ref = bdcd(&mut o1, &ds.y, &p, &mut Ledger::new(), None);
+            let a_s = bdcd_sstep(&mut o2, &ds.y, &p, s, &mut Ledger::new(), None);
+            testkit::assert_close(&a_s, &a_ref, 1e-8, "prop krr equivalence");
+        });
+    }
+
+    #[test]
+    fn large_s_remains_stable() {
+        // The paper's headline stability claim: s = 256 still matches.
+        let (mut o1, y) = setup(32, 6, Kernel::paper_rbf());
+        let (mut o2, _) = setup(32, 6, Kernel::paper_rbf());
+        let p = KrrParams {
+            lambda: 1.0,
+            b: 2,
+            h: 512,
+            seed: 11,
+        };
+        let a_ref = bdcd(&mut o1, &y, &p, &mut Ledger::new(), None);
+        let a_s = bdcd_sstep(&mut o2, &y, &p, 256, &mut Ledger::new(), None);
+        testkit::assert_close(&a_s, &a_ref, 1e-8, "s=256 stability");
+    }
+
+    #[test]
+    fn ledger_phases_populated() {
+        let (mut oracle, y) = setup(16, 4, Kernel::paper_rbf());
+        let p = KrrParams {
+            lambda: 1.0,
+            b: 2,
+            h: 32,
+            seed: 13,
+        };
+        let mut ledger = Ledger::new();
+        bdcd_sstep(&mut oracle, &y, &p, 8, &mut ledger, None);
+        assert!(ledger.flops(Phase::KernelCompute) > 0.0);
+        assert!(ledger.flops(Phase::Solve) > 0.0);
+        assert!(ledger.flops(Phase::GradCorr) > 0.0);
+        assert!(ledger.flops(Phase::MemReset) > 0.0);
+    }
+}

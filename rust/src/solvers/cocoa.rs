@@ -1,0 +1,235 @@
+//! CoCoA baseline (Jaggi et al. 2014) — the divide-and-conquer
+//! related-work family the paper contrasts against (§2).
+//!
+//! CoCoA partitions *samples* across `K` workers; each worker runs local
+//! dual coordinate descent against a stale shared primal vector and the
+//! updates are averaged once per round. Communication drops to one
+//! reduce per round, but — unlike the s-step methods — the iterates are
+//! *not* equivalent to the sequential algorithm: more local work per
+//! round degrades per-update progress (the convergence–performance
+//! trade-off the paper's approach avoids). The `ablation_cocoa` bench
+//! quantifies exactly that contrast at equal communication budgets.
+//!
+//! Scope: linear-kernel K-SVM (CoCoA's shared state is the primal
+//! `w = Σ α_i y_i a_i ∈ R^n`, which only exists for the linear kernel —
+//! the same reason the paper's kernel methods need a different
+//! communication structure in the first place).
+
+use crate::costmodel::{Ledger, Phase};
+use crate::data::Dataset;
+use crate::rng::Pcg;
+
+use super::dcd::SvmVariant;
+
+/// CoCoA configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct CocoaParams {
+    /// Number of workers (sample partitions).
+    pub k_workers: usize,
+    /// Communication rounds.
+    pub rounds: usize,
+    /// Local DCD iterations per worker per round.
+    pub local_iters: usize,
+    pub c: f64,
+    pub variant: SvmVariant,
+    pub seed: u64,
+}
+
+/// Result of a CoCoA run.
+pub struct CocoaResult {
+    pub alpha: Vec<f64>,
+    /// Shared primal vector `w`.
+    pub w: Vec<f64>,
+    /// One entry per round: the α snapshot after the reduce (for
+    /// convergence-vs-communication plots).
+    pub round_alphas: Vec<Vec<f64>>,
+}
+
+/// Run CoCoA (averaging variant) for linear K-SVM.
+pub fn cocoa_svm(ds: &Dataset, p: &CocoaParams, ledger: &mut Ledger) -> CocoaResult {
+    let m = ds.m();
+    let n = ds.n();
+    assert!(p.k_workers >= 1 && p.k_workers <= m);
+    let (nu, omega) = p.variant.nu_omega(p.c);
+    let scale = 1.0 / p.k_workers as f64;
+
+    // Static row partition (contiguous blocks, like CoCoA's Spark
+    // partitions).
+    let bounds: Vec<usize> = (0..=p.k_workers)
+        .map(|k| k * m / p.k_workers)
+        .collect();
+    let row_norms = ds.a.row_norms_sq();
+
+    let mut alpha = vec![0.0; m];
+    let mut w = vec![0.0; n];
+    let mut rng = Pcg::new(p.seed, 0xC0C0);
+    let mut round_alphas = Vec::with_capacity(p.rounds);
+
+    for _round in 0..p.rounds {
+        // Each worker solves its local subproblem from the same shared w.
+        let mut delta_alpha = vec![0.0; m];
+        let mut delta_w_total = vec![0.0; n];
+        for k in 0..p.k_workers {
+            let (lo, hi) = (bounds[k], bounds[k + 1]);
+            if lo == hi {
+                continue;
+            }
+            let mut local_w = w.clone();
+            let mut worker_rng = rng.fork(k as u64);
+            ledger.time(Phase::Solve, || {
+                for _ in 0..p.local_iters {
+                    let i = lo + worker_rng.gen_below(hi - lo);
+                    // Linear-kernel DCD step against the local view.
+                    let (cols, vals) = ds.a.row_parts(i);
+                    let mut dot = 0.0;
+                    for (&j, &v) in cols.iter().zip(vals) {
+                        dot += v * local_w[j];
+                    }
+                    let a_i = alpha[i] + delta_alpha[i];
+                    let g = ds.y[i] * dot - 1.0 + omega * a_i;
+                    let eta = row_norms[i] + omega;
+                    let proj = (a_i - g).clamp(0.0, nu) - a_i;
+                    let theta = if proj != 0.0 {
+                        (a_i - g / eta).clamp(0.0, nu) - a_i
+                    } else {
+                        0.0
+                    };
+                    if theta != 0.0 {
+                        delta_alpha[i] += theta;
+                        let yt = ds.y[i] * theta;
+                        for (&j, &v) in cols.iter().zip(vals) {
+                            local_w[j] += yt * v;
+                            delta_w_total[j] += yt * v;
+                        }
+                    }
+                }
+            });
+            ledger.add_flops(
+                Phase::Solve,
+                (p.local_iters * (4 * ds.a.nnz() / m + 8)) as f64,
+            );
+        }
+        // Averaging reduce: α += (1/K)Δα, w += (1/K)ΣΔw. One allreduce of
+        // n words per round (the whole point of the scheme).
+        ledger.time(Phase::Update, || {
+            for (a, d) in alpha.iter_mut().zip(&delta_alpha) {
+                *a += scale * d;
+            }
+            for (wj, d) in w.iter_mut().zip(&delta_w_total) {
+                *wj += scale * d;
+            }
+        });
+        ledger.comm.allreduces += 1;
+        ledger.comm.words += n as u64;
+        ledger.comm.rounds += (p.k_workers as f64).log2().ceil() as u64;
+        round_alphas.push(alpha.clone());
+    }
+    CocoaResult {
+        alpha,
+        w,
+        round_alphas,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gen_dense_classification;
+    use crate::kernelfn::Kernel;
+    use crate::solvers::objective::SvmObjective;
+    use crate::solvers::LocalGram;
+
+    fn setup() -> (Dataset, SvmObjective) {
+        let ds = gen_dense_classification(60, 10, 0.05, 4242);
+        let mut oracle = LocalGram::new(ds.a.clone(), Kernel::Linear);
+        let obj = SvmObjective::new(&mut oracle, &ds.y, 1.0, SvmVariant::L1);
+        (ds, obj)
+    }
+
+    #[test]
+    fn cocoa_converges_with_one_worker() {
+        // K = 1 is plain DCD: must reach a near-optimal objective.
+        let (ds, obj) = setup();
+        let p = CocoaParams {
+            k_workers: 1,
+            rounds: 40,
+            local_iters: 60,
+            c: 1.0,
+            variant: SvmVariant::L1,
+            seed: 1,
+        };
+        let res = cocoa_svm(&ds, &p, &mut Ledger::new());
+        let gap = obj.duality_gap(&res.alpha);
+        assert!(gap < 0.2 * 60.0, "gap {gap} (α=0 gap is 60)");
+    }
+
+    #[test]
+    fn cocoa_alpha_in_box_and_w_consistent() {
+        let (ds, _) = setup();
+        let p = CocoaParams {
+            k_workers: 4,
+            rounds: 10,
+            local_iters: 30,
+            c: 0.5,
+            variant: SvmVariant::L1,
+            seed: 2,
+        };
+        let res = cocoa_svm(&ds, &p, &mut Ledger::new());
+        for &a in &res.alpha {
+            assert!((-1e-12..=0.5 + 1e-12).contains(&a));
+        }
+        // w must equal Σ α_i y_i a_i.
+        let mut w_expect = vec![0.0; ds.n()];
+        for i in 0..ds.m() {
+            let c = res.alpha[i] * ds.y[i];
+            for (j, v) in ds.a.row_iter(i) {
+                w_expect[j] += c * v;
+            }
+        }
+        crate::testkit::assert_close(&res.w, &w_expect, 1e-9, "w identity");
+    }
+
+    #[test]
+    fn more_local_work_trades_convergence_for_communication() {
+        // The related-work trade-off: at an equal number of *updates*,
+        // heavy local work with few rounds must end with a worse
+        // objective than light local work with many rounds.
+        let (ds, obj) = setup();
+        let total_updates = 1600;
+        let gap_at = |rounds: usize, local: usize| {
+            let p = CocoaParams {
+                k_workers: 8,
+                rounds,
+                local_iters: local,
+                c: 1.0,
+                variant: SvmVariant::L1,
+                seed: 3,
+            };
+            let res = cocoa_svm(&ds, &p, &mut Ledger::new());
+            obj.duality_gap(&res.alpha)
+        };
+        let many_rounds = gap_at(total_updates / (8 * 10), 10);
+        let few_rounds = gap_at(total_updates / (8 * 100), 100);
+        assert!(
+            many_rounds < few_rounds,
+            "CoCoA should degrade with more local work: {many_rounds} vs {few_rounds}"
+        );
+    }
+
+    #[test]
+    fn communication_counted_once_per_round() {
+        let (ds, _) = setup();
+        let mut ledger = Ledger::new();
+        let p = CocoaParams {
+            k_workers: 4,
+            rounds: 7,
+            local_iters: 5,
+            c: 1.0,
+            variant: SvmVariant::L1,
+            seed: 4,
+        };
+        cocoa_svm(&ds, &p, &mut ledger);
+        assert_eq!(ledger.comm.allreduces, 7);
+        assert_eq!(ledger.comm.words, 7 * ds.n() as u64);
+    }
+}

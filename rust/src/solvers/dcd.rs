@@ -1,0 +1,414 @@
+//! Algorithms 1 and 2: (s-step) Dual Coordinate Descent for kernel SVM.
+
+use crate::costmodel::{Ledger, Phase};
+use crate::dense::Mat;
+use crate::rng::Pcg;
+
+use super::{GramOracle, Trace};
+
+/// Hinge-loss variant: `L1` (hinge) or `L2` (squared hinge).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SvmVariant {
+    L1,
+    L2,
+}
+
+impl SvmVariant {
+    /// `(ν, ω)` from Algorithm 1 line 2: `ν = C, ω = 0` for L1;
+    /// `ν = ∞, ω = 1/(2C)` for L2.
+    pub fn nu_omega(&self, c: f64) -> (f64, f64) {
+        match self {
+            SvmVariant::L1 => (c, 0.0),
+            SvmVariant::L2 => (f64::INFINITY, 1.0 / (2.0 * c)),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SvmVariant::L1 => "l1",
+            SvmVariant::L2 => "l2",
+        }
+    }
+}
+
+/// K-SVM solver parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SvmParams {
+    /// Soft-margin penalty `C`.
+    pub c: f64,
+    pub variant: SvmVariant,
+    /// Total (inner) iterations `H`.
+    pub h: usize,
+    /// Seed for the coordinate-selection stream. DCD and s-step DCD draw
+    /// the same sequence from the same seed, which is what makes them
+    /// comparable iteration-for-iteration.
+    pub seed: u64,
+}
+
+impl Default for SvmParams {
+    fn default() -> Self {
+        SvmParams {
+            c: 1.0,
+            variant: SvmVariant::L1,
+            h: 1000,
+            seed: 0xDC0D,
+        }
+    }
+}
+
+/// Scale kernel row `r` for sample `i_r`: `q[r][i] ← y_{i_r}·y_i·q[r][i]`
+/// (the `diag(y)·K·diag(y)` dual operator).
+#[inline]
+fn yscale_rows(q: &mut Mat, sample: &[usize], y: &[f64]) {
+    for (r, &sr) in sample.iter().enumerate() {
+        let ys = y[sr];
+        for (v, &yi) in q.row_mut(r).iter_mut().zip(y) {
+            *v *= ys * yi;
+        }
+    }
+}
+
+/// The single-coordinate subproblem (Algorithm 1 lines 10–15): given the
+/// current coordinate value `a_i`, gradient `g`, curvature `η` and bound
+/// `ν`, return the step `θ`.
+#[inline]
+fn coordinate_step(a_i: f64, g: f64, eta: f64, nu: f64) -> f64 {
+    let proj_g = (a_i - g).clamp(0.0, nu) - a_i;
+    if proj_g != 0.0 {
+        (a_i - g / eta).clamp(0.0, nu) - a_i
+    } else {
+        0.0
+    }
+}
+
+/// Algorithm 1: DCD for K-SVM (L1/L2). Returns the dual solution `α_H`.
+///
+/// `oracle` produces *unscaled* kernel rows `K(a_i, ·)`; the `y` scaling
+/// is applied here (see the module note in [`super`]).
+pub fn dcd<O: GramOracle>(
+    oracle: &mut O,
+    y: &[f64],
+    p: &SvmParams,
+    ledger: &mut Ledger,
+    mut trace: Trace,
+) -> Vec<f64> {
+    let m = oracle.m();
+    assert_eq!(y.len(), m);
+    let (nu, omega) = p.variant.nu_omega(p.c);
+    let mut rng = Pcg::new(p.seed, 0x5D);
+    let mut alpha = vec![0.0; m];
+    let mut u = Mat::zeros(1, m);
+
+    for k in 0..p.h {
+        let ik = rng.gen_below(m);
+        // u_k = K(A, a_ik), then y-scaled.
+        oracle.gram(&[ik], &mut u, ledger);
+        ledger.time(Phase::KernelCompute, || {
+            yscale_rows(&mut u, &[ik], y);
+        });
+        ledger.add_flops(Phase::KernelCompute, 2.0 * m as f64);
+
+        let theta = ledger.time(Phase::Solve, || {
+            let urow = u.row(0);
+            let eta = urow[ik] + omega;
+            let g = crate::dense::dot(urow, &alpha) - 1.0 + omega * alpha[ik];
+            coordinate_step(alpha[ik], g, eta, nu)
+        });
+        ledger.add_flops(Phase::Solve, 2.0 * m as f64 + 4.0);
+
+        ledger.time(Phase::Update, || {
+            alpha[ik] += theta;
+        });
+        ledger.add_flops(Phase::Update, 1.0);
+
+        if let Some(t) = trace.as_deref_mut() {
+            t(k + 1, &alpha);
+        }
+    }
+    ledger.iters += p.h as f64;
+    alpha
+}
+
+/// Algorithm 2: s-step DCD for K-SVM. Mathematically equivalent to
+/// [`dcd`] with the same seed (same coordinate sequence), but computes
+/// `s` kernel rows per outer iteration — one allreduce per `s` updates in
+/// the distributed setting.
+pub fn dcd_sstep<O: GramOracle>(
+    oracle: &mut O,
+    y: &[f64],
+    p: &SvmParams,
+    s: usize,
+    ledger: &mut Ledger,
+    mut trace: Trace,
+) -> Vec<f64> {
+    assert!(s >= 1);
+    let m = oracle.m();
+    assert_eq!(y.len(), m);
+    let (nu, omega) = p.variant.nu_omega(p.c);
+    let mut rng = Pcg::new(p.seed, 0x5D);
+    let mut alpha = vec![0.0; m];
+
+    let outer = p.h.div_ceil(s);
+    let mut q = Mat::zeros(s, m);
+    let mut sample = vec![0usize; s];
+    let mut theta = vec![0.0; s];
+    let mut done = 0usize;
+
+    for k in 0..outer {
+        let s_now = s.min(p.h - done);
+        // Draw the next s coordinates from the same stream DCD uses.
+        for sj in sample.iter_mut().take(s_now) {
+            *sj = rng.gen_below(m);
+        }
+        let sample_now = &sample[..s_now];
+
+        // U_k = K(A, A_S): s rows in one oracle call (one allreduce when
+        // distributed), then y-scaled.
+        let mut q_view = if s_now == s {
+            std::mem::replace(&mut q, Mat::zeros(0, 0))
+        } else {
+            Mat::zeros(s_now, m)
+        };
+        oracle.gram(sample_now, &mut q_view, ledger);
+        ledger.time(Phase::KernelCompute, || {
+            yscale_rows(&mut q_view, sample_now, y);
+        });
+        ledger.add_flops(Phase::KernelCompute, 2.0 * (s_now * m) as f64);
+
+        // Inner loop: s sequential scalar subproblems against the frozen
+        // α_sk, with gradient-correction terms for the deferred updates.
+        ledger.time(Phase::Solve, || {
+            for j in 0..s_now {
+                let urow = q_view.row(j);
+                let ij = sample_now[j];
+                let eta = urow[ij] + omega;
+                // ρ_j = α_sk[i_j] + Σ_{t<j} θ_t [i_t = i_j]
+                // g_j = u_jᵀα_sk − 1 + ω α_sk[i_j]
+                //     + Σ_{t<j} (u_jᵀ e_{i_t}) θ_t + ω Σ_{t<j} θ_t [i_t = i_j]
+                let mut rho = alpha[ij];
+                let mut g = crate::dense::dot(urow, &alpha) - 1.0 + omega * alpha[ij];
+                for t in 0..j {
+                    let it = sample_now[t];
+                    g += urow[it] * theta[t];
+                    if it == ij {
+                        rho += theta[t];
+                        g += omega * theta[t];
+                    }
+                }
+                theta[j] = coordinate_step(rho, g, eta, nu);
+            }
+        });
+        ledger.add_flops(Phase::Solve, (s_now * (2 * m + 4)) as f64);
+        // The C(s,2)-ish correction flops are attributed separately
+        // (paper's "gradient correction" breakdown category).
+        ledger.add_flops(
+            Phase::GradCorr,
+            (s_now * s_now.saturating_sub(1)) as f64, // 2 flops × s(s−1)/2
+        );
+
+        // Deferred solution update: α_{sk+s} = α_sk + Σ θ_t e_{i_t}.
+        ledger.time(Phase::Update, || {
+            if let Some(t) = trace.as_deref_mut() {
+                // Replay updates one at a time so the trace sees every
+                // intermediate α_{sk+j} (used by the Fig 1 overlay).
+                for j in 0..s_now {
+                    alpha[sample_now[j]] += theta[j];
+                    t(k * s + j + 1, &alpha);
+                }
+            } else {
+                for j in 0..s_now {
+                    alpha[sample_now[j]] += theta[j];
+                }
+            }
+        });
+        ledger.add_flops(Phase::Update, s_now as f64);
+
+        // Reset the gram buffer for the next outer iteration (the paper's
+        // "memory reset" breakdown category).
+        if s_now == s {
+            ledger.time(Phase::MemReset, || {
+                q_view.fill(0.0);
+            });
+            ledger.add_flops(Phase::MemReset, (s_now * m) as f64);
+            q = q_view;
+        }
+        done += s_now;
+    }
+    ledger.iters += p.h as f64;
+    alpha
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gen_dense_classification;
+    use crate::kernelfn::Kernel;
+    use crate::solvers::LocalGram;
+    use crate::testkit;
+
+    fn setup(m: usize, n: usize, kernel: Kernel) -> (LocalGram, Vec<f64>) {
+        let ds = gen_dense_classification(m, n, 0.1, 77);
+        (LocalGram::new(ds.a.clone(), kernel), ds.y)
+    }
+
+    #[test]
+    fn dcd_alpha_respects_box_constraints() {
+        for variant in [SvmVariant::L1, SvmVariant::L2] {
+            let (mut oracle, y) = setup(40, 8, Kernel::paper_rbf());
+            let p = SvmParams {
+                c: 0.5,
+                variant,
+                h: 300,
+                seed: 1,
+            };
+            let (nu, _) = variant.nu_omega(p.c);
+            let alpha = dcd(&mut oracle, &y, &p, &mut Ledger::new(), None);
+            for &a in &alpha {
+                assert!(a >= -1e-15 && a <= nu + 1e-15, "alpha {a} outside [0, {nu}]");
+            }
+        }
+    }
+
+    #[test]
+    fn dcd_makes_progress() {
+        // The dual objective must decrease vs the zero vector.
+        let (mut oracle, y) = setup(60, 6, Kernel::paper_rbf());
+        let p = SvmParams {
+            c: 1.0,
+            variant: SvmVariant::L1,
+            h: 500,
+            seed: 2,
+        };
+        let alpha = dcd(&mut oracle, &y, &p, &mut Ledger::new(), None);
+        let obj = super::super::objective::SvmObjective::new(&mut oracle, &y, p.c, p.variant);
+        assert!(
+            obj.dual_min_value(&alpha) < 0.0,
+            "objective should improve on α = 0 (value 0)"
+        );
+    }
+
+    #[test]
+    fn sstep_equals_classical_all_kernels_and_variants() {
+        for kernel in [Kernel::Linear, Kernel::paper_poly(), Kernel::paper_rbf()] {
+            for variant in [SvmVariant::L1, SvmVariant::L2] {
+                let (mut o1, y) = setup(50, 10, kernel);
+                let (mut o2, _) = setup(50, 10, kernel);
+                let p = SvmParams {
+                    c: 1.0,
+                    variant,
+                    h: 240,
+                    seed: 3,
+                };
+                let a_ref = dcd(&mut o1, &y, &p, &mut Ledger::new(), None);
+                for s in [2, 3, 8, 16, 240] {
+                    let a_s = dcd_sstep(&mut o2, &y, &p, s, &mut Ledger::new(), None);
+                    testkit::assert_close(
+                        &a_s,
+                        &a_ref,
+                        1e-10,
+                        &format!("{kernel:?} {variant:?} s={s}"),
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sstep_trace_overlays_classical_trace() {
+        let (mut o1, y) = setup(30, 6, Kernel::paper_rbf());
+        let (mut o2, _) = setup(30, 6, Kernel::paper_rbf());
+        let p = SvmParams {
+            c: 1.0,
+            variant: SvmVariant::L1,
+            h: 64,
+            seed: 5,
+        };
+        let mut trace1: Vec<Vec<f64>> = Vec::new();
+        let mut cb1 = |_k: usize, a: &[f64]| trace1.push(a.to_vec());
+        dcd(&mut o1, &y, &p, &mut Ledger::new(), Some(&mut cb1));
+        let mut trace2: Vec<Vec<f64>> = Vec::new();
+        let mut cb2 = |_k: usize, a: &[f64]| trace2.push(a.to_vec());
+        dcd_sstep(&mut o2, &y, &p, 8, &mut Ledger::new(), Some(&mut cb2));
+        assert_eq!(trace1.len(), trace2.len());
+        for (t1, t2) in trace1.iter().zip(&trace2) {
+            testkit::assert_close(t2, t1, 1e-10, "trace step");
+        }
+    }
+
+    #[test]
+    fn sstep_handles_h_not_divisible_by_s() {
+        let (mut o1, y) = setup(25, 5, Kernel::Linear);
+        let (mut o2, _) = setup(25, 5, Kernel::Linear);
+        let p = SvmParams {
+            c: 1.0,
+            variant: SvmVariant::L1,
+            h: 37, // not divisible by 8
+            seed: 7,
+        };
+        let a_ref = dcd(&mut o1, &y, &p, &mut Ledger::new(), None);
+        let a_s = dcd_sstep(&mut o2, &y, &p, 8, &mut Ledger::new(), None);
+        testkit::assert_close(&a_s, &a_ref, 1e-10, "ragged tail");
+    }
+
+    #[test]
+    fn duplicate_coordinates_within_block_are_corrected() {
+        // Tiny m with large s forces duplicate draws inside one block —
+        // the ρ/ω correction terms must handle them.
+        let (mut o1, y) = setup(4, 3, Kernel::paper_rbf());
+        let (mut o2, _) = setup(4, 3, Kernel::paper_rbf());
+        for variant in [SvmVariant::L1, SvmVariant::L2] {
+            let p = SvmParams {
+                c: 2.0,
+                variant,
+                h: 96,
+                seed: 11,
+            };
+            let a_ref = dcd(&mut o1, &y, &p, &mut Ledger::new(), None);
+            let a_s = dcd_sstep(&mut o2, &y, &p, 32, &mut Ledger::new(), None);
+            testkit::assert_close(&a_s, &a_ref, 1e-9, &format!("{variant:?} duplicates"));
+        }
+    }
+
+    #[test]
+    fn property_sstep_equivalence_random_configs() {
+        testkit::check("dcd sstep ≡ dcd", 12, |g| {
+            let m = g.size(5, 40);
+            let n = g.size(2, 12);
+            let h = g.size(10, 120);
+            let s = *g.choose(&[2, 4, 7, 16, 64]);
+            let kernel = *g.choose(&[Kernel::Linear, Kernel::paper_poly(), Kernel::paper_rbf()]);
+            let variant = *g.choose(&[SvmVariant::L1, SvmVariant::L2]);
+            let c = g.f64_range(0.1, 4.0);
+            let ds = gen_dense_classification(m, n, 0.1, g.seed);
+            let p = SvmParams {
+                c,
+                variant,
+                h,
+                seed: g.seed ^ 0xABCD,
+            };
+            let mut o1 = LocalGram::new(ds.a.clone(), kernel);
+            let mut o2 = LocalGram::new(ds.a.clone(), kernel);
+            let a_ref = dcd(&mut o1, &ds.y, &p, &mut Ledger::new(), None);
+            let a_s = dcd_sstep(&mut o2, &ds.y, &p, s, &mut Ledger::new(), None);
+            testkit::assert_close(&a_s, &a_ref, 1e-9, "prop equivalence");
+        });
+    }
+
+    #[test]
+    fn ledger_phases_populated() {
+        let (mut oracle, y) = setup(20, 4, Kernel::paper_rbf());
+        let p = SvmParams {
+            c: 1.0,
+            variant: SvmVariant::L1,
+            h: 64,
+            seed: 13,
+        };
+        let mut ledger = Ledger::new();
+        dcd_sstep(&mut oracle, &y, &p, 8, &mut ledger, None);
+        assert!(ledger.flops(Phase::KernelCompute) > 0.0);
+        assert!(ledger.flops(Phase::Solve) > 0.0);
+        assert!(ledger.flops(Phase::GradCorr) > 0.0);
+        assert!(ledger.flops(Phase::MemReset) > 0.0);
+        assert!(ledger.flops(Phase::Update) > 0.0);
+    }
+}

@@ -1,0 +1,81 @@
+//! Closed-form kernel ridge regression: the `α*` reference used by the
+//! convergence experiments (Figure 2's relative solution error).
+
+use crate::costmodel::Ledger;
+use crate::dense::{cholesky_solve, Mat};
+
+use super::GramOracle;
+
+/// Materialize the full `m×m` kernel matrix through the oracle.
+///
+/// O(m²) memory — intended for the convergence datasets (`m ≤ 4177`),
+/// exactly like the paper's MATLAB reference.
+pub fn full_kernel_matrix<O: GramOracle>(oracle: &mut O) -> Mat {
+    let m = oracle.m();
+    let sample: Vec<usize> = (0..m).collect();
+    let mut k = Mat::zeros(m, m);
+    oracle.gram(&sample, &mut k, &mut Ledger::new());
+    k
+}
+
+/// Solve `((1/λ)K + mI) α* = y` — the exact K-RR solution implied by the
+/// stationarity of problem (2) (the paper computes the same reference via
+/// matrix factorization).
+pub fn krr_exact<O: GramOracle>(oracle: &mut O, y: &[f64], lambda: f64) -> Vec<f64> {
+    let m = oracle.m();
+    assert_eq!(y.len(), m);
+    let mut g = full_kernel_matrix(oracle);
+    let inv_lambda = 1.0 / lambda;
+    for v in g.data_mut() {
+        *v *= inv_lambda;
+    }
+    for i in 0..m {
+        g[(i, i)] += m as f64;
+    }
+    cholesky_solve(&g, y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gen_dense_regression;
+    use crate::dense::gemv;
+    use crate::kernelfn::Kernel;
+    use crate::solvers::LocalGram;
+
+    #[test]
+    fn exact_solution_satisfies_normal_equations() {
+        let ds = gen_dense_regression(30, 5, 0.1, 21);
+        for kernel in [Kernel::Linear, Kernel::paper_rbf()] {
+            let mut oracle = LocalGram::new(ds.a.clone(), kernel);
+            let lambda = 1.5;
+            let astar = krr_exact(&mut oracle, &ds.y, lambda);
+            // Residual of ((1/λ)K + mI)α* − y must vanish.
+            let k = full_kernel_matrix(&mut oracle);
+            let mut ka = vec![0.0; 30];
+            gemv(&k, &astar, &mut ka);
+            for i in 0..30 {
+                let lhs = ka[i] / lambda + 30.0 * astar[i];
+                assert!(
+                    (lhs - ds.y[i]).abs() < 1e-8,
+                    "{kernel:?} residual at {i}: {lhs} vs {}",
+                    ds.y[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn full_kernel_matrix_is_symmetric_psd_diagonal() {
+        let ds = gen_dense_regression(15, 4, 0.1, 22);
+        let mut oracle = LocalGram::new(ds.a.clone(), Kernel::paper_rbf());
+        let k = full_kernel_matrix(&mut oracle);
+        for i in 0..15 {
+            assert!((k[(i, i)] - 1.0).abs() < 1e-12, "rbf diag");
+            for j in 0..15 {
+                assert!((k[(i, j)] - k[(j, i)]).abs() < 1e-12, "symmetry");
+                assert!(k[(i, j)] > 0.0 && k[(i, j)] <= 1.0 + 1e-12, "rbf range");
+            }
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! K-SVM objectives: dual value, primal value, duality gap, accuracy.
+//!
+//! The convergence experiments (Figure 1) plot the duality gap
+//! `P(w(α)) − D(α)` where `D` is the maximized Lagrangian dual and `P`
+//! the primal soft-margin objective evaluated at the primal point
+//! recovered from `α`. Both are computed from the y-scaled kernel matrix
+//! `Q̃ = diag(y)·K·diag(y)` which is materialized once (m² — convergence
+//! datasets only, as in the paper's MATLAB study).
+
+use crate::dense::{gemv, Mat};
+
+use super::dcd::SvmVariant;
+use super::krr_exact::full_kernel_matrix;
+use super::GramOracle;
+
+/// Cached-kernel objective evaluator for K-SVM.
+pub struct SvmObjective {
+    /// `Q̃ = diag(y) K diag(y)`.
+    qt: Mat,
+    c: f64,
+    variant: SvmVariant,
+    m: usize,
+}
+
+impl SvmObjective {
+    /// Materialize `Q̃` through the oracle (O(m²) memory).
+    pub fn new<O: GramOracle>(oracle: &mut O, y: &[f64], c: f64, variant: SvmVariant) -> Self {
+        let m = oracle.m();
+        assert_eq!(y.len(), m);
+        let mut qt = full_kernel_matrix(oracle);
+        for i in 0..m {
+            let yi = y[i];
+            for (j, v) in qt.row_mut(i).iter_mut().enumerate() {
+                *v *= yi * y[j];
+            }
+        }
+        SvmObjective { qt, c, variant, m }
+    }
+
+    /// The *minimized* dual objective of Section 3.1:
+    /// `1/2 αᵀQ̃α − Σα (+ 1/(4C)·Σα² for L2)`. Zero at `α = 0`, negative
+    /// once the solver makes progress.
+    pub fn dual_min_value(&self, alpha: &[f64]) -> f64 {
+        assert_eq!(alpha.len(), self.m);
+        let mut qa = vec![0.0; self.m];
+        gemv(&self.qt, alpha, &mut qa);
+        let quad: f64 = 0.5 * crate::dense::dot(alpha, &qa);
+        let lin: f64 = alpha.iter().sum();
+        let reg = match self.variant {
+            SvmVariant::L1 => 0.0,
+            SvmVariant::L2 => alpha.iter().map(|a| a * a).sum::<f64>() / (4.0 * self.c),
+        };
+        quad - lin + reg
+    }
+
+    /// The maximized dual `D(α) = −dual_min_value(α)`.
+    pub fn dual_value(&self, alpha: &[f64]) -> f64 {
+        -self.dual_min_value(alpha)
+    }
+
+    /// Primal soft-margin objective at the primal point recovered from
+    /// `α`: `1/2‖w‖² + C Σ loss(1 − y_i f(x_i))` with hinge (L1) or
+    /// squared hinge (L2); `‖w‖² = αᵀQ̃α`, `y_i f(x_i) = (Q̃α)_i`.
+    pub fn primal_value(&self, alpha: &[f64]) -> f64 {
+        assert_eq!(alpha.len(), self.m);
+        let mut qa = vec![0.0; self.m];
+        gemv(&self.qt, alpha, &mut qa);
+        let wnorm2 = crate::dense::dot(alpha, &qa);
+        let loss: f64 = qa
+            .iter()
+            .map(|&margin| {
+                let xi = (1.0 - margin).max(0.0);
+                match self.variant {
+                    SvmVariant::L1 => xi,
+                    SvmVariant::L2 => xi * xi,
+                }
+            })
+            .sum();
+        0.5 * wnorm2 + self.c * loss
+    }
+
+    /// Duality gap `P(α) − D(α) ≥ 0`; approaches 0 at the optimum.
+    pub fn duality_gap(&self, alpha: &[f64]) -> f64 {
+        self.primal_value(alpha) - self.dual_value(alpha)
+    }
+
+    /// Training accuracy of the decision function implied by `α`
+    /// (`sign(f(x_i))` vs `y_i`; `y_i f(x_i) = (Q̃α)_i > 0` ⇔ correct).
+    pub fn train_accuracy(&self, alpha: &[f64]) -> f64 {
+        let mut qa = vec![0.0; self.m];
+        gemv(&self.qt, alpha, &mut qa);
+        let correct = qa.iter().filter(|&&v| v > 0.0).count();
+        correct as f64 / self.m as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::Ledger;
+    use crate::data::gen_dense_classification;
+    use crate::kernelfn::Kernel;
+    use crate::solvers::{dcd, LocalGram, SvmParams};
+
+    fn run(variant: SvmVariant, h: usize) -> (SvmObjective, Vec<f64>) {
+        let ds = gen_dense_classification(50, 8, 0.05, 31);
+        let mut oracle = LocalGram::new(ds.a.clone(), Kernel::paper_rbf());
+        let p = SvmParams {
+            c: 1.0,
+            variant,
+            h,
+            seed: 17,
+        };
+        let alpha = dcd(&mut oracle, &ds.y, &p, &mut Ledger::new(), None);
+        let obj = SvmObjective::new(&mut oracle, &ds.y, p.c, variant);
+        (obj, alpha)
+    }
+
+    #[test]
+    fn gap_nonnegative_and_decreasing() {
+        for variant in [SvmVariant::L1, SvmVariant::L2] {
+            let (obj, _) = run(variant, 0);
+            let ds = gen_dense_classification(50, 8, 0.05, 31);
+            let mut oracle = LocalGram::new(ds.a.clone(), Kernel::paper_rbf());
+            let mut gaps = Vec::new();
+            let mut cb = |k: usize, a: &[f64]| {
+                if k % 100 == 0 {
+                    gaps.push(obj.duality_gap(a));
+                }
+            };
+            let p = SvmParams {
+                c: 1.0,
+                variant,
+                h: 1500,
+                seed: 17,
+            };
+            dcd(&mut oracle, &ds.y, &p, &mut Ledger::new(), Some(&mut cb));
+            assert!(gaps.iter().all(|&g| g >= -1e-9), "{variant:?}: gap negative");
+            let first = gaps.first().copied().unwrap();
+            let last = gaps.last().copied().unwrap();
+            assert!(
+                last < first * 0.5,
+                "{variant:?}: gap should shrink substantially: {first} → {last}"
+            );
+        }
+    }
+
+    #[test]
+    fn gap_zero_at_alpha_zero_is_primal_at_zero() {
+        // At α = 0: D = 0 and P = C·Σ loss(1) = C·m (L1) — gap = C·m.
+        let (obj, _) = run(SvmVariant::L1, 0);
+        let alpha = vec![0.0; 50];
+        assert!((obj.duality_gap(&alpha) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn solved_model_classifies_training_data() {
+        let (obj, alpha) = run(SvmVariant::L1, 3000);
+        let acc = obj.train_accuracy(&alpha);
+        // RBF kernel with C=1 on 50 points with 5% label noise: should fit
+        // most of the data.
+        assert!(acc > 0.85, "training accuracy {acc}");
+    }
+
+    #[test]
+    fn l2_dual_includes_regularizer() {
+        let (obj_l2, _) = run(SvmVariant::L2, 0);
+        let alpha = vec![0.1; 50];
+        let (obj_l1, _) = run(SvmVariant::L1, 0);
+        // Same Q̃, same α: L2's minimized dual exceeds L1's by Σα²/(4C).
+        let diff = obj_l2.dual_min_value(&alpha) - obj_l1.dual_min_value(&alpha);
+        let expect = 50.0 * 0.01 / 4.0;
+        assert!((diff - expect).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,327 @@
+//! Gram oracles: on-demand computation of sampled kernel-matrix rows.
+//!
+//! `gram(sample, q, ledger)` fills `q` (`sample.len() × m`) with
+//! `q[r][i] = K(a_{sample_r}, a_i)`. The oracle owns the data layout:
+//!
+//! * [`LocalGram`] — full matrix on one rank (serial reference).
+//! * [`DistGram`] — this rank's 1D-column shard; computes the *partial*
+//!   linear gram, sum-allreduces it across ranks (real messages, real
+//!   counts), then applies the nonlinear kernel map redundantly —
+//!   exactly the communication pattern of the paper's Section 4 analysis.
+
+use crate::comm::{allreduce_sum, AllreduceAlgo, CommStats, Communicator};
+use crate::costmodel::{Ledger, Phase};
+use crate::dense::Mat;
+use crate::kernelfn::Kernel;
+use crate::sparse::Csr;
+
+/// Produces sampled rows of the kernel matrix `K(A, A)`.
+pub trait GramOracle {
+    /// Number of samples `m` (kernel-matrix dimension).
+    fn m(&self) -> usize;
+
+    /// Fill `q[r][·]` with kernel row `sample[r]`, recording costs.
+    fn gram(&mut self, sample: &[usize], q: &mut Mat, ledger: &mut Ledger);
+
+    /// `K(a_i, a_i)` for all `i` (cheap; used for SVM `η` sanity checks
+    /// and objective evaluation).
+    fn diag(&self) -> Vec<f64>;
+
+    /// Communication statistics accumulated so far (zero for local).
+    fn comm_stats(&self) -> CommStats {
+        CommStats::default()
+    }
+}
+
+/// Density below which the transpose-based gram beats the scatter-dot
+/// variant (cost `f²mn` vs `fmn` per sampled row; crossover well below
+/// 1.0, with slack for its worse write locality). See §Perf in
+/// EXPERIMENTS.md for the measured before/after.
+const TRANSPOSE_GRAM_MAX_DENSITY: f64 = 0.25;
+
+/// Serial oracle over the full matrix.
+pub struct LocalGram {
+    a: Csr,
+    /// Cached transpose for the sparse fast path (None for dense data).
+    at: Option<Csr>,
+    kernel: Kernel,
+    row_norms: Vec<f64>,
+    scratch: Vec<f64>,
+}
+
+impl LocalGram {
+    pub fn new(a: Csr, kernel: Kernel) -> Self {
+        let row_norms = a.row_norms_sq();
+        let at = (a.density() < TRANSPOSE_GRAM_MAX_DENSITY).then(|| a.transpose());
+        LocalGram {
+            a,
+            at,
+            kernel,
+            row_norms,
+            scratch: Vec::new(),
+        }
+    }
+
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
+    }
+}
+
+impl GramOracle for LocalGram {
+    fn m(&self) -> usize {
+        self.a.nrows()
+    }
+
+    fn gram(&mut self, sample: &[usize], q: &mut Mat, ledger: &mut Ledger) {
+        assert_eq!(q.nrows(), sample.len());
+        assert_eq!(q.ncols(), self.a.nrows());
+        ledger.time(Phase::KernelCompute, || {
+            match &self.at {
+                Some(at) => self.a.sampled_gram_t(at, sample, q),
+                None => self.a.sampled_gram(sample, q, &mut self.scratch),
+            }
+            let sample_norms: Vec<f64> = sample.iter().map(|&i| self.row_norms[i]).collect();
+            self.kernel.apply_block(q, &sample_norms, &self.row_norms);
+        });
+        ledger.add_flops(
+            Phase::KernelCompute,
+            2.0 * sample.len() as f64 * self.a.nnz() as f64
+                + self.kernel.mu() * sample.len() as f64 * self.m() as f64,
+        );
+        ledger.add_kernel_call(sample.len());
+    }
+
+    fn diag(&self) -> Vec<f64> {
+        (0..self.m())
+            .map(|i| {
+                self.kernel
+                    .apply_scalar(self.row_norms[i], self.row_norms[i], self.row_norms[i])
+            })
+            .collect()
+    }
+}
+
+/// Distributed oracle: this rank holds the column shard `A_p (m × n/P)`.
+///
+/// The linear gram is additive over column shards,
+/// `A_S Aᵀ = Σ_p A_S_p A_pᵀ`, so each rank computes its partial block,
+/// the blocks are sum-allreduced, and every rank applies the nonlinear
+/// map redundantly (the paper's Theorem 1/2 schedule). RBF needs full
+/// row norms, which are themselves a column-shard sum — allreduced once
+/// at construction.
+pub struct DistGram<'c, C: Communicator> {
+    shard: Csr,
+    /// Cached shard transpose for the sparse fast path.
+    shard_t: Option<Csr>,
+    kernel: Kernel,
+    /// Full-matrix row norms (allreduced at construction).
+    row_norms: Vec<f64>,
+    comm: &'c mut C,
+    algo: AllreduceAlgo,
+    scratch: Vec<f64>,
+}
+
+impl<'c, C: Communicator> DistGram<'c, C> {
+    /// Build from this rank's column shard. Collective: every rank must
+    /// call this at the same time (one allreduce for RBF row norms).
+    pub fn new(shard: Csr, kernel: Kernel, comm: &'c mut C, algo: AllreduceAlgo) -> Self {
+        let mut row_norms = shard.row_norms_sq();
+        allreduce_sum(comm, &mut row_norms, algo);
+        let shard_t = (shard.density() < TRANSPOSE_GRAM_MAX_DENSITY).then(|| shard.transpose());
+        DistGram {
+            shard,
+            shard_t,
+            kernel,
+            row_norms,
+            comm,
+            algo,
+            scratch: Vec::new(),
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.comm.rank()
+    }
+}
+
+impl<'c, C: Communicator> GramOracle for DistGram<'c, C> {
+    fn m(&self) -> usize {
+        self.shard.nrows()
+    }
+
+    fn gram(&mut self, sample: &[usize], q: &mut Mat, ledger: &mut Ledger) {
+        assert_eq!(q.nrows(), sample.len());
+        assert_eq!(q.ncols(), self.shard.nrows());
+        // Partial linear gram on the local shard.
+        ledger.time(Phase::KernelCompute, || {
+            match &self.shard_t {
+                Some(at) => self.shard.sampled_gram_t(at, sample, q),
+                None => self.shard.sampled_gram(sample, q, &mut self.scratch),
+            }
+        });
+        ledger.add_flops(
+            Phase::KernelCompute,
+            2.0 * sample.len() as f64 * self.shard.nnz() as f64,
+        );
+        // Sum-reduce the partial blocks (the per-iteration allreduce the
+        // s-step method amortizes).
+        ledger.time(Phase::Allreduce, || {
+            allreduce_sum(self.comm, q.data_mut(), self.algo);
+        });
+        // Redundant nonlinear map.
+        ledger.time(Phase::KernelCompute, || {
+            let sample_norms: Vec<f64> = sample.iter().map(|&i| self.row_norms[i]).collect();
+            self.kernel.apply_block(q, &sample_norms, &self.row_norms);
+        });
+        ledger.add_flops(
+            Phase::KernelCompute,
+            self.kernel.mu() * sample.len() as f64 * self.m() as f64,
+        );
+        ledger.add_kernel_call(sample.len());
+    }
+
+    fn diag(&self) -> Vec<f64> {
+        (0..self.m())
+            .map(|i| {
+                self.kernel
+                    .apply_scalar(self.row_norms[i], self.row_norms[i], self.row_norms[i])
+            })
+            .collect()
+    }
+
+    fn comm_stats(&self) -> CommStats {
+        self.comm.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::run_ranks;
+    use crate::data::gen_dense_classification;
+    use crate::rng::Pcg;
+
+    #[test]
+    fn local_gram_matches_direct_kernel() {
+        let ds = gen_dense_classification(20, 6, 0.0, 1);
+        let d = ds.a.to_dense();
+        for kernel in [Kernel::Linear, Kernel::paper_poly(), Kernel::paper_rbf()] {
+            let mut oracle = LocalGram::new(ds.a.clone(), kernel);
+            let sample = vec![4usize, 17, 4];
+            let mut q = Mat::zeros(3, 20);
+            let mut ledger = Ledger::new();
+            oracle.gram(&sample, &mut q, &mut ledger);
+            for (r, &sr) in sample.iter().enumerate() {
+                for i in 0..20 {
+                    let dot = crate::dense::dot(d.row(sr), d.row(i));
+                    let na = crate::dense::dot(d.row(sr), d.row(sr));
+                    let nb = crate::dense::dot(d.row(i), d.row(i));
+                    let expect = kernel.apply_scalar(dot, na, nb);
+                    assert!(
+                        (q[(r, i)] - expect).abs() < 1e-10,
+                        "{kernel:?} ({r},{i})"
+                    );
+                }
+            }
+            assert!(ledger.flops(Phase::KernelCompute) > 0.0);
+        }
+    }
+
+    #[test]
+    fn dist_gram_equals_local_gram_all_kernels() {
+        let ds = gen_dense_classification(24, 16, 0.0, 2);
+        for kernel in [Kernel::Linear, Kernel::paper_poly(), Kernel::paper_rbf()] {
+            let mut local = LocalGram::new(ds.a.clone(), kernel);
+            let sample = vec![1usize, 13, 22, 7];
+            let mut q_ref = Mat::zeros(4, 24);
+            local.gram(&sample, &mut q_ref, &mut Ledger::new());
+
+            for p in [2, 3, 4] {
+                let shards = ds.shard_cols(p);
+                let outs = run_ranks(p, |c| {
+                    let shard = shards[c.rank()].clone();
+                    let mut dist =
+                        DistGram::new(shard, kernel, c, AllreduceAlgo::Rabenseifner);
+                    let mut q = Mat::zeros(4, 24);
+                    let mut ledger = Ledger::new();
+                    dist.gram(&sample, &mut q, &mut ledger);
+                    (q, ledger.comm)
+                });
+                for (q, _) in &outs {
+                    for (a, b) in q.data().iter().zip(q_ref.data()) {
+                        assert!((a - b).abs() < 1e-9, "{kernel:?} p={p}: {a} vs {b}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dist_gram_counts_allreduce_traffic() {
+        let ds = gen_dense_classification(16, 8, 0.0, 3);
+        let shards = ds.shard_cols(4);
+        let stats = run_ranks(4, |c| {
+            let shard = shards[c.rank()].clone();
+            let mut dist =
+                DistGram::new(shard, Kernel::Linear, c, AllreduceAlgo::RecursiveDoubling);
+            let mut q = Mat::zeros(2, 16);
+            let mut ledger = Ledger::new();
+            dist.gram(&[0, 5], &mut q, &mut ledger);
+            dist.comm_stats()
+        });
+        for s in &stats {
+            // 1 norm allreduce (16 words) + 1 gram allreduce (32 words),
+            // recursive doubling sends w·log2(4) words each.
+            assert_eq!(s.allreduces, 2);
+            assert_eq!(s.words, (16 + 32) * 2);
+        }
+    }
+
+    #[test]
+    fn diag_matches_gram_diagonal() {
+        let ds = gen_dense_classification(10, 5, 0.0, 4);
+        for kernel in [Kernel::Linear, Kernel::paper_poly(), Kernel::paper_rbf()] {
+            let mut oracle = LocalGram::new(ds.a.clone(), kernel);
+            let diag = oracle.diag();
+            let sample: Vec<usize> = (0..10).collect();
+            let mut q = Mat::zeros(10, 10);
+            oracle.gram(&sample, &mut q, &mut Ledger::new());
+            for i in 0..10 {
+                assert!((diag[i] - q[(i, i)]).abs() < 1e-12, "{kernel:?} diag {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_shards_preserve_gram() {
+        // Sparse path: uniform sparse data, random sample, p shards.
+        let ds = crate::data::gen_uniform_sparse(
+            crate::data::SynthParams {
+                m: 30,
+                n: 200,
+                density: 0.05,
+                seed: 9,
+            },
+            crate::data::Task::Classification,
+        );
+        let mut rng = Pcg::seeded(5);
+        let sample = rng.sample_without_replacement(30, 6);
+        let kernel = Kernel::paper_rbf();
+        let mut local = LocalGram::new(ds.a.clone(), kernel);
+        let mut q_ref = Mat::zeros(6, 30);
+        local.gram(&sample, &mut q_ref, &mut Ledger::new());
+        let shards = ds.shard_cols(5);
+        let outs = run_ranks(5, |c| {
+            let shard = shards[c.rank()].clone();
+            let mut dist = DistGram::new(shard, kernel, c, AllreduceAlgo::Rabenseifner);
+            let mut q = Mat::zeros(6, 30);
+            dist.gram(&sample, &mut q, &mut Ledger::new());
+            q
+        });
+        for q in &outs {
+            for (a, b) in q.data().iter().zip(q_ref.data()) {
+                assert!((a - b).abs() < 1e-9);
+            }
+        }
+    }
+}

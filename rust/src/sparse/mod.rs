@@ -1,0 +1,692 @@
+//! Sparse-matrix substrate (CSR), replacing the paper's Intel MKL
+//! SparseBLAS dependency.
+//!
+//! The performance datasets (Table 3) are sparse and stored in CSR; the
+//! hot operation is the sampled gram product `A_S Aᵀ` (CSR × CSRᵀ with a
+//! dense `sb×m` output) plus the SpMV-like products in the gradient path.
+//! The matrix is partitioned in 1D-column layout across ranks, so we also
+//! provide column slicing with re-indexing.
+
+use crate::dense::Mat;
+
+/// Compressed Sparse Row matrix (`f64` values, `usize` indices).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    nrows: usize,
+    ncols: usize,
+    /// Row pointer, length `nrows + 1`.
+    indptr: Vec<usize>,
+    /// Column indices, sorted within each row.
+    indices: Vec<usize>,
+    /// Nonzero values, parallel to `indices`.
+    data: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from raw CSR arrays; validates invariants.
+    pub fn new(
+        nrows: usize,
+        ncols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<usize>,
+        data: Vec<f64>,
+    ) -> Csr {
+        assert_eq!(indptr.len(), nrows + 1, "CSR: indptr length");
+        assert_eq!(indices.len(), data.len(), "CSR: indices/data length");
+        assert_eq!(*indptr.last().unwrap(), indices.len(), "CSR: nnz mismatch");
+        debug_assert!(indptr.windows(2).all(|w| w[0] <= w[1]), "CSR: indptr monotone");
+        debug_assert!(indices.iter().all(|&j| j < ncols), "CSR: col index bound");
+        Csr {
+            nrows,
+            ncols,
+            indptr,
+            indices,
+            data,
+        }
+    }
+
+    /// An `m×n` matrix with no stored entries.
+    pub fn empty(nrows: usize, ncols: usize) -> Csr {
+        Csr {
+            nrows,
+            ncols,
+            indptr: vec![0; nrows + 1],
+            indices: Vec::new(),
+            data: Vec::new(),
+        }
+    }
+
+    /// Build from (row, col, value) triplets; duplicates are summed.
+    pub fn from_triplets(nrows: usize, ncols: usize, triplets: &[(usize, usize, f64)]) -> Csr {
+        let mut per_row: Vec<Vec<(usize, f64)>> = vec![Vec::new(); nrows];
+        for &(i, j, v) in triplets {
+            assert!(i < nrows && j < ncols, "triplet out of bounds");
+            per_row[i].push((j, v));
+        }
+        let mut indptr = Vec::with_capacity(nrows + 1);
+        let mut indices = Vec::with_capacity(triplets.len());
+        let mut data = Vec::with_capacity(triplets.len());
+        indptr.push(0);
+        for row in &mut per_row {
+            row.sort_unstable_by_key(|&(j, _)| j);
+            let mut k = 0;
+            while k < row.len() {
+                let j = row[k].0;
+                let mut v = 0.0;
+                while k < row.len() && row[k].0 == j {
+                    v += row[k].1;
+                    k += 1;
+                }
+                if v != 0.0 {
+                    indices.push(j);
+                    data.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        Csr {
+            nrows,
+            ncols,
+            indptr,
+            indices,
+            data,
+        }
+    }
+
+    /// Convert a dense matrix, dropping exact zeros.
+    pub fn from_dense(a: &Mat) -> Csr {
+        let mut indptr = Vec::with_capacity(a.nrows() + 1);
+        let mut indices = Vec::new();
+        let mut data = Vec::new();
+        indptr.push(0);
+        for i in 0..a.nrows() {
+            for (j, &v) in a.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    indices.push(j);
+                    data.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        Csr {
+            nrows: a.nrows(),
+            ncols: a.ncols(),
+            indptr,
+            indices,
+            data,
+        }
+    }
+
+    /// Materialize as dense.
+    pub fn to_dense(&self) -> Mat {
+        let mut out = Mat::zeros(self.nrows, self.ncols);
+        for i in 0..self.nrows {
+            let row = out.row_mut(i);
+            for (j, v) in self.row_iter(i) {
+                row[j] = v;
+            }
+        }
+        out
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    /// Number of stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Fraction of entries stored.
+    pub fn density(&self) -> f64 {
+        if self.nrows == 0 || self.ncols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.nrows as f64 * self.ncols as f64)
+    }
+
+    /// Stored entries of row `i` as `(col, value)` pairs.
+    #[inline]
+    pub fn row_iter(&self, i: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
+        let lo = self.indptr[i];
+        let hi = self.indptr[i + 1];
+        self.indices[lo..hi]
+            .iter()
+            .copied()
+            .zip(self.data[lo..hi].iter().copied())
+    }
+
+    /// Number of stored entries in row `i`.
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.indptr[i + 1] - self.indptr[i]
+    }
+
+    /// `(cols, vals)` slices for row `i` — the zero-overhead accessor used
+    /// in the hot loops.
+    #[inline]
+    pub fn row_parts(&self, i: usize) -> (&[usize], &[f64]) {
+        let lo = self.indptr[i];
+        let hi = self.indptr[i + 1];
+        (&self.indices[lo..hi], &self.data[lo..hi])
+    }
+
+    /// Sparse dot of rows `i` of `self` and `k` of `other` (merge join;
+    /// both index lists are sorted).
+    pub fn row_dot(&self, i: usize, other: &Csr, k: usize) -> f64 {
+        let (ci, vi) = self.row_parts(i);
+        let (ck, vk) = other.row_parts(k);
+        let mut a = 0;
+        let mut b = 0;
+        let mut s = 0.0;
+        while a < ci.len() && b < ck.len() {
+            match ci[a].cmp(&ck[b]) {
+                std::cmp::Ordering::Less => a += 1,
+                std::cmp::Ordering::Greater => b += 1,
+                std::cmp::Ordering::Equal => {
+                    s += vi[a] * vk[b];
+                    a += 1;
+                    b += 1;
+                }
+            }
+        }
+        s
+    }
+
+    /// `y ← S x` (SpMV).
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        for i in 0..self.nrows {
+            let (cols, vals) = self.row_parts(i);
+            let mut s = 0.0;
+            for (&j, &v) in cols.iter().zip(vals) {
+                s += v * x[j];
+            }
+            y[i] = s;
+        }
+    }
+
+    /// `y ← Sᵀ x` (transpose SpMV, scatter form).
+    pub fn spmv_t(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.nrows);
+        assert_eq!(y.len(), self.ncols);
+        y.fill(0.0);
+        for i in 0..self.nrows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let (cols, vals) = self.row_parts(i);
+            for (&j, &v) in cols.iter().zip(vals) {
+                y[j] += xi * v;
+            }
+        }
+    }
+
+    /// Dense output `C ← S Bᵀ_dense` where `B` is `n×k` dense row-major and
+    /// `C` is `nrows×n` — i.e. `C[i][r] = Σ_j S[i,j] B[r,j]`.
+    ///
+    /// This is the gram hot path when the *sampled* side is dense
+    /// (`B = A_S` gathered rows) and `self` is the big CSR shard.
+    pub fn spmm_dense_t(&self, b: &Mat, c: &mut Mat) {
+        assert_eq!(b.ncols(), self.ncols, "spmm_dense_t: inner dim");
+        assert_eq!(c.nrows(), self.nrows);
+        assert_eq!(c.ncols(), b.nrows());
+        for i in 0..self.nrows {
+            let (cols, vals) = self.row_parts(i);
+            let crow = c.row_mut(i);
+            for (r, cir) in crow.iter_mut().enumerate() {
+                let brow = b.row(r);
+                let mut s = 0.0;
+                for (&j, &v) in cols.iter().zip(vals) {
+                    s += v * brow[j];
+                }
+                *cir = s;
+            }
+        }
+    }
+
+    /// Sampled gram block `Q ← S_rows(sample) · Sᵀ` as a dense
+    /// `sample.len()×nrows` matrix: `Q[r][i] = <S[sample_r,:], S[i,:]>`.
+    ///
+    /// Uses a scatter of the (short) sampled row into a dense accumulator,
+    /// then a gather pass over all rows — O(nnz(sample) + nnz(S)) per
+    /// sampled row in the worst case but with excellent locality, matching
+    /// what MKL's CSR SpGEMM does for this shape.
+    pub fn sampled_gram(&self, sample: &[usize], q: &mut Mat, scratch: &mut Vec<f64>) {
+        assert_eq!(q.nrows(), sample.len());
+        assert_eq!(q.ncols(), self.nrows);
+        scratch.clear();
+        scratch.resize(self.ncols, 0.0);
+        for (r, &sr) in sample.iter().enumerate() {
+            // Scatter sampled row into dense scratch.
+            let (scols, svals) = self.row_parts(sr);
+            for (&j, &v) in scols.iter().zip(svals) {
+                scratch[j] = v;
+            }
+            // Dot every row against scratch.
+            let qrow = q.row_mut(r);
+            for i in 0..self.nrows {
+                let (cols, vals) = self.row_parts(i);
+                let mut s = 0.0;
+                for (&j, &v) in cols.iter().zip(vals) {
+                    s += v * scratch[j];
+                }
+                qrow[i] = s;
+            }
+            // Un-scatter.
+            for &j in scols {
+                scratch[j] = 0.0;
+            }
+        }
+    }
+
+    /// Sampled gram block via a precomputed transpose (`at = self.T`):
+    /// `q[r][i] = Σ_j self[sr, j] · at[j, i]`.
+    ///
+    /// Cost is `Σ_{j ∈ row(sr)} nnz(col j)` per sampled row — for a
+    /// uniformly sparse matrix with density `f` that is `f²·m·n` versus
+    /// [`Csr::sampled_gram`]'s `f·m·n`, i.e. a `1/f` speedup (≈100× at
+    /// 1% density). The scatter-dot variant stays preferable for dense
+    /// data; `LocalGram`/`DistGram` pick per density (§Perf).
+    pub fn sampled_gram_t(&self, at: &Csr, sample: &[usize], q: &mut Mat) {
+        assert_eq!(at.nrows(), self.ncols(), "at must be self.transpose()");
+        assert_eq!(at.ncols(), self.nrows(), "at must be self.transpose()");
+        assert_eq!(q.nrows(), sample.len());
+        assert_eq!(q.ncols(), self.nrows());
+        for (r, &sr) in sample.iter().enumerate() {
+            let qrow = q.row_mut(r);
+            qrow.fill(0.0);
+            let (cols, vals) = self.row_parts(sr);
+            for (&j, &v) in cols.iter().zip(vals) {
+                let (rows_i, ws) = at.row_parts(j);
+                for (&i, &w) in rows_i.iter().zip(ws) {
+                    qrow[i] += v * w;
+                }
+            }
+        }
+    }
+
+    /// Gather the given rows into a new CSR (forms `A_S`).
+    pub fn gather_rows(&self, rows: &[usize]) -> Csr {
+        let mut indptr = Vec::with_capacity(rows.len() + 1);
+        let mut indices = Vec::new();
+        let mut data = Vec::new();
+        indptr.push(0);
+        for &i in rows {
+            let (cols, vals) = self.row_parts(i);
+            indices.extend_from_slice(cols);
+            data.extend_from_slice(vals);
+            indptr.push(indices.len());
+        }
+        Csr {
+            nrows: rows.len(),
+            ncols: self.ncols,
+            indptr,
+            indices,
+            data,
+        }
+    }
+
+    /// Slice columns `[c0, c1)`, re-indexing columns to start at zero —
+    /// this is the 1D-column partitioning step (each rank keeps `n/P`
+    /// features of every sample).
+    pub fn slice_cols(&self, c0: usize, c1: usize) -> Csr {
+        assert!(c0 <= c1 && c1 <= self.ncols);
+        let mut indptr = Vec::with_capacity(self.nrows + 1);
+        let mut indices = Vec::new();
+        let mut data = Vec::new();
+        indptr.push(0);
+        for i in 0..self.nrows {
+            let (cols, vals) = self.row_parts(i);
+            // Rows are sorted: binary search the window.
+            let lo = cols.partition_point(|&j| j < c0);
+            let hi = cols.partition_point(|&j| j < c1);
+            for k in lo..hi {
+                indices.push(cols[k] - c0);
+                data.push(vals[k]);
+            }
+            indptr.push(indices.len());
+        }
+        Csr {
+            nrows: self.nrows,
+            ncols: c1 - c0,
+            indptr,
+            indices,
+            data,
+        }
+    }
+
+    /// Out-of-place transpose (two-pass counting sort; O(nnz + n)).
+    pub fn transpose(&self) -> Csr {
+        let mut counts = vec![0usize; self.ncols + 1];
+        for &j in &self.indices {
+            counts[j + 1] += 1;
+        }
+        for j in 0..self.ncols {
+            counts[j + 1] += counts[j];
+        }
+        let indptr = counts.clone();
+        let mut indices = vec![0usize; self.nnz()];
+        let mut data = vec![0.0; self.nnz()];
+        let mut cursor = counts;
+        for i in 0..self.nrows {
+            for (j, v) in self.row_iter(i) {
+                let dst = cursor[j];
+                indices[dst] = i;
+                data[dst] = v;
+                cursor[j] += 1;
+            }
+        }
+        Csr {
+            nrows: self.ncols,
+            ncols: self.nrows,
+            indptr,
+            indices,
+            data,
+        }
+    }
+
+    /// Squared Euclidean norm of every row (cached for the RBF map).
+    pub fn row_norms_sq(&self) -> Vec<f64> {
+        (0..self.nrows)
+            .map(|i| {
+                let (_, vals) = self.row_parts(i);
+                vals.iter().map(|v| v * v).sum()
+            })
+            .collect()
+    }
+
+    /// Scale row `i` by `s` in place (used for `diag(y)·A`).
+    pub fn scale_row(&mut self, i: usize, s: f64) {
+        let lo = self.indptr[i];
+        let hi = self.indptr[i + 1];
+        for v in &mut self.data[lo..hi] {
+            *v *= s;
+        }
+    }
+
+    /// Number of stored entries per column (the nonzero histogram used by
+    /// the load-imbalance analysis and the projected-scaling engine).
+    pub fn col_nnz_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.ncols];
+        for &j in &self.indices {
+            counts[j] += 1;
+        }
+        counts
+    }
+
+    /// Max nonzeros held by any of `p` equal-width column shards, without
+    /// materializing the shards (cheap enough to sweep `p` to 4096).
+    pub fn max_shard_nnz(&self, p: usize) -> usize {
+        assert!(p > 0);
+        let counts = self.col_nnz_counts();
+        let width = self.ncols.div_ceil(p);
+        (0..p)
+            .map(|r| {
+                let c0 = (r * width).min(self.ncols);
+                let c1 = ((r + 1) * width).min(self.ncols);
+                counts[c0..c1].iter().sum()
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Split into `p` column shards of near-equal width (1D-column layout).
+    /// Shard `r` gets columns `[r*ceil(n/p), ...)` — the paper's layout
+    /// where each MPI process stores roughly `n/P` features.
+    pub fn partition_cols(&self, p: usize) -> Vec<Csr> {
+        assert!(p > 0);
+        let n = self.ncols;
+        let width = n.div_ceil(p);
+        (0..p)
+            .map(|r| {
+                let c0 = (r * width).min(n);
+                let c1 = ((r + 1) * width).min(n);
+                self.slice_cols(c0, c1)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dense::gemm_nt;
+    use crate::rng::Pcg;
+
+    fn rand_sparse(r: &mut Pcg, m: usize, n: usize, density: f64) -> Csr {
+        let mut trips = Vec::new();
+        for i in 0..m {
+            for j in 0..n {
+                if r.next_f64() < density {
+                    trips.push((i, j, r.next_gaussian()));
+                }
+            }
+        }
+        Csr::from_triplets(m, n, &trips)
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let mut r = Pcg::seeded(41);
+        let s = rand_sparse(&mut r, 13, 17, 0.3);
+        assert_eq!(Csr::from_dense(&s.to_dense()), s);
+    }
+
+    #[test]
+    fn triplets_sum_duplicates() {
+        let s = Csr::from_triplets(2, 2, &[(0, 1, 2.0), (0, 1, 3.0), (1, 0, 1.0)]);
+        assert_eq!(s.nnz(), 2);
+        assert_eq!(s.to_dense()[(0, 1)], 5.0);
+    }
+
+    #[test]
+    fn triplets_drop_cancelled() {
+        let s = Csr::from_triplets(1, 2, &[(0, 0, 2.0), (0, 0, -2.0), (0, 1, 1.0)]);
+        assert_eq!(s.nnz(), 1);
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let mut r = Pcg::seeded(43);
+        for _ in 0..20 {
+            let m = r.gen_range(1, 30);
+            let n = r.gen_range(1, 30);
+            let s = rand_sparse(&mut r, m, n, 0.4);
+            let d = s.to_dense();
+            let x: Vec<f64> = (0..n).map(|_| r.next_gaussian()).collect();
+            let mut y1 = vec![0.0; m];
+            let mut y2 = vec![0.0; m];
+            s.spmv(&x, &mut y1);
+            crate::dense::gemv(&d, &x, &mut y2);
+            for (a, b) in y1.iter().zip(&y2) {
+                assert!((a - b).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn spmv_t_matches_dense() {
+        let mut r = Pcg::seeded(47);
+        for _ in 0..20 {
+            let m = r.gen_range(1, 30);
+            let n = r.gen_range(1, 30);
+            let s = rand_sparse(&mut r, m, n, 0.4);
+            let d = s.to_dense();
+            let x: Vec<f64> = (0..m).map(|_| r.next_gaussian()).collect();
+            let mut y1 = vec![0.0; n];
+            let mut y2 = vec![0.0; n];
+            s.spmv_t(&x, &mut y1);
+            crate::dense::gemv_t(&d, &x, &mut y2);
+            for (a, b) in y1.iter().zip(&y2) {
+                assert!((a - b).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_involution_and_correctness() {
+        let mut r = Pcg::seeded(53);
+        let s = rand_sparse(&mut r, 11, 7, 0.35);
+        let t = s.transpose();
+        assert_eq!(t.nrows(), 7);
+        assert_eq!(t.to_dense(), s.to_dense().transpose());
+        assert_eq!(t.transpose(), s);
+    }
+
+    #[test]
+    fn sampled_gram_matches_dense_gemm() {
+        let mut r = Pcg::seeded(59);
+        for _ in 0..10 {
+            let m = r.gen_range(2, 25);
+            let n = r.gen_range(1, 25);
+            let s = rand_sparse(&mut r, m, n, 0.4);
+            let d = s.to_dense();
+            let k = r.gen_range(1, m);
+            let sample = r.sample_without_replacement(m, k);
+            let mut q = Mat::zeros(k, m);
+            let mut scratch = Vec::new();
+            s.sampled_gram(&sample, &mut q, &mut scratch);
+            let ds = d.gather_rows(&sample);
+            let mut qref = Mat::zeros(k, m);
+            gemm_nt(&ds, &d, &mut qref);
+            for (a, b) in q.data().iter().zip(qref.data()) {
+                assert!((a - b).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn sampled_gram_t_matches_scatter_variant() {
+        let mut r = Pcg::seeded(211);
+        for density in [0.02, 0.2, 0.7] {
+            let m = r.gen_range(4, 30);
+            let n = r.gen_range(2, 40);
+            let s = rand_sparse(&mut r, m, n, density);
+            let at = s.transpose();
+            let k = r.gen_range(1, m);
+            let sample = r.sample_without_replacement(m, k);
+            let mut q1 = Mat::zeros(k, m);
+            let mut q2 = Mat::zeros(k, m);
+            let mut scratch = Vec::new();
+            s.sampled_gram(&sample, &mut q1, &mut scratch);
+            s.sampled_gram_t(&at, &sample, &mut q2);
+            for (a, b) in q1.data().iter().zip(q2.data()) {
+                assert!((a - b).abs() < 1e-12, "density {density}");
+            }
+        }
+    }
+
+    #[test]
+    fn slice_cols_reindexes() {
+        let s = Csr::from_triplets(2, 6, &[(0, 0, 1.0), (0, 3, 2.0), (1, 4, 3.0)]);
+        let sl = s.slice_cols(3, 6);
+        assert_eq!(sl.ncols(), 3);
+        assert_eq!(sl.to_dense()[(0, 0)], 2.0);
+        assert_eq!(sl.to_dense()[(1, 1)], 3.0);
+    }
+
+    #[test]
+    fn partition_cols_reassembles() {
+        let mut r = Pcg::seeded(61);
+        let s = rand_sparse(&mut r, 9, 23, 0.3);
+        for p in [1, 2, 3, 5, 23, 40] {
+            let shards = s.partition_cols(p);
+            assert_eq!(shards.len(), p);
+            let total_cols: usize = shards.iter().map(|sh| sh.ncols()).sum();
+            assert_eq!(total_cols, 23);
+            let total_nnz: usize = shards.iter().map(|sh| sh.nnz()).sum();
+            assert_eq!(total_nnz, s.nnz());
+            // Gram over shards sums to full gram (the allreduce identity).
+            let full = {
+                let d = s.to_dense();
+                let mut g = Mat::zeros(9, 9);
+                gemm_nt(&d, &d, &mut g);
+                g
+            };
+            let mut acc = Mat::zeros(9, 9);
+            for sh in &shards {
+                let d = sh.to_dense();
+                let mut g = Mat::zeros(9, 9);
+                gemm_nt(&d, &d, &mut g);
+                for (a, b) in acc.data_mut().iter_mut().zip(g.data()) {
+                    *a += b;
+                }
+            }
+            for (a, b) in acc.data().iter().zip(full.data()) {
+                assert!((a - b).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn max_shard_nnz_matches_materialized_shards() {
+        let mut r = Pcg::seeded(101);
+        let s = rand_sparse(&mut r, 12, 37, 0.25);
+        for p in [1, 2, 3, 5, 8, 37, 64] {
+            let expect = s
+                .partition_cols(p)
+                .iter()
+                .map(|sh| sh.nnz())
+                .max()
+                .unwrap();
+            assert_eq!(s.max_shard_nnz(p), expect, "p={p}");
+        }
+    }
+
+    #[test]
+    fn col_nnz_counts_sum_to_nnz() {
+        let mut r = Pcg::seeded(103);
+        let s = rand_sparse(&mut r, 9, 14, 0.3);
+        assert_eq!(s.col_nnz_counts().iter().sum::<usize>(), s.nnz());
+    }
+
+    #[test]
+    fn row_dot_matches_dense() {
+        let mut r = Pcg::seeded(67);
+        let s = rand_sparse(&mut r, 10, 15, 0.4);
+        let d = s.to_dense();
+        for i in 0..10 {
+            for k in 0..10 {
+                let expect = crate::dense::dot(d.row(i), d.row(k));
+                assert!((s.row_dot(i, &s, k) - expect).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn row_norms_and_scale_row() {
+        let mut s = Csr::from_triplets(2, 3, &[(0, 0, 3.0), (0, 2, 4.0), (1, 1, 2.0)]);
+        assert_eq!(s.row_norms_sq(), vec![25.0, 4.0]);
+        s.scale_row(0, -1.0);
+        assert_eq!(s.to_dense()[(0, 0)], -3.0);
+        assert_eq!(s.row_norms_sq(), vec![25.0, 4.0]);
+    }
+
+    #[test]
+    fn gather_rows_works() {
+        let mut r = Pcg::seeded(71);
+        let s = rand_sparse(&mut r, 8, 5, 0.5);
+        let g = s.gather_rows(&[7, 0, 3]);
+        let gd = g.to_dense();
+        let sd = s.to_dense();
+        assert_eq!(gd.row(0), sd.row(7));
+        assert_eq!(gd.row(1), sd.row(0));
+        assert_eq!(gd.row(2), sd.row(3));
+    }
+
+    #[test]
+    fn density_and_empty() {
+        let e = Csr::empty(4, 5);
+        assert_eq!(e.nnz(), 0);
+        assert_eq!(e.density(), 0.0);
+        let s = Csr::from_triplets(2, 2, &[(0, 0, 1.0), (1, 1, 1.0)]);
+        assert!((s.density() - 0.5).abs() < 1e-15);
+    }
+}

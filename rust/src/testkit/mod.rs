@@ -1,0 +1,150 @@
+//! A minimal property-testing framework (proptest is unavailable in the
+//! offline build).
+//!
+//! `check(name, cases, |g| ...)` runs a property against `cases` randomly
+//! generated inputs drawn through the [`Gen`] handle. On failure it re-runs
+//! the property with the failing seed to confirm, then panics with the
+//! seed so the case can be replayed exactly (`Gen::replay(seed)`).
+
+use crate::rng::Pcg;
+
+/// Random input source handed to properties.
+pub struct Gen {
+    rng: Pcg,
+    /// Seed that reproduces this case.
+    pub seed: u64,
+}
+
+impl Gen {
+    /// Rebuild the generator for a failing seed (for debugging).
+    pub fn replay(seed: u64) -> Gen {
+        Gen {
+            rng: Pcg::new(seed, 0xC0FFEE),
+            seed,
+        }
+    }
+
+    /// Size in `[lo, hi)` — use for dimensions.
+    pub fn size(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.gen_range(lo, hi)
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.next_f64()
+    }
+
+    /// Standard normal.
+    pub fn gaussian(&mut self) -> f64 {
+        self.rng.next_gaussian()
+    }
+
+    /// Vector of standard normals.
+    pub fn gaussian_vec(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.rng.next_gaussian()).collect()
+    }
+
+    /// Boolean with probability `p`.
+    pub fn bool_with(&mut self, p: f64) -> bool {
+        self.rng.next_f64() < p
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.gen_below(xs.len())]
+    }
+
+    /// Distinct indices from `[0, m)`.
+    pub fn sample(&mut self, m: usize, k: usize) -> Vec<usize> {
+        self.rng.sample_without_replacement(m, k)
+    }
+
+    /// Access the underlying PCG (for generators not covered above).
+    pub fn rng(&mut self) -> &mut Pcg {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` against `cases` random inputs. Panics (with replay seed) on
+/// the first failing case. The property signals failure by panicking.
+pub fn check(name: &str, cases: u64, mut prop: impl FnMut(&mut Gen)) {
+    // Derive per-case seeds from the property name so adding properties
+    // does not shift the cases other properties see.
+    let mut root = {
+        let mut h = 0xcbf29ce484222325u64; // FNV-1a
+        for b in name.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        Pcg::new(h, 0x7E57)
+    };
+    for case in 0..cases {
+        let seed = root.next_u64();
+        let mut g = Gen::replay(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| err.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed at case {case} (replay seed {seed:#x}):\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Assert two slices are elementwise close.
+#[track_caller]
+pub fn assert_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let scale = x.abs().max(y.abs()).max(1.0);
+        assert!(
+            (x - y).abs() <= tol * scale,
+            "{what}[{i}]: {x} vs {y} (tol {tol}, scale {scale})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut n = 0;
+        check("count", 25, |_| n += 1);
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    fn check_is_deterministic() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        check("det", 10, |g| a.push(g.size(0, 1000)));
+        check("det", 10, |g| b.push(g.size(0, 1000)));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn check_reports_failure() {
+        check("fails", 10, |g| {
+            let x = g.size(0, 100);
+            assert!(x < 90, "x too big: {x}");
+        });
+    }
+
+    #[test]
+    fn assert_close_accepts_equal() {
+        assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-12], 1e-9, "eq");
+    }
+
+    #[test]
+    #[should_panic]
+    fn assert_close_rejects_far() {
+        assert_close(&[1.0], &[2.0], 1e-9, "far");
+    }
+}

