@@ -93,6 +93,41 @@ fn main() {
         q.data()[0]
     });
 
+    section("gram engine row cache (rbf, DCD-like with-replacement stream)");
+    // A with-replacement access stream over a working set smaller than m,
+    // mimicking DCD coordinate sampling on a skewed active set: repeats
+    // are common, so the cache converts kernel recomputes into row copies.
+    let stream: Vec<Vec<usize>> = {
+        let mut rng = Pcg::seeded(7);
+        (0..64)
+            .map(|_| (0..8).map(|_| rng.gen_below(200)).collect())
+            .collect()
+    };
+    for cache_rows in [0usize, 64, 256] {
+        let mut oracle = LocalGram::with_cache(ds.a.clone(), Kernel::paper_rbf(), cache_rows);
+        let mut qq = Mat::zeros(8, 2000);
+        let mut stats = kcd::costmodel::CacheStats::default();
+        let r = bench(
+            &format!("gram stream 64x8 rows, cache={cache_rows}"),
+            &cfg,
+            || {
+                let mut ledger = Ledger::new();
+                for s in &stream {
+                    oracle.gram(s, &mut qq, &mut ledger);
+                }
+                stats = ledger.cache;
+                qq.data()[0]
+            },
+        );
+        println!(
+            "  → hit rate {:.1}% ({} hits / {} misses), median {:.3}ms",
+            100.0 * stats.hit_rate(),
+            stats.hits,
+            stats.misses,
+            r.median() * 1e3
+        );
+    }
+
     section("allreduce algorithms (P=8 threads, w=4096)");
     for algo in [
         AllreduceAlgo::Rabenseifner,

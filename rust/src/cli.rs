@@ -15,6 +15,44 @@ use crate::data::{paper_dataset, paper_datasets, read_libsvm, Dataset, Task};
 use crate::kernelfn::Kernel;
 use crate::solvers::{krr_exact, objective::SvmObjective, LocalGram, SvmVariant};
 
+/// Every flag the CLI accepts, with its arity. One table instead of the
+/// old "flags that never take a value" list: an unknown flag is a hard
+/// error (instead of silently swallowing the next token), and adding a
+/// flag means adding one row here — valueless flags can no longer be
+/// mis-parsed by omission.
+const KNOWN_FLAGS: &[(&str, bool /* takes a value */)] = &[
+    ("dataset", true),
+    ("scale", true),
+    ("kernel", true),
+    ("problem", true),
+    ("c", true),
+    ("lambda", true),
+    ("b", true),
+    ("h", true),
+    ("s", true),
+    ("p", true),
+    ("p-list", true),
+    ("s-list", true),
+    ("algo", true),
+    ("machine", true),
+    ("seed", true),
+    ("every", true),
+    ("measured-limit", true),
+    ("gram-cache-rows", true),
+    ("config", true),
+    ("csv", false),
+    ("quick", false),
+    ("force", false),
+    ("verbose", false),
+];
+
+fn flag_spec(name: &str) -> Option<bool> {
+    KNOWN_FLAGS
+        .iter()
+        .find(|(n, _)| *n == name)
+        .map(|(_, takes_value)| *takes_value)
+}
+
 /// Parsed command line: subcommand, `--key value` flags, positionals.
 #[derive(Debug, Default)]
 pub struct Args {
@@ -25,25 +63,35 @@ pub struct Args {
 
 impl Args {
     /// Parse `argv[1..]`. Flags are `--key value` or `--key=value`;
-    /// `--flag` followed by another flag (or end) is a boolean `true`.
+    /// boolean flags stand alone. Every flag is validated against
+    /// [`KNOWN_FLAGS`]: unknown names and missing values are errors.
     pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
         let mut out = Args::default();
         let mut it = argv.into_iter().peekable();
         if let Some(cmd) = it.next() {
             out.command = cmd;
         }
-        // Flags that never take a value (so `--csv positional` parses).
-        const BOOLEAN: &[&str] = &["csv", "quick", "force", "verbose"];
         while let Some(tok) = it.next() {
             if let Some(name) = tok.strip_prefix("--") {
                 if let Some((k, v)) = name.split_once('=') {
+                    let takes_value = flag_spec(k)
+                        .ok_or_else(|| anyhow!("unknown flag '--{k}'\n\n{USAGE}"))?;
+                    if !takes_value && !matches!(v, "true" | "false") {
+                        bail!("--{k} is a boolean flag; got '--{k}={v}'");
+                    }
                     out.flags.insert(k.to_string(), v.to_string());
-                } else if !BOOLEAN.contains(&name)
-                    && it.peek().map(|n| !n.starts_with("--")).unwrap_or(false)
-                {
-                    out.flags.insert(name.to_string(), it.next().unwrap());
                 } else {
-                    out.flags.insert(name.to_string(), "true".to_string());
+                    let takes_value = flag_spec(name)
+                        .ok_or_else(|| anyhow!("unknown flag '--{name}'\n\n{USAGE}"))?;
+                    if takes_value {
+                        let value = it
+                            .next()
+                            .filter(|n| !n.starts_with("--"))
+                            .ok_or_else(|| anyhow!("--{name} expects a value"))?;
+                        out.flags.insert(name.to_string(), value);
+                    } else {
+                        out.flags.insert(name.to_string(), "true".to_string());
+                    }
                 }
             } else {
                 out.positional.push(tok);
@@ -119,6 +167,10 @@ COMMON FLAGS:
   --algo <a>        rabenseifner | rd | linear                  [rabenseifner]
   --machine <m>     cray-ex | cloud                             [cray-ex]
   --seed <n>        Coordinate-stream seed.
+  --gram-cache-rows <n>  Kernel-row LRU cache capacity (0 = off)  [0]
+                    train-svm / train-krr / convergence only; the
+                    scaling and breakdown sweeps always run uncached
+                    (hit patterns cannot be projected analytically).
   --csv             Emit CSV instead of markdown tables.
   --config <file>   TOML-subset config (flags override).
 ";
@@ -149,7 +201,7 @@ fn load_config(args: &Args) -> Result<Config> {
     // CLI flags override file values under their own names.
     for key in [
         "dataset", "scale", "kernel", "problem", "c", "lambda", "b", "h", "s", "p", "algo",
-        "machine", "seed",
+        "machine", "seed", "gram-cache-rows",
     ] {
         if let Some(v) = args.flag(key) {
             cfg.set(key, v);
@@ -219,6 +271,7 @@ fn solver_from(cfg: &Config) -> SolverSpec {
         s: cfg.usize("s").unwrap_or(1),
         h: cfg.usize("h").unwrap_or(256),
         seed: cfg.usize("seed").unwrap_or(0x5EED) as u64,
+        cache_rows: cfg.usize("gram-cache-rows").unwrap_or(0),
     }
 }
 
@@ -280,6 +333,18 @@ fn cmd_train_svm(args: &Args) -> Result<String> {
         machine.name,
         res.wall_secs
     ));
+    if solver.cache_rows > 0 {
+        let cs = res.critical.cache;
+        out.push_str(&format!(
+            "gram cache       = {} rows: {:.1}% hit rate ({} hits / {} misses), \
+             {} allreduce bytes saved\n",
+            solver.cache_rows,
+            100.0 * cs.hit_rate(),
+            cs.hits,
+            cs.misses,
+            cs.bytes_saved()
+        ));
+    }
     Ok(out)
 }
 
@@ -565,6 +630,50 @@ mod tests {
         let a = Args::parse(argv("x --p-list=1,2,4 --h 32")).unwrap();
         assert_eq!(a.usize_list_flag("p-list", &[]).unwrap(), vec![1, 2, 4]);
         assert_eq!(a.usize_flag("h", 0).unwrap(), 32);
+    }
+
+    #[test]
+    fn rejects_unknown_flags_with_clear_error() {
+        let err = Args::parse(argv("scaling --bogus 3")).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown flag '--bogus'"));
+        let err = Args::parse(argv("scaling --csv=maybe")).unwrap_err();
+        assert!(format!("{err:#}").contains("boolean"));
+    }
+
+    #[test]
+    fn rejects_missing_values() {
+        assert!(Args::parse(argv("train-svm --h")).is_err());
+        assert!(Args::parse(argv("train-svm --h --csv")).is_err());
+    }
+
+    #[test]
+    fn gram_cache_rows_flag_parses_through_strict_path() {
+        let a = Args::parse(argv("train-svm --gram-cache-rows 64 --csv")).unwrap();
+        assert_eq!(a.usize_flag("gram-cache-rows", 0).unwrap(), 64);
+        assert!(a.bool_flag("csv"));
+    }
+
+    #[test]
+    fn train_svm_with_cache_reports_hits_and_same_gap() {
+        let base = run(argv(
+            "train-svm --dataset diabetes --scale 0.1 --kernel rbf --h 200 --s 8 --p 2",
+        ))
+        .unwrap();
+        let cached = run(argv(
+            "train-svm --dataset diabetes --scale 0.1 --kernel rbf --h 200 --s 8 --p 2 \
+             --gram-cache-rows 32",
+        ))
+        .unwrap();
+        assert!(cached.contains("gram cache"), "{cached}");
+        assert!(cached.contains("hit rate"), "{cached}");
+        // Bit-identical solve ⇒ identical reported duality gap line.
+        let gap = |out: &str| {
+            out.lines()
+                .find(|l| l.starts_with("duality gap"))
+                .unwrap()
+                .to_string()
+        };
+        assert_eq!(gap(&base), gap(&cached));
     }
 
     #[test]

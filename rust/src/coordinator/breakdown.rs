@@ -55,7 +55,12 @@ pub fn breakdown(
         }
         let projection = match engine {
             Engine::Measured => {
-                let solver = SolverSpec { s, h, seed: 0xB0 };
+                let solver = SolverSpec {
+                    s,
+                    h,
+                    seed: 0xB0,
+                    cache_rows: 0,
+                };
                 run_distributed(ds, kernel, problem, &solver, p, algo, machine).projection
             }
             Engine::Projected => {

@@ -44,6 +44,22 @@ pub struct SolverSpec {
     pub h: usize,
     /// Coordinate-stream seed (equal seeds ⇒ comparable runs).
     pub seed: u64,
+    /// Kernel-row LRU cache capacity for the gram engine; `0` disables
+    /// it (and reproduces the legacy cost accounting exactly). Must be
+    /// identical on every rank — the launcher threads the same value to
+    /// all of them. Results are bit-identical with the cache on or off.
+    pub cache_rows: usize,
+}
+
+impl Default for SolverSpec {
+    fn default() -> Self {
+        SolverSpec {
+            s: 1,
+            h: 256,
+            seed: 0x5EED,
+            cache_rows: 0,
+        }
+    }
 }
 
 /// Result of one run.
@@ -107,7 +123,7 @@ pub fn run_serial(
 ) -> RunResult {
     let t0 = std::time::Instant::now();
     let mut ledger = Ledger::new();
-    let mut oracle = LocalGram::new(ds.a.clone(), kernel);
+    let mut oracle = LocalGram::with_cache(ds.a.clone(), kernel, solver.cache_rows);
     let alpha = run_solver(&mut oracle, &ds.y, problem, solver, &mut ledger);
     let mut comm = SelfComm::new();
     let _ = &mut comm;
@@ -144,7 +160,7 @@ pub fn run_distributed(
     let outs: Vec<(Vec<f64>, Ledger)> = run_ranks(p, |comm| {
         let shard = shards[comm.rank()].clone();
         let mut ledger = Ledger::new();
-        let mut oracle = DistGram::new(shard, kernel, comm, algo);
+        let mut oracle = DistGram::with_cache(shard, kernel, comm, algo, solver.cache_rows);
         let alpha = run_solver(&mut oracle, &ds.y, problem, solver, &mut ledger);
         ledger.comm = oracle.comm_stats();
         (alpha, ledger)
@@ -187,6 +203,7 @@ mod tests {
                 s: 8,
                 h: 64,
                 seed: 9,
+                cache_rows: 0,
             },
         )
     }
@@ -217,8 +234,8 @@ mod tests {
         let machine = MachineProfile::cray_ex();
         let kernel = Kernel::paper_rbf();
         let problem = ProblemSpec::Krr { lambda: 1.0, b: 3 };
-        let classical = SolverSpec { s: 1, h: 40, seed: 4 };
-        let sstep = SolverSpec { s: 8, h: 40, seed: 4 };
+        let classical = SolverSpec { s: 1, h: 40, seed: 4, cache_rows: 0 };
+        let sstep = SolverSpec { s: 8, h: 40, seed: 4, cache_rows: 0 };
         let a_serial = run_serial(&ds, kernel, &problem, &classical, &machine).alpha;
         let a_dist = run_distributed(
             &ds,
@@ -234,6 +251,51 @@ mod tests {
     }
 
     #[test]
+    fn cached_runs_are_bit_identical_and_save_communication() {
+        // The cache acceptance criterion end to end: same solver, same
+        // seed, cache on vs off — α must match *bitwise*, and the cached
+        // distributed run must measurably send fewer words.
+        let (ds, problem, solver) = small_svm();
+        let machine = MachineProfile::cray_ex();
+        let kernel = Kernel::paper_rbf();
+        let cached_solver = SolverSpec {
+            cache_rows: 16,
+            ..solver
+        };
+        for p in [1usize, 4] {
+            let plain = run_distributed(
+                &ds,
+                kernel,
+                &problem,
+                &solver,
+                p,
+                AllreduceAlgo::Rabenseifner,
+                &machine,
+            );
+            let cached = run_distributed(
+                &ds,
+                kernel,
+                &problem,
+                &cached_solver,
+                p,
+                AllreduceAlgo::Rabenseifner,
+                &machine,
+            );
+            assert_eq!(plain.alpha, cached.alpha, "p={p} bitwise equality");
+            assert!(cached.critical.cache.hits > 0, "p={p} expected hits");
+            if p > 1 {
+                assert!(
+                    cached.critical.comm.words < plain.critical.comm.words,
+                    "p={p}: cached words {} !< uncached {}",
+                    cached.critical.comm.words,
+                    plain.critical.comm.words
+                );
+                assert!(cached.critical.cache.words_saved > 0);
+            }
+        }
+    }
+
+    #[test]
     fn sstep_reduces_projected_allreduce_latency() {
         // The paper's core claim, end to end: same H, same P, same data —
         // s-step must cut allreduce rounds by ~s and reduce projected time
@@ -245,7 +307,7 @@ mod tests {
             &ds,
             kernel,
             &problem,
-            &SolverSpec { s: 1, h: 64, seed: 9 },
+            &SolverSpec { s: 1, h: 64, seed: 9, cache_rows: 0 },
             4,
             AllreduceAlgo::Rabenseifner,
             &machine,
@@ -254,7 +316,7 @@ mod tests {
             &ds,
             kernel,
             &problem,
-            &SolverSpec { s: 16, h: 64, seed: 9 },
+            &SolverSpec { s: 16, h: 64, seed: 9, cache_rows: 0 },
             4,
             AllreduceAlgo::Rabenseifner,
             &machine,
@@ -281,7 +343,7 @@ mod tests {
                 c: 1.0,
                 variant: SvmVariant::L1,
             },
-            &SolverSpec { s: 4, h: 8, seed: 3 },
+            &SolverSpec { s: 4, h: 8, seed: 3, cache_rows: 0 },
             4,
             AllreduceAlgo::Rabenseifner,
             &machine,

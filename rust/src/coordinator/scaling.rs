@@ -110,10 +110,14 @@ pub fn sweep(
             let point = |s: usize| -> Projection {
                 match engine {
                     Engine::Measured => {
+                        // Cache off: the projected engine replicates the
+                        // uncached counts (hit patterns are data-dependent
+                        // and cannot be projected analytically).
                         let solver = SolverSpec {
                             s,
                             h: cfg.h,
                             seed: cfg.seed,
+                            cache_rows: 0,
                         };
                         run_distributed(ds, kernel, problem, &solver, p, cfg.algo, machine)
                             .projection
@@ -331,7 +335,12 @@ mod tests {
                 for p in [2usize, 4, 8] {
                     for s in [1usize, 4, 8] {
                         let h = 16;
-                        let solver = SolverSpec { s, h, seed: 77 };
+                        let solver = SolverSpec {
+                            s,
+                            h,
+                            seed: 77,
+                            cache_rows: 0,
+                        };
                         let measured = run_distributed(
                             &ds, Kernel::paper_rbf(), &problem, &solver, p, algo, &machine,
                         )

@@ -25,7 +25,9 @@ use crate::util::PhaseTimer;
 /// Execution phases — the paper's runtime-breakdown categories
 /// (Figures 4, 7, 8): kernel computation, allreduce, gradient
 /// correction (s-step only), subproblem solve, memory reset, and the
-/// solution update.
+/// solution update — plus [`Phase::CacheHit`], the time spent serving
+/// kernel rows out of the gram engine's row cache instead of
+/// recomputing (and re-allreducing) them.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Phase {
     KernelCompute,
@@ -34,16 +36,18 @@ pub enum Phase {
     Solve,
     MemReset,
     Update,
+    CacheHit,
 }
 
 impl Phase {
-    pub const ALL: [Phase; 6] = [
+    pub const ALL: [Phase; 7] = [
         Phase::KernelCompute,
         Phase::Allreduce,
         Phase::GradCorr,
         Phase::Solve,
         Phase::MemReset,
         Phase::Update,
+        Phase::CacheHit,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -54,6 +58,7 @@ impl Phase {
             Phase::Solve => "solve",
             Phase::MemReset => "memreset",
             Phase::Update => "update",
+            Phase::CacheHit => "cachehit",
         }
     }
 
@@ -62,7 +67,54 @@ impl Phase {
     }
 }
 
-const NPHASE: usize = 6;
+const NPHASE: usize = 7;
+
+/// Row-cache accounting for the gram engine (see `crate::gram`): how many
+/// sampled rows were served from cache, and the communication that
+/// skipping their recompute avoided. All ranks run the same deterministic
+/// access stream, so these are identical across ranks.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Sampled-row requests served from the cache (or from a duplicate
+    /// row earlier in the same block).
+    pub hits: u64,
+    /// Sampled-row requests that had to be computed.
+    pub misses: u64,
+    /// Allreduce *payload* f64 words avoided by hits — `m` words per hit
+    /// row on a distributed engine, zero on local engines (nothing to
+    /// save). The wire savings are algorithm-dependent (e.g. recursive
+    /// doubling sends `payload·log₂P` words per rank).
+    pub words_saved: u64,
+    /// Whole allreduces skipped because *every* row of a gram call hit.
+    pub allreduces_saved: u64,
+}
+
+impl CacheStats {
+    /// Elementwise max — the critical path over ranks.
+    pub fn max(self, other: CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits.max(other.hits),
+            misses: self.misses.max(other.misses),
+            words_saved: self.words_saved.max(other.words_saved),
+            allreduces_saved: self.allreduces_saved.max(other.allreduces_saved),
+        }
+    }
+
+    /// Avoided allreduce payload in bytes (f64 words × 8).
+    pub fn bytes_saved(&self) -> u64 {
+        self.words_saved * 8
+    }
+
+    /// Hit fraction over all sampled-row requests (0 when none).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
 
 /// Per-rank cost ledger: flop counts and wall-clock per phase, plus the
 /// rank's communication statistics.
@@ -83,6 +135,8 @@ pub struct Ledger {
     pub iters: f64,
     /// Copied from the rank's communicator at the end of a run.
     pub comm: CommStats,
+    /// Gram-engine row-cache accounting (all zeros with the cache off).
+    pub cache: CacheStats,
 }
 
 impl Ledger {
@@ -143,6 +197,7 @@ impl Ledger {
             out.kernel_rows = out.kernel_rows.max(l.kernel_rows);
             out.iters = out.iters.max(l.iters);
             out.comm = out.comm.max(l.comm);
+            out.cache = out.cache.max(l.cache);
         }
         out
     }
@@ -291,6 +346,34 @@ mod tests {
         let comm_expect = m.beta * 1e6 + m.phi * 100.0;
         assert!((p.phase_secs(Phase::Allreduce) - comm_expect).abs() < 1e-12);
         assert!(p.total_secs() > 0.0);
+    }
+
+    #[test]
+    fn cache_stats_merge_and_bytes() {
+        let mut a = Ledger::new();
+        a.cache.hits = 10;
+        a.cache.words_saved = 160;
+        let mut b = Ledger::new();
+        b.cache.hits = 4;
+        b.cache.misses = 7;
+        b.cache.allreduces_saved = 2;
+        let c = Ledger::critical_path(&[a, b]);
+        assert_eq!(c.cache.hits, 10);
+        assert_eq!(c.cache.misses, 7);
+        assert_eq!(c.cache.allreduces_saved, 2);
+        assert_eq!(c.cache.bytes_saved(), 160 * 8);
+        assert!((c.cache.hit_rate() - 10.0 / 17.0).abs() < 1e-15);
+        assert_eq!(CacheStats::default().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn cachehit_phase_is_reported_but_costs_nothing_in_projection() {
+        let mut l = Ledger::new();
+        l.cache.hits = 5;
+        let p = MachineProfile::cray_ex().project(&l);
+        assert_eq!(p.phase_secs(Phase::CacheHit), 0.0);
+        assert!(Phase::ALL.contains(&Phase::CacheHit));
+        assert_eq!(Phase::CacheHit.name(), "cachehit");
     }
 
     #[test]

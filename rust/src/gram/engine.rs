@@ -1,0 +1,310 @@
+//! The staged gram engine: cache → product → reduce → epilogue.
+
+use std::collections::HashMap;
+
+use crate::comm::CommStats;
+use crate::costmodel::{Ledger, Phase};
+use crate::dense::Mat;
+use crate::kernelfn::Kernel;
+
+use super::cache::RowCache;
+use super::epilogue::Epilogue;
+use super::layout::Layout;
+use super::product::{BlockKind, ProductStage};
+use super::reduce::ReduceStage;
+
+/// Where a sampled position is served from in a cached call.
+enum Src {
+    /// Present in the cache before this call.
+    Hit,
+    /// Computed this call; the payload is the index into the miss block.
+    Miss(usize),
+}
+
+/// One gram pipeline: a product backend, a reduction, an optional
+/// nonlinear epilogue, and an optional kernel-row LRU cache in front.
+/// Every oracle in the crate is a thin configuration of this struct.
+pub struct GramEngine<P: ProductStage, R: ReduceStage> {
+    layout: Layout,
+    product: P,
+    reduce: R,
+    epilogue: Option<Epilogue>,
+    /// `K(a_i, a_i)` for all `i` (precomputed by the configuration).
+    diag: Vec<f64>,
+    m: usize,
+    cache: Option<RowCache>,
+    /// Miss-block buffer, reused across calls.
+    scratch: Mat,
+    miss_rows: Vec<usize>,
+    miss_pos: HashMap<usize, usize>,
+    srcs: Vec<Src>,
+}
+
+impl<P: ProductStage, R: ReduceStage> GramEngine<P, R> {
+    /// Assemble a pipeline. `epilogue` must be `Some` exactly when the
+    /// product emits linear inner products; `cache_rows == 0` disables
+    /// the row cache (the accounting then matches the pre-engine oracles
+    /// count for count).
+    pub fn new(
+        layout: Layout,
+        product: P,
+        reduce: R,
+        epilogue: Option<Epilogue>,
+        diag: Vec<f64>,
+        cache_rows: usize,
+    ) -> GramEngine<P, R> {
+        let m = product.m();
+        assert_eq!(diag.len(), m, "diag length");
+        assert_eq!(
+            matches!(product.kind(), BlockKind::Linear),
+            epilogue.is_some(),
+            "Linear products need an epilogue; Kernel products must not have one"
+        );
+        GramEngine {
+            layout,
+            product,
+            reduce,
+            epilogue,
+            diag,
+            m,
+            cache: (cache_rows > 0).then(|| RowCache::new(cache_rows)),
+            scratch: Mat::zeros(0, 0),
+            miss_rows: Vec::new(),
+            miss_pos: HashMap::new(),
+            srcs: Vec::new(),
+        }
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn layout(&self) -> Layout {
+        self.layout
+    }
+
+    /// The configured kernel (None for finished-kernel products, whose
+    /// map lives inside the product).
+    pub fn kernel(&self) -> Option<Kernel> {
+        self.epilogue.as_ref().map(|e| e.kernel())
+    }
+
+    pub fn diag(&self) -> Vec<f64> {
+        self.diag.clone()
+    }
+
+    pub fn cache_capacity(&self) -> usize {
+        self.cache.as_ref().map_or(0, |c| c.capacity())
+    }
+
+    pub fn comm_stats(&self) -> CommStats {
+        self.reduce.stats()
+    }
+
+    pub fn product(&self) -> &P {
+        &self.product
+    }
+
+    pub fn reduce_stage(&self) -> &R {
+        &self.reduce
+    }
+
+    pub fn reduce_stage_mut(&mut self) -> &mut R {
+        &mut self.reduce
+    }
+
+    /// Fill `q[r][·]` with kernel row `sample[r]`, recording costs.
+    pub fn gram(&mut self, sample: &[usize], q: &mut Mat, ledger: &mut Ledger) {
+        assert_eq!(q.nrows(), sample.len());
+        assert_eq!(q.ncols(), self.m);
+        if self.cache.is_none() {
+            self.compute_block(sample, q, ledger);
+            return;
+        }
+
+        // 1. Classify positions. Deterministic: pure function of the
+        //    sample stream and prior cache state (see module docs).
+        self.miss_rows.clear();
+        self.miss_pos.clear();
+        self.srcs.clear();
+        let cache = self.cache.as_mut().expect("checked above");
+        for &sr in sample {
+            if let Some(&i) = self.miss_pos.get(&sr) {
+                // Duplicate of a row already missed in this call.
+                self.srcs.push(Src::Miss(i));
+            } else if cache.contains_and_touch(sr) {
+                self.srcs.push(Src::Hit);
+            } else {
+                let i = self.miss_rows.len();
+                self.miss_pos.insert(sr, i);
+                self.miss_rows.push(sr);
+                self.srcs.push(Src::Miss(i));
+            }
+        }
+        let served = (sample.len() - self.miss_rows.len()) as u64;
+        ledger.cache.hits += served;
+        ledger.cache.misses += self.miss_rows.len() as u64;
+        if self.reduce.is_active() {
+            // Each served row skips `m` words of allreduce payload.
+            ledger.cache.words_saved += served * self.m as u64;
+        }
+
+        // 2. Serve hits out of the cache (before any insert can evict
+        //    them).
+        if served > 0 {
+            ledger.time(Phase::CacheHit, || {
+                for (pos, src) in self.srcs.iter().enumerate() {
+                    if matches!(src, Src::Hit) {
+                        let row = cache.peek(sample[pos]).expect("hit row present");
+                        q.row_mut(pos).copy_from_slice(row);
+                    }
+                }
+            });
+        }
+
+        // 3. Compute the deduplicated miss block through the pipeline.
+        if self.miss_rows.is_empty() {
+            if self.reduce.is_active() {
+                ledger.cache.allreduces_saved += 1;
+            }
+            return;
+        }
+        let miss = std::mem::take(&mut self.miss_rows);
+        let mut scratch = std::mem::replace(&mut self.scratch, Mat::zeros(0, 0));
+        if scratch.nrows() != miss.len() || scratch.ncols() != self.m {
+            scratch = Mat::zeros(miss.len(), self.m);
+        }
+        self.compute_block(&miss, &mut scratch, ledger);
+
+        // 4. Fill missed positions (duplicates included) from the block.
+        for (pos, src) in self.srcs.iter().enumerate() {
+            if let Src::Miss(i) = src {
+                q.row_mut(pos).copy_from_slice(scratch.row(*i));
+            }
+        }
+
+        // 5. Remember the finished rows.
+        let cache = self.cache.as_mut().expect("checked above");
+        for (i, &r) in miss.iter().enumerate() {
+            cache.insert(r, scratch.row(i));
+        }
+        self.scratch = scratch;
+        self.miss_rows = miss;
+    }
+
+    /// The uncached pipeline: product → reduce → epilogue, with the same
+    /// phase and flop accounting the pre-engine oracles recorded.
+    fn compute_block(&mut self, rows: &[usize], out: &mut Mat, ledger: &mut Ledger) {
+        debug_assert_eq!(out.nrows(), rows.len());
+        debug_assert_eq!(out.ncols(), self.m);
+        let cost = ledger.time(Phase::KernelCompute, || self.product.compute(rows, out));
+        ledger.add_flops(Phase::KernelCompute, cost.flops);
+        if self.reduce.is_active() {
+            // The per-iteration collective the s-step methods amortize.
+            ledger.time(Phase::Allreduce, || self.reduce.reduce(out.data_mut()));
+        }
+        if let Some(ep) = &self.epilogue {
+            // Redundant nonlinear map (identical on every rank).
+            ledger.time(Phase::KernelCompute, || ep.apply(rows, out));
+            ledger.add_flops(Phase::KernelCompute, ep.flops(rows.len()));
+        }
+        ledger.add_kernel_call(cost.rows_charged);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gen_dense_classification;
+    use crate::gram::{CsrProduct, NoReduce};
+    use crate::rng::Pcg;
+
+    fn local_engine(cache_rows: usize, kernel: Kernel) -> GramEngine<CsrProduct, NoReduce> {
+        let ds = gen_dense_classification(24, 6, 0.0, 11);
+        let product = CsrProduct::new(ds.a.clone());
+        let ep = Epilogue::new(kernel, ds.a.row_norms_sq());
+        let diag = ep.diag();
+        GramEngine::new(Layout::Full, product, NoReduce, Some(ep), diag, cache_rows)
+    }
+
+    #[test]
+    fn cached_engine_is_bitwise_equal_to_uncached() {
+        for kernel in [Kernel::Linear, Kernel::paper_poly(), Kernel::paper_rbf()] {
+            let mut plain = local_engine(0, kernel);
+            let mut cached = local_engine(8, kernel);
+            let mut rng = Pcg::seeded(5);
+            for _ in 0..20 {
+                let k = rng.gen_range(1, 6);
+                let sample: Vec<usize> = (0..k).map(|_| rng.gen_below(24)).collect();
+                let mut q1 = Mat::zeros(k, 24);
+                let mut q2 = Mat::zeros(k, 24);
+                plain.gram(&sample, &mut q1, &mut Ledger::new());
+                cached.gram(&sample, &mut q2, &mut Ledger::new());
+                assert_eq!(q1.data(), q2.data(), "{kernel:?} sample {sample:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn cache_counters_track_hits_and_dedup() {
+        let mut e = local_engine(16, Kernel::paper_rbf());
+        let mut ledger = Ledger::new();
+        // Cold call with an intra-call duplicate: 2 unique misses, 1 dup.
+        let mut q = Mat::zeros(3, 24);
+        e.gram(&[3, 7, 3], &mut q, &mut ledger);
+        assert_eq!(ledger.cache.misses, 2);
+        assert_eq!(ledger.cache.hits, 1);
+        // Warm call: all hits, no kernel work.
+        let flops_before = ledger.flops(Phase::KernelCompute);
+        let mut q2 = Mat::zeros(2, 24);
+        e.gram(&[7, 3], &mut q2, &mut ledger);
+        assert_eq!(ledger.cache.hits, 3);
+        assert_eq!(ledger.cache.misses, 2);
+        assert_eq!(ledger.flops(Phase::KernelCompute), flops_before);
+        // Local engine: nothing to save on the wire.
+        assert_eq!(ledger.cache.words_saved, 0);
+        assert_eq!(ledger.cache.allreduces_saved, 0);
+        // Rows match a fresh uncached computation bitwise.
+        let mut plain = local_engine(0, Kernel::paper_rbf());
+        let mut q_ref = Mat::zeros(2, 24);
+        plain.gram(&[7, 3], &mut q_ref, &mut Ledger::new());
+        assert_eq!(q2.data(), q_ref.data());
+    }
+
+    #[test]
+    fn uncached_engine_accounting_matches_legacy_formulas() {
+        let ds = gen_dense_classification(20, 6, 0.0, 1);
+        let kernel = Kernel::paper_rbf();
+        let product = CsrProduct::new(ds.a.clone());
+        let nnz = ds.a.nnz() as f64;
+        let ep = Epilogue::new(kernel, ds.a.row_norms_sq());
+        let diag = ep.diag();
+        let mut e = GramEngine::new(Layout::Full, product, NoReduce, Some(ep), diag, 0);
+        let mut ledger = Ledger::new();
+        let mut q = Mat::zeros(3, 20);
+        e.gram(&[4, 17, 4], &mut q, &mut ledger);
+        let expect = 2.0 * 3.0 * nnz + kernel.mu() * 3.0 * 20.0;
+        assert_eq!(ledger.flops(Phase::KernelCompute), expect);
+        assert_eq!(ledger.kernel_calls, 1.0);
+        assert_eq!(ledger.kernel_rows, 3.0);
+    }
+
+    #[test]
+    fn eviction_pressure_stays_correct() {
+        // Cache far smaller than the working set: every call mixes hits,
+        // misses and evictions; results must still match uncached.
+        let kernel = Kernel::paper_poly();
+        let mut plain = local_engine(0, kernel);
+        let mut cached = local_engine(2, kernel);
+        let mut rng = Pcg::seeded(17);
+        for _ in 0..40 {
+            let k = rng.gen_range(1, 7);
+            let sample: Vec<usize> = (0..k).map(|_| rng.gen_below(24)).collect();
+            let mut q1 = Mat::zeros(k, 24);
+            let mut q2 = Mat::zeros(k, 24);
+            plain.gram(&sample, &mut q1, &mut Ledger::new());
+            cached.gram(&sample, &mut q2, &mut Ledger::new());
+            assert_eq!(q1.data(), q2.data());
+        }
+    }
+}

@@ -1,0 +1,77 @@
+//! Epilogue stage: the pointwise nonlinear kernel map over a reduced
+//! linear gram block, applied redundantly on every rank.
+
+use crate::dense::Mat;
+use crate::kernelfn::Kernel;
+
+/// Kernel map + the cached row norms the RBF expansion needs.
+pub struct Epilogue {
+    kernel: Kernel,
+    /// Full-matrix `‖a_i‖²` (allreduced once at construction when the
+    /// layout is sharded — they are themselves a column-shard sum).
+    row_norms: Vec<f64>,
+}
+
+impl Epilogue {
+    pub fn new(kernel: Kernel, row_norms: Vec<f64>) -> Epilogue {
+        Epilogue { kernel, row_norms }
+    }
+
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
+    }
+
+    pub fn row_norms(&self) -> &[f64] {
+        &self.row_norms
+    }
+
+    /// Apply the kernel map in place to the `rows.len() × m` block `q`.
+    pub fn apply(&self, rows: &[usize], q: &mut Mat) {
+        let sample_norms: Vec<f64> = rows.iter().map(|&i| self.row_norms[i]).collect();
+        self.kernel.apply_block(q, &sample_norms, &self.row_norms);
+    }
+
+    /// Ledger cost of applying the map to a `rows × m` block.
+    pub fn flops(&self, rows: usize) -> f64 {
+        self.kernel.epilogue_flops(rows, self.row_norms.len())
+    }
+
+    /// `K(a_i, a_i)` for all `i` from the cached norms.
+    pub fn diag(&self) -> Vec<f64> {
+        self.row_norms
+            .iter()
+            .map(|&n| self.kernel.apply_scalar(n, n, n))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dense::gemm_nt;
+    use crate::rng::Pcg;
+
+    #[test]
+    fn epilogue_matches_direct_apply_block_and_diag() {
+        let mut r = Pcg::seeded(91);
+        let a = Mat::from_fn(10, 4, |_, _| r.next_gaussian());
+        let norms = a.row_norms_sq();
+        for kernel in [Kernel::Linear, Kernel::paper_poly(), Kernel::paper_rbf()] {
+            let ep = Epilogue::new(kernel, norms.clone());
+            let sample = vec![2usize, 7];
+            let a_s = a.gather_rows(&sample);
+            let mut z = Mat::zeros(2, 10);
+            gemm_nt(&a_s, &a, &mut z);
+            let mut z_ref = z.clone();
+            ep.apply(&sample, &mut z);
+            let sn: Vec<f64> = sample.iter().map(|&i| norms[i]).collect();
+            kernel.apply_block(&mut z_ref, &sn, &norms);
+            assert_eq!(z.data(), z_ref.data());
+            assert_eq!(ep.flops(2), kernel.epilogue_flops(2, 10));
+            let d = ep.diag();
+            for (i, &n) in norms.iter().enumerate() {
+                assert_eq!(d[i], kernel.apply_scalar(n, n, n));
+            }
+        }
+    }
+}

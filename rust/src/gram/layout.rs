@@ -1,0 +1,48 @@
+//! Layout stage: where this engine's slice of the data matrix lives.
+
+/// Data layout behind a gram engine. Purely descriptive — the product
+/// stage already operates on whatever slice it was built from — but
+/// carried explicitly so reports, assertions and future 2D layouts have
+/// one source of truth.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layout {
+    /// The full `m×n` matrix on one rank (serial reference, Nyström,
+    /// PJRT).
+    Full,
+    /// This rank's 1D-column shard: `m × ≈n/P` features of every sample
+    /// (the paper's partitioning). The linear gram is additive over
+    /// shards, which is what makes the allreduce reduction correct.
+    ColShard {
+        /// This rank's id in `[0, ranks)`.
+        rank: usize,
+        /// Total ranks `P`.
+        ranks: usize,
+    },
+}
+
+impl Layout {
+    /// True if the product stage emits *partial* blocks that require a
+    /// cross-rank reduction.
+    pub fn is_sharded(&self) -> bool {
+        matches!(self, Layout::ColShard { .. })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Layout::Full => "full",
+            Layout::ColShard { .. } => "col-shard",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_predicate() {
+        assert!(!Layout::Full.is_sharded());
+        assert!(Layout::ColShard { rank: 0, ranks: 4 }.is_sharded());
+        assert_eq!(Layout::Full.name(), "full");
+    }
+}

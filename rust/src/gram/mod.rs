@@ -1,0 +1,98 @@
+//! The staged, cached gram engine — every sampled kernel-row computation
+//! in the crate flows through here.
+//!
+//! The paper's central per-iteration cost object is the sampled kernel
+//! (gram) block `Q[r][i] = K(a_{S_r}, a_i)` plus, in the distributed
+//! setting, its allreduce. The crate used to carry four copies of that
+//! pipeline (`LocalGram`, `DistGram`, `NystromGram`, `PjrtGram`); this
+//! module decomposes it into explicit, composable stages so every oracle
+//! is a thin configuration and every future backend is a plug-in:
+//!
+//! 1. **Layout** ([`Layout`]) — where the data lives: the full matrix on
+//!    one rank, or this rank's 1D-column shard (the paper's partitioning,
+//!    where each of `P` ranks stores ≈ `n/P` features of every sample).
+//! 2. **Linear product** ([`ProductStage`]) — the (partial) linear gram
+//!    `Z = A_S Aᵀ`. [`CsrProduct`] picks between the blocked scatter-dot
+//!    path and the cached-transpose path by the density heuristic;
+//!    [`LowRankProduct`] multiplies precomputed Nyström factors; the
+//!    PJRT runtime contributes an XLA-executing product. A product
+//!    declares via [`BlockKind`] whether it emits *linear* inner products
+//!    (epilogue required) or finished *kernel* values.
+//! 3. **Reduction** ([`ReduceStage`]) — a no-op locally ([`NoReduce`]),
+//!    or the sum-allreduce of the partial block across column shards
+//!    ([`AllreduceSum`]): the communication the s-step methods amortize.
+//! 4. **Epilogue** ([`Epilogue`]) — the pointwise nonlinear kernel map
+//!    ([`crate::kernelfn::Kernel::apply_block`]), applied redundantly on
+//!    every rank after the reduction (the paper's Theorem 1/2 schedule).
+//!
+//! In front of the pipeline sits an optional **kernel-row LRU cache**
+//! ([`RowCache`]). DCD samples coordinates *with replacement* and s-step
+//! blocks re-touch rows, so a bounded cache of finished kernel rows
+//! converts repeats into copies — skipping the product, the epilogue,
+//! *and the allreduce* (a real communication saving, attributed to
+//! [`crate::costmodel::Phase::CacheHit`] and the
+//! [`crate::costmodel::CacheStats`] counters).
+//!
+//! ### Determinism contract
+//!
+//! The cache is fully deterministic — no randomness, no clock: hits and
+//! LRU evictions are a pure function of the sampled-coordinate stream,
+//! which every rank draws from the same seeded generator. All ranks
+//! therefore agree, call by call, on which rows miss, so the collective
+//! allreduce stays correctly matched across ranks (the cache size must be
+//! identical on every rank — it is part of the run configuration, see
+//! `coordinator::SolverSpec::cache_rows` and `--gram-cache-rows`).
+//!
+//! Cached rows are *bitwise identical* to uncached recomputation: every
+//! product stage computes each output row independently with a fixed
+//! per-entry summation order, and each element of the allreduced block is
+//! combined across ranks in a w-independent order (sibling pairs of the
+//! reduction tree are fixed by rank, and f64 addition is commutative), so
+//! serving a row from cache replays exactly the bits the uncached run
+//! would produce. The one caveat: the Rabenseifner collective falls back
+//! to recursive doubling for payloads smaller than `P` words, which
+//! groups the partial sums differently — with `m ≥ P` (every realistic
+//! configuration) a miss block's payload `k·m` never crosses that
+//! threshold, so the contract holds. `cargo test` pins all of this
+//! (`rust/tests/gram_engine_props.rs`).
+
+mod cache;
+mod engine;
+mod epilogue;
+mod layout;
+mod product;
+mod reduce;
+
+pub use cache::RowCache;
+pub use engine::GramEngine;
+pub use epilogue::Epilogue;
+pub use layout::Layout;
+pub use product::{BlockKind, CsrProduct, LowRankProduct, ProductCost, ProductStage};
+pub use reduce::{AllreduceSum, NoReduce, ReduceStage};
+
+use crate::costmodel::Ledger;
+use crate::dense::Mat;
+
+/// Produces sampled rows of the kernel matrix `K(A, A)`.
+///
+/// `gram(sample, q, ledger)` fills `q` (`sample.len() × m`) with
+/// `q[r][i] = K(a_{sample_r}, a_i)`, recording costs. Implementations are
+/// configurations of [`GramEngine`]; the solvers stay generic over this
+/// trait, so serial, distributed, approximated and PJRT-executed runs use
+/// identical solver code.
+pub trait GramOracle {
+    /// Number of samples `m` (kernel-matrix dimension).
+    fn m(&self) -> usize;
+
+    /// Fill `q[r][·]` with kernel row `sample[r]`, recording costs.
+    fn gram(&mut self, sample: &[usize], q: &mut Mat, ledger: &mut Ledger);
+
+    /// `K(a_i, a_i)` for all `i` (cheap; used for SVM `η` sanity checks
+    /// and objective evaluation).
+    fn diag(&self) -> Vec<f64>;
+
+    /// Communication statistics accumulated so far (zero for local).
+    fn comm_stats(&self) -> crate::comm::CommStats {
+        crate::comm::CommStats::default()
+    }
+}

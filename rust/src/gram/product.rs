@@ -1,0 +1,188 @@
+//! Linear-product stage: the (partial) sampled gram block.
+
+use crate::dense::Mat;
+use crate::sparse::Csr;
+
+/// What a product stage writes into the output block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlockKind {
+    /// Linear inner products `⟨a_{S_r}, a_i⟩` — the engine must run the
+    /// nonlinear epilogue after the reduction.
+    Linear,
+    /// Finished kernel values — no epilogue (Nyström factors and the
+    /// PJRT artifacts already apply the kernel map).
+    Kernel,
+}
+
+/// Cost record a product stage returns for the ledger.
+#[derive(Clone, Copy, Debug)]
+pub struct ProductCost {
+    /// Flop-equivalents spent in the product.
+    pub flops: f64,
+    /// Rows to charge to the kernel-call counter (PJRT pads the sampled
+    /// block up to the lowered artifact size, so this can exceed
+    /// `sample.len()`).
+    pub rows_charged: usize,
+}
+
+/// A backend that fills `q` (`sample.len() × m`) with the (partial)
+/// sampled block for `sample`. Implementations must compute every output
+/// row independently of the other rows in the call — that row-wise
+/// independence is what makes the engine's row cache bitwise-transparent
+/// (see the module docs).
+pub trait ProductStage {
+    /// Kernel-matrix dimension `m`.
+    fn m(&self) -> usize;
+
+    /// Whether the output needs the nonlinear epilogue.
+    fn kind(&self) -> BlockKind;
+
+    /// Fill `q` with the block for `sample`; return the ledger cost.
+    fn compute(&mut self, sample: &[usize], q: &mut Mat) -> ProductCost;
+}
+
+/// Density below which the transpose-based gram beats the blocked
+/// scatter-dot variant (cost `f²mn` vs `fmn` per sampled row; crossover
+/// well below 1.0, with slack for its worse write locality). See §Perf in
+/// EXPERIMENTS.md for the measured before/after.
+pub const TRANSPOSE_GRAM_MAX_DENSITY: f64 = 0.25;
+
+/// CSR-backed linear product: the native path for both the full matrix
+/// and a 1D-column shard. Picks the transpose path for sparse data and
+/// the blocked scatter-dot path otherwise, per
+/// [`TRANSPOSE_GRAM_MAX_DENSITY`].
+pub struct CsrProduct {
+    a: Csr,
+    /// Cached transpose for the sparse fast path (None for dense data).
+    at: Option<Csr>,
+    /// Dense gathered-sample-rows scratch for the blocked path.
+    scratch: Vec<f64>,
+}
+
+impl CsrProduct {
+    pub fn new(a: Csr) -> CsrProduct {
+        let at = (a.density() < TRANSPOSE_GRAM_MAX_DENSITY).then(|| a.transpose());
+        CsrProduct {
+            a,
+            at,
+            scratch: Vec::new(),
+        }
+    }
+
+    /// The underlying matrix (shard or full).
+    pub fn matrix(&self) -> &Csr {
+        &self.a
+    }
+}
+
+impl ProductStage for CsrProduct {
+    fn m(&self) -> usize {
+        self.a.nrows()
+    }
+
+    fn kind(&self) -> BlockKind {
+        BlockKind::Linear
+    }
+
+    fn compute(&mut self, sample: &[usize], q: &mut Mat) -> ProductCost {
+        match &self.at {
+            Some(at) => self.a.sampled_gram_t(at, sample, q),
+            None => self.a.sampled_gram_blocked(sample, q, &mut self.scratch),
+        }
+        ProductCost {
+            flops: 2.0 * sample.len() as f64 * self.a.nnz() as f64,
+            rows_charged: sample.len(),
+        }
+    }
+}
+
+/// Low-rank (Nyström) product: `K̂(S, ·) = (C W⁻¹)[S, :] · Cᵀ`, a
+/// `(k×l)·(l×m)` multiply over precomputed factors. Emits finished kernel
+/// values ([`BlockKind::Kernel`]).
+pub struct LowRankProduct {
+    /// `C W⁻¹` (m×l).
+    cw: Mat,
+    /// `Cᵀ` stored row-major as l×m for contiguous row access.
+    ct: Mat,
+    l: usize,
+}
+
+impl LowRankProduct {
+    pub fn new(cw: Mat, ct: Mat) -> LowRankProduct {
+        assert_eq!(cw.ncols(), ct.nrows(), "factor ranks disagree");
+        assert_eq!(cw.nrows(), ct.ncols(), "factor dims disagree");
+        let l = cw.ncols();
+        LowRankProduct { cw, ct, l }
+    }
+
+    /// Approximation rank `l`.
+    pub fn rank(&self) -> usize {
+        self.l
+    }
+}
+
+impl ProductStage for LowRankProduct {
+    fn m(&self) -> usize {
+        self.cw.nrows()
+    }
+
+    fn kind(&self) -> BlockKind {
+        BlockKind::Kernel
+    }
+
+    fn compute(&mut self, sample: &[usize], q: &mut Mat) -> ProductCost {
+        for (r, &i) in sample.iter().enumerate() {
+            let coeffs = self.cw.row(i);
+            let out = q.row_mut(r);
+            out.fill(0.0);
+            for (t, &c) in coeffs.iter().enumerate() {
+                if c == 0.0 {
+                    continue;
+                }
+                crate::dense::axpy(c, self.ct.row(t), out);
+            }
+        }
+        ProductCost {
+            flops: 2.0 * sample.len() as f64 * self.l as f64 * self.cw.nrows() as f64,
+            rows_charged: sample.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg;
+
+    #[test]
+    fn csr_product_selects_path_by_density_and_paths_agree() {
+        let mut r = Pcg::seeded(31);
+        for density in [0.02, 0.9] {
+            let mut trips = Vec::new();
+            for i in 0..20 {
+                for j in 0..30 {
+                    if r.next_f64() < density {
+                        trips.push((i, j, r.next_gaussian()));
+                    }
+                }
+            }
+            let a = Csr::from_triplets(20, 30, &trips);
+            let sparse_path = a.density() < TRANSPOSE_GRAM_MAX_DENSITY;
+            let mut p = CsrProduct::new(a.clone());
+            assert_eq!(p.at.is_some(), sparse_path, "density {density}");
+            assert_eq!(p.kind(), BlockKind::Linear);
+            let sample = vec![3usize, 11, 3];
+            let mut q = Mat::zeros(3, 20);
+            let cost = p.compute(&sample, &mut q);
+            assert_eq!(cost.rows_charged, 3);
+            assert_eq!(cost.flops, 2.0 * 3.0 * a.nnz() as f64);
+            // Reference: the scatter variant.
+            let mut q_ref = Mat::zeros(3, 20);
+            let mut scratch = Vec::new();
+            a.sampled_gram(&sample, &mut q_ref, &mut scratch);
+            for (x, y) in q.data().iter().zip(q_ref.data()) {
+                assert!((x - y).abs() < 1e-12);
+            }
+        }
+    }
+}

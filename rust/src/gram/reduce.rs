@@ -1,0 +1,101 @@
+//! Reduction stage: combine partial blocks across column shards.
+
+use crate::comm::{allreduce_sum, AllreduceAlgo, CommStats, Communicator};
+
+/// Combines the product stage's (partial) block across ranks.
+pub trait ReduceStage {
+    /// False for local engines — the engine then skips the reduction
+    /// entirely (no phase timing, no counters).
+    fn is_active(&self) -> bool;
+
+    /// In-place sum-reduction of the flat block buffer.
+    fn reduce(&mut self, buf: &mut [f64]);
+
+    /// Traffic accumulated by this stage's communicator.
+    fn stats(&self) -> CommStats;
+}
+
+/// The local no-op reduction (full-matrix layouts).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoReduce;
+
+impl ReduceStage for NoReduce {
+    fn is_active(&self) -> bool {
+        false
+    }
+
+    fn reduce(&mut self, _buf: &mut [f64]) {}
+
+    fn stats(&self) -> CommStats {
+        CommStats::default()
+    }
+}
+
+/// Sum-allreduce over a [`Communicator`] — the per-iteration collective
+/// the s-step methods amortize and the row cache skips on full hits.
+pub struct AllreduceSum<'c, C: Communicator> {
+    comm: &'c mut C,
+    algo: AllreduceAlgo,
+}
+
+impl<'c, C: Communicator> AllreduceSum<'c, C> {
+    pub fn new(comm: &'c mut C, algo: AllreduceAlgo) -> Self {
+        AllreduceSum { comm, algo }
+    }
+
+    /// This rank's id (exposed for the oracle wrappers).
+    pub fn rank(&self) -> usize {
+        self.comm.rank()
+    }
+
+    /// Direct access for construction-time collectives (row norms).
+    pub fn comm_mut(&mut self) -> &mut C {
+        self.comm
+    }
+}
+
+impl<'c, C: Communicator> ReduceStage for AllreduceSum<'c, C> {
+    fn is_active(&self) -> bool {
+        true
+    }
+
+    fn reduce(&mut self, buf: &mut [f64]) {
+        allreduce_sum(self.comm, buf, self.algo);
+    }
+
+    fn stats(&self) -> CommStats {
+        self.comm.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::run_ranks;
+
+    #[test]
+    fn no_reduce_is_inert() {
+        let mut r = NoReduce;
+        let mut buf = vec![1.0, 2.0];
+        r.reduce(&mut buf);
+        assert!(!r.is_active());
+        assert_eq!(buf, vec![1.0, 2.0]);
+        assert_eq!(r.stats(), CommStats::default());
+    }
+
+    #[test]
+    fn allreduce_stage_sums_and_counts() {
+        let outs = run_ranks(4, |c| {
+            let mut stage = AllreduceSum::new(c, AllreduceAlgo::RecursiveDoubling);
+            assert!(stage.is_active());
+            let mut buf = vec![stage.rank() as f64 + 1.0; 8];
+            stage.reduce(&mut buf);
+            (buf, stage.stats())
+        });
+        for (buf, stats) in &outs {
+            assert!(buf.iter().all(|&v| v == 10.0));
+            assert_eq!(stats.allreduces, 1);
+            assert_eq!(stats.words, 8 * 2); // w·log2(4)
+        }
+    }
+}

@@ -131,6 +131,12 @@ impl Kernel {
             Kernel::Rbf { .. } => 30.0,
         }
     }
+
+    /// Flop-equivalents of applying the nonlinear epilogue to a
+    /// `rows × m` gram block (the engine's epilogue-stage accounting).
+    pub fn epilogue_flops(&self, rows: usize, m: usize) -> f64 {
+        self.mu() * rows as f64 * m as f64
+    }
 }
 
 #[cfg(test)]

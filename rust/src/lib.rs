@@ -11,6 +11,9 @@
 //! * [`dense`] / [`sparse`] — the BLAS/SparseBLAS substrate (the paper used
 //!   Intel MKL; we build the needed subset from scratch).
 //! * [`kernelfn`] — linear / polynomial / RBF kernel maps over gram blocks.
+//! * [`gram`] — the staged, cached gram engine: layout → linear product →
+//!   reduction → epilogue, with a deterministic kernel-row LRU cache in
+//!   front. Every gram oracle is a thin configuration of this engine.
 //! * [`comm`] — a simulated-MPI communicator (threads + channels) with
 //!   allreduce algorithms and traffic instrumentation.
 //! * [`costmodel`] — Hockney γF+βW+φL machine model used to project
@@ -38,6 +41,7 @@ pub mod coordinator;
 pub mod costmodel;
 pub mod data;
 pub mod dense;
+pub mod gram;
 pub mod kernelfn;
 pub mod model;
 pub mod rng;

@@ -1,0 +1,405 @@
+//! The XLA-backed PJRT runtime (compiled with the `xla-pjrt` feature).
+//!
+//! [`PjrtGram`] is a gram-engine configuration: an XLA-executing product
+//! stage ([`PjrtProduct`], emitting finished kernel values) → no
+//! reduction → optional row cache.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::costmodel::Ledger;
+use crate::dense::Mat;
+use crate::gram::{BlockKind, GramEngine, GramOracle, Layout, NoReduce, ProductCost, ProductStage};
+use crate::kernelfn::Kernel;
+
+use super::manifest::{ArtifactSpec, Manifest};
+
+/// A PJRT CPU client plus the compiled artifact cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    /// Open the artifact directory (reads `manifest.json`; compiles
+    /// lazily).
+    pub fn open(dir: &Path) -> Result<PjrtRuntime> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {dir:?}"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(PjrtRuntime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            compiled: HashMap::new(),
+        })
+    }
+
+    /// The default artifact directory (`$KCD_ARTIFACTS` or `artifacts/`).
+    pub fn default_dir() -> PathBuf {
+        super::default_artifacts_dir()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Platform string of the underlying PJRT client.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn ensure_compiled(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.compiled.contains_key(name) {
+            let spec = self
+                .manifest
+                .get(name)
+                .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+            let path = self.dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing HLO text {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.compiled.insert(name.to_string(), exe);
+        }
+        Ok(&self.compiled[name])
+    }
+
+    /// Upload a host f32 array to the device once; the returned buffer
+    /// can be reused across `execute_gram_buf` calls (the §Perf
+    /// optimization that keeps `A` device-resident instead of shipping
+    /// it on every iteration).
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload: {e:?}"))
+    }
+
+    /// Execute the gram artifact with a device-resident `a` buffer and a
+    /// host-side sampled block `s` (uploaded per call — it is small).
+    pub fn execute_gram_buf(
+        &mut self,
+        name: &str,
+        a_buf: &xla::PjRtBuffer,
+        s: &[f32],
+    ) -> Result<Vec<f32>> {
+        let spec = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
+            .clone();
+        anyhow::ensure!(
+            s.len() == spec.k * spec.n,
+            "s: expected {}x{} f32s, got {}",
+            spec.k,
+            spec.n,
+            s.len()
+        );
+        let s_buf = self.upload_f32(s, &[spec.k, spec.n])?;
+        let exe = self.ensure_compiled(&spec.name)?;
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(&[a_buf, &s_buf])
+            .map_err(|e| anyhow!("execute_b {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Execute the gram artifact `name` on `(a, s)` (f32, row-major),
+    /// returning the `(k, m)` block as a flat row-major `Vec<f32>`.
+    pub fn execute_gram(&mut self, name: &str, a: &[f32], s: &[f32]) -> Result<Vec<f32>> {
+        let spec = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
+            .clone();
+        anyhow::ensure!(
+            a.len() == spec.m * spec.n,
+            "a: expected {}x{} = {} f32s, got {}",
+            spec.m,
+            spec.n,
+            spec.m * spec.n,
+            a.len()
+        );
+        anyhow::ensure!(
+            s.len() == spec.k * spec.n,
+            "s: expected {}x{} f32s, got {}",
+            spec.k,
+            spec.n,
+            s.len()
+        );
+        let exe = self.ensure_compiled(name)?;
+        let a_lit = xla::Literal::vec1(a)
+            .reshape(&[spec.m as i64, spec.n as i64])
+            .map_err(|e| anyhow!("reshape a: {e:?}"))?;
+        let s_lit = xla::Literal::vec1(s)
+            .reshape(&[spec.k as i64, spec.n as i64])
+            .map_err(|e| anyhow!("reshape s: {e:?}"))?;
+        let result = exe
+            .execute::<xla::Literal>(&[a_lit, s_lit])
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        // L2 lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Pick the smallest lowered artifact that fits `(kind, m, n, k)` —
+    /// the sampled dimension is padded up to the next lowered `k`.
+    pub fn select_artifact(&self, kind: &str, m: usize, n: usize, k: usize) -> Option<&ArtifactSpec> {
+        self.manifest
+            .artifacts()
+            .iter()
+            .filter(|a| a.kind == kind && a.m == m && a.n == n && a.k >= k)
+            .min_by_key(|a| a.k)
+    }
+}
+
+/// Product stage that executes the lowered XLA gram artifact. Emits
+/// finished kernel values (the artifact applies the kernel map on
+/// device), so the engine skips the epilogue. Numerics are f32
+/// (documented in DESIGN.md §5); the native f64 path remains the
+/// correctness reference.
+struct PjrtProduct {
+    runtime: PjrtRuntime,
+    kernel: Kernel,
+    a: Vec<f32>,
+    /// Device-resident copy of `a`, uploaded once (§Perf).
+    a_buf: xla::PjRtBuffer,
+    m: usize,
+    n: usize,
+}
+
+impl ProductStage for PjrtProduct {
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn kind(&self) -> BlockKind {
+        BlockKind::Kernel
+    }
+
+    fn compute(&mut self, sample: &[usize], q: &mut Mat) -> ProductCost {
+        let spec = self
+            .runtime
+            .select_artifact(self.kernel.name(), self.m, self.n, sample.len())
+            .unwrap_or_else(|| {
+                panic!(
+                    "no artifact covers k={} (kind={}, m={}, n={})",
+                    sample.len(),
+                    self.kernel.name(),
+                    self.m,
+                    self.n
+                )
+            })
+            .clone();
+        // Gather sampled rows, padding with zeros (discarded).
+        let mut s = vec![0f32; spec.k * self.n];
+        for (r, &idx) in sample.iter().enumerate() {
+            s[r * self.n..(r + 1) * self.n]
+                .copy_from_slice(&self.a[idx * self.n..(idx + 1) * self.n]);
+        }
+        let out = self
+            .runtime
+            .execute_gram_buf(&spec.name, &self.a_buf, &s)
+            .expect("PJRT gram execution failed");
+        for r in 0..sample.len() {
+            let src = &out[r * self.m..(r + 1) * self.m];
+            for (dst, &v) in q.row_mut(r).iter_mut().zip(src) {
+                *dst = v as f64;
+            }
+        }
+        ProductCost {
+            flops: 2.0 * (spec.k * self.m * self.n) as f64
+                + self.kernel.mu() * (spec.k * self.m) as f64,
+            rows_charged: spec.k,
+        }
+    }
+}
+
+/// [`GramOracle`] backed by the PJRT runtime: the dense fast path, as a
+/// gram-engine configuration.
+pub struct PjrtGram {
+    engine: GramEngine<PjrtProduct, NoReduce>,
+}
+
+impl PjrtGram {
+    /// Build from a dense dataset. Fails fast if no artifact covers
+    /// `(kernel, m, n)`.
+    pub fn new(runtime: PjrtRuntime, a_mat: &Mat, kernel: Kernel) -> Result<PjrtGram> {
+        Self::with_cache(runtime, a_mat, kernel, 0)
+    }
+
+    /// Same, with the engine's kernel-row cache for `cache_rows > 0`.
+    pub fn with_cache(
+        runtime: PjrtRuntime,
+        a_mat: &Mat,
+        kernel: Kernel,
+        cache_rows: usize,
+    ) -> Result<PjrtGram> {
+        let (m, n) = (a_mat.nrows(), a_mat.ncols());
+        anyhow::ensure!(
+            runtime.select_artifact(kernel.name(), m, n, 1).is_some(),
+            "no artifact for kind={} m={m} n={n}; run `make artifacts` or \
+             add the shape to python/compile/model.py",
+            kernel.name()
+        );
+        let a: Vec<f32> = a_mat.data().iter().map(|&v| v as f32).collect();
+        let a_buf = runtime.upload_f32(&a, &[m, n])?;
+        let row_norms = a_mat.row_norms_sq();
+        let diag = (0..m)
+            .map(|i| kernel.apply_scalar(row_norms[i], row_norms[i], row_norms[i]))
+            .collect();
+        let product = PjrtProduct {
+            runtime,
+            kernel,
+            a,
+            a_buf,
+            m,
+            n,
+        };
+        Ok(PjrtGram {
+            engine: GramEngine::new(Layout::Full, product, NoReduce, None, diag, cache_rows),
+        })
+    }
+
+    /// See [`super::check_kernel_params`].
+    pub fn check_params(kernel: Kernel) -> Result<()> {
+        super::check_kernel_params(kernel)
+    }
+}
+
+impl GramOracle for PjrtGram {
+    fn m(&self) -> usize {
+        self.engine.m()
+    }
+
+    fn gram(&mut self, sample: &[usize], q: &mut Mat, ledger: &mut Ledger) {
+        self.engine.gram(sample, q, ledger);
+    }
+
+    fn diag(&self) -> Vec<f64> {
+        self.engine.diag()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::Ledger;
+    use crate::solvers::LocalGram;
+    use crate::sparse::Csr;
+
+    fn artifacts_dir() -> PathBuf {
+        // Tests run from the crate root; artifacts are built by `make
+        // artifacts` (a test-suite prerequisite, see Makefile).
+        PjrtRuntime::default_dir()
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    fn dense_dataset(m: usize, n: usize) -> Mat {
+        let mut rng = crate::rng::Pcg::seeded(2024);
+        Mat::from_fn(m, n, |_, _| 0.3 * rng.next_gaussian())
+    }
+
+    #[test]
+    fn runtime_opens_and_lists_artifacts() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = PjrtRuntime::open(&artifacts_dir()).unwrap();
+        assert!(rt.manifest().artifacts().len() >= 30);
+        assert!(rt.select_artifact("rbf", 256, 64, 5).is_some());
+        // Padding picks the smallest k ≥ request.
+        assert_eq!(rt.select_artifact("rbf", 256, 64, 5).unwrap().k, 8);
+        assert_eq!(rt.select_artifact("rbf", 256, 64, 200).unwrap().k, 256);
+        assert!(rt.select_artifact("rbf", 256, 64, 500).is_none());
+        assert!(rt.select_artifact("rbf", 123, 64, 1).is_none());
+    }
+
+    #[test]
+    fn pjrt_gram_matches_native_path_all_kernels() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let a = dense_dataset(256, 64);
+        let a_csr = Csr::from_dense(&a);
+        for kernel in [Kernel::Linear, Kernel::paper_poly(), Kernel::paper_rbf()] {
+            let rt = PjrtRuntime::open(&artifacts_dir()).unwrap();
+            let mut pjrt = PjrtGram::new(rt, &a, kernel).unwrap();
+            let mut native = LocalGram::new(a_csr.clone(), kernel);
+            let sample = vec![3usize, 77, 200, 13, 13];
+            let mut q1 = Mat::zeros(5, 256);
+            let mut q2 = Mat::zeros(5, 256);
+            pjrt.gram(&sample, &mut q1, &mut Ledger::new());
+            native.gram(&sample, &mut q2, &mut Ledger::new());
+            for (x, y) in q1.data().iter().zip(q2.data()) {
+                // f32 artifact vs f64 native: loose tolerance.
+                assert!(
+                    (x - y).abs() < 1e-4 * y.abs().max(1.0),
+                    "{kernel:?}: {x} vs {y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cached_pjrt_gram_is_bitwise_equal_to_uncached() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let a = dense_dataset(256, 64);
+        let mut plain =
+            PjrtGram::new(PjrtRuntime::open(&artifacts_dir()).unwrap(), &a, Kernel::paper_rbf())
+                .unwrap();
+        let mut cached = PjrtGram::with_cache(
+            PjrtRuntime::open(&artifacts_dir()).unwrap(),
+            &a,
+            Kernel::paper_rbf(),
+            16,
+        )
+        .unwrap();
+        for sample in [vec![1usize, 2, 3], vec![2usize, 1, 9], vec![1usize, 1, 2]] {
+            let mut q1 = Mat::zeros(sample.len(), 256);
+            let mut q2 = Mat::zeros(sample.len(), 256);
+            plain.gram(&sample, &mut q1, &mut Ledger::new());
+            cached.gram(&sample, &mut q2, &mut Ledger::new());
+            assert_eq!(q1.data(), q2.data());
+        }
+    }
+
+    #[test]
+    fn pjrt_gram_diag_is_consistent() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let a = dense_dataset(256, 64);
+        let rt = PjrtRuntime::open(&artifacts_dir()).unwrap();
+        let pjrt = PjrtGram::new(rt, &a, Kernel::paper_rbf()).unwrap();
+        for v in pjrt.diag() {
+            assert!((v - 1.0).abs() < 1e-12); // RBF diag = 1
+        }
+    }
+}

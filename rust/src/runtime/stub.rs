@@ -1,0 +1,96 @@
+//! Offline stub for the PJRT runtime (built without the `xla-pjrt`
+//! feature). Same API surface as the real implementation; the only
+//! constructor ([`PjrtRuntime::open`]) returns an error, so the other
+//! methods are unreachable at runtime — the `Infallible` field makes
+//! both types unconstructable.
+
+use std::convert::Infallible;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::costmodel::Ledger;
+use crate::dense::Mat;
+use crate::gram::GramOracle;
+use crate::kernelfn::Kernel;
+
+use super::manifest::Manifest;
+
+const UNAVAILABLE: &str =
+    "PJRT support not compiled in (enable the `xla-pjrt` cargo feature and provide the \
+     vendored `xla` crate)";
+
+/// Stub PJRT client: cannot be constructed.
+pub struct PjrtRuntime {
+    #[allow(dead_code)]
+    _unconstructable: Infallible,
+}
+
+impl PjrtRuntime {
+    /// Always fails in the stub build.
+    pub fn open(_dir: &Path) -> Result<PjrtRuntime> {
+        Err(anyhow!("{UNAVAILABLE}"))
+    }
+
+    /// The default artifact directory (`$KCD_ARTIFACTS` or `artifacts/`).
+    pub fn default_dir() -> PathBuf {
+        super::default_artifacts_dir()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        unreachable!("stub PjrtRuntime cannot be constructed")
+    }
+
+    /// Platform string of the underlying PJRT client.
+    pub fn platform(&self) -> String {
+        unreachable!("stub PjrtRuntime cannot be constructed")
+    }
+
+    /// Execute the gram artifact `name` on `(a, s)` (f32, row-major).
+    pub fn execute_gram(&mut self, _name: &str, _a: &[f32], _s: &[f32]) -> Result<Vec<f32>> {
+        unreachable!("stub PjrtRuntime cannot be constructed")
+    }
+}
+
+/// Stub PJRT-backed oracle: cannot be constructed.
+pub struct PjrtGram {
+    #[allow(dead_code)]
+    _unconstructable: Infallible,
+}
+
+impl PjrtGram {
+    /// Always fails in the stub build (the runtime argument cannot exist,
+    /// but the signature keeps call sites compiling unchanged).
+    pub fn new(_runtime: PjrtRuntime, _a: &Mat, _kernel: Kernel) -> Result<PjrtGram> {
+        Err(anyhow!("{UNAVAILABLE}"))
+    }
+
+    /// Cached-constructor counterpart; always fails in the stub build.
+    pub fn with_cache(
+        _runtime: PjrtRuntime,
+        _a: &Mat,
+        _kernel: Kernel,
+        _cache_rows: usize,
+    ) -> Result<PjrtGram> {
+        Err(anyhow!("{UNAVAILABLE}"))
+    }
+
+    /// See [`super::check_kernel_params`].
+    pub fn check_params(kernel: Kernel) -> Result<()> {
+        super::check_kernel_params(kernel)
+    }
+}
+
+impl GramOracle for PjrtGram {
+    fn m(&self) -> usize {
+        unreachable!("stub PjrtGram cannot be constructed")
+    }
+
+    fn gram(&mut self, _sample: &[usize], _q: &mut Mat, _ledger: &mut Ledger) {
+        unreachable!("stub PjrtGram cannot be constructed")
+    }
+
+    fn diag(&self) -> Vec<f64> {
+        unreachable!("stub PjrtGram cannot be constructed")
+    }
+}

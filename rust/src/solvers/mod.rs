@@ -8,11 +8,13 @@
 //!   by the relative-solution-error convergence metric).
 //! * [`objective`] — K-SVM dual/primal objectives and duality gap.
 //!
-//! All solvers are generic over a [`GramOracle`], which produces rows of
-//! the kernel matrix on demand. The oracle is where distribution lives:
-//! [`LocalGram`] computes locally, [`DistGram`] computes a partial gram on
-//! this rank's 1D-column shard and sum-allreduces it (the paper's
-//! parallelization), and `runtime::PjrtGram` executes the AOT-compiled
+//! All solvers are generic over a [`GramOracle`] (defined in
+//! [`crate::gram`], re-exported here), which produces rows of the kernel
+//! matrix on demand. Every oracle is a thin configuration of the staged
+//! gram engine: [`LocalGram`] computes locally, [`DistGram`] computes a
+//! partial gram on this rank's 1D-column shard and sum-allreduces it (the
+//! paper's parallelization), [`NystromGram`] multiplies precomputed
+//! low-rank factors, and `runtime::PjrtGram` executes the AOT-compiled
 //! JAX/Pallas artifact. The solver code is *identical* in serial and
 //! distributed runs — every rank executes the same deterministic updates
 //! on replicated state, exactly like the paper's MPI implementation.
@@ -40,7 +42,9 @@ pub use cocoa::{cocoa_svm, CocoaParams, CocoaResult};
 pub use dcd::{dcd, dcd_sstep, SvmParams, SvmVariant};
 pub use krr_exact::{full_kernel_matrix, krr_exact};
 pub use nystrom::NystromGram;
-pub use oracle::{DistGram, GramOracle, LocalGram};
+pub use oracle::{DistGram, LocalGram};
+
+pub use crate::gram::GramOracle;
 
 /// Convergence-trace callback: called after every (inner-)iteration with
 /// `(iteration, α)`. Figure benches use it to record duality gap /

@@ -9,9 +9,14 @@
 //! after an `O(l·nnz(A) + l³)` setup — a win when `l ≪ nnz(A)/m`
 //! (e.g. wide microarray data). The `ablation_nystrom` bench measures
 //! the accuracy-vs-flops trade-off as `l` varies.
+//!
+//! Engine configuration: [`LowRankProduct`] over the precomputed factors
+//! (finished kernel values, so no epilogue) → no reduction; the setup
+//! math (landmark sampling, Cholesky of `W`) lives here.
 
-use crate::costmodel::{Ledger, Phase};
+use crate::costmodel::Ledger;
 use crate::dense::{Cholesky, Mat};
+use crate::gram::{GramEngine, Layout, LowRankProduct, NoReduce};
 use crate::kernelfn::Kernel;
 use crate::rng::Pcg;
 use crate::sparse::Csr;
@@ -20,14 +25,7 @@ use super::{GramOracle, LocalGram};
 
 /// Gram oracle over the rank-`l` Nyström approximation of `K`.
 pub struct NystromGram {
-    /// `C W⁻¹` (m×l) — precomputed so a sampled row is one (l)·(l×m)
-    /// product.
-    cw: Mat,
-    /// `Cᵀ` stored row-major as l×m for contiguous row access.
-    ct: Mat,
-    m: usize,
-    l: usize,
-    diag: Vec<f64>,
+    engine: GramEngine<LowRankProduct, NoReduce>,
 }
 
 impl NystromGram {
@@ -35,6 +33,19 @@ impl NystromGram {
     /// `jitter` regularizes `W` (standard practice; keeps the
     /// factorization stable when landmarks are nearly dependent).
     pub fn new(a: &Csr, kernel: Kernel, l: usize, jitter: f64, seed: u64) -> NystromGram {
+        Self::with_cache(a, kernel, l, jitter, seed, 0)
+    }
+
+    /// Same, with the engine's kernel-row cache enabled for
+    /// `cache_rows > 0`.
+    pub fn with_cache(
+        a: &Csr,
+        kernel: Kernel,
+        l: usize,
+        jitter: f64,
+        seed: u64,
+        cache_rows: usize,
+    ) -> NystromGram {
         let m = a.nrows();
         assert!(l >= 1 && l <= m, "landmarks must be in [1, m]");
         let mut rng = Pcg::new(seed, 0x4E75);
@@ -88,29 +99,31 @@ impl NystromGram {
             .collect();
 
         NystromGram {
-            cw,
-            ct: c_t,
-            m,
-            l,
-            diag,
+            engine: GramEngine::new(
+                Layout::Full,
+                LowRankProduct::new(cw, c_t),
+                NoReduce,
+                None,
+                diag,
+                cache_rows,
+            ),
         }
     }
 
     pub fn rank(&self) -> usize {
-        self.l
+        self.engine.product().rank()
     }
 
     /// Frobenius-relative error of the approximation against the exact
     /// kernel (O(m²·l); diagnostics only).
-    pub fn approx_error(&self, a: &Csr, kernel: Kernel) -> f64 {
+    pub fn approx_error(&mut self, a: &Csr, kernel: Kernel) -> f64 {
+        let m = self.engine.m();
         let mut exact = LocalGram::new(a.clone(), kernel);
-        let full: Vec<usize> = (0..self.m).collect();
-        let mut k_exact = Mat::zeros(self.m, self.m);
+        let full: Vec<usize> = (0..m).collect();
+        let mut k_exact = Mat::zeros(m, m);
         exact.gram(&full, &mut k_exact, &mut Ledger::new());
-        let mut k_hat = Mat::zeros(self.m, self.m);
-        let mut ledger = Ledger::new();
-        let mut this = self.clone_for_eval();
-        this.gram(&full, &mut k_hat, &mut ledger);
+        let mut k_hat = Mat::zeros(m, m);
+        self.engine.gram(&full, &mut k_hat, &mut Ledger::new());
         let mut num = 0.0;
         let mut den = 0.0;
         for (x, y) in k_hat.data().iter().zip(k_exact.data()) {
@@ -119,55 +132,26 @@ impl NystromGram {
         }
         (num / den.max(f64::MIN_POSITIVE)).sqrt()
     }
-
-    fn clone_for_eval(&self) -> NystromGram {
-        NystromGram {
-            cw: self.cw.clone(),
-            ct: self.ct.clone(),
-            m: self.m,
-            l: self.l,
-            diag: self.diag.clone(),
-        }
-    }
 }
 
 impl GramOracle for NystromGram {
     fn m(&self) -> usize {
-        self.m
+        self.engine.m()
     }
 
     fn gram(&mut self, sample: &[usize], q: &mut Mat, ledger: &mut Ledger) {
-        assert_eq!(q.nrows(), sample.len());
-        assert_eq!(q.ncols(), self.m);
-        // K̂(S, ·) = (C W⁻¹)[S, :] · Cᵀ — a (k×l)·(l×m) product.
-        ledger.time(Phase::KernelCompute, || {
-            for (r, &i) in sample.iter().enumerate() {
-                let coeffs = self.cw.row(i);
-                let out = q.row_mut(r);
-                out.fill(0.0);
-                for (t, &ct_row) in coeffs.iter().enumerate() {
-                    if ct_row == 0.0 {
-                        continue;
-                    }
-                    crate::dense::axpy(ct_row, self.ct.row(t), out);
-                }
-            }
-        });
-        ledger.add_flops(
-            Phase::KernelCompute,
-            2.0 * sample.len() as f64 * self.l as f64 * self.m as f64,
-        );
-        ledger.add_kernel_call(sample.len());
+        self.engine.gram(sample, q, ledger);
     }
 
     fn diag(&self) -> Vec<f64> {
-        self.diag.clone()
+        self.engine.diag()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::costmodel::Phase;
     use crate::data::gen_dense_classification;
     use crate::solvers::{dcd, SvmParams, SvmVariant};
 
@@ -179,7 +163,7 @@ mod tests {
     fn full_rank_nystrom_is_exact() {
         let a = dataset();
         for kernel in [Kernel::Linear, Kernel::paper_rbf()] {
-            let ny = NystromGram::new(&a, kernel, 50, 0.0, 1);
+            let mut ny = NystromGram::new(&a, kernel, 50, 0.0, 1);
             let err = ny.approx_error(&a, kernel);
             assert!(err < 1e-6, "{kernel:?}: full-rank error {err}");
         }
@@ -228,6 +212,24 @@ mod tests {
         let a_ny = dcd(&mut ny, &ds.y, &p, &mut Ledger::new(), None);
         let dev = crate::dense::rel_err(&a_ny, &a_exact);
         assert!(dev < 0.05, "high-rank nystrom deviation {dev}");
+    }
+
+    #[test]
+    fn cached_nystrom_is_bitwise_equal_to_uncached() {
+        let a = dataset();
+        let kernel = Kernel::paper_rbf();
+        let mut plain = NystromGram::new(&a, kernel, 20, 1e-10, 4);
+        let mut cached = NystromGram::with_cache(&a, kernel, 20, 1e-10, 4, 8);
+        let mut rng = crate::rng::Pcg::seeded(3);
+        for _ in 0..15 {
+            let k = rng.gen_range(1, 6);
+            let sample: Vec<usize> = (0..k).map(|_| rng.gen_below(50)).collect();
+            let mut q1 = Mat::zeros(k, 50);
+            let mut q2 = Mat::zeros(k, 50);
+            plain.gram(&sample, &mut q1, &mut Ledger::new());
+            cached.gram(&sample, &mut q2, &mut Ledger::new());
+            assert_eq!(q1.data(), q2.data());
+        }
     }
 
     #[test]

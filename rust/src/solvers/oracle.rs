@@ -1,103 +1,69 @@
-//! Gram oracles: on-demand computation of sampled kernel-matrix rows.
+//! Gram oracles: thin configurations of the staged gram engine
+//! ([`crate::gram`]).
 //!
-//! `gram(sample, q, ledger)` fills `q` (`sample.len() × m`) with
-//! `q[r][i] = K(a_{sample_r}, a_i)`. The oracle owns the data layout:
+//! * [`LocalGram`] — full matrix on one rank: CSR product → no reduction
+//!   → kernel epilogue.
+//! * [`DistGram`] — this rank's 1D-column shard: partial CSR product →
+//!   `allreduce_sum` (real messages, real counts) → redundant kernel
+//!   epilogue — exactly the communication pattern of the paper's
+//!   Section 4 analysis.
 //!
-//! * [`LocalGram`] — full matrix on one rank (serial reference).
-//! * [`DistGram`] — this rank's 1D-column shard; computes the *partial*
-//!   linear gram, sum-allreduces it across ranks (real messages, real
-//!   counts), then applies the nonlinear kernel map redundantly —
-//!   exactly the communication pattern of the paper's Section 4 analysis.
+//! Both take an optional kernel-row cache (`with_cache`); `new` keeps the
+//! cache off, which reproduces the pre-engine cost accounting count for
+//! count.
 
 use crate::comm::{allreduce_sum, AllreduceAlgo, CommStats, Communicator};
-use crate::costmodel::{Ledger, Phase};
+use crate::costmodel::Ledger;
 use crate::dense::Mat;
+use crate::gram::{AllreduceSum, CsrProduct, Epilogue, GramEngine, Layout, NoReduce};
 use crate::kernelfn::Kernel;
 use crate::sparse::Csr;
 
-/// Produces sampled rows of the kernel matrix `K(A, A)`.
-pub trait GramOracle {
-    /// Number of samples `m` (kernel-matrix dimension).
-    fn m(&self) -> usize;
-
-    /// Fill `q[r][·]` with kernel row `sample[r]`, recording costs.
-    fn gram(&mut self, sample: &[usize], q: &mut Mat, ledger: &mut Ledger);
-
-    /// `K(a_i, a_i)` for all `i` (cheap; used for SVM `η` sanity checks
-    /// and objective evaluation).
-    fn diag(&self) -> Vec<f64>;
-
-    /// Communication statistics accumulated so far (zero for local).
-    fn comm_stats(&self) -> CommStats {
-        CommStats::default()
-    }
-}
-
-/// Density below which the transpose-based gram beats the scatter-dot
-/// variant (cost `f²mn` vs `fmn` per sampled row; crossover well below
-/// 1.0, with slack for its worse write locality). See §Perf in
-/// EXPERIMENTS.md for the measured before/after.
-const TRANSPOSE_GRAM_MAX_DENSITY: f64 = 0.25;
+pub use crate::gram::GramOracle;
 
 /// Serial oracle over the full matrix.
 pub struct LocalGram {
-    a: Csr,
-    /// Cached transpose for the sparse fast path (None for dense data).
-    at: Option<Csr>,
-    kernel: Kernel,
-    row_norms: Vec<f64>,
-    scratch: Vec<f64>,
+    engine: GramEngine<CsrProduct, NoReduce>,
 }
 
 impl LocalGram {
     pub fn new(a: Csr, kernel: Kernel) -> Self {
-        let row_norms = a.row_norms_sq();
-        let at = (a.density() < TRANSPOSE_GRAM_MAX_DENSITY).then(|| a.transpose());
+        Self::with_cache(a, kernel, 0)
+    }
+
+    /// `cache_rows > 0` enables the deterministic kernel-row LRU cache.
+    pub fn with_cache(a: Csr, kernel: Kernel, cache_rows: usize) -> Self {
+        let epilogue = Epilogue::new(kernel, a.row_norms_sq());
+        let diag = epilogue.diag();
+        let product = CsrProduct::new(a);
         LocalGram {
-            a,
-            at,
-            kernel,
-            row_norms,
-            scratch: Vec::new(),
+            engine: GramEngine::new(
+                Layout::Full,
+                product,
+                NoReduce,
+                Some(epilogue),
+                diag,
+                cache_rows,
+            ),
         }
     }
 
     pub fn kernel(&self) -> Kernel {
-        self.kernel
+        self.engine.kernel().expect("local pipeline has an epilogue")
     }
 }
 
 impl GramOracle for LocalGram {
     fn m(&self) -> usize {
-        self.a.nrows()
+        self.engine.m()
     }
 
     fn gram(&mut self, sample: &[usize], q: &mut Mat, ledger: &mut Ledger) {
-        assert_eq!(q.nrows(), sample.len());
-        assert_eq!(q.ncols(), self.a.nrows());
-        ledger.time(Phase::KernelCompute, || {
-            match &self.at {
-                Some(at) => self.a.sampled_gram_t(at, sample, q),
-                None => self.a.sampled_gram(sample, q, &mut self.scratch),
-            }
-            let sample_norms: Vec<f64> = sample.iter().map(|&i| self.row_norms[i]).collect();
-            self.kernel.apply_block(q, &sample_norms, &self.row_norms);
-        });
-        ledger.add_flops(
-            Phase::KernelCompute,
-            2.0 * sample.len() as f64 * self.a.nnz() as f64
-                + self.kernel.mu() * sample.len() as f64 * self.m() as f64,
-        );
-        ledger.add_kernel_call(sample.len());
+        self.engine.gram(sample, q, ledger);
     }
 
     fn diag(&self) -> Vec<f64> {
-        (0..self.m())
-            .map(|i| {
-                self.kernel
-                    .apply_scalar(self.row_norms[i], self.row_norms[i], self.row_norms[i])
-            })
-            .collect()
+        self.engine.diag()
     }
 }
 
@@ -110,87 +76,65 @@ impl GramOracle for LocalGram {
 /// row norms, which are themselves a column-shard sum — allreduced once
 /// at construction.
 pub struct DistGram<'c, C: Communicator> {
-    shard: Csr,
-    /// Cached shard transpose for the sparse fast path.
-    shard_t: Option<Csr>,
-    kernel: Kernel,
-    /// Full-matrix row norms (allreduced at construction).
-    row_norms: Vec<f64>,
-    comm: &'c mut C,
-    algo: AllreduceAlgo,
-    scratch: Vec<f64>,
+    engine: GramEngine<CsrProduct, AllreduceSum<'c, C>>,
 }
 
 impl<'c, C: Communicator> DistGram<'c, C> {
     /// Build from this rank's column shard. Collective: every rank must
     /// call this at the same time (one allreduce for RBF row norms).
     pub fn new(shard: Csr, kernel: Kernel, comm: &'c mut C, algo: AllreduceAlgo) -> Self {
+        Self::with_cache(shard, kernel, comm, algo, 0)
+    }
+
+    /// Collective; `cache_rows` must be identical on every rank (the
+    /// deterministic caches then stay in lockstep, keeping the allreduces
+    /// matched — see [`crate::gram`]).
+    pub fn with_cache(
+        shard: Csr,
+        kernel: Kernel,
+        comm: &'c mut C,
+        algo: AllreduceAlgo,
+        cache_rows: usize,
+    ) -> Self {
+        let (rank, ranks) = (comm.rank(), comm.size());
         let mut row_norms = shard.row_norms_sq();
         allreduce_sum(comm, &mut row_norms, algo);
-        let shard_t = (shard.density() < TRANSPOSE_GRAM_MAX_DENSITY).then(|| shard.transpose());
+        let epilogue = Epilogue::new(kernel, row_norms);
+        let diag = epilogue.diag();
+        let product = CsrProduct::new(shard);
+        let reduce = AllreduceSum::new(comm, algo);
         DistGram {
-            shard,
-            shard_t,
-            kernel,
-            row_norms,
-            comm,
-            algo,
-            scratch: Vec::new(),
+            engine: GramEngine::new(
+                Layout::ColShard { rank, ranks },
+                product,
+                reduce,
+                Some(epilogue),
+                diag,
+                cache_rows,
+            ),
         }
     }
 
     pub fn rank(&self) -> usize {
-        self.comm.rank()
+        self.engine.reduce_stage().rank()
     }
 }
 
 impl<'c, C: Communicator> GramOracle for DistGram<'c, C> {
     fn m(&self) -> usize {
-        self.shard.nrows()
+        self.engine.m()
     }
 
     fn gram(&mut self, sample: &[usize], q: &mut Mat, ledger: &mut Ledger) {
-        assert_eq!(q.nrows(), sample.len());
-        assert_eq!(q.ncols(), self.shard.nrows());
-        // Partial linear gram on the local shard.
-        ledger.time(Phase::KernelCompute, || {
-            match &self.shard_t {
-                Some(at) => self.shard.sampled_gram_t(at, sample, q),
-                None => self.shard.sampled_gram(sample, q, &mut self.scratch),
-            }
-        });
-        ledger.add_flops(
-            Phase::KernelCompute,
-            2.0 * sample.len() as f64 * self.shard.nnz() as f64,
-        );
-        // Sum-reduce the partial blocks (the per-iteration allreduce the
-        // s-step method amortizes).
-        ledger.time(Phase::Allreduce, || {
-            allreduce_sum(self.comm, q.data_mut(), self.algo);
-        });
-        // Redundant nonlinear map.
-        ledger.time(Phase::KernelCompute, || {
-            let sample_norms: Vec<f64> = sample.iter().map(|&i| self.row_norms[i]).collect();
-            self.kernel.apply_block(q, &sample_norms, &self.row_norms);
-        });
-        ledger.add_flops(
-            Phase::KernelCompute,
-            self.kernel.mu() * sample.len() as f64 * self.m() as f64,
-        );
-        ledger.add_kernel_call(sample.len());
+        self.engine.gram(sample, q, ledger);
     }
 
     fn diag(&self) -> Vec<f64> {
-        (0..self.m())
-            .map(|i| {
-                self.kernel
-                    .apply_scalar(self.row_norms[i], self.row_norms[i], self.row_norms[i])
-            })
-            .collect()
+        self.engine.diag()
     }
 
     fn comm_stats(&self) -> CommStats {
-        self.comm.stats()
+        self.engine.comm_stats()
     }
 }
 
@@ -198,6 +142,7 @@ impl<'c, C: Communicator> GramOracle for DistGram<'c, C> {
 mod tests {
     use super::*;
     use crate::comm::run_ranks;
+    use crate::costmodel::Phase;
     use crate::data::gen_dense_classification;
     use crate::rng::Pcg;
 
@@ -274,6 +219,100 @@ mod tests {
             // recursive doubling sends w·log2(4) words each.
             assert_eq!(s.allreduces, 2);
             assert_eq!(s.words, (16 + 32) * 2);
+        }
+    }
+
+    /// Ledger sanity for the cache: hits must reduce the *measured*
+    /// `CommStats::words` by exactly the avoided row-sized allreduce
+    /// payloads (× the collective's per-rank word factor), skip whole
+    /// allreduces on full hits, and leave the block values bitwise
+    /// unchanged.
+    #[test]
+    fn cache_hits_reduce_measured_allreduce_words_exactly() {
+        let ds = gen_dense_classification(16, 8, 0.0, 3);
+        let m = 16u64;
+        let shards = ds.shard_cols(4);
+        let run = |cache_rows: usize| {
+            let shards = shards.clone();
+            run_ranks(4, move |c| {
+                let shard = shards[c.rank()].clone();
+                let mut dist = DistGram::with_cache(
+                    shard,
+                    Kernel::Linear,
+                    c,
+                    AllreduceAlgo::RecursiveDoubling,
+                    cache_rows,
+                );
+                let mut ledger = Ledger::new();
+                let mut q1 = Mat::zeros(2, 16);
+                dist.gram(&[0, 5], &mut q1, &mut ledger); // cold: 2 misses
+                let mut q2 = Mat::zeros(2, 16);
+                dist.gram(&[0, 5], &mut q2, &mut ledger); // warm: 2 hits
+                let mut q3 = Mat::zeros(2, 16);
+                dist.gram(&[5, 7], &mut q3, &mut ledger); // mixed: 1 hit, 1 miss
+                (dist.comm_stats(), ledger.cache, q1, q2, q3)
+            })
+        };
+        let uncached = run(0);
+        let cached = run(8);
+        // Recursive doubling over P=4 sends payload·log2(4) = 2·payload
+        // words per rank per allreduce.
+        for ((su, cu, u1, u2, u3), (sc, cc, c1, c2, c3)) in
+            uncached.iter().zip(&cached)
+        {
+            assert_eq!(cu.hits, 0);
+            assert_eq!(cc.hits, 3);
+            assert_eq!(cc.misses, 3);
+            // Payload words avoided: m per hit row.
+            assert_eq!(cc.words_saved, 3 * m);
+            assert_eq!(cc.bytes_saved(), 3 * m * 8);
+            // Warm call skipped its allreduce entirely.
+            assert_eq!(cc.allreduces_saved, 1);
+            assert_eq!(su.allreduces - sc.allreduces, 1);
+            // Measured wire words drop by exactly payload × factor.
+            assert_eq!(su.words - sc.words, cc.words_saved * 2);
+            assert_eq!(cu.words_saved, 0);
+            // And the served rows are bitwise identical.
+            assert_eq!(u1.data(), c1.data());
+            assert_eq!(u2.data(), c2.data());
+            assert_eq!(u3.data(), c3.data());
+        }
+    }
+
+    #[test]
+    fn cached_dist_gram_is_bitwise_equal_across_algorithms() {
+        let ds = gen_dense_classification(24, 16, 0.0, 9);
+        let kernel = Kernel::paper_rbf();
+        for algo in [AllreduceAlgo::Rabenseifner, AllreduceAlgo::Linear] {
+            for p in [2usize, 3, 4] {
+                let shards = ds.shard_cols(p);
+                let run = |cache_rows: usize| {
+                    let shards = shards.clone();
+                    run_ranks(p, move |c| {
+                        let shard = shards[c.rank()].clone();
+                        let mut dist =
+                            DistGram::with_cache(shard, kernel, c, algo, cache_rows);
+                        let mut rng = Pcg::seeded(77);
+                        let mut out = Vec::new();
+                        for _ in 0..12 {
+                            let k = rng.gen_range(1, 5);
+                            let sample: Vec<usize> =
+                                (0..k).map(|_| rng.gen_below(24)).collect();
+                            let mut q = Mat::zeros(k, 24);
+                            dist.gram(&sample, &mut q, &mut Ledger::new());
+                            out.extend_from_slice(q.data());
+                        }
+                        out
+                    })
+                };
+                let plain = run(0);
+                let cached = run(6);
+                for (a, b) in plain.iter().zip(&cached) {
+                    for (x, y) in a.iter().zip(b) {
+                        assert_eq!(x, y, "{algo:?} p={p}");
+                    }
+                }
+            }
         }
     }
 

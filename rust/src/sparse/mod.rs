@@ -286,6 +286,42 @@ impl Csr {
         }
     }
 
+    /// Blocked variant of [`Csr::sampled_gram`]: gathers the sampled rows
+    /// into a dense `k×n` scratch once, then streams the CSR a *single*
+    /// time, producing all `k` output rows per matrix row — versus the
+    /// scatter variant's full pass over the CSR per sampled row. Same
+    /// flop count, `k×` less memory traffic over `self` (the §Perf
+    /// locality win the gram engine's product stage uses for dense-ish
+    /// data). Per-entry summation order is identical to
+    /// [`Csr::sampled_gram`] (ascending column index within each row), so
+    /// results are bitwise equal.
+    pub fn sampled_gram_blocked(&self, sample: &[usize], q: &mut Mat, scratch: &mut Vec<f64>) {
+        assert_eq!(q.nrows(), sample.len());
+        assert_eq!(q.ncols(), self.nrows);
+        let k = sample.len();
+        let n = self.ncols;
+        scratch.clear();
+        scratch.resize(k * n, 0.0);
+        for (r, &sr) in sample.iter().enumerate() {
+            let (cols, vals) = self.row_parts(sr);
+            let row = &mut scratch[r * n..(r + 1) * n];
+            for (&j, &v) in cols.iter().zip(vals) {
+                row[j] = v;
+            }
+        }
+        for i in 0..self.nrows {
+            let (cols, vals) = self.row_parts(i);
+            for r in 0..k {
+                let srow = &scratch[r * n..(r + 1) * n];
+                let mut s = 0.0;
+                for (&j, &v) in cols.iter().zip(vals) {
+                    s += v * srow[j];
+                }
+                q[(r, i)] = s;
+            }
+        }
+    }
+
     /// Sampled gram block via a precomputed transpose (`at = self.T`):
     /// `q[r][i] = Σ_j self[sr, j] · at[j, i]`.
     ///
@@ -559,6 +595,26 @@ mod tests {
             for (a, b) in q.data().iter().zip(qref.data()) {
                 assert!((a - b).abs() < 1e-12);
             }
+        }
+    }
+
+    #[test]
+    fn sampled_gram_blocked_is_bitwise_equal_to_scatter() {
+        let mut r = Pcg::seeded(223);
+        for density in [0.05, 0.4, 1.0] {
+            let m = r.gen_range(3, 30);
+            let n = r.gen_range(2, 40);
+            let s = rand_sparse(&mut r, m, n, density);
+            let k = r.gen_range(1, m);
+            let mut sample = r.sample_without_replacement(m, k);
+            sample.push(sample[0]); // duplicate row must also match
+            let mut q1 = Mat::zeros(k + 1, m);
+            let mut q2 = Mat::zeros(k + 1, m);
+            let mut sc1 = Vec::new();
+            let mut sc2 = Vec::new();
+            s.sampled_gram(&sample, &mut q1, &mut sc1);
+            s.sampled_gram_blocked(&sample, &mut q2, &mut sc2);
+            assert_eq!(q1.data(), q2.data(), "density {density}");
         }
     }
 

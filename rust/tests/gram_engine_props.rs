@@ -1,0 +1,225 @@
+//! Property suites for the staged gram engine: oracle equivalence
+//! against direct kernel evaluation, and the cache-determinism contract
+//! (cache on ⇒ bitwise-identical blocks and solver outputs).
+
+use kcd::comm::{run_ranks, AllreduceAlgo};
+use kcd::costmodel::Ledger;
+use kcd::data::{gen_dense_classification, gen_uniform_sparse, Dataset, SynthParams, Task};
+use kcd::dense::Mat;
+use kcd::kernelfn::Kernel;
+use kcd::solvers::{
+    bdcd, bdcd_sstep, dcd, dcd_sstep, DistGram, GramOracle, KrrParams, LocalGram, SvmParams,
+    SvmVariant,
+};
+
+fn kernels() -> [Kernel; 3] {
+    [Kernel::Linear, Kernel::paper_poly(), Kernel::paper_rbf()]
+}
+
+/// Definition-based reference: `K(a_{S_r}, a_i)` from dense rows.
+fn direct_block(d: &Mat, kernel: Kernel, sample: &[usize]) -> Mat {
+    let m = d.nrows();
+    let mut q = Mat::zeros(sample.len(), m);
+    for (r, &sr) in sample.iter().enumerate() {
+        for i in 0..m {
+            let dot = kcd::dense::dot(d.row(sr), d.row(i));
+            let na = kcd::dense::dot(d.row(sr), d.row(sr));
+            let nb = kcd::dense::dot(d.row(i), d.row(i));
+            q[(r, i)] = kernel.apply_scalar(dot, na, nb);
+        }
+    }
+    q
+}
+
+/// A deterministic with-replacement sample stream (DCD's access pattern,
+/// which is what makes the cache hit).
+fn sample_stream(m: usize, calls: usize, seed: u64) -> Vec<Vec<usize>> {
+    let mut rng = kcd::rng::Pcg::seeded(seed);
+    (0..calls)
+        .map(|_| {
+            let k = rng.gen_range(1, 6);
+            (0..k).map(|_| rng.gen_below(m)).collect()
+        })
+        .collect()
+}
+
+/// Run the engine (local or distributed) over a sample stream, returning
+/// the concatenated blocks.
+fn run_engine(
+    ds: &Dataset,
+    kernel: Kernel,
+    p: usize,
+    cache_rows: usize,
+    stream: &[Vec<usize>],
+) -> Vec<f64> {
+    let m = ds.m();
+    if p == 1 {
+        let mut oracle = LocalGram::with_cache(ds.a.clone(), kernel, cache_rows);
+        let mut out = Vec::new();
+        for sample in stream {
+            let mut q = Mat::zeros(sample.len(), m);
+            oracle.gram(sample, &mut q, &mut Ledger::new());
+            out.extend_from_slice(q.data());
+        }
+        return out;
+    }
+    let shards = ds.shard_cols(p);
+    let outs = run_ranks(p, move |c| {
+        let shard = shards[c.rank()].clone();
+        let mut oracle =
+            DistGram::with_cache(shard, kernel, c, AllreduceAlgo::Rabenseifner, cache_rows);
+        let mut out = Vec::new();
+        for sample in stream {
+            let mut q = Mat::zeros(sample.len(), m);
+            oracle.gram(sample, &mut q, &mut Ledger::new());
+            out.extend_from_slice(q.data());
+        }
+        out
+    });
+    // All ranks hold the replicated block; they must agree bitwise.
+    for other in &outs[1..] {
+        assert_eq!(&outs[0], other, "ranks disagree");
+    }
+    outs.into_iter().next().unwrap()
+}
+
+/// Oracle equivalence: cached and uncached engines, all three kernels,
+/// p ∈ {1, 2, 4}, sparse and dense data — cached ≡ uncached bitwise, and
+/// both match direct kernel evaluation (bitwise at p = 1, where the
+/// summation order is identical; within 1e-9 across ranks, where the
+/// allreduce regroups the partial sums).
+#[test]
+fn prop_engine_matches_direct_evaluation_cached_and_uncached() {
+    let dense = gen_dense_classification(24, 10, 0.0, 42);
+    let sparse = gen_uniform_sparse(
+        SynthParams {
+            m: 26,
+            n: 120,
+            density: 0.05,
+            seed: 7,
+        },
+        Task::Classification,
+    );
+    for ds in [&dense, &sparse] {
+        let d = ds.a.to_dense();
+        let stream = sample_stream(ds.m(), 10, 0xCAFE);
+        for kernel in kernels() {
+            let reference: Vec<f64> = stream
+                .iter()
+                .flat_map(|s| direct_block(&d, kernel, s).data().to_vec())
+                .collect();
+            for p in [1usize, 2, 4] {
+                let plain = run_engine(ds, kernel, p, 0, &stream);
+                let cached = run_engine(ds, kernel, p, 8, &stream);
+                assert_eq!(
+                    plain, cached,
+                    "{} {kernel:?} p={p}: cache must be bitwise-transparent",
+                    ds.name
+                );
+                for (got, want) in plain.iter().zip(&reference) {
+                    if p == 1 {
+                        assert_eq!(got, want, "{} {kernel:?} p=1 bitwise", ds.name);
+                    } else {
+                        assert!(
+                            (got - want).abs() <= 1e-9 * want.abs().max(1.0),
+                            "{} {kernel:?} p={p}: {got} vs {want}",
+                            ds.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Solver-level determinism: `dcd`/`dcd_sstep` and `bdcd`/`bdcd_sstep`
+/// return identical α with the cache on vs off — for every kernel, both
+/// SVM variants, and cache sizes that do and don't fit the working set.
+#[test]
+fn prop_solvers_identical_with_cache_on_and_off() {
+    let svm_ds = gen_dense_classification(30, 8, 0.1, 505);
+    let krr_ds = {
+        let mut ds = gen_uniform_sparse(
+            SynthParams {
+                m: 28,
+                n: 90,
+                density: 0.08,
+                seed: 13,
+            },
+            Task::Regression,
+        );
+        // Regression labels from the generator are already real-valued.
+        ds.name = "sparse-krr".into();
+        ds
+    };
+    for kernel in kernels() {
+        for cache_rows in [4usize, 64] {
+            // --- DCD / s-step DCD ---------------------------------------
+            for variant in [SvmVariant::L1, SvmVariant::L2] {
+                let p = SvmParams {
+                    c: 1.0,
+                    variant,
+                    h: 150,
+                    seed: 3,
+                };
+                let mut plain = LocalGram::new(svm_ds.a.clone(), kernel);
+                let mut cached = LocalGram::with_cache(svm_ds.a.clone(), kernel, cache_rows);
+                let a1 = dcd(&mut plain, &svm_ds.y, &p, &mut Ledger::new(), None);
+                let a2 = dcd(&mut cached, &svm_ds.y, &p, &mut Ledger::new(), None);
+                assert_eq!(a1, a2, "dcd {kernel:?} {variant:?} cache={cache_rows}");
+
+                let mut plain = LocalGram::new(svm_ds.a.clone(), kernel);
+                let mut cached = LocalGram::with_cache(svm_ds.a.clone(), kernel, cache_rows);
+                let s1 = dcd_sstep(&mut plain, &svm_ds.y, &p, 8, &mut Ledger::new(), None);
+                let s2 = dcd_sstep(&mut cached, &svm_ds.y, &p, 8, &mut Ledger::new(), None);
+                assert_eq!(s1, s2, "dcd_sstep {kernel:?} {variant:?}");
+                // And the s-step ≡ classical equivalence survives caching.
+                for (x, y) in s2.iter().zip(&a2) {
+                    assert!((x - y).abs() < 1e-9, "sstep vs classical under cache");
+                }
+            }
+
+            // --- BDCD / s-step BDCD -------------------------------------
+            let p = KrrParams {
+                lambda: 1.0,
+                b: 4,
+                h: 80,
+                seed: 5,
+            };
+            let mut plain = LocalGram::new(krr_ds.a.clone(), kernel);
+            let mut cached = LocalGram::with_cache(krr_ds.a.clone(), kernel, cache_rows);
+            let a1 = bdcd(&mut plain, &krr_ds.y, &p, &mut Ledger::new(), None);
+            let a2 = bdcd(&mut cached, &krr_ds.y, &p, &mut Ledger::new(), None);
+            assert_eq!(a1, a2, "bdcd {kernel:?} cache={cache_rows}");
+
+            let mut plain = LocalGram::new(krr_ds.a.clone(), kernel);
+            let mut cached = LocalGram::with_cache(krr_ds.a.clone(), kernel, cache_rows);
+            let s1 = bdcd_sstep(&mut plain, &krr_ds.y, &p, 6, &mut Ledger::new(), None);
+            let s2 = bdcd_sstep(&mut cached, &krr_ds.y, &p, 6, &mut Ledger::new(), None);
+            assert_eq!(s1, s2, "bdcd_sstep {kernel:?} cache={cache_rows}");
+        }
+    }
+}
+
+/// Cache hits must actually occur under a DCD-like access stream (the
+/// saving is real, not vacuous) and hit counts must be deterministic
+/// across reruns.
+#[test]
+fn prop_cache_hits_are_real_and_deterministic() {
+    let ds = gen_dense_classification(20, 6, 0.0, 99);
+    let stream = sample_stream(20, 30, 0xBEEF);
+    let run = || {
+        let mut oracle = LocalGram::with_cache(ds.a.clone(), Kernel::paper_rbf(), 10);
+        let mut ledger = Ledger::new();
+        for sample in &stream {
+            let mut q = Mat::zeros(sample.len(), 20);
+            oracle.gram(sample, &mut q, &mut ledger);
+        }
+        (ledger.cache.hits, ledger.cache.misses)
+    };
+    let (h1, m1) = run();
+    let (h2, m2) = run();
+    assert_eq!((h1, m1), (h2, m2));
+    assert!(h1 > 0, "expected hits under with-replacement sampling");
+    assert!(m1 > 0);
+}

@@ -42,6 +42,7 @@ fn libsvm_roundtrip_through_distributed_solver() {
             s: 8,
             h: 600,
             seed: 5,
+            cache_rows: 0,
         },
         4,
         AllreduceAlgo::Rabenseifner,
@@ -95,6 +96,7 @@ fn solver_result_is_algorithm_invariant() {
         s: 4,
         h: 60,
         seed: 3,
+        cache_rows: 0,
     };
     let reference = run_serial(&ds, Kernel::paper_poly(), &problem, &solver, &machine).alpha;
     for algo in [
@@ -129,6 +131,7 @@ fn gap_series_final_point_matches_distributed_final_gap() {
             s: 8,
             h: 128,
             seed: 99,
+            cache_rows: 0,
         },
         4,
         AllreduceAlgo::Rabenseifner,

@@ -1,0 +1,184 @@
+//! A minimal, offline-friendly subset of the `anyhow` crate API.
+//!
+//! The build image has no crates.io access, so the workspace vendors the
+//! small slice of `anyhow` the codebase actually uses:
+//!
+//! * [`Error`] — an opaque error value carrying a context chain.
+//! * [`Result`] — `Result<T, Error>` alias.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — formatting constructors.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`.
+//!
+//! Display follows the real crate's convention: `{}` shows the outermost
+//! message, `{:#}` shows the full `outer: ...: root` chain.
+
+use std::fmt;
+
+/// `Result<T, Error>` — the crate's standard result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error value: an outermost message plus the chain of causes that
+/// were attached via [`Context`].
+pub struct Error {
+    /// `chain[0]` is the outermost message; later entries are causes.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a printable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap `self` with an additional layer of context.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        let mut chain = Vec::with_capacity(self.chain.len() + 1);
+        chain.push(context.to_string());
+        chain.extend(self.chain);
+        Error { chain }
+    }
+
+    fn from_cause<C: fmt::Display, E: fmt::Display>(context: C, cause: E) -> Error {
+        // `{:#}` lets a nested `Error` cause render its full chain.
+        Error {
+            chain: vec![context.to_string(), format!("{cause:#}")],
+        }
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// Attach context to the error variant of a `Result` (or to a missing
+/// `Option`), converting it into [`Error`].
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from_cause(context, e))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from_cause(f(), e))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = Err::<(), _>(io_err())
+            .with_context(|| "reading manifest")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: gone");
+    }
+
+    #[test]
+    fn nested_context_chains() {
+        let inner: Result<()> = Err(anyhow!("root cause"));
+        let e = inner.context("middle").unwrap_err().context("outer");
+        assert_eq!(format!("{e:#}"), "outer: middle: root cause");
+    }
+
+    #[test]
+    fn macros_compose() {
+        fn f(x: usize) -> Result<usize> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(f(12).unwrap_err().to_string().contains("12"));
+        assert!(f(5).is_err());
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn g() -> Result<String> {
+            let s = std::str::from_utf8(&[0xff])?;
+            Ok(s.to_string())
+        }
+        assert!(g().is_err());
+    }
+}
