@@ -52,6 +52,7 @@ fn ablation_allreduce(quick: bool) {
         let cfg = SweepConfig {
             p_list: vec![64],
             s_list: vec![8, 32, 128],
+            t_list: vec![1],
             h: if quick { 64 } else { 512 },
             seed: 1,
             algo,
@@ -212,6 +213,7 @@ fn ablation_machine(quick: bool) {
     let cfg = SweepConfig {
         p_list: vec![64],
         s_list: vec![8, 32, 128, 256],
+        t_list: vec![1],
         h: if quick { 64 } else { 512 },
         seed: 31,
         algo: AllreduceAlgo::Rabenseifner,

@@ -41,6 +41,7 @@ fn main() {
             &s_list,
             h,
             p,
+            1,
             AllreduceAlgo::Rabenseifner,
             &machine,
             0, // projected engine: P here exceeds one box

@@ -38,6 +38,7 @@ fn main() {
     let cfg = SweepConfig {
         p_list: vec![128, 256, 512, 1024, 2048, 4096],
         s_list: vec![8, 16, 32, 64, 128],
+        t_list: vec![1],
         h: if quick { 64 } else { 1024 },
         seed: 5,
         algo: AllreduceAlgo::Rabenseifner,
@@ -71,6 +72,7 @@ fn main() {
         &[8, 16, 32, 64, 128],
         cfg.h,
         2048,
+        1,
         AllreduceAlgo::Rabenseifner,
         &machine,
         0,

@@ -39,6 +39,7 @@ fn main() {
             &s_list,
             h,
             p,
+            1,
             AllreduceAlgo::Rabenseifner,
             &machine,
             0,

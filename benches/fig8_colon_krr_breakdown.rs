@@ -33,6 +33,7 @@ fn main() {
             &s_list,
             h,
             p,
+            1,
             AllreduceAlgo::Rabenseifner,
             &machine,
             if quick { 0 } else { 4 },

@@ -7,7 +7,9 @@ use kcd::bench_harness::{bench, black_box, section, BenchConfig};
 use kcd::comm::{allreduce_sum, run_ranks, AllreduceAlgo};
 use kcd::costmodel::Ledger;
 use kcd::dense::{gemm_nt, Cholesky, Mat};
+use kcd::gram::{CsrProduct, ProductStage};
 use kcd::kernelfn::Kernel;
+use kcd::parallel::ParallelProduct;
 use kcd::rng::Pcg;
 use kcd::solvers::{GramOracle, LocalGram};
 use kcd::sparse::Csr;
@@ -126,6 +128,38 @@ fn main() {
             stats.misses,
             r.median() * 1e3
         );
+    }
+
+    section("threaded product stage (dense gram, sampled-row split)");
+    // Dense data where the linear product dominates — the regime the
+    // intra-rank threading targets. Every thread count produces the
+    // same bits (pinned by tests); only the wall clock moves.
+    {
+        let dense = kcd::data::gen_dense_classification(1024, 256, 0.0, 21);
+        let sample: Vec<usize> = (0..64).map(|i| (i * 13) % 1024).collect();
+        let mut q = Mat::zeros(64, 1024);
+        let mut t1_median = f64::NAN;
+        let mut reference: Option<Vec<f64>> = None;
+        for t in [1usize, 2, 4, 8] {
+            let mut prod = ParallelProduct::new(CsrProduct::new(dense.a.clone()), t);
+            let r = bench(
+                &format!("ParallelProduct dense gram 64x1024 t={t}"),
+                &cfg,
+                || {
+                    prod.compute(&sample, &mut q);
+                    q.data()[0]
+                },
+            );
+            match &reference {
+                None => reference = Some(q.data().to_vec()),
+                Some(want) => assert_eq!(q.data(), &want[..], "t={t} bitwise"),
+            }
+            if t == 1 {
+                t1_median = r.median();
+            } else {
+                println!("  → {:.2}x speedup over t=1", t1_median / r.median());
+            }
+        }
     }
 
     section("allreduce algorithms (P=8 threads, w=4096)");

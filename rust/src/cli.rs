@@ -3,7 +3,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::comm::AllreduceAlgo;
 use crate::coordinator::breakdown::breakdown;
@@ -39,6 +39,8 @@ const KNOWN_FLAGS: &[(&str, bool /* takes a value */)] = &[
     ("every", true),
     ("measured-limit", true),
     ("gram-cache-rows", true),
+    ("threads", true),
+    ("t-list", true),
     ("config", true),
     ("csv", false),
     ("quick", false),
@@ -171,8 +173,18 @@ COMMON FLAGS:
                     train-svm / train-krr / convergence only; the
                     scaling and breakdown sweeps always run uncached
                     (hit patterns cannot be projected analytically).
+  --threads <n>     Intra-rank worker threads for the gram product  [1]
+                    (bitwise-identical results for every count;
+                    all solver commands, scaling and breakdown).
+  --t-list <a,b,c>  scaling only: thread counts for the hybrid
+                    P ranks × t threads sweep           [--threads]
   --csv             Emit CSV instead of markdown tables.
   --config <file>   TOML-subset config (flags override).
+
+Every value flag may also be given as a config-file key (lists as
+`p-list = [1, 2, 4]`); flags override the file. A key that is present
+but malformed (e.g. `--h 2.5`, `seed = -1`) is a hard error, never a
+silent default.
 ";
 
 /// Entry point used by `main.rs` (kept in the library for testability).
@@ -198,10 +210,12 @@ fn load_config(args: &Args) -> Result<Config> {
         }
         None => Config::new(),
     };
-    // CLI flags override file values under their own names.
+    // CLI flags override file values under their own names. (List flags
+    // — p-list / s-list / t-list — are merged in `list_from` instead:
+    // their comma syntax is not a config value.)
     for key in [
         "dataset", "scale", "kernel", "problem", "c", "lambda", "b", "h", "s", "p", "algo",
-        "machine", "seed", "gram-cache-rows",
+        "machine", "seed", "gram-cache-rows", "threads", "every", "measured-limit",
     ] {
         if let Some(v) = args.flag(key) {
             cfg.set(key, v);
@@ -210,9 +224,53 @@ fn load_config(args: &Args) -> Result<Config> {
     Ok(cfg)
 }
 
+/// Resolve a sweep-list parameter: the `--key a,b,c` flag wins, else a
+/// `key = [a, b, c]` config entry (strictly validated), else `default`.
+fn list_from(args: &Args, cfg: &Config, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+    if args.flag(key).is_some() {
+        return args.usize_list_flag(key, default);
+    }
+    match cfg.try_usize_list(key).map_err(|e| anyhow!(e))? {
+        Some(list) => Ok(list),
+        None => Ok(default.to_vec()),
+    }
+}
+
+/// Strictly read the intra-rank worker-thread count (default 1).
+fn threads_from(cfg: &Config) -> Result<usize> {
+    let threads = cfg_usize(cfg, "threads")?.unwrap_or(1);
+    ensure!(
+        threads >= 1,
+        "invalid value for 'threads': need at least one worker thread"
+    );
+    Ok(threads)
+}
+
+// Strict config accessors: a key that is *present but malformed* is a
+// hard error naming the key (`Config::try_*`); only a genuinely absent
+// key falls back to the default. The lenient `Config::usize`-style
+// accessors return `None` for both cases, which used to make
+// `--h 2.5` or `seed = -1` silently run the default — contradicting
+// the strict-CLI contract.
+fn cfg_usize(cfg: &Config, key: &str) -> Result<Option<usize>> {
+    cfg.try_usize(key).map_err(|e| anyhow!(e))
+}
+
+fn cfg_f64(cfg: &Config, key: &str) -> Result<Option<f64>> {
+    cfg.try_f64(key).map_err(|e| anyhow!(e))
+}
+
+fn cfg_str<'a>(cfg: &'a Config, key: &str) -> Result<Option<&'a str>> {
+    cfg.try_str(key).map_err(|e| anyhow!(e))
+}
+
 fn dataset_from(cfg: &Config, default_name: &str, task_hint: Task) -> Result<Dataset> {
-    let name = cfg.str("dataset").unwrap_or(default_name);
-    let scale = cfg.f64("scale").unwrap_or(1.0);
+    let name = cfg_str(cfg, "dataset")?.unwrap_or(default_name);
+    let scale = cfg_f64(cfg, "scale")?.unwrap_or(1.0);
+    ensure!(
+        scale > 0.0 && scale.is_finite(),
+        "invalid value for 'scale': expected a positive fraction, got {scale}"
+    );
     if let Some(spec) = paper_dataset(name) {
         return Ok(spec.generate_scaled(scale));
     }
@@ -231,12 +289,12 @@ fn dataset_from(cfg: &Config, default_name: &str, task_hint: Task) -> Result<Dat
 }
 
 fn kernel_from(cfg: &Config) -> Result<Kernel> {
-    let s = cfg.str("kernel").unwrap_or("rbf");
+    let s = cfg_str(cfg, "kernel")?.unwrap_or("rbf");
     Kernel::parse(s).ok_or_else(|| anyhow!("bad --kernel '{s}'"))
 }
 
 fn machine_from(cfg: &Config) -> Result<MachineProfile> {
-    match cfg.str("machine").unwrap_or("cray-ex") {
+    match cfg_str(cfg, "machine")?.unwrap_or("cray-ex") {
         "cray-ex" => Ok(MachineProfile::cray_ex()),
         "cloud" => Ok(MachineProfile::cloud()),
         other => bail!("unknown --machine '{other}'"),
@@ -244,15 +302,15 @@ fn machine_from(cfg: &Config) -> Result<MachineProfile> {
 }
 
 fn algo_from(cfg: &Config) -> Result<AllreduceAlgo> {
-    let s = cfg.str("algo").unwrap_or("rabenseifner");
+    let s = cfg_str(cfg, "algo")?.unwrap_or("rabenseifner");
     AllreduceAlgo::parse(s).ok_or_else(|| anyhow!("bad --algo '{s}'"))
 }
 
 fn problem_from(cfg: &Config) -> Result<ProblemSpec> {
-    let c = cfg.f64("c").unwrap_or(1.0);
-    let lambda = cfg.f64("lambda").unwrap_or(1.0);
-    let b = cfg.usize("b").unwrap_or(1);
-    match cfg.str("problem").unwrap_or("svm-l1") {
+    let c = cfg_f64(cfg, "c")?.unwrap_or(1.0);
+    let lambda = cfg_f64(cfg, "lambda")?.unwrap_or(1.0);
+    let b = cfg_usize(cfg, "b")?.unwrap_or(1);
+    match cfg_str(cfg, "problem")?.unwrap_or("svm-l1") {
         "svm-l1" => Ok(ProblemSpec::Svm {
             c,
             variant: SvmVariant::L1,
@@ -266,13 +324,15 @@ fn problem_from(cfg: &Config) -> Result<ProblemSpec> {
     }
 }
 
-fn solver_from(cfg: &Config) -> SolverSpec {
-    SolverSpec {
-        s: cfg.usize("s").unwrap_or(1),
-        h: cfg.usize("h").unwrap_or(256),
-        seed: cfg.usize("seed").unwrap_or(0x5EED) as u64,
-        cache_rows: cfg.usize("gram-cache-rows").unwrap_or(0),
-    }
+fn solver_from(cfg: &Config) -> Result<SolverSpec> {
+    let threads = threads_from(cfg)?;
+    Ok(SolverSpec {
+        s: cfg_usize(cfg, "s")?.unwrap_or(1),
+        h: cfg_usize(cfg, "h")?.unwrap_or(256),
+        seed: cfg_usize(cfg, "seed")?.unwrap_or(0x5EED) as u64,
+        cache_rows: cfg_usize(cfg, "gram-cache-rows")?.unwrap_or(0),
+        threads,
+    })
 }
 
 fn cmd_datasets() -> Result<String> {
@@ -297,12 +357,13 @@ fn cmd_train_svm(args: &Args) -> Result<String> {
     let mut problem = problem_from(&cfg)?;
     if matches!(problem, ProblemSpec::Krr { .. }) {
         problem = ProblemSpec::Svm {
-            c: cfg.f64("c").unwrap_or(1.0),
+            c: cfg_f64(&cfg, "c")?.unwrap_or(1.0),
             variant: SvmVariant::L1,
         };
     }
-    let solver = solver_from(&cfg);
-    let p = cfg.usize("p").unwrap_or(1);
+    let solver = solver_from(&cfg)?;
+    let p = cfg_usize(&cfg, "p")?.unwrap_or(1);
+    ensure!(p >= 1, "invalid value for 'p': need at least one rank");
     let algo = algo_from(&cfg)?;
     let res = run_distributed(&ds, kernel, &problem, &solver, p, algo, &machine);
     let (c, variant) = match problem {
@@ -313,12 +374,13 @@ fn cmd_train_svm(args: &Args) -> Result<String> {
     let obj = SvmObjective::new(&mut oracle, &ds.y, c, variant);
     let mut out = String::new();
     out.push_str(&format!(
-        "dataset={} m={} n={} kernel={} problem={} P={p} s={} H={}\n",
+        "dataset={} m={} n={} kernel={} problem={} P={p} t={} s={} H={}\n",
         ds.name,
         ds.m(),
         ds.n(),
         kernel.name(),
         problem.name(),
+        solver.threads,
         solver.s,
         solver.h
     ));
@@ -353,11 +415,12 @@ fn cmd_train_krr(args: &Args) -> Result<String> {
     let ds = dataset_from(&cfg, "bodyfat", Task::Regression)?;
     let kernel = kernel_from(&cfg)?;
     let machine = machine_from(&cfg)?;
-    let lambda = cfg.f64("lambda").unwrap_or(1.0);
-    let b = cfg.usize("b").unwrap_or(8);
+    let lambda = cfg_f64(&cfg, "lambda")?.unwrap_or(1.0);
+    let b = cfg_usize(&cfg, "b")?.unwrap_or(8);
     let problem = ProblemSpec::Krr { lambda, b };
-    let solver = solver_from(&cfg);
-    let p = cfg.usize("p").unwrap_or(1);
+    let solver = solver_from(&cfg)?;
+    let p = cfg_usize(&cfg, "p")?.unwrap_or(1);
+    ensure!(p >= 1, "invalid value for 'p': need at least one rank");
     let algo = algo_from(&cfg)?;
     let res = run_distributed(&ds, kernel, &problem, &solver, p, algo, &machine);
     let mut oracle = LocalGram::new(ds.a.clone(), kernel);
@@ -384,8 +447,9 @@ fn cmd_convergence(args: &Args) -> Result<String> {
     let problem = problem_from(&cfg)?;
     let kernel = kernel_from(&cfg)?;
     let machine = machine_from(&cfg)?;
-    let solver = solver_from(&cfg);
-    let every = args.usize_flag("every", 16)?;
+    let solver = solver_from(&cfg)?;
+    let every = cfg_usize(&cfg, "every")?.unwrap_or(16);
+    ensure!(every >= 1, "invalid value for 'every': must be at least 1");
     let mut out = String::new();
     match problem {
         ProblemSpec::Svm { c, variant } => {
@@ -400,7 +464,8 @@ fn cmd_convergence(args: &Args) -> Result<String> {
                         pts.push((k, obj.duality_gap(a)));
                     }
                 };
-                let mut o = LocalGram::new(ds.a.clone(), kernel);
+                let mut o =
+                    LocalGram::with_opts(ds.a.clone(), kernel, solver.cache_rows, solver.threads);
                 let _ = match s {
                     1 => crate::solvers::dcd(
                         &mut o,
@@ -464,7 +529,8 @@ fn cmd_convergence(args: &Args) -> Result<String> {
                         pts.push((k, crate::dense::rel_err(a, &astar)));
                     }
                 };
-                let mut o = LocalGram::new(ds.a.clone(), kernel);
+                let mut o =
+                    LocalGram::with_opts(ds.a.clone(), kernel, solver.cache_rows, solver.threads);
                 let params = crate::solvers::KrrParams {
                     lambda,
                     b,
@@ -524,13 +590,22 @@ fn cmd_scaling(args: &Args) -> Result<String> {
     let ds = dataset_from(&cfg, "colon-cancer", task)?;
     let kernel = kernel_from(&cfg)?;
     let machine = machine_from(&cfg)?;
+    // --threads sets the single-point thread count; --t-list (flag or
+    // config list) widens it into a hybrid sweep axis.
+    let threads = threads_from(&cfg)?;
+    let t_list = list_from(args, &cfg, "t-list", &[threads])?;
+    ensure!(
+        t_list.iter().all(|&t| t >= 1),
+        "invalid value for 't-list': thread counts must be at least 1"
+    );
     let sweep_cfg = SweepConfig {
-        p_list: args.usize_list_flag("p-list", &[1, 2, 4, 8, 16, 32, 64, 128, 256, 512])?,
-        s_list: args.usize_list_flag("s-list", &[2, 4, 8, 16, 32, 64, 128, 256])?,
-        h: cfg.usize("h").unwrap_or(256),
-        seed: cfg.usize("seed").unwrap_or(0x5EED) as u64,
+        p_list: list_from(args, &cfg, "p-list", &[1, 2, 4, 8, 16, 32, 64, 128, 256, 512])?,
+        s_list: list_from(args, &cfg, "s-list", &[2, 4, 8, 16, 32, 64, 128, 256])?,
+        t_list,
+        h: cfg_usize(&cfg, "h")?.unwrap_or(256),
+        seed: cfg_usize(&cfg, "seed")?.unwrap_or(0x5EED) as u64,
         algo: algo_from(&cfg)?,
-        measured_limit: args.usize_flag("measured-limit", 8)?,
+        measured_limit: cfg_usize(&cfg, "measured-limit")?.unwrap_or(8),
     };
     let rows = sweep(&ds, kernel, &problem, &sweep_cfg, &machine);
     let t = scaling_table(&rows);
@@ -556,18 +631,20 @@ fn cmd_breakdown(args: &Args) -> Result<String> {
     let ds = dataset_from(&cfg, "colon-cancer", task)?;
     let kernel = kernel_from(&cfg)?;
     let machine = machine_from(&cfg)?;
-    let s_list = args.usize_list_flag("s-list", &[2, 8, 32, 256])?;
-    let p = cfg.usize("p").unwrap_or(32);
+    let s_list = list_from(args, &cfg, "s-list", &[2, 8, 32, 256])?;
+    let p = cfg_usize(&cfg, "p")?.unwrap_or(32);
+    let threads = threads_from(&cfg)?;
     let bars = breakdown(
         &ds,
         kernel,
         &problem,
         &s_list,
-        cfg.usize("h").unwrap_or(256),
+        cfg_usize(&cfg, "h")?.unwrap_or(256),
         p,
+        threads,
         algo_from(&cfg)?,
         &machine,
-        args.usize_flag("measured-limit", 8)?,
+        cfg_usize(&cfg, "measured-limit")?.unwrap_or(8),
     );
     let t = breakdown_table(&bars);
     let mut out = format!(
@@ -674,6 +751,142 @@ mod tests {
                 .to_string()
         };
         assert_eq!(gap(&base), gap(&cached));
+    }
+
+    /// Present-but-malformed config values must be hard errors naming
+    /// the key — never a silent fallback to the default (the old lenient
+    /// accessors made `--h 2.5` run with H = 256).
+    #[test]
+    fn malformed_values_are_hard_errors_naming_the_key() {
+        for (argv_str, key) in [
+            ("train-svm --h 2.5", "h"),
+            ("train-svm --seed -1", "seed"),
+            ("train-svm --s 1.5", "s"),
+            ("train-svm --b -3 --problem krr", "b"),
+            ("train-svm --gram-cache-rows 0.5", "gram-cache-rows"),
+            ("train-svm --threads 2.5", "threads"),
+            ("train-krr --lambda notanumber", "lambda"),
+            ("train-svm --kernel 5", "kernel"),
+            ("train-svm --machine 7", "machine"),
+            ("scaling --h -8", "h"),
+            ("breakdown --p 2.5", "p"),
+        ] {
+            let err = run(argv(argv_str)).expect_err(argv_str);
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains(&format!("'{key}'")),
+                "{argv_str}: error must name '{key}', got: {msg}"
+            );
+        }
+        // Zero threads is present-and-invalid, too.
+        let err = run(argv("train-svm --threads 0")).unwrap_err();
+        assert!(format!("{err:#}").contains("'threads'"));
+    }
+
+    #[test]
+    fn malformed_config_file_values_are_hard_errors() {
+        let dir = std::env::temp_dir().join("kcd_cli_strict");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.toml");
+        std::fs::write(&path, "seed = -1\n").unwrap();
+        let err = run(vec![
+            "train-svm".into(),
+            "--config".into(),
+            path.to_str().unwrap().into(),
+        ])
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("'seed'"), "{err:#}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn threads_flag_runs_and_reports_identical_model() {
+        let base = run(argv(
+            "train-svm --dataset diabetes --scale 0.1 --kernel rbf --h 120 --s 8 --p 2",
+        ))
+        .unwrap();
+        let threaded = run(argv(
+            "train-svm --dataset diabetes --scale 0.1 --kernel rbf --h 120 --s 8 --p 2 \
+             --threads 3",
+        ))
+        .unwrap();
+        assert!(base.contains("t=1"), "{base}");
+        assert!(threaded.contains("t=3"), "{threaded}");
+        // Bit-identical solve ⇒ identical duality-gap line.
+        let gap = |out: &str| {
+            out.lines()
+                .find(|l| l.starts_with("duality gap"))
+                .unwrap()
+                .to_string()
+        };
+        assert_eq!(gap(&base), gap(&threaded));
+    }
+
+    #[test]
+    fn scaling_accepts_t_list_for_hybrid_sweep() {
+        let out = run(argv(
+            "scaling --dataset colon-cancer --scale 0.3 --h 32 --p-list 2,64 --s-list 4 \
+             --t-list 1,4 --measured-limit 2",
+        ))
+        .unwrap();
+        assert!(out.contains("speedup"), "{out}");
+        // One row per (P, t) grid point, both engines present.
+        assert!(out.contains("measured"), "{out}");
+        assert!(out.contains("projected"), "{out}");
+        let data_rows = out
+            .lines()
+            .filter(|l| l.contains("measured") || l.contains("projected"))
+            .count();
+        assert_eq!(data_rows, 4, "{out}");
+        let err = run(argv("scaling --t-list 0,2")).unwrap_err();
+        assert!(format!("{err:#}").contains("t-list"));
+    }
+
+    #[test]
+    fn config_file_drives_sweep_lists() {
+        let dir = std::env::temp_dir().join("kcd_cli_lists");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sweep.toml");
+        std::fs::write(
+            &path,
+            "dataset = \"colon-cancer\"\nscale = 0.3\nh = 32\nmeasured-limit = 2\n\
+             p-list = [2]\ns-list = [4]\nt-list = [1, 2]\n",
+        )
+        .unwrap();
+        let out = run(vec![
+            "scaling".into(),
+            "--config".into(),
+            path.to_str().unwrap().into(),
+        ])
+        .unwrap();
+        // One measured row per t in the config list.
+        let data_rows = out.lines().filter(|l| l.contains("measured")).count();
+        assert_eq!(data_rows, 2, "{out}");
+        // Malformed list entries are hard errors naming the key.
+        std::fs::write(&path, "t-list = [1, 2.5]\n").unwrap();
+        let err = run(vec![
+            "scaling".into(),
+            "--config".into(),
+            path.to_str().unwrap().into(),
+        ])
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("'t-list'"), "{err:#}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn convergence_honors_threads_and_cache() {
+        let base = run(argv(
+            "convergence --dataset diabetes --scale 0.08 --problem svm-l1 --h 64 --s 8 --every 16",
+        ))
+        .unwrap();
+        let threaded = run(argv(
+            "convergence --dataset diabetes --scale 0.08 --problem svm-l1 --h 64 --s 8 \
+             --every 16 --threads 3 --gram-cache-rows 16",
+        ))
+        .unwrap();
+        // Threads + cache are bitwise-transparent: identical tables.
+        assert_eq!(base, threaded);
     }
 
     #[test]

@@ -47,7 +47,17 @@ impl AllreduceAlgo {
 
 #[inline]
 fn add_into(dst: &mut [f64], src: &[f64]) {
-    debug_assert_eq!(dst.len(), src.len());
+    // A real assert, not a debug_assert: in release builds `zip` would
+    // silently truncate a ragged contribution into a wrong answer. One
+    // comparison per received message is free next to the adds.
+    assert_eq!(
+        dst.len(),
+        src.len(),
+        "collective: ranks contributed unequal lengths ({} vs {} words); \
+         every rank must pass the same buffer size",
+        dst.len(),
+        src.len()
+    );
     for (d, s) in dst.iter_mut().zip(src) {
         *d += s;
     }
@@ -272,7 +282,9 @@ pub fn broadcast<C: Communicator>(comm: &mut C, buf: &mut [f64], root: usize) {
 }
 
 /// Allgather: each rank contributes `mine`; returns the rank-ordered
-/// concatenation. (Ring algorithm; equal contribution lengths required.)
+/// concatenation. (Ring algorithm; equal contribution lengths required —
+/// a ragged contribution is detected and rejected with a panic as soon
+/// as the first mismatched block arrives, instead of corrupting `out`.)
 pub fn allgather<C: Communicator>(comm: &mut C, mine: &[f64]) -> Vec<f64> {
     let p = comm.size();
     let rank = comm.rank();
@@ -290,6 +302,14 @@ pub fn allgather<C: Communicator>(comm: &mut C, mine: &[f64]) -> Vec<f64> {
         comm.send(next, &out[cur * w..(cur + 1) * w]);
         let got = comm.recv(prev);
         cur = (cur + p - 1) % p;
+        assert_eq!(
+            got.len(),
+            w,
+            "allgather: rank {rank} received a {}-word block from the ring but \
+             contributes {w} words itself; all ranks must contribute equal \
+             lengths (ragged contribution detected at rank {cur}'s block)",
+            got.len()
+        );
         out[cur * w..(cur + 1) * w].copy_from_slice(&got);
         comm.stats_mut().rounds += 1;
     }
@@ -415,6 +435,28 @@ mod tests {
                 assert_eq!(out, expect);
             }
         }
+    }
+
+    /// Ragged contributions must be rejected loudly (they used to slip
+    /// past everything but a cryptic slice-copy panic, or a silent
+    /// release-mode truncation in the allreduce's `add_into`).
+    #[test]
+    #[should_panic]
+    fn allgather_rejects_ragged_contributions() {
+        run_ranks(3, |c| {
+            let mine = vec![1.0; if c.rank() == 0 { 3 } else { 2 }];
+            allgather(c, &mine)
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn allreduce_rejects_ragged_contributions() {
+        run_ranks(2, |c| {
+            let mut buf = vec![1.0; if c.rank() == 0 { 3 } else { 2 }];
+            allreduce_sum(c, &mut buf, AllreduceAlgo::RecursiveDoubling);
+            buf
+        });
     }
 
     #[test]

@@ -30,7 +30,8 @@ impl BreakdownBar {
     }
 }
 
-/// Breakdown sweep over `s ∈ {1} ∪ s_list` at fixed `p`.
+/// Breakdown sweep over `s ∈ {1} ∪ s_list` at fixed `p`, with `threads`
+/// intra-rank product workers per rank (`1` = the flat-MPI bars).
 #[allow(clippy::too_many_arguments)]
 pub fn breakdown(
     ds: &Dataset,
@@ -39,11 +40,15 @@ pub fn breakdown(
     s_list: &[usize],
     h: usize,
     p: usize,
+    threads: usize,
     algo: AllreduceAlgo,
     machine: &MachineProfile,
     measured_limit: usize,
 ) -> Vec<BreakdownBar> {
-    let engine = if p <= measured_limit && p.is_power_of_two() {
+    // Any P within the measured budget runs Measured — the collectives
+    // (and, past the limit, the analytic traffic model) handle
+    // non-power-of-two rank counts.
+    let engine = if p <= measured_limit {
         Engine::Measured
     } else {
         Engine::Projected
@@ -60,11 +65,12 @@ pub fn breakdown(
                     h,
                     seed: 0xB0,
                     cache_rows: 0,
+                    threads,
                 };
                 run_distributed(ds, kernel, problem, &solver, p, algo, machine).projection
             }
             Engine::Projected => {
-                machine.project(&analytic_ledger(ds, kernel, problem, s, h, p, algo))
+                machine.project_hybrid(&analytic_ledger(ds, kernel, problem, s, h, p, algo), threads)
             }
         };
         bars.push(BreakdownBar {
@@ -98,6 +104,7 @@ mod tests {
             &[8, 64],
             128,
             32,
+            1,
             AllreduceAlgo::Rabenseifner,
             &MachineProfile::cray_ex(),
             0,
@@ -138,6 +145,7 @@ mod tests {
             &[4, 16, 64, 256],
             256,
             2048,
+            1,
             AllreduceAlgo::Rabenseifner,
             &MachineProfile::cray_ex(),
             0,

@@ -118,6 +118,80 @@ impl Config {
         }
     }
 
+    /// Strict string accessor: absent → `Ok(None)`; present with any
+    /// other type → an error naming the key. The lenient [`Self::str`]
+    /// silently returns `None` in both cases, which lets callers fall
+    /// back to defaults on malformed input — CLI paths must use the
+    /// strict accessors instead.
+    pub fn try_str(&self, key: &str) -> Result<Option<&str>, String> {
+        match self.values.get(key) {
+            None => Ok(None),
+            Some(Value::Str(s)) => Ok(Some(s)),
+            Some(v) => Err(format!(
+                "invalid value for '{key}': expected a string, got {v:?}"
+            )),
+        }
+    }
+
+    /// Strict number accessor (see [`Self::try_str`]).
+    pub fn try_f64(&self, key: &str) -> Result<Option<f64>, String> {
+        match self.values.get(key) {
+            None => Ok(None),
+            Some(Value::Num(n)) => Ok(Some(*n)),
+            Some(v) => Err(format!(
+                "invalid value for '{key}': expected a number, got {v:?}"
+            )),
+        }
+    }
+
+    /// Strict non-negative-integer accessor (see [`Self::try_str`]):
+    /// negative or fractional numbers are errors, not `None`.
+    pub fn try_usize(&self, key: &str) -> Result<Option<usize>, String> {
+        match self.try_f64(key)? {
+            None => Ok(None),
+            Some(n) if n >= 0.0 && n.fract() == 0.0 && n <= usize::MAX as f64 => {
+                Ok(Some(n as usize))
+            }
+            Some(n) => Err(format!(
+                "invalid value for '{key}': expected a non-negative integer, got {n}"
+            )),
+        }
+    }
+
+    /// Strict non-negative-integer-list accessor (see [`Self::try_str`]).
+    pub fn try_usize_list(&self, key: &str) -> Result<Option<Vec<usize>>, String> {
+        match self.values.get(key) {
+            None => Ok(None),
+            Some(Value::NumList(ns)) => ns
+                .iter()
+                .map(|n| {
+                    if *n >= 0.0 && n.fract() == 0.0 && *n <= usize::MAX as f64 {
+                        Ok(*n as usize)
+                    } else {
+                        Err(format!(
+                            "invalid value for '{key}': expected non-negative integers, got {n}"
+                        ))
+                    }
+                })
+                .collect::<Result<Vec<_>, _>>()
+                .map(Some),
+            Some(v) => Err(format!(
+                "invalid value for '{key}': expected an integer list, got {v:?}"
+            )),
+        }
+    }
+
+    /// Strict boolean accessor (see [`Self::try_str`]).
+    pub fn try_bool(&self, key: &str) -> Result<Option<bool>, String> {
+        match self.values.get(key) {
+            None => Ok(None),
+            Some(Value::Bool(b)) => Ok(Some(*b)),
+            Some(v) => Err(format!(
+                "invalid value for '{key}': expected true/false, got {v:?}"
+            )),
+        }
+    }
+
     pub fn usize_list(&self, key: &str) -> Option<Vec<usize>> {
         match self.values.get(key) {
             Some(Value::NumList(ns)) => ns
@@ -276,6 +350,45 @@ mod tests {
         assert_eq!(cfg.str("x"), None); // wrong type
         assert_eq!(cfg.f64("y"), None); // absent
         assert_eq!(cfg.usize("x"), Some(1));
+    }
+
+    #[test]
+    fn strict_accessors_distinguish_absent_from_malformed() {
+        let cfg = Config::parse(
+            "h = 2.5\nseed = -1\nname = \"x\"\nflag = true\nn = 8\n",
+        )
+        .unwrap();
+        // Absent keys are None, not errors.
+        assert_eq!(cfg.try_usize("missing"), Ok(None));
+        assert_eq!(cfg.try_f64("missing"), Ok(None));
+        assert_eq!(cfg.try_str("missing"), Ok(None));
+        assert_eq!(cfg.try_bool("missing"), Ok(None));
+        // Well-formed values come through.
+        assert_eq!(cfg.try_usize("n"), Ok(Some(8)));
+        assert_eq!(cfg.try_f64("h"), Ok(Some(2.5)));
+        assert_eq!(cfg.try_str("name"), Ok(Some("x")));
+        assert_eq!(cfg.try_bool("flag"), Ok(Some(true)));
+        // Present-but-malformed is a hard error naming the key.
+        let err = cfg.try_usize("h").unwrap_err();
+        assert!(err.contains("'h'") && err.contains("2.5"), "{err}");
+        let err = cfg.try_usize("seed").unwrap_err();
+        assert!(err.contains("'seed'") && err.contains("-1"), "{err}");
+        let err = cfg.try_f64("name").unwrap_err();
+        assert!(err.contains("'name'"), "{err}");
+        let err = cfg.try_str("n").unwrap_err();
+        assert!(err.contains("'n'"), "{err}");
+        let err = cfg.try_bool("n").unwrap_err();
+        assert!(err.contains("'n'"), "{err}");
+    }
+
+    #[test]
+    fn strict_list_accessor() {
+        let cfg = Config::parse("good = [1, 2, 4]\nbad = [1, 2.5]\nneg = [-1]\nx = 3\n").unwrap();
+        assert_eq!(cfg.try_usize_list("good"), Ok(Some(vec![1, 2, 4])));
+        assert_eq!(cfg.try_usize_list("missing"), Ok(None));
+        assert!(cfg.try_usize_list("bad").unwrap_err().contains("'bad'"));
+        assert!(cfg.try_usize_list("neg").unwrap_err().contains("'neg'"));
+        assert!(cfg.try_usize_list("x").unwrap_err().contains("'x'"));
     }
 
     #[test]

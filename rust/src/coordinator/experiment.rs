@@ -49,6 +49,11 @@ pub struct SolverSpec {
     /// identical on every rank — the launcher threads the same value to
     /// all of them. Results are bit-identical with the cache on or off.
     pub cache_rows: usize,
+    /// Intra-rank worker threads for the gram product stage (`>= 1`;
+    /// `1` = serial). Results are bitwise identical for every value —
+    /// only wall time and the hybrid Hockney projection change (the
+    /// kernel phase divides by `min(threads, cores_per_rank)`).
+    pub threads: usize,
 }
 
 impl Default for SolverSpec {
@@ -58,6 +63,7 @@ impl Default for SolverSpec {
             h: 256,
             seed: 0x5EED,
             cache_rows: 0,
+            threads: 1,
         }
     }
 }
@@ -123,13 +129,14 @@ pub fn run_serial(
 ) -> RunResult {
     let t0 = std::time::Instant::now();
     let mut ledger = Ledger::new();
-    let mut oracle = LocalGram::with_cache(ds.a.clone(), kernel, solver.cache_rows);
+    let mut oracle =
+        LocalGram::with_opts(ds.a.clone(), kernel, solver.cache_rows, solver.threads.max(1));
     let alpha = run_solver(&mut oracle, &ds.y, problem, solver, &mut ledger);
     let mut comm = SelfComm::new();
     let _ = &mut comm;
     let wall = t0.elapsed().as_secs_f64();
     let critical = Ledger::critical_path(std::slice::from_ref(&ledger));
-    let projection = machine.project(&critical);
+    let projection = machine.project_hybrid(&critical, solver.threads);
     RunResult {
         alpha,
         critical,
@@ -160,7 +167,14 @@ pub fn run_distributed(
     let outs: Vec<(Vec<f64>, Ledger)> = run_ranks(p, |comm| {
         let shard = shards[comm.rank()].clone();
         let mut ledger = Ledger::new();
-        let mut oracle = DistGram::with_cache(shard, kernel, comm, algo, solver.cache_rows);
+        let mut oracle = DistGram::with_opts(
+            shard,
+            kernel,
+            comm,
+            algo,
+            solver.cache_rows,
+            solver.threads.max(1),
+        );
         let alpha = run_solver(&mut oracle, &ds.y, problem, solver, &mut ledger);
         ledger.comm = oracle.comm_stats();
         (alpha, ledger)
@@ -174,7 +188,7 @@ pub fn run_distributed(
     }
     let per_rank: Vec<Ledger> = outs.into_iter().map(|(_, l)| l).collect();
     let critical = Ledger::critical_path(&per_rank);
-    let projection = machine.project(&critical);
+    let projection = machine.project_hybrid(&critical, solver.threads);
     RunResult {
         alpha,
         critical,
@@ -204,6 +218,7 @@ mod tests {
                 h: 64,
                 seed: 9,
                 cache_rows: 0,
+                threads: 1,
             },
         )
     }
@@ -234,8 +249,8 @@ mod tests {
         let machine = MachineProfile::cray_ex();
         let kernel = Kernel::paper_rbf();
         let problem = ProblemSpec::Krr { lambda: 1.0, b: 3 };
-        let classical = SolverSpec { s: 1, h: 40, seed: 4, cache_rows: 0 };
-        let sstep = SolverSpec { s: 8, h: 40, seed: 4, cache_rows: 0 };
+        let classical = SolverSpec { s: 1, h: 40, seed: 4, cache_rows: 0, threads: 1 };
+        let sstep = SolverSpec { s: 8, h: 40, seed: 4, cache_rows: 0, threads: 1 };
         let a_serial = run_serial(&ds, kernel, &problem, &classical, &machine).alpha;
         let a_dist = run_distributed(
             &ds,
@@ -295,6 +310,52 @@ mod tests {
         }
     }
 
+    /// Hybrid acceptance, end to end: threaded runs return bit-identical
+    /// α (threads is a pure wall-time knob), the measured counts are
+    /// unchanged, and the hybrid projection divides exactly the kernel
+    /// phase by the thread count.
+    #[test]
+    fn threaded_runs_are_bitwise_identical_and_project_faster() {
+        let (ds, problem, solver) = small_svm();
+        let machine = MachineProfile::cray_ex();
+        let kernel = Kernel::paper_rbf();
+        for p in [1usize, 3, 4] {
+            let serial = run_distributed(
+                &ds,
+                kernel,
+                &problem,
+                &solver,
+                p,
+                AllreduceAlgo::Rabenseifner,
+                &machine,
+            );
+            for threads in [2usize, 4] {
+                let hybrid_solver = SolverSpec { threads, ..solver };
+                let hybrid = run_distributed(
+                    &ds,
+                    kernel,
+                    &problem,
+                    &hybrid_solver,
+                    p,
+                    AllreduceAlgo::Rabenseifner,
+                    &machine,
+                );
+                assert_eq!(serial.alpha, hybrid.alpha, "p={p} t={threads} bitwise");
+                assert_eq!(
+                    serial.critical.comm.words, hybrid.critical.comm.words,
+                    "threads must not change traffic"
+                );
+                let k1 = serial.projection.phase_secs(Phase::KernelCompute);
+                let kt = hybrid.projection.phase_secs(Phase::KernelCompute);
+                assert!(
+                    (kt - k1 / threads as f64).abs() <= 1e-12 * k1,
+                    "p={p} t={threads}: kernel phase {kt} vs {k1}/{threads}"
+                );
+                assert!(hybrid.projection.total_secs() < serial.projection.total_secs());
+            }
+        }
+    }
+
     #[test]
     fn sstep_reduces_projected_allreduce_latency() {
         // The paper's core claim, end to end: same H, same P, same data —
@@ -307,7 +368,7 @@ mod tests {
             &ds,
             kernel,
             &problem,
-            &SolverSpec { s: 1, h: 64, seed: 9, cache_rows: 0 },
+            &SolverSpec { s: 1, h: 64, seed: 9, cache_rows: 0, threads: 1 },
             4,
             AllreduceAlgo::Rabenseifner,
             &machine,
@@ -316,7 +377,7 @@ mod tests {
             &ds,
             kernel,
             &problem,
-            &SolverSpec { s: 16, h: 64, seed: 9, cache_rows: 0 },
+            &SolverSpec { s: 16, h: 64, seed: 9, cache_rows: 0, threads: 1 },
             4,
             AllreduceAlgo::Rabenseifner,
             &machine,
@@ -343,7 +404,7 @@ mod tests {
                 c: 1.0,
                 variant: SvmVariant::L1,
             },
-            &SolverSpec { s: 4, h: 8, seed: 3, cache_rows: 0 },
+            &SolverSpec { s: 4, h: 8, seed: 3, cache_rows: 0, threads: 1 },
             4,
             AllreduceAlgo::Rabenseifner,
             &machine,

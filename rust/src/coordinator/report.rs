@@ -94,14 +94,16 @@ fn engine_tag(e: Engine) -> &'static str {
     }
 }
 
-/// Strong-scaling rows → markdown (the Figures 3/5/6 table form).
+/// Strong-scaling rows → markdown (the Figures 3/5/6 table form, plus
+/// the intra-rank thread count of each hybrid point).
 pub fn scaling_table(rows: &[SweepRow]) -> Table {
     let mut t = Table::new(vec![
-        "P", "engine", "classical (s)", "s-step best (s)", "best s", "speedup",
+        "P", "t", "engine", "classical (s)", "s-step best (s)", "best s", "speedup",
     ]);
     for r in rows {
         t.row(vec![
             r.p.to_string(),
+            r.t.to_string(),
             engine_tag(r.engine).to_string(),
             format!("{:.4e}", r.classical.total_secs()),
             format!("{:.4e}", r.best_sstep.total_secs()),

@@ -51,6 +51,11 @@ pub struct SweepConfig {
     pub p_list: Vec<usize>,
     /// s values tried for the s-step method (powers of two, per paper).
     pub s_list: Vec<usize>,
+    /// Intra-rank worker-thread counts: the sweep covers the hybrid
+    /// grid `p_list × t_list` (P MPI-style ranks, each splitting its
+    /// gram product across `t` threads). `vec![1]` reproduces the
+    /// paper's flat-MPI sweep.
+    pub t_list: Vec<usize>,
     pub h: usize,
     pub seed: u64,
     pub algo: AllreduceAlgo,
@@ -63,6 +68,7 @@ impl Default for SweepConfig {
         SweepConfig {
             p_list: vec![1, 2, 4, 8, 16, 32, 64, 128, 256, 512],
             s_list: vec![2, 4, 8, 16, 32, 64, 128, 256],
+            t_list: vec![1],
             h: 256,
             seed: 0x5CA1E,
             algo: AllreduceAlgo::Rabenseifner,
@@ -71,12 +77,14 @@ impl Default for SweepConfig {
     }
 }
 
-/// Result rows of one dataset × kernel sweep: per P, the classical time
-/// and the best-s s-step time (the quantities the paper's scaling plots
-/// show).
+/// Result rows of one dataset × kernel sweep: per (P, t), the classical
+/// time and the best-s s-step time (the quantities the paper's scaling
+/// plots show).
 #[derive(Clone, Debug)]
 pub struct SweepRow {
     pub p: usize,
+    /// Intra-rank worker threads of this hybrid point.
+    pub t: usize,
     pub engine: Engine,
     pub classical: Projection,
     pub best_sstep: Projection,
@@ -91,7 +99,13 @@ impl SweepRow {
     }
 }
 
-/// Run a strong-scaling sweep.
+/// Run a strong-scaling sweep over the hybrid grid `p_list × t_list`.
+///
+/// Every `P ≤ measured_limit` runs on the Measured engine — including
+/// non-power-of-two rank counts, which the collectives handle via the
+/// standard pre-fold (it used to silently downgrade those to the
+/// Projected engine). Points beyond the limit use [`analytic_ledger`],
+/// which replicates the collectives' traffic accounting for any `P`.
 pub fn sweep(
     ds: &Dataset,
     kernel: Kernel,
@@ -99,67 +113,79 @@ pub fn sweep(
     cfg: &SweepConfig,
     machine: &MachineProfile,
 ) -> Vec<SweepRow> {
-    cfg.p_list
-        .iter()
-        .map(|&p| {
-            let engine = if p <= cfg.measured_limit && p.is_power_of_two() {
-                Engine::Measured
-            } else {
-                Engine::Projected
-            };
-            let point = |s: usize| -> Projection {
-                match engine {
-                    Engine::Measured => {
-                        // Cache off: the projected engine replicates the
-                        // uncached counts (hit patterns are data-dependent
-                        // and cannot be projected analytically).
-                        let solver = SolverSpec {
-                            s,
-                            h: cfg.h,
-                            seed: cfg.seed,
-                            cache_rows: 0,
-                        };
-                        run_distributed(ds, kernel, problem, &solver, p, cfg.algo, machine)
-                            .projection
-                    }
-                    Engine::Projected => {
-                        let ledger = analytic_ledger(ds, kernel, problem, s, cfg.h, p, cfg.algo);
-                        machine.project(&ledger)
-                    }
+    let t_list: &[usize] = if cfg.t_list.is_empty() {
+        &[1]
+    } else {
+        &cfg.t_list
+    };
+    let mut rows = Vec::with_capacity(cfg.p_list.len() * t_list.len());
+    for &p in &cfg.p_list {
+        let engine = if p <= cfg.measured_limit {
+            Engine::Measured
+        } else {
+            Engine::Projected
+        };
+        // Counts are thread-invariant (the contract this PR pins), so
+        // solve/model each (P, s) point ONCE and re-project it per t —
+        // a measured hybrid sweep costs one distributed run per s, not
+        // one per (s, t).
+        let ledger_for = |s: usize| -> Ledger {
+            match engine {
+                Engine::Measured => {
+                    // Cache off: the projected engine replicates the
+                    // uncached counts (hit patterns are data-dependent
+                    // and cannot be projected analytically).
+                    let solver = SolverSpec {
+                        s,
+                        h: cfg.h,
+                        seed: cfg.seed,
+                        cache_rows: 0,
+                        threads: 1,
+                    };
+                    run_distributed(ds, kernel, problem, &solver, p, cfg.algo, machine).critical
                 }
-            };
-            let classical = point(1);
+                Engine::Projected => analytic_ledger(ds, kernel, problem, s, cfg.h, p, cfg.algo),
+            }
+        };
+        let classical_ledger = ledger_for(1);
+        let mut sstep_ledgers = Vec::with_capacity(cfg.s_list.len());
+        for &s in &cfg.s_list {
+            if s <= 1 || s > cfg.h {
+                continue;
+            }
+            sstep_ledgers.push((s, ledger_for(s)));
+        }
+        for &t in t_list {
+            let classical = machine.project_hybrid(&classical_ledger, t);
             let mut best_s = 1;
             let mut best = classical;
-            let mut sstep_points = Vec::with_capacity(cfg.s_list.len());
-            for &s in &cfg.s_list {
-                if s <= 1 || s > cfg.h {
-                    continue;
-                }
-                let proj = point(s);
+            let mut sstep_points = Vec::with_capacity(sstep_ledgers.len());
+            for (s, ledger) in &sstep_ledgers {
+                let proj = machine.project_hybrid(ledger, t);
                 if proj.total_secs() < best.total_secs() {
                     best = proj;
-                    best_s = s;
+                    best_s = *s;
                 }
-                sstep_points.push((s, proj));
+                sstep_points.push((*s, proj));
             }
-            SweepRow {
+            rows.push(SweepRow {
                 p,
+                t,
                 engine,
                 classical,
                 best_sstep: best,
                 best_s,
                 sstep_points,
-            }
-        })
-        .collect()
+            });
+        }
+    }
+    rows
 }
 
 /// Replicate the measured ledger analytically: identical flop accounting
-/// to the solvers and identical traffic accounting to the collectives.
-///
-/// `p` must be a power of two (the projected sweep uses powers of two,
-/// matching the paper's process counts).
+/// to the solvers and identical traffic accounting to the collectives —
+/// for any `p`, including non-powers-of-two (the collectives' pre-fold
+/// is replicated exactly by [`allreduce_max_counts`]).
 pub fn analytic_ledger(
     ds: &Dataset,
     kernel: Kernel,
@@ -169,7 +195,7 @@ pub fn analytic_ledger(
     p: usize,
     algo: AllreduceAlgo,
 ) -> Ledger {
-    assert!(p.is_power_of_two(), "projected engine wants power-of-two P");
+    assert!(p >= 1, "need at least one rank");
     let m = ds.m() as f64;
     let mu = kernel.mu();
     let max_nnz = if p == 1 {
@@ -233,36 +259,162 @@ pub fn analytic_ledger(
 
     // --- Communication (mirror of comm::collectives accounting) ----------
     if p > 1 {
-        let log2p = p.trailing_zeros() as u64;
-        let mut add_allreduce = |w: u64| {
-            let (words, rounds) = match algo {
-                AllreduceAlgo::Rabenseifner => {
-                    if (w as usize) < p {
-                        // Small-vector fallback inside rabenseifner
-                        // degenerates to recursive doubling.
-                        (w * log2p, log2p)
-                    } else {
-                        (rabenseifner_max_words(w as usize, p), 2 * log2p)
-                    }
-                }
-                AllreduceAlgo::RecursiveDoubling => (w * log2p, log2p),
-                // Binomial reduce + binomial broadcast: the root sends w
-                // to each of its log₂P children.
-                AllreduceAlgo::Linear => (w * log2p, 2 * log2p),
-            };
-            l.comm.words += words;
-            l.comm.rounds += rounds;
-            l.comm.msgs += rounds.max(1);
-            l.comm.allreduces += 1;
-        };
-        // One row-norm allreduce at oracle construction…
-        add_allreduce(ds.m() as u64);
-        // …then one gram allreduce per outer iteration (w = s·b·m).
-        for _ in 0..outer {
-            add_allreduce((s * b * ds.m()) as u64);
+        // The measured critical path is the elementwise max over ranks of
+        // each rank's *accumulated* counters, so compose per-rank first
+        // and take the max last (summing per-allreduce maxima would
+        // overcount whenever different ranks maximize the `m`-word norm
+        // allreduce vs the `s·b·m`-word gram allreduces — possible at
+        // non-pof2 P with chunk-rounding-unaligned widths).
+        // One row-norm allreduce at oracle construction (w = m), then one
+        // gram allreduce per outer iteration (w = s·b·m).
+        let norm = allreduce_counts_per_rank(ds.m(), p, algo);
+        let gram = allreduce_counts_per_rank(s * b * ds.m(), p, algo);
+        let outer = outer as u64;
+        let mut max_words = 0u64;
+        let mut max_rounds = 0u64;
+        for (n, g) in norm.iter().zip(&gram) {
+            max_words = max_words.max(n.0 + outer * g.0);
+            max_rounds = max_rounds.max(n.1 + outer * g.1);
         }
+        l.comm.words += max_words;
+        l.comm.rounds += max_rounds;
+        let max1 = |counts: &[(u64, u64)]| counts.iter().map(|c| c.1).max().unwrap_or(0).max(1);
+        l.comm.msgs += max1(&norm) + outer * max1(&gram);
+        l.comm.allreduces += 1 + outer;
     }
     l
+}
+
+/// Critical-path `(words, rounds)` of one `allreduce_sum` of a `w`-word
+/// vector over `p` ranks: the elementwise max over ranks of
+/// [`allreduce_counts_per_rank`].
+pub fn allreduce_max_counts(w: usize, p: usize, algo: AllreduceAlgo) -> (u64, u64) {
+    let counts = allreduce_counts_per_rank(w, p, algo);
+    let max_words = counts.iter().map(|c| c.0).max().unwrap_or(0);
+    let max_rounds = counts.iter().map(|c| c.1).max().unwrap_or(0);
+    (max_words, max_rounds)
+}
+
+/// Per-rank `(words, rounds)` of one `allreduce_sum` of a `w`-word vector
+/// over `p` ranks — exactly the counters `comm::collectives` records,
+/// replicated message-free. Covers non-power-of-two `p` via the same
+/// pre-fold the collectives use (the first `2·rem` ranks fold pairwise
+/// onto `pof2` survivors, the core algorithm runs on the survivors,
+/// survivors send results back).
+pub fn allreduce_counts_per_rank(w: usize, p: usize, algo: AllreduceAlgo) -> Vec<(u64, u64)> {
+    assert!(p >= 1);
+    if p == 1 || w == 0 {
+        return vec![(0, 0); p];
+    }
+    let ww = w as u64;
+    let mut counts = Vec::with_capacity(p);
+    match algo {
+        AllreduceAlgo::Linear => {
+            // Binomial reduce onto rank 0 + binomial broadcast; simulate
+            // each rank's sends/recvs exactly.
+            for rank in 0..p {
+                let mut words = 0u64;
+                let mut rounds = 0u64;
+                // reduce_to_root: receive from children until the first
+                // set bit, then send up once (rank 0 never sends).
+                let mut mask = 1usize;
+                while mask < p {
+                    if rank & mask != 0 {
+                        words += ww;
+                        rounds += 1;
+                        break;
+                    } else if rank | mask < p {
+                        rounds += 1; // recv from child
+                    }
+                    mask <<= 1;
+                }
+                // broadcast from root 0: one recv from the parent, one
+                // send per child below the lowest set bit.
+                if rank != 0 {
+                    rounds += 1;
+                }
+                let lowbit = if rank == 0 {
+                    p.next_power_of_two()
+                } else {
+                    rank & rank.wrapping_neg()
+                };
+                let mut mask = lowbit >> 1;
+                while mask > 0 {
+                    let child = rank | mask;
+                    if child != rank && child < p {
+                        words += ww;
+                        rounds += 1;
+                    }
+                    mask >>= 1;
+                }
+                counts.push((words, rounds));
+            }
+        }
+        AllreduceAlgo::RecursiveDoubling | AllreduceAlgo::Rabenseifner => {
+            let pof2 = p.next_power_of_two() / if p.is_power_of_two() { 1 } else { 2 };
+            let rem = p - pof2;
+            let log2 = pof2.trailing_zeros() as u64;
+            // Chunk bounds for the rabenseifner big-vector core, shared
+            // across ranks.
+            let bounds: Vec<usize> = (0..=pof2).map(|i| i * w / pof2).collect();
+            // Core counts per survivor-group rank g.
+            let core = |g: usize| -> (u64, u64) {
+                match algo {
+                    AllreduceAlgo::RecursiveDoubling => (ww * log2, log2),
+                    AllreduceAlgo::Rabenseifner => {
+                        if w < pof2 {
+                            // Small-vector fallback: recursive doubling
+                            // among the survivors.
+                            (ww * log2, log2)
+                        } else {
+                            // Reduce-scatter (recursive halving): sends
+                            // telescope to w − own chunk.
+                            let own = bounds[g + 1] - bounds[g];
+                            let mut words = (w - own) as u64;
+                            // Allgather (recursive doubling): sends the
+                            // current span each round, doubling from the
+                            // own chunk.
+                            let (mut lo, mut hi) = (g, g + 1);
+                            let mut mask = 1usize;
+                            while mask < pof2 {
+                                words += (bounds[hi] - bounds[lo]) as u64;
+                                if g & mask == 0 {
+                                    hi += hi - lo;
+                                } else {
+                                    lo -= hi - lo;
+                                }
+                                mask <<= 1;
+                            }
+                            (words, 2 * log2)
+                        }
+                    }
+                    AllreduceAlgo::Linear => unreachable!(),
+                }
+            };
+            for rank in 0..p {
+                if rank < 2 * rem && rank % 2 == 0 {
+                    // Folded-out even rank: one send up, one result recv.
+                    counts.push((ww, 2));
+                    continue;
+                }
+                // Survivor-group rank: odds among the first 2·rem sit at
+                // positions 0..rem, everyone else follows in order.
+                let g = if rank < 2 * rem {
+                    rank / 2
+                } else {
+                    rem + (rank - 2 * rem)
+                };
+                let (mut words, mut rounds) = core(g);
+                if rank < 2 * rem {
+                    // Odd fold survivor: fold recv + result send-back.
+                    words += ww;
+                    rounds += 2;
+                }
+                counts.push((words, rounds));
+            }
+        }
+    }
+    counts
 }
 
 /// Exact max-over-ranks words sent by the rabenseifner allreduce for a
@@ -324,15 +476,21 @@ mod tests {
     }
 
     /// The load-bearing test: the projected engine must agree exactly
-    /// with measured execution wherever both run.
+    /// with measured execution wherever both run — including
+    /// non-power-of-two rank counts (the collectives' pre-fold) and the
+    /// linear collective.
     #[test]
     fn analytic_ledger_matches_measured_counts() {
         let machine = MachineProfile::cray_ex();
         let ds = crate::data::gen_dense_classification(24, 16, 0.05, 12);
         let problems = [svm_problem(), ProblemSpec::Krr { lambda: 1.0, b: 3 }];
         for problem in problems {
-            for algo in [AllreduceAlgo::Rabenseifner, AllreduceAlgo::RecursiveDoubling] {
-                for p in [2usize, 4, 8] {
+            for algo in [
+                AllreduceAlgo::Rabenseifner,
+                AllreduceAlgo::RecursiveDoubling,
+                AllreduceAlgo::Linear,
+            ] {
+                for p in [2usize, 3, 4, 5, 6, 8, 12] {
                     for s in [1usize, 4, 8] {
                         let h = 16;
                         let solver = SolverSpec {
@@ -340,6 +498,7 @@ mod tests {
                             h,
                             seed: 77,
                             cache_rows: 0,
+                            threads: 1,
                         };
                         let measured = run_distributed(
                             &ds, Kernel::paper_rbf(), &problem, &solver, p, algo, &machine,
@@ -389,6 +548,7 @@ mod tests {
         let cfg = SweepConfig {
             p_list: vec![4, 64, 512],
             s_list: vec![8, 32, 128],
+            t_list: vec![1],
             h: 64,
             seed: 1,
             algo: AllreduceAlgo::Rabenseifner,
@@ -423,6 +583,7 @@ mod tests {
         let cfg = SweepConfig {
             p_list: vec![16],
             s_list: vec![4, 16, 64],
+            t_list: vec![1],
             h: 64,
             seed: 2,
             algo: AllreduceAlgo::Rabenseifner,
@@ -443,6 +604,166 @@ mod tests {
             speedups[0] > speedups[1] && speedups[1] > speedups[2],
             "speedup should shrink with b: {speedups:?}"
         );
+    }
+
+    /// Regression for the non-pof2 downgrade bug: `P ≤ measured_limit`
+    /// must run on the Measured engine even for non-power-of-two rank
+    /// counts (the collectives handle them), and the Projected engine
+    /// must cross-validate against it at the same non-pof2 points.
+    #[test]
+    fn non_pof2_ranks_run_measured_and_match_projection() {
+        let ds = crate::data::gen_dense_classification(24, 16, 0.05, 12);
+        let machine = MachineProfile::cray_ex();
+        let cfg = SweepConfig {
+            p_list: vec![3, 5, 6],
+            s_list: vec![4, 8],
+            t_list: vec![1],
+            h: 16,
+            seed: 7,
+            algo: AllreduceAlgo::Rabenseifner,
+            measured_limit: 8,
+        };
+        let measured = sweep(&ds, Kernel::paper_rbf(), &svm_problem(), &cfg, &machine);
+        assert_eq!(measured.len(), 3);
+        for r in &measured {
+            assert_eq!(r.engine, Engine::Measured, "P={} must run measured", r.p);
+        }
+        let projected_cfg = SweepConfig {
+            measured_limit: 0,
+            ..cfg
+        };
+        let projected = sweep(&ds, Kernel::paper_rbf(), &svm_problem(), &projected_cfg, &machine);
+        for (m, pr) in measured.iter().zip(&projected) {
+            assert_eq!(pr.engine, Engine::Projected);
+            assert_eq!(m.p, pr.p);
+            let (a, b) = (m.classical.total_secs(), pr.classical.total_secs());
+            assert!(
+                (a - b).abs() <= 1e-9 * a.max(b),
+                "P={}: measured {a} vs projected {b}",
+                m.p
+            );
+            assert_eq!(m.best_s, pr.best_s, "P={}", m.p);
+        }
+    }
+
+    /// Hybrid grid: one row per (P, t); more threads must cut the
+    /// projected kernel phase in both engines, identically.
+    #[test]
+    fn hybrid_sweep_covers_grid_and_threads_cut_kernel_time() {
+        let ds = crate::data::gen_dense_classification(24, 16, 0.05, 12);
+        let machine = MachineProfile::cray_ex();
+        let cfg = SweepConfig {
+            p_list: vec![2, 16],
+            s_list: vec![4],
+            t_list: vec![1, 4],
+            h: 16,
+            seed: 7,
+            algo: AllreduceAlgo::Rabenseifner,
+            measured_limit: 4, // P=2 measured, P=16 projected
+        };
+        let rows = sweep(&ds, Kernel::paper_rbf(), &svm_problem(), &cfg, &machine);
+        assert_eq!(rows.len(), 4);
+        let find = |p: usize, t: usize| -> &SweepRow {
+            rows.iter()
+                .find(|r| r.p == p && r.t == t)
+                .expect("grid point present")
+        };
+        for &(p, engine) in &[(2usize, Engine::Measured), (16usize, Engine::Projected)] {
+            let r1 = find(p, 1);
+            let r4 = find(p, 4);
+            assert_eq!(r1.engine, engine);
+            assert_eq!(r4.engine, engine);
+            let k1 = r1.classical.phase_secs(Phase::KernelCompute);
+            let k4 = r4.classical.phase_secs(Phase::KernelCompute);
+            assert!(
+                (k4 - k1 / 4.0).abs() <= 1e-9 * k1,
+                "P={p}: kernel phase {k4} vs {k1}/4"
+            );
+            // Communication is thread-invariant.
+            assert_eq!(
+                r1.classical.phase_secs(Phase::Allreduce),
+                r4.classical.phase_secs(Phase::Allreduce)
+            );
+            assert!(r4.classical.total_secs() < r1.classical.total_secs());
+        }
+    }
+
+    /// The message-free count replica must agree with real traffic —
+    /// rank by rank, not just on the max — for every algorithm and rank
+    /// count, pof2 or not, big or tiny vectors.
+    #[test]
+    fn allreduce_counts_match_real_traffic_per_rank() {
+        for algo in [
+            AllreduceAlgo::Rabenseifner,
+            AllreduceAlgo::RecursiveDoubling,
+            AllreduceAlgo::Linear,
+        ] {
+            for p in [2usize, 3, 4, 5, 7, 8, 12, 13] {
+                for w in [1usize, 3, 17, 64, 100] {
+                    let stats = crate::comm::run_ranks(p, |c| {
+                        let mut buf = vec![1.0; w];
+                        crate::comm::allreduce_sum(c, &mut buf, algo);
+                        c.stats()
+                    });
+                    let counts = allreduce_counts_per_rank(w, p, algo);
+                    for (rank, (s, &(words, rounds))) in
+                        stats.iter().zip(&counts).enumerate()
+                    {
+                        assert_eq!(s.words, words, "{algo:?} p={p} w={w} rank {rank} words");
+                        assert_eq!(s.rounds, rounds, "{algo:?} p={p} w={w} rank {rank} rounds");
+                    }
+                    let max_words = stats.iter().map(|s| s.words).max().unwrap();
+                    let max_rounds = stats.iter().map(|s| s.rounds).max().unwrap();
+                    let (words, rounds) = allreduce_max_counts(w, p, algo);
+                    assert_eq!(max_words, words, "{algo:?} p={p} w={w} words");
+                    assert_eq!(max_rounds, rounds, "{algo:?} p={p} w={w} rounds");
+                }
+            }
+        }
+    }
+
+    /// Composition regression: the run-long critical path is the max of
+    /// per-rank *sums*, not the sum of per-allreduce maxima. At P = 13
+    /// (pof2 = 8) with m = 21 (not divisible by 8), the rank maximizing
+    /// the m-word norm allreduce differs from the rank maximizing the
+    /// s·m-word gram allreduces (chunk rounding), so summing maxima
+    /// overcounts by one word — the analytic ledger must still match
+    /// measured traffic exactly.
+    #[test]
+    fn analytic_ledger_matches_measured_at_rounding_unaligned_widths() {
+        let machine = MachineProfile::cray_ex();
+        let ds = crate::data::gen_dense_classification(21, 16, 0.05, 14);
+        for s in [1usize, 2] {
+            let h = 8;
+            let solver = SolverSpec {
+                s,
+                h,
+                seed: 21,
+                cache_rows: 0,
+                threads: 1,
+            };
+            let measured = run_distributed(
+                &ds,
+                Kernel::paper_rbf(),
+                &svm_problem(),
+                &solver,
+                13,
+                AllreduceAlgo::Rabenseifner,
+                &machine,
+            )
+            .critical;
+            let analytic = analytic_ledger(
+                &ds,
+                Kernel::paper_rbf(),
+                &svm_problem(),
+                s,
+                h,
+                13,
+                AllreduceAlgo::Rabenseifner,
+            );
+            assert_eq!(analytic.comm.words, measured.comm.words, "s={s} words");
+            assert_eq!(analytic.comm.rounds, measured.comm.rounds, "s={s} rounds");
+        }
     }
 
     #[test]

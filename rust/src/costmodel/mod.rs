@@ -224,6 +224,12 @@ pub struct MachineProfile {
     /// dispatch and solver bookkeeping, which dominate the s-step
     /// method's per-iteration cost once communication is amortized.
     pub iter_overhead: f64,
+    /// Cores available to one rank for the intra-rank threaded product
+    /// (`parallel::ParallelProduct`): [`Self::project_hybrid`] caps the
+    /// kernel-phase speedup of `t` worker threads at this count. One
+    /// rank rarely owns the whole socket in an MPI×threads launch, so
+    /// this is cores-per-process, not cores-per-node.
+    pub cores_per_rank: usize,
 }
 
 impl MachineProfile {
@@ -240,6 +246,7 @@ impl MachineProfile {
             mu_scale: 1.0,
             blas1_penalty: 4.0,
             iter_overhead: 5.0e-6,
+            cores_per_rank: 16,
         }
     }
 
@@ -254,6 +261,7 @@ impl MachineProfile {
             mu_scale: 1.0,
             blas1_penalty: 4.0,
             iter_overhead: 5.0e-6,
+            cores_per_rank: 8,
         }
     }
 
@@ -285,6 +293,25 @@ impl MachineProfile {
             per_phase,
             comm: critical.comm,
         }
+    }
+
+    /// Hybrid (P ranks × t threads) projection: like [`Self::project`]
+    /// but with `threads` intra-rank workers splitting the sampled rows
+    /// of the gram product, which divides the kernel-compute phase by
+    /// the effective worker count `min(threads, cores_per_rank)`. The
+    /// flop *counts* are thread-invariant (the ledger is unchanged);
+    /// only the phase's projected seconds shrink. The phase also holds
+    /// the epilogue flops, which the engine applies on the calling
+    /// thread — dividing them too is a deliberate simplification,
+    /// acceptable because the epilogue is a small fraction of the phase
+    /// (`µ·k·m` vs `2·k·nnz` flops).
+    pub fn project_hybrid(&self, critical: &Ledger, threads: usize) -> Projection {
+        let mut p = self.project(critical);
+        // min-then-max (not clamp) so a degenerate cores_per_rank of 0
+        // degrades to serial instead of panicking.
+        let t_eff = threads.min(self.cores_per_rank).max(1) as f64;
+        p.per_phase[Phase::KernelCompute.idx()] /= t_eff;
+        p
     }
 }
 
@@ -374,6 +401,38 @@ mod tests {
         assert_eq!(p.phase_secs(Phase::CacheHit), 0.0);
         assert!(Phase::ALL.contains(&Phase::CacheHit));
         assert_eq!(Phase::CacheHit.name(), "cachehit");
+    }
+
+    #[test]
+    fn hybrid_projection_divides_kernel_phase_and_clamps_at_cores() {
+        let mut l = Ledger::new();
+        l.add_flops(Phase::KernelCompute, 1e9);
+        l.add_flops(Phase::Solve, 1e6);
+        l.comm.words = 1000;
+        let m = MachineProfile::cray_ex();
+        let p1 = m.project(&l);
+        let p4 = m.project_hybrid(&l, 4);
+        assert!(
+            (p4.phase_secs(Phase::KernelCompute) - p1.phase_secs(Phase::KernelCompute) / 4.0)
+                .abs()
+                < 1e-18
+        );
+        // Only the kernel phase scales.
+        assert_eq!(p4.phase_secs(Phase::Solve), p1.phase_secs(Phase::Solve));
+        assert_eq!(p4.phase_secs(Phase::Allreduce), p1.phase_secs(Phase::Allreduce));
+        // threads = 1 and the degenerate 0 are identity.
+        assert_eq!(
+            m.project_hybrid(&l, 1).total_secs(),
+            p1.total_secs()
+        );
+        assert_eq!(m.project_hybrid(&l, 0).total_secs(), p1.total_secs());
+        // Beyond cores_per_rank the speedup saturates.
+        let cap = m.cores_per_rank;
+        assert_eq!(
+            m.project_hybrid(&l, cap).total_secs(),
+            m.project_hybrid(&l, 10 * cap).total_secs()
+        );
+        assert!(p4.total_secs() < p1.total_secs());
     }
 
     #[test]

@@ -2,25 +2,49 @@
 //!
 //! Stores *finished* kernel rows (post-reduction, post-epilogue), keyed
 //! by row index. Everything is a pure function of the access sequence:
-//! recency stamps come from a monotonic counter (unique, so eviction has
-//! no ties), and no clock or RNG is involved. Since every rank draws the
-//! sampled coordinates from the same seeded stream, identically sized
-//! caches on all ranks make identical hit/miss decisions — which keeps
-//! the collective reduction matched across ranks (see the module docs of
-//! [`crate::gram`] for the full determinism contract).
+//! recency is an index-linked LRU list threaded through a slab of nodes
+//! (no clock, no RNG, and no `HashMap`-iteration-order dependence).
+//! Since every rank draws the sampled coordinates from the same seeded
+//! stream, identically sized caches on all ranks make identical hit/miss
+//! decisions — which keeps the collective reduction matched across ranks
+//! (see the module docs of [`crate::gram`] for the full determinism
+//! contract).
+//!
+//! Every operation is O(1): the original implementation stamped entries
+//! with a monotonic counter and scanned the whole map for the minimum
+//! stamp on each evicting insert, which put an O(capacity) scan on the
+//! serial hot path once the threaded product shrank the miss-compute
+//! time. The linked list preserves the stamp semantics exactly — the
+//! list order *is* the stamp order (every touch/insert moves a row to
+//! the front; the tail is the unique minimum-stamp victim), so hit/miss
+//! and eviction decisions are unchanged, as pinned by
+//! `access_sequence_determines_state` and the reference-model test
+//! below.
 
 use std::collections::HashMap;
 
-struct Entry {
-    stamp: u64,
+/// Null slot index for the intrusive list links.
+const NIL: usize = usize::MAX;
+
+struct Node {
+    row: usize,
+    prev: usize,
+    next: usize,
     data: Vec<f64>,
 }
 
 /// Bounded LRU map from row index to the finished kernel row.
 pub struct RowCache {
     capacity: usize,
-    clock: u64,
-    map: HashMap<usize, Entry>,
+    /// Row index → slot in `nodes`.
+    map: HashMap<usize, usize>,
+    /// Node slab; slots are allocated once and recycled on eviction, so
+    /// row buffers are reused without reallocation.
+    nodes: Vec<Node>,
+    /// Most-recently-used slot (NIL when empty).
+    head: usize,
+    /// Least-recently-used slot (NIL when empty) — the eviction victim.
+    tail: usize,
 }
 
 impl RowCache {
@@ -29,8 +53,10 @@ impl RowCache {
         assert!(capacity > 0, "RowCache capacity must be positive");
         RowCache {
             capacity,
-            clock: 0,
             map: HashMap::with_capacity(capacity.min(1 << 20)),
+            nodes: Vec::new(),
+            head: NIL,
+            tail: NIL,
         }
     }
 
@@ -46,12 +72,47 @@ impl RowCache {
         self.map.is_empty()
     }
 
+    /// Detach `slot` from the recency list.
+    fn unlink(&mut self, slot: usize) {
+        let (prev, next) = (self.nodes[slot].prev, self.nodes[slot].next);
+        if prev == NIL {
+            self.head = next;
+        } else {
+            self.nodes[prev].next = next;
+        }
+        if next == NIL {
+            self.tail = prev;
+        } else {
+            self.nodes[next].prev = prev;
+        }
+    }
+
+    /// Attach `slot` at the most-recent end.
+    fn push_front(&mut self, slot: usize) {
+        self.nodes[slot].prev = NIL;
+        self.nodes[slot].next = self.head;
+        if self.head != NIL {
+            self.nodes[self.head].prev = slot;
+        }
+        self.head = slot;
+        if self.tail == NIL {
+            self.tail = slot;
+        }
+    }
+
+    /// Move `slot` to the most-recent end.
+    fn touch(&mut self, slot: usize) {
+        if self.head != slot {
+            self.unlink(slot);
+            self.push_front(slot);
+        }
+    }
+
     /// Membership test that also refreshes the row's recency.
     pub fn contains_and_touch(&mut self, row: usize) -> bool {
-        self.clock += 1;
-        match self.map.get_mut(&row) {
-            Some(e) => {
-                e.stamp = self.clock;
+        match self.map.get(&row).copied() {
+            Some(slot) => {
+                self.touch(slot);
                 true
             }
             None => false,
@@ -60,45 +121,42 @@ impl RowCache {
 
     /// Read a cached row without touching recency.
     pub fn peek(&self, row: usize) -> Option<&[f64]> {
-        self.map.get(&row).map(|e| e.data.as_slice())
+        self.map.get(&row).map(|&slot| self.nodes[slot].data.as_slice())
     }
 
     /// Insert (or overwrite) a row, evicting the least-recently-used
-    /// entry when full. Stamps are unique, so the victim is unambiguous —
-    /// eviction is deterministic even though `HashMap` iteration is not.
-    ///
-    /// Eviction scans all entries (O(capacity) per miss-insert). That is
-    /// deliberate: a miss already costs a full kernel-row compute
-    /// (≥ O(m) multiply-adds, typically O(nnz)), which dwarfs a scan of
-    /// a few thousand `u64` stamps. Revisit with an intrusive LRU list
-    /// if caches ever grow to ≫10⁴ rows.
+    /// entry when full. The tail of the recency list is the unique
+    /// victim, so eviction is deterministic.
     pub fn insert(&mut self, row: usize, data: &[f64]) {
-        self.clock += 1;
-        if let Some(e) = self.map.get_mut(&row) {
-            e.stamp = self.clock;
-            e.data.clear();
-            e.data.extend_from_slice(data);
+        if let Some(&slot) = self.map.get(&row) {
+            let node = &mut self.nodes[slot];
+            node.data.clear();
+            node.data.extend_from_slice(data);
+            self.touch(slot);
             return;
         }
-        let mut entry = if self.map.len() >= self.capacity {
-            let victim = self
-                .map
-                .iter()
-                .min_by_key(|(_, e)| e.stamp)
-                .map(|(&k, _)| k)
-                .expect("non-empty cache");
-            let mut e = self.map.remove(&victim).expect("victim present");
-            e.data.clear();
-            e
+        let slot = if self.map.len() >= self.capacity {
+            let victim = self.tail;
+            debug_assert_ne!(victim, NIL, "full cache has a tail");
+            let old_row = self.nodes[victim].row;
+            self.map.remove(&old_row).expect("victim indexed");
+            self.unlink(victim);
+            let node = &mut self.nodes[victim];
+            node.row = row;
+            node.data.clear();
+            node.data.extend_from_slice(data);
+            victim
         } else {
-            Entry {
-                stamp: 0,
-                data: Vec::with_capacity(data.len()),
-            }
+            self.nodes.push(Node {
+                row,
+                prev: NIL,
+                next: NIL,
+                data: data.to_vec(),
+            });
+            self.nodes.len() - 1
         };
-        entry.stamp = self.clock;
-        entry.data.extend_from_slice(data);
-        self.map.insert(row, entry);
+        self.map.insert(row, slot);
+        self.push_front(slot);
     }
 }
 
@@ -148,5 +206,84 @@ mod tests {
         };
         assert_eq!(run(5), run(5));
         assert_eq!(run(5).iter().filter(|v| v.is_some()).count(), 5);
+    }
+
+    /// Reference model of the original stamp-based cache: the linked
+    /// list must replay its hit/miss decisions and eviction victims
+    /// exactly, operation by operation.
+    #[test]
+    fn linked_list_matches_stamp_reference_model() {
+        struct StampCache {
+            capacity: usize,
+            clock: u64,
+            map: HashMap<usize, (u64, f64)>,
+        }
+        impl StampCache {
+            fn contains_and_touch(&mut self, row: usize) -> bool {
+                self.clock += 1;
+                match self.map.get_mut(&row) {
+                    Some(e) => {
+                        e.0 = self.clock;
+                        true
+                    }
+                    None => false,
+                }
+            }
+            fn insert(&mut self, row: usize, v: f64) {
+                self.clock += 1;
+                if let Some(e) = self.map.get_mut(&row) {
+                    *e = (self.clock, v);
+                    return;
+                }
+                if self.map.len() >= self.capacity {
+                    let victim = self
+                        .map
+                        .iter()
+                        .min_by_key(|(_, e)| e.0)
+                        .map(|(&k, _)| k)
+                        .expect("non-empty");
+                    self.map.remove(&victim);
+                }
+                self.map.insert(row, (self.clock, v));
+            }
+        }
+
+        for cap in [1usize, 2, 3, 7] {
+            let mut real = RowCache::new(cap);
+            let mut model = StampCache {
+                capacity: cap,
+                clock: 0,
+                map: HashMap::new(),
+            };
+            // A mixed access stream with repeats, overwrites and misses.
+            let mut x = 88172645463325252u64;
+            for step in 0..4000u64 {
+                // xorshift64 — deterministic op stream.
+                x ^= x << 13;
+                x ^= x >> 7;
+                x ^= x << 17;
+                let r = (x % 17) as usize;
+                if x % 3 == 0 {
+                    assert_eq!(
+                        real.contains_and_touch(r),
+                        model.contains_and_touch(r),
+                        "cap={cap} step={step} row={r}"
+                    );
+                } else {
+                    let v = step as f64;
+                    real.insert(r, &row(v, 2));
+                    model.insert(r, v);
+                }
+                // Full-state comparison: same members, same values.
+                assert_eq!(real.len(), model.map.len(), "cap={cap} step={step}");
+                for probe in 0..17usize {
+                    assert_eq!(
+                        real.peek(probe).map(|d| d[0]),
+                        model.map.get(&probe).map(|e| e.1),
+                        "cap={cap} step={step} probe={probe}"
+                    );
+                }
+            }
+        }
     }
 }

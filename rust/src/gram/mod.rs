@@ -55,6 +55,21 @@
 //! configuration) a miss block's payload `k·m` never crosses that
 //! threshold, so the contract holds. `cargo test` pins all of this
 //! (`rust/tests/gram_engine_props.rs`).
+//!
+//! The same row-wise independence makes the product stage **thread-count
+//! invariant**: [`crate::parallel::ParallelProduct`] splits the sampled
+//! rows of any inner product across `t` scoped worker threads with a
+//! deterministic contiguous partition, so each row is still computed by
+//! exactly one worker with the fixed per-entry summation order. The
+//! assembled block — and therefore every solver trajectory — is bitwise
+//! identical for every `t`, with the cache on or off, locally or under
+//! the distributed reduction (both run outside the product stage, and
+//! the hit/miss stream does not depend on `t`). Unlike `cache_rows`,
+//! `threads` may even differ across ranks without breaking the
+//! collective matching — it changes no message and no decision, only
+//! wall time. Pinned by `rust/tests/threaded_product_props.rs`, across
+//! thread counts {1, 2, 3, 8}, cache on/off, product backends, and
+//! DistGram ranks.
 
 mod cache;
 mod engine;

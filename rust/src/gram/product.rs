@@ -1,5 +1,7 @@
 //! Linear-product stage: the (partial) sampled gram block.
 
+use std::sync::Arc;
+
 use crate::dense::Mat;
 use crate::sparse::Csr;
 
@@ -50,20 +52,26 @@ pub const TRANSPOSE_GRAM_MAX_DENSITY: f64 = 0.25;
 /// CSR-backed linear product: the native path for both the full matrix
 /// and a 1D-column shard. Picks the transpose path for sparse data and
 /// the blocked scatter-dot path otherwise, per
-/// [`TRANSPOSE_GRAM_MAX_DENSITY`].
+/// [`TRANSPOSE_GRAM_MAX_DENSITY`]. `Clone` replicates the stage per
+/// worker for [`crate::parallel::ParallelProduct`] — the matrix and its
+/// cached transpose are `Arc`-shared (read-only on the compute path), so
+/// a clone costs two refcounts plus an empty scratch, not a copy of the
+/// data.
+#[derive(Clone)]
 pub struct CsrProduct {
-    a: Csr,
+    a: Arc<Csr>,
     /// Cached transpose for the sparse fast path (None for dense data).
-    at: Option<Csr>,
-    /// Dense gathered-sample-rows scratch for the blocked path.
+    at: Option<Arc<Csr>>,
+    /// Dense gathered-sample-rows scratch for the blocked path (private
+    /// per clone — the only `&mut` state).
     scratch: Vec<f64>,
 }
 
 impl CsrProduct {
     pub fn new(a: Csr) -> CsrProduct {
-        let at = (a.density() < TRANSPOSE_GRAM_MAX_DENSITY).then(|| a.transpose());
+        let at = (a.density() < TRANSPOSE_GRAM_MAX_DENSITY).then(|| Arc::new(a.transpose()));
         CsrProduct {
-            a,
+            a: Arc::new(a),
             at,
             scratch: Vec::new(),
         }
@@ -86,7 +94,7 @@ impl ProductStage for CsrProduct {
 
     fn compute(&mut self, sample: &[usize], q: &mut Mat) -> ProductCost {
         match &self.at {
-            Some(at) => self.a.sampled_gram_t(at, sample, q),
+            Some(at) => self.a.sampled_gram_t(at.as_ref(), sample, q),
             None => self.a.sampled_gram_blocked(sample, q, &mut self.scratch),
         }
         ProductCost {
@@ -98,12 +106,14 @@ impl ProductStage for CsrProduct {
 
 /// Low-rank (Nyström) product: `K̂(S, ·) = (C W⁻¹)[S, :] · Cᵀ`, a
 /// `(k×l)·(l×m)` multiply over precomputed factors. Emits finished kernel
-/// values ([`BlockKind::Kernel`]).
+/// values ([`BlockKind::Kernel`]). The factors are `Arc`-shared, so
+/// per-worker clones are free.
+#[derive(Clone)]
 pub struct LowRankProduct {
     /// `C W⁻¹` (m×l).
-    cw: Mat,
+    cw: Arc<Mat>,
     /// `Cᵀ` stored row-major as l×m for contiguous row access.
-    ct: Mat,
+    ct: Arc<Mat>,
     l: usize,
 }
 
@@ -112,7 +122,11 @@ impl LowRankProduct {
         assert_eq!(cw.ncols(), ct.nrows(), "factor ranks disagree");
         assert_eq!(cw.nrows(), ct.ncols(), "factor dims disagree");
         let l = cw.ncols();
-        LowRankProduct { cw, ct, l }
+        LowRankProduct {
+            cw: Arc::new(cw),
+            ct: Arc::new(ct),
+            l,
+        }
     }
 
     /// Approximation rank `l`.

@@ -14,6 +14,10 @@
 //! * [`gram`] — the staged, cached gram engine: layout → linear product →
 //!   reduction → epilogue, with a deterministic kernel-row LRU cache in
 //!   front. Every gram oracle is a thin configuration of this engine.
+//! * [`parallel`] — intra-rank threading: a deterministic scoped-thread
+//!   pool and the `ParallelProduct` adapter that splits sampled rows of
+//!   any product stage across worker threads (bitwise-invariant in the
+//!   thread count; composes with `DistGram` for hybrid P×t scaling).
 //! * [`comm`] — a simulated-MPI communicator (threads + channels) with
 //!   allreduce algorithms and traffic instrumentation.
 //! * [`costmodel`] — Hockney γF+βW+φL machine model used to project
@@ -44,6 +48,7 @@ pub mod dense;
 pub mod gram;
 pub mod kernelfn;
 pub mod model;
+pub mod parallel;
 pub mod rng;
 pub mod runtime;
 pub mod solvers;

@@ -1,0 +1,250 @@
+//! Intra-rank threaded execution: a small deterministic scoped-thread
+//! pool and the [`ParallelProduct`] adapter that splits the sampled rows
+//! of any product stage across worker threads.
+//!
+//! The s-step methods buy back communication time, which leaves the
+//! sampled gram product as the per-iteration wall on a multicore node
+//! (the same observation that drives the hybrid MPI×threads setups of
+//! the communication-avoiding literature). This module adds the missing
+//! axis: `t` worker threads *inside* one rank, composing with the
+//! column-sharded [`crate::solvers::DistGram`] ranks for hybrid
+//! `P ranks × t threads` scaling.
+//!
+//! ### Determinism
+//!
+//! Every [`ProductStage`] computes each output row independently of the
+//! other rows in the call, with a fixed per-entry summation order — the
+//! engine's cache-transparency contract
+//! (see [`crate::gram`]). Row partitioning therefore commutes with the
+//! computation: each sampled row is computed by exactly one worker, with
+//! exactly the arithmetic the serial stage would perform, so the
+//! assembled block is **bitwise identical for every thread count**. The
+//! partition itself is a pure function of `(rows, threads)` (contiguous
+//! near-equal ranges), no work stealing, no clock — a run with `t = 8`
+//! replays the bits of a run with `t = 1`. Pinned by
+//! `rust/tests/threaded_product_props.rs`.
+//!
+//! The pool is built on `std::thread::scope` (rayon is unavailable in
+//! the offline build): workers borrow their inputs and output chunks
+//! directly from the caller's stack, and worker 0 runs on the calling
+//! thread, so `t = 1` never spawns.
+
+use crate::dense::Mat;
+use crate::gram::{BlockKind, ProductCost, ProductStage};
+
+/// Contiguous near-equal partition bounds: `bounds[i]..bounds[i+1]` is
+/// worker `i`'s range. `parts + 1` entries, monotone, covering `0..n`.
+pub fn partition_bounds(n: usize, parts: usize) -> Vec<usize> {
+    assert!(parts >= 1, "partition into at least one part");
+    (0..=parts).map(|i| i * n / parts).collect()
+}
+
+/// Run one job per worker on scoped threads and return the results in
+/// worker order. Job 0 runs on the calling thread (no spawn for the
+/// single-worker case). Panics in any worker propagate.
+pub fn scoped_run<T, F>(mut jobs: Vec<F>) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    assert!(!jobs.is_empty(), "scoped_run needs at least one job");
+    if jobs.len() == 1 {
+        let job = jobs.pop().expect("one job");
+        return vec![job()];
+    }
+    let first = jobs.remove(0);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = jobs.into_iter().map(|job| scope.spawn(job)).collect();
+        let mut out = Vec::with_capacity(handles.len() + 1);
+        out.push(first());
+        for h in handles {
+            out.push(h.join().expect("parallel worker panicked"));
+        }
+        out
+    })
+}
+
+/// Threaded adapter around any [`ProductStage`]: splits the sampled rows
+/// of each `compute` call across `threads` workers.
+///
+/// Each worker owns a replica of the inner stage: the stages need
+/// `&mut self` only for private scratch, and their bulk data (the CSR
+/// matrix / low-rank factors) is `Arc`-shared, so replication costs
+/// refcounts, not copies, and the hot path needs no synchronization.
+/// Worker `i` computes the contiguous row range `bounds[i]..bounds[i+1]`
+/// into its own sub-block, which is then copied into the caller's output
+/// rows. With `threads = 1` (or a single sampled row) the call
+/// short-circuits to the inner stage — no spawn, no copy.
+///
+/// Cost accounting is the worker-order sum of the per-worker costs,
+/// which for every stage in the crate equals the serial cost exactly
+/// (per-row costs are additive).
+pub struct ParallelProduct<P> {
+    /// One replica per worker; `workers[0]` doubles as the serial path.
+    workers: Vec<P>,
+}
+
+impl<P: ProductStage + Clone> ParallelProduct<P> {
+    /// Wrap `inner` with `threads` workers (`threads >= 1`).
+    pub fn new(inner: P, threads: usize) -> ParallelProduct<P> {
+        assert!(threads >= 1, "ParallelProduct needs at least one thread");
+        let mut workers = Vec::with_capacity(threads);
+        for _ in 1..threads {
+            workers.push(inner.clone());
+        }
+        workers.push(inner);
+        ParallelProduct { workers }
+    }
+}
+
+impl<P> ParallelProduct<P> {
+    /// Configured worker count.
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// The original inner stage (the replica the serial path uses is
+    /// identical — all workers are clones of this one).
+    pub fn inner(&self) -> &P {
+        self.workers.last().expect("at least one worker")
+    }
+}
+
+impl<P: ProductStage + Send> ProductStage for ParallelProduct<P> {
+    fn m(&self) -> usize {
+        self.workers[0].m()
+    }
+
+    fn kind(&self) -> BlockKind {
+        self.workers[0].kind()
+    }
+
+    fn compute(&mut self, sample: &[usize], q: &mut Mat) -> ProductCost {
+        let k = sample.len();
+        let t = self.workers.len().min(k).max(1);
+        if t == 1 {
+            return self.workers[0].compute(sample, q);
+        }
+        let m = q.ncols();
+        let bounds = partition_bounds(k, t);
+        // Hand each worker its row range and the matching contiguous
+        // slice of the row-major output (disjoint by construction).
+        let mut rest: &mut [f64] = q.data_mut();
+        let mut jobs = Vec::with_capacity(t);
+        for (i, worker) in self.workers.iter_mut().take(t).enumerate() {
+            let rows = &sample[bounds[i]..bounds[i + 1]];
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(rows.len() * m);
+            rest = tail;
+            jobs.push(move || {
+                let mut sub = Mat::zeros(rows.len(), m);
+                let cost = worker.compute(rows, &mut sub);
+                chunk.copy_from_slice(sub.data());
+                cost
+            });
+        }
+        let costs = scoped_run(jobs);
+        let mut total = ProductCost {
+            flops: 0.0,
+            rows_charged: 0,
+        };
+        for c in costs {
+            total.flops += c.flops;
+            total.rows_charged += c.rows_charged;
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{gen_dense_classification, gen_uniform_sparse, SynthParams, Task};
+    use crate::gram::CsrProduct;
+    use crate::rng::Pcg;
+
+    #[test]
+    fn partition_bounds_cover_and_are_monotone() {
+        for n in [0usize, 1, 5, 7, 64] {
+            for parts in [1usize, 2, 3, 8, 11] {
+                let b = partition_bounds(n, parts);
+                assert_eq!(b.len(), parts + 1);
+                assert_eq!(b[0], 0);
+                assert_eq!(b[parts], n);
+                for i in 0..parts {
+                    assert!(b[i] <= b[i + 1]);
+                    // Near-equal: no range exceeds ceil(n/parts).
+                    assert!(b[i + 1] - b[i] <= n.div_ceil(parts));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scoped_run_returns_in_worker_order() {
+        let jobs: Vec<_> = (0..7).map(|i| move || i * 10).collect();
+        assert_eq!(scoped_run(jobs), vec![0, 10, 20, 30, 40, 50, 60]);
+        let one = vec![|| 42];
+        assert_eq!(scoped_run(one), vec![42]);
+    }
+
+    #[test]
+    fn parallel_product_is_bitwise_identical_to_serial() {
+        let dense = gen_dense_classification(30, 8, 0.0, 21).a;
+        let sparse = gen_uniform_sparse(
+            SynthParams {
+                m: 26,
+                n: 120,
+                density: 0.05,
+                seed: 9,
+            },
+            Task::Classification,
+        )
+        .a;
+        for a in [dense, sparse] {
+            let m = a.nrows();
+            let mut rng = Pcg::seeded(5);
+            // Duplicate-heavy with-replacement samples, incl. k < t.
+            let samples: Vec<Vec<usize>> = (0..8)
+                .map(|_| {
+                    let k = rng.gen_range(1, 10);
+                    (0..k).map(|_| rng.gen_below(m / 2 + 1)).collect()
+                })
+                .collect();
+            let mut serial = CsrProduct::new(a.clone());
+            for t in [1usize, 2, 3, 8, 16] {
+                let mut par = ParallelProduct::new(CsrProduct::new(a.clone()), t);
+                assert_eq!(par.threads(), t);
+                assert_eq!(par.m(), serial.m());
+                assert_eq!(par.kind(), serial.kind());
+                for sample in &samples {
+                    let mut q_ref = Mat::zeros(sample.len(), m);
+                    let cost_ref = serial.compute(sample, &mut q_ref);
+                    let mut q = Mat::zeros(sample.len(), m);
+                    let cost = par.compute(sample, &mut q);
+                    assert_eq!(q.data(), q_ref.data(), "t={t} sample {sample:?}");
+                    assert_eq!(cost.rows_charged, cost_ref.rows_charged);
+                    assert_eq!(cost.flops, cost_ref.flops, "additive exact counts");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_row_and_more_threads_than_rows_work() {
+        let a = gen_dense_classification(12, 4, 0.0, 3).a;
+        let mut serial = CsrProduct::new(a.clone());
+        let mut par = ParallelProduct::new(CsrProduct::new(a), 8);
+        let mut q_ref = Mat::zeros(1, 12);
+        serial.compute(&[5], &mut q_ref);
+        let mut q = Mat::zeros(1, 12);
+        par.compute(&[5], &mut q);
+        assert_eq!(q.data(), q_ref.data());
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one thread")]
+    fn zero_threads_is_rejected() {
+        let a = gen_dense_classification(4, 2, 0.0, 1).a;
+        let _ = ParallelProduct::new(CsrProduct::new(a), 0);
+    }
+}

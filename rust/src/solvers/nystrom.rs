@@ -18,6 +18,7 @@ use crate::costmodel::Ledger;
 use crate::dense::{Cholesky, Mat};
 use crate::gram::{GramEngine, Layout, LowRankProduct, NoReduce};
 use crate::kernelfn::Kernel;
+use crate::parallel::ParallelProduct;
 use crate::rng::Pcg;
 use crate::sparse::Csr;
 
@@ -25,7 +26,7 @@ use super::{GramOracle, LocalGram};
 
 /// Gram oracle over the rank-`l` Nyström approximation of `K`.
 pub struct NystromGram {
-    engine: GramEngine<LowRankProduct, NoReduce>,
+    engine: GramEngine<ParallelProduct<LowRankProduct>, NoReduce>,
 }
 
 impl NystromGram {
@@ -33,7 +34,7 @@ impl NystromGram {
     /// `jitter` regularizes `W` (standard practice; keeps the
     /// factorization stable when landmarks are nearly dependent).
     pub fn new(a: &Csr, kernel: Kernel, l: usize, jitter: f64, seed: u64) -> NystromGram {
-        Self::with_cache(a, kernel, l, jitter, seed, 0)
+        Self::with_opts(a, kernel, l, jitter, seed, 0, 1)
     }
 
     /// Same, with the engine's kernel-row cache enabled for
@@ -45,6 +46,21 @@ impl NystromGram {
         jitter: f64,
         seed: u64,
         cache_rows: usize,
+    ) -> NystromGram {
+        Self::with_opts(a, kernel, l, jitter, seed, cache_rows, 1)
+    }
+
+    /// Full configuration: cache plus `threads` workers splitting the
+    /// sampled rows of the low-rank product (bitwise-invariant).
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_opts(
+        a: &Csr,
+        kernel: Kernel,
+        l: usize,
+        jitter: f64,
+        seed: u64,
+        cache_rows: usize,
+        threads: usize,
     ) -> NystromGram {
         let m = a.nrows();
         assert!(l >= 1 && l <= m, "landmarks must be in [1, m]");
@@ -101,7 +117,7 @@ impl NystromGram {
         NystromGram {
             engine: GramEngine::new(
                 Layout::Full,
-                LowRankProduct::new(cw, c_t),
+                ParallelProduct::new(LowRankProduct::new(cw, c_t), threads),
                 NoReduce,
                 None,
                 diag,
@@ -111,7 +127,7 @@ impl NystromGram {
     }
 
     pub fn rank(&self) -> usize {
-        self.engine.product().rank()
+        self.engine.product().inner().rank()
     }
 
     /// Frobenius-relative error of the approximation against the exact

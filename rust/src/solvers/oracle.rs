@@ -8,34 +8,44 @@
 //!   epilogue — exactly the communication pattern of the paper's
 //!   Section 4 analysis.
 //!
-//! Both take an optional kernel-row cache (`with_cache`); `new` keeps the
-//! cache off, which reproduces the pre-engine cost accounting count for
-//! count.
+//! Both take an optional kernel-row cache (`with_cache`) and an
+//! intra-rank worker-thread count for the product stage (`with_opts`);
+//! `new` keeps the cache off and runs serially, which reproduces the
+//! pre-engine cost accounting count for count. Results are bitwise
+//! identical for every cache size and thread count (see [`crate::gram`]).
 
 use crate::comm::{allreduce_sum, AllreduceAlgo, CommStats, Communicator};
 use crate::costmodel::Ledger;
 use crate::dense::Mat;
 use crate::gram::{AllreduceSum, CsrProduct, Epilogue, GramEngine, Layout, NoReduce};
 use crate::kernelfn::Kernel;
+use crate::parallel::ParallelProduct;
 use crate::sparse::Csr;
 
 pub use crate::gram::GramOracle;
 
 /// Serial oracle over the full matrix.
 pub struct LocalGram {
-    engine: GramEngine<CsrProduct, NoReduce>,
+    engine: GramEngine<ParallelProduct<CsrProduct>, NoReduce>,
 }
 
 impl LocalGram {
     pub fn new(a: Csr, kernel: Kernel) -> Self {
-        Self::with_cache(a, kernel, 0)
+        Self::with_opts(a, kernel, 0, 1)
     }
 
     /// `cache_rows > 0` enables the deterministic kernel-row LRU cache.
     pub fn with_cache(a: Csr, kernel: Kernel, cache_rows: usize) -> Self {
+        Self::with_opts(a, kernel, cache_rows, 1)
+    }
+
+    /// Full configuration: row cache (`cache_rows > 0`) and `threads`
+    /// product workers (`>= 1`; the sampled rows of every gram call are
+    /// split across them, bitwise-identically for every count).
+    pub fn with_opts(a: Csr, kernel: Kernel, cache_rows: usize, threads: usize) -> Self {
         let epilogue = Epilogue::new(kernel, a.row_norms_sq());
         let diag = epilogue.diag();
-        let product = CsrProduct::new(a);
+        let product = ParallelProduct::new(CsrProduct::new(a), threads);
         LocalGram {
             engine: GramEngine::new(
                 Layout::Full,
@@ -76,14 +86,14 @@ impl GramOracle for LocalGram {
 /// row norms, which are themselves a column-shard sum — allreduced once
 /// at construction.
 pub struct DistGram<'c, C: Communicator> {
-    engine: GramEngine<CsrProduct, AllreduceSum<'c, C>>,
+    engine: GramEngine<ParallelProduct<CsrProduct>, AllreduceSum<'c, C>>,
 }
 
 impl<'c, C: Communicator> DistGram<'c, C> {
     /// Build from this rank's column shard. Collective: every rank must
     /// call this at the same time (one allreduce for RBF row norms).
     pub fn new(shard: Csr, kernel: Kernel, comm: &'c mut C, algo: AllreduceAlgo) -> Self {
-        Self::with_cache(shard, kernel, comm, algo, 0)
+        Self::with_opts(shard, kernel, comm, algo, 0, 1)
     }
 
     /// Collective; `cache_rows` must be identical on every rank (the
@@ -96,12 +106,27 @@ impl<'c, C: Communicator> DistGram<'c, C> {
         algo: AllreduceAlgo,
         cache_rows: usize,
     ) -> Self {
+        Self::with_opts(shard, kernel, comm, algo, cache_rows, 1)
+    }
+
+    /// Full configuration: cache plus `threads` intra-rank workers for
+    /// the partial product — the hybrid P ranks × t threads point.
+    /// Unlike `cache_rows`, `threads` may differ across ranks (it
+    /// changes no message and no hit/miss decision, only wall time).
+    pub fn with_opts(
+        shard: Csr,
+        kernel: Kernel,
+        comm: &'c mut C,
+        algo: AllreduceAlgo,
+        cache_rows: usize,
+        threads: usize,
+    ) -> Self {
         let (rank, ranks) = (comm.rank(), comm.size());
         let mut row_norms = shard.row_norms_sq();
         allreduce_sum(comm, &mut row_norms, algo);
         let epilogue = Epilogue::new(kernel, row_norms);
         let diag = epilogue.diag();
-        let product = CsrProduct::new(shard);
+        let product = ParallelProduct::new(CsrProduct::new(shard), threads);
         let reduce = AllreduceSum::new(comm, algo);
         DistGram {
             engine: GramEngine::new(
@@ -313,6 +338,40 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    /// `threads` is a per-rank-local knob: unlike `cache_rows` it may
+    /// differ across ranks without desyncing the collectives, and the
+    /// blocks stay bitwise identical to the all-serial run.
+    #[test]
+    fn dist_gram_threads_may_differ_across_ranks() {
+        let ds = gen_dense_classification(20, 8, 0.0, 6);
+        let kernel = Kernel::paper_rbf();
+        let shards = ds.shard_cols(3);
+        let sample = vec![4usize, 11, 4, 0];
+        let run = |threads_of: fn(usize) -> usize| {
+            let shards = shards.clone();
+            let sample = &sample;
+            run_ranks(3, move |c| {
+                let shard = shards[c.rank()].clone();
+                let mut dist = DistGram::with_opts(
+                    shard,
+                    kernel,
+                    c,
+                    AllreduceAlgo::Rabenseifner,
+                    0,
+                    threads_of(c.rank()),
+                );
+                let mut q = Mat::zeros(4, 20);
+                dist.gram(sample, &mut q, &mut Ledger::new());
+                q
+            })
+        };
+        let serial = run(|_| 1);
+        let mixed = run(|rank| rank + 1); // t = 1, 2, 3 per rank
+        for (a, b) in serial.iter().zip(&mixed) {
+            assert_eq!(a.data(), b.data());
         }
     }
 

@@ -95,6 +95,20 @@ pub fn check(name: &str, cases: u64, mut prop: impl FnMut(&mut Gen)) {
     }
 }
 
+/// Worker-thread count for thread-aware tests: the `THREADS` environment
+/// variable, defaulting to 1. The CI matrix runs the suite once with
+/// `THREADS=4`, so every property that folds `env_threads()` into its
+/// thread-count sweep gets exercised with real intra-rank parallelism on
+/// that lane (results are bitwise thread-count-invariant, so assertions
+/// are unchanged).
+pub fn env_threads() -> usize {
+    std::env::var("THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&t| t >= 1)
+        .unwrap_or(1)
+}
+
 /// Assert two slices are elementwise close.
 #[track_caller]
 pub fn assert_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
@@ -135,6 +149,13 @@ mod tests {
             let x = g.size(0, 100);
             assert!(x < 90, "x too big: {x}");
         });
+    }
+
+    #[test]
+    fn env_threads_is_at_least_one() {
+        // Whatever the environment says (including the CI THREADS lane
+        // and malformed values), the result is a usable worker count.
+        assert!(env_threads() >= 1);
     }
 
     #[test]

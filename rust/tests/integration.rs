@@ -43,6 +43,7 @@ fn libsvm_roundtrip_through_distributed_solver() {
             h: 600,
             seed: 5,
             cache_rows: 0,
+            threads: 1,
         },
         4,
         AllreduceAlgo::Rabenseifner,
@@ -97,6 +98,7 @@ fn solver_result_is_algorithm_invariant() {
         h: 60,
         seed: 3,
         cache_rows: 0,
+        threads: 1,
     };
     let reference = run_serial(&ds, Kernel::paper_poly(), &problem, &solver, &machine).alpha;
     for algo in [
@@ -132,6 +134,7 @@ fn gap_series_final_point_matches_distributed_final_gap() {
             h: 128,
             seed: 99,
             cache_rows: 0,
+            threads: 1,
         },
         4,
         AllreduceAlgo::Rabenseifner,
@@ -153,7 +156,8 @@ fn config_file_drives_cli_run() {
     let cfg_path = dir.join("exp.toml");
     std::fs::write(
         &cfg_path,
-        "dataset = \"diabetes\"\nscale = 0.08\nkernel = \"rbf\"\nh = 120\ns = 8\np = 2\n",
+        "dataset = \"diabetes\"\nscale = 0.08\nkernel = \"rbf\"\nh = 120\ns = 8\np = 2\n\
+         threads = 2\n",
     )
     .unwrap();
     let out = kcd::cli::run(vec![
@@ -164,6 +168,8 @@ fn config_file_drives_cli_run() {
     .unwrap();
     assert!(out.contains("duality gap"), "{out}");
     assert!(out.contains("s=8"), "{out}");
+    // The intra-rank thread count flows from the config file too.
+    assert!(out.contains("t=2"), "{out}");
     // Flag overrides file.
     let out2 = kcd::cli::run(vec![
         "train-svm".into(),
@@ -191,6 +197,7 @@ fn sweep_engines_agree_at_overlapping_p() {
     let base = SweepConfig {
         p_list: vec![4],
         s_list: vec![4, 8],
+        t_list: vec![1],
         h: 32,
         seed: 77,
         algo: AllreduceAlgo::Rabenseifner,

@@ -1,0 +1,322 @@
+//! Bitwise-equality property suite for the intra-rank threaded product
+//! stage (`parallel::ParallelProduct`), covering the acceptance matrix:
+//! cached × uncached × thread counts {1, 2, 3, 8} × product backends
+//! (`CsrProduct` dense/sparse, `LowRankProduct`) × `DistGram` rank
+//! counts, with duplicate-heavy with-replacement samples — plus solver-
+//! level dcd/bdcd s-step equivalence with `threads > 1`.
+//!
+//! The `THREADS` environment variable (CI matrix lane) is folded into
+//! every thread-count sweep via `testkit::env_threads`, so the suite
+//! also runs at the lane's parallelism level.
+
+use kcd::comm::{run_ranks, AllreduceAlgo};
+use kcd::costmodel::Ledger;
+use kcd::data::{gen_dense_classification, gen_uniform_sparse, Dataset, SynthParams, Task};
+use kcd::dense::Mat;
+use kcd::gram::{CsrProduct, LowRankProduct, ProductStage};
+use kcd::kernelfn::Kernel;
+use kcd::parallel::ParallelProduct;
+use kcd::rng::Pcg;
+use kcd::solvers::{
+    bdcd, bdcd_sstep, dcd, dcd_sstep, DistGram, GramOracle, KrrParams, LocalGram, NystromGram,
+    SvmParams, SvmVariant,
+};
+use kcd::testkit;
+
+/// The acceptance thread counts, plus the CI lane's `THREADS` value.
+fn thread_counts() -> Vec<usize> {
+    let mut ts = vec![1usize, 2, 3, 8];
+    let env = testkit::env_threads();
+    if !ts.contains(&env) {
+        ts.push(env);
+    }
+    ts
+}
+
+/// Duplicate-heavy with-replacement sample stream: indices concentrate
+/// on the lower half of `[0, m)`, so calls repeat rows both within a
+/// block (intra-call dedup) and across calls (cache hits).
+fn dup_stream(m: usize, calls: usize, seed: u64) -> Vec<Vec<usize>> {
+    let mut rng = Pcg::seeded(seed);
+    (0..calls)
+        .map(|_| {
+            let k = rng.gen_range(1, 9);
+            (0..k).map(|_| rng.gen_below(m / 2 + 1)).collect()
+        })
+        .collect()
+}
+
+fn dense_ds() -> Dataset {
+    gen_dense_classification(32, 10, 0.0, 42)
+}
+
+fn sparse_ds() -> Dataset {
+    gen_uniform_sparse(
+        SynthParams {
+            m: 30,
+            n: 140,
+            density: 0.05,
+            seed: 7,
+        },
+        Task::Classification,
+    )
+}
+
+/// Raw product stages: every thread count must replay the serial bits,
+/// for the CSR product on both density paths and the low-rank product.
+#[test]
+fn prop_product_stages_bitwise_invariant_in_thread_count() {
+    fn check<P: ProductStage + Clone + Send>(name: &str, inner: P) {
+        let m = inner.m();
+        let samples = dup_stream(m, 6, 0x51);
+        let mut serial = inner.clone();
+        for t in thread_counts() {
+            let mut par = ParallelProduct::new(inner.clone(), t);
+            for sample in &samples {
+                let mut q_ref = Mat::zeros(sample.len(), m);
+                let cost_ref = serial.compute(sample, &mut q_ref);
+                let mut q = Mat::zeros(sample.len(), m);
+                let cost = par.compute(sample, &mut q);
+                assert_eq!(
+                    q.data(),
+                    q_ref.data(),
+                    "{name} t={t}: block must be bitwise identical"
+                );
+                assert_eq!(cost.rows_charged, cost_ref.rows_charged, "{name} t={t}");
+            }
+        }
+    }
+
+    check("csr-dense", CsrProduct::new(dense_ds().a));
+    check("csr-sparse", CsrProduct::new(sparse_ds().a));
+
+    // Low-rank factors with a deterministic spectrum.
+    let (m, l) = (28usize, 9usize);
+    let mut rng = Pcg::seeded(33);
+    let cw = Mat::from_fn(m, l, |_, _| rng.next_gaussian());
+    let ct = Mat::from_fn(l, m, |_, _| rng.next_gaussian());
+    check("low-rank", LowRankProduct::new(cw, ct));
+}
+
+/// Engine level: `LocalGram` and `NystromGram` blocks are bitwise
+/// identical across thread counts, cache on and off, for every kernel.
+#[test]
+fn prop_local_oracles_bitwise_invariant_cached_and_uncached() {
+    for ds in [dense_ds(), sparse_ds()] {
+        let m = ds.m();
+        let stream = dup_stream(m, 8, 0xA1);
+        for kernel in [Kernel::Linear, Kernel::paper_poly(), Kernel::paper_rbf()] {
+            let run_local = |cache_rows: usize, threads: usize| -> Vec<f64> {
+                let mut oracle = LocalGram::with_opts(ds.a.clone(), kernel, cache_rows, threads);
+                let mut out = Vec::new();
+                for sample in &stream {
+                    let mut q = Mat::zeros(sample.len(), m);
+                    oracle.gram(sample, &mut q, &mut Ledger::new());
+                    out.extend_from_slice(q.data());
+                }
+                out
+            };
+            let reference = run_local(0, 1);
+            for t in thread_counts() {
+                for cache_rows in [0usize, 6] {
+                    assert_eq!(
+                        run_local(cache_rows, t),
+                        reference,
+                        "{} {kernel:?} t={t} cache={cache_rows}",
+                        ds.name
+                    );
+                }
+            }
+        }
+    }
+
+    // Nyström: the threaded low-rank product through the cached engine.
+    let ds = dense_ds();
+    let stream = dup_stream(ds.m(), 6, 0xB2);
+    let kernel = Kernel::paper_rbf();
+    let run_ny = |cache_rows: usize, threads: usize| -> Vec<f64> {
+        let mut oracle = NystromGram::with_opts(&ds.a, kernel, 12, 1e-10, 4, cache_rows, threads);
+        let mut out = Vec::new();
+        for sample in &stream {
+            let mut q = Mat::zeros(sample.len(), ds.m());
+            oracle.gram(sample, &mut q, &mut Ledger::new());
+            out.extend_from_slice(q.data());
+        }
+        out
+    };
+    let reference = run_ny(0, 1);
+    for t in thread_counts() {
+        for cache_rows in [0usize, 5] {
+            assert_eq!(run_ny(cache_rows, t), reference, "nystrom t={t} cache={cache_rows}");
+        }
+    }
+}
+
+/// Distributed level: for each rank count (pof2 and not), every
+/// (threads, cache) combination replays the bits of that rank count's
+/// serial uncached run, and all ranks agree.
+#[test]
+fn prop_dist_gram_bitwise_invariant_across_ranks_and_threads() {
+    let ds = gen_dense_classification(24, 16, 0.0, 5);
+    let m = ds.m();
+    let stream = dup_stream(m, 6, 0x77);
+    let kernel = Kernel::paper_rbf();
+    for p in [2usize, 3, 4] {
+        let shards = ds.shard_cols(p);
+        let run = |cache_rows: usize, threads: usize| -> Vec<f64> {
+            let shards = shards.clone();
+            let stream = &stream;
+            let outs = run_ranks(p, move |c| {
+                let shard = shards[c.rank()].clone();
+                let mut oracle = DistGram::with_opts(
+                    shard,
+                    kernel,
+                    c,
+                    AllreduceAlgo::Rabenseifner,
+                    cache_rows,
+                    threads,
+                );
+                let mut out = Vec::new();
+                for sample in stream {
+                    let mut q = Mat::zeros(sample.len(), m);
+                    oracle.gram(sample, &mut q, &mut Ledger::new());
+                    out.extend_from_slice(q.data());
+                }
+                out
+            });
+            for other in &outs[1..] {
+                assert_eq!(&outs[0], other, "p={p}: ranks disagree");
+            }
+            outs.into_iter().next().unwrap()
+        };
+        let reference = run(0, 1);
+        for t in thread_counts() {
+            for cache_rows in [0usize, 5] {
+                assert_eq!(
+                    run(cache_rows, t),
+                    reference,
+                    "p={p} t={t} cache={cache_rows}"
+                );
+            }
+        }
+    }
+}
+
+/// Solver level: dcd/bdcd and their s-step variants return bit-identical
+/// α with `threads > 1`, and the s-step ≡ classical equivalence holds on
+/// the threaded path.
+#[test]
+fn prop_solvers_bitwise_identical_with_threads() {
+    let svm_ds = dense_ds();
+    let krr_ds = gen_uniform_sparse(
+        SynthParams {
+            m: 26,
+            n: 90,
+            density: 0.08,
+            seed: 13,
+        },
+        Task::Regression,
+    );
+    let kernel = Kernel::paper_rbf();
+    for t in thread_counts() {
+        for cache_rows in [0usize, 8] {
+            // --- DCD / s-step DCD ---------------------------------------
+            let p = SvmParams {
+                c: 1.0,
+                variant: SvmVariant::L1,
+                h: 120,
+                seed: 3,
+            };
+            let mut serial = LocalGram::new(svm_ds.a.clone(), kernel);
+            let mut threaded = LocalGram::with_opts(svm_ds.a.clone(), kernel, cache_rows, t);
+            let a_ref = dcd(&mut serial, &svm_ds.y, &p, &mut Ledger::new(), None);
+            let a_thr = dcd(&mut threaded, &svm_ds.y, &p, &mut Ledger::new(), None);
+            assert_eq!(a_ref, a_thr, "dcd t={t} cache={cache_rows}");
+
+            let mut serial = LocalGram::new(svm_ds.a.clone(), kernel);
+            let mut threaded = LocalGram::with_opts(svm_ds.a.clone(), kernel, cache_rows, t);
+            let s_ref = dcd_sstep(&mut serial, &svm_ds.y, &p, 8, &mut Ledger::new(), None);
+            let s_thr = dcd_sstep(&mut threaded, &svm_ds.y, &p, 8, &mut Ledger::new(), None);
+            assert_eq!(s_ref, s_thr, "dcd_sstep t={t} cache={cache_rows}");
+            // s-step ≡ classical survives threading.
+            for (x, y) in s_thr.iter().zip(&a_thr) {
+                assert!(
+                    (x - y).abs() < 1e-9,
+                    "sstep vs classical under threads t={t}"
+                );
+            }
+
+            // --- BDCD / s-step BDCD -------------------------------------
+            let p = KrrParams {
+                lambda: 1.0,
+                b: 4,
+                h: 80,
+                seed: 5,
+            };
+            let mut serial = LocalGram::new(krr_ds.a.clone(), kernel);
+            let mut threaded = LocalGram::with_opts(krr_ds.a.clone(), kernel, cache_rows, t);
+            let a_ref = bdcd(&mut serial, &krr_ds.y, &p, &mut Ledger::new(), None);
+            let a_thr = bdcd(&mut threaded, &krr_ds.y, &p, &mut Ledger::new(), None);
+            assert_eq!(a_ref, a_thr, "bdcd t={t} cache={cache_rows}");
+
+            let mut serial = LocalGram::new(krr_ds.a.clone(), kernel);
+            let mut threaded = LocalGram::with_opts(krr_ds.a.clone(), kernel, cache_rows, t);
+            let s_ref = bdcd_sstep(&mut serial, &krr_ds.y, &p, 6, &mut Ledger::new(), None);
+            let s_thr = bdcd_sstep(&mut threaded, &krr_ds.y, &p, 6, &mut Ledger::new(), None);
+            assert_eq!(s_ref, s_thr, "bdcd_sstep t={t} cache={cache_rows}");
+        }
+    }
+}
+
+/// Distributed s-step solve with threads on every rank: the full hybrid
+/// path (P ranks × t threads × cache) returns bit-identical α.
+#[test]
+fn prop_distributed_sstep_solve_bitwise_with_threads() {
+    use kcd::coordinator::{run_distributed, ProblemSpec, SolverSpec};
+    use kcd::costmodel::MachineProfile;
+    let ds = gen_dense_classification(28, 12, 0.05, 55);
+    let machine = MachineProfile::cray_ex();
+    let problem = ProblemSpec::Svm {
+        c: 1.0,
+        variant: SvmVariant::L1,
+    };
+    let base = SolverSpec {
+        s: 8,
+        h: 48,
+        seed: 9,
+        cache_rows: 0,
+        threads: 1,
+    };
+    for p in [2usize, 3] {
+        let reference = run_distributed(
+            &ds,
+            Kernel::paper_rbf(),
+            &problem,
+            &base,
+            p,
+            AllreduceAlgo::Rabenseifner,
+            &machine,
+        )
+        .alpha;
+        for t in [2usize, 8, testkit::env_threads()] {
+            for cache_rows in [0usize, 10] {
+                let solver = SolverSpec {
+                    cache_rows,
+                    threads: t,
+                    ..base
+                };
+                let alpha = run_distributed(
+                    &ds,
+                    Kernel::paper_rbf(),
+                    &problem,
+                    &solver,
+                    p,
+                    AllreduceAlgo::Rabenseifner,
+                    &machine,
+                )
+                .alpha;
+                assert_eq!(alpha, reference, "p={p} t={t} cache={cache_rows}");
+            }
+        }
+    }
+}
