@@ -53,6 +53,7 @@ fn ablation_allreduce(quick: bool) {
             p_list: vec![64],
             s_list: vec![8, 32, 128],
             t_list: vec![1],
+            pr: 1,
             h: if quick { 64 } else { 512 },
             seed: 1,
             algo,
@@ -214,6 +215,7 @@ fn ablation_machine(quick: bool) {
         p_list: vec![64],
         s_list: vec![8, 32, 128, 256],
         t_list: vec![1],
+        pr: 1,
         h: if quick { 64 } else { 512 },
         seed: 31,
         algo: AllreduceAlgo::Rabenseifner,

@@ -32,6 +32,7 @@ fn main() {
         p_list: vec![1, 2, 4, 8, 16, 32, 64, 128, 256, 512],
         s_list: vec![2, 4, 8, 16, 32, 64, 128, 256],
         t_list: vec![1],
+        pr: 1,
         h: if quick { 64 } else { 1024 },
         seed: 41,
         algo: AllreduceAlgo::Rabenseifner,

@@ -39,6 +39,7 @@ fn main() {
         p_list: vec![128, 256, 512, 1024, 2048, 4096],
         s_list: vec![8, 16, 32, 64, 128],
         t_list: vec![1],
+        pr: 1,
         h: if quick { 64 } else { 1024 },
         seed: 5,
         algo: AllreduceAlgo::Rabenseifner,

@@ -44,6 +44,7 @@ fn main() {
                     p_list: vec![p],
                     s_list: vec![2, 4, 8, 16, 32, 64, 128, 256],
                     t_list: vec![1],
+                    pr: 1,
                     h: if quick { 64 } else { 512 },
                     seed: 17,
                     algo: AllreduceAlgo::Rabenseifner,

@@ -102,7 +102,7 @@ fn main() {
         c: 1.0,
         variant: SvmVariant::L1,
     };
-    let solver = SolverSpec { s: S, h, seed: SEED, cache_rows: 0, threads: 1 };
+    let solver = SolverSpec { s: S, h, seed: SEED, cache_rows: 0, threads: 1, grid: None };
     let t = Instant::now();
     let dist = run_distributed(
         &ds,
@@ -146,7 +146,7 @@ fn main() {
         &reg,
         kernel,
         &ProblemSpec::Krr { lambda: 1.0, b: 64.min(reg.m()) },
-        &SolverSpec { s: 16, h: 400, seed: SEED, cache_rows: 0, threads: 1 },
+        &SolverSpec { s: 16, h: 400, seed: SEED, cache_rows: 0, threads: 1, grid: None },
         4,
         AllreduceAlgo::Rabenseifner,
         &machine,

@@ -26,6 +26,7 @@ fn main() {
         p_list: vec![1, 2, 4, 8, 16, 32, 64, 128, 256, 512],
         s_list: vec![2, 4, 8, 16, 32, 64, 128, 256],
         t_list: vec![1],
+        pr: 1,
         h: if quick { 64 } else { 512 },
         seed: 3,
         algo: AllreduceAlgo::Rabenseifner,

@@ -49,19 +49,24 @@ pub fn quick_mode() -> bool {
 /// One benchmark's statistics (seconds per iteration).
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Benchmark label.
     pub name: String,
+    /// Per-iteration wall-clock samples, in seconds.
     pub samples: Vec<f64>,
 }
 
 impl BenchResult {
+    /// Median seconds per iteration.
     pub fn median(&self) -> f64 {
         median(&self.samples)
     }
 
+    /// Mean seconds per iteration.
     pub fn mean(&self) -> f64 {
         mean(&self.samples)
     }
 
+    /// Sample standard deviation of the per-iteration seconds.
     pub fn stddev(&self) -> f64 {
         stddev(&self.samples)
     }

@@ -41,6 +41,8 @@ const KNOWN_FLAGS: &[(&str, bool /* takes a value */)] = &[
     ("gram-cache-rows", true),
     ("threads", true),
     ("t-list", true),
+    ("grid", true),
+    ("grid-rows", true),
     ("config", true),
     ("csv", false),
     ("quick", false),
@@ -58,15 +60,17 @@ fn flag_spec(name: &str) -> Option<bool> {
 /// Parsed command line: subcommand, `--key value` flags, positionals.
 #[derive(Debug, Default)]
 pub struct Args {
+    /// The subcommand (`train-svm`, `scaling`, …).
     pub command: String,
     flags: BTreeMap<String, String>,
+    /// Non-flag arguments in order.
     pub positional: Vec<String>,
 }
 
 impl Args {
     /// Parse `argv[1..]`. Flags are `--key value` or `--key=value`;
-    /// boolean flags stand alone. Every flag is validated against
-    /// [`KNOWN_FLAGS`]: unknown names and missing values are errors.
+    /// boolean flags stand alone. Every flag is validated against the
+    /// known-flag table: unknown names and missing values are errors.
     pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
         let mut out = Args::default();
         let mut it = argv.into_iter().peekable();
@@ -102,10 +106,12 @@ impl Args {
         Ok(out)
     }
 
+    /// Raw value of `--name`, if present.
     pub fn flag(&self, name: &str) -> Option<&str> {
         self.flags.get(name).map(|s| s.as_str())
     }
 
+    /// `--name` as a usize; `default` when absent, error when malformed.
     pub fn usize_flag(&self, name: &str, default: usize) -> Result<usize> {
         match self.flag(name) {
             None => Ok(default),
@@ -115,6 +121,7 @@ impl Args {
         }
     }
 
+    /// `--name` as an f64; `default` when absent, error when malformed.
     pub fn f64_flag(&self, name: &str, default: f64) -> Result<f64> {
         match self.flag(name) {
             None => Ok(default),
@@ -124,6 +131,7 @@ impl Args {
         }
     }
 
+    /// `--name a,b,c` as a usize list; `default` when absent.
     pub fn usize_list_flag(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
         match self.flag(name) {
             None => Ok(default.to_vec()),
@@ -138,11 +146,13 @@ impl Args {
         }
     }
 
+    /// True when the boolean flag `--name` was passed.
     pub fn bool_flag(&self, name: &str) -> bool {
         self.flag(name) == Some("true")
     }
 }
 
+/// The `kcd help` command reference (also shown on flag errors).
 pub const USAGE: &str = "kcd — scalable (s-step) dual coordinate descent for kernel methods
 
 USAGE: kcd <command> [--flags]
@@ -166,6 +176,8 @@ COMMON FLAGS:
   --s <n>           s-step block (1 = classical)                [1]
   --p <n>           Ranks for distributed runs                  [1]
   --p-list / --s-list <a,b,c>    Sweep lists.
+  --measured-limit <n>  scaling / breakdown: ranks up to this bound
+                    run the measured engine; beyond it, projected  [8]
   --algo <a>        rabenseifner | rd | linear                  [rabenseifner]
   --machine <m>     cray-ex | cloud                             [cray-ex]
   --seed <n>        Coordinate-stream seed.
@@ -178,6 +190,12 @@ COMMON FLAGS:
                     all solver commands, scaling and breakdown).
   --t-list <a,b,c>  scaling only: thread counts for the hybrid
                     P ranks × t threads sweep           [--threads]
+  --grid <PRxPC>    train-svm / train-krr: run the 2D process-grid
+                    layout (pr×pc must equal --p; the gram reduce then
+                    spans pc ranks instead of P, and results are
+                    bitwise-identical to the 1D layout over pc ranks).
+  --grid-rows <pr>  scaling only: run every sweep point P divisible by
+                    pr as a pr×(P/pr) grid (1 = the 1D sweep)   [1]
   --csv             Emit CSV instead of markdown tables.
   --config <file>   TOML-subset config (flags override).
 
@@ -215,7 +233,8 @@ fn load_config(args: &Args) -> Result<Config> {
     // their comma syntax is not a config value.)
     for key in [
         "dataset", "scale", "kernel", "problem", "c", "lambda", "b", "h", "s", "p", "algo",
-        "machine", "seed", "gram-cache-rows", "threads", "every", "measured-limit",
+        "machine", "seed", "gram-cache-rows", "threads", "grid", "grid-rows", "every",
+        "measured-limit",
     ] {
         if let Some(v) = args.flag(key) {
             cfg.set(key, v);
@@ -234,6 +253,45 @@ fn list_from(args: &Args, cfg: &Config, key: &str, default: &[usize]) -> Result<
         Some(list) => Ok(list),
         None => Ok(default.to_vec()),
     }
+}
+
+/// Strictly parse `--grid PRxPC` (e.g. `2x4`) against the launch's rank
+/// count `p`: absent → 1D layout (`None`); present-but-malformed or not
+/// factoring `p` → a hard error naming the key.
+fn grid_from(cfg: &Config, p: usize) -> Result<Option<(usize, usize)>> {
+    let Some(raw) = cfg_str(cfg, "grid")? else {
+        return Ok(None);
+    };
+    let parse = |part: &str| -> Result<usize> {
+        part.trim().parse::<usize>().map_err(|_| {
+            anyhow!("invalid value for 'grid': expected PRxPC (e.g. 2x4), got '{raw}'")
+        })
+    };
+    let (a, b) = raw
+        .split_once(|c| c == 'x' || c == 'X')
+        .ok_or_else(|| anyhow!("invalid value for 'grid': expected PRxPC (e.g. 2x4), got '{raw}'"))?;
+    let (pr, pc) = (parse(a)?, parse(b)?);
+    ensure!(
+        pr >= 1 && pc >= 1,
+        "invalid value for 'grid': grid dimensions must be at least 1, got {pr}x{pc}"
+    );
+    ensure!(
+        pr * pc == p,
+        "invalid value for 'grid': {pr}x{pc} needs P = {} ranks, but --p is {p}",
+        pr * pc
+    );
+    Ok(Some((pr, pc)))
+}
+
+/// Strictly read the scaling sweep's grid row-group count (`--grid-rows`,
+/// default 1 = the 1D sweep).
+fn grid_rows_from(cfg: &Config) -> Result<usize> {
+    let pr = cfg_usize(cfg, "grid-rows")?.unwrap_or(1);
+    ensure!(
+        pr >= 1,
+        "invalid value for 'grid-rows': need at least one row group"
+    );
+    Ok(pr)
 }
 
 /// Strictly read the intra-rank worker-thread count (default 1).
@@ -361,9 +419,10 @@ fn cmd_train_svm(args: &Args) -> Result<String> {
             variant: SvmVariant::L1,
         };
     }
-    let solver = solver_from(&cfg)?;
+    let mut solver = solver_from(&cfg)?;
     let p = cfg_usize(&cfg, "p")?.unwrap_or(1);
     ensure!(p >= 1, "invalid value for 'p': need at least one rank");
+    solver.grid = grid_from(&cfg, p)?;
     let algo = algo_from(&cfg)?;
     let res = run_distributed(&ds, kernel, &problem, &solver, p, algo, &machine);
     let (c, variant) = match problem {
@@ -374,12 +433,13 @@ fn cmd_train_svm(args: &Args) -> Result<String> {
     let obj = SvmObjective::new(&mut oracle, &ds.y, c, variant);
     let mut out = String::new();
     out.push_str(&format!(
-        "dataset={} m={} n={} kernel={} problem={} P={p} t={} s={} H={}\n",
+        "dataset={} m={} n={} kernel={} problem={} P={p} layout={} t={} s={} H={}\n",
         ds.name,
         ds.m(),
         ds.n(),
         kernel.name(),
         problem.name(),
+        grid_tag(solver.grid),
         solver.threads,
         solver.s,
         solver.h
@@ -418,28 +478,38 @@ fn cmd_train_krr(args: &Args) -> Result<String> {
     let lambda = cfg_f64(&cfg, "lambda")?.unwrap_or(1.0);
     let b = cfg_usize(&cfg, "b")?.unwrap_or(8);
     let problem = ProblemSpec::Krr { lambda, b };
-    let solver = solver_from(&cfg)?;
+    let mut solver = solver_from(&cfg)?;
     let p = cfg_usize(&cfg, "p")?.unwrap_or(1);
     ensure!(p >= 1, "invalid value for 'p': need at least one rank");
+    solver.grid = grid_from(&cfg, p)?;
     let algo = algo_from(&cfg)?;
     let res = run_distributed(&ds, kernel, &problem, &solver, p, algo, &machine);
     let mut oracle = LocalGram::new(ds.a.clone(), kernel);
     let astar = krr_exact(&mut oracle, &ds.y, lambda);
     let rel = crate::dense::rel_err(&res.alpha, &astar);
     Ok(format!(
-        "dataset={} m={} n={} kernel={} b={b} λ={lambda} P={p} s={} H={}\n\
+        "dataset={} m={} n={} kernel={} b={b} λ={lambda} P={p} layout={} s={} H={}\n\
          relative solution error = {rel:.6e}\n\
          projected time = {:.4e} s on {} (local wall {:.3}s)\n",
         ds.name,
         ds.m(),
         ds.n(),
         kernel.name(),
+        grid_tag(solver.grid),
         solver.s,
         solver.h,
         res.projection.total_secs(),
         machine.name,
         res.wall_secs
     ))
+}
+
+/// Report tag for the layout: `1d` or `grid-PRxPC`.
+fn grid_tag(grid: Option<(usize, usize)>) -> String {
+    match grid {
+        Some((pr, pc)) => format!("grid-{pr}x{pc}"),
+        None => "1d".to_string(),
+    }
 }
 
 fn cmd_convergence(args: &Args) -> Result<String> {
@@ -602,6 +672,7 @@ fn cmd_scaling(args: &Args) -> Result<String> {
         p_list: list_from(args, &cfg, "p-list", &[1, 2, 4, 8, 16, 32, 64, 128, 256, 512])?,
         s_list: list_from(args, &cfg, "s-list", &[2, 4, 8, 16, 32, 64, 128, 256])?,
         t_list,
+        pr: grid_rows_from(&cfg)?,
         h: cfg_usize(&cfg, "h")?.unwrap_or(256),
         seed: cfg_usize(&cfg, "seed")?.unwrap_or(0x5EED) as u64,
         algo: algo_from(&cfg)?,
@@ -842,6 +913,69 @@ mod tests {
         assert!(format!("{err:#}").contains("t-list"));
     }
 
+    /// --grid runs end to end, reports the layout, and — the grid
+    /// determinism contract — reproduces the 1D run over pc ranks
+    /// bit-for-bit (identical duality-gap line).
+    #[test]
+    fn grid_flag_runs_and_matches_1d_over_pc_ranks() {
+        let gap = |out: &str| {
+            out.lines()
+                .find(|l| l.starts_with("duality gap"))
+                .unwrap()
+                .to_string()
+        };
+        let grid = run(argv(
+            "train-svm --dataset diabetes --scale 0.1 --kernel rbf --h 120 --s 8 --p 4 \
+             --grid 2x2",
+        ))
+        .unwrap();
+        assert!(grid.contains("layout=grid-2x2"), "{grid}");
+        let one_d = run(argv(
+            "train-svm --dataset diabetes --scale 0.1 --kernel rbf --h 120 --s 8 --p 2",
+        ))
+        .unwrap();
+        assert!(one_d.contains("layout=1d"), "{one_d}");
+        assert_eq!(gap(&grid), gap(&one_d));
+        // train-krr takes the flag too.
+        let krr = run(argv(
+            "train-krr --dataset bodyfat --scale 0.3 --kernel linear --h 60 --b 4 --s 4 \
+             --p 4 --grid 4x1",
+        ))
+        .unwrap();
+        assert!(krr.contains("layout=grid-4x1"), "{krr}");
+    }
+
+    #[test]
+    fn grid_flag_is_strictly_validated() {
+        for bad in [
+            "train-svm --p 4 --grid 3x2",  // does not factor P
+            "train-svm --p 4 --grid 2",    // missing separator
+            "train-svm --p 4 --grid ax2",  // not a number
+            "train-svm --p 4 --grid 0x4",  // zero dimension
+            "scaling --grid-rows 0",       // zero row groups
+        ] {
+            let err = run(argv(bad)).expect_err(bad);
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("'grid'") || msg.contains("'grid-rows'"),
+                "{bad}: {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn scaling_grid_rows_adds_grid_column() {
+        let out = run(argv(
+            "scaling --dataset colon-cancer --scale 0.3 --h 32 --p-list 4,6,64 --s-list 4 \
+             --grid-rows 2 --measured-limit 4",
+        ))
+        .unwrap();
+        assert!(out.contains("grid"), "{out}");
+        assert!(out.contains("2x2"), "{out}");
+        assert!(out.contains("2x3"), "{out}");
+        assert!(out.contains("2x32"), "{out}");
+    }
+
     #[test]
     fn config_file_drives_sweep_lists() {
         let dir = std::env::temp_dir().join("kcd_cli_lists");
@@ -887,6 +1021,62 @@ mod tests {
         .unwrap();
         // Threads + cache are bitwise-transparent: identical tables.
         assert_eq!(base, threaded);
+    }
+
+    /// Extract every `--flag` name mentioned in `text` as an exact token:
+    /// leading punctuation (backticks, brackets, parens) is stripped so
+    /// table cells like `` `--grid <PRxPC>` `` count, and the name ends at
+    /// the first non-flag character — `--p` inside `--p-list` is NOT a
+    /// mention of `--p`.
+    fn mentioned_flags(text: &str) -> std::collections::BTreeSet<String> {
+        let mut out = std::collections::BTreeSet::new();
+        for raw in text.split_whitespace() {
+            let token = raw.trim_start_matches(|c: char| "`[(\"'*|".contains(c));
+            let Some(name) = token.strip_prefix("--") else {
+                continue;
+            };
+            let name: String = name
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '-')
+                .collect();
+            let name = name.trim_end_matches('-');
+            if !name.is_empty() {
+                out.insert(name.to_string());
+            }
+        }
+        out
+    }
+
+    /// docs/CLI.md and the parser's flag table must agree *exactly*, in
+    /// both directions, on whole flag names (substring matching would let
+    /// `--p` ride on `--p-list` and backticked mentions go unchecked) —
+    /// so the reference cannot silently rot. The in-binary usage text is
+    /// held to the forward direction for every flag it is expected to
+    /// carry.
+    #[test]
+    fn every_known_flag_is_documented() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/CLI.md");
+        let doc = std::fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("docs/CLI.md must exist next to the crate: {e}"));
+        let documented = mentioned_flags(&doc);
+        let usage_flags = mentioned_flags(USAGE);
+        for (name, _) in KNOWN_FLAGS {
+            assert!(
+                documented.contains(*name),
+                "docs/CLI.md is missing flag --{name}"
+            );
+            assert!(
+                usage_flags.contains(*name)
+                    || matches!(*name, "force" | "verbose" | "quick" | "every"),
+                "usage text is missing flag --{name}"
+            );
+        }
+        for name in &documented {
+            assert!(
+                flag_spec(name).is_some(),
+                "docs/CLI.md documents unknown flag --{name}"
+            );
+        }
     }
 
     #[test]

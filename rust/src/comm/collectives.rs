@@ -21,12 +21,19 @@ use super::Communicator;
 /// Allreduce algorithm selector.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AllreduceAlgo {
+    /// Reduce-scatter + allgather (`L = 2 log₂ P`, `W ≈ 2w`) — the
+    /// default, and the costs the paper assumes.
     Rabenseifner,
+    /// Recursive doubling (`L = log₂ P`, `W = w log₂ P`) — better for
+    /// small latency-bound messages.
     RecursiveDoubling,
+    /// Gather-to-root + broadcast (`L = O(P)`) — the naive baseline.
     Linear,
 }
 
 impl AllreduceAlgo {
+    /// Canonical CLI/report name (`rabenseifner`, `recursive-doubling`,
+    /// `linear`).
     pub fn name(&self) -> &'static str {
         match self {
             AllreduceAlgo::Rabenseifner => "rabenseifner",
@@ -35,6 +42,8 @@ impl AllreduceAlgo {
         }
     }
 
+    /// Parse a [`Self::name`]-style string (plus the `rsag`/`rd`
+    /// shorthands); `None` for unknown names.
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "rabenseifner" | "rsag" => Some(AllreduceAlgo::Rabenseifner),
@@ -286,11 +295,42 @@ pub fn broadcast<C: Communicator>(comm: &mut C, buf: &mut [f64], root: usize) {
 /// a ragged contribution is detected and rejected with a panic as soon
 /// as the first mismatched block arrives, instead of corrupting `out`.)
 pub fn allgather<C: Communicator>(comm: &mut C, mine: &[f64]) -> Vec<f64> {
+    let counts = vec![mine.len(); comm.size()];
+    allgatherv(comm, mine, &counts)
+}
+
+/// Variable-count allgather (`MPI_Allgatherv`): rank `r` contributes
+/// `counts[r]` words; returns the rank-ordered concatenation
+/// (`Σ counts` words). Every rank must pass the *same* `counts` — the
+/// schedule is agreed a priori, exactly like the block-cyclic slice
+/// sizes of the grid layout's row allgather, so no size-exchange
+/// messages are needed.
+///
+/// Ring algorithm: `P − 1` sequential rounds; each rank forwards the
+/// block it received in the previous round, so per-rank sent words are
+/// `Σ counts − counts[next]` and rounds are `P − 1`. A block whose length
+/// contradicts `counts` (a ragged contribution) panics as soon as it
+/// arrives instead of corrupting the output.
+pub fn allgatherv<C: Communicator>(comm: &mut C, mine: &[f64], counts: &[usize]) -> Vec<f64> {
     let p = comm.size();
     let rank = comm.rank();
-    let w = mine.len();
-    let mut out = vec![0.0; w * p];
-    out[rank * w..(rank + 1) * w].copy_from_slice(mine);
+    assert_eq!(counts.len(), p, "allgatherv: one count per rank");
+    assert_eq!(
+        mine.len(),
+        counts[rank],
+        "allgatherv: rank {rank} contributed {} words but counts[{rank}] = {}",
+        mine.len(),
+        counts[rank]
+    );
+    let mut offsets = Vec::with_capacity(p + 1);
+    let mut total = 0usize;
+    offsets.push(0);
+    for &c in counts {
+        total += c;
+        offsets.push(total);
+    }
+    let mut out = vec![0.0; total];
+    out[offsets[rank]..offsets[rank + 1]].copy_from_slice(mine);
     if p == 1 {
         return out;
     }
@@ -299,18 +339,19 @@ pub fn allgather<C: Communicator>(comm: &mut C, mine: &[f64]) -> Vec<f64> {
     // Ring: at step t, forward the block received at step t-1.
     let mut cur = rank;
     for _ in 0..p - 1 {
-        comm.send(next, &out[cur * w..(cur + 1) * w]);
+        comm.send(next, &out[offsets[cur]..offsets[cur + 1]]);
         let got = comm.recv(prev);
         cur = (cur + p - 1) % p;
         assert_eq!(
             got.len(),
-            w,
-            "allgather: rank {rank} received a {}-word block from the ring but \
-             contributes {w} words itself; all ranks must contribute equal \
-             lengths (ragged contribution detected at rank {cur}'s block)",
-            got.len()
+            counts[cur],
+            "allgatherv: rank {rank} received {} words for rank {cur}'s block \
+             but the shared counts say {}; every rank must pass identical \
+             counts matching its own contribution",
+            got.len(),
+            counts[cur]
         );
-        out[cur * w..(cur + 1) * w].copy_from_slice(&got);
+        out[offsets[cur]..offsets[cur + 1]].copy_from_slice(&got);
         comm.stats_mut().rounds += 1;
     }
     out
@@ -435,6 +476,45 @@ mod tests {
                 assert_eq!(out, expect);
             }
         }
+    }
+
+    #[test]
+    fn allgatherv_concatenates_uneven_blocks_in_rank_order() {
+        // Block sizes 3, 0, 1, 2 — including an empty contribution (a
+        // row group that owns no block-cyclic rows).
+        let counts = [3usize, 0, 1, 2];
+        let outs = run_ranks(4, |c| {
+            let r = c.rank();
+            let mine: Vec<f64> = (0..counts[r]).map(|i| (10 * r + i) as f64).collect();
+            let out = allgatherv(c, &mine, &counts);
+            (out, c.stats())
+        });
+        let expect = vec![0.0, 1.0, 2.0, 20.0, 30.0, 31.0];
+        for (r, (out, stats)) in outs.iter().enumerate() {
+            assert_eq!(*out, expect, "rank {r}");
+            assert_eq!(stats.rounds, 3, "ring is P-1 rounds");
+            // Ring sends every block except the successor's own (which it
+            // never needs forwarded).
+            let next = (r + 1) % 4;
+            let sent: usize = counts.iter().sum::<usize>() - counts[next];
+            assert_eq!(stats.words, sent as u64, "rank {r}");
+        }
+    }
+
+    #[test]
+    fn allgatherv_single_rank_is_local() {
+        let outs = run_ranks(1, |c| allgatherv(c, &[7.0, 8.0], &[2]));
+        assert_eq!(outs[0], vec![7.0, 8.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn allgatherv_rejects_contribution_not_matching_counts() {
+        run_ranks(2, |c| {
+            // Rank 1 lies about its length.
+            let mine = vec![1.0; if c.rank() == 0 { 2 } else { 3 }];
+            allgatherv(c, &mine, &[2, 2])
+        });
     }
 
     /// Ragged contributions must be rejected loudly (they used to slip

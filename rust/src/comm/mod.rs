@@ -15,7 +15,9 @@
 mod collectives;
 mod thread_comm;
 
-pub use collectives::{allgather, allreduce_sum, broadcast, reduce_to_root, AllreduceAlgo};
+pub use collectives::{
+    allgather, allgatherv, allreduce_sum, broadcast, reduce_to_root, AllreduceAlgo,
+};
 pub use thread_comm::{run_ranks, ThreadComm};
 
 /// Traffic statistics accumulated by a rank's communicator.
@@ -26,9 +28,14 @@ pub use thread_comm::{run_ranks, ThreadComm};
 /// by this rank (bandwidth term); `msgs` counts messages sent.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct CommStats {
+    /// Messages sent by this rank.
     pub msgs: u64,
+    /// f64 words sent by this rank (the Hockney bandwidth term).
     pub words: u64,
+    /// Sequential point-to-point steps on this rank's critical path (the
+    /// Hockney latency multiplier).
     pub rounds: u64,
+    /// Allreduce collectives this rank participated in.
     pub allreduces: u64,
 }
 
@@ -43,6 +50,19 @@ impl CommStats {
         }
     }
 
+    /// Elementwise sum — composing *sequential* stages on one rank (e.g.
+    /// the grid layout's column reduce followed by its row allgather, whose
+    /// rounds cannot overlap).
+    pub fn plus(self, other: CommStats) -> CommStats {
+        CommStats {
+            msgs: self.msgs + other.msgs,
+            words: self.words + other.words,
+            rounds: self.rounds + other.rounds,
+            allreduces: self.allreduces + other.allreduces,
+        }
+    }
+
+    /// Zero all counters.
     pub fn reset(&mut self) {
         *self = CommStats::default();
     }
@@ -83,6 +103,7 @@ pub struct SelfComm {
 }
 
 impl SelfComm {
+    /// A fresh single-rank communicator with zeroed counters.
     pub fn new() -> Self {
         Self::default()
     }
@@ -116,6 +137,86 @@ impl Communicator for SelfComm {
     }
 }
 
+/// A sub-communicator: a subset of a parent communicator's ranks,
+/// renumbered `0..members.len()` in member order, with its own traffic
+/// counters — the moral equivalent of `MPI_Comm_split`.
+///
+/// The 2D grid layout carves two of these out of the global communicator
+/// per rank: the *column* subcommunicator (the `pc` ranks holding
+/// complementary feature shards of the same row block — the gram reduce
+/// runs here) and the *row* subcommunicator (the `pr` ranks holding the
+/// same feature shard — the allgather runs here). Collectives are generic
+/// over [`Communicator`], so the same allreduce/allgather code runs
+/// unchanged over a subgroup.
+///
+/// Accounting: every send is recorded in the subcommunicator's own
+/// [`CommStats`] (borrowed from the caller so counters persist across the
+/// subcommunicator's short lifetime). The parent transport additionally
+/// counts raw messages in its own stats; grid users report per-subcomm
+/// stats (and their [`CommStats::plus`] sum), never the parent's.
+///
+/// Messages between two ranks travel the parent's dedicated per-pair
+/// channels, so concurrent collectives over *disjoint* subgroups (all pr
+/// column groups reduce at once) cannot interfere.
+pub struct SubComm<'a, C: Communicator> {
+    parent: &'a mut C,
+    /// Global (parent) ranks of the members, in subgroup rank order.
+    members: &'a [usize],
+    /// This rank's subgroup rank: `members[rank] == parent.rank()`.
+    rank: usize,
+    stats: &'a mut CommStats,
+}
+
+impl<'a, C: Communicator> SubComm<'a, C> {
+    /// View `parent` as the subgroup `members` (which must contain the
+    /// parent's own rank). `stats` accumulates this subgroup's traffic.
+    pub fn new(parent: &'a mut C, members: &'a [usize], stats: &'a mut CommStats) -> Self {
+        let prank = parent.rank();
+        let rank = members
+            .iter()
+            .position(|&r| r == prank)
+            .expect("SubComm: the calling rank must be a member of its own subgroup");
+        SubComm {
+            parent,
+            members,
+            rank,
+            stats,
+        }
+    }
+}
+
+impl<'a, C: Communicator> Communicator for SubComm<'a, C> {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.members.len()
+    }
+
+    fn send(&mut self, to: usize, buf: &[f64]) {
+        self.stats.msgs += 1;
+        self.stats.words += buf.len() as u64;
+        self.parent.send(self.members[to], buf);
+    }
+
+    fn recv(&mut self, from: usize) -> Vec<f64> {
+        self.parent.recv(self.members[from])
+    }
+
+    fn barrier(&mut self) {
+        panic!("SubComm: subgroup barriers are unsupported (collectives never need one)");
+    }
+
+    fn stats(&self) -> CommStats {
+        *self.stats
+    }
+
+    fn stats_mut(&mut self) -> &mut CommStats {
+        self.stats
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -130,6 +231,78 @@ mod tests {
         allreduce_sum(&mut c, &mut buf, AllreduceAlgo::Rabenseifner);
         assert_eq!(buf, vec![1.0, 2.0]);
         assert_eq!(c.stats().msgs, 0);
+    }
+
+    /// Disjoint subgroups of one parent communicator run collectives
+    /// concurrently without cross-talk, each summing only its members'
+    /// contributions, with traffic accounted per subgroup.
+    #[test]
+    fn subcomm_collectives_stay_within_the_subgroup() {
+        let p = 6;
+        let groups = [vec![0usize, 1, 2], vec![3usize, 4, 5]];
+        let outs = run_ranks(p, |c| {
+            let grank = c.rank();
+            let members = &groups[grank / 3];
+            let mut stats = CommStats::default();
+            let mut buf = vec![(grank + 1) as f64; 4];
+            let mut sub = SubComm::new(c, members, &mut stats);
+            assert_eq!(sub.size(), 3);
+            assert_eq!(sub.rank(), grank % 3);
+            allreduce_sum(&mut sub, &mut buf, AllreduceAlgo::RecursiveDoubling);
+            (buf, stats)
+        });
+        // Group {0,1,2} sums to 6, group {3,4,5} to 15 — in every slot.
+        for (rank, (buf, stats)) in outs.iter().enumerate() {
+            let expect = if rank < 3 { 6.0 } else { 15.0 };
+            assert!(buf.iter().all(|&v| v == expect), "rank {rank}: {buf:?}");
+            assert_eq!(stats.allreduces, 1);
+            assert!(stats.words > 0 && stats.rounds > 0);
+        }
+    }
+
+    /// A subgroup's traffic counters match a standalone communicator of
+    /// the same size running the same collective.
+    #[test]
+    fn subcomm_traffic_matches_standalone_comm_of_same_size() {
+        let standalone = run_ranks(3, |c| {
+            let mut buf = vec![1.0; 8];
+            allreduce_sum(c, &mut buf, AllreduceAlgo::Rabenseifner);
+            c.stats()
+        });
+        let groups = [vec![0usize, 2, 4], vec![1usize, 3, 5]];
+        let sub_stats = run_ranks(6, |c| {
+            let members = &groups[c.rank() % 2];
+            let mut stats = CommStats::default();
+            let mut sub = SubComm::new(c, members, &mut stats);
+            let mut buf = vec![1.0; 8];
+            allreduce_sum(&mut sub, &mut buf, AllreduceAlgo::Rabenseifner);
+            stats
+        });
+        for (rank, s) in sub_stats.iter().enumerate() {
+            let group_rank = rank / 2;
+            assert_eq!(*s, standalone[group_rank], "rank {rank}");
+        }
+    }
+
+    #[test]
+    fn stats_plus_is_elementwise_sum() {
+        let a = CommStats {
+            msgs: 3,
+            words: 10,
+            rounds: 2,
+            allreduces: 1,
+        };
+        let b = CommStats {
+            msgs: 1,
+            words: 20,
+            rounds: 5,
+            allreduces: 0,
+        };
+        let s = a.plus(b);
+        assert_eq!(s.msgs, 4);
+        assert_eq!(s.words, 30);
+        assert_eq!(s.rounds, 7);
+        assert_eq!(s.allreduces, 1);
     }
 
     #[test]

@@ -14,8 +14,11 @@ use super::experiment::{run_distributed, SolverSpec};
 /// given `s` (with `s = 1` being the classical method).
 #[derive(Clone, Debug)]
 pub struct BreakdownBar {
+    /// s-step block size (`1` = the classical method).
     pub s: usize,
+    /// Which engine produced the bar.
     pub engine: Engine,
+    /// Per-phase projected seconds.
     pub projection: Projection,
 }
 
@@ -66,6 +69,7 @@ pub fn breakdown(
                     seed: 0xB0,
                     cache_rows: 0,
                     threads,
+                    grid: None,
                 };
                 run_distributed(ds, kernel, problem, &solver, p, algo, machine).projection
             }

@@ -21,10 +21,15 @@ use std::collections::BTreeMap;
 /// A configuration value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// Quoted string (or an unparseable bare CLI value).
     Str(String),
+    /// Number (all numerics are f64; integer accessors validate).
     Num(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// `[1, 2, 4]`-style numeric list.
     NumList(Vec<f64>),
+    /// `["a", "b"]`-style string list.
     StrList(Vec<String>),
 }
 
@@ -35,6 +40,7 @@ pub struct Config {
 }
 
 impl Config {
+    /// An empty configuration.
     pub fn new() -> Config {
         Config::default()
     }
@@ -83,10 +89,13 @@ impl Config {
         self.values.insert(key.to_string(), v);
     }
 
+    /// Raw value at `key` (`section.key` addressing), if present.
     pub fn get(&self, key: &str) -> Option<&Value> {
         self.values.get(key)
     }
 
+    /// Lenient string accessor: `None` when absent *or* mistyped (CLI
+    /// paths must use [`Self::try_str`] instead).
     pub fn str(&self, key: &str) -> Option<&str> {
         match self.values.get(key) {
             Some(Value::Str(s)) => Some(s),
@@ -94,6 +103,7 @@ impl Config {
         }
     }
 
+    /// Lenient number accessor (see [`Self::str`]).
     pub fn f64(&self, key: &str) -> Option<f64> {
         match self.values.get(key) {
             Some(Value::Num(n)) => Some(*n),
@@ -101,6 +111,7 @@ impl Config {
         }
     }
 
+    /// Lenient non-negative-integer accessor (see [`Self::str`]).
     pub fn usize(&self, key: &str) -> Option<usize> {
         self.f64(key).and_then(|n| {
             if n >= 0.0 && n.fract() == 0.0 {
@@ -111,6 +122,7 @@ impl Config {
         })
     }
 
+    /// Lenient boolean accessor (see [`Self::str`]).
     pub fn bool(&self, key: &str) -> Option<bool> {
         match self.values.get(key) {
             Some(Value::Bool(b)) => Some(*b),
@@ -192,6 +204,7 @@ impl Config {
         }
     }
 
+    /// Lenient non-negative-integer-list accessor (see [`Self::str`]).
     pub fn usize_list(&self, key: &str) -> Option<Vec<usize>> {
         match self.values.get(key) {
             Some(Value::NumList(ns)) => ns

@@ -6,20 +6,31 @@ use crate::costmodel::{Ledger, MachineProfile, Projection};
 use crate::data::Dataset;
 use crate::kernelfn::Kernel;
 use crate::solvers::{
-    bdcd, bdcd_sstep, dcd, dcd_sstep, DistGram, GramOracle, KrrParams, LocalGram, SvmParams,
-    SvmVariant,
+    bdcd, bdcd_sstep, dcd, dcd_sstep, DistGram, GramOracle, GridGram, KrrParams, LocalGram,
+    SvmParams, SvmVariant,
 };
 
 /// Which optimization problem to solve.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum ProblemSpec {
     /// K-SVM with hinge (`L1`) or squared-hinge (`L2`) loss.
-    Svm { c: f64, variant: SvmVariant },
+    Svm {
+        /// Box constraint `C`.
+        c: f64,
+        /// Hinge (`L1`) or squared-hinge (`L2`) loss.
+        variant: SvmVariant,
+    },
     /// K-RR with ridge penalty `λ` and block size `b`.
-    Krr { lambda: f64, b: usize },
+    Krr {
+        /// Ridge penalty `λ`.
+        lambda: f64,
+        /// Coordinate-block size `b`.
+        b: usize,
+    },
 }
 
 impl ProblemSpec {
+    /// Report tag (`k-svm-l1`, `k-svm-l2`, `k-rr`).
     pub fn name(&self) -> &'static str {
         match self {
             ProblemSpec::Svm {
@@ -54,6 +65,13 @@ pub struct SolverSpec {
     /// only wall time and the hybrid Hockney projection change (the
     /// kernel phase divides by `min(threads, cores_per_rank)`).
     pub threads: usize,
+    /// `Some((pr, pc))` runs the 2D `pr × pc` grid layout
+    /// ([`crate::solvers::GridGram`]) — `pr · pc` must equal the launch's
+    /// rank count. The gram reduce then runs over a `pc`-rank
+    /// subcommunicator with a `1/pr`-sized payload instead of all `P`
+    /// ranks; results are bitwise identical to the 1D layout over `pc`
+    /// ranks (see [`crate::gram`]). `None` is the paper's 1D layout.
+    pub grid: Option<(usize, usize)>,
 }
 
 impl Default for SolverSpec {
@@ -64,6 +82,7 @@ impl Default for SolverSpec {
             seed: 0x5EED,
             cache_rows: 0,
             threads: 1,
+            grid: None,
         }
     }
 }
@@ -148,7 +167,9 @@ pub fn run_serial(
 
 /// Run across `p` ranks (threads) with [`DistGram`] oracles over
 /// 1D-column shards — the paper's parallelization, with real message
-/// traffic feeding the cost projection.
+/// traffic feeding the cost projection — or, when `solver.grid` is set,
+/// with [`GridGram`] oracles over a 2D `pr × pc` process grid (the
+/// column-subcomm reduce + row-subcomm allgather refinement).
 pub fn run_distributed(
     ds: &Dataset,
     kernel: Kernel,
@@ -159,24 +180,59 @@ pub fn run_distributed(
     machine: &MachineProfile,
 ) -> RunResult {
     assert!(p >= 1);
+    if let Some((pr, pc)) = solver.grid {
+        assert_eq!(
+            pr * pc,
+            p,
+            "grid {pr}x{pc} does not factor the launch's {p} ranks"
+        );
+    }
     if p == 1 {
         return run_serial(ds, kernel, problem, solver, machine);
     }
     let t0 = std::time::Instant::now();
-    let shards = ds.shard_cols(p);
+    // Grid cells hold one of pc feature shards; 1D ranks one of p.
+    let shards = match solver.grid {
+        Some((_, pc)) => ds.shard_cols(pc),
+        None => ds.shard_cols(p),
+    };
     let outs: Vec<(Vec<f64>, Ledger)> = run_ranks(p, |comm| {
-        let shard = shards[comm.rank()].clone();
         let mut ledger = Ledger::new();
-        let mut oracle = DistGram::with_opts(
-            shard,
-            kernel,
-            comm,
-            algo,
-            solver.cache_rows,
-            solver.threads.max(1),
-        );
-        let alpha = run_solver(&mut oracle, &ds.y, problem, solver, &mut ledger);
-        ledger.comm = oracle.comm_stats();
+        let alpha = match solver.grid {
+            Some((pr, pc)) => {
+                let shard = shards[comm.rank() % pc].clone();
+                let mut oracle = GridGram::with_opts(
+                    shard,
+                    kernel,
+                    comm,
+                    algo,
+                    pr,
+                    pc,
+                    crate::gram::DEFAULT_ROW_BLOCK,
+                    solver.cache_rows,
+                    solver.threads.max(1),
+                );
+                let alpha = run_solver(&mut oracle, &ds.y, problem, solver, &mut ledger);
+                ledger.comm = oracle.comm_stats();
+                ledger.comm_col = oracle.col_stats();
+                ledger.comm_row = oracle.row_stats();
+                alpha
+            }
+            None => {
+                let shard = shards[comm.rank()].clone();
+                let mut oracle = DistGram::with_opts(
+                    shard,
+                    kernel,
+                    comm,
+                    algo,
+                    solver.cache_rows,
+                    solver.threads.max(1),
+                );
+                let alpha = run_solver(&mut oracle, &ds.y, problem, solver, &mut ledger);
+                ledger.comm = oracle.comm_stats();
+                alpha
+            }
+        };
         (alpha, ledger)
     });
     let wall = t0.elapsed().as_secs_f64();
@@ -219,6 +275,7 @@ mod tests {
                 seed: 9,
                 cache_rows: 0,
                 threads: 1,
+                grid: None,
             },
         )
     }
@@ -249,8 +306,8 @@ mod tests {
         let machine = MachineProfile::cray_ex();
         let kernel = Kernel::paper_rbf();
         let problem = ProblemSpec::Krr { lambda: 1.0, b: 3 };
-        let classical = SolverSpec { s: 1, h: 40, seed: 4, cache_rows: 0, threads: 1 };
-        let sstep = SolverSpec { s: 8, h: 40, seed: 4, cache_rows: 0, threads: 1 };
+        let classical = SolverSpec { s: 1, h: 40, seed: 4, cache_rows: 0, threads: 1, grid: None };
+        let sstep = SolverSpec { s: 8, h: 40, seed: 4, cache_rows: 0, threads: 1, grid: None };
         let a_serial = run_serial(&ds, kernel, &problem, &classical, &machine).alpha;
         let a_dist = run_distributed(
             &ds,
@@ -368,7 +425,7 @@ mod tests {
             &ds,
             kernel,
             &problem,
-            &SolverSpec { s: 1, h: 64, seed: 9, cache_rows: 0, threads: 1 },
+            &SolverSpec { s: 1, h: 64, seed: 9, cache_rows: 0, threads: 1, grid: None },
             4,
             AllreduceAlgo::Rabenseifner,
             &machine,
@@ -377,7 +434,7 @@ mod tests {
             &ds,
             kernel,
             &problem,
-            &SolverSpec { s: 16, h: 64, seed: 9, cache_rows: 0, threads: 1 },
+            &SolverSpec { s: 16, h: 64, seed: 9, cache_rows: 0, threads: 1, grid: None },
             4,
             AllreduceAlgo::Rabenseifner,
             &machine,
@@ -404,7 +461,7 @@ mod tests {
                 c: 1.0,
                 variant: SvmVariant::L1,
             },
-            &SolverSpec { s: 4, h: 8, seed: 3, cache_rows: 0, threads: 1 },
+            &SolverSpec { s: 4, h: 8, seed: 3, cache_rows: 0, threads: 1, grid: None },
             4,
             AllreduceAlgo::Rabenseifner,
             &machine,

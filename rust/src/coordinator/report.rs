@@ -13,6 +13,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// A table with the given column headers and no rows.
     pub fn new<S: Into<String>>(header: Vec<S>) -> Table {
         Table {
             header: header.into_iter().map(Into::into).collect(),
@@ -20,6 +21,7 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header arity).
     pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
         let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
         assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
@@ -95,15 +97,19 @@ fn engine_tag(e: Engine) -> &'static str {
 }
 
 /// Strong-scaling rows → markdown (the Figures 3/5/6 table form, plus
-/// the intra-rank thread count of each hybrid point).
+/// the intra-rank thread count of each hybrid point and the process-grid
+/// factorization — `-` for the 1D layout, `PRxPC` for 2D points).
 pub fn scaling_table(rows: &[SweepRow]) -> Table {
     let mut t = Table::new(vec![
-        "P", "t", "engine", "classical (s)", "s-step best (s)", "best s", "speedup",
+        "P", "t", "grid", "engine", "classical (s)", "s-step best (s)", "best s", "speedup",
     ]);
     for r in rows {
         t.row(vec![
             r.p.to_string(),
             r.t.to_string(),
+            r.grid
+                .map(|(pr, pc)| format!("{pr}x{pc}"))
+                .unwrap_or_else(|| "-".to_string()),
             engine_tag(r.engine).to_string(),
             format!("{:.4e}", r.classical.total_secs()),
             format!("{:.4e}", r.best_sstep.total_secs()),

@@ -16,30 +16,38 @@
 //! Both engines' ledgers go through the same Hockney projection, so every
 //! scaling figure is a pure function of (counts, machine profile).
 
-use crate::comm::AllreduceAlgo;
+use crate::comm::{AllreduceAlgo, CommStats};
 use crate::costmodel::{Ledger, MachineProfile, Phase, Projection};
 use crate::data::Dataset;
 use crate::kernelfn::Kernel;
+use crate::sparse::Csr;
 
 use super::experiment::{run_distributed, ProblemSpec, SolverSpec};
 
 /// Which engine produced a scaling point.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Engine {
+    /// Real ranks over the threaded transport; instrumented counts.
     Measured,
+    /// Analytic count replica (pinned to the measured engine in tests).
     Projected,
 }
 
 /// One (P, s) point of a strong-scaling sweep.
 #[derive(Clone, Debug)]
 pub struct ScalingPoint {
+    /// Rank count.
     pub p: usize,
+    /// s-step block size (`1` = classical).
     pub s: usize,
+    /// Which engine produced the point.
     pub engine: Engine,
+    /// Hockney projection of the point's critical-path ledger.
     pub projection: Projection,
 }
 
 impl ScalingPoint {
+    /// Projected total seconds.
     pub fn secs(&self) -> f64 {
         self.projection.total_secs()
     }
@@ -48,6 +56,7 @@ impl ScalingPoint {
 /// Sweep configuration.
 #[derive(Clone, Debug)]
 pub struct SweepConfig {
+    /// Rank counts to sweep.
     pub p_list: Vec<usize>,
     /// s values tried for the s-step method (powers of two, per paper).
     pub s_list: Vec<usize>,
@@ -56,8 +65,17 @@ pub struct SweepConfig {
     /// gram product across `t` threads). `vec![1]` reproduces the
     /// paper's flat-MPI sweep.
     pub t_list: Vec<usize>,
+    /// Row-group count of the 2D process-grid layout: every sweep point
+    /// `P` divisible by `pr` runs as `Grid{pr, P/pr}` (gram reduce over a
+    /// `P/pr`-rank subcommunicator); points `pr` does not divide are
+    /// skipped. `1` reproduces the 1D sweep exactly.
+    pub pr: usize,
+    /// Inner iterations `H`.
     pub h: usize,
+    /// Coordinate-stream seed shared by every point.
     pub seed: u64,
+    /// Allreduce algorithm for the measured engine (mirrored by the
+    /// analytic traffic replica).
     pub algo: AllreduceAlgo,
     /// Ranks up to this bound run measured; beyond it, projected.
     pub measured_limit: usize,
@@ -69,6 +87,7 @@ impl Default for SweepConfig {
             p_list: vec![1, 2, 4, 8, 16, 32, 64, 128, 256, 512],
             s_list: vec![2, 4, 8, 16, 32, 64, 128, 256],
             t_list: vec![1],
+            pr: 1,
             h: 256,
             seed: 0x5CA1E,
             algo: AllreduceAlgo::Rabenseifner,
@@ -82,18 +101,27 @@ impl Default for SweepConfig {
 /// plots show).
 #[derive(Clone, Debug)]
 pub struct SweepRow {
+    /// Rank count of this point.
     pub p: usize,
     /// Intra-rank worker threads of this hybrid point.
     pub t: usize,
+    /// `Some((pr, pc))` when this point ran the 2D grid layout.
+    pub grid: Option<(usize, usize)>,
+    /// Which engine produced the point.
     pub engine: Engine,
+    /// Classical (`s = 1`) projection.
     pub classical: Projection,
+    /// Best s-step projection over `s_list`.
     pub best_sstep: Projection,
+    /// The `s` achieving [`Self::best_sstep`].
     pub best_s: usize,
     /// All (s → projection) points, for the breakdown-style detail plots.
     pub sstep_points: Vec<(usize, Projection)>,
 }
 
 impl SweepRow {
+    /// Classical-over-best-s-step projected-time ratio (the paper's
+    /// headline metric).
     pub fn speedup(&self) -> f64 {
         self.classical.total_secs() / self.best_sstep.total_secs()
     }
@@ -106,6 +134,12 @@ impl SweepRow {
 /// standard pre-fold (it used to silently downgrade those to the
 /// Projected engine). Points beyond the limit use [`analytic_ledger`],
 /// which replicates the collectives' traffic accounting for any `P`.
+///
+/// With `cfg.pr > 1`, every point `P` divisible by `pr` runs the 2D
+/// `Grid{pr, P/pr}` layout instead of 1D (measured via
+/// `solvers::GridGram`, projected via [`grid_analytic_ledger`]); points
+/// `pr` does not divide are skipped, and the row's `grid` field records
+/// the factorization for the report's grid column.
 pub fn sweep(
     ds: &Dataset,
     kernel: Kernel,
@@ -118,8 +152,19 @@ pub fn sweep(
     } else {
         &cfg.t_list
     };
+    let pr = cfg.pr.max(1);
     let mut rows = Vec::with_capacity(cfg.p_list.len() * t_list.len());
     for &p in &cfg.p_list {
+        // Grid sweeps skip every point pr does not divide — including
+        // P = 1 — so a grid sweep never silently mixes layouts.
+        let grid = if pr > 1 {
+            if p % pr != 0 {
+                continue;
+            }
+            Some((pr, p / pr))
+        } else {
+            None
+        };
         let engine = if p <= cfg.measured_limit {
             Engine::Measured
         } else {
@@ -141,10 +186,24 @@ pub fn sweep(
                         seed: cfg.seed,
                         cache_rows: 0,
                         threads: 1,
+                        grid,
                     };
                     run_distributed(ds, kernel, problem, &solver, p, cfg.algo, machine).critical
                 }
-                Engine::Projected => analytic_ledger(ds, kernel, problem, s, cfg.h, p, cfg.algo),
+                Engine::Projected => match grid {
+                    Some((pr, pc)) => grid_analytic_ledger(
+                        ds,
+                        kernel,
+                        problem,
+                        s,
+                        cfg.h,
+                        pr,
+                        pc,
+                        crate::gram::DEFAULT_ROW_BLOCK,
+                        cfg.algo,
+                    ),
+                    None => analytic_ledger(ds, kernel, problem, s, cfg.h, p, cfg.algo),
+                },
             }
         };
         let classical_ledger = ledger_for(1);
@@ -171,6 +230,7 @@ pub fn sweep(
             rows.push(SweepRow {
                 p,
                 t,
+                grid,
                 engine,
                 classical,
                 best_sstep: best,
@@ -207,55 +267,17 @@ pub fn analytic_ledger(
         ProblemSpec::Svm { .. } => 1usize,
         ProblemSpec::Krr { b, .. } => b,
     };
-    let bf = b as f64;
     let outer = h.div_ceil(s);
-    let s_f = s as f64;
 
     let mut l = Ledger::new();
-    // --- Kernel compute (gram partial product + redundant nonlinear map,
-    //     plus the y-scaling pass for SVM) --------------------------------
-    let gram_calls = outer as f64;
-    let k_rows = s_f * bf; // sampled rows per call
-    l.kernel_calls = gram_calls;
-    l.kernel_rows = gram_calls * k_rows;
-    l.iters = h as f64;
+    // Kernel product + epilogue (layout-specific nnz), then the shared
+    // layout-independent accounting.
+    let k_rows = (s * b) as f64;
     l.add_flops(
         Phase::KernelCompute,
-        gram_calls * (2.0 * k_rows * max_nnz + mu * k_rows * m),
+        outer as f64 * (2.0 * k_rows * max_nnz + mu * k_rows * m),
     );
-    if matches!(problem, ProblemSpec::Svm { .. }) {
-        // yscale_rows: 2 flops per entry of the k×m block.
-        l.add_flops(Phase::KernelCompute, gram_calls * 2.0 * k_rows * m);
-    }
-
-    // --- Solve / gradient / correction / update / reset ------------------
-    match *problem {
-        ProblemSpec::Svm { .. } => {
-            l.add_flops(Phase::Solve, h as f64 * (2.0 * m + 4.0));
-            if s > 1 {
-                l.add_flops(Phase::GradCorr, outer as f64 * s_f * (s_f - 1.0));
-                l.add_flops(Phase::Update, h as f64);
-                l.add_flops(Phase::MemReset, full_blocks(h, s) as f64 * s_f * m);
-            } else {
-                l.add_flops(Phase::Update, h as f64);
-            }
-        }
-        ProblemSpec::Krr { .. } => {
-            l.add_flops(
-                Phase::Solve,
-                h as f64 * (2.0 * bf * m + bf * bf + bf * bf * bf),
-            );
-            l.add_flops(Phase::Update, h as f64 * bf);
-            if s > 1 {
-                // Σ_j j·2b² per outer = s(s−1)·b².
-                l.add_flops(
-                    Phase::GradCorr,
-                    outer as f64 * s_f * (s_f - 1.0) * bf * bf,
-                );
-                l.add_flops(Phase::MemReset, full_blocks(h, s) as f64 * s_f * bf * m);
-            }
-        }
-    }
+    add_layout_independent_flops(&mut l, problem, s, h, m);
 
     // --- Communication (mirror of comm::collectives accounting) ----------
     if p > 1 {
@@ -283,6 +305,214 @@ pub fn analytic_ledger(
         l.comm.allreduces += 1 + outer;
     }
     l
+}
+
+/// Layout-independent flop accounting shared by the 1D and grid count
+/// replicas: kernel-call/row bookkeeping, the SVM y-scaling pass, and
+/// the Solve / GradCorr / Update / MemReset phases all run on replicated
+/// state, so both engines must charge them with identical arithmetic —
+/// one implementation keeps the `grid_analytic_with_pr1_degenerates_to_1d`
+/// invariant from drifting when a solver formula changes.
+fn add_layout_independent_flops(l: &mut Ledger, problem: &ProblemSpec, s: usize, h: usize, m: f64) {
+    let b = match *problem {
+        ProblemSpec::Svm { .. } => 1usize,
+        ProblemSpec::Krr { b, .. } => b,
+    };
+    let bf = b as f64;
+    let outer = h.div_ceil(s);
+    let s_f = s as f64;
+    let gram_calls = outer as f64;
+    let k_rows = s_f * bf; // sampled rows per call
+    l.kernel_calls = gram_calls;
+    l.kernel_rows = gram_calls * k_rows;
+    l.iters = h as f64;
+    if matches!(problem, ProblemSpec::Svm { .. }) {
+        // yscale_rows: 2 flops per entry of the k×m block.
+        l.add_flops(Phase::KernelCompute, gram_calls * 2.0 * k_rows * m);
+    }
+    match *problem {
+        ProblemSpec::Svm { .. } => {
+            l.add_flops(Phase::Solve, h as f64 * (2.0 * m + 4.0));
+            if s > 1 {
+                l.add_flops(Phase::GradCorr, outer as f64 * s_f * (s_f - 1.0));
+                l.add_flops(Phase::Update, h as f64);
+                l.add_flops(Phase::MemReset, full_blocks(h, s) as f64 * s_f * m);
+            } else {
+                l.add_flops(Phase::Update, h as f64);
+            }
+        }
+        ProblemSpec::Krr { .. } => {
+            l.add_flops(
+                Phase::Solve,
+                h as f64 * (2.0 * bf * m + bf * bf + bf * bf * bf),
+            );
+            l.add_flops(Phase::Update, h as f64 * bf);
+            if s > 1 {
+                // Σ_j j·2b² per outer = s(s−1)·b².
+                l.add_flops(
+                    Phase::GradCorr,
+                    outer as f64 * s_f * (s_f - 1.0) * bf * bf,
+                );
+                l.add_flops(Phase::MemReset, full_blocks(h, s) as f64 * s_f * bf * m);
+            }
+        }
+    }
+}
+
+/// Replicate the measured 2D-grid ledger analytically, the grid analog
+/// of [`analytic_ledger`]: per-cell partial-product flops from the grid
+/// cells' nnz, the column-subcommunicator reduce traffic from
+/// [`allreduce_counts_per_rank`] over `pc` ranks with the `1/pr`-sized
+/// payload, and the row-subcommunicator ring-allgather traffic from
+/// [`allgatherv_counts_per_rank`] — composed per rank (i, j) and maxed
+/// last, exactly like the measured critical path. `comm` holds the
+/// per-rank totals; `comm_col` / `comm_row` the per-subcommunicator
+/// split. With `pr = 1` this degenerates to [`analytic_ledger`] (pinned
+/// in tests).
+#[allow(clippy::too_many_arguments)]
+pub fn grid_analytic_ledger(
+    ds: &Dataset,
+    kernel: Kernel,
+    problem: &ProblemSpec,
+    s: usize,
+    h: usize,
+    pr: usize,
+    pc: usize,
+    row_block: usize,
+    algo: AllreduceAlgo,
+) -> Ledger {
+    assert!(pr >= 1 && pc >= 1, "grid dimensions must be positive");
+    let m = ds.m() as f64;
+    let mu = kernel.mu();
+    let b = match *problem {
+        ProblemSpec::Svm { .. } => 1usize,
+        ProblemSpec::Krr { b, .. } => b,
+    };
+    let bf = b as f64;
+    let outer = h.div_ceil(s);
+    let s_f = s as f64;
+
+    let mut l = Ledger::new();
+    // --- Kernel compute: the partial product touches only this cell's
+    //     rows×features nnz; the epilogue (and the layout-independent
+    //     accounting below) stay full-width and redundant on every rank.
+    //     Critical path = the heaviest grid cell. -----------------------
+    let cell_nnz = grid_cell_nnz(&ds.a, pr, pc, row_block);
+    let max_cell = cell_nnz.iter().flatten().copied().max().unwrap_or(0) as f64;
+    let k_rows = s_f * bf;
+    l.add_flops(
+        Phase::KernelCompute,
+        outer as f64 * (2.0 * k_rows * max_cell + mu * k_rows * m),
+    );
+    add_layout_independent_flops(&mut l, problem, s, h, m);
+
+    // --- Communication: per-rank (i, j) composition, maxed last (the
+    //     measured critical path is the max over ranks of accumulated
+    //     counters). Per gram call, rank (i, j) pays the column reduce of
+    //     its group's s·b·|owned_i| words at column rank j, plus the row
+    //     allgather ring at row rank i; the construction-time norm
+    //     allreduce (m words) runs on the column subcomm only. ----------
+    let owned_len: Vec<usize> = (0..pr)
+        .map(|g| crate::gram::block_cyclic_rows(ds.m(), pr, g, row_block).len())
+        .collect();
+    let outer_u = outer as u64;
+    let norm = allreduce_counts_per_rank(ds.m(), pc, algo);
+    let ag_counts: Vec<usize> = owned_len.iter().map(|&w| s * b * w).collect();
+    let ring = allgatherv_counts_per_rank(&ag_counts);
+    let mut max_total = (0u64, 0u64, 0u64);
+    let mut max_col = (0u64, 0u64, 0u64);
+    let mut max_row = (0u64, 0u64, 0u64);
+    for i in 0..pr {
+        let gram = allreduce_counts_per_rank(s * b * owned_len[i], pc, algo);
+        for j in 0..pc {
+            let col_words = norm[j].0 + outer_u * gram[j].0;
+            let col_rounds = norm[j].1 + outer_u * gram[j].1;
+            // Rounds stand in for sends in the allreduce replica (exact
+            // for the ring, a proxy for the tree collectives — and
+            // exactly zero for a single-member subcommunicator, matching
+            // the measured no-op).
+            let col_msgs = col_rounds;
+            let row_words = outer_u * ring[i].0;
+            let row_rounds = outer_u * ring[i].1;
+            let row_msgs = row_rounds;
+            max_col = (
+                max_col.0.max(col_words),
+                max_col.1.max(col_rounds),
+                max_col.2.max(col_msgs),
+            );
+            max_row = (
+                max_row.0.max(row_words),
+                max_row.1.max(row_rounds),
+                max_row.2.max(row_msgs),
+            );
+            max_total = (
+                max_total.0.max(col_words + row_words),
+                max_total.1.max(col_rounds + row_rounds),
+                max_total.2.max(col_msgs + row_msgs),
+            );
+        }
+    }
+    if pc > 1 || pr > 1 {
+        l.comm.words = max_total.0;
+        l.comm.rounds = max_total.1;
+        l.comm.msgs = max_total.2;
+        l.comm.allreduces = 1 + outer_u;
+        l.comm_col = CommStats {
+            msgs: max_col.2,
+            words: max_col.0,
+            rounds: max_col.1,
+            allreduces: 1 + outer_u,
+        };
+        l.comm_row = CommStats {
+            msgs: max_row.2,
+            words: max_row.0,
+            rounds: max_row.1,
+            allreduces: 0,
+        };
+    }
+    l
+}
+
+/// Per-rank nnz of every `pr × pc` grid cell: `out[i][j]` is the stored
+/// entries of the block-cyclic row group `i` restricted to column shard
+/// `j` — the flop base of that cell's partial product.
+pub fn grid_cell_nnz(a: &Csr, pr: usize, pc: usize, row_block: usize) -> Vec<Vec<usize>> {
+    let n = a.ncols();
+    let width = n.div_ceil(pc);
+    let mut out = vec![vec![0usize; pc]; pr];
+    for t in 0..a.nrows() {
+        let group = (t / row_block) % pr;
+        let (cols, _) = a.row_parts(t);
+        for (j, cell) in out[group].iter_mut().enumerate() {
+            let c0 = (j * width).min(n);
+            let c1 = ((j + 1) * width).min(n);
+            let lo = cols.partition_point(|&c| c < c0);
+            let hi = cols.partition_point(|&c| c < c1);
+            *cell += hi - lo;
+        }
+    }
+    out
+}
+
+/// Per-rank `(words, rounds)` of one ring [`crate::comm::allgatherv`]
+/// with the given per-rank contribution counts — exactly the counters the
+/// collective records, replicated message-free: rank `g` forwards blocks
+/// `g, g−1, …` over `P−1` rounds, sending every block except its
+/// successor's own.
+pub fn allgatherv_counts_per_rank(counts: &[usize]) -> Vec<(u64, u64)> {
+    let p = counts.len();
+    if p <= 1 {
+        return vec![(0, 0); p.max(1)];
+    }
+    (0..p)
+        .map(|g| {
+            let mut words = 0u64;
+            for d in 0..p - 1 {
+                words += counts[(g + p - d) % p] as u64;
+            }
+            (words, (p - 1) as u64)
+        })
+        .collect()
 }
 
 /// Critical-path `(words, rounds)` of one `allreduce_sum` of a `w`-word
@@ -499,6 +729,7 @@ mod tests {
                             seed: 77,
                             cache_rows: 0,
                             threads: 1,
+                            grid: None,
                         };
                         let measured = run_distributed(
                             &ds, Kernel::paper_rbf(), &problem, &solver, p, algo, &machine,
@@ -549,6 +780,7 @@ mod tests {
             p_list: vec![4, 64, 512],
             s_list: vec![8, 32, 128],
             t_list: vec![1],
+            pr: 1,
             h: 64,
             seed: 1,
             algo: AllreduceAlgo::Rabenseifner,
@@ -584,6 +816,7 @@ mod tests {
             p_list: vec![16],
             s_list: vec![4, 16, 64],
             t_list: vec![1],
+            pr: 1,
             h: 64,
             seed: 2,
             algo: AllreduceAlgo::Rabenseifner,
@@ -618,6 +851,7 @@ mod tests {
             p_list: vec![3, 5, 6],
             s_list: vec![4, 8],
             t_list: vec![1],
+            pr: 1,
             h: 16,
             seed: 7,
             algo: AllreduceAlgo::Rabenseifner,
@@ -646,6 +880,195 @@ mod tests {
         }
     }
 
+    /// The grid analytic replica must agree with measured grid execution
+    /// wherever both run — total traffic AND the per-subcommunicator
+    /// split — for pof2 and non-pof2 subgroup sizes and both problems.
+    #[test]
+    fn grid_analytic_ledger_matches_measured_counts() {
+        let machine = MachineProfile::cray_ex();
+        let ds = crate::data::gen_dense_classification(24, 16, 0.05, 12);
+        let problems = [svm_problem(), ProblemSpec::Krr { lambda: 1.0, b: 3 }];
+        for problem in problems {
+            for algo in [AllreduceAlgo::Rabenseifner, AllreduceAlgo::RecursiveDoubling] {
+                for (pr, pc) in [
+                    (2usize, 2usize),
+                    (2, 3),
+                    (3, 2),
+                    (4, 2),
+                    (2, 4),
+                    (3, 3),
+                    (4, 1), // degenerate column subcomm: reduce is a no-op
+                    (1, 4), // degenerate row subcomm: allgather is a no-op
+                ] {
+                    for s in [1usize, 4] {
+                        let h = 16;
+                        let solver = SolverSpec {
+                            s,
+                            h,
+                            seed: 77,
+                            cache_rows: 0,
+                            threads: 1,
+                            grid: Some((pr, pc)),
+                        };
+                        let measured = run_distributed(
+                            &ds,
+                            Kernel::paper_rbf(),
+                            &problem,
+                            &solver,
+                            pr * pc,
+                            algo,
+                            &machine,
+                        )
+                        .critical;
+                        let analytic = grid_analytic_ledger(
+                            &ds,
+                            Kernel::paper_rbf(),
+                            &problem,
+                            s,
+                            h,
+                            pr,
+                            pc,
+                            crate::gram::DEFAULT_ROW_BLOCK,
+                            algo,
+                        );
+                        for ph in Phase::ALL {
+                            let a = analytic.flops(ph);
+                            let b = measured.flops(ph);
+                            assert!(
+                                (a - b).abs() <= 1e-6 * b.abs().max(1.0),
+                                "{problem:?} {algo:?} {pr}x{pc} s={s} phase {}: {a} vs {b}",
+                                ph.name()
+                            );
+                        }
+                        for (which, a, m) in [
+                            ("total", analytic.comm, measured.comm),
+                            ("col", analytic.comm_col, measured.comm_col),
+                            ("row", analytic.comm_row, measured.comm_row),
+                        ] {
+                            assert_eq!(
+                                a.words, m.words,
+                                "{problem:?} {algo:?} {pr}x{pc} s={s} {which} words"
+                            );
+                            assert_eq!(
+                                a.rounds, m.rounds,
+                                "{problem:?} {algo:?} {pr}x{pc} s={s} {which} rounds"
+                            );
+                        }
+                        assert_eq!(analytic.comm_col.allreduces, measured.comm_col.allreduces);
+                        assert_eq!(analytic.kernel_calls, measured.kernel_calls);
+                        assert_eq!(analytic.kernel_rows, measured.kernel_rows);
+                    }
+                }
+            }
+        }
+    }
+
+    /// With one row group the grid replica must degenerate to the 1D
+    /// replica exactly (same flops, same total traffic).
+    #[test]
+    fn grid_analytic_with_pr1_degenerates_to_1d() {
+        let ds = crate::data::gen_dense_classification(24, 16, 0.05, 12);
+        for p in [2usize, 3, 4, 8] {
+            for s in [1usize, 4] {
+                let one_d = analytic_ledger(
+                    &ds,
+                    Kernel::paper_rbf(),
+                    &svm_problem(),
+                    s,
+                    16,
+                    p,
+                    AllreduceAlgo::Rabenseifner,
+                );
+                let grid = grid_analytic_ledger(
+                    &ds,
+                    Kernel::paper_rbf(),
+                    &svm_problem(),
+                    s,
+                    16,
+                    1,
+                    p,
+                    1,
+                    AllreduceAlgo::Rabenseifner,
+                );
+                for ph in Phase::ALL {
+                    assert_eq!(one_d.flops(ph), grid.flops(ph), "p={p} s={s} {}", ph.name());
+                }
+                assert_eq!(one_d.comm.words, grid.comm.words, "p={p} s={s}");
+                assert_eq!(one_d.comm.rounds, grid.comm.rounds, "p={p} s={s}");
+            }
+        }
+    }
+
+    /// The acceptance criterion's traffic story: at fixed P, the grid's
+    /// reduce traffic scales with the subcommunicator size pc (payload
+    /// s·b·m/pr over pc ranks), far below the 1D allreduce of the full
+    /// block over all P ranks.
+    #[test]
+    fn grid_reduce_traffic_scales_with_pc_not_p() {
+        let ds = crate::data::gen_dense_classification(64, 16, 0.05, 3);
+        let s = 4;
+        let h = 16;
+        let one_d = analytic_ledger(
+            &ds,
+            Kernel::paper_rbf(),
+            &svm_problem(),
+            s,
+            h,
+            8,
+            AllreduceAlgo::Rabenseifner,
+        );
+        let grid = grid_analytic_ledger(
+            &ds,
+            Kernel::paper_rbf(),
+            &svm_problem(),
+            s,
+            h,
+            4,
+            2,
+            1,
+            AllreduceAlgo::Rabenseifner,
+        );
+        // Reduce payload shrinks 4× (m/pr) and the tree shrinks from 8 to
+        // 2 ranks: the grid's reduce words must be well under half of 1D.
+        assert!(
+            2 * grid.comm_col.words < one_d.comm.words,
+            "grid reduce words {} !<< 1D allreduce words {}",
+            grid.comm_col.words,
+            one_d.comm.words
+        );
+        // And the total grid traffic (reduce + allgather) still beats 1D.
+        assert!(
+            grid.comm.words < one_d.comm.words,
+            "grid total {} !< 1D {}",
+            grid.comm.words,
+            one_d.comm.words
+        );
+    }
+
+    /// allgatherv count replica vs real ring traffic, rank by rank.
+    #[test]
+    fn allgatherv_counts_match_real_traffic_per_rank() {
+        use crate::comm::CommStats;
+        for counts in [vec![3usize, 0, 1, 2], vec![4usize, 4], vec![5usize], vec![2usize, 7, 1]] {
+            let p = counts.len();
+            let stats = crate::comm::run_ranks(p, |c| {
+                let mine = vec![1.0; counts[c.rank()]];
+                let mut stats = CommStats::default();
+                // Run over a SubComm spanning everyone so the accounting
+                // path matches the grid's row allgather exactly.
+                let members: Vec<usize> = (0..p).collect();
+                let mut sub = crate::comm::SubComm::new(c, &members, &mut stats);
+                let _ = crate::comm::allgatherv(&mut sub, &mine, &counts);
+                stats
+            });
+            let replica = allgatherv_counts_per_rank(&counts);
+            for (rank, (s, &(words, rounds))) in stats.iter().zip(&replica).enumerate() {
+                assert_eq!(s.words, words, "counts {counts:?} rank {rank} words");
+                assert_eq!(s.rounds, rounds, "counts {counts:?} rank {rank} rounds");
+            }
+        }
+    }
+
     /// Hybrid grid: one row per (P, t); more threads must cut the
     /// projected kernel phase in both engines, identically.
     #[test]
@@ -656,6 +1079,7 @@ mod tests {
             p_list: vec![2, 16],
             s_list: vec![4],
             t_list: vec![1, 4],
+            pr: 1,
             h: 16,
             seed: 7,
             algo: AllreduceAlgo::Rabenseifner,
@@ -741,6 +1165,7 @@ mod tests {
                 seed: 21,
                 cache_rows: 0,
                 threads: 1,
+                grid: None,
             };
             let measured = run_distributed(
                 &ds,

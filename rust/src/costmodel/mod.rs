@@ -30,16 +30,24 @@ use crate::util::PhaseTimer;
 /// recomputing (and re-allreducing) them.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Phase {
+    /// Sampled gram product + nonlinear kernel map.
     KernelCompute,
+    /// The gram reduction collective(s).
     Allreduce,
+    /// s-step gradient corrections.
     GradCorr,
+    /// Coordinate-subproblem solves.
     Solve,
+    /// s-step buffer resets.
     MemReset,
+    /// Solution (α) updates.
     Update,
+    /// Kernel rows served from the gram engine's row cache.
     CacheHit,
 }
 
 impl Phase {
+    /// Every phase, in report order.
     pub const ALL: [Phase; 7] = [
         Phase::KernelCompute,
         Phase::Allreduce,
@@ -50,6 +58,7 @@ impl Phase {
         Phase::CacheHit,
     ];
 
+    /// Short report tag.
     pub fn name(&self) -> &'static str {
         match self {
             Phase::KernelCompute => "kernel",
@@ -122,11 +131,12 @@ impl CacheStats {
 pub struct Ledger {
     flops: [f64; NPHASE],
     wall: [PhaseTimer; NPHASE],
-    /// Gram-oracle invocations and total sampled rows across them — the
+    /// Gram-oracle invocations — with [`Self::kernel_rows`], the
     /// projection uses the average rows/call to model the BLAS-1→BLAS-3
     /// memory-bandwidth-efficiency gain of blocked kernel computation
     /// (the paper's Fig. 4 observation that kernel time *falls* with s).
     pub kernel_calls: f64,
+    /// Total sampled rows across all gram calls.
     pub kernel_rows: f64,
     /// Inner iterations executed (solver updates). The projection charges
     /// a fixed per-iteration software floor (BLAS-1 dispatch, projection
@@ -135,11 +145,19 @@ pub struct Ledger {
     pub iters: f64,
     /// Copied from the rank's communicator at the end of a run.
     pub comm: CommStats,
+    /// Column-subcommunicator (gram reduce) traffic of a 2D grid run —
+    /// the collective the grid shrinks from `P` to `pc` participants.
+    /// Zero for local and 1D runs, where `comm` holds everything.
+    pub comm_col: CommStats,
+    /// Row-subcommunicator (slice allgather) traffic of a 2D grid run.
+    /// Zero for local and 1D runs.
+    pub comm_row: CommStats,
     /// Gram-engine row-cache accounting (all zeros with the cache off).
     pub cache: CacheStats,
 }
 
 impl Ledger {
+    /// An all-zero ledger.
     pub fn new() -> Self {
         Self::default()
     }
@@ -164,18 +182,22 @@ impl Ledger {
         self.wall[phase.idx()].time(f)
     }
 
+    /// Flop-equivalents recorded against `phase`.
     pub fn flops(&self, phase: Phase) -> f64 {
         self.flops[phase.idx()]
     }
 
+    /// Flop-equivalents across all phases.
     pub fn total_flops(&self) -> f64 {
         self.flops.iter().sum()
     }
 
+    /// Measured wall-clock seconds of `phase` on this rank.
     pub fn wall_secs(&self, phase: Phase) -> f64 {
         self.wall[phase.idx()].secs()
     }
 
+    /// Measured wall-clock seconds across all phases.
     pub fn total_wall_secs(&self) -> f64 {
         self.wall.iter().map(|t| t.secs()).sum()
     }
@@ -197,6 +219,8 @@ impl Ledger {
             out.kernel_rows = out.kernel_rows.max(l.kernel_rows);
             out.iters = out.iters.max(l.iters);
             out.comm = out.comm.max(l.comm);
+            out.comm_col = out.comm_col.max(l.comm_col);
+            out.comm_row = out.comm_row.max(l.comm_row);
             out.cache = out.cache.max(l.cache);
         }
         out
@@ -207,9 +231,13 @@ impl Ledger {
 /// word moved, `φ` seconds per message.
 #[derive(Clone, Copy, Debug)]
 pub struct MachineProfile {
+    /// Profile tag (`cray-ex`, `cloud`).
     pub name: &'static str,
+    /// Seconds per flop.
     pub gamma: f64,
+    /// Seconds per f64 word moved.
     pub beta: f64,
+    /// Seconds per message (latency).
     pub phi: f64,
     /// Relative cost of a nonlinear kernel-map op (exp/pow) vs an FMA is
     /// carried by `Kernel::mu()`; profiles may scale it.
@@ -319,14 +347,17 @@ impl MachineProfile {
 #[derive(Clone, Copy, Debug)]
 pub struct Projection {
     per_phase: [f64; NPHASE],
+    /// The measured traffic the projection weighted.
     pub comm: CommStats,
 }
 
 impl Projection {
+    /// Projected seconds of one phase.
     pub fn phase_secs(&self, phase: Phase) -> f64 {
         self.per_phase[phase.idx()]
     }
 
+    /// Projected seconds across all phases.
     pub fn total_secs(&self) -> f64 {
         self.per_phase.iter().sum()
     }

@@ -13,10 +13,33 @@ pub struct ProblemDims {
     pub f: f64,
     /// Nonlinear kernel-map cost scalar `µ` (flop-equivalents per entry).
     pub mu: f64,
-    /// Number of processors.
+    /// Number of processors (divides the per-iteration compute).
     pub p: usize,
+    /// Participant count of the per-iteration reduce collective — the
+    /// Hockney latency term is `O(log₂ reduce_ranks)`, **not**
+    /// `O(log₂ p)`: for the 1D layout the two coincide (`reduce_ranks =
+    /// p`), but a 2D `pr × pc` grid reduces over a `pc`-rank
+    /// subcommunicator, so its projected latency must use `pc`. (The
+    /// projection used to hard-code global `p` here, which overstated
+    /// grid latency by `log₂ pr` per iteration.)
+    pub reduce_ranks: usize,
     /// Total iterations `H` (inner-iteration equivalents).
     pub h: usize,
+}
+
+impl ProblemDims {
+    /// 1D-layout dimensions: the reduce collective spans all `p` ranks.
+    pub fn one_d(m: usize, n: usize, f: f64, mu: f64, p: usize, h: usize) -> ProblemDims {
+        ProblemDims {
+            m,
+            n,
+            f,
+            mu,
+            p,
+            reduce_ranks: p,
+            h,
+        }
+    }
 }
 
 /// Leading-order algorithm costs along the critical path.
@@ -45,6 +68,7 @@ impl AlgoCost {
 /// latency `O(H log P)`, storage `O(fmn/P + bm)`.
 pub fn bdcd_cost(d: &ProblemDims, b: usize) -> AlgoCost {
     let (m, n, f, mu, p) = (d.m as f64, d.n as f64, d.f, d.mu, d.p as f64);
+    let r = d.reduce_ranks as f64;
     let h = d.h as f64;
     let b = b as f64;
     let per_iter_flops = b * f * m * n / p      // partial kernel block
@@ -54,7 +78,7 @@ pub fn bdcd_cost(d: &ProblemDims, b: usize) -> AlgoCost {
     AlgoCost {
         flops: h * per_iter_flops,
         words: h * b * m,
-        msgs: h * (p.log2().ceil().max(1.0)),
+        msgs: h * (r.log2().ceil().max(1.0)),
         storage: f * m * n / p + b * m,
     }
 }
@@ -66,6 +90,7 @@ pub fn bdcd_cost(d: &ProblemDims, b: usize) -> AlgoCost {
 /// `O(fmn/P + sbm)`.
 pub fn bdcd_sstep_cost(d: &ProblemDims, b: usize, s: usize) -> AlgoCost {
     let (m, n, f, mu, p) = (d.m as f64, d.n as f64, d.f, d.mu, d.p as f64);
+    let r = d.reduce_ranks as f64;
     let outer = (d.h as f64 / s as f64).ceil();
     let b = b as f64;
     let s = s as f64;
@@ -77,7 +102,7 @@ pub fn bdcd_sstep_cost(d: &ProblemDims, b: usize, s: usize) -> AlgoCost {
     AlgoCost {
         flops: outer * per_outer_flops,
         words: outer * s * b * m,
-        msgs: outer * (p.log2().ceil().max(1.0)),
+        msgs: outer * (r.log2().ceil().max(1.0)),
         storage: f * m * n / p + s * b * m,
     }
 }
@@ -98,14 +123,7 @@ mod tests {
     use super::*;
 
     fn dims() -> ProblemDims {
-        ProblemDims {
-            m: 10_000,
-            n: 100_000,
-            f: 0.01,
-            mu: 30.0,
-            p: 256,
-            h: 1024,
-        }
+        ProblemDims::one_d(10_000, 100_000, 0.01, 30.0, 256, 1024)
     }
 
     #[test]
@@ -119,6 +137,28 @@ mod tests {
                 "latency should drop by s"
             );
         }
+    }
+
+    /// The latency term must follow the reduce collective's participant
+    /// count, not the global processor count: a pr×pc grid reduce over a
+    /// pc-rank subcommunicator costs log₂ pc rounds per iteration, and
+    /// 1D costs (reduce_ranks = p) are unchanged.
+    #[test]
+    fn latency_uses_reduce_participants_not_global_p() {
+        let one_d = dims();
+        let grid = ProblemDims {
+            reduce_ranks: 16, // pr = 16, pc = 16 over the same 256 ranks
+            ..one_d
+        };
+        let c1 = bdcd_cost(&one_d, 4);
+        let cg = bdcd_cost(&grid, 4);
+        // Same compute and bandwidth; latency halves (log2 256 → log2 16).
+        assert_eq!(cg.flops, c1.flops);
+        assert_eq!(cg.words, c1.words);
+        assert!((cg.msgs - c1.msgs / 2.0).abs() < 1e-9, "{} vs {}", cg.msgs, c1.msgs);
+        let s1 = bdcd_sstep_cost(&one_d, 4, 16);
+        let sg = bdcd_sstep_cost(&grid, 4, 16);
+        assert!((sg.msgs - s1.msgs / 2.0).abs() < 1e-9);
     }
 
     #[test]
@@ -155,14 +195,7 @@ mod tests {
     #[test]
     fn latency_dominated_regime_prefers_sstep() {
         // duke-like: tiny m, large n — the paper's 9.8× case.
-        let d = ProblemDims {
-            m: 44,
-            n: 7129,
-            f: 1.0,
-            mu: 30.0,
-            p: 512,
-            h: 4096,
-        };
+        let d = ProblemDims::one_d(44, 7129, 1.0, 30.0, 512, 4096);
         let (g, b, ph) = (2.5e-10, 4.0e-9, 5.0e-6);
         let t_base = dcd_cost(&d).time(g, b, ph);
         let t_sstep = dcd_sstep_cost(&d, 32).time(g, b, ph);
@@ -178,14 +211,7 @@ mod tests {
         // news20-like K-RR with b=4: m is large, so the bm-word messages
         // are bandwidth-bound and the s-step win collapses (~1.1× in the
         // paper).
-        let d = ProblemDims {
-            m: 19_996,
-            n: 1_355_191,
-            f: 0.0003,
-            mu: 30.0,
-            p: 2048,
-            h: 1024,
-        };
+        let d = ProblemDims::one_d(19_996, 1_355_191, 0.0003, 30.0, 2048, 1024);
         let (g, b, ph) = (2.5e-10, 4.0e-9, 5.0e-6);
         let t_base = bdcd_cost(&d, 4).time(g, b, ph);
         let t_sstep = bdcd_sstep_cost(&d, 4, 64).time(g, b, ph);

@@ -40,6 +40,7 @@ pub struct Dataset {
     pub a: Csr,
     /// Length-`m` labels.
     pub y: Vec<f64>,
+    /// Whether the labels encode classification or regression.
     pub task: Task,
 }
 

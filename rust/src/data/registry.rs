@@ -17,18 +17,34 @@ use super::{Dataset, Task};
 /// How the synthetic stand-in is generated.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum GenKind {
+    /// Dense Gaussian features.
     Dense,
-    UniformSparse { density: f64 },
-    PowerlawSparse { density: f64, alpha: f64 },
+    /// Uniformly sparse features at the given density.
+    UniformSparse {
+        /// Fraction of stored entries.
+        density: f64,
+    },
+    /// Power-law column occupancy (news20-like load imbalance).
+    PowerlawSparse {
+        /// Fraction of stored entries.
+        density: f64,
+        /// Power-law exponent of the column-popularity distribution.
+        alpha: f64,
+    },
 }
 
 /// A named dataset specification from the paper.
 #[derive(Clone, Debug)]
 pub struct DatasetSpec {
+    /// Registry key (the paper's dataset name).
     pub name: &'static str,
+    /// Published sample count.
     pub m: usize,
+    /// Published feature count.
     pub n: usize,
+    /// Classification or regression.
     pub task: Task,
+    /// Which synthetic generator mimics the dataset.
     pub kind: GenKind,
     /// Which paper table the dataset appears in (2 = convergence,
     /// 3 = performance).

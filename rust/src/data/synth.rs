@@ -21,10 +21,13 @@ use crate::sparse::Csr;
 /// Parameters shared by the sparse generators.
 #[derive(Clone, Copy, Debug)]
 pub struct SynthParams {
+    /// Sample count.
     pub m: usize,
+    /// Feature count.
     pub n: usize,
     /// Target fraction of nonzeros.
     pub density: f64,
+    /// Generator seed.
     pub seed: u64,
 }
 

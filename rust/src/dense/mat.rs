@@ -47,10 +47,12 @@ impl Mat {
         Self::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
     }
 
+    /// Number of rows.
     pub fn nrows(&self) -> usize {
         self.nrows
     }
 
+    /// Number of columns.
     pub fn ncols(&self) -> usize {
         self.ncols
     }

@@ -60,14 +60,17 @@ impl RowCache {
         }
     }
 
+    /// Configured capacity in rows.
     pub fn capacity(&self) -> usize {
         self.capacity
     }
 
+    /// Rows currently cached.
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// True when nothing is cached.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }

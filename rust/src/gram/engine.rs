@@ -75,10 +75,12 @@ impl<P: ProductStage, R: ReduceStage> GramEngine<P, R> {
         }
     }
 
+    /// Kernel-matrix dimension `m`.
     pub fn m(&self) -> usize {
         self.m
     }
 
+    /// The layout this pipeline was configured for.
     pub fn layout(&self) -> Layout {
         self.layout
     }
@@ -89,26 +91,33 @@ impl<P: ProductStage, R: ReduceStage> GramEngine<P, R> {
         self.epilogue.as_ref().map(|e| e.kernel())
     }
 
+    /// `K(a_i, a_i)` for all `i`.
     pub fn diag(&self) -> Vec<f64> {
         self.diag.clone()
     }
 
+    /// Row-cache capacity (0 = cache off).
     pub fn cache_capacity(&self) -> usize {
         self.cache.as_ref().map_or(0, |c| c.capacity())
     }
 
+    /// Traffic accumulated by the reduction stage.
     pub fn comm_stats(&self) -> CommStats {
         self.reduce.stats()
     }
 
+    /// The product stage.
     pub fn product(&self) -> &P {
         &self.product
     }
 
+    /// The reduction stage.
     pub fn reduce_stage(&self) -> &R {
         &self.reduce
     }
 
+    /// Mutable access to the reduction stage (construction-time
+    /// collectives).
     pub fn reduce_stage_mut(&mut self) -> &mut R {
         &mut self.reduce
     }
@@ -145,7 +154,9 @@ impl<P: ProductStage, R: ReduceStage> GramEngine<P, R> {
         ledger.cache.hits += served;
         ledger.cache.misses += self.miss_rows.len() as u64;
         if self.reduce.is_active() {
-            // Each served row skips `m` words of allreduce payload.
+            // Each served row skips the reduction of one m-word kernel
+            // row (the 1D allreduce payload; the grid layout splits the
+            // same row across its reduce + allgather collectives).
             ledger.cache.words_saved += served * self.m as u64;
         }
 

@@ -13,14 +13,17 @@ pub struct Epilogue {
 }
 
 impl Epilogue {
+    /// Pair a kernel with the (full-matrix) row norms it needs.
     pub fn new(kernel: Kernel, row_norms: Vec<f64>) -> Epilogue {
         Epilogue { kernel, row_norms }
     }
 
+    /// The configured kernel.
     pub fn kernel(&self) -> Kernel {
         self.kernel
     }
 
+    /// The cached `‖a_i‖²` values.
     pub fn row_norms(&self) -> &[f64] {
         &self.row_norms
     }

@@ -1,9 +1,18 @@
 //! Layout stage: where this engine's slice of the data matrix lives.
 
+/// Default block size of the grid layout's block-cyclic row
+/// distribution: blocks of this many consecutive samples are dealt to
+/// the `pr` row groups round-robin. Cyclic dealing spreads nnz-heavy
+/// rows across groups (load balance); blocking keeps some row locality
+/// in the product. Like `threads`, the block size is a pure wall-time
+/// knob — element bits never depend on which group owns a row (see the
+/// determinism contract in [`crate::gram`]).
+pub const DEFAULT_ROW_BLOCK: usize = 4;
+
 /// Data layout behind a gram engine. Purely descriptive — the product
 /// stage already operates on whatever slice it was built from — but
-/// carried explicitly so reports, assertions and future 2D layouts have
-/// one source of truth.
+/// carried explicitly so reports, assertions and the 2D grid pipeline
+/// have one source of truth.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Layout {
     /// The full `m×n` matrix on one rank (serial reference, Nyström,
@@ -18,21 +27,58 @@ pub enum Layout {
         /// Total ranks `P`.
         ranks: usize,
     },
+    /// One cell of a `pr × pc` process grid (`P = pr·pc` ranks): the
+    /// standard communication-avoiding refinement of the 1D layout.
+    ///
+    /// Cell `(row, col)` holds feature shard `col` (of `pc` 1D-column
+    /// shards) and computes partial gram entries only for the sample
+    /// columns its row group owns under a block-cyclic distribution
+    /// ([`block_cyclic_rows`]). The sum over feature shards runs over the
+    /// *column subcommunicator* (the `pc` cells of grid row `row`), and
+    /// the owned slices are then reassembled by an allgather over the
+    /// *row subcommunicator* (the `pr` cells of grid column `col`) — so
+    /// the reduce collective has `pc ≪ P` participants with a
+    /// `1/pr`-sized payload, instead of all `P` ranks moving the full
+    /// block.
+    Grid {
+        /// Row-group count `pr` (the allgather subcommunicator size).
+        pr: usize,
+        /// Feature-shard count `pc` (the reduce subcommunicator size).
+        pc: usize,
+        /// This cell's row-group index in `[0, pr)`.
+        row: usize,
+        /// This cell's feature-shard index in `[0, pc)`.
+        col: usize,
+    },
 }
 
 impl Layout {
     /// True if the product stage emits *partial* blocks that require a
     /// cross-rank reduction.
     pub fn is_sharded(&self) -> bool {
-        matches!(self, Layout::ColShard { .. })
+        matches!(self, Layout::ColShard { .. } | Layout::Grid { .. })
     }
 
+    /// Short report tag (`full`, `col-shard`, `grid`).
     pub fn name(&self) -> &'static str {
         match self {
             Layout::Full => "full",
             Layout::ColShard { .. } => "col-shard",
+            Layout::Grid { .. } => "grid",
         }
     }
+}
+
+/// Global sample indices owned by row group `group` of `groups` under a
+/// block-cyclic distribution of `m` rows with blocks of `block`
+/// consecutive rows: row `t` belongs to group `(t / block) mod groups`.
+/// Ascending (the grid reduce relies on the order to reassemble slices
+/// bitwise-deterministically).
+pub fn block_cyclic_rows(m: usize, groups: usize, group: usize, block: usize) -> Vec<usize> {
+    assert!(groups >= 1, "need at least one row group");
+    assert!(group < groups, "group index out of range");
+    assert!(block >= 1, "block size must be at least 1");
+    (0..m).filter(|&t| (t / block) % groups == group).collect()
 }
 
 #[cfg(test)]
@@ -43,6 +89,53 @@ mod tests {
     fn shard_predicate() {
         assert!(!Layout::Full.is_sharded());
         assert!(Layout::ColShard { rank: 0, ranks: 4 }.is_sharded());
+        assert!(Layout::Grid {
+            pr: 2,
+            pc: 2,
+            row: 0,
+            col: 1
+        }
+        .is_sharded());
         assert_eq!(Layout::Full.name(), "full");
+        assert_eq!(
+            Layout::Grid {
+                pr: 2,
+                pc: 3,
+                row: 1,
+                col: 2
+            }
+            .name(),
+            "grid"
+        );
+    }
+
+    #[test]
+    fn block_cyclic_partitions_all_rows_exactly_once() {
+        for m in [0usize, 1, 7, 24, 25] {
+            for groups in [1usize, 2, 3, 5] {
+                for block in [1usize, 2, 4] {
+                    let mut seen = vec![false; m];
+                    for g in 0..groups {
+                        for &t in &block_cyclic_rows(m, groups, g, block) {
+                            assert!(!seen[t], "row {t} owned twice");
+                            seen[t] = true;
+                        }
+                    }
+                    assert!(seen.iter().all(|&s| s), "m={m} groups={groups} block={block}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_cyclic_deals_blocks_round_robin() {
+        // m=8, 2 groups, block 2: blocks 0,2 → group 0; blocks 1,3 → 1.
+        assert_eq!(block_cyclic_rows(8, 2, 0, 2), vec![0, 1, 4, 5]);
+        assert_eq!(block_cyclic_rows(8, 2, 1, 2), vec![2, 3, 6, 7]);
+        // Pure cyclic with block 1.
+        assert_eq!(block_cyclic_rows(5, 3, 0, 1), vec![0, 3]);
+        assert_eq!(block_cyclic_rows(5, 3, 2, 1), vec![2]);
+        // More groups than blocks: trailing groups own nothing.
+        assert_eq!(block_cyclic_rows(4, 4, 3, 2), Vec::<usize>::new());
     }
 }

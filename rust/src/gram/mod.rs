@@ -9,8 +9,11 @@
 //! is a thin configuration and every future backend is a plug-in:
 //!
 //! 1. **Layout** ([`Layout`]) — where the data lives: the full matrix on
-//!    one rank, or this rank's 1D-column shard (the paper's partitioning,
-//!    where each of `P` ranks stores ≈ `n/P` features of every sample).
+//!    one rank, this rank's 1D-column shard (the paper's partitioning,
+//!    where each of `P` ranks stores ≈ `n/P` features of every sample), or
+//!    one cell of a 2D `pr × pc` process grid ([`Layout::Grid`]: feature
+//!    shard × block-cyclic row group, the communication-avoiding
+//!    refinement — see `docs/ARCHITECTURE.md`).
 //! 2. **Linear product** ([`ProductStage`]) — the (partial) linear gram
 //!    `Z = A_S Aᵀ`. [`CsrProduct`] picks between the blocked scatter-dot
 //!    path and the cached-transpose path by the density heuristic;
@@ -19,8 +22,12 @@
 //!    declares via [`BlockKind`] whether it emits *linear* inner products
 //!    (epilogue required) or finished *kernel* values.
 //! 3. **Reduction** ([`ReduceStage`]) — a no-op locally ([`NoReduce`]),
-//!    or the sum-allreduce of the partial block across column shards
-//!    ([`AllreduceSum`]): the communication the s-step methods amortize.
+//!    the sum-allreduce of the partial block across column shards
+//!    ([`AllreduceSum`]) — the communication the s-step methods
+//!    amortize — or the grid pair's column-subcommunicator reduce plus
+//!    row-subcommunicator allgather ([`GridReduce`]), which shrinks that
+//!    collective from `P` ranks moving `k·m` words to `pc` ranks moving
+//!    `k·m/pr`.
 //! 4. **Epilogue** ([`Epilogue`]) — the pointwise nonlinear kernel map
 //!    ([`crate::kernelfn::Kernel::apply_block`]), applied redundantly on
 //!    every rank after the reduction (the paper's Theorem 1/2 schedule).
@@ -70,6 +77,27 @@
 //! wall time. Pinned by `rust/tests/threaded_product_props.rs`, across
 //! thread counts {1, 2, 3, 8}, cache on/off, product backends, and
 //! DistGram ranks.
+//!
+//! The 2D grid layout ([`Layout::Grid`], `GridProduct` + `GridReduce`,
+//! `solvers::GridGram`) extends the contract along a third axis: a
+//! `pr × pc` grid solve over `P = pr·pc` ranks is **bitwise identical to
+//! the 1D `ColShard` solve over `pc` ranks** — the grid keeps the 1D
+//! path's `pc` feature shards and reduce tree untouched and adds row
+//! parallelism *around* them, so `pr` (like `threads` and the
+//! block-cyclic `row_block`) changes wall time and traffic, never a bit
+//! of arithmetic. In particular `Grid{1, P}` *is* the 1D path over `P`
+//! ranks, and all factorizations of `P` with equal `pc` agree bitwise
+//! with each other. Equality *across different shard counts* (e.g.
+//! `Grid{2, 4}` vs 1D over 8 ranks) is mathematically impossible for any
+//! layout: splitting a dot product into 4 vs 8 partial sums regroups f64
+//! additions — the same reason 1D runs at different `P` differ in their
+//! last bits. One payload caveat mirrors the Rabenseifner one above: the
+//! grid's reduce payload is `k·⌈m/pr⌉` words, which stays at or above the
+//! small-vector fallback threshold whenever `m ≥ P` (every realistic
+//! configuration), keeping the subgroup reduce on the same algorithm as
+//! the 1D reference. Pinned by `rust/tests/grid_layout_props.rs` over
+//! every `(pr, pc)` factorization of `P ∈ {2, …, 12}`, cache on/off, and
+//! threads {1, 4}.
 
 mod cache;
 mod engine;
@@ -81,9 +109,11 @@ mod reduce;
 pub use cache::RowCache;
 pub use engine::GramEngine;
 pub use epilogue::Epilogue;
-pub use layout::Layout;
-pub use product::{BlockKind, CsrProduct, LowRankProduct, ProductCost, ProductStage};
-pub use reduce::{AllreduceSum, NoReduce, ReduceStage};
+pub use layout::{block_cyclic_rows, Layout, DEFAULT_ROW_BLOCK};
+pub use product::{
+    BlockKind, CsrProduct, GridProduct, LowRankProduct, ProductCost, ProductStage,
+};
+pub use reduce::{AllreduceSum, GridReduce, NoReduce, ReduceStage};
 
 use crate::costmodel::Ledger;
 use crate::dense::Mat;

@@ -68,6 +68,8 @@ pub struct CsrProduct {
 }
 
 impl CsrProduct {
+    /// Wrap a CSR matrix (full or 1D shard), picking the compute path by
+    /// its density.
     pub fn new(a: Csr) -> CsrProduct {
         let at = (a.density() < TRANSPOSE_GRAM_MAX_DENSITY).then(|| Arc::new(a.transpose()));
         CsrProduct {
@@ -118,6 +120,7 @@ pub struct LowRankProduct {
 }
 
 impl LowRankProduct {
+    /// Pair the precomputed factors `C W⁻¹` (m×l) and `Cᵀ` (l×m).
     pub fn new(cw: Mat, ct: Mat) -> LowRankProduct {
         assert_eq!(cw.ncols(), ct.nrows(), "factor ranks disagree");
         assert_eq!(cw.nrows(), ct.ncols(), "factor dims disagree");
@@ -163,6 +166,116 @@ impl ProductStage for LowRankProduct {
     }
 }
 
+/// Grid-cell product: the partial sampled gram of one `pr × pc` grid
+/// cell ([`crate::gram::Layout::Grid`]). Holds this cell's full-row
+/// feature shard (`m × ≈n/pc`) plus the row subset its row group owns
+/// block-cyclically, and computes, per sampled row, the partial inner
+/// products against *owned target rows only* — `1/(pr·pc)` of the global
+/// flops, versus the 1D product's `1/P` over the full output width.
+///
+/// **Packed-prefix contract** (shared with `GridReduce`, its mandatory
+/// pipeline partner): `compute` writes the `w = |owned|` partial values
+/// of sampled row `r` into the *first `w` entries* of output row `r`,
+/// leaving the remainder untouched. The reduce stage packs those
+/// prefixes, sums them over the column subcommunicator, allgathers the
+/// row groups' slices, and overwrites the full `k×m` block — so the
+/// prefix staging is never observable outside the engine. Keeping the
+/// packing row-local (rather than block-contiguous) is what lets
+/// [`crate::parallel::ParallelProduct`] split sampled rows across worker
+/// threads unchanged.
+///
+/// Bitwise contract: the path choice (transpose vs blocked scatter)
+/// follows the *full shard's* density — the same decision the 1D
+/// [`CsrProduct`] makes on this shard — and the target-restricted
+/// kernels ([`Csr::sampled_gram_blocked_against`],
+/// [`Csr::sampled_gram_t_against`]) reorder no additions, so every
+/// partial entry is bitwise identical to the corresponding entry of the
+/// 1D partial block on the same shard. `Clone` is cheap (`Arc`-shared
+/// matrices), as [`crate::parallel::ParallelProduct`] requires.
+#[derive(Clone)]
+pub struct GridProduct {
+    /// The full-row feature shard (`m × ≈n/pc`) — the sampled rows are
+    /// gathered from here, so sample indices stay global.
+    shard: Arc<Csr>,
+    /// The owned target rows of the shard (`|owned| × ≈n/pc`).
+    owned: Arc<Csr>,
+    /// Cached transpose of `owned` for the sparse fast path (None for
+    /// dense shards), mirroring [`CsrProduct`]'s density decision.
+    owned_t: Option<Arc<Csr>>,
+    /// Dense gathered-sample scratch for the blocked path (private per
+    /// clone).
+    scratch: Vec<f64>,
+    /// `k × |owned|` staging block (private per clone).
+    block: Mat,
+}
+
+impl GridProduct {
+    /// Build from this cell's feature shard and the ascending global row
+    /// indices its row group owns (see
+    /// [`crate::gram::block_cyclic_rows`]).
+    pub fn new(shard: Csr, owned_rows: &[usize]) -> GridProduct {
+        debug_assert!(owned_rows.windows(2).all(|w| w[0] < w[1]), "owned rows ascending");
+        let owned = shard.gather_rows(owned_rows);
+        // Path choice by the FULL shard's density — identical to the 1D
+        // CsrProduct on this shard, so grid partials replay its bits.
+        let owned_t = (shard.density() < TRANSPOSE_GRAM_MAX_DENSITY)
+            .then(|| Arc::new(owned.transpose()));
+        GridProduct {
+            shard: Arc::new(shard),
+            owned: Arc::new(owned),
+            owned_t,
+            scratch: Vec::new(),
+            block: Mat::zeros(0, 0),
+        }
+    }
+
+    /// Number of target rows this cell owns.
+    pub fn owned_len(&self) -> usize {
+        self.owned.nrows()
+    }
+
+    /// The underlying feature shard.
+    pub fn shard(&self) -> &Csr {
+        &self.shard
+    }
+}
+
+impl ProductStage for GridProduct {
+    fn m(&self) -> usize {
+        self.shard.nrows()
+    }
+
+    fn kind(&self) -> BlockKind {
+        BlockKind::Linear
+    }
+
+    fn compute(&mut self, sample: &[usize], q: &mut Mat) -> ProductCost {
+        let k = sample.len();
+        let w = self.owned.nrows();
+        debug_assert_eq!(q.nrows(), k);
+        debug_assert_eq!(q.ncols(), self.shard.nrows());
+        if self.block.nrows() != k || self.block.ncols() != w {
+            self.block = Mat::zeros(k, w);
+        }
+        match &self.owned_t {
+            Some(at) => self.shard.sampled_gram_t_against(at, sample, &mut self.block),
+            None => self.shard.sampled_gram_blocked_against(
+                sample,
+                &self.owned,
+                &mut self.block,
+                &mut self.scratch,
+            ),
+        }
+        for r in 0..k {
+            q.row_mut(r)[..w].copy_from_slice(self.block.row(r));
+        }
+        ProductCost {
+            flops: 2.0 * k as f64 * self.owned.nnz() as f64,
+            rows_charged: k,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -197,6 +310,48 @@ mod tests {
             for (x, y) in q.data().iter().zip(q_ref.data()) {
                 assert!((x - y).abs() < 1e-12);
             }
+        }
+    }
+
+    /// The grid product's packed prefix must be a bitwise column slice of
+    /// the 1D product's block on the same shard, on both density paths,
+    /// and its flop charge must be the owned share of the 1D charge.
+    #[test]
+    fn grid_product_prefix_is_bitwise_slice_of_csr_product() {
+        let mut r = Pcg::seeded(37);
+        for density in [0.03, 0.8] {
+            let mut trips = Vec::new();
+            for i in 0..18 {
+                for j in 0..24 {
+                    if r.next_f64() < density {
+                        trips.push((i, j, r.next_gaussian()));
+                    }
+                }
+            }
+            let a = Csr::from_triplets(18, 24, &trips);
+            let owned: Vec<usize> = crate::gram::block_cyclic_rows(18, 3, 1, 2);
+            let mut full = CsrProduct::new(a.clone());
+            let mut grid = GridProduct::new(a.clone(), &owned);
+            assert_eq!(grid.m(), 18);
+            assert_eq!(grid.kind(), BlockKind::Linear);
+            assert_eq!(grid.owned_len(), owned.len());
+            let sample = vec![5usize, 11, 5, 2];
+            let mut q_full = Mat::zeros(4, 18);
+            full.compute(&sample, &mut q_full);
+            let mut q_grid = Mat::zeros(4, 18);
+            let cost = grid.compute(&sample, &mut q_grid);
+            for rr in 0..sample.len() {
+                for (u, &t) in owned.iter().enumerate() {
+                    assert_eq!(
+                        q_grid[(rr, u)],
+                        q_full[(rr, t)],
+                        "density {density} ({rr},{t})"
+                    );
+                }
+            }
+            let owned_nnz: usize = owned.iter().map(|&t| a.row_nnz(t)).sum();
+            assert_eq!(cost.flops, 2.0 * 4.0 * owned_nnz as f64);
+            assert_eq!(cost.rows_charged, 4);
         }
     }
 }

@@ -1,6 +1,8 @@
 //! Reduction stage: combine partial blocks across column shards.
 
-use crate::comm::{allreduce_sum, AllreduceAlgo, CommStats, Communicator};
+use crate::comm::{allgatherv, allreduce_sum, AllreduceAlgo, CommStats, Communicator, SubComm};
+
+use super::layout::block_cyclic_rows;
 
 /// Combines the product stage's (partial) block across ranks.
 pub trait ReduceStage {
@@ -39,6 +41,7 @@ pub struct AllreduceSum<'c, C: Communicator> {
 }
 
 impl<'c, C: Communicator> AllreduceSum<'c, C> {
+    /// Wrap a communicator with the chosen allreduce algorithm.
     pub fn new(comm: &'c mut C, algo: AllreduceAlgo) -> Self {
         AllreduceSum { comm, algo }
     }
@@ -68,6 +71,163 @@ impl<'c, C: Communicator> ReduceStage for AllreduceSum<'c, C> {
     }
 }
 
+/// The 2D grid reduction: the matched pipeline partner of
+/// `GridProduct`'s packed-prefix partial blocks
+/// ([`crate::gram::Layout::Grid`]).
+///
+/// `reduce` runs three steps, all attributed to the engine's allreduce
+/// phase:
+///
+/// 1. **Pack** — copy each output row's `w = |owned|` partial prefix into
+///    a contiguous `k×w` buffer.
+/// 2. **Column reduce** — sum the `pc` feature-shard partials with an
+///    [`allreduce_sum`] over the *column subcommunicator* (the `pc` grid
+///    cells of this row group): the collective the grid shrinks from `P`
+///    participants moving `k·m` words to `pc` participants moving
+///    `k·m/pr`.
+/// 3. **Row allgather + scatter** — [`allgatherv`] the `pr` row groups'
+///    reduced slices over the *row subcommunicator* (the `pr` cells
+///    holding this feature shard) and scatter them back into the full
+///    row-major `k×m` block via each group's block-cyclic column set.
+///
+/// Traffic is accounted per subcommunicator (`col_stats` / `row_stats`);
+/// [`ReduceStage::stats`] reports their [`CommStats::plus`] sum, since
+/// the two stages are sequential on every rank.
+pub struct GridReduce<'c, C: Communicator> {
+    comm: &'c mut C,
+    algo: AllreduceAlgo,
+    /// Kernel-matrix dimension `m` (the full block width).
+    m: usize,
+    /// Ascending global sample columns owned by each row group.
+    owned: Vec<Vec<usize>>,
+    /// This rank's row-group index `i`.
+    my_group: usize,
+    /// Global ranks of this rank's column subcommunicator (`pc` cells of
+    /// grid row `i`, in feature-shard order — group rank `j` matches 1D
+    /// rank `j`, which is what makes the reduce replay the 1D bits).
+    col_members: Vec<usize>,
+    /// Global ranks of this rank's row subcommunicator (`pr` cells
+    /// holding feature shard `j`, in row-group order).
+    row_members: Vec<usize>,
+    col_stats: CommStats,
+    row_stats: CommStats,
+    /// Reused `k×w` packed buffer.
+    packed: Vec<f64>,
+}
+
+impl<'c, C: Communicator> GridReduce<'c, C> {
+    /// Carve the `pr × pc` grid's subcommunicators out of `comm` (which
+    /// must span exactly `pr·pc` ranks; rank `r` is grid cell
+    /// `(r / pc, r % pc)`). `m` is the sample count and `row_block` the
+    /// block-cyclic block size.
+    pub fn new(
+        comm: &'c mut C,
+        algo: AllreduceAlgo,
+        pr: usize,
+        pc: usize,
+        m: usize,
+        row_block: usize,
+    ) -> Self {
+        assert!(pr >= 1 && pc >= 1, "grid dimensions must be positive");
+        assert_eq!(
+            comm.size(),
+            pr * pc,
+            "a {pr}x{pc} grid needs exactly pr*pc ranks, got {}",
+            comm.size()
+        );
+        let rank = comm.rank();
+        let (i, j) = (rank / pc, rank % pc);
+        GridReduce {
+            comm,
+            algo,
+            m,
+            owned: (0..pr)
+                .map(|g| block_cyclic_rows(m, pr, g, row_block))
+                .collect(),
+            my_group: i,
+            col_members: (0..pc).map(|jj| i * pc + jj).collect(),
+            row_members: (0..pr).map(|ii| ii * pc + j).collect(),
+            col_stats: CommStats::default(),
+            row_stats: CommStats::default(),
+            packed: Vec::new(),
+        }
+    }
+
+    /// This rank's global id (exposed for the oracle wrappers).
+    pub fn rank(&self) -> usize {
+        self.comm.rank()
+    }
+
+    /// The ascending sample columns this rank's row group owns.
+    pub fn owned_rows(&self) -> &[usize] {
+        &self.owned[self.my_group]
+    }
+
+    /// Sum-allreduce over the column subcommunicator — used by the grid
+    /// oracle for the construction-time row-norms reduction (the norms
+    /// are a sum over the `pc` feature shards, exactly like the gram).
+    pub fn allreduce_col(&mut self, buf: &mut [f64]) {
+        let mut sub = SubComm::new(&mut *self.comm, &self.col_members, &mut self.col_stats);
+        allreduce_sum(&mut sub, buf, self.algo);
+    }
+
+    /// Column-subcommunicator (reduce) traffic so far.
+    pub fn col_stats(&self) -> CommStats {
+        self.col_stats
+    }
+
+    /// Row-subcommunicator (allgather) traffic so far.
+    pub fn row_stats(&self) -> CommStats {
+        self.row_stats
+    }
+}
+
+impl<'c, C: Communicator> ReduceStage for GridReduce<'c, C> {
+    fn is_active(&self) -> bool {
+        true
+    }
+
+    fn reduce(&mut self, buf: &mut [f64]) {
+        let m = self.m;
+        assert_eq!(buf.len() % m, 0, "grid reduce: buffer must be k x m");
+        let k = buf.len() / m;
+        let w = self.owned[self.my_group].len();
+        // 1. Pack the per-row partial prefixes (GridProduct's contract).
+        self.packed.clear();
+        self.packed.resize(k * w, 0.0);
+        for r in 0..k {
+            self.packed[r * w..(r + 1) * w].copy_from_slice(&buf[r * m..r * m + w]);
+        }
+        // 2. Sum the pc feature-shard partials over the column subcomm.
+        {
+            let mut sub = SubComm::new(&mut *self.comm, &self.col_members, &mut self.col_stats);
+            allreduce_sum(&mut sub, &mut self.packed, self.algo);
+        }
+        // 3. Allgather the pr reduced slices along the row subcomm and
+        //    scatter them into the full row-major k×m block.
+        let counts: Vec<usize> = self.owned.iter().map(|o| k * o.len()).collect();
+        let gathered = {
+            let mut sub = SubComm::new(&mut *self.comm, &self.row_members, &mut self.row_stats);
+            allgatherv(&mut sub, &self.packed, &counts)
+        };
+        let mut off = 0usize;
+        for (g, rows) in self.owned.iter().enumerate() {
+            let wg = rows.len();
+            for r in 0..k {
+                let slice = &gathered[off + r * wg..off + (r + 1) * wg];
+                for (u, &t) in rows.iter().enumerate() {
+                    buf[r * m + t] = slice[u];
+                }
+            }
+            off += counts[g];
+        }
+    }
+
+    fn stats(&self) -> CommStats {
+        self.col_stats.plus(self.row_stats)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -81,6 +241,50 @@ mod tests {
         assert!(!r.is_active());
         assert_eq!(buf, vec![1.0, 2.0]);
         assert_eq!(r.stats(), CommStats::default());
+    }
+
+    /// End-to-end grid reduce over a 2×2 grid: packed prefixes in, fully
+    /// reduced and reassembled k×m blocks out, with traffic split between
+    /// the column and row subcommunicators.
+    #[test]
+    fn grid_reduce_sums_over_columns_and_reassembles_rows() {
+        let (pr, pc, m, k) = (2usize, 2usize, 5usize, 2usize);
+        let outs = run_ranks(pr * pc, |c| {
+            let rank = c.rank();
+            let (i, j) = (rank / pc, rank % pc);
+            let mut stage =
+                GridReduce::new(c, AllreduceAlgo::RecursiveDoubling, pr, pc, m, 1);
+            assert!(stage.is_active());
+            let owned: Vec<usize> = stage.owned_rows().to_vec();
+            // Fill per the GridProduct packed-prefix contract: garbage
+            // beyond the prefix must be overwritten by the reduce.
+            let mut buf = vec![f64::NAN; k * m];
+            for r in 0..k {
+                for (u, &t) in owned.iter().enumerate() {
+                    buf[r * m + u] = ((j + 1) * 100 + r * 10 + t) as f64;
+                }
+            }
+            stage.reduce(&mut buf);
+            (buf, i, stage.col_stats(), stage.row_stats())
+        });
+        for (buf, _i, col, row) in &outs {
+            for r in 0..k {
+                for t in 0..m {
+                    // Σ over the two feature shards of (j+1)·100 + r·10 + t.
+                    let expect = 300.0 + 2.0 * (r * 10 + t) as f64;
+                    assert_eq!(buf[r * m + t], expect, "({r},{t})");
+                }
+            }
+            assert_eq!(col.allreduces, 1);
+            assert!(col.words > 0 && row.words > 0);
+            assert_eq!(row.allreduces, 0, "the allgather is not an allreduce");
+        }
+        // Row groups own {0,2,4} and {1,3}: rank 0's reduce payload is
+        // k·3 words (recursive doubling over pc=2 sends it once), and the
+        // two-rank allgather ring sends its own k·3-word slice once.
+        let (_, _, col0, row0) = &outs[0];
+        assert_eq!(col0.words, (k * 3) as u64);
+        assert_eq!(row0.words, (k * 3) as u64);
     }
 
     #[test]

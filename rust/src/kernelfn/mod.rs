@@ -18,18 +18,26 @@ pub enum Kernel {
     /// `K(a, b) = aᵀb`
     Linear,
     /// `K(a, b) = (c + aᵀb)^d`, `c ≥ 0`, `d ≥ 2`
-    Poly { c: f64, d: i32 },
+    Poly {
+        /// Additive constant `c ≥ 0`.
+        c: f64,
+        /// Degree `d ≥ 2`.
+        d: i32,
+    },
     /// `K(a, b) = exp(−σ‖a−b‖²)`, `σ > 0`
-    Rbf { sigma: f64 },
+    Rbf {
+        /// Width `σ > 0`.
+        sigma: f64,
+    },
 }
 
 impl Kernel {
-    /// The paper's convergence-experiment settings: poly `d=3, c=0`,
-    /// rbf `σ=1`.
+    /// The paper's convergence-experiment polynomial: `d=3, c=0`.
     pub fn paper_poly() -> Kernel {
         Kernel::Poly { c: 0.0, d: 3 }
     }
 
+    /// The paper's convergence-experiment RBF: `σ=1`.
     pub fn paper_rbf() -> Kernel {
         Kernel::Rbf { sigma: 1.0 }
     }

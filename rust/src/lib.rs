@@ -14,12 +14,17 @@
 //! * [`gram`] — the staged, cached gram engine: layout → linear product →
 //!   reduction → epilogue, with a deterministic kernel-row LRU cache in
 //!   front. Every gram oracle is a thin configuration of this engine.
+//!   Layouts: full matrix, the paper's 1D column shard, and the 2D
+//!   `pr × pc` process grid whose reduce runs over a `pc`-rank
+//!   subcommunicator (see `docs/ARCHITECTURE.md`).
 //! * [`parallel`] — intra-rank threading: a deterministic scoped-thread
 //!   pool and the `ParallelProduct` adapter that splits sampled rows of
 //!   any product stage across worker threads (bitwise-invariant in the
-//!   thread count; composes with `DistGram` for hybrid P×t scaling).
+//!   thread count; composes with `DistGram`/`GridGram` for hybrid P×t
+//!   scaling).
 //! * [`comm`] — a simulated-MPI communicator (threads + channels) with
-//!   allreduce algorithms and traffic instrumentation.
+//!   allreduce algorithms, `MPI_Comm_split`-style subcommunicators, and
+//!   traffic instrumentation.
 //! * [`costmodel`] — Hockney γF+βW+φL machine model used to project
 //!   measured per-rank counts onto a Cray-EX-like machine profile.
 //! * [`data`] — LIBSVM-format I/O plus synthetic dataset generators that
@@ -37,6 +42,8 @@
 //! * [`bench_harness`] — a small criterion-like measurement harness.
 //! * [`testkit`] — a property-testing mini-framework used by the test
 //!   suites (proptest is unavailable in the offline build).
+
+#![warn(missing_docs)]
 
 pub mod bench_harness;
 pub mod cli;

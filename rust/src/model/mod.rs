@@ -44,10 +44,12 @@ impl SvmModel {
         }
     }
 
+    /// Number of support vectors kept.
     pub fn n_support(&self) -> usize {
         self.sv.nrows()
     }
 
+    /// The kernel the model was trained with.
     pub fn kernel(&self) -> Kernel {
         self.kernel
     }
@@ -146,6 +148,7 @@ impl KrrModel {
         }
     }
 
+    /// The ridge penalty the model was trained with.
     pub fn lambda(&self) -> f64 {
         self.lambda
     }
@@ -178,10 +181,12 @@ impl KrrModel {
         mse.sqrt()
     }
 
+    /// Serialize to a JSON document.
     pub fn to_json(&self) -> Json {
         model_json("krr", &self.train, &self.coef, self.kernel, Some(self.lambda))
     }
 
+    /// Deserialize.
     pub fn from_json(v: &Json) -> Result<KrrModel> {
         let (kind, train, coef, kernel, extra) = parse_model_json(v)?;
         anyhow::ensure!(kind == "krr", "not a krr model: {kind}");
@@ -196,10 +201,12 @@ impl KrrModel {
         })
     }
 
+    /// Save to a file (JSON).
     pub fn save(&self, path: &std::path::Path) -> Result<()> {
         std::fs::write(path, self.to_json().render()).map_err(|e| anyhow!("save: {e}"))
     }
 
+    /// Load from a file.
     pub fn load(path: &std::path::Path) -> Result<KrrModel> {
         let text = std::fs::read_to_string(path).map_err(|e| anyhow!("load: {e}"))?;
         Self::from_json(&Json::parse(&text).map_err(|e| anyhow!("parse: {e}"))?)

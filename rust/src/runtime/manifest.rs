@@ -10,14 +10,18 @@ use crate::util::json::Json;
 /// One lowered artifact.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ArtifactSpec {
+    /// Unique artifact name (keys the compiled-executable cache).
     pub name: String,
+    /// HLO text file name, relative to the artifact directory.
     pub file: String,
     /// Kernel family: `linear` | `poly` | `rbf`.
     pub kind: String,
     /// Data shape `(m, n)` and sampled-row count `k` the program was
     /// lowered for.
     pub m: usize,
+    /// Feature count the program was lowered for.
     pub n: usize,
+    /// Sampled-row count the program was lowered for.
     pub k: usize,
 }
 
@@ -89,10 +93,12 @@ impl Manifest {
         Ok(Manifest { artifacts })
     }
 
+    /// All artifacts, in manifest order.
     pub fn artifacts(&self) -> &[ArtifactSpec] {
         &self.artifacts
     }
 
+    /// Look an artifact up by name.
     pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
         self.artifacts.iter().find(|a| a.name == name)
     }

@@ -44,6 +44,7 @@ impl PjrtRuntime {
         super::default_artifacts_dir()
     }
 
+    /// The loaded artifact manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }

@@ -37,6 +37,7 @@ impl PjrtRuntime {
         super::default_artifacts_dir()
     }
 
+    /// The loaded artifact manifest.
     pub fn manifest(&self) -> &Manifest {
         unreachable!("stub PjrtRuntime cannot be constructed")
     }

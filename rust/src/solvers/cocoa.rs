@@ -30,13 +30,17 @@ pub struct CocoaParams {
     pub rounds: usize,
     /// Local DCD iterations per worker per round.
     pub local_iters: usize,
+    /// Soft-margin penalty `C`.
     pub c: f64,
+    /// Hinge or squared-hinge loss.
     pub variant: SvmVariant,
+    /// Coordinate-stream seed.
     pub seed: u64,
 }
 
 /// Result of a CoCoA run.
 pub struct CocoaResult {
+    /// Final averaged dual solution.
     pub alpha: Vec<f64>,
     /// Shared primal vector `w`.
     pub w: Vec<f64>,

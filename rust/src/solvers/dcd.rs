@@ -9,7 +9,9 @@ use super::{GramOracle, Trace};
 /// Hinge-loss variant: `L1` (hinge) or `L2` (squared hinge).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SvmVariant {
+    /// Hinge loss.
     L1,
+    /// Squared-hinge loss.
     L2,
 }
 
@@ -23,6 +25,7 @@ impl SvmVariant {
         }
     }
 
+    /// Report tag (`l1` / `l2`).
     pub fn name(&self) -> &'static str {
         match self {
             SvmVariant::L1 => "l1",
@@ -36,6 +39,7 @@ impl SvmVariant {
 pub struct SvmParams {
     /// Soft-margin penalty `C`.
     pub c: f64,
+    /// Hinge or squared-hinge loss.
     pub variant: SvmVariant,
     /// Total (inner) iterations `H`.
     pub h: usize,

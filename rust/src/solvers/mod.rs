@@ -13,9 +13,11 @@
 //! matrix on demand. Every oracle is a thin configuration of the staged
 //! gram engine: [`LocalGram`] computes locally, [`DistGram`] computes a
 //! partial gram on this rank's 1D-column shard and sum-allreduces it (the
-//! paper's parallelization), [`NystromGram`] multiplies precomputed
-//! low-rank factors, and `runtime::PjrtGram` executes the AOT-compiled
-//! JAX/Pallas artifact. The solver code is *identical* in serial and
+//! paper's parallelization), [`GridGram`] is one cell of a 2D `pr × pc`
+//! process grid whose reduce runs over a `pc`-rank subcommunicator (the
+//! communication-avoiding refinement), [`NystromGram`] multiplies
+//! precomputed low-rank factors, and `runtime::PjrtGram` executes the
+//! AOT-compiled JAX/Pallas artifact. The solver code is *identical* in serial and
 //! distributed runs — every rank executes the same deterministic updates
 //! on replicated state, exactly like the paper's MPI implementation.
 //!
@@ -42,7 +44,7 @@ pub use cocoa::{cocoa_svm, CocoaParams, CocoaResult};
 pub use dcd::{dcd, dcd_sstep, SvmParams, SvmVariant};
 pub use krr_exact::{full_kernel_matrix, krr_exact};
 pub use nystrom::NystromGram;
-pub use oracle::{DistGram, LocalGram};
+pub use oracle::{DistGram, GridGram, LocalGram};
 
 pub use crate::gram::GramOracle;
 

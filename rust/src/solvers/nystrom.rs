@@ -126,6 +126,7 @@ impl NystromGram {
         }
     }
 
+    /// Effective approximation rank `l`.
     pub fn rank(&self) -> usize {
         self.engine.product().inner().rank()
     }

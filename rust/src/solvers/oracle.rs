@@ -7,17 +7,26 @@
 //!   `allreduce_sum` (real messages, real counts) → redundant kernel
 //!   epilogue — exactly the communication pattern of the paper's
 //!   Section 4 analysis.
+//! * [`GridGram`] — one cell of a 2D `pr × pc` process grid: row-sliced
+//!   partial product on this cell's feature shard → column-subcomm
+//!   reduce + row-subcomm allgather → redundant kernel epilogue. The
+//!   communication-avoiding refinement: the reduce collective has
+//!   `pc ≪ P` participants and a `1/pr`-sized payload.
 //!
-//! Both take an optional kernel-row cache (`with_cache`) and an
+//! All take an optional kernel-row cache (`with_cache`) and an
 //! intra-rank worker-thread count for the product stage (`with_opts`);
 //! `new` keeps the cache off and runs serially, which reproduces the
 //! pre-engine cost accounting count for count. Results are bitwise
-//! identical for every cache size and thread count (see [`crate::gram`]).
+//! identical for every cache size and thread count, and a grid solve is
+//! bitwise identical to the 1D solve over `pc` ranks (see
+//! [`crate::gram`]).
 
 use crate::comm::{allreduce_sum, AllreduceAlgo, CommStats, Communicator};
 use crate::costmodel::Ledger;
 use crate::dense::Mat;
-use crate::gram::{AllreduceSum, CsrProduct, Epilogue, GramEngine, Layout, NoReduce};
+use crate::gram::{
+    AllreduceSum, CsrProduct, Epilogue, GramEngine, GridProduct, GridReduce, Layout, NoReduce,
+};
 use crate::kernelfn::Kernel;
 use crate::parallel::ParallelProduct;
 use crate::sparse::Csr;
@@ -30,6 +39,7 @@ pub struct LocalGram {
 }
 
 impl LocalGram {
+    /// Serial oracle: cache off, single-threaded product.
     pub fn new(a: Csr, kernel: Kernel) -> Self {
         Self::with_opts(a, kernel, 0, 1)
     }
@@ -58,6 +68,7 @@ impl LocalGram {
         }
     }
 
+    /// The configured kernel.
     pub fn kernel(&self) -> Kernel {
         self.engine.kernel().expect("local pipeline has an epilogue")
     }
@@ -140,12 +151,119 @@ impl<'c, C: Communicator> DistGram<'c, C> {
         }
     }
 
+    /// This rank's id.
     pub fn rank(&self) -> usize {
         self.engine.reduce_stage().rank()
     }
 }
 
 impl<'c, C: Communicator> GramOracle for DistGram<'c, C> {
+    fn m(&self) -> usize {
+        self.engine.m()
+    }
+
+    fn gram(&mut self, sample: &[usize], q: &mut Mat, ledger: &mut Ledger) {
+        self.engine.gram(sample, q, ledger);
+    }
+
+    fn diag(&self) -> Vec<f64> {
+        self.engine.diag()
+    }
+
+    fn comm_stats(&self) -> CommStats {
+        self.engine.comm_stats()
+    }
+}
+
+/// 2D-grid oracle: this rank is cell `(rank / pc, rank % pc)` of a
+/// `pr × pc` process grid over `P = pr·pc` ranks.
+///
+/// The cell holds feature shard `rank % pc` — the *same* `pc`-way
+/// 1D-column split the paper's layout would use over `pc` ranks — for
+/// every sample, and computes partial gram entries only for the sample
+/// columns its row group owns block-cyclically. The reduction then runs
+/// over the column subcommunicator (`pc` ranks, payload `k·m/pr`)
+/// followed by an allgather over the row subcommunicator (`pr` ranks),
+/// instead of one `P`-rank allreduce of the full `k·m` block.
+///
+/// Determinism: bitwise identical to [`DistGram`] over `pc` ranks for
+/// every `pr`, `row_block`, `cache_rows` and `threads` (see
+/// [`crate::gram`]); `Grid{1, P}` reproduces the 1D path exactly.
+pub struct GridGram<'c, C: Communicator> {
+    engine: GramEngine<ParallelProduct<GridProduct>, GridReduce<'c, C>>,
+}
+
+impl<'c, C: Communicator> GridGram<'c, C> {
+    /// Build from this cell's feature shard (`shards[rank % pc]` of a
+    /// `pc`-way column split). Collective: every rank must call this at
+    /// the same time (one column-subcomm allreduce for RBF row norms).
+    pub fn new(
+        shard: Csr,
+        kernel: Kernel,
+        comm: &'c mut C,
+        algo: AllreduceAlgo,
+        pr: usize,
+        pc: usize,
+    ) -> Self {
+        Self::with_opts(shard, kernel, comm, algo, pr, pc, crate::gram::DEFAULT_ROW_BLOCK, 0, 1)
+    }
+
+    /// Full configuration: block-cyclic `row_block`, kernel-row cache
+    /// (`cache_rows`, identical on every rank) and `threads` intra-rank
+    /// product workers. Collective, like [`Self::new`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_opts(
+        shard: Csr,
+        kernel: Kernel,
+        comm: &'c mut C,
+        algo: AllreduceAlgo,
+        pr: usize,
+        pc: usize,
+        row_block: usize,
+        cache_rows: usize,
+        threads: usize,
+    ) -> Self {
+        let m = shard.nrows();
+        let rank = comm.rank();
+        let (row, col) = (rank / pc, rank % pc);
+        let mut reduce = GridReduce::new(comm, algo, pr, pc, m, row_block);
+        // Full row norms are a sum over the pc feature shards — the same
+        // collective (and the same bits) as DistGram over pc ranks.
+        let mut row_norms = shard.row_norms_sq();
+        reduce.allreduce_col(&mut row_norms);
+        let epilogue = Epilogue::new(kernel, row_norms);
+        let diag = epilogue.diag();
+        let owned = reduce.owned_rows().to_vec();
+        let product = ParallelProduct::new(GridProduct::new(shard, &owned), threads);
+        GridGram {
+            engine: GramEngine::new(
+                Layout::Grid { pr, pc, row, col },
+                product,
+                reduce,
+                Some(epilogue),
+                diag,
+                cache_rows,
+            ),
+        }
+    }
+
+    /// This rank's global id.
+    pub fn rank(&self) -> usize {
+        self.engine.reduce_stage().rank()
+    }
+
+    /// Column-subcommunicator (reduce) traffic.
+    pub fn col_stats(&self) -> CommStats {
+        self.engine.reduce_stage().col_stats()
+    }
+
+    /// Row-subcommunicator (allgather) traffic.
+    pub fn row_stats(&self) -> CommStats {
+        self.engine.reduce_stage().row_stats()
+    }
+}
+
+impl<'c, C: Communicator> GramOracle for GridGram<'c, C> {
     fn m(&self) -> usize {
         self.engine.m()
     }
@@ -372,6 +490,113 @@ mod tests {
         let mixed = run(|rank| rank + 1); // t = 1, 2, 3 per rank
         for (a, b) in serial.iter().zip(&mixed) {
             assert_eq!(a.data(), b.data());
+        }
+    }
+
+    /// Grid oracle ground truth: blocks (and diag) match the serial
+    /// oracle to tolerance for every kernel and factorization, and the
+    /// reduce collective runs over pc ranks only.
+    #[test]
+    fn grid_gram_matches_local_gram_all_kernels() {
+        let ds = gen_dense_classification(24, 16, 0.0, 2);
+        for kernel in [Kernel::Linear, Kernel::paper_poly(), Kernel::paper_rbf()] {
+            let mut local = LocalGram::new(ds.a.clone(), kernel);
+            let sample = vec![1usize, 13, 22, 7];
+            let mut q_ref = Mat::zeros(4, 24);
+            local.gram(&sample, &mut q_ref, &mut Ledger::new());
+            let diag_ref = local.diag();
+
+            for (pr, pc) in [(2usize, 2usize), (3, 2), (2, 3), (4, 1), (1, 4)] {
+                let shards = ds.shard_cols(pc);
+                let outs = run_ranks(pr * pc, |c| {
+                    let shard = shards[c.rank() % pc].clone();
+                    let mut grid =
+                        GridGram::new(shard, kernel, c, AllreduceAlgo::Rabenseifner, pr, pc);
+                    let mut q = Mat::zeros(4, 24);
+                    grid.gram(&sample, &mut q, &mut Ledger::new());
+                    (q, grid.diag(), grid.col_stats(), grid.row_stats())
+                });
+                for (q, diag, col, row) in &outs {
+                    for (a, b) in q.data().iter().zip(q_ref.data()) {
+                        assert!((a - b).abs() < 1e-9, "{kernel:?} {pr}x{pc}: {a} vs {b}");
+                    }
+                    for (a, b) in diag.iter().zip(&diag_ref) {
+                        assert!((a - b).abs() < 1e-9, "{kernel:?} {pr}x{pc} diag");
+                    }
+                    if pc > 1 {
+                        assert!(col.words > 0, "{pr}x{pc}: reduce must move words");
+                    } else {
+                        assert_eq!(col.words, 0, "{pr}x{pc}: single-shard reduce is free");
+                    }
+                    if pr > 1 {
+                        assert!(row.words > 0, "{pr}x{pc}: allgather must move words");
+                    } else {
+                        assert_eq!(row.words, 0);
+                    }
+                }
+            }
+        }
+    }
+
+    /// The grid determinism contract at the oracle level: for every
+    /// factorization, the grid block replays the bits of the 1D DistGram
+    /// block over pc ranks (and of the serial oracle when pc = 1).
+    #[test]
+    fn grid_gram_is_bitwise_equal_to_1d_over_pc_ranks() {
+        let ds = gen_dense_classification(24, 16, 0.0, 9);
+        let kernel = Kernel::paper_rbf();
+        let stream: Vec<Vec<usize>> = {
+            let mut rng = Pcg::seeded(123);
+            (0..8)
+                .map(|_| {
+                    let k = rng.gen_range(1, 5);
+                    (0..k).map(|_| rng.gen_below(24)).collect()
+                })
+                .collect()
+        };
+        let run_1d = |p: usize| -> Vec<f64> {
+            if p == 1 {
+                let mut local = LocalGram::new(ds.a.clone(), kernel);
+                let mut out = Vec::new();
+                for sample in &stream {
+                    let mut q = Mat::zeros(sample.len(), 24);
+                    local.gram(sample, &mut q, &mut Ledger::new());
+                    out.extend_from_slice(q.data());
+                }
+                return out;
+            }
+            let shards = ds.shard_cols(p);
+            let outs = run_ranks(p, |c| {
+                let shard = shards[c.rank()].clone();
+                let mut dist = DistGram::new(shard, kernel, c, AllreduceAlgo::Rabenseifner);
+                let mut out = Vec::new();
+                for sample in &stream {
+                    let mut q = Mat::zeros(sample.len(), 24);
+                    dist.gram(sample, &mut q, &mut Ledger::new());
+                    out.extend_from_slice(q.data());
+                }
+                out
+            });
+            outs.into_iter().next().unwrap()
+        };
+        for (pr, pc) in [(1usize, 3usize), (2, 1), (2, 2), (3, 2), (2, 4), (4, 2)] {
+            let reference = run_1d(pc);
+            let shards = ds.shard_cols(pc);
+            let outs = run_ranks(pr * pc, |c| {
+                let shard = shards[c.rank() % pc].clone();
+                let mut grid =
+                    GridGram::new(shard, kernel, c, AllreduceAlgo::Rabenseifner, pr, pc);
+                let mut out = Vec::new();
+                for sample in &stream {
+                    let mut q = Mat::zeros(sample.len(), 24);
+                    grid.gram(sample, &mut q, &mut Ledger::new());
+                    out.extend_from_slice(q.data());
+                }
+                out
+            });
+            for (rank, out) in outs.iter().enumerate() {
+                assert_eq!(out, &reference, "{pr}x{pc} rank {rank} must replay 1D@{pc} bits");
+            }
         }
     }
 

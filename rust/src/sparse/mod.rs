@@ -129,10 +129,12 @@ impl Csr {
         out
     }
 
+    /// Number of rows.
     pub fn nrows(&self) -> usize {
         self.nrows
     }
 
+    /// Number of columns.
     pub fn ncols(&self) -> usize {
         self.ncols
     }
@@ -296,8 +298,32 @@ impl Csr {
     /// [`Csr::sampled_gram`] (ascending column index within each row), so
     /// results are bitwise equal.
     pub fn sampled_gram_blocked(&self, sample: &[usize], q: &mut Mat, scratch: &mut Vec<f64>) {
+        self.sampled_gram_blocked_against(sample, self, q, scratch);
+    }
+
+    /// [`Csr::sampled_gram_blocked`] with the output columns restricted to
+    /// the rows of `targets`, a row subset of the same column space:
+    /// `q[r][u] = ⟨self[sample_r, :], targets[u, :]⟩`.
+    ///
+    /// The sampled side always gathers from `self` (the full row set), so
+    /// sampled indices remain global. Per-element arithmetic is identical
+    /// to the unrestricted variant — restricting the target set drops
+    /// output columns without reordering a single addition — which is what
+    /// makes the 2D grid layout's row-sliced partial blocks bitwise equal
+    /// to column slices of the 1D partial block (see `crate::gram`).
+    pub fn sampled_gram_blocked_against(
+        &self,
+        sample: &[usize],
+        targets: &Csr,
+        q: &mut Mat,
+        scratch: &mut Vec<f64>,
+    ) {
+        assert_eq!(
+            targets.ncols, self.ncols,
+            "targets must share the column space"
+        );
         assert_eq!(q.nrows(), sample.len());
-        assert_eq!(q.ncols(), self.nrows);
+        assert_eq!(q.ncols(), targets.nrows);
         let k = sample.len();
         let n = self.ncols;
         scratch.clear();
@@ -309,8 +335,8 @@ impl Csr {
                 row[j] = v;
             }
         }
-        for i in 0..self.nrows {
-            let (cols, vals) = self.row_parts(i);
+        for i in 0..targets.nrows {
+            let (cols, vals) = targets.row_parts(i);
             for r in 0..k {
                 let srow = &scratch[r * n..(r + 1) * n];
                 let mut s = 0.0;
@@ -333,14 +359,31 @@ impl Csr {
     pub fn sampled_gram_t(&self, at: &Csr, sample: &[usize], q: &mut Mat) {
         assert_eq!(at.nrows(), self.ncols(), "at must be self.transpose()");
         assert_eq!(at.ncols(), self.nrows(), "at must be self.transpose()");
+        self.sampled_gram_t_against(at, sample, q);
+    }
+
+    /// [`Csr::sampled_gram_t`] with the output columns restricted to a row
+    /// subset of the matrix: `at_targets` is `targets.transpose()` for
+    /// some row subset `targets` of the same column space, and
+    /// `q[r][u] = ⟨self[sample_r, :], targets[u, :]⟩`.
+    ///
+    /// As with [`Csr::sampled_gram_blocked_against`], per-element adds
+    /// happen in ascending feature order exactly as in the unrestricted
+    /// variant, so the restricted block is bitwise equal to a column slice
+    /// of the full block.
+    pub fn sampled_gram_t_against(&self, at_targets: &Csr, sample: &[usize], q: &mut Mat) {
+        assert_eq!(
+            at_targets.nrows, self.ncols,
+            "at_targets must be a transpose over this matrix's column space"
+        );
         assert_eq!(q.nrows(), sample.len());
-        assert_eq!(q.ncols(), self.nrows());
+        assert_eq!(q.ncols(), at_targets.ncols);
         for (r, &sr) in sample.iter().enumerate() {
             let qrow = q.row_mut(r);
             qrow.fill(0.0);
             let (cols, vals) = self.row_parts(sr);
             for (&j, &v) in cols.iter().zip(vals) {
-                let (rows_i, ws) = at.row_parts(j);
+                let (rows_i, ws) = at_targets.row_parts(j);
                 for (&i, &w) in rows_i.iter().zip(ws) {
                     qrow[i] += v * w;
                 }
@@ -635,6 +678,49 @@ mod tests {
             s.sampled_gram_t(&at, &sample, &mut q2);
             for (a, b) in q1.data().iter().zip(q2.data()) {
                 assert!((a - b).abs() < 1e-12, "density {density}");
+            }
+        }
+    }
+
+    /// The target-restricted variants must return bitwise column slices
+    /// of the unrestricted block, on both the blocked and transpose paths
+    /// (the grid layout's correctness hinges on this).
+    #[test]
+    fn sampled_gram_against_is_bitwise_column_slice() {
+        let mut r = Pcg::seeded(227);
+        for density in [0.05, 0.6] {
+            let m = r.gen_range(6, 24);
+            let n = r.gen_range(3, 30);
+            let s = rand_sparse(&mut r, m, n, density);
+            let k = r.gen_range(1, 5);
+            let mut sample = r.sample_without_replacement(m, k);
+            sample.push(sample[0]); // duplicates must behave too
+            // A strided row subset (what a block-cyclic row group owns).
+            let targets_rows: Vec<usize> = (0..m).step_by(3).collect();
+            let targets = s.gather_rows(&targets_rows);
+
+            let mut q_full = Mat::zeros(sample.len(), m);
+            let mut sc = Vec::new();
+            s.sampled_gram_blocked(&sample, &mut q_full, &mut sc);
+
+            let mut q_sub = Mat::zeros(sample.len(), targets_rows.len());
+            s.sampled_gram_blocked_against(&sample, &targets, &mut q_sub, &mut sc);
+            for (rr, _) in sample.iter().enumerate() {
+                for (u, &t) in targets_rows.iter().enumerate() {
+                    assert_eq!(q_sub[(rr, u)], q_full[(rr, t)], "blocked ({rr},{t})");
+                }
+            }
+
+            let at_full = s.transpose();
+            let mut q_t_full = Mat::zeros(sample.len(), m);
+            s.sampled_gram_t(&at_full, &sample, &mut q_t_full);
+            let at_sub = targets.transpose();
+            let mut q_t_sub = Mat::zeros(sample.len(), targets_rows.len());
+            s.sampled_gram_t_against(&at_sub, &sample, &mut q_t_sub);
+            for (rr, _) in sample.iter().enumerate() {
+                for (u, &t) in targets_rows.iter().enumerate() {
+                    assert_eq!(q_t_sub[(rr, u)], q_t_full[(rr, t)], "transpose ({rr},{t})");
+                }
             }
         }
     }

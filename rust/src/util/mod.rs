@@ -12,6 +12,7 @@ pub struct PhaseTimer {
 }
 
 impl PhaseTimer {
+    /// A zeroed timer.
     pub fn new() -> Self {
         Self::default()
     }
@@ -41,6 +42,7 @@ impl PhaseTimer {
         self.count += 1;
     }
 
+    /// Zero the accumulated time and count.
     pub fn reset(&mut self) {
         self.total_ns = 0;
         self.count = 0;

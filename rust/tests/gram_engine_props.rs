@@ -2,7 +2,7 @@
 //! against direct kernel evaluation, and the cache-determinism contract
 //! (cache on ⇒ bitwise-identical blocks and solver outputs).
 
-use kcd::comm::{run_ranks, AllreduceAlgo};
+use kcd::comm::{run_ranks, AllreduceAlgo, Communicator};
 use kcd::costmodel::Ledger;
 use kcd::data::{gen_dense_classification, gen_uniform_sparse, Dataset, SynthParams, Task};
 use kcd::dense::Mat;

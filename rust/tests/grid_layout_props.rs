@@ -1,0 +1,397 @@
+//! Property suite for the 2D process-grid gram layout
+//! (`gram::Layout::Grid`, `solvers::GridGram`), pinning the acceptance
+//! matrix of the grid determinism contract (see `crate::gram`):
+//!
+//! * **1D ≡ 2D bitwise** — for every `(pr, pc)` factorization of
+//!   `P ∈ {2, …, 12}`, a `Grid{pr, pc}` solve over `P` ranks returns α
+//!   bit-identical to the 1D column-shard solve over `pc` ranks (the
+//!   grid keeps the 1D path's `pc` feature shards and reduce tree and
+//!   adds row parallelism around them; `Grid{1, P}` *is* the 1D path).
+//!   Crossed with cache on/off and threads {1, 4} on a sub-matrix, plus
+//!   the CI lane's `THREADS` value.
+//! * **Row-block invariance** — the block-cyclic block size changes
+//!   ownership, traffic and wall time, never a bit of the result.
+//! * **Ledger cross-validation** — the column-subcommunicator (reduce)
+//!   traffic matches the message-free `allreduce_counts_per_rank`
+//!   replica over `pc` ranks, rank by rank, and the row allgather
+//!   matches `allgatherv_counts_per_rank`; the reduce payload therefore
+//!   scales with `pc` (not `P`).
+
+use kcd::comm::{run_ranks, AllreduceAlgo, CommStats, Communicator};
+use kcd::coordinator::scaling::{allgatherv_counts_per_rank, allreduce_counts_per_rank};
+use kcd::coordinator::{run_distributed, ProblemSpec, SolverSpec};
+use kcd::costmodel::{Ledger, MachineProfile};
+use kcd::data::{gen_dense_classification, gen_uniform_sparse, Dataset, SynthParams, Task};
+use kcd::dense::Mat;
+use kcd::gram::block_cyclic_rows;
+use kcd::kernelfn::Kernel;
+use kcd::rng::Pcg;
+use kcd::solvers::{GramOracle, GridGram, SvmVariant};
+use kcd::testkit;
+
+/// Every (pr, pc) with pr·pc == p, in deterministic order.
+fn factorizations(p: usize) -> Vec<(usize, usize)> {
+    (1..=p).filter(|pr| p % pr == 0).map(|pr| (pr, p / pr)).collect()
+}
+
+fn svm_problem() -> ProblemSpec {
+    ProblemSpec::Svm {
+        c: 1.0,
+        variant: SvmVariant::L1,
+    }
+}
+
+/// Solver-level α of a 1D run at `p` ranks (serial for p = 1).
+fn alpha_1d(ds: &Dataset, problem: &ProblemSpec, solver: &SolverSpec, p: usize) -> Vec<f64> {
+    run_distributed(
+        ds,
+        Kernel::paper_rbf(),
+        problem,
+        solver,
+        p,
+        AllreduceAlgo::Rabenseifner,
+        &MachineProfile::cray_ex(),
+    )
+    .alpha
+}
+
+/// The headline acceptance property: every factorization of every
+/// `P ∈ {2, …, 12}` replays the 1D bits of its `pc`, for both problems.
+#[test]
+fn prop_grid_solve_bitwise_equals_1d_over_pc_for_all_factorizations() {
+    let ds = gen_dense_classification(24, 16, 0.05, 55);
+    let problems = [svm_problem(), ProblemSpec::Krr { lambda: 1.0, b: 2 }];
+    for problem in problems {
+        let base = SolverSpec {
+            s: 4,
+            h: 16,
+            seed: 9,
+            cache_rows: 0,
+            threads: 1,
+            grid: None,
+        };
+        // Memoize the 1D reference per pc (factorizations share them).
+        let mut refs: Vec<Option<Vec<f64>>> = vec![None; 13];
+        for p in 2..=12usize {
+            for (pr, pc) in factorizations(p) {
+                if refs[pc].is_none() {
+                    refs[pc] = Some(alpha_1d(&ds, &problem, &base, pc));
+                }
+                let reference = refs[pc].as_ref().unwrap();
+                let grid_solver = SolverSpec {
+                    grid: Some((pr, pc)),
+                    ..base
+                };
+                let alpha = alpha_1d(&ds, &problem, &grid_solver, p);
+                assert_eq!(
+                    &alpha, reference,
+                    "{problem:?} Grid{{{pr},{pc}}} must replay 1D@{pc} bits"
+                );
+            }
+        }
+    }
+}
+
+/// Cache and threads compose with the grid bitwise, including the CI
+/// lane's THREADS value — on a representative factorization sub-matrix
+/// (the full cross-product would dominate suite runtime).
+#[test]
+fn prop_grid_solve_bitwise_with_cache_and_threads() {
+    let ds = gen_dense_classification(24, 16, 0.05, 55);
+    let problem = svm_problem();
+    let base = SolverSpec {
+        s: 8,
+        h: 24,
+        seed: 11,
+        cache_rows: 0,
+        threads: 1,
+        grid: None,
+    };
+    let mut thread_counts = vec![1usize, 4];
+    let env = testkit::env_threads();
+    if !thread_counts.contains(&env) {
+        thread_counts.push(env);
+    }
+    for (pr, pc) in [(2usize, 2usize), (3, 2), (2, 3), (6, 2), (4, 3)] {
+        let reference = alpha_1d(&ds, &problem, &base, pc);
+        for &threads in &thread_counts {
+            for cache_rows in [0usize, 6] {
+                let solver = SolverSpec {
+                    cache_rows,
+                    threads,
+                    grid: Some((pr, pc)),
+                    ..base
+                };
+                let alpha = alpha_1d(&ds, &problem, &solver, pr * pc);
+                assert_eq!(
+                    alpha, reference,
+                    "Grid{{{pr},{pc}}} t={threads} cache={cache_rows}"
+                );
+            }
+        }
+    }
+}
+
+/// The sparse product path (transpose kernel) honors the same contract.
+#[test]
+fn prop_grid_solve_bitwise_on_sparse_data() {
+    let ds = gen_uniform_sparse(
+        SynthParams {
+            m: 30,
+            n: 200,
+            density: 0.05,
+            seed: 9,
+        },
+        Task::Classification,
+    );
+    let base = SolverSpec {
+        s: 4,
+        h: 16,
+        seed: 3,
+        cache_rows: 4,
+        threads: 1,
+        grid: None,
+    };
+    let problem = svm_problem();
+    for (pr, pc) in [(2usize, 2usize), (3, 2), (2, 4), (5, 2)] {
+        let reference = alpha_1d(&ds, &problem, &base, pc);
+        let solver = SolverSpec {
+            grid: Some((pr, pc)),
+            ..base
+        };
+        let alpha = alpha_1d(&ds, &problem, &solver, pr * pc);
+        assert_eq!(alpha, reference, "sparse Grid{{{pr},{pc}}}");
+    }
+}
+
+/// The block-cyclic block size is a pure wall-time/traffic knob: gram
+/// blocks are bitwise invariant across row_block values (element bits
+/// never depend on which row group owns a column).
+#[test]
+fn prop_grid_blocks_bitwise_invariant_in_row_block() {
+    let ds = gen_dense_classification(24, 16, 0.0, 5);
+    let m = ds.m();
+    let kernel = Kernel::paper_rbf();
+    let stream: Vec<Vec<usize>> = {
+        let mut rng = Pcg::seeded(0x91);
+        (0..6)
+            .map(|_| {
+                let k = rng.gen_range(1, 5);
+                (0..k).map(|_| rng.gen_below(m)).collect()
+            })
+            .collect()
+    };
+    let (pr, pc) = (3usize, 2usize);
+    let shards = ds.shard_cols(pc);
+    let run = |row_block: usize| -> Vec<f64> {
+        let shards = shards.clone();
+        let stream = &stream;
+        let outs = run_ranks(pr * pc, move |c| {
+            let shard = shards[c.rank() % pc].clone();
+            let mut grid = GridGram::with_opts(
+                shard,
+                kernel,
+                c,
+                AllreduceAlgo::Rabenseifner,
+                pr,
+                pc,
+                row_block,
+                0,
+                1,
+            );
+            let mut out = Vec::new();
+            for sample in stream {
+                let mut q = Mat::zeros(sample.len(), m);
+                grid.gram(sample, &mut q, &mut Ledger::new());
+                out.extend_from_slice(q.data());
+            }
+            out
+        });
+        for other in &outs[1..] {
+            assert_eq!(&outs[0], other, "ranks disagree");
+        }
+        outs.into_iter().next().unwrap()
+    };
+    let reference = run(1);
+    for row_block in [2usize, 3, 4, 7] {
+        assert_eq!(run(row_block), reference, "row_block={row_block}");
+    }
+}
+
+/// Ledger cross-validation: per-rank column-subcomm traffic matches the
+/// message-free allreduce replica over pc ranks at the grid's reduced
+/// payload, and the row allgather matches the ring replica — so the
+/// analytic ledger's "reduce traffic scales with pc" story is pinned to
+/// real messages.
+#[test]
+fn prop_grid_subcomm_traffic_matches_count_replicas() {
+    let ds = gen_dense_classification(24, 16, 0.0, 7);
+    let m = ds.m();
+    // Linear kernel: simplest epilogue, but the construction-time norms
+    // allreduce still runs (it does for every kernel), so the expected
+    // column traffic includes it.
+    let kernel = Kernel::Linear;
+    let row_block = 2usize;
+    // Distinct-row samples: with the cache off every sampled row is a
+    // miss, so each call's reduce payload is exactly k·|owned|.
+    let samples = [vec![0usize, 5, 9], vec![1usize, 2], vec![20usize, 3, 7, 11]];
+    for algo in [AllreduceAlgo::Rabenseifner, AllreduceAlgo::RecursiveDoubling] {
+        for (pr, pc) in [(2usize, 2usize), (2, 3), (3, 2), (4, 2)] {
+            let shards = ds.shard_cols(pc);
+            let owned_len: Vec<usize> = (0..pr)
+                .map(|g| block_cyclic_rows(m, pr, g, row_block).len())
+                .collect();
+            let stats = run_ranks(pr * pc, |c| {
+                let shard = shards[c.rank() % pc].clone();
+                let mut grid =
+                    GridGram::with_opts(shard, kernel, c, algo, pr, pc, row_block, 0, 1);
+                for sample in &samples {
+                    let mut q = Mat::zeros(sample.len(), m);
+                    grid.gram(sample, &mut q, &mut Ledger::new());
+                }
+                (grid.col_stats(), grid.row_stats(), grid.comm_stats())
+            });
+            for (rank, (col, row, total)) in stats.iter().enumerate() {
+                let (i, j) = (rank / pc, rank % pc);
+                // Column subcomm: one m-word norms allreduce plus one
+                // k·|owned_i|-word allreduce per gram call, at column
+                // rank j.
+                let mut expect_words = allreduce_counts_per_rank(m, pc, algo)[j].0;
+                let mut expect_rounds = allreduce_counts_per_rank(m, pc, algo)[j].1;
+                for sample in &samples {
+                    let counts =
+                        allreduce_counts_per_rank(sample.len() * owned_len[i], pc, algo);
+                    expect_words += counts[j].0;
+                    expect_rounds += counts[j].1;
+                }
+                assert_eq!(col.words, expect_words, "{algo:?} {pr}x{pc} rank {rank} col");
+                assert_eq!(col.rounds, expect_rounds, "{algo:?} {pr}x{pc} rank {rank}");
+                assert_eq!(col.allreduces, 1 + samples.len() as u64);
+                // Row subcomm: one ring allgatherv per gram call at row
+                // rank i, with per-group counts k·|owned_g|.
+                let mut expect_row_words = 0u64;
+                let mut expect_row_rounds = 0u64;
+                for sample in &samples {
+                    let counts: Vec<usize> =
+                        owned_len.iter().map(|&w| sample.len() * w).collect();
+                    let ring = allgatherv_counts_per_rank(&counts);
+                    expect_row_words += ring[i].0;
+                    expect_row_rounds += ring[i].1;
+                }
+                assert_eq!(row.words, expect_row_words, "{algo:?} {pr}x{pc} rank {rank} row");
+                assert_eq!(row.rounds, expect_row_rounds, "{algo:?} {pr}x{pc} rank {rank}");
+                // The oracle's total is the sequential-stage sum.
+                assert_eq!(*total, col.plus(*row), "{pr}x{pc} rank {rank} total");
+            }
+        }
+    }
+}
+
+/// Measured end to end: at fixed P, growing pr (shrinking pc) must
+/// strictly shrink the words the reduce collective moves — the grid's
+/// reason to exist — while α stays within tolerance of the serial solve.
+#[test]
+fn prop_reduce_traffic_shrinks_as_rows_grow() {
+    let ds = gen_dense_classification(32, 16, 0.05, 21);
+    let problem = svm_problem();
+    let machine = MachineProfile::cray_ex();
+    let base = SolverSpec {
+        s: 4,
+        h: 16,
+        seed: 13,
+        cache_rows: 0,
+        threads: 1,
+        grid: None,
+    };
+    let serial = run_distributed(
+        &ds,
+        Kernel::paper_rbf(),
+        &problem,
+        &base,
+        1,
+        AllreduceAlgo::Rabenseifner,
+        &machine,
+    )
+    .alpha;
+    let p = 8usize;
+    let mut col_words = Vec::new();
+    for pr in [1usize, 2, 4] {
+        let solver = SolverSpec {
+            grid: Some((pr, p / pr)),
+            ..base
+        };
+        let res = run_distributed(
+            &ds,
+            Kernel::paper_rbf(),
+            &problem,
+            &solver,
+            p,
+            AllreduceAlgo::Rabenseifner,
+            &machine,
+        );
+        testkit::assert_close(&res.alpha, &serial, 1e-9, &format!("pr={pr}"));
+        col_words.push(res.critical.comm_col.words);
+        // The ledger splits the grid traffic by subcommunicator.
+        assert_eq!(
+            res.critical.comm_col.words + res.critical.comm_row.words,
+            res.critical.comm.words,
+            "pr={pr}: col+row must compose the total"
+        );
+        if pr == 1 {
+            assert_eq!(res.critical.comm_row.words, 0, "pr=1 has no allgather");
+        }
+    }
+    assert!(
+        col_words[0] > col_words[1] && col_words[1] > col_words[2],
+        "reduce words must shrink as pr grows: {col_words:?}"
+    );
+}
+
+/// Grid runs also leave the gram-row cache effective: hits save measured
+/// words on both subcommunicators' critical path, bit-identically.
+#[test]
+fn prop_grid_cache_saves_measured_words_bitwise() {
+    let ds = gen_dense_classification(24, 12, 0.05, 33);
+    let problem = svm_problem();
+    let machine = MachineProfile::cray_ex();
+    let run = |cache_rows: usize| {
+        run_distributed(
+            &ds,
+            Kernel::paper_rbf(),
+            &problem,
+            &SolverSpec {
+                s: 8,
+                h: 48,
+                seed: 7,
+                cache_rows,
+                threads: 1,
+                grid: Some((2, 3)),
+            },
+            6,
+            AllreduceAlgo::Rabenseifner,
+            &machine,
+        )
+    };
+    let plain = run(0);
+    let cached = run(16);
+    assert_eq!(plain.alpha, cached.alpha, "cache must be bitwise-transparent");
+    assert!(cached.critical.cache.hits > 0);
+    assert!(
+        cached.critical.comm.words < plain.critical.comm.words,
+        "cached grid run must send fewer words: {} !< {}",
+        cached.critical.comm.words,
+        plain.critical.comm.words
+    );
+}
+
+/// CommStats helper used by the traffic test.
+#[test]
+fn comm_stats_plus_composes() {
+    let a = CommStats {
+        msgs: 1,
+        words: 2,
+        rounds: 3,
+        allreduces: 4,
+    };
+    assert_eq!(a.plus(CommStats::default()), a);
+}

@@ -44,6 +44,7 @@ fn libsvm_roundtrip_through_distributed_solver() {
             seed: 5,
             cache_rows: 0,
             threads: 1,
+            grid: None,
         },
         4,
         AllreduceAlgo::Rabenseifner,
@@ -99,6 +100,7 @@ fn solver_result_is_algorithm_invariant() {
         seed: 3,
         cache_rows: 0,
         threads: 1,
+        grid: None,
     };
     let reference = run_serial(&ds, Kernel::paper_poly(), &problem, &solver, &machine).alpha;
     for algo in [
@@ -135,6 +137,7 @@ fn gap_series_final_point_matches_distributed_final_gap() {
             seed: 99,
             cache_rows: 0,
             threads: 1,
+            grid: None,
         },
         4,
         AllreduceAlgo::Rabenseifner,
@@ -198,6 +201,7 @@ fn sweep_engines_agree_at_overlapping_p() {
         p_list: vec![4],
         s_list: vec![4, 8],
         t_list: vec![1],
+        pr: 1,
         h: 32,
         seed: 77,
         algo: AllreduceAlgo::Rabenseifner,

@@ -9,7 +9,7 @@
 //! every thread-count sweep via `testkit::env_threads`, so the suite
 //! also runs at the lane's parallelism level.
 
-use kcd::comm::{run_ranks, AllreduceAlgo};
+use kcd::comm::{run_ranks, AllreduceAlgo, Communicator};
 use kcd::costmodel::Ledger;
 use kcd::data::{gen_dense_classification, gen_uniform_sparse, Dataset, SynthParams, Task};
 use kcd::dense::Mat;
@@ -286,6 +286,7 @@ fn prop_distributed_sstep_solve_bitwise_with_threads() {
         seed: 9,
         cache_rows: 0,
         threads: 1,
+        grid: None,
     };
     for p in [2usize, 3] {
         let reference = run_distributed(
