@@ -58,6 +58,7 @@ fn ablation_allreduce(quick: bool) {
             seed: 1,
             algo,
             measured_limit: 0,
+            auto_tune: false,
         };
         let rows = sweep(&ds, Kernel::paper_rbf(), &problem, &cfg, &machine);
         let r = &rows[0];
@@ -220,6 +221,7 @@ fn ablation_machine(quick: bool) {
         seed: 31,
         algo: AllreduceAlgo::Rabenseifner,
         measured_limit: 0,
+        auto_tune: false,
     };
     let mut speedups = Vec::new();
     for machine in [MachineProfile::cray_ex(), MachineProfile::cloud()] {

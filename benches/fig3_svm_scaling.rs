@@ -37,6 +37,7 @@ fn main() {
         seed: 41,
         algo: AllreduceAlgo::Rabenseifner,
         measured_limit: if quick { 2 } else { 8 },
+        auto_tune: false,
     };
     // synthetic runs at full published scale by default (m = 2000 keeps
     // its allreduce messages bandwidth-relevant, the paper's regime);

@@ -44,6 +44,7 @@ fn main() {
         seed: 5,
         algo: AllreduceAlgo::Rabenseifner,
         measured_limit: 0, // projected engine throughout (P ≥ 128)
+        auto_tune: false,
     };
     let rows = sweep(&ds, Kernel::paper_rbf(), &problem, &cfg, &machine);
     print!("{}", scaling_table(&rows).markdown());

@@ -30,6 +30,7 @@ fn main() {
         seed: 6,
         algo: AllreduceAlgo::Rabenseifner,
         measured_limit: 0,
+        auto_tune: false,
     };
     let rows = sweep(&ds, Kernel::paper_rbf(), &problem, &cfg, &machine);
     print!("{}", scaling_table(&rows).markdown());

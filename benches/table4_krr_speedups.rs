@@ -49,6 +49,7 @@ fn main() {
                     seed: 17,
                     algo: AllreduceAlgo::Rabenseifner,
                     measured_limit: 0, // projected engine at these P
+                    auto_tune: false,
                 };
                 let rows = sweep(
                     &ds,

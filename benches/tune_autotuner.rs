@@ -1,0 +1,88 @@
+//! Auto-tuner showcase: ranked `(pr, pc, t, s)` plans for the paper's
+//! headline regimes on both machine profiles, plus the tuner's own cost
+//! (wall-clock per plan — it must stay interactive, since `tune` is a
+//! CLI command).
+//!
+//! The interesting reproduction story: the latency-bound duke regime
+//! should tune to a large `s` (the paper's 9.8× case), the
+//! bandwidth-bound news20 K-RR regime to a small one (the ~1.14× case),
+//! and the cloud profile — two orders of magnitude worse latency —
+//! should push every dataset's chosen `s` up.
+
+use kcd::bench_harness::{bench, black_box, quick_mode, section, BenchConfig};
+use kcd::coordinator::ProblemSpec;
+use kcd::costmodel::MachineProfile;
+use kcd::data::paper_dataset;
+use kcd::kernelfn::Kernel;
+use kcd::solvers::SvmVariant;
+use kcd::tune::{tune, tune_table, TuneRequest};
+
+fn main() {
+    let quick = quick_mode();
+    section("Auto-tuned plans — paper regimes × machine profiles");
+    let h = if quick { 64 } else { 512 };
+    let p = if quick { 64 } else { 512 };
+    let cases: [(&str, f64, ProblemSpec); 2] = [
+        (
+            "duke",
+            1.0,
+            ProblemSpec::Svm {
+                c: 1.0,
+                variant: SvmVariant::L1,
+            },
+        ),
+        (
+            "news20",
+            if quick { 0.05 } else { 0.25 },
+            ProblemSpec::Krr { lambda: 1.0, b: 4 },
+        ),
+    ];
+    let machines = [MachineProfile::cray_ex(), MachineProfile::cloud()];
+    let mut chosen_s: Vec<(String, usize)> = Vec::new();
+    for (name, scale, problem) in &cases {
+        let ds = paper_dataset(name).unwrap().generate_scaled(*scale);
+        for machine in &machines {
+            let mut req = TuneRequest::new(p, h);
+            req.s_max = 256;
+            let plan = tune(&ds, Kernel::paper_rbf(), problem, &req, machine);
+            let best = plan.best();
+            println!(
+                "\n### {} / {} on {} — P={p}, H={h} ({} candidates)",
+                ds.name,
+                problem.name(),
+                machine.name,
+                plan.candidates.len()
+            );
+            print!("{}", tune_table(&plan, 5).markdown());
+            println!("winner: {}", best.cli_hint(problem, h));
+            chosen_s.push((format!("{}/{}", ds.name, machine.name), best.s));
+        }
+    }
+    // The cloud profile must never choose a smaller s than cray-ex for
+    // the same dataset (α two orders of magnitude worse).
+    for pair in chosen_s.chunks(2) {
+        let (cray, cloud) = (&pair[0], &pair[1]);
+        println!("\nchosen s: {} = {}, {} = {}", cray.0, cray.1, cloud.0, cloud.1);
+        assert!(
+            cloud.1 >= cray.1,
+            "cloud latency must not shrink the tuned s: {chosen_s:?}"
+        );
+    }
+
+    section("Tuner cost — seconds per full plan (must stay interactive)");
+    let ds = paper_dataset("colon-cancer").unwrap().generate_scaled(0.5);
+    let problem = ProblemSpec::Svm {
+        c: 1.0,
+        variant: SvmVariant::L1,
+    };
+    let cfg = BenchConfig::default();
+    for p in [64usize, 512] {
+        let req = TuneRequest::new(p, h);
+        let machine = MachineProfile::cray_ex();
+        let r = bench(&format!("tune colon-cancer P={p}"), &cfg, || {
+            let plan = tune(&ds, Kernel::paper_rbf(), &problem, &req, &machine);
+            black_box(plan.candidates.len())
+        });
+        println!("{}", r.line());
+    }
+}

@@ -43,8 +43,13 @@ const KNOWN_FLAGS: &[(&str, bool /* takes a value */)] = &[
     ("t-list", true),
     ("grid", true),
     ("grid-rows", true),
+    ("s-max", true),
+    ("t-max", true),
+    ("top", true),
     ("config", true),
     ("csv", false),
+    ("json", false),
+    ("auto-tune", false),
     ("quick", false),
     ("force", false),
     ("verbose", false),
@@ -163,6 +168,9 @@ COMMANDS:
   convergence   Duality-gap / relative-error series, classical vs s-step.
   scaling       Strong-scaling sweep over P (measured + projected engines).
   breakdown     Per-phase runtime breakdown as s varies at fixed P.
+  tune          Auto-tune (pr, pc, t, s) for a machine profile from the
+                cost model; ranked plan with a latency/bandwidth/compute
+                split per candidate.
   datasets      List the paper dataset registry.
   artifacts-check  Verify PJRT artifacts load and execute.
 
@@ -196,8 +204,21 @@ COMMON FLAGS:
                     bitwise-identical to the 1D layout over pc ranks).
   --grid-rows <pr>  scaling only: run every sweep point P divisible by
                     pr as a pr×(P/pr) grid (1 = the 1D sweep)   [1]
+  --s-max <n>       tune: bound of the power-of-two s candidate grid
+                    (--s-list overrides with an explicit list)  [256]
+  --t-max <n>       tune: bound on thread candidates (always also
+                    capped at the machine's cores-per-rank)  [cores]
+  --top <n>         tune: candidates shown in the ranked report  [10]
+  --json            tune: emit the machine-readable JSON report.
+  --auto-tune       scaling: append the tuner's predicted-best
+                    (pr, pc, t, s) row per sweep point.
   --csv             Emit CSV instead of markdown tables.
   --config <file>   TOML-subset config (flags override).
+
+--machine accepts per-parameter overrides for your own machine, e.g.
+cray-ex:alpha=1e-5,beta=4e-9,gamma=2.5e-10,cores=32 (alpha = seconds
+per message, beta = per word, gamma = per flop); malformed or
+non-positive values are hard errors naming the key.
 
 Every value flag may also be given as a config-file key (lists as
 `p-list = [1, 2, 4]`); flags override the file. A key that is present
@@ -216,6 +237,7 @@ pub fn run(argv: Vec<String>) -> Result<String> {
         "convergence" => cmd_convergence(&args),
         "scaling" => cmd_scaling(&args),
         "breakdown" => cmd_breakdown(&args),
+        "tune" => cmd_tune(&args),
         "artifacts-check" => cmd_artifacts_check(),
         other => bail!("unknown command '{other}'\n\n{USAGE}"),
     }
@@ -234,7 +256,7 @@ fn load_config(args: &Args) -> Result<Config> {
     for key in [
         "dataset", "scale", "kernel", "problem", "c", "lambda", "b", "h", "s", "p", "algo",
         "machine", "seed", "gram-cache-rows", "threads", "grid", "grid-rows", "every",
-        "measured-limit",
+        "measured-limit", "s-max", "t-max", "top",
     ] {
         if let Some(v) = args.flag(key) {
             cfg.set(key, v);
@@ -352,11 +374,8 @@ fn kernel_from(cfg: &Config) -> Result<Kernel> {
 }
 
 fn machine_from(cfg: &Config) -> Result<MachineProfile> {
-    match cfg_str(cfg, "machine")?.unwrap_or("cray-ex") {
-        "cray-ex" => Ok(MachineProfile::cray_ex()),
-        "cloud" => Ok(MachineProfile::cloud()),
-        other => bail!("unknown --machine '{other}'"),
-    }
+    let spec = cfg_str(cfg, "machine")?.unwrap_or("cray-ex");
+    MachineProfile::parse(spec).map_err(|e| anyhow!(e))
 }
 
 fn algo_from(cfg: &Config) -> Result<AllreduceAlgo> {
@@ -390,6 +409,10 @@ fn solver_from(cfg: &Config) -> Result<SolverSpec> {
         seed: cfg_usize(cfg, "seed")?.unwrap_or(0x5EED) as u64,
         cache_rows: cfg_usize(cfg, "gram-cache-rows")?.unwrap_or(0),
         threads,
+        // The grid layout is per-command (it must be validated against
+        // the launch's rank count); commands that take --grid overwrite
+        // this via `grid_from`.
+        grid: None,
     })
 }
 
@@ -677,6 +700,7 @@ fn cmd_scaling(args: &Args) -> Result<String> {
         seed: cfg_usize(&cfg, "seed")?.unwrap_or(0x5EED) as u64,
         algo: algo_from(&cfg)?,
         measured_limit: cfg_usize(&cfg, "measured-limit")?.unwrap_or(8),
+        auto_tune: args.bool_flag("auto-tune"),
     };
     let rows = sweep(&ds, kernel, &problem, &sweep_cfg, &machine);
     let t = scaling_table(&rows);
@@ -727,6 +751,136 @@ fn cmd_breakdown(args: &Args) -> Result<String> {
     );
     out.push_str(&if args.bool_flag("csv") { t.csv() } else { t.markdown() });
     Ok(out)
+}
+
+fn cmd_tune(args: &Args) -> Result<String> {
+    let cfg = load_config(args)?;
+    let problem = problem_from(&cfg)?;
+    let task = match problem {
+        ProblemSpec::Svm { .. } => Task::Classification,
+        ProblemSpec::Krr { .. } => Task::Regression,
+    };
+    let ds = dataset_from(&cfg, "colon-cancer", task)?;
+    let kernel = kernel_from(&cfg)?;
+    let machine = machine_from(&cfg)?;
+    let p = cfg_usize(&cfg, "p")?.unwrap_or(32);
+    ensure!(p >= 1, "invalid value for 'p': need at least one rank");
+    let h = cfg_usize(&cfg, "h")?.unwrap_or(256);
+    ensure!(h >= 1, "invalid value for 'h': need at least one iteration");
+    let s_max = cfg_usize(&cfg, "s-max")?.unwrap_or(256);
+    ensure!(s_max >= 1, "invalid value for 's-max': need at least 1");
+    let t_max = cfg_usize(&cfg, "t-max")?.unwrap_or(machine.cores_per_rank);
+    ensure!(
+        t_max >= 1,
+        "invalid value for 't-max': need at least one thread"
+    );
+    let top = cfg_usize(&cfg, "top")?.unwrap_or(10);
+    ensure!(top >= 1, "invalid value for 'top': need at least one row");
+    let measured_limit = cfg_usize(&cfg, "measured-limit")?.unwrap_or(8);
+
+    let mut req = crate::tune::TuneRequest::new(p, h);
+    req.s_max = s_max;
+    req.t_max = t_max;
+    // Explicit candidate lists (flag or config) override the bounded
+    // power-of-two grids.
+    req.s_list = list_from(args, &cfg, "s-list", &[])?;
+    req.t_list = list_from(args, &cfg, "t-list", &[])?;
+    req.algo = algo_from(&cfg)?;
+    req.seed = cfg_usize(&cfg, "seed")?.unwrap_or(0x5EED) as u64;
+
+    let plan = crate::tune::tune(&ds, kernel, &problem, &req, &machine);
+    let best = plan.best();
+    // The trust layer: replay the winner on real ranks and compare
+    // traffic word for word — feasible exactly when the measured
+    // scaling engine would be (P within the measured budget).
+    let xval = (p <= measured_limit).then(|| {
+        crate::tune::cross_validate(&ds, kernel, &problem, best, &req, &machine)
+    });
+    if args.bool_flag("json") {
+        return Ok(crate::tune::tune_json(&plan, top, xval.as_ref()));
+    }
+    // Print the actual coefficients, not just the profile tag: with
+    // `--machine name:alpha=..` overrides the base name alone would
+    // misattribute the plan to the stock profile.
+    let mut out = format!(
+        "auto-tune: {} / {} / {} on {} (α={:.1e} s/msg, β={:.1e} s/word, γ={:.1e} s/flop, \
+         cores={}) — P={p}, H={h}, algo={} ({} candidates)\n",
+        ds.name,
+        problem.name(),
+        kernel.name(),
+        machine.name,
+        machine.phi,
+        machine.beta,
+        machine.gamma,
+        machine.cores_per_rank,
+        plan.algo.name(),
+        plan.candidates.len(),
+    );
+    let t = crate::tune::tune_table(&plan, top);
+    out.push_str(&if args.bool_flag("csv") { t.csv() } else { t.markdown() });
+    out.push_str(&format!(
+        "best: layout={}, t={}, s={} → {:.4e} s predicted ({}-bound)\n",
+        best.layout_tag(),
+        best.t,
+        best.s,
+        best.predicted.total_secs(),
+        best.predicted.dominant(),
+    ));
+    out.push_str(&format!("run it: {}\n", tune_run_line(best, &cfg, &problem, &plan, h)?));
+    match xval {
+        Some(check) => out.push_str(&format!(
+            "cross-validated against measured ranks: {}\n",
+            check.summary()
+        )),
+        None => out.push_str(&format!(
+            "(not cross-validated: P={p} exceeds --measured-limit {measured_limit}; \
+             predictions rest on the count replicas pinned in `cargo test`)\n"
+        )),
+    }
+    Ok(out)
+}
+
+/// The full tune → train handoff line: the candidate's configuration
+/// (`Candidate::cli_hint`) plus the data/problem context flags, so
+/// running the printed command verbatim trains exactly what was tuned —
+/// not the train commands' defaults (which differ from tune's).
+fn tune_run_line(
+    best: &crate::tune::Candidate,
+    cfg: &Config,
+    problem: &ProblemSpec,
+    plan: &crate::tune::TunedPlan,
+    h: usize,
+) -> Result<String> {
+    let mut line = best.cli_hint(problem, h);
+    let dataset = cfg_str(cfg, "dataset")?.unwrap_or("colon-cancer");
+    line.push_str(&format!(" --dataset {dataset}"));
+    let scale = cfg_f64(cfg, "scale")?.unwrap_or(1.0);
+    if scale != 1.0 {
+        line.push_str(&format!(" --scale {scale}"));
+    }
+    if let Some(kernel) = cfg_str(cfg, "kernel")? {
+        line.push_str(&format!(" --kernel {kernel}"));
+    }
+    match *problem {
+        ProblemSpec::Svm { c, variant } => {
+            if matches!(variant, SvmVariant::L2) {
+                line.push_str(" --problem svm-l2");
+            }
+            if c != 1.0 {
+                line.push_str(&format!(" --c {c}"));
+            }
+        }
+        ProblemSpec::Krr { lambda, b } => {
+            line.push_str(&format!(" --lambda {lambda} --b {b}"));
+        }
+    }
+    if let Some(machine) = cfg_str(cfg, "machine")? {
+        line.push_str(&format!(" --machine {machine}"));
+    }
+    if plan.algo != AllreduceAlgo::Rabenseifner {
+        line.push_str(&format!(" --algo {}", plan.algo.name()));
+    }
+    Ok(line)
 }
 
 fn cmd_artifacts_check() -> Result<String> {
@@ -1006,6 +1160,107 @@ mod tests {
         .unwrap_err();
         assert!(format!("{err:#}").contains("'t-list'"), "{err:#}");
         std::fs::remove_file(&path).ok();
+    }
+
+    /// tune runs end to end: ranked table, handoff command line, and —
+    /// at P within the measured budget — a bitwise traffic
+    /// cross-validation of the winner against real ranks.
+    #[test]
+    fn tune_produces_ranked_plan_and_cross_validates() {
+        let out = run(argv(
+            "tune --dataset diabetes --scale 0.1 --p 8 --h 32 --s-max 8 --t-max 4 --top 5",
+        ))
+        .unwrap();
+        assert!(out.contains("auto-tune:"), "{out}");
+        assert!(out.contains("compute (s)"), "{out}");
+        assert!(out.contains("best: layout="), "{out}");
+        assert!(out.contains("run it: kcd train-svm --p 8"), "{out}");
+        // The handoff line must carry the data context, so running it
+        // verbatim trains what was tuned (train-svm's default dataset
+        // differs from tune's).
+        assert!(out.contains("--dataset diabetes"), "{out}");
+        assert!(out.contains("--scale 0.1"), "{out}");
+        // The header shows the machine coefficients, not just the tag.
+        assert!(out.contains("s/msg"), "{out}");
+        assert!(out.contains("traffic exact"), "{out}");
+        // Past the measured budget the report says so instead.
+        let far = run(argv(
+            "tune --dataset diabetes --scale 0.1 --p 64 --h 32 --s-max 8 --t-max 2",
+        ))
+        .unwrap();
+        assert!(far.contains("not cross-validated"), "{far}");
+    }
+
+    #[test]
+    fn tune_json_is_machine_readable() {
+        let out = run(argv(
+            "tune --dataset diabetes --scale 0.1 --p 16 --h 32 --s-max 4 --t-max 2 --json",
+        ))
+        .unwrap();
+        assert!(out.starts_with('{') && out.trim_end().ends_with('}'), "{out}");
+        assert!(out.contains("\"candidates\":["), "{out}");
+        assert!(out.contains("\"latency_secs\":"), "{out}");
+        // P = 16 exceeds the default measured limit: no cross-validation.
+        assert!(!out.contains("cross_validation"), "{out}");
+        let near = run(argv(
+            "tune --dataset diabetes --scale 0.1 --p 4 --h 16 --s-max 4 --t-max 2 --json",
+        ))
+        .unwrap();
+        assert!(near.contains("\"cross_validation\""), "{near}");
+        assert!(near.contains("\"traffic_exact\":true"), "{near}");
+    }
+
+    #[test]
+    fn tune_flags_are_strictly_validated() {
+        for (argv_str, key) in [
+            ("tune --s-max 0", "s-max"),
+            ("tune --s-max 2.5", "s-max"),
+            ("tune --t-max 0", "t-max"),
+            ("tune --top 0", "top"),
+            ("tune --p 0", "p"),
+            ("tune --h 0", "h"),
+            ("tune --machine cray-ex:alpha=-1", "machine.alpha"),
+            ("tune --machine cray-ex:beta=slow", "machine.beta"),
+            ("tune --machine cray-ex:gamma=0", "machine.gamma"),
+            ("tune --machine cray-ex:cores=0", "machine.cores"),
+            ("tune --machine laptop", "machine"),
+        ] {
+            let err = run(argv(argv_str)).expect_err(argv_str);
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains(&format!("'{key}'")),
+                "{argv_str}: error must name '{key}', got: {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn tune_accepts_machine_overrides_and_explicit_lists() {
+        let out = run(argv(
+            "tune --dataset diabetes --scale 0.1 --p 8 --h 32 --s-list 2,8 --t-list 1,2 \
+             --machine cray-ex:alpha=5e-3,cores=4",
+        ))
+        .unwrap();
+        // The overridden coefficient is visible in the header (the tag
+        // alone would misattribute the plan to the stock profile).
+        assert!(out.contains("α=5.0e-3"), "{out}");
+        // 4 factorizations of 8 × s {1, 2, 8} × t {1, 2}.
+        assert!(out.contains("(24 candidates)"), "{out}");
+        // And the handoff line reproduces the override spec.
+        assert!(out.contains("--machine cray-ex:alpha=5e-3,cores=4"), "{out}");
+    }
+
+    #[test]
+    fn scaling_auto_tune_appends_tuned_row() {
+        let base = "scaling --dataset colon-cancer --scale 0.3 --h 16 --p-list 4 --s-list 4 \
+                    --measured-limit 4";
+        let plain = run(argv(base)).unwrap();
+        assert!(!plain.contains("auto"), "{plain}");
+        let tuned = run(argv(&format!("{base} --auto-tune"))).unwrap();
+        assert!(tuned.contains("tuned"), "{tuned}");
+        assert!(tuned.contains("auto"), "{tuned}");
+        let data_rows = tuned.lines().filter(|l| l.contains("measured")).count();
+        assert_eq!(data_rows, 2, "{tuned}");
     }
 
     #[test]

@@ -87,6 +87,29 @@ impl Default for SolverSpec {
     }
 }
 
+impl SolverSpec {
+    /// The spec that runs an auto-tuner candidate (`crate::tune`):
+    /// read-only plan → spec handoff — `s`, `threads` and the grid
+    /// factorization come from the candidate, while `h`, `seed` and the
+    /// cache stay the caller's run parameters. Launch it with
+    /// `run_distributed(.., candidate.ranks(), ..)`.
+    pub fn from_candidate(
+        candidate: &crate::tune::Candidate,
+        h: usize,
+        seed: u64,
+        cache_rows: usize,
+    ) -> SolverSpec {
+        SolverSpec {
+            s: candidate.s,
+            h,
+            seed,
+            cache_rows,
+            threads: candidate.t,
+            grid: candidate.grid(),
+        }
+    }
+}
+
 /// Result of one run.
 pub struct RunResult {
     /// Final dual solution (identical on every rank; rank 0's copy).

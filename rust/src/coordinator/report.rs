@@ -101,7 +101,8 @@ fn engine_tag(e: Engine) -> &'static str {
 /// factorization — `-` for the 1D layout, `PRxPC` for 2D points).
 pub fn scaling_table(rows: &[SweepRow]) -> Table {
     let mut t = Table::new(vec![
-        "P", "t", "grid", "engine", "classical (s)", "s-step best (s)", "best s", "speedup",
+        "P", "t", "grid", "engine", "tuned", "classical (s)", "s-step best (s)", "best s",
+        "speedup",
     ]);
     for r in rows {
         t.row(vec![
@@ -111,6 +112,7 @@ pub fn scaling_table(rows: &[SweepRow]) -> Table {
                 .map(|(pr, pc)| format!("{pr}x{pc}"))
                 .unwrap_or_else(|| "-".to_string()),
             engine_tag(r.engine).to_string(),
+            if r.tuned { "auto" } else { "-" }.to_string(),
             format!("{:.4e}", r.classical.total_secs()),
             format!("{:.4e}", r.best_sstep.total_secs()),
             r.best_s.to_string(),

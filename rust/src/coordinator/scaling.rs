@@ -79,6 +79,14 @@ pub struct SweepConfig {
     pub algo: AllreduceAlgo,
     /// Ranks up to this bound run measured; beyond it, projected.
     pub measured_limit: usize,
+    /// Run the cost-model auto-tuner ([`crate::tune`]) per sweep point
+    /// and append its predicted-best `(pr, pc, t, s)` configuration as
+    /// an extra row alongside the user grid (marked in
+    /// [`SweepRow::tuned`]). Candidates are drawn from this sweep's
+    /// `s_list` / `t_list` and the factorizations of each `P`; the
+    /// tuned row runs on the same engine rule (`measured_limit`) as the
+    /// rest of the sweep.
+    pub auto_tune: bool,
 }
 
 impl Default for SweepConfig {
@@ -92,6 +100,7 @@ impl Default for SweepConfig {
             seed: 0x5CA1E,
             algo: AllreduceAlgo::Rabenseifner,
             measured_limit: 8,
+            auto_tune: false,
         }
     }
 }
@@ -117,6 +126,10 @@ pub struct SweepRow {
     pub best_s: usize,
     /// All (s → projection) points, for the breakdown-style detail plots.
     pub sstep_points: Vec<(usize, Projection)>,
+    /// True when this row is the auto-tuner's predicted-best
+    /// configuration ([`SweepConfig::auto_tune`]) rather than a point
+    /// of the user's sweep grid.
+    pub tuned: bool,
 }
 
 impl SweepRow {
@@ -174,45 +187,16 @@ pub fn sweep(
         // solve/model each (P, s) point ONCE and re-project it per t —
         // a measured hybrid sweep costs one distributed run per s, not
         // one per (s, t).
-        let ledger_for = |s: usize| -> Ledger {
-            match engine {
-                Engine::Measured => {
-                    // Cache off: the projected engine replicates the
-                    // uncached counts (hit patterns are data-dependent
-                    // and cannot be projected analytically).
-                    let solver = SolverSpec {
-                        s,
-                        h: cfg.h,
-                        seed: cfg.seed,
-                        cache_rows: 0,
-                        threads: 1,
-                        grid,
-                    };
-                    run_distributed(ds, kernel, problem, &solver, p, cfg.algo, machine).critical
-                }
-                Engine::Projected => match grid {
-                    Some((pr, pc)) => grid_analytic_ledger(
-                        ds,
-                        kernel,
-                        problem,
-                        s,
-                        cfg.h,
-                        pr,
-                        pc,
-                        crate::gram::DEFAULT_ROW_BLOCK,
-                        cfg.algo,
-                    ),
-                    None => analytic_ledger(ds, kernel, problem, s, cfg.h, p, cfg.algo),
-                },
-            }
-        };
-        let classical_ledger = ledger_for(1);
+        let classical_ledger = point_ledger(ds, kernel, problem, cfg, machine, engine, grid, p, 1);
         let mut sstep_ledgers = Vec::with_capacity(cfg.s_list.len());
         for &s in &cfg.s_list {
             if s <= 1 || s > cfg.h {
                 continue;
             }
-            sstep_ledgers.push((s, ledger_for(s)));
+            sstep_ledgers.push((
+                s,
+                point_ledger(ds, kernel, problem, cfg, machine, engine, grid, p, s),
+            ));
         }
         for &t in t_list {
             let classical = machine.project_hybrid(&classical_ledger, t);
@@ -236,10 +220,111 @@ pub fn sweep(
                 best_sstep: best,
                 best_s,
                 sstep_points,
+                tuned: false,
             });
         }
     }
+    if cfg.auto_tune {
+        for &p in &cfg.p_list {
+            rows.push(tuned_row(ds, kernel, problem, cfg, machine, t_list, p));
+        }
+    }
     rows
+}
+
+/// One point's critical-path ledger under the sweep's engine rule:
+/// measured (real ranks, cache off — the projected engine replicates
+/// the uncached counts; hit patterns are data-dependent and cannot be
+/// projected analytically) or the analytic count replica. Shared by the
+/// sweep grid and the auto-tuned extra rows so the two cannot drift.
+#[allow(clippy::too_many_arguments)]
+fn point_ledger(
+    ds: &Dataset,
+    kernel: Kernel,
+    problem: &ProblemSpec,
+    cfg: &SweepConfig,
+    machine: &MachineProfile,
+    engine: Engine,
+    grid: Option<(usize, usize)>,
+    p: usize,
+    s: usize,
+) -> Ledger {
+    match engine {
+        Engine::Measured => {
+            let solver = SolverSpec {
+                s,
+                h: cfg.h,
+                seed: cfg.seed,
+                cache_rows: 0,
+                threads: 1,
+                grid,
+            };
+            run_distributed(ds, kernel, problem, &solver, p, cfg.algo, machine).critical
+        }
+        Engine::Projected => match grid {
+            Some((pr, pc)) => grid_analytic_ledger(
+                ds,
+                kernel,
+                problem,
+                s,
+                cfg.h,
+                pr,
+                pc,
+                crate::gram::DEFAULT_ROW_BLOCK,
+                cfg.algo,
+            ),
+            None => analytic_ledger(ds, kernel, problem, s, cfg.h, p, cfg.algo),
+        },
+    }
+}
+
+/// The auto-tuner's predicted-best configuration for sweep point `p`,
+/// evaluated as a sweep row ([`SweepConfig::auto_tune`]): the tuner
+/// picks `(pr, pc, t, s)` from this sweep's candidate lists, and the
+/// row's projections are then produced by the same engine rule as the
+/// user grid — so a measured tuned row really ran the tuned layout.
+fn tuned_row(
+    ds: &Dataset,
+    kernel: Kernel,
+    problem: &ProblemSpec,
+    cfg: &SweepConfig,
+    machine: &MachineProfile,
+    t_list: &[usize],
+    p: usize,
+) -> SweepRow {
+    let mut req = crate::tune::TuneRequest::new(p, cfg.h);
+    req.s_list = cfg.s_list.clone();
+    req.t_list = t_list.to_vec();
+    req.algo = cfg.algo;
+    req.seed = cfg.seed;
+    let plan = crate::tune::tune(ds, kernel, problem, &req, machine);
+    let best = plan.best();
+    let grid = best.grid();
+    let engine = if p <= cfg.measured_limit {
+        Engine::Measured
+    } else {
+        Engine::Projected
+    };
+    let classical_ledger = point_ledger(ds, kernel, problem, cfg, machine, engine, grid, p, 1);
+    let classical = machine.project_hybrid(&classical_ledger, best.t);
+    let (best_sstep, sstep_points) = if best.s > 1 {
+        let ledger = point_ledger(ds, kernel, problem, cfg, machine, engine, grid, p, best.s);
+        let proj = machine.project_hybrid(&ledger, best.t);
+        (proj, vec![(best.s, proj)])
+    } else {
+        (classical, Vec::new())
+    };
+    SweepRow {
+        p,
+        t: best.t,
+        grid,
+        engine,
+        classical,
+        best_sstep,
+        best_s: best.s,
+        sstep_points,
+        tuned: true,
+    }
 }
 
 /// Replicate the measured ledger analytically: identical flop accounting
@@ -785,6 +870,7 @@ mod tests {
             seed: 1,
             algo: AllreduceAlgo::Rabenseifner,
             measured_limit: 4,
+            auto_tune: false,
         };
         let machine = MachineProfile::cray_ex();
         let rows = sweep(&ds, Kernel::paper_rbf(), &svm_problem(), &cfg, &machine);
@@ -821,6 +907,7 @@ mod tests {
             seed: 2,
             algo: AllreduceAlgo::Rabenseifner,
             measured_limit: 0, // pure projection, fast
+            auto_tune: false,
         };
         let mut speedups = Vec::new();
         for b in [1usize, 4, 16] {
@@ -856,6 +943,7 @@ mod tests {
             seed: 7,
             algo: AllreduceAlgo::Rabenseifner,
             measured_limit: 8,
+            auto_tune: false,
         };
         let measured = sweep(&ds, Kernel::paper_rbf(), &svm_problem(), &cfg, &machine);
         assert_eq!(measured.len(), 3);
@@ -1084,6 +1172,7 @@ mod tests {
             seed: 7,
             algo: AllreduceAlgo::Rabenseifner,
             measured_limit: 4, // P=2 measured, P=16 projected
+            auto_tune: false,
         };
         let rows = sweep(&ds, Kernel::paper_rbf(), &svm_problem(), &cfg, &machine);
         assert_eq!(rows.len(), 4);
@@ -1110,6 +1199,60 @@ mod tests {
             );
             assert!(r4.classical.total_secs() < r1.classical.total_secs());
         }
+    }
+
+    /// The auto-tune hook: `auto_tune` appends one tuned row per sweep
+    /// point, drawn from the sweep's own candidate lists, on the same
+    /// engine rule as the grid — and the tuned row can never be worse
+    /// than the user grid's rows at the same P under the same model
+    /// (the tuner searched a superset of those configurations).
+    #[test]
+    fn auto_tune_appends_best_of_superset_rows() {
+        let ds = crate::data::gen_dense_classification(24, 16, 0.05, 12);
+        let machine = MachineProfile::cray_ex();
+        let cfg = SweepConfig {
+            p_list: vec![4, 16],
+            s_list: vec![4, 8],
+            t_list: vec![1, 4],
+            pr: 1,
+            h: 16,
+            seed: 7,
+            algo: AllreduceAlgo::Rabenseifner,
+            measured_limit: 4, // P=4 measured, P=16 projected
+            auto_tune: true,
+        };
+        let rows = sweep(&ds, Kernel::paper_rbf(), &svm_problem(), &cfg, &machine);
+        // 2 P × 2 t sweep rows + 2 tuned rows.
+        assert_eq!(rows.len(), 6);
+        let tuned: Vec<&SweepRow> = rows.iter().filter(|r| r.tuned).collect();
+        assert_eq!(tuned.len(), 2);
+        assert_eq!(tuned[0].p, 4);
+        assert_eq!(tuned[0].engine, Engine::Measured);
+        assert_eq!(tuned[1].p, 16);
+        assert_eq!(tuned[1].engine, Engine::Projected);
+        for tr in &tuned {
+            if let Some((pr, pc)) = tr.grid {
+                assert_eq!(pr * pc, tr.p, "tuned grid must factor P");
+            }
+            let best_grid_row = rows
+                .iter()
+                .filter(|r| !r.tuned && r.p == tr.p)
+                .map(|r| r.best_sstep.total_secs().min(r.classical.total_secs()))
+                .fold(f64::MAX, f64::min);
+            let tuned_secs = tr.best_sstep.total_secs().min(tr.classical.total_secs());
+            assert!(
+                tuned_secs <= best_grid_row * (1.0 + 1e-9),
+                "P={}: tuned {tuned_secs} worse than grid best {best_grid_row}",
+                tr.p
+            );
+        }
+        // Without the hook, no tuned rows appear.
+        let plain_cfg = SweepConfig {
+            auto_tune: false,
+            ..cfg
+        };
+        let plain = sweep(&ds, Kernel::paper_rbf(), &svm_problem(), &plain_cfg, &machine);
+        assert!(plain.iter().all(|r| !r.tuned));
     }
 
     /// The message-free count replica must agree with real traffic —

@@ -293,6 +293,91 @@ impl MachineProfile {
         }
     }
 
+    /// Parse a machine spec: a named profile (`cray-ex`, `cloud`),
+    /// optionally followed by `:key=value,key=value` overrides — e.g.
+    /// `cray-ex:alpha=1e-5,beta=4e-9,gamma=2.5e-10,cores=32`. Override
+    /// keys use the communication-model spelling: `alpha` is seconds per
+    /// message (Hockney `φ`), `beta` seconds per f64 word, `gamma`
+    /// seconds per flop, and `cores` the per-rank core budget the
+    /// auto-tuner may spend on threads.
+    ///
+    /// Validation follows the strict `Config::try_*` convention: a
+    /// present-but-malformed, non-finite, or non-positive value is a
+    /// hard error naming the key (`'machine.alpha'`), never a silent
+    /// fallback to the base profile's value.
+    pub fn parse(spec: &str) -> Result<MachineProfile, String> {
+        let (base, overrides) = match spec.split_once(':') {
+            Some((b, o)) => (b.trim(), Some(o)),
+            None => (spec.trim(), None),
+        };
+        let mut profile = match base {
+            "cray-ex" => MachineProfile::cray_ex(),
+            "cloud" => MachineProfile::cloud(),
+            other => {
+                return Err(format!(
+                    "invalid value for 'machine': unknown profile '{other}' \
+                     (known: cray-ex, cloud; overrides: \
+                     :alpha=..,beta=..,gamma=..,cores=..)"
+                ))
+            }
+        };
+        let Some(overrides) = overrides else {
+            return Ok(profile);
+        };
+        for pair in overrides.split(',') {
+            let pair = pair.trim();
+            let Some((key, raw)) = pair.split_once('=') else {
+                return Err(format!(
+                    "invalid value for 'machine': override '{pair}' is not key=value"
+                ));
+            };
+            let (key, raw) = (key.trim(), raw.trim());
+            match key {
+                "alpha" | "beta" | "gamma" => {
+                    let v: f64 = raw.parse().map_err(|_| {
+                        format!(
+                            "invalid value for 'machine.{key}': expected a number, got '{raw}'"
+                        )
+                    })?;
+                    if !v.is_finite() || v <= 0.0 {
+                        return Err(format!(
+                            "invalid value for 'machine.{key}': expected a positive \
+                             number of seconds, got '{raw}'"
+                        ));
+                    }
+                    match key {
+                        "alpha" => profile.phi = v,
+                        "beta" => profile.beta = v,
+                        _ => profile.gamma = v,
+                    }
+                }
+                "cores" => {
+                    let v: usize = raw.parse().map_err(|_| {
+                        format!(
+                            "invalid value for 'machine.cores': expected a positive \
+                             integer, got '{raw}'"
+                        )
+                    })?;
+                    if v == 0 {
+                        return Err(
+                            "invalid value for 'machine.cores': expected a positive \
+                             integer, got '0'"
+                                .to_string(),
+                        );
+                    }
+                    profile.cores_per_rank = v;
+                }
+                other => {
+                    return Err(format!(
+                        "invalid value for 'machine': unknown override key '{other}' \
+                         (known: alpha, beta, gamma, cores)"
+                    ))
+                }
+            }
+        }
+        Ok(profile)
+    }
+
     /// Words per message at which latency and bandwidth costs are equal —
     /// the machine-balance point that governs the optimal `s`.
     pub fn balance_words(&self) -> f64 {
@@ -323,6 +408,41 @@ impl MachineProfile {
         }
     }
 
+    /// Predict a configuration's running time from its critical-path
+    /// ledger, split into the Hockney model's three terms — the
+    /// auto-tuner's scoring function ([`crate::tune`]).
+    ///
+    /// This is the same arithmetic as [`Self::project_hybrid`] grouped
+    /// differently: the projection buckets seconds by *execution phase*
+    /// (so `Allreduce` mixes `β·words` with `φ·rounds`, and `Solve`
+    /// mixes `γ·flops` with the per-iteration overhead), while the
+    /// prediction buckets the identical terms by *model coefficient* —
+    /// compute (`γ`, including the BLAS-1 penalty, the thread split,
+    /// and the iteration-overhead floor), bandwidth (`β·words`) and
+    /// latency (`φ·rounds`). Totals agree to floating-point rounding;
+    /// a test pins the two within 1e-12 relative.
+    pub fn predict(&self, critical: &Ledger, threads: usize) -> Predicted {
+        let mut compute = 0.0;
+        for ph in Phase::ALL {
+            let mut secs = self.gamma * critical.flops(ph);
+            if ph == Phase::KernelCompute {
+                if critical.kernel_calls > 0.0 && critical.kernel_rows > 0.0 {
+                    let avg_rows = critical.kernel_rows / critical.kernel_calls;
+                    secs *= 1.0 + (self.blas1_penalty - 1.0) / avg_rows;
+                }
+                let t_eff = threads.min(self.cores_per_rank).max(1) as f64;
+                secs /= t_eff;
+            }
+            compute += secs;
+        }
+        compute += self.iter_overhead * critical.iters;
+        Predicted {
+            compute_secs: compute,
+            bandwidth_secs: self.beta * critical.comm.words as f64,
+            latency_secs: self.phi * critical.comm.rounds as f64,
+        }
+    }
+
     /// Hybrid (P ranks × t threads) projection: like [`Self::project`]
     /// but with `threads` intra-rank workers splitting the sampled rows
     /// of the gram product, which divides the kernel-compute phase by
@@ -340,6 +460,45 @@ impl MachineProfile {
         let t_eff = threads.min(self.cores_per_rank).max(1) as f64;
         p.per_phase[Phase::KernelCompute.idx()] /= t_eff;
         p
+    }
+}
+
+/// Predicted running time of one tuner candidate, split into the
+/// Hockney model's coefficient terms (see [`MachineProfile::predict`]).
+/// The split is what makes a tuner ranking explainable: a candidate is
+/// chosen *because* it trades, say, latency for compute, and the report
+/// can show exactly that.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Predicted {
+    /// `γ`-weighted seconds: all flop phases (with the BLAS-1 blocking
+    /// penalty and the intra-rank thread split applied to the kernel
+    /// phase) plus the fixed per-iteration software floor.
+    pub compute_secs: f64,
+    /// `β`-weighted seconds: critical-path f64 words moved.
+    pub bandwidth_secs: f64,
+    /// `φ`-weighted seconds: critical-path message rounds.
+    pub latency_secs: f64,
+}
+
+impl Predicted {
+    /// Total predicted seconds (the tuner's ranking key).
+    pub fn total_secs(&self) -> f64 {
+        self.compute_secs + self.bandwidth_secs + self.latency_secs
+    }
+
+    /// The dominant term's report tag (`compute`, `bandwidth`,
+    /// `latency`) — ties break toward the earlier tag in that order.
+    pub fn dominant(&self) -> &'static str {
+        let mut tag = "compute";
+        let mut best = self.compute_secs;
+        if self.bandwidth_secs > best {
+            tag = "bandwidth";
+            best = self.bandwidth_secs;
+        }
+        if self.latency_secs > best {
+            tag = "latency";
+        }
+        tag
     }
 }
 
@@ -464,6 +623,112 @@ mod tests {
             m.project_hybrid(&l, 10 * cap).total_secs()
         );
         assert!(p4.total_secs() < p1.total_secs());
+    }
+
+    /// The prediction is the projection regrouped by model coefficient:
+    /// totals must agree to rounding, and each term must be the plain
+    /// weighted count.
+    #[test]
+    fn predict_splits_projection_by_coefficient() {
+        let mut l = Ledger::new();
+        l.add_flops(Phase::KernelCompute, 1e9);
+        l.add_flops(Phase::Solve, 1e6);
+        l.add_flops(Phase::GradCorr, 3e5);
+        l.kernel_calls = 10.0;
+        l.kernel_rows = 80.0;
+        l.iters = 500.0;
+        l.comm.words = 123_456;
+        l.comm.rounds = 789;
+        let m = MachineProfile::cray_ex();
+        for threads in [1usize, 3, 64] {
+            let pred = m.predict(&l, threads);
+            let proj = m.project_hybrid(&l, threads);
+            let (a, b) = (pred.total_secs(), proj.total_secs());
+            assert!(
+                (a - b).abs() <= 1e-12 * a.max(b),
+                "t={threads}: predicted {a} vs projected {b}"
+            );
+            assert_eq!(pred.bandwidth_secs, m.beta * 123_456.0);
+            assert_eq!(pred.latency_secs, m.phi * 789.0);
+        }
+        // More threads shrink only the compute term.
+        let p1 = m.predict(&l, 1);
+        let p4 = m.predict(&l, 4);
+        assert!(p4.compute_secs < p1.compute_secs);
+        assert_eq!(p4.bandwidth_secs, p1.bandwidth_secs);
+        assert_eq!(p4.latency_secs, p1.latency_secs);
+    }
+
+    #[test]
+    fn predict_dominant_term_tags() {
+        let z = Predicted {
+            compute_secs: 1.0,
+            bandwidth_secs: 0.5,
+            latency_secs: 0.25,
+        };
+        assert_eq!(z.dominant(), "compute");
+        assert_eq!(
+            Predicted {
+                latency_secs: 2.0,
+                ..z
+            }
+            .dominant(),
+            "latency"
+        );
+        assert_eq!(
+            Predicted {
+                bandwidth_secs: 2.0,
+                ..z
+            }
+            .dominant(),
+            "bandwidth"
+        );
+    }
+
+    #[test]
+    fn machine_parse_named_profiles_and_overrides() {
+        let m = MachineProfile::parse("cray-ex").unwrap();
+        assert_eq!(m.name, "cray-ex");
+        assert_eq!(m.phi, MachineProfile::cray_ex().phi);
+        let m = MachineProfile::parse("cloud").unwrap();
+        assert_eq!(m.name, "cloud");
+        let m =
+            MachineProfile::parse("cray-ex:alpha=1e-3,beta=2e-8,gamma=3e-10,cores=32").unwrap();
+        assert_eq!(m.phi, 1e-3);
+        assert_eq!(m.beta, 2e-8);
+        assert_eq!(m.gamma, 3e-10);
+        assert_eq!(m.cores_per_rank, 32);
+        // Partial overrides keep the base for the rest.
+        let m = MachineProfile::parse("cloud:alpha=1.5e-4").unwrap();
+        assert_eq!(m.phi, 1.5e-4);
+        assert_eq!(m.beta, MachineProfile::cloud().beta);
+    }
+
+    /// The strict-parsing satellite: malformed or non-positive
+    /// `alpha`/`beta`/`gamma` (and `cores`) values must be hard errors
+    /// naming the key, matching the `Config::try_*` convention.
+    #[test]
+    fn machine_parse_rejects_malformed_and_negative_naming_the_key() {
+        for (spec, key) in [
+            ("cray-ex:alpha=-1e-6", "'machine.alpha'"),
+            ("cray-ex:alpha=0", "'machine.alpha'"),
+            ("cray-ex:alpha=fast", "'machine.alpha'"),
+            ("cray-ex:alpha=inf", "'machine.alpha'"),
+            ("cray-ex:alpha=nan", "'machine.alpha'"),
+            ("cloud:beta=-4e-9", "'machine.beta'"),
+            ("cloud:beta=", "'machine.beta'"),
+            ("cray-ex:gamma=zero", "'machine.gamma'"),
+            ("cray-ex:gamma=-2.5e-10", "'machine.gamma'"),
+            ("cray-ex:cores=0", "'machine.cores'"),
+            ("cray-ex:cores=2.5", "'machine.cores'"),
+            ("cray-ex:cores=-4", "'machine.cores'"),
+            ("cray-ex:alpha", "'machine'"),
+            ("cray-ex:watts=5", "'machine'"),
+            ("laptop", "'machine'"),
+        ] {
+            let err = MachineProfile::parse(spec).expect_err(spec);
+            assert!(err.contains(key), "{spec}: error must name {key}, got: {err}");
+        }
     }
 
     #[test]

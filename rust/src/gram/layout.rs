@@ -53,6 +53,21 @@ pub enum Layout {
 }
 
 impl Layout {
+    /// The grid cell of global rank `rank` in a `pr × pc` process grid:
+    /// row-major, so rank `r` is cell `(r / pc, r % pc)`. One source of
+    /// truth for the rank → cell map, shared by the grid oracle and the
+    /// auto-tuner's read-only plan handoff (`crate::tune`).
+    pub fn grid_for_rank(pr: usize, pc: usize, rank: usize) -> Layout {
+        assert!(pr >= 1 && pc >= 1, "grid dimensions must be positive");
+        assert!(rank < pr * pc, "rank {rank} outside the {pr}x{pc} grid");
+        Layout::Grid {
+            pr,
+            pc,
+            row: rank / pc,
+            col: rank % pc,
+        }
+    }
+
     /// True if the product stage emits *partial* blocks that require a
     /// cross-rank reduction.
     pub fn is_sharded(&self) -> bool {
@@ -107,6 +122,36 @@ mod tests {
             .name(),
             "grid"
         );
+    }
+
+    #[test]
+    fn grid_for_rank_is_row_major_and_total() {
+        for (pr, pc) in [(1usize, 1usize), (2, 3), (3, 2), (4, 1), (1, 4)] {
+            let mut seen = vec![false; pr * pc];
+            for rank in 0..pr * pc {
+                match Layout::grid_for_rank(pr, pc, rank) {
+                    Layout::Grid {
+                        pr: gpr,
+                        pc: gpc,
+                        row,
+                        col,
+                    } => {
+                        assert_eq!((gpr, gpc), (pr, pc));
+                        assert!(!seen[row * pc + col], "cell ({row},{col}) mapped twice");
+                        seen[row * pc + col] = true;
+                        assert_eq!(rank, row * pc + col, "row-major inverse");
+                    }
+                    other => panic!("expected a grid cell, got {other:?}"),
+                }
+            }
+            assert!(seen.iter().all(|&s| s));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "outside")]
+    fn grid_for_rank_rejects_out_of_range_ranks() {
+        let _ = Layout::grid_for_rank(2, 2, 4);
     }
 
     #[test]

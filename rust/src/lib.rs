@@ -39,6 +39,10 @@
 //! * [`coordinator`] — experiment configs, the launcher, phase timers, and
 //!   the strong-scaling / runtime-breakdown harnesses behind the CLI and
 //!   the paper-figure benches.
+//! * [`tune`] — the cost-model auto-tuner: enumerates `(pr, pc, t, s)`
+//!   for a machine profile, scores candidates with the analytic count
+//!   replicas, ranks them by predicted latency/bandwidth/compute, and
+//!   cross-validates predictions against measured traffic.
 //! * [`bench_harness`] — a small criterion-like measurement harness.
 //! * [`testkit`] — a property-testing mini-framework used by the test
 //!   suites (proptest is unavailable in the offline build).
@@ -61,4 +65,5 @@ pub mod runtime;
 pub mod solvers;
 pub mod sparse;
 pub mod testkit;
+pub mod tune;
 pub mod util;

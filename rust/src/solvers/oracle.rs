@@ -224,8 +224,9 @@ impl<'c, C: Communicator> GridGram<'c, C> {
         threads: usize,
     ) -> Self {
         let m = shard.nrows();
-        let rank = comm.rank();
-        let (row, col) = (rank / pc, rank % pc);
+        // One source of truth for the rank → cell map (shared with the
+        // auto-tuner's plan handoff).
+        let layout = Layout::grid_for_rank(pr, pc, comm.rank());
         let mut reduce = GridReduce::new(comm, algo, pr, pc, m, row_block);
         // Full row norms are a sum over the pc feature shards — the same
         // collective (and the same bits) as DistGram over pc ranks.
@@ -236,14 +237,7 @@ impl<'c, C: Communicator> GridGram<'c, C> {
         let owned = reduce.owned_rows().to_vec();
         let product = ParallelProduct::new(GridProduct::new(shard, &owned), threads);
         GridGram {
-            engine: GramEngine::new(
-                Layout::Grid { pr, pc, row, col },
-                product,
-                reduce,
-                Some(epilogue),
-                diag,
-                cache_rows,
-            ),
+            engine: GramEngine::new(layout, product, reduce, Some(epilogue), diag, cache_rows),
         }
     }
 

@@ -109,6 +109,22 @@ pub fn env_threads() -> usize {
         .unwrap_or(1)
 }
 
+/// Row-group count for grid-aware tests: the `GRID` environment
+/// variable, defaulting to 1 — the grid analog of [`env_threads`]. The
+/// CI matrix runs one lane with `GRID=4` (paired with `THREADS=4`), so
+/// every property that folds `env_grid_rows()` into its `(pr, pc)`
+/// sweep exercises a row-group count its hard-coded factorizations do
+/// not already cover. Results are bitwise `pr`-invariant (a
+/// `Grid{pr, pc}` solve replays the 1D solve over `pc` ranks), so
+/// assertions are unchanged.
+pub fn env_grid_rows() -> usize {
+    std::env::var("GRID")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&g| g >= 1)
+        .unwrap_or(1)
+}
+
 /// Assert two slices are elementwise close.
 #[track_caller]
 pub fn assert_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
@@ -156,6 +172,13 @@ mod tests {
         // Whatever the environment says (including the CI THREADS lane
         // and malformed values), the result is a usable worker count.
         assert!(env_threads() >= 1);
+    }
+
+    #[test]
+    fn env_grid_rows_is_at_least_one() {
+        // Same contract as env_threads: the CI GRID lane (or malformed
+        // values) must always yield a usable row-group count.
+        assert!(env_grid_rows() >= 1);
     }
 
     #[test]

@@ -1,0 +1,544 @@
+//! Cost-model auto-tuner: pick `(pr, pc, t, s)` for a machine profile.
+//!
+//! The paper's central trade-off is *tunable*: the s-step variants buy a
+//! `1/s` latency reduction at the price of extra bandwidth and flops
+//! (Theorems 1–2), the 2D grid trades a smaller reduce payload for a row
+//! allgather, and intra-rank threads cut only the kernel phase — so the
+//! best configuration depends on the machine's `(α, β, γ)` profile.
+//! Prior work (Devarakonda et al., 2016) leaves this parameter selection
+//! to hand sweeps; this module turns the cost model from a reporting
+//! tool into a decision subsystem.
+//!
+//! The tuner enumerates the feasible configuration space for a problem:
+//!
+//! * `(pr, pc)` over the factorizations of the rank count `P`,
+//! * `t` over thread counts up to [`MachineProfile::cores_per_rank`],
+//! * `s` over a user-bounded range (powers of two by default),
+//!
+//! scores every candidate with the *same analytic count replicas the
+//! scaling harness cross-validates against measured execution*
+//! ([`analytic_ledger`] / [`grid_analytic_ledger`], which are pinned
+//! bitwise to real `CommStats` in `coordinator::scaling` tests), and
+//! ranks them by [`MachineProfile::predict`] — a per-candidate time
+//! split into latency / bandwidth / compute terms, so the choice is
+//! explainable, not just a number.
+//!
+//! Trust story: a prediction is only as good as its counts, so
+//! [`cross_validate`] replays a candidate against *measured*
+//! ranks and compares traffic word for word (see the `tune` CLI
+//! subcommand and `rust/tests/tune_props.rs`). The closed-form
+//! Theorem-1/2 costs (with [`ProblemDims::reduce_ranks`] set to the
+//! candidate's reduce-collective participant count `pc`) ride along on
+//! every candidate as an order-of-magnitude sanity anchor.
+
+mod report;
+mod xval;
+
+pub use report::{tune_json, tune_table};
+pub use xval::{cross_validate, CrossCheck};
+
+use crate::comm::AllreduceAlgo;
+use crate::coordinator::scaling::{analytic_ledger, grid_analytic_ledger};
+use crate::coordinator::{ProblemSpec, SolverSpec};
+use crate::costmodel::{
+    bdcd_cost, bdcd_sstep_cost, dcd_cost, dcd_sstep_cost, AlgoCost, Ledger, MachineProfile,
+    Predicted, ProblemDims,
+};
+use crate::data::Dataset;
+use crate::gram::Layout;
+use crate::kernelfn::Kernel;
+
+/// The configuration space the tuner searches, plus the run parameters
+/// every candidate shares (`h`, allreduce algorithm, row block, seed).
+#[derive(Clone, Debug)]
+pub struct TuneRequest {
+    /// Total rank count `P` the launch will use; `(pr, pc)` candidates
+    /// are its factorizations.
+    pub p: usize,
+    /// Total inner iterations `H` of the planned run.
+    pub h: usize,
+    /// Upper bound of the default power-of-two `s` grid (ignored when
+    /// [`Self::s_list`] is non-empty). Candidates are further capped at
+    /// `h` — an `s` beyond the iteration budget is infeasible.
+    pub s_max: usize,
+    /// Upper bound on candidate thread counts; additionally capped at
+    /// the machine's [`MachineProfile::cores_per_rank`] (threads beyond
+    /// the core budget cannot speed the kernel phase up).
+    pub t_max: usize,
+    /// Explicit `s` candidates (empty → powers of two up to
+    /// [`Self::s_max`]). `1` (the classical method) is always a
+    /// candidate either way.
+    pub s_list: Vec<usize>,
+    /// Explicit `t` candidates (empty → powers of two up to the
+    /// effective cap, plus the cap itself).
+    pub t_list: Vec<usize>,
+    /// Allreduce algorithm of the planned run (the analytic traffic
+    /// replica mirrors it exactly).
+    pub algo: AllreduceAlgo,
+    /// Block-cyclic row block of grid candidates.
+    pub row_block: usize,
+    /// Coordinate-stream seed used by measured cross-validation replays
+    /// ([`cross_validate`]); predictions themselves are seed-free.
+    pub seed: u64,
+}
+
+impl TuneRequest {
+    /// A request with the default candidate grids: `s` powers of two up
+    /// to 256, `t` powers of two up to the machine's core budget.
+    pub fn new(p: usize, h: usize) -> TuneRequest {
+        TuneRequest {
+            p,
+            h,
+            s_max: 256,
+            t_max: usize::MAX,
+            s_list: Vec::new(),
+            t_list: Vec::new(),
+            algo: AllreduceAlgo::Rabenseifner,
+            row_block: crate::gram::DEFAULT_ROW_BLOCK,
+            seed: 0x5EED,
+        }
+    }
+
+    /// Resolved `s` candidates: sorted, deduplicated, `1 ≤ s ≤ h`, and
+    /// always containing the classical `s = 1`.
+    pub fn s_candidates(&self) -> Vec<usize> {
+        let mut out: Vec<usize> = if self.s_list.is_empty() {
+            let mut v = Vec::new();
+            let mut s = 1usize;
+            while s <= self.s_max.min(self.h) {
+                v.push(s);
+                match s.checked_mul(2) {
+                    Some(next) => s = next,
+                    None => break,
+                }
+            }
+            v
+        } else {
+            self.s_list
+                .iter()
+                .copied()
+                .filter(|s| (1..=self.h).contains(s))
+                .collect()
+        };
+        out.push(1);
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Resolved `t` candidates for `machine`: sorted, deduplicated,
+    /// `1 ≤ t ≤ min(t_max, cores_per_rank)`, and always containing the
+    /// serial `t = 1`. The default grid is powers of two up to the cap
+    /// plus the cap itself (so a 12-core budget tries 1, 2, 4, 8, 12).
+    pub fn t_candidates(&self, machine: &MachineProfile) -> Vec<usize> {
+        let cap = self.t_max.min(machine.cores_per_rank).max(1);
+        let mut out: Vec<usize> = if self.t_list.is_empty() {
+            let mut v = Vec::new();
+            let mut t = 1usize;
+            while t <= cap {
+                v.push(t);
+                match t.checked_mul(2) {
+                    Some(next) => t = next,
+                    None => break,
+                }
+            }
+            v.push(cap);
+            v
+        } else {
+            self.t_list.iter().copied().filter(|t| (1..=cap).contains(t)).collect()
+        };
+        out.push(1);
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+}
+
+/// One scored configuration: a `(pr, pc, t, s)` point with its analytic
+/// count ledger, the Hockney prediction derived from it, and the
+/// closed-form Theorem-1/2 cost as a sanity anchor.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    /// Row-group count of the 2D grid (`1` = the paper's 1D layout).
+    pub pr: usize,
+    /// Feature-shard count; the reduce collective's participant count.
+    pub pc: usize,
+    /// Intra-rank worker threads for the gram product.
+    pub t: usize,
+    /// s-step block size (`1` = classical).
+    pub s: usize,
+    /// Predicted time, split into compute / bandwidth / latency.
+    pub predicted: Predicted,
+    /// The analytic count replica backing the prediction — the same
+    /// ledger shape measured execution produces, so its traffic fields
+    /// can be compared to real `CommStats` word for word.
+    pub ledger: Ledger,
+    /// Closed-form Theorem-1/2 leading-order cost with
+    /// [`ProblemDims::reduce_ranks`] `= pc` (the candidate's reduce
+    /// collective), for order-of-magnitude cross-checks.
+    pub theorem: AlgoCost,
+}
+
+impl Candidate {
+    /// The `SolverSpec::grid` value of this candidate: `None` for the
+    /// 1D layout, `Some((pr, pc))` for a genuine grid.
+    pub fn grid(&self) -> Option<(usize, usize)> {
+        if self.pr > 1 {
+            Some((self.pr, self.pc))
+        } else {
+            None
+        }
+    }
+
+    /// Total rank count this candidate was scored for.
+    pub fn ranks(&self) -> usize {
+        self.pr * self.pc
+    }
+
+    /// Solver spec that runs this candidate (see
+    /// [`SolverSpec::from_candidate`]).
+    pub fn solver_spec(&self, h: usize, seed: u64, cache_rows: usize) -> SolverSpec {
+        SolverSpec::from_candidate(self, h, seed, cache_rows)
+    }
+
+    /// The gram-engine layout of rank `rank` under this candidate
+    /// (read-only handoff to [`crate::gram`]).
+    pub fn layout_for_rank(&self, rank: usize) -> Layout {
+        if self.pr > 1 {
+            Layout::grid_for_rank(self.pr, self.pc, rank)
+        } else if self.ranks() > 1 {
+            Layout::ColShard {
+                rank,
+                ranks: self.ranks(),
+            }
+        } else {
+            Layout::Full
+        }
+    }
+
+    /// Report tag for this candidate's layout: `1d` or `grid-PRxPC`
+    /// (one formatter shared by the table, JSON and CLI reports).
+    pub fn layout_tag(&self) -> String {
+        match self.grid() {
+            Some((pr, pc)) => format!("grid-{pr}x{pc}"),
+            None => "1d".to_string(),
+        }
+    }
+
+    /// The equivalent `kcd` command line — the tune → train handoff.
+    /// Carries the tuned *configuration* only; the `tune` CLI appends
+    /// the data/problem context flags (dataset, scale, kernel, problem
+    /// parameters) so the printed line runs exactly what was tuned.
+    pub fn cli_hint(&self, problem: &ProblemSpec, h: usize) -> String {
+        let cmd = match problem {
+            ProblemSpec::Svm { .. } => "train-svm",
+            ProblemSpec::Krr { .. } => "train-krr",
+        };
+        let mut out = format!("kcd {cmd} --p {}", self.ranks());
+        if let Some((pr, pc)) = self.grid() {
+            out.push_str(&format!(" --grid {pr}x{pc}"));
+        }
+        if self.t > 1 {
+            out.push_str(&format!(" --threads {}", self.t));
+        }
+        out.push_str(&format!(" --s {} --h {h}", self.s));
+        out
+    }
+}
+
+/// A ranked tuning plan: every feasible candidate, best first.
+#[derive(Clone, Debug)]
+pub struct TunedPlan {
+    /// Rank count the plan was tuned for.
+    pub p: usize,
+    /// Inner-iteration budget every candidate shares.
+    pub h: usize,
+    /// Allreduce algorithm every candidate shares.
+    pub algo: AllreduceAlgo,
+    /// The machine profile the predictions were weighted with.
+    pub machine: MachineProfile,
+    /// The problem the plan was tuned for.
+    pub problem: ProblemSpec,
+    /// Dataset name (reports only).
+    pub dataset: String,
+    /// All candidates, ranked by predicted total time (ties broken
+    /// deterministically by `(pr, t, s)` — the ranking is invariant
+    /// under candidate enumeration order).
+    pub candidates: Vec<Candidate>,
+}
+
+impl TunedPlan {
+    /// The predicted-best candidate. The plan always has at least one
+    /// candidate (`pr = pc = t = s = 1` is always feasible).
+    pub fn best(&self) -> &Candidate {
+        &self.candidates[0]
+    }
+}
+
+/// Every `(pr, pc)` with `pr · pc = p`, ascending in `pr`.
+pub fn factorizations(p: usize) -> Vec<(usize, usize)> {
+    (1..=p)
+        .filter(|pr| p % pr == 0)
+        .map(|pr| (pr, p / pr))
+        .collect()
+}
+
+/// Enumerate, score and rank the feasible configuration space (see the
+/// module docs). Deterministic: the returned ranking depends only on
+/// the resolved candidate sets, never on enumeration order.
+pub fn tune(
+    ds: &Dataset,
+    kernel: Kernel,
+    problem: &ProblemSpec,
+    req: &TuneRequest,
+    machine: &MachineProfile,
+) -> TunedPlan {
+    assert!(req.p >= 1, "need at least one rank");
+    assert!(req.h >= 1, "need at least one iteration");
+    assert!(req.row_block >= 1, "row block must be at least 1");
+    let s_cands = req.s_candidates();
+    let t_cands = req.t_candidates(machine);
+    let b = match *problem {
+        ProblemSpec::Svm { .. } => 1usize,
+        ProblemSpec::Krr { b, .. } => b,
+    };
+    let density = ds.a.density();
+    let mu = kernel.mu();
+    let mut candidates =
+        Vec::with_capacity(factorizations(req.p).len() * s_cands.len() * t_cands.len());
+    for (pr, pc) in factorizations(req.p) {
+        for &s in &s_cands {
+            // The count replica depends on (pr, s) only; threads are a
+            // pure wall-time knob, so score each ledger once per t.
+            let ledger = if pr == 1 {
+                analytic_ledger(ds, kernel, problem, s, req.h, req.p, req.algo)
+            } else {
+                grid_analytic_ledger(
+                    ds,
+                    kernel,
+                    problem,
+                    s,
+                    req.h,
+                    pr,
+                    pc,
+                    req.row_block,
+                    req.algo,
+                )
+            };
+            let dims = ProblemDims {
+                m: ds.m(),
+                n: ds.n(),
+                f: density,
+                mu,
+                p: req.p,
+                reduce_ranks: pc,
+                h: req.h,
+            };
+            let theorem = match (problem, s) {
+                (ProblemSpec::Svm { .. }, 1) => dcd_cost(&dims),
+                (ProblemSpec::Svm { .. }, s) => dcd_sstep_cost(&dims, s),
+                (ProblemSpec::Krr { .. }, 1) => bdcd_cost(&dims, b),
+                (ProblemSpec::Krr { .. }, s) => bdcd_sstep_cost(&dims, b, s),
+            };
+            for &t in &t_cands {
+                let predicted = machine.predict(&ledger, t);
+                candidates.push(Candidate {
+                    pr,
+                    pc,
+                    t,
+                    s,
+                    predicted,
+                    ledger: ledger.clone(),
+                    theorem,
+                });
+            }
+        }
+    }
+    rank_candidates(&mut candidates);
+    TunedPlan {
+        p: req.p,
+        h: req.h,
+        algo: req.algo,
+        machine: *machine,
+        problem: *problem,
+        dataset: ds.name.clone(),
+        candidates,
+    }
+}
+
+/// Sort candidates by predicted total time, ties broken by
+/// `(pr, t, s)` ascending — a total order over the candidate keys, so
+/// the ranking cannot depend on enumeration order.
+fn rank_candidates(candidates: &mut [Candidate]) {
+    candidates.sort_unstable_by(|a, b| {
+        a.predicted
+            .total_secs()
+            .total_cmp(&b.predicted.total_secs())
+            .then_with(|| a.pr.cmp(&b.pr))
+            .then_with(|| a.t.cmp(&b.t))
+            .then_with(|| a.s.cmp(&b.s))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::SvmVariant;
+
+    fn svm() -> ProblemSpec {
+        ProblemSpec::Svm {
+            c: 1.0,
+            variant: SvmVariant::L1,
+        }
+    }
+
+    #[test]
+    fn factorizations_cover_all_divisor_pairs() {
+        assert_eq!(factorizations(1), vec![(1, 1)]);
+        assert_eq!(factorizations(6), vec![(1, 6), (2, 3), (3, 2), (6, 1)]);
+        assert_eq!(factorizations(7), vec![(1, 7), (7, 1)]);
+        for p in 1..=24usize {
+            for (pr, pc) in factorizations(p) {
+                assert_eq!(pr * pc, p);
+            }
+        }
+    }
+
+    #[test]
+    fn candidate_sets_are_bounded_sorted_and_contain_identity() {
+        let mut req = TuneRequest::new(8, 64);
+        req.s_max = 32;
+        let s = req.s_candidates();
+        assert_eq!(s, vec![1, 2, 4, 8, 16, 32]);
+        // h caps the grid below s_max.
+        req.h = 5;
+        assert_eq!(req.s_candidates(), vec![1, 2, 4]);
+        // Explicit lists are filtered, deduped, and still contain 1.
+        req.h = 64;
+        req.s_list = vec![32, 8, 8, 900, 0];
+        assert_eq!(req.s_candidates(), vec![1, 8, 32]);
+
+        let m = MachineProfile::cray_ex(); // 16 cores
+        let req = TuneRequest::new(8, 64);
+        assert_eq!(req.t_candidates(&m), vec![1, 2, 4, 8, 16]);
+        let mut req12 = TuneRequest::new(8, 64);
+        req12.t_max = 12;
+        assert_eq!(req12.t_candidates(&m), vec![1, 2, 4, 8, 12]);
+        let mut explicit = TuneRequest::new(8, 64);
+        explicit.t_list = vec![64, 3, 1, 3];
+        // 64 exceeds the 16-core budget and is dropped.
+        assert_eq!(explicit.t_candidates(&m), vec![1, 3]);
+    }
+
+    #[test]
+    fn plan_covers_space_and_best_is_min_total() {
+        let ds = crate::data::gen_dense_classification(24, 16, 0.05, 3);
+        let mut req = TuneRequest::new(6, 16);
+        req.s_list = vec![4];
+        req.t_list = vec![1, 4];
+        let machine = MachineProfile::cray_ex();
+        let plan = tune(&ds, Kernel::paper_rbf(), &svm(), &req, &machine);
+        // 4 factorizations × {1, 4} s-candidates × {1, 4} t-candidates.
+        assert_eq!(plan.candidates.len(), 4 * 2 * 2);
+        let best = plan.best().predicted.total_secs();
+        for c in &plan.candidates {
+            assert!(c.predicted.total_secs() >= best);
+            assert_eq!(c.ranks(), 6);
+        }
+        // Ranked ascending.
+        for w in plan.candidates.windows(2) {
+            assert!(w[0].predicted.total_secs() <= w[1].predicted.total_secs());
+        }
+    }
+
+    #[test]
+    fn candidate_handoff_spec_and_hint() {
+        let ds = crate::data::gen_dense_classification(24, 16, 0.05, 3);
+        let req = TuneRequest::new(8, 32);
+        let machine = MachineProfile::cray_ex();
+        let plan = tune(&ds, Kernel::paper_rbf(), &svm(), &req, &machine);
+        for c in &plan.candidates {
+            let spec = c.solver_spec(plan.h, 7, 0);
+            assert_eq!(spec.s, c.s);
+            assert_eq!(spec.h, 32);
+            assert_eq!(spec.seed, 7);
+            assert_eq!(spec.threads, c.t);
+            assert_eq!(spec.grid, c.grid());
+            if c.pr == 1 {
+                assert_eq!(spec.grid, None);
+            }
+            let hint = c.cli_hint(&plan.problem, plan.h);
+            assert!(hint.starts_with("kcd train-svm --p 8"), "{hint}");
+            assert!(hint.contains(&format!("--s {}", c.s)), "{hint}");
+            if let Some((pr, pc)) = c.grid() {
+                assert!(hint.contains(&format!("--grid {pr}x{pc}")), "{hint}");
+            } else {
+                assert!(!hint.contains("--grid"), "{hint}");
+            }
+        }
+        let krr_hint = plan.best().cli_hint(&ProblemSpec::Krr { lambda: 1.0, b: 2 }, 32);
+        assert!(krr_hint.starts_with("kcd train-krr"), "{krr_hint}");
+    }
+
+    #[test]
+    fn candidate_layouts_describe_every_rank() {
+        let ds = crate::data::gen_dense_classification(24, 16, 0.05, 3);
+        let mut req = TuneRequest::new(6, 16);
+        req.s_list = vec![2];
+        req.t_list = vec![1];
+        let machine = MachineProfile::cray_ex();
+        let plan = tune(&ds, Kernel::paper_rbf(), &svm(), &req, &machine);
+        for c in &plan.candidates {
+            for rank in 0..c.ranks() {
+                let layout = c.layout_for_rank(rank);
+                match c.grid() {
+                    Some((pr, pc)) => assert_eq!(
+                        layout,
+                        Layout::Grid {
+                            pr,
+                            pc,
+                            row: rank / pc,
+                            col: rank % pc
+                        }
+                    ),
+                    None => assert_eq!(
+                        layout,
+                        Layout::ColShard {
+                            rank,
+                            ranks: c.ranks()
+                        }
+                    ),
+                }
+            }
+        }
+        // The degenerate single-rank candidate is the serial layout.
+        let mut req1 = TuneRequest::new(1, 16);
+        req1.s_list = vec![1];
+        req1.t_list = vec![1];
+        let plan1 = tune(&ds, Kernel::paper_rbf(), &svm(), &req1, &machine);
+        assert_eq!(plan1.best().layout_for_rank(0), Layout::Full);
+    }
+
+    #[test]
+    fn theorem_anchor_uses_reduce_ranks_of_the_candidate() {
+        let ds = crate::data::gen_dense_classification(24, 16, 0.05, 3);
+        let mut req = TuneRequest::new(8, 32);
+        req.s_list = vec![4];
+        req.t_list = vec![1];
+        let machine = MachineProfile::cray_ex();
+        let plan = tune(&ds, Kernel::paper_rbf(), &svm(), &req, &machine);
+        let find = |pr: usize, s: usize| -> &Candidate {
+            plan.candidates
+                .iter()
+                .find(|c| c.pr == pr && c.s == s && c.t == 1)
+                .unwrap()
+        };
+        // Same flops/words at every factorization; latency follows the
+        // log of the reduce-collective participant count pc.
+        let c1 = find(1, 4); // pc = 8 → log2 = 3
+        let c4 = find(4, 4); // pc = 2 → log2 = 1
+        assert_eq!(c1.theorem.flops, c4.theorem.flops);
+        assert_eq!(c1.theorem.words, c4.theorem.words);
+        assert!((c4.theorem.msgs - c1.theorem.msgs / 3.0).abs() < 1e-9);
+    }
+}

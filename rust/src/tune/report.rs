@@ -1,0 +1,215 @@
+//! Tuner report writers: the human-readable ranked table and the
+//! machine-readable JSON report behind `kcd tune [--json]`.
+
+use crate::coordinator::report::Table;
+
+use super::{Candidate, CrossCheck, TunedPlan};
+
+/// Ranked-plan table: the top `top` candidates, best first, with the
+/// predicted time split into the Hockney terms and the traffic counts
+/// the prediction weighted (`words` / `rounds` are exactly the analytic
+/// ledger's critical-path counts — the numbers cross-validation
+/// compares against measured execution).
+pub fn tune_table(plan: &TunedPlan, top: usize) -> Table {
+    let mut t = Table::new(vec![
+        "rank", "layout", "t", "s", "total (s)", "compute (s)", "bandwidth (s)", "latency (s)",
+        "bound", "words", "rounds",
+    ]);
+    for (i, c) in plan.candidates.iter().take(top.max(1)).enumerate() {
+        t.row(vec![
+            (i + 1).to_string(),
+            c.layout_tag(),
+            c.t.to_string(),
+            c.s.to_string(),
+            format!("{:.4e}", c.predicted.total_secs()),
+            format!("{:.3e}", c.predicted.compute_secs),
+            format!("{:.3e}", c.predicted.bandwidth_secs),
+            format!("{:.3e}", c.predicted.latency_secs),
+            c.predicted.dominant().to_string(),
+            c.ledger.comm.words.to_string(),
+            c.ledger.comm.rounds.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Machine-readable report: the ranked plan (top `top` candidates) as a
+/// single JSON object, with the optional measured cross-validation of
+/// the winner attached when one was run.
+pub fn tune_json(plan: &TunedPlan, top: usize, xval: Option<&CrossCheck>) -> String {
+    let mut out = String::from("{");
+    out.push_str(&format!("\"dataset\":{},", json_str(&plan.dataset)));
+    out.push_str(&format!("\"problem\":{},", json_str(plan.problem.name())));
+    out.push_str(&format!("\"machine\":{},", json_str(plan.machine.name)));
+    out.push_str(&format!(
+        "\"alpha\":{},\"beta\":{},\"gamma\":{},\"cores_per_rank\":{},",
+        json_f64(plan.machine.phi),
+        json_f64(plan.machine.beta),
+        json_f64(plan.machine.gamma),
+        plan.machine.cores_per_rank
+    ));
+    out.push_str(&format!(
+        "\"p\":{},\"h\":{},\"algo\":{},",
+        plan.p,
+        plan.h,
+        json_str(plan.algo.name())
+    ));
+    out.push_str(&format!("\"candidates_total\":{},", plan.candidates.len()));
+    out.push_str("\"candidates\":[");
+    for (i, c) in plan.candidates.iter().take(top.max(1)).enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&candidate_json(c, i + 1));
+    }
+    out.push(']');
+    if let Some(x) = xval {
+        out.push_str(&format!(",\"cross_validation\":{}", xval_json(x)));
+    }
+    out.push('}');
+    out
+}
+
+fn candidate_json(c: &Candidate, rank: usize) -> String {
+    format!(
+        "{{\"rank\":{rank},\"pr\":{},\"pc\":{},\"t\":{},\"s\":{},\
+         \"predicted\":{{\"total_secs\":{},\"compute_secs\":{},\
+         \"bandwidth_secs\":{},\"latency_secs\":{},\"bound\":{}}},\
+         \"traffic\":{{\"words\":{},\"rounds\":{},\"msgs\":{},\"allreduces\":{}}},\
+         \"theorem\":{{\"flops\":{},\"words\":{},\"msgs\":{}}}}}",
+        c.pr,
+        c.pc,
+        c.t,
+        c.s,
+        json_f64(c.predicted.total_secs()),
+        json_f64(c.predicted.compute_secs),
+        json_f64(c.predicted.bandwidth_secs),
+        json_f64(c.predicted.latency_secs),
+        json_str(c.predicted.dominant()),
+        c.ledger.comm.words,
+        c.ledger.comm.rounds,
+        c.ledger.comm.msgs,
+        c.ledger.comm.allreduces,
+        json_f64(c.theorem.flops),
+        json_f64(c.theorem.words),
+        json_f64(c.theorem.msgs),
+    )
+}
+
+fn xval_json(x: &CrossCheck) -> String {
+    format!(
+        "{{\"traffic_exact\":{},\"flops_rel_err\":{},\
+         \"predicted\":{{\"words\":{},\"rounds\":{}}},\
+         \"measured\":{{\"words\":{},\"rounds\":{}}}}}",
+        x.traffic_exact(),
+        json_f64(x.flops_rel_err),
+        x.predicted.words,
+        x.predicted.rounds,
+        x.measured.words,
+        x.measured.rounds,
+    )
+}
+
+/// JSON string literal (escapes quotes, backslashes and control bytes —
+/// dataset names can come from file stems).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// JSON number: finite f64s in `e` notation (valid JSON); non-finite
+/// values (which the model never produces, but a report writer must not
+/// emit invalid JSON for) degrade to null.
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:e}")
+    } else {
+        "null".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ProblemSpec;
+    use crate::costmodel::MachineProfile;
+    use crate::kernelfn::Kernel;
+    use crate::solvers::SvmVariant;
+    use crate::tune::{tune, TuneRequest};
+
+    fn small_plan() -> TunedPlan {
+        let ds = crate::data::gen_dense_classification(24, 16, 0.05, 3);
+        let mut req = TuneRequest::new(4, 16);
+        req.s_list = vec![4];
+        req.t_list = vec![1, 2];
+        tune(
+            &ds,
+            Kernel::paper_rbf(),
+            &ProblemSpec::Svm {
+                c: 1.0,
+                variant: SvmVariant::L1,
+            },
+            &req,
+            &MachineProfile::cray_ex(),
+        )
+    }
+
+    #[test]
+    fn table_ranks_best_first_and_respects_top() {
+        let plan = small_plan();
+        let full = tune_table(&plan, usize::MAX).markdown();
+        assert!(full.contains("| 1 "), "{full}");
+        assert!(full.contains("compute (s)"), "{full}");
+        let truncated = tune_table(&plan, 2).markdown();
+        assert_eq!(truncated.lines().count(), 2 + 2, "{truncated}");
+        // top = 0 still shows the winner instead of an empty table.
+        assert_eq!(tune_table(&plan, 0).markdown().lines().count(), 3);
+    }
+
+    #[test]
+    fn json_is_well_formed_and_carries_the_split() {
+        let plan = small_plan();
+        let js = tune_json(&plan, 3, None);
+        assert!(js.starts_with('{') && js.ends_with('}'), "{js}");
+        for key in [
+            "\"dataset\":",
+            "\"machine\":\"cray-ex\"",
+            "\"alpha\":",
+            "\"candidates\":[",
+            "\"compute_secs\":",
+            "\"bandwidth_secs\":",
+            "\"latency_secs\":",
+            "\"traffic\":",
+            "\"theorem\":",
+        ] {
+            assert!(js.contains(key), "missing {key} in {js}");
+        }
+        assert!(!js.contains("cross_validation"));
+        // Balanced braces/brackets (cheap well-formedness proxy; the
+        // escaper guarantees no stray quotes).
+        let balance = |open: char, close: char| {
+            js.chars().filter(|&c| c == open).count() == js.chars().filter(|&c| c == close).count()
+        };
+        assert!(balance('{', '}'), "{js}");
+        assert!(balance('[', ']'), "{js}");
+    }
+
+    #[test]
+    fn json_escapes_hostile_names() {
+        assert_eq!(json_str("a\"b\\c"), "\"a\\\"b\\\\c\"");
+        assert_eq!(json_str("x\ny"), "\"x\\u000ay\"");
+        assert_eq!(json_f64(f64::NAN), "null");
+        assert_eq!(json_f64(f64::INFINITY), "null");
+        assert_eq!(json_f64(0.5), "5e-1");
+    }
+}

@@ -1,0 +1,174 @@
+//! Measured cross-validation of tuner predictions.
+//!
+//! A ranking is only trustworthy if the counts behind it are: this
+//! module replays a candidate on real ranks ([`run_distributed`], the
+//! same instrumented execution the scaling harness measures) and
+//! compares the tuner's analytic traffic — total and per
+//! subcommunicator — against the measured [`CommStats`] word for word,
+//! plus the flop accounting phase by phase. The expectation is
+//! *bitwise* traffic equality (the analytic ledgers replicate the
+//! collectives' accounting exactly); anything else is a model bug, not
+//! noise.
+
+use crate::comm::CommStats;
+use crate::coordinator::{run_distributed, ProblemSpec};
+use crate::costmodel::{MachineProfile, Phase};
+use crate::data::Dataset;
+use crate::kernelfn::Kernel;
+
+use super::{Candidate, TuneRequest};
+
+/// The face-off between a candidate's predicted counts and a measured
+/// replay of the same configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct CrossCheck {
+    /// Predicted total critical-path traffic (the candidate's ledger).
+    pub predicted: CommStats,
+    /// Measured total critical-path traffic.
+    pub measured: CommStats,
+    /// Predicted column-subcommunicator (gram reduce) traffic — zero
+    /// for 1D candidates, where `predicted` holds everything.
+    pub predicted_col: CommStats,
+    /// Measured column-subcommunicator traffic.
+    pub measured_col: CommStats,
+    /// Predicted row-subcommunicator (allgather) traffic.
+    pub predicted_row: CommStats,
+    /// Measured row-subcommunicator traffic.
+    pub measured_row: CommStats,
+    /// Worst relative flop disagreement across phases (flop accounting
+    /// is f64 arithmetic, so "equal" means ≲1e-6 relative, not bitwise).
+    pub flops_rel_err: f64,
+}
+
+impl CrossCheck {
+    /// True when every traffic counter — total, reduce, allgather —
+    /// matches the measured run exactly.
+    pub fn traffic_exact(&self) -> bool {
+        self.predicted == self.measured
+            && self.predicted_col == self.measured_col
+            && self.predicted_row == self.measured_row
+    }
+
+    /// One-line human summary for the `tune` report.
+    pub fn summary(&self) -> String {
+        if self.traffic_exact() {
+            format!(
+                "traffic exact (words={}, rounds={}, msgs={}); flop rel err {:.1e}",
+                self.measured.words, self.measured.rounds, self.measured.msgs, self.flops_rel_err
+            )
+        } else {
+            format!(
+                "TRAFFIC MISMATCH: predicted words={} rounds={} vs measured words={} rounds={}",
+                self.predicted.words, self.predicted.rounds, self.measured.words,
+                self.measured.rounds
+            )
+        }
+    }
+}
+
+/// Replay `candidate` on real ranks and compare counts (see module
+/// docs). Runs `candidate.ranks()` OS threads — practical for the same
+/// rank counts the measured scaling engine handles (a few dozen), which
+/// is why the `tune` CLI gates this behind `--measured-limit`.
+pub fn cross_validate(
+    ds: &Dataset,
+    kernel: Kernel,
+    problem: &ProblemSpec,
+    candidate: &Candidate,
+    req: &TuneRequest,
+    machine: &MachineProfile,
+) -> CrossCheck {
+    // Cache off: the analytic replica models the uncached schedule (hit
+    // patterns are data-dependent and cannot be projected analytically).
+    let solver = candidate.solver_spec(req.h, req.seed, 0);
+    let measured = run_distributed(
+        ds,
+        kernel,
+        problem,
+        &solver,
+        candidate.ranks(),
+        req.algo,
+        machine,
+    )
+    .critical;
+    let mut flops_rel_err = 0.0f64;
+    for ph in Phase::ALL {
+        let (a, b) = (candidate.ledger.flops(ph), measured.flops(ph));
+        let rel = (a - b).abs() / b.abs().max(1.0);
+        flops_rel_err = flops_rel_err.max(rel);
+    }
+    CrossCheck {
+        predicted: candidate.ledger.comm,
+        measured: measured.comm,
+        predicted_col: candidate.ledger.comm_col,
+        measured_col: measured.comm_col,
+        predicted_row: candidate.ledger.comm_row,
+        measured_row: measured.comm_row,
+        flops_rel_err,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::SvmVariant;
+    use crate::tune::{tune, TuneRequest};
+
+    /// The trust anchor: every candidate of a small plan — 1D and grid,
+    /// classical and s-step, threaded and serial — cross-validates
+    /// bitwise against measured execution.
+    #[test]
+    fn every_candidate_cross_validates_bitwise_at_small_p() {
+        let ds = crate::data::gen_dense_classification(24, 16, 0.05, 12);
+        let problem = ProblemSpec::Svm {
+            c: 1.0,
+            variant: SvmVariant::L1,
+        };
+        let machine = MachineProfile::cray_ex();
+        let mut req = TuneRequest::new(6, 16);
+        req.s_list = vec![4];
+        req.t_list = vec![1, 2];
+        let plan = tune(&ds, Kernel::paper_rbf(), &problem, &req, &machine);
+        assert!(!plan.candidates.is_empty());
+        for c in &plan.candidates {
+            let check = cross_validate(&ds, Kernel::paper_rbf(), &problem, c, &req, &machine);
+            assert!(
+                check.traffic_exact(),
+                "pr={} pc={} t={} s={}: {}",
+                c.pr,
+                c.pc,
+                c.t,
+                c.s,
+                check.summary()
+            );
+            assert!(
+                check.flops_rel_err < 1e-6,
+                "pr={} s={}: flop rel err {}",
+                c.pr,
+                c.s,
+                check.flops_rel_err
+            );
+            assert!(check.summary().contains("traffic exact"));
+        }
+    }
+
+    #[test]
+    fn mismatches_are_reported_not_masked() {
+        let ds = crate::data::gen_dense_classification(24, 16, 0.05, 12);
+        let problem = ProblemSpec::Svm {
+            c: 1.0,
+            variant: SvmVariant::L1,
+        };
+        let machine = MachineProfile::cray_ex();
+        let mut req = TuneRequest::new(4, 16);
+        req.s_list = vec![4];
+        req.t_list = vec![1];
+        let plan = tune(&ds, Kernel::paper_rbf(), &problem, &req, &machine);
+        let mut broken = plan.best().clone();
+        broken.ledger.comm.words += 1;
+        let check =
+            cross_validate(&ds, Kernel::paper_rbf(), &problem, &broken, &req, &machine);
+        assert!(!check.traffic_exact());
+        assert!(check.summary().contains("MISMATCH"), "{}", check.summary());
+    }
+}

@@ -206,6 +206,7 @@ fn sweep_engines_agree_at_overlapping_p() {
         seed: 77,
         algo: AllreduceAlgo::Rabenseifner,
         measured_limit: 8, // forces measured
+        auto_tune: false,
     };
     let measured = sweep(&ds, Kernel::paper_rbf(), &problem, &base, &machine);
     let projected_cfg = SweepConfig {
