@@ -59,6 +59,7 @@ fn ablation_allreduce(quick: bool) {
             algo,
             measured_limit: 0,
             auto_tune: false,
+            ..Default::default()
         };
         let rows = sweep(&ds, Kernel::paper_rbf(), &problem, &cfg, &machine);
         let r = &rows[0];
@@ -222,6 +223,7 @@ fn ablation_machine(quick: bool) {
         algo: AllreduceAlgo::Rabenseifner,
         measured_limit: 0,
         auto_tune: false,
+        ..Default::default()
     };
     let mut speedups = Vec::new();
     for machine in [MachineProfile::cray_ex(), MachineProfile::cloud()] {

@@ -38,6 +38,7 @@ fn main() {
         algo: AllreduceAlgo::Rabenseifner,
         measured_limit: if quick { 2 } else { 8 },
         auto_tune: false,
+        ..Default::default()
     };
     // synthetic runs at full published scale by default (m = 2000 keeps
     // its allreduce messages bandwidth-relevant, the paper's regime);

@@ -31,6 +31,7 @@ fn main() {
         algo: AllreduceAlgo::Rabenseifner,
         measured_limit: 0,
         auto_tune: false,
+        ..Default::default()
     };
     let rows = sweep(&ds, Kernel::paper_rbf(), &problem, &cfg, &machine);
     print!("{}", scaling_table(&rows).markdown());

@@ -50,6 +50,7 @@ fn main() {
                     algo: AllreduceAlgo::Rabenseifner,
                     measured_limit: 0, // projected engine at these P
                     auto_tune: false,
+                    ..Default::default()
                 };
                 let rows = sweep(
                     &ds,

@@ -102,7 +102,12 @@ fn main() {
         c: 1.0,
         variant: SvmVariant::L1,
     };
-    let solver = SolverSpec { s: S, h, seed: SEED, cache_rows: 0, threads: 1, grid: None };
+    let solver = SolverSpec {
+        s: S,
+        h,
+        seed: SEED,
+        ..Default::default()
+    };
     let t = Instant::now();
     let dist = run_distributed(
         &ds,
@@ -146,7 +151,12 @@ fn main() {
         &reg,
         kernel,
         &ProblemSpec::Krr { lambda: 1.0, b: 64.min(reg.m()) },
-        &SolverSpec { s: 16, h: 400, seed: SEED, cache_rows: 0, threads: 1, grid: None },
+        &SolverSpec {
+            s: 16,
+            h: 400,
+            seed: SEED,
+            ..Default::default()
+        },
         4,
         AllreduceAlgo::Rabenseifner,
         &machine,

@@ -32,6 +32,7 @@ fn main() {
         algo: AllreduceAlgo::Rabenseifner,
         measured_limit: if quick { 2 } else { 8 },
         auto_tune: false,
+        ..Default::default()
     };
     let synth_scale = if quick { 0.01 } else { 0.1 };
     for (name, scale) in [("colon-cancer", 1.0), ("duke", 1.0), ("synthetic", synth_scale)] {

@@ -43,6 +43,9 @@ const KNOWN_FLAGS: &[(&str, bool /* takes a value */)] = &[
     ("t-list", true),
     ("grid", true),
     ("grid-rows", true),
+    ("grid-storage", true),
+    ("row-block", true),
+    ("mem-limit", true),
     ("s-max", true),
     ("t-max", true),
     ("top", true),
@@ -204,6 +207,19 @@ COMMON FLAGS:
                     bitwise-identical to the 1D layout over pc ranks).
   --grid-rows <pr>  scaling only: run every sweep point P divisible by
                     pr as a pr×(P/pr) grid (1 = the 1D sweep)   [1]
+  --grid-storage <m>  replicated | sharded          [replicated]
+                    sharded stores only each cell's block-cyclic row
+                    group (≈m/pr × ≈n/pc — per-rank memory finally
+                    shrinks with pr) and assembles sampled rows via a
+                    per-call fragment exchange; results are
+                    bitwise-identical to replicated. train-svm /
+                    train-krr / scaling.
+  --row-block <n>   Block-cyclic row-block size of the grid layout
+                    (bitwise-invariant wall-time/traffic knob; also a
+                    tuner candidate axis)     [4]
+  --mem-limit <MB>  tune: per-rank memory budget; candidates whose
+                    modeled footprint exceeds it rank after every
+                    feasible one (marked OVER, never hidden).
   --s-max <n>       tune: bound of the power-of-two s candidate grid
                     (--s-list overrides with an explicit list)  [256]
   --t-max <n>       tune: bound on thread candidates (always also
@@ -255,8 +271,8 @@ fn load_config(args: &Args) -> Result<Config> {
     // their comma syntax is not a config value.)
     for key in [
         "dataset", "scale", "kernel", "problem", "c", "lambda", "b", "h", "s", "p", "algo",
-        "machine", "seed", "gram-cache-rows", "threads", "grid", "grid-rows", "every",
-        "measured-limit", "s-max", "t-max", "top",
+        "machine", "seed", "gram-cache-rows", "threads", "grid", "grid-rows", "grid-storage",
+        "row-block", "mem-limit", "every", "measured-limit", "s-max", "t-max", "top",
     ] {
         if let Some(v) = args.flag(key) {
             cfg.set(key, v);
@@ -314,6 +330,48 @@ fn grid_rows_from(cfg: &Config) -> Result<usize> {
         "invalid value for 'grid-rows': need at least one row group"
     );
     Ok(pr)
+}
+
+/// Strictly read the grid-cell storage mode (`--grid-storage`,
+/// default replicated): `replicated` keeps the full feature shard per
+/// cell, `sharded` keeps only the block-cyclic row group and assembles
+/// sampled rows through the per-call fragment exchange (bitwise-equal
+/// results, smaller memory, extra exchange traffic).
+fn grid_storage_from(cfg: &Config) -> Result<crate::gram::GridStorage> {
+    let Some(raw) = cfg_str(cfg, "grid-storage")? else {
+        return Ok(crate::gram::GridStorage::Replicated);
+    };
+    crate::gram::GridStorage::parse(raw).ok_or_else(|| {
+        anyhow!(
+            "invalid value for 'grid-storage': expected replicated or sharded, got '{raw}'"
+        )
+    })
+}
+
+/// Strictly read the block-cyclic row-block size (`--row-block`,
+/// default `gram::DEFAULT_ROW_BLOCK`). A pure wall-time/traffic knob —
+/// results are bitwise identical for every value.
+fn row_block_from(cfg: &Config) -> Result<usize> {
+    let rb = cfg_usize(cfg, "row-block")?.unwrap_or(crate::gram::DEFAULT_ROW_BLOCK);
+    ensure!(
+        rb >= 1,
+        "invalid value for 'row-block': block size must be at least 1"
+    );
+    Ok(rb)
+}
+
+/// Strictly read the tuner's per-rank memory budget (`--mem-limit`, in
+/// decimal megabytes) and convert to f64 words; `None` disables the
+/// feasibility filter.
+fn mem_limit_from(cfg: &Config) -> Result<Option<u64>> {
+    let Some(mb) = cfg_f64(cfg, "mem-limit")? else {
+        return Ok(None);
+    };
+    ensure!(
+        mb.is_finite() && mb > 0.0,
+        "invalid value for 'mem-limit': expected a positive number of MB, got {mb}"
+    );
+    Ok(Some((mb * 1e6 / 8.0) as u64))
 }
 
 /// Strictly read the intra-rank worker-thread count (default 1).
@@ -413,6 +471,8 @@ fn solver_from(cfg: &Config) -> Result<SolverSpec> {
         // the launch's rank count); commands that take --grid overwrite
         // this via `grid_from`.
         grid: None,
+        grid_storage: grid_storage_from(cfg)?,
+        row_block: row_block_from(cfg)?,
     })
 }
 
@@ -462,7 +522,7 @@ fn cmd_train_svm(args: &Args) -> Result<String> {
         ds.n(),
         kernel.name(),
         problem.name(),
-        grid_tag(solver.grid),
+        grid_tag(solver.grid, solver.grid_storage),
         solver.threads,
         solver.s,
         solver.h
@@ -518,7 +578,7 @@ fn cmd_train_krr(args: &Args) -> Result<String> {
         ds.m(),
         ds.n(),
         kernel.name(),
-        grid_tag(solver.grid),
+        grid_tag(solver.grid, solver.grid_storage),
         solver.s,
         solver.h,
         res.projection.total_secs(),
@@ -527,10 +587,14 @@ fn cmd_train_krr(args: &Args) -> Result<String> {
     ))
 }
 
-/// Report tag for the layout: `1d` or `grid-PRxPC`.
-fn grid_tag(grid: Option<(usize, usize)>) -> String {
+/// Report tag for the layout: `1d`, `grid-PRxPC` (replicated cells) or
+/// `grid-PRxPC-sharded` (memory-sharded cells).
+fn grid_tag(grid: Option<(usize, usize)>, storage: crate::gram::GridStorage) -> String {
     match grid {
-        Some((pr, pc)) => format!("grid-{pr}x{pc}"),
+        Some((pr, pc)) => match storage {
+            crate::gram::GridStorage::Replicated => format!("grid-{pr}x{pc}"),
+            crate::gram::GridStorage::Sharded => format!("grid-{pr}x{pc}-sharded"),
+        },
         None => "1d".to_string(),
     }
 }
@@ -696,6 +760,8 @@ fn cmd_scaling(args: &Args) -> Result<String> {
         s_list: list_from(args, &cfg, "s-list", &[2, 4, 8, 16, 32, 64, 128, 256])?,
         t_list,
         pr: grid_rows_from(&cfg)?,
+        grid_storage: grid_storage_from(&cfg)?,
+        row_block: row_block_from(&cfg)?,
         h: cfg_usize(&cfg, "h")?.unwrap_or(256),
         seed: cfg_usize(&cfg, "seed")?.unwrap_or(0x5EED) as u64,
         algo: algo_from(&cfg)?,
@@ -786,6 +852,8 @@ fn cmd_tune(args: &Args) -> Result<String> {
     req.s_list = list_from(args, &cfg, "s-list", &[])?;
     req.t_list = list_from(args, &cfg, "t-list", &[])?;
     req.algo = algo_from(&cfg)?;
+    req.row_block = row_block_from(&cfg)?;
+    req.mem_limit_words = mem_limit_from(&cfg)?;
     req.seed = cfg_usize(&cfg, "seed")?.unwrap_or(0x5EED) as u64;
 
     let plan = crate::tune::tune(&ds, kernel, &problem, &req, &machine);
@@ -819,12 +887,16 @@ fn cmd_tune(args: &Args) -> Result<String> {
     let t = crate::tune::tune_table(&plan, top);
     out.push_str(&if args.bool_flag("csv") { t.csv() } else { t.markdown() });
     out.push_str(&format!(
-        "best: layout={}, t={}, s={} → {:.4e} s predicted ({}-bound)\n",
+        "best: layout={}, storage={}, rb={}, t={}, s={} → {:.4e} s predicted ({}-bound, \
+         {:.2} MB/rank)\n",
         best.layout_tag(),
+        best.storage_tag(),
+        best.row_block,
         best.t,
         best.s,
         best.predicted.total_secs(),
         best.predicted.dominant(),
+        best.mem_words() as f64 * 8.0 / 1e6,
     ));
     out.push_str(&format!("run it: {}\n", tune_run_line(best, &cfg, &problem, &plan, h)?));
     match xval {
@@ -1099,6 +1171,75 @@ mod tests {
         assert!(krr.contains("layout=grid-4x1"), "{krr}");
     }
 
+    /// The sharded-storage acceptance at the CLI level: a sharded grid
+    /// run reports its storage tag and reproduces the replicated grid
+    /// (and therefore the 1D-over-pc) bits exactly.
+    #[test]
+    fn grid_storage_sharded_runs_and_matches_replicated_bitwise() {
+        let gap = |out: &str| {
+            out.lines()
+                .find(|l| l.starts_with("duality gap"))
+                .unwrap()
+                .to_string()
+        };
+        let base = "train-svm --dataset diabetes --scale 0.1 --kernel rbf --h 120 --s 8 --p 4 \
+                    --grid 2x2";
+        let replicated = run(argv(base)).unwrap();
+        assert!(replicated.contains("layout=grid-2x2"), "{replicated}");
+        let sharded = run(argv(&format!("{base} --grid-storage sharded"))).unwrap();
+        assert!(sharded.contains("layout=grid-2x2-sharded"), "{sharded}");
+        assert_eq!(gap(&replicated), gap(&sharded));
+        // Explicit replicated is accepted and identical in output shape.
+        let explicit = run(argv(&format!("{base} --grid-storage replicated"))).unwrap();
+        assert_eq!(gap(&explicit), gap(&replicated));
+        // row-block is bitwise-invariant through the CLI too.
+        let rb = run(argv(&format!("{base} --grid-storage sharded --row-block 2"))).unwrap();
+        assert_eq!(gap(&rb), gap(&replicated));
+    }
+
+    #[test]
+    fn grid_storage_row_block_and_mem_limit_are_strictly_validated() {
+        for (bad, key) in [
+            ("train-svm --p 4 --grid 2x2 --grid-storage full", "grid-storage"),
+            ("train-svm --p 4 --grid 2x2 --grid-storage 1", "grid-storage"),
+            ("train-svm --p 4 --grid 2x2 --row-block 0", "row-block"),
+            ("train-svm --row-block 2.5", "row-block"),
+            ("tune --mem-limit 0", "mem-limit"),
+            ("tune --mem-limit -3", "mem-limit"),
+            ("tune --mem-limit big", "mem-limit"),
+            ("scaling --grid-rows 2 --grid-storage shardd", "grid-storage"),
+        ] {
+            let err = run(argv(bad)).expect_err(bad);
+            let msg = format!("{err:#}");
+            assert!(msg.contains(&format!("'{key}'")), "{bad}: {msg}");
+        }
+    }
+
+    #[test]
+    fn scaling_grid_storage_adds_storage_column() {
+        let out = run(argv(
+            "scaling --dataset colon-cancer --scale 0.3 --h 32 --p-list 4 --s-list 4 \
+             --grid-rows 2 --grid-storage sharded --measured-limit 4",
+        ))
+        .unwrap();
+        assert!(out.contains("storage"), "{out}");
+        assert!(out.contains("sharded"), "{out}");
+        assert!(out.contains("mem (MB)"), "{out}");
+    }
+
+    #[test]
+    fn tune_mem_limit_filters_and_reports_fit() {
+        let out = run(argv(
+            "tune --dataset diabetes --scale 0.1 --p 4 --h 16 --s-list 4 --t-list 1 \
+             --mem-limit 0.001 --top 100",
+        ))
+        .unwrap();
+        // A 1 KB budget cannot fit these shards: the fit column flags it.
+        assert!(out.contains("OVER"), "{out}");
+        assert!(out.contains("mem (MB)"), "{out}");
+        assert!(out.contains("storage"), "{out}");
+    }
+
     #[test]
     fn grid_flag_is_strictly_validated() {
         for bad in [
@@ -1244,8 +1385,10 @@ mod tests {
         // The overridden coefficient is visible in the header (the tag
         // alone would misattribute the plan to the stock profile).
         assert!(out.contains("α=5.0e-3"), "{out}");
-        // 4 factorizations of 8 × s {1, 2, 8} × t {1, 2}.
-        assert!(out.contains("(24 candidates)"), "{out}");
+        // 1D: s {1, 2, 8} × t {1, 2} = 6; each genuine grid of 8
+        // ((2,4), (4,2), (8,1)) adds 2 storage × 3 row-block × 3 s ×
+        // 2 t = 36.
+        assert!(out.contains("(114 candidates)"), "{out}");
         // And the handoff line reproduces the override spec.
         assert!(out.contains("--machine cray-ex:alpha=5e-3,cores=4"), "{out}");
     }

@@ -70,6 +70,7 @@ pub fn breakdown(
                     cache_rows: 0,
                     threads,
                     grid: None,
+                    ..Default::default()
                 };
                 run_distributed(ds, kernel, problem, &solver, p, algo, machine).projection
             }

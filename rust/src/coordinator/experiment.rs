@@ -4,11 +4,14 @@
 use crate::comm::{run_ranks, AllreduceAlgo, Communicator, SelfComm};
 use crate::costmodel::{Ledger, MachineProfile, Projection};
 use crate::data::Dataset;
+use crate::gram::GridStorage;
 use crate::kernelfn::Kernel;
 use crate::solvers::{
     bdcd, bdcd_sstep, dcd, dcd_sstep, DistGram, GramOracle, GridGram, KrrParams, LocalGram,
     SvmParams, SvmVariant,
 };
+
+use super::scaling::mem_words_per_rank;
 
 /// Which optimization problem to solve.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -72,6 +75,18 @@ pub struct SolverSpec {
     /// ranks; results are bitwise identical to the 1D layout over `pc`
     /// ranks (see [`crate::gram`]). `None` is the paper's 1D layout.
     pub grid: Option<(usize, usize)>,
+    /// Storage mode of the grid cells ([`GridStorage`]; ignored for the
+    /// 1D layout): `Replicated` keeps the full `m × ≈n/pc` feature
+    /// shard on every cell, `Sharded` keeps only the cell's block-cyclic
+    /// row group and assembles sampled rows through the per-call
+    /// fragment exchange. Must be identical on every rank (the exchange
+    /// is a collective); results are bitwise identical either way.
+    pub grid_storage: GridStorage,
+    /// Block-cyclic row-block size of the grid layout (`>= 1`; ignored
+    /// for 1D). A pure wall-time/traffic knob — results are bitwise
+    /// identical for every value. Tunable via `--row-block` and the
+    /// auto-tuner's candidate grid.
+    pub row_block: usize,
 }
 
 impl Default for SolverSpec {
@@ -83,6 +98,8 @@ impl Default for SolverSpec {
             cache_rows: 0,
             threads: 1,
             grid: None,
+            grid_storage: GridStorage::Replicated,
+            row_block: crate::gram::DEFAULT_ROW_BLOCK,
         }
     }
 }
@@ -106,6 +123,8 @@ impl SolverSpec {
             cache_rows,
             threads: candidate.t,
             grid: candidate.grid(),
+            grid_storage: candidate.storage,
+            row_block: candidate.row_block,
         }
     }
 }
@@ -174,6 +193,7 @@ pub fn run_serial(
     let mut oracle =
         LocalGram::with_opts(ds.a.clone(), kernel, solver.cache_rows, solver.threads.max(1));
     let alpha = run_solver(&mut oracle, &ds.y, problem, solver, &mut ledger);
+    ledger.mem_words = mem_words_per_rank(ds, problem, solver, 1);
     let mut comm = SelfComm::new();
     let _ = &mut comm;
     let wall = t0.elapsed().as_secs_f64();
@@ -231,7 +251,8 @@ pub fn run_distributed(
                     algo,
                     pr,
                     pc,
-                    crate::gram::DEFAULT_ROW_BLOCK,
+                    solver.row_block.max(1),
+                    solver.grid_storage,
                     solver.cache_rows,
                     solver.threads.max(1),
                 );
@@ -239,6 +260,7 @@ pub fn run_distributed(
                 ledger.comm = oracle.comm_stats();
                 ledger.comm_col = oracle.col_stats();
                 ledger.comm_row = oracle.row_stats();
+                ledger.comm_exch = oracle.exch_stats();
                 alpha
             }
             None => {
@@ -266,7 +288,10 @@ pub fn run_distributed(
         debug_assert_eq!(a.len(), alpha.len());
     }
     let per_rank: Vec<Ledger> = outs.into_iter().map(|(_, l)| l).collect();
-    let critical = Ledger::critical_path(&per_rank);
+    let mut critical = Ledger::critical_path(&per_rank);
+    // Same model the analytic engines use — measured and projected rows
+    // report identical memory (it is a static function of the config).
+    critical.mem_words = mem_words_per_rank(ds, problem, solver, p);
     let projection = machine.project_hybrid(&critical, solver.threads);
     RunResult {
         alpha,
@@ -299,6 +324,7 @@ mod tests {
                 cache_rows: 0,
                 threads: 1,
                 grid: None,
+                ..Default::default()
             },
         )
     }
@@ -329,8 +355,18 @@ mod tests {
         let machine = MachineProfile::cray_ex();
         let kernel = Kernel::paper_rbf();
         let problem = ProblemSpec::Krr { lambda: 1.0, b: 3 };
-        let classical = SolverSpec { s: 1, h: 40, seed: 4, cache_rows: 0, threads: 1, grid: None };
-        let sstep = SolverSpec { s: 8, h: 40, seed: 4, cache_rows: 0, threads: 1, grid: None };
+        let classical = SolverSpec {
+            s: 1,
+            h: 40,
+            seed: 4,
+            ..Default::default()
+        };
+        let sstep = SolverSpec {
+            s: 8,
+            h: 40,
+            seed: 4,
+            ..Default::default()
+        };
         let a_serial = run_serial(&ds, kernel, &problem, &classical, &machine).alpha;
         let a_dist = run_distributed(
             &ds,
@@ -448,7 +484,12 @@ mod tests {
             &ds,
             kernel,
             &problem,
-            &SolverSpec { s: 1, h: 64, seed: 9, cache_rows: 0, threads: 1, grid: None },
+            &SolverSpec {
+                s: 1,
+                h: 64,
+                seed: 9,
+                ..Default::default()
+            },
             4,
             AllreduceAlgo::Rabenseifner,
             &machine,
@@ -457,7 +498,12 @@ mod tests {
             &ds,
             kernel,
             &problem,
-            &SolverSpec { s: 16, h: 64, seed: 9, cache_rows: 0, threads: 1, grid: None },
+            &SolverSpec {
+                s: 16,
+                h: 64,
+                seed: 9,
+                ..Default::default()
+            },
             4,
             AllreduceAlgo::Rabenseifner,
             &machine,
@@ -484,7 +530,12 @@ mod tests {
                 c: 1.0,
                 variant: SvmVariant::L1,
             },
-            &SolverSpec { s: 4, h: 8, seed: 3, cache_rows: 0, threads: 1, grid: None },
+            &SolverSpec {
+                s: 4,
+                h: 8,
+                seed: 3,
+                ..Default::default()
+            },
             4,
             AllreduceAlgo::Rabenseifner,
             &machine,

@@ -97,12 +97,15 @@ fn engine_tag(e: Engine) -> &'static str {
 }
 
 /// Strong-scaling rows → markdown (the Figures 3/5/6 table form, plus
-/// the intra-rank thread count of each hybrid point and the process-grid
-/// factorization — `-` for the 1D layout, `PRxPC` for 2D points).
+/// the intra-rank thread count of each hybrid point, the process-grid
+/// factorization — `-` for the 1D layout, `PRxPC` for 2D points — the
+/// grid-cell storage mode, and the per-rank resident-memory model in
+/// MB: `Ledger::mem_per_rank` × 8 bytes/word, the column the sharded
+/// storage exists to shrink).
 pub fn scaling_table(rows: &[SweepRow]) -> Table {
     let mut t = Table::new(vec![
-        "P", "t", "grid", "engine", "tuned", "classical (s)", "s-step best (s)", "best s",
-        "speedup",
+        "P", "t", "grid", "storage", "mem (MB)", "engine", "tuned", "classical (s)",
+        "s-step best (s)", "best s", "speedup",
     ]);
     for r in rows {
         t.row(vec![
@@ -111,6 +114,12 @@ pub fn scaling_table(rows: &[SweepRow]) -> Table {
             r.grid
                 .map(|(pr, pc)| format!("{pr}x{pc}"))
                 .unwrap_or_else(|| "-".to_string()),
+            if r.grid.is_some() {
+                r.storage.name().to_string()
+            } else {
+                "-".to_string()
+            },
+            format!("{:.2}", r.mem_words as f64 * 8.0 / 1e6),
             engine_tag(r.engine).to_string(),
             if r.tuned { "auto" } else { "-" }.to_string(),
             format!("{:.4e}", r.classical.total_secs()),

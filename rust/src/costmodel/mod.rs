@@ -44,11 +44,15 @@ pub enum Phase {
     Update,
     /// Kernel rows served from the gram engine's row cache.
     CacheHit,
+    /// Sampled-row fragment assembly of the sharded 2D grid storage
+    /// (`gram::GridStorage::Sharded`): the pre-product ring allgather
+    /// that materializes the sampled slice on every cell.
+    FragmentExchange,
 }
 
 impl Phase {
     /// Every phase, in report order.
-    pub const ALL: [Phase; 7] = [
+    pub const ALL: [Phase; 8] = [
         Phase::KernelCompute,
         Phase::Allreduce,
         Phase::GradCorr,
@@ -56,6 +60,7 @@ impl Phase {
         Phase::MemReset,
         Phase::Update,
         Phase::CacheHit,
+        Phase::FragmentExchange,
     ];
 
     /// Short report tag.
@@ -68,6 +73,7 @@ impl Phase {
             Phase::MemReset => "memreset",
             Phase::Update => "update",
             Phase::CacheHit => "cachehit",
+            Phase::FragmentExchange => "exchange",
         }
     }
 
@@ -76,7 +82,7 @@ impl Phase {
     }
 }
 
-const NPHASE: usize = 7;
+const NPHASE: usize = 8;
 
 /// Row-cache accounting for the gram engine (see `crate::gram`): how many
 /// sampled rows were served from cache, and the communication that
@@ -152,8 +158,22 @@ pub struct Ledger {
     /// Row-subcommunicator (slice allgather) traffic of a 2D grid run.
     /// Zero for local and 1D runs.
     pub comm_row: CommStats,
+    /// Fragment-exchange traffic of a sharded-storage 2D grid run
+    /// (`gram::GridStorage::Sharded`): the setup ring plus the per-call
+    /// sampled-row rings over the row subcommunicator. Included in
+    /// `comm` (which stays the grand per-rank total); zero for local,
+    /// 1D and replicated-grid runs.
+    pub comm_exch: CommStats,
     /// Gram-engine row-cache accounting (all zeros with the cache off).
     pub cache: CacheStats,
+    /// Per-rank resident-memory model in f64 words (data shard + row
+    /// cache + solver/engine scratch; see
+    /// `coordinator::scaling::mem_words_per_rank`). Identical between
+    /// the measured and analytic engines — both call the same model —
+    /// and surfaced as the scaling table's memory column and the
+    /// auto-tuner's `--mem-limit` feasibility input. Zero when no run
+    /// populated it.
+    pub mem_words: u64,
 }
 
 impl Ledger {
@@ -221,9 +241,17 @@ impl Ledger {
             out.comm = out.comm.max(l.comm);
             out.comm_col = out.comm_col.max(l.comm_col);
             out.comm_row = out.comm_row.max(l.comm_row);
+            out.comm_exch = out.comm_exch.max(l.comm_exch);
             out.cache = out.cache.max(l.cache);
+            out.mem_words = out.mem_words.max(l.mem_words);
         }
         out
+    }
+
+    /// The per-rank resident-memory model in f64 words (see
+    /// [`Ledger::mem_words`]).
+    pub fn mem_per_rank(&self) -> u64 {
+        self.mem_words
     }
 }
 
@@ -386,7 +414,10 @@ impl MachineProfile {
 
     /// Project a critical-path ledger onto this machine: returns per-phase
     /// projected seconds. Compute phases use `γ·flops`; the allreduce
-    /// phase uses `β·words + φ·rounds` from the measured traffic.
+    /// phase uses `β·words + φ·rounds` from the measured traffic, with
+    /// the sharded grid storage's fragment-exchange share
+    /// (`comm_exch ⊆ comm`) split out into its own phase so the
+    /// breakdown shows what the memory sharding costs on the wire.
     pub fn project(&self, critical: &Ledger) -> Projection {
         let mut per_phase = [0.0; NPHASE];
         for ph in Phase::ALL {
@@ -399,8 +430,14 @@ impl MachineProfile {
             let factor = 1.0 + (self.blas1_penalty - 1.0) / avg_rows;
             per_phase[Phase::KernelCompute.idx()] *= factor;
         }
+        // `comm` is the grand total; saturating keeps a hand-built
+        // ledger with exchange-only counters from underflowing.
+        let ex = critical.comm_exch;
         per_phase[Phase::Allreduce.idx()] +=
-            self.beta * critical.comm.words as f64 + self.phi * critical.comm.rounds as f64;
+            self.beta * critical.comm.words.saturating_sub(ex.words) as f64
+                + self.phi * critical.comm.rounds.saturating_sub(ex.rounds) as f64;
+        per_phase[Phase::FragmentExchange.idx()] +=
+            self.beta * ex.words as f64 + self.phi * ex.rounds as f64;
         per_phase[Phase::Solve.idx()] += self.iter_overhead * critical.iters;
         Projection {
             per_phase,
@@ -591,6 +628,36 @@ mod tests {
         assert_eq!(p.phase_secs(Phase::CacheHit), 0.0);
         assert!(Phase::ALL.contains(&Phase::CacheHit));
         assert_eq!(Phase::CacheHit.name(), "cachehit");
+    }
+
+    /// The fragment-exchange share of the traffic is split out of the
+    /// allreduce phase without changing the total — and the prediction
+    /// (which buckets by coefficient, not phase) is unaffected.
+    #[test]
+    fn projection_splits_exchange_traffic_out_of_allreduce() {
+        let mut l = Ledger::new();
+        l.comm.words = 1000;
+        l.comm.rounds = 60;
+        l.comm_exch.words = 300;
+        l.comm_exch.rounds = 20;
+        let m = MachineProfile::cray_ex();
+        let p = m.project(&l);
+        let ar = p.phase_secs(Phase::Allreduce);
+        let ex = p.phase_secs(Phase::FragmentExchange);
+        assert!((ar - (m.beta * 700.0 + m.phi * 40.0)).abs() < 1e-18);
+        assert!((ex - (m.beta * 300.0 + m.phi * 20.0)).abs() < 1e-18);
+        // Total equals the unsplit charge.
+        assert!((ar + ex - (m.beta * 1000.0 + m.phi * 60.0)).abs() < 1e-15);
+        let pred = m.predict(&l, 1);
+        assert_eq!(pred.bandwidth_secs, m.beta * 1000.0);
+        assert_eq!(pred.latency_secs, m.phi * 60.0);
+        assert_eq!(Phase::FragmentExchange.name(), "exchange");
+        // mem accounting rides the critical path by max.
+        let mut a = Ledger::new();
+        a.mem_words = 10;
+        let mut b = Ledger::new();
+        b.mem_words = 25;
+        assert_eq!(Ledger::critical_path(&[a, b]).mem_per_rank(), 25);
     }
 
     #[test]

@@ -208,6 +208,11 @@ impl<P: ProductStage, R: ReduceStage> GramEngine<P, R> {
     fn compute_block(&mut self, rows: &[usize], out: &mut Mat, ledger: &mut Ledger) {
         debug_assert_eq!(out.nrows(), rows.len());
         debug_assert_eq!(out.ncols(), self.m);
+        if self.reduce.has_exchange() {
+            // Sharded grid storage: assemble the sampled rows' fragments
+            // from the row subcommunicator before the product reads them.
+            ledger.time(Phase::FragmentExchange, || self.reduce.exchange(rows));
+        }
         let cost = ledger.time(Phase::KernelCompute, || self.product.compute(rows, out));
         ledger.add_flops(Phase::KernelCompute, cost.flops);
         if self.reduce.is_active() {

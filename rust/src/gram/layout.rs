@@ -9,6 +9,54 @@
 /// determinism contract in [`crate::gram`]).
 pub const DEFAULT_ROW_BLOCK: usize = 4;
 
+/// How a grid cell stores its slice of the data matrix
+/// ([`Layout::Grid`] only; the 1D layouts always replicate nothing).
+///
+/// * [`GridStorage::Replicated`] — the cell keeps the *full* feature
+///   shard (`m × ≈n/pc`): the sampled rows of every gram call are read
+///   locally, and `pr` splits only compute. Per-rank memory does not
+///   shrink with `pr`.
+/// * [`GridStorage::Sharded`] — the cell keeps **only its block-cyclic
+///   row group of the shard** (`≈m/pr × ≈n/pc`), the true 2D data
+///   partition. A pre-product *fragment exchange* over the row
+///   subcommunicator assembles the sampled rows each gram call (see
+///   `GridReduce::exchange`), after which the product — and therefore
+///   every solver bit — is identical to the replicated path.
+///
+/// Storage is a pure memory/traffic knob: like `threads`, `row_block`
+/// and `pr`, it never changes a bit of arithmetic (the exchanged
+/// fragments are verbatim copies of the stored rows). It must be
+/// identical on every rank — the exchange is a collective.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum GridStorage {
+    /// Full `m × ≈n/pc` feature shard on every cell (the PR 3 layout).
+    #[default]
+    Replicated,
+    /// Only the cell's `≈m/pr × ≈n/pc` row group; sampled rows are
+    /// assembled by the per-call fragment exchange.
+    Sharded,
+}
+
+impl GridStorage {
+    /// Canonical CLI/report name (`replicated`, `sharded`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            GridStorage::Replicated => "replicated",
+            GridStorage::Sharded => "sharded",
+        }
+    }
+
+    /// Parse a [`Self::name`]-style string (plus the `rep`/`shard`
+    /// shorthands); `None` for unknown names.
+    pub fn parse(s: &str) -> Option<GridStorage> {
+        match s {
+            "replicated" | "rep" => Some(GridStorage::Replicated),
+            "sharded" | "shard" => Some(GridStorage::Sharded),
+            _ => None,
+        }
+    }
+}
+
 /// Data layout behind a gram engine. Purely descriptive — the product
 /// stage already operates on whatever slice it was built from — but
 /// carried explicitly so reports, assertions and the 2D grid pipeline
@@ -99,6 +147,17 @@ pub fn block_cyclic_rows(m: usize, groups: usize, group: usize, block: usize) ->
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn grid_storage_parse_roundtrip_and_default() {
+        for s in [GridStorage::Replicated, GridStorage::Sharded] {
+            assert_eq!(GridStorage::parse(s.name()), Some(s));
+        }
+        assert_eq!(GridStorage::parse("shard"), Some(GridStorage::Sharded));
+        assert_eq!(GridStorage::parse("rep"), Some(GridStorage::Replicated));
+        assert_eq!(GridStorage::parse("nope"), None);
+        assert_eq!(GridStorage::default(), GridStorage::Replicated);
+    }
 
     #[test]
     fn shard_predicate() {

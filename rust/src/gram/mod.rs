@@ -63,6 +63,23 @@
 //! threshold, so the contract holds. `cargo test` pins all of this
 //! (`rust/tests/gram_engine_props.rs`).
 //!
+//! [`GridStorage`] extends the contract along a fourth axis: a
+//! `Sharded` grid cell stores only its block-cyclic row group of the
+//! feature shard (`≈m/pr × ≈n/pc` — per-rank memory finally shrinks
+//! with `pr`) and assembles each gram call's sampled rows through the
+//! pre-product **fragment exchange** (`GridReduce::exchange` → ring
+//! `allgatherv` over the row subcommunicator → [`FragmentSlot`]). The
+//! exchanged fragments are *verbatim copies* of the stored rows
+//! ([`crate::sparse::Csr::pack_rows`] / `from_packed` round-trip
+//! bitwise), the product then performs the identical arithmetic on
+//! them, and the construction-time row norms are gathered the same way
+//! before the unchanged column allreduce — so a sharded solve is
+//! **bitwise identical to the replicated grid solve** (and therefore to
+//! 1D over `pc` ranks) for every `(pr, pc, row_block, cache, threads)`.
+//! Storage trades memory for exchange traffic only; it must be
+//! identical on every rank (the exchange is a collective). Pinned by
+//! `rust/tests/grid_layout_props.rs`.
+//!
 //! The same row-wise independence makes the product stage **thread-count
 //! invariant**: [`crate::parallel::ParallelProduct`] splits the sampled
 //! rows of any inner product across `t` scoped worker threads with a
@@ -109,9 +126,10 @@ mod reduce;
 pub use cache::RowCache;
 pub use engine::GramEngine;
 pub use epilogue::Epilogue;
-pub use layout::{block_cyclic_rows, Layout, DEFAULT_ROW_BLOCK};
+pub use layout::{block_cyclic_rows, GridStorage, Layout, DEFAULT_ROW_BLOCK};
 pub use product::{
-    BlockKind, CsrProduct, GridProduct, LowRankProduct, ProductCost, ProductStage,
+    BlockKind, CsrProduct, FragmentSlot, GridProduct, LowRankProduct, ProductCost, ProductStage,
+    TRANSPOSE_GRAM_MAX_DENSITY,
 };
 pub use reduce::{AllreduceSum, GridReduce, NoReduce, ReduceStage};
 

@@ -1,6 +1,7 @@
 //! Linear-product stage: the (partial) sampled gram block.
 
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
 
 use crate::dense::Mat;
 use crate::sparse::Csr;
@@ -166,12 +167,86 @@ impl ProductStage for LowRankProduct {
     }
 }
 
+/// The per-call rendezvous between the sharded grid layout's fragment
+/// exchange and its product stage ([`crate::gram::GridStorage::Sharded`]):
+/// `GridReduce::exchange` assembles the sampled rows' fragments from the
+/// row subcommunicator and [`Self::fill`]s them here; the sharded
+/// [`GridProduct`] then reads them in place of the full shard it no
+/// longer stores. Shared by `Arc` between the reduce stage (one writer,
+/// before the product runs) and every [`crate::parallel::ParallelProduct`]
+/// worker replica (concurrent readers) — the `RwLock` is uncontended on
+/// the hot path and carries no ordering decisions, so determinism is
+/// untouched.
+pub struct FragmentSlot {
+    inner: RwLock<Assembled>,
+}
+
+/// The assembled sampled rows of one gram call: a CSR of the
+/// deduplicated rows (fragment order) plus the global-row → CSR-row map.
+struct Assembled {
+    rows: Csr,
+    pos: HashMap<usize, usize>,
+}
+
+impl FragmentSlot {
+    /// An empty slot for shard width `ncols` (filled per gram call).
+    pub fn new(ncols: usize) -> FragmentSlot {
+        FragmentSlot {
+            inner: RwLock::new(Assembled {
+                rows: Csr::empty(0, ncols),
+                pos: HashMap::new(),
+            }),
+        }
+    }
+
+    /// Install this call's assembled rows: `rows[pos[t]]` is global
+    /// sampled row `t`'s fragment (a verbatim copy of the stored row).
+    pub fn fill(&self, rows: Csr, pos: HashMap<usize, usize>) {
+        let mut inner = self.inner.write().expect("fragment slot poisoned");
+        inner.rows = rows;
+        inner.pos = pos;
+    }
+
+    /// Gather the fragments of `sample` (global row ids, duplicates
+    /// allowed) in sample order. Panics if the exchange for this call
+    /// has not run — the engine always exchanges before the product.
+    fn gather(&self, sample: &[usize]) -> Csr {
+        let inner = self.inner.read().expect("fragment slot poisoned");
+        let idxs: Vec<usize> = sample
+            .iter()
+            .map(|t| {
+                *inner.pos.get(t).unwrap_or_else(|| {
+                    panic!("sampled row {t} missing from the fragment exchange")
+                })
+            })
+            .collect();
+        inner.rows.gather_rows(&idxs)
+    }
+}
+
+/// Where a grid cell's product reads the *sampled* rows from.
+#[derive(Clone)]
+enum SampleSource {
+    /// Replicated storage: the full-row feature shard (`m × ≈n/pc`).
+    Replicated(Arc<Csr>),
+    /// Sharded storage: the per-call fragment slot, plus the sample
+    /// count `m` the dropped full shard would have reported.
+    Sharded {
+        slot: Arc<FragmentSlot>,
+        m: usize,
+    },
+}
+
 /// Grid-cell product: the partial sampled gram of one `pr × pc` grid
-/// cell ([`crate::gram::Layout::Grid`]). Holds this cell's full-row
-/// feature shard (`m × ≈n/pc`) plus the row subset its row group owns
-/// block-cyclically, and computes, per sampled row, the partial inner
-/// products against *owned target rows only* — `1/(pr·pc)` of the global
-/// flops, versus the 1D product's `1/P` over the full output width.
+/// cell ([`crate::gram::Layout::Grid`]). Holds the row subset its row
+/// group owns block-cyclically and computes, per sampled row, the
+/// partial inner products against *owned target rows only* —
+/// `1/(pr·pc)` of the global flops, versus the 1D product's `1/P` over
+/// the full output width. The *sampled* side comes from one of two
+/// storage modes ([`crate::gram::GridStorage`]): the replicated full-row
+/// shard (`m × ≈n/pc`, gathered locally), or — the true 2D data
+/// partition — the per-call [`FragmentSlot`] the fragment exchange
+/// fills, in which case the cell stores only its `≈m/pr × ≈n/pc` block.
 ///
 /// **Packed-prefix contract** (shared with `GridReduce`, its mandatory
 /// pipeline partner): `compute` writes the `w = |owned|` partial values
@@ -194,9 +269,9 @@ impl ProductStage for LowRankProduct {
 /// matrices), as [`crate::parallel::ParallelProduct`] requires.
 #[derive(Clone)]
 pub struct GridProduct {
-    /// The full-row feature shard (`m × ≈n/pc`) — the sampled rows are
-    /// gathered from here, so sample indices stay global.
-    shard: Arc<Csr>,
+    /// Where the sampled rows come from (sample indices stay global in
+    /// both modes).
+    source: SampleSource,
     /// The owned target rows of the shard (`|owned| × ≈n/pc`).
     owned: Arc<Csr>,
     /// Cached transpose of `owned` for the sparse fast path (None for
@@ -207,25 +282,68 @@ pub struct GridProduct {
     scratch: Vec<f64>,
     /// `k × |owned|` staging block (private per clone).
     block: Mat,
+    /// `0..k` identity sample for the fragment-CSR kernels (private per
+    /// clone, reused across calls).
+    ident: Vec<usize>,
+}
+
+/// Owned target rows must be strictly ascending ([`crate::gram::block_cyclic_rows`]
+/// order): the grid reduce reassembles slices by that order, so a
+/// malformed row group would silently scatter reduced values to the
+/// wrong sample columns. A real assert, not a `debug_assert` — one pass
+/// over the row list at construction is free, and release builds must
+/// fail loudly too (mirrors the `add_into` length check).
+fn assert_owned_ascending(owned_rows: &[usize]) {
+    assert!(
+        owned_rows.windows(2).all(|w| w[0] < w[1]),
+        "grid row group must be strictly ascending (got a repeated or \
+         out-of-order global row index)"
+    );
 }
 
 impl GridProduct {
-    /// Build from this cell's feature shard and the ascending global row
-    /// indices its row group owns (see
+    /// Build a replicated-storage cell from its full feature shard and
+    /// the ascending global row indices its row group owns (see
     /// [`crate::gram::block_cyclic_rows`]).
     pub fn new(shard: Csr, owned_rows: &[usize]) -> GridProduct {
-        debug_assert!(owned_rows.windows(2).all(|w| w[0] < w[1]), "owned rows ascending");
+        assert_owned_ascending(owned_rows);
         let owned = shard.gather_rows(owned_rows);
         // Path choice by the FULL shard's density — identical to the 1D
         // CsrProduct on this shard, so grid partials replay its bits.
         let owned_t = (shard.density() < TRANSPOSE_GRAM_MAX_DENSITY)
             .then(|| Arc::new(owned.transpose()));
         GridProduct {
-            shard: Arc::new(shard),
+            source: SampleSource::Replicated(Arc::new(shard)),
             owned: Arc::new(owned),
             owned_t,
             scratch: Vec::new(),
             block: Mat::zeros(0, 0),
+            ident: Vec::new(),
+        }
+    }
+
+    /// Build a sharded-storage cell: only the owned row group is stored
+    /// (`owned`, the `shard.gather_rows(owned_rows)` of the full shard
+    /// this cell never keeps); sampled rows are read from `slot`, which
+    /// `GridReduce::exchange` fills each call. `full_density` is the
+    /// full shard's density — the same path decision the replicated
+    /// (and 1D) product makes, reproducible from the exchanged nnz
+    /// table — and `m` the global sample count.
+    pub fn sharded(
+        owned: Arc<Csr>,
+        full_density: f64,
+        m: usize,
+        slot: Arc<FragmentSlot>,
+    ) -> GridProduct {
+        let owned_t = (full_density < TRANSPOSE_GRAM_MAX_DENSITY)
+            .then(|| Arc::new(owned.transpose()));
+        GridProduct {
+            source: SampleSource::Sharded { slot, m },
+            owned,
+            owned_t,
+            scratch: Vec::new(),
+            block: Mat::zeros(0, 0),
+            ident: Vec::new(),
         }
     }
 
@@ -234,15 +352,39 @@ impl GridProduct {
         self.owned.nrows()
     }
 
-    /// The underlying feature shard.
-    pub fn shard(&self) -> &Csr {
-        &self.shard
+    /// Stored entries of the owned row group (the sharded cell's entire
+    /// data residency).
+    pub fn owned_nnz(&self) -> usize {
+        self.owned.nnz()
+    }
+
+    /// The full-row feature shard (replicated storage only — a sharded
+    /// cell stores just its owned row group, which is the point).
+    pub fn shard(&self) -> Option<&Csr> {
+        match &self.source {
+            SampleSource::Replicated(shard) => Some(shard),
+            SampleSource::Sharded { .. } => None,
+        }
+    }
+
+    /// Resident stored entries of this cell's sample source: the full
+    /// shard's nnz (replicated) or zero (sharded — the owned rows are
+    /// counted by the caller, and the per-call assembled fragments are
+    /// transient scratch).
+    pub fn resident_source_nnz(&self) -> usize {
+        match &self.source {
+            SampleSource::Replicated(shard) => shard.nnz(),
+            SampleSource::Sharded { .. } => 0,
+        }
     }
 }
 
 impl ProductStage for GridProduct {
     fn m(&self) -> usize {
-        self.shard.nrows()
+        match &self.source {
+            SampleSource::Replicated(shard) => shard.nrows(),
+            SampleSource::Sharded { m, .. } => *m,
+        }
     }
 
     fn kind(&self) -> BlockKind {
@@ -253,18 +395,41 @@ impl ProductStage for GridProduct {
         let k = sample.len();
         let w = self.owned.nrows();
         debug_assert_eq!(q.nrows(), k);
-        debug_assert_eq!(q.ncols(), self.shard.nrows());
+        debug_assert_eq!(q.ncols(), self.m());
         if self.block.nrows() != k || self.block.ncols() != w {
             self.block = Mat::zeros(k, w);
         }
-        match &self.owned_t {
-            Some(at) => self.shard.sampled_gram_t_against(at, sample, &mut self.block),
-            None => self.shard.sampled_gram_blocked_against(
-                sample,
-                &self.owned,
-                &mut self.block,
-                &mut self.scratch,
-            ),
+        match &self.source {
+            SampleSource::Replicated(shard) => match &self.owned_t {
+                Some(at) => shard.sampled_gram_t_against(at, sample, &mut self.block),
+                None => shard.sampled_gram_blocked_against(
+                    sample,
+                    &self.owned,
+                    &mut self.block,
+                    &mut self.scratch,
+                ),
+            },
+            SampleSource::Sharded { slot, .. } => {
+                // The assembled fragments are verbatim copies of the
+                // full shard's rows, gathered into sample order — so
+                // running the identity-sample kernels over them replays
+                // exactly the bits of the replicated gather-from-shard
+                // path (same values, same stored order, same adds).
+                let gathered = slot.gather(sample);
+                self.ident.clear();
+                self.ident.extend(0..k);
+                match &self.owned_t {
+                    Some(at) => {
+                        gathered.sampled_gram_t_against(at, &self.ident, &mut self.block)
+                    }
+                    None => gathered.sampled_gram_blocked_against(
+                        &self.ident,
+                        &self.owned,
+                        &mut self.block,
+                        &mut self.scratch,
+                    ),
+                }
+            }
         }
         for r in 0..k {
             q.row_mut(r)[..w].copy_from_slice(self.block.row(r));
@@ -353,5 +518,68 @@ mod tests {
             assert_eq!(cost.flops, 2.0 * 4.0 * owned_nnz as f64);
             assert_eq!(cost.rows_charged, 4);
         }
+    }
+
+    /// A sharded cell fed assembled fragments through the slot must
+    /// replay the replicated cell's bits on both density paths,
+    /// duplicates included, and report zero resident source nnz.
+    #[test]
+    fn sharded_grid_product_is_bitwise_equal_to_replicated() {
+        let mut r = Pcg::seeded(41);
+        for density in [0.03, 0.8] {
+            let mut trips = Vec::new();
+            for i in 0..18 {
+                for j in 0..24 {
+                    if r.next_f64() < density {
+                        trips.push((i, j, r.next_gaussian()));
+                    }
+                }
+            }
+            let a = Csr::from_triplets(18, 24, &trips);
+            let owned_rows: Vec<usize> = crate::gram::block_cyclic_rows(18, 3, 1, 2);
+            let mut replicated = GridProduct::new(a.clone(), &owned_rows);
+            let owned = std::sync::Arc::new(a.gather_rows(&owned_rows));
+            let slot = std::sync::Arc::new(FragmentSlot::new(24));
+            let mut sharded =
+                GridProduct::sharded(owned, a.density(), 18, slot.clone());
+            assert_eq!(sharded.m(), 18);
+            assert_eq!(sharded.owned_len(), owned_rows.len());
+            assert!(sharded.shard().is_none());
+            assert_eq!(sharded.resident_source_nnz(), 0);
+            assert_eq!(replicated.resident_source_nnz(), a.nnz());
+
+            let sample = vec![5usize, 11, 5, 2];
+            // Assemble the fragments the exchange would deliver: the
+            // deduplicated sampled rows, verbatim, in any order + map.
+            let uniq = vec![2usize, 5, 11];
+            let rows = a.gather_rows(&uniq);
+            let pos: HashMap<usize, usize> =
+                uniq.iter().enumerate().map(|(i, &t)| (t, i)).collect();
+            slot.fill(rows, pos);
+
+            let mut q_rep = Mat::zeros(4, 18);
+            let cost_rep = replicated.compute(&sample, &mut q_rep);
+            let mut q_sh = Mat::zeros(4, 18);
+            let cost_sh = sharded.compute(&sample, &mut q_sh);
+            let w = owned_rows.len();
+            for rr in 0..4 {
+                assert_eq!(
+                    &q_sh.row(rr)[..w],
+                    &q_rep.row(rr)[..w],
+                    "density {density} row {rr}"
+                );
+            }
+            assert_eq!(cost_sh.flops, cost_rep.flops);
+            assert_eq!(cost_sh.rows_charged, cost_rep.rows_charged);
+        }
+    }
+
+    /// The PR 2-style hardening satellite: malformed row groups are a
+    /// hard error in release builds too, not a `debug_assert`.
+    #[test]
+    #[should_panic(expected = "strictly ascending")]
+    fn grid_product_rejects_malformed_row_groups() {
+        let a = Csr::from_triplets(4, 3, &[(0, 0, 1.0), (2, 1, 2.0)]);
+        let _ = GridProduct::new(a, &[2, 1]);
     }
 }

@@ -1,8 +1,13 @@
 //! Reduction stage: combine partial blocks across column shards.
 
+use std::collections::HashMap;
+use std::sync::Arc;
+
 use crate::comm::{allgatherv, allreduce_sum, AllreduceAlgo, CommStats, Communicator, SubComm};
+use crate::sparse::Csr;
 
 use super::layout::block_cyclic_rows;
+use super::product::FragmentSlot;
 
 /// Combines the product stage's (partial) block across ranks.
 pub trait ReduceStage {
@@ -15,6 +20,19 @@ pub trait ReduceStage {
 
     /// Traffic accumulated by this stage's communicator.
     fn stats(&self) -> CommStats;
+
+    /// Pre-product hook for layouts whose sampled-row inputs must be
+    /// assembled from remote fragments ([`crate::gram::GridStorage::Sharded`]):
+    /// called with the rows the product is about to compute (the
+    /// engine's deduplicated miss set when the cache is on, the raw
+    /// sample otherwise). No-op by default.
+    fn exchange(&mut self, _rows: &[usize]) {}
+
+    /// True when [`ReduceStage::exchange`] does real work — the engine
+    /// then times it as [`crate::costmodel::Phase::FragmentExchange`].
+    fn has_exchange(&self) -> bool {
+        false
+    }
 }
 
 /// The local no-op reduction (full-matrix layouts).
@@ -109,10 +127,32 @@ pub struct GridReduce<'c, C: Communicator> {
     /// Global ranks of this rank's row subcommunicator (`pr` cells
     /// holding feature shard `j`, in row-group order).
     row_members: Vec<usize>,
+    /// Block-cyclic block size (the row-ownership map, shared with the
+    /// fragment exchange's group partition).
+    row_block: usize,
     col_stats: CommStats,
     row_stats: CommStats,
+    /// Fragment-exchange (sharded storage) traffic so far.
+    exch_stats: CommStats,
+    /// Sharded-storage exchange state (`None` for replicated cells).
+    sharded: Option<ShardedExchange>,
     /// Reused `k×w` packed buffer.
     packed: Vec<f64>,
+}
+
+/// State of the sharded-storage fragment exchange
+/// ([`crate::gram::GridStorage::Sharded`]): the cell's owned-row CSR
+/// (fragment source), the full shard-wide per-row nnz table gathered
+/// once at setup (so per-call ring counts are known a priori on every
+/// rank — `allgatherv` schedules need no size messages), and the slot
+/// the assembled rows are published through.
+struct ShardedExchange {
+    /// This cell's owned rows (`|owned| × ≈n/pc`), ascending global order.
+    owned_src: Arc<Csr>,
+    /// Stored-entry count of every global row within this feature shard.
+    nnz_table: Vec<usize>,
+    /// Rendezvous with the sharded [`crate::gram::GridProduct`].
+    slot: Arc<FragmentSlot>,
 }
 
 impl<'c, C: Communicator> GridReduce<'c, C> {
@@ -147,8 +187,11 @@ impl<'c, C: Communicator> GridReduce<'c, C> {
             my_group: i,
             col_members: (0..pc).map(|jj| i * pc + jj).collect(),
             row_members: (0..pr).map(|ii| ii * pc + j).collect(),
+            row_block,
             col_stats: CommStats::default(),
             row_stats: CommStats::default(),
+            exch_stats: CommStats::default(),
+            sharded: None,
             packed: Vec::new(),
         }
     }
@@ -179,6 +222,61 @@ impl<'c, C: Communicator> GridReduce<'c, C> {
     /// Row-subcommunicator (allgather) traffic so far.
     pub fn row_stats(&self) -> CommStats {
         self.row_stats
+    }
+
+    /// Fragment-exchange (sharded storage) traffic so far — zero for
+    /// replicated cells.
+    pub fn exch_stats(&self) -> CommStats {
+        self.exch_stats
+    }
+
+    /// Switch this cell to sharded storage
+    /// ([`crate::gram::GridStorage::Sharded`]): install the owned-row
+    /// fragment source and the product's [`FragmentSlot`], and run the
+    /// one-time **setup ring** — an `allgatherv` over the row
+    /// subcommunicator of every owned row's `(‖row‖², nnz)` pair
+    /// (counts `2·|owned_g|` are known a priori from the block-cyclic
+    /// map). Returns the full shard-wide row-norm vector, assembled
+    /// from verbatim per-row values — bitwise the `row_norms_sq()` of
+    /// the full shard the cell no longer stores — ready for the same
+    /// column-subcommunicator allreduce the replicated path runs. The
+    /// gathered nnz table makes every later per-call exchange a single
+    /// ring with locally computable counts. Collective over the row
+    /// subcommunicator; traffic lands in [`Self::exch_stats`].
+    pub fn enable_sharded(&mut self, owned_src: Arc<Csr>, slot: Arc<FragmentSlot>) -> Vec<f64> {
+        let my_rows = &self.owned[self.my_group];
+        assert_eq!(
+            owned_src.nrows(),
+            my_rows.len(),
+            "sharded grid cell: owned CSR must hold exactly the row group"
+        );
+        let norms = owned_src.row_norms_sq();
+        let mut mine = Vec::with_capacity(2 * my_rows.len());
+        for (u, &nrm) in norms.iter().enumerate() {
+            mine.push(nrm);
+            mine.push(owned_src.row_nnz(u) as f64);
+        }
+        let counts: Vec<usize> = self.owned.iter().map(|o| 2 * o.len()).collect();
+        let gathered = {
+            let mut sub = SubComm::new(&mut *self.comm, &self.row_members, &mut self.exch_stats);
+            allgatherv(&mut sub, &mine, &counts)
+        };
+        let mut full_norms = vec![0.0; self.m];
+        let mut nnz_table = vec![0usize; self.m];
+        let mut off = 0usize;
+        for (g, rows) in self.owned.iter().enumerate() {
+            for (u, &t) in rows.iter().enumerate() {
+                full_norms[t] = gathered[off + 2 * u];
+                nnz_table[t] = gathered[off + 2 * u + 1] as usize;
+            }
+            off += counts[g];
+        }
+        self.sharded = Some(ShardedExchange {
+            owned_src,
+            nnz_table,
+            slot,
+        });
+        full_norms
     }
 }
 
@@ -224,7 +322,79 @@ impl<'c, C: Communicator> ReduceStage for GridReduce<'c, C> {
     }
 
     fn stats(&self) -> CommStats {
-        self.col_stats.plus(self.row_stats)
+        self.col_stats.plus(self.row_stats).plus(self.exch_stats)
+    }
+
+    /// The sharded layout's pre-product **fragment exchange**: assemble
+    /// the sampled rows' fragments from the `pr` cells of this feature
+    /// shard so the product can run exactly as if the full shard were
+    /// local.
+    ///
+    /// 1. Deduplicate the rows (sorted — identical on every rank, since
+    ///    all ranks see the same deterministic sample stream) and
+    ///    partition them by owning row group (the block-cyclic map).
+    /// 2. Pack this cell's owned fragments ([`Csr::pack_rows`]:
+    ///    interleaved `(column, value)` pairs, verbatim stored entries).
+    /// 3. One ring [`allgatherv`] over the row subcommunicator — counts
+    ///    `2·Σ nnz` per group are computed locally from the setup nnz
+    ///    table, so the schedule is agreed a priori.
+    /// 4. Rebuild the fragments ([`Csr::from_packed`]) and publish them
+    ///    through the [`FragmentSlot`] with the global-row → fragment
+    ///    map.
+    ///
+    /// No-op for replicated cells. Traffic lands in
+    /// [`Self::exch_stats`], attributed by the engine to
+    /// [`crate::costmodel::Phase::FragmentExchange`].
+    fn exchange(&mut self, rows: &[usize]) {
+        let Some(sh) = &self.sharded else {
+            return;
+        };
+        let pr = self.owned.len();
+        let mut uniq = rows.to_vec();
+        uniq.sort_unstable();
+        uniq.dedup();
+        let mut per_group: Vec<Vec<usize>> = vec![Vec::new(); pr];
+        for &t in &uniq {
+            per_group[(t / self.row_block) % pr].push(t);
+        }
+        let counts: Vec<usize> = per_group
+            .iter()
+            .map(|g| g.iter().map(|&t| 2 * sh.nnz_table[t]).sum())
+            .collect();
+        // My fragments: owned rows are ascending, so each global row's
+        // local index is its insertion point.
+        let my_rows = &self.owned[self.my_group];
+        let locals: Vec<usize> = per_group[self.my_group]
+            .iter()
+            .map(|&t| {
+                let u = my_rows.partition_point(|&r| r < t);
+                debug_assert_eq!(my_rows[u], t, "row {t} not owned by this group");
+                u
+            })
+            .collect();
+        let mine = sh.owned_src.pack_rows(&locals);
+        let gathered = {
+            let mut sub = SubComm::new(&mut *self.comm, &self.row_members, &mut self.exch_stats);
+            allgatherv(&mut sub, &mine, &counts)
+        };
+        // Rebuild in group-major order (the gathered layout) and map
+        // global rows to fragment positions.
+        let mut order = Vec::with_capacity(uniq.len());
+        let mut row_nnz = Vec::with_capacity(uniq.len());
+        for g in &per_group {
+            for &t in g {
+                order.push(t);
+                row_nnz.push(sh.nnz_table[t]);
+            }
+        }
+        let fragments = Csr::from_packed(sh.owned_src.ncols(), &row_nnz, &gathered);
+        let pos: HashMap<usize, usize> =
+            order.iter().enumerate().map(|(i, &t)| (t, i)).collect();
+        sh.slot.fill(fragments, pos);
+    }
+
+    fn has_exchange(&self) -> bool {
+        self.sharded.is_some()
     }
 }
 

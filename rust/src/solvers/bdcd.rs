@@ -7,6 +7,13 @@ use crate::rng::Pcg;
 
 use super::{GramOracle, Trace};
 
+/// PCG stream id of the K-RR block-selection sequence, shared by
+/// [`bdcd`] and [`bdcd_sstep`] — and by the analytic fragment-exchange
+/// replica (`coordinator::scaling::gram_call_samples`), which must
+/// replay the exact sample stream to count the sharded grid layout's
+/// per-call exchange traffic.
+pub const KRR_COORD_STREAM: u64 = 0xBD;
+
 /// K-RR solver parameters.
 #[derive(Clone, Copy, Debug)]
 pub struct KrrParams {
@@ -49,7 +56,7 @@ pub fn bdcd<O: GramOracle>(
     assert!(p.b >= 1 && p.b <= m, "block size must be in [1, m]");
     let mf = m as f64;
     let inv_lambda = 1.0 / p.lambda;
-    let mut rng = Pcg::new(p.seed, 0xBD);
+    let mut rng = Pcg::new(p.seed, KRR_COORD_STREAM);
     let mut alpha = vec![0.0; m];
     let mut q = Mat::zeros(p.b, m);
 
@@ -114,7 +121,7 @@ pub fn bdcd_sstep<O: GramOracle>(
     assert!(p.b >= 1 && p.b <= m, "block size must be in [1, m]");
     let mf = m as f64;
     let inv_lambda = 1.0 / p.lambda;
-    let mut rng = Pcg::new(p.seed, 0xBD);
+    let mut rng = Pcg::new(p.seed, KRR_COORD_STREAM);
     let mut alpha = vec![0.0; m];
 
     let b = p.b;

@@ -6,6 +6,14 @@ use crate::rng::Pcg;
 
 use super::{GramOracle, Trace};
 
+/// PCG stream id of the SVM coordinate-selection sequence, shared by
+/// [`dcd`] and [`dcd_sstep`] (same seed ⇒ same coordinates) — and by
+/// the analytic fragment-exchange replica
+/// (`coordinator::scaling::gram_call_samples`), which must replay the
+/// exact sample stream to count the sharded grid layout's per-call
+/// exchange traffic.
+pub const SVM_COORD_STREAM: u64 = 0x5D;
+
 /// Hinge-loss variant: `L1` (hinge) or `L2` (squared hinge).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SvmVariant {
@@ -99,7 +107,7 @@ pub fn dcd<O: GramOracle>(
     let m = oracle.m();
     assert_eq!(y.len(), m);
     let (nu, omega) = p.variant.nu_omega(p.c);
-    let mut rng = Pcg::new(p.seed, 0x5D);
+    let mut rng = Pcg::new(p.seed, SVM_COORD_STREAM);
     let mut alpha = vec![0.0; m];
     let mut u = Mat::zeros(1, m);
 
@@ -149,7 +157,7 @@ pub fn dcd_sstep<O: GramOracle>(
     let m = oracle.m();
     assert_eq!(y.len(), m);
     let (nu, omega) = p.variant.nu_omega(p.c);
-    let mut rng = Pcg::new(p.seed, 0x5D);
+    let mut rng = Pcg::new(p.seed, SVM_COORD_STREAM);
     let mut alpha = vec![0.0; m];
 
     let outer = p.h.div_ceil(s);

@@ -39,9 +39,9 @@ mod nystrom;
 pub mod objective;
 mod oracle;
 
-pub use bdcd::{bdcd, bdcd_sstep, KrrParams};
+pub use bdcd::{bdcd, bdcd_sstep, KrrParams, KRR_COORD_STREAM};
 pub use cocoa::{cocoa_svm, CocoaParams, CocoaResult};
-pub use dcd::{dcd, dcd_sstep, SvmParams, SvmVariant};
+pub use dcd::{dcd, dcd_sstep, SvmParams, SvmVariant, SVM_COORD_STREAM};
 pub use krr_exact::{full_kernel_matrix, krr_exact};
 pub use nystrom::NystromGram;
 pub use oracle::{DistGram, GridGram, LocalGram};

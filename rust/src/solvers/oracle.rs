@@ -21,11 +21,14 @@
 //! bitwise identical to the 1D solve over `pc` ranks (see
 //! [`crate::gram`]).
 
+use std::sync::Arc;
+
 use crate::comm::{allreduce_sum, AllreduceAlgo, CommStats, Communicator};
 use crate::costmodel::Ledger;
 use crate::dense::Mat;
 use crate::gram::{
-    AllreduceSum, CsrProduct, Epilogue, GramEngine, GridProduct, GridReduce, Layout, NoReduce,
+    AllreduceSum, CsrProduct, Epilogue, FragmentSlot, GramEngine, GridProduct, GridReduce,
+    GridStorage, Layout, NoReduce,
 };
 use crate::kernelfn::Kernel;
 use crate::parallel::ParallelProduct;
@@ -205,10 +208,24 @@ impl<'c, C: Communicator> GridGram<'c, C> {
         pr: usize,
         pc: usize,
     ) -> Self {
-        Self::with_opts(shard, kernel, comm, algo, pr, pc, crate::gram::DEFAULT_ROW_BLOCK, 0, 1)
+        Self::with_opts(
+            shard,
+            kernel,
+            comm,
+            algo,
+            pr,
+            pc,
+            crate::gram::DEFAULT_ROW_BLOCK,
+            GridStorage::Replicated,
+            0,
+            1,
+        )
     }
 
-    /// Full configuration: block-cyclic `row_block`, kernel-row cache
+    /// Full configuration: block-cyclic `row_block`, storage mode
+    /// ([`GridStorage`] — `Sharded` keeps only this cell's row group in
+    /// memory and assembles sampled rows through the per-call fragment
+    /// exchange; identical on every rank), kernel-row cache
     /// (`cache_rows`, identical on every rank) and `threads` intra-rank
     /// product workers. Collective, like [`Self::new`].
     #[allow(clippy::too_many_arguments)]
@@ -220,6 +237,7 @@ impl<'c, C: Communicator> GridGram<'c, C> {
         pr: usize,
         pc: usize,
         row_block: usize,
+        storage: GridStorage,
         cache_rows: usize,
         threads: usize,
     ) -> Self {
@@ -228,14 +246,36 @@ impl<'c, C: Communicator> GridGram<'c, C> {
         // auto-tuner's plan handoff).
         let layout = Layout::grid_for_rank(pr, pc, comm.rank());
         let mut reduce = GridReduce::new(comm, algo, pr, pc, m, row_block);
+        let owned_rows = reduce.owned_rows().to_vec();
         // Full row norms are a sum over the pc feature shards — the same
-        // collective (and the same bits) as DistGram over pc ranks.
-        let mut row_norms = shard.row_norms_sq();
+        // collective (and the same bits) as DistGram over pc ranks. The
+        // sharded cell first *gathers* the shard-wide per-row norms from
+        // the row subcommunicator (verbatim values — bitwise what the
+        // full shard would compute locally), so the column allreduce
+        // runs on identical inputs in both storage modes.
+        let (mut row_norms, inner) = match storage {
+            GridStorage::Replicated => {
+                let norms = shard.row_norms_sq();
+                (norms, GridProduct::new(shard, &owned_rows))
+            }
+            GridStorage::Sharded => {
+                // Keep only the owned row group; the full shard is
+                // dropped here — its density (a static scalar also
+                // derivable from the exchanged nnz table) is all that
+                // survives, so the product path decision matches the
+                // replicated cell exactly.
+                let density = shard.density();
+                let owned = Arc::new(shard.gather_rows(&owned_rows));
+                drop(shard);
+                let slot = Arc::new(FragmentSlot::new(owned.ncols()));
+                let norms = reduce.enable_sharded(owned.clone(), slot.clone());
+                (norms, GridProduct::sharded(owned, density, m, slot))
+            }
+        };
         reduce.allreduce_col(&mut row_norms);
         let epilogue = Epilogue::new(kernel, row_norms);
         let diag = epilogue.diag();
-        let owned = reduce.owned_rows().to_vec();
-        let product = ParallelProduct::new(GridProduct::new(shard, &owned), threads);
+        let product = ParallelProduct::new(inner, threads);
         GridGram {
             engine: GramEngine::new(layout, product, reduce, Some(epilogue), diag, cache_rows),
         }
@@ -254,6 +294,24 @@ impl<'c, C: Communicator> GridGram<'c, C> {
     /// Row-subcommunicator (allgather) traffic.
     pub fn row_stats(&self) -> CommStats {
         self.engine.reduce_stage().row_stats()
+    }
+
+    /// Fragment-exchange traffic (sharded storage; zero for replicated
+    /// cells).
+    pub fn exch_stats(&self) -> CommStats {
+        self.engine.reduce_stage().exch_stats()
+    }
+
+    /// Resident stored entries of this cell's data: the full feature
+    /// shard (replicated — the owned rows are a subset of it) or just
+    /// the owned row group (sharded) — the number the memory model's
+    /// data term counts.
+    pub fn resident_nnz(&self) -> usize {
+        let inner = self.engine.product().inner();
+        match inner.shard() {
+            Some(shard) => shard.nnz(),
+            None => inner.owned_nnz(),
+        }
     }
 }
 

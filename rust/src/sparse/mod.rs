@@ -412,6 +412,67 @@ impl Csr {
         }
     }
 
+    /// Pack the stored entries of the given rows into an interleaved
+    /// `(column, value)` f64 stream — the wire format of the sharded
+    /// grid layout's fragment exchange (the comm substrate moves `f64`
+    /// buffers only; column indices are exact in f64 up to 2⁵³, far
+    /// beyond any feature count). The stream is `2·Σ nnz(row)` words,
+    /// rows in the given order, entries in stored (ascending-column)
+    /// order — so [`Csr::from_packed`] rebuilds rows *verbatim*, which
+    /// is what keeps the sharded product bitwise identical to the
+    /// replicated one.
+    pub fn pack_rows(&self, rows: &[usize]) -> Vec<f64> {
+        let total: usize = rows.iter().map(|&i| self.row_nnz(i)).sum();
+        let mut out = Vec::with_capacity(2 * total);
+        for &i in rows {
+            let (cols, vals) = self.row_parts(i);
+            for (&j, &v) in cols.iter().zip(vals) {
+                out.push(j as f64);
+                out.push(v);
+            }
+        }
+        out
+    }
+
+    /// Rebuild rows from a [`Csr::pack_rows`] stream: `row_nnz[r]` is the
+    /// stored-entry count of output row `r` (exchanged once at setup by
+    /// the sharded grid layout, so per-call streams need no headers), and
+    /// `packed` the concatenated `(column, value)` pairs. Inverse of
+    /// `pack_rows` — the rebuilt rows are bitwise identical to the
+    /// originals.
+    pub fn from_packed(ncols: usize, row_nnz: &[usize], packed: &[f64]) -> Csr {
+        let total: usize = row_nnz.iter().sum();
+        assert_eq!(
+            packed.len(),
+            2 * total,
+            "from_packed: stream holds {} words but row_nnz promises {}",
+            packed.len(),
+            2 * total
+        );
+        let mut indptr = Vec::with_capacity(row_nnz.len() + 1);
+        indptr.push(0usize);
+        let mut acc = 0usize;
+        for &n in row_nnz {
+            acc += n;
+            indptr.push(acc);
+        }
+        let mut indices = Vec::with_capacity(total);
+        let mut data = Vec::with_capacity(total);
+        for pair in packed.chunks_exact(2) {
+            let j = pair[0] as usize;
+            assert!(j < ncols, "from_packed: column index {j} out of range");
+            indices.push(j);
+            data.push(pair[1]);
+        }
+        Csr {
+            nrows: row_nnz.len(),
+            ncols,
+            indptr,
+            indices,
+            data,
+        }
+    }
+
     /// Slice columns `[c0, c1)`, re-indexing columns to start at zero —
     /// this is the 1D-column partitioning step (each rank keeps `n/P`
     /// features of every sample).
@@ -809,6 +870,31 @@ mod tests {
         s.scale_row(0, -1.0);
         assert_eq!(s.to_dense()[(0, 0)], -3.0);
         assert_eq!(s.row_norms_sq(), vec![25.0, 4.0]);
+    }
+
+    /// pack_rows → from_packed must reproduce the selected rows
+    /// *bitwise* (the fragment-exchange correctness anchor), including
+    /// empty rows and repeats, on dense-ish and sparse data.
+    #[test]
+    fn pack_rows_roundtrips_bitwise_through_from_packed() {
+        let mut r = Pcg::seeded(131);
+        for density in [0.0, 0.05, 0.5] {
+            let s = rand_sparse(&mut r, 12, 19, density);
+            for rows in [vec![0usize, 5, 11], vec![7usize, 7, 2], Vec::new()] {
+                let packed = s.pack_rows(&rows);
+                let nnz: Vec<usize> = rows.iter().map(|&i| s.row_nnz(i)).collect();
+                assert_eq!(packed.len(), 2 * nnz.iter().sum::<usize>());
+                let rebuilt = Csr::from_packed(s.ncols(), &nnz, &packed);
+                let direct = s.gather_rows(&rows);
+                assert_eq!(rebuilt, direct, "density {density} rows {rows:?}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "from_packed")]
+    fn from_packed_rejects_mismatched_stream() {
+        let _ = Csr::from_packed(4, &[2], &[0.0, 1.0]);
     }
 
     #[test]

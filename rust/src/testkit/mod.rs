@@ -125,6 +125,21 @@ pub fn env_grid_rows() -> usize {
         .unwrap_or(1)
 }
 
+/// Grid-cell storage mode for grid-aware tests: the `GRID_STORAGE`
+/// environment variable (`replicated` / `sharded`), defaulting to
+/// `Replicated` — the storage analog of [`env_grid_rows`]. The CI
+/// matrix runs one lane with `GRID_STORAGE=sharded`, so every property
+/// that folds `env_grid_storage()` into its storage sweep exercises the
+/// memory-sharded cells and their fragment exchange with real
+/// subcommunicator traffic. Results are bitwise storage-invariant, so
+/// assertions are unchanged.
+pub fn env_grid_storage() -> crate::gram::GridStorage {
+    std::env::var("GRID_STORAGE")
+        .ok()
+        .and_then(|s| crate::gram::GridStorage::parse(s.trim()))
+        .unwrap_or(crate::gram::GridStorage::Replicated)
+}
+
 /// Assert two slices are elementwise close.
 #[track_caller]
 pub fn assert_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
@@ -179,6 +194,18 @@ mod tests {
         // Same contract as env_threads: the CI GRID lane (or malformed
         // values) must always yield a usable row-group count.
         assert!(env_grid_rows() >= 1);
+    }
+
+    #[test]
+    fn env_grid_storage_yields_a_valid_mode() {
+        // Whatever the environment says (including the CI
+        // GRID_STORAGE=sharded lane and malformed values), the result
+        // is one of the two real storage modes.
+        let s = env_grid_storage();
+        assert!(matches!(
+            s,
+            crate::gram::GridStorage::Replicated | crate::gram::GridStorage::Sharded
+        ));
     }
 
     #[test]

@@ -14,6 +14,11 @@
 //! * `(pr, pc)` over the factorizations of the rank count `P`,
 //! * `t` over thread counts up to [`MachineProfile::cores_per_rank`],
 //! * `s` over a user-bounded range (powers of two by default),
+//! * grid storage over both [`crate::gram::GridStorage`] modes —
+//!   pricing the sharded layout's fragment-exchange traffic against its
+//!   `1/pr` memory footprint, with an optional per-rank memory budget
+//!   (`--mem-limit`) ranking infeasible candidates strictly last,
+//! * `row_block` over [`ROW_BLOCK_CANDIDATES`] on grid layouts,
 //!
 //! scores every candidate with the *same analytic count replicas the
 //! scaling harness cross-validates against measured execution*
@@ -45,8 +50,14 @@ use crate::costmodel::{
     Predicted, ProblemDims,
 };
 use crate::data::Dataset;
-use crate::gram::Layout;
+use crate::gram::{GridStorage, Layout};
 use crate::kernelfn::Kernel;
+
+/// Block-cyclic row-block candidates for grid layouts (the ROADMAP
+/// `row_block` follow-on): a small deterministic set spanning pure
+/// cyclic (1), the default (4) and a coarse block (16). 1D candidates
+/// ignore the knob and carry the default.
+pub const ROW_BLOCK_CANDIDATES: [usize; 3] = [1, 4, 16];
 
 /// The configuration space the tuner searches, plus the run parameters
 /// every candidate shares (`h`, allreduce algorithm, row block, seed).
@@ -75,10 +86,21 @@ pub struct TuneRequest {
     /// Allreduce algorithm of the planned run (the analytic traffic
     /// replica mirrors it exactly).
     pub algo: AllreduceAlgo,
-    /// Block-cyclic row block of grid candidates.
+    /// Block-cyclic row block of grid candidates. [`tune`] additionally
+    /// enumerates [`ROW_BLOCK_CANDIDATES`]; this value joins the set
+    /// (so an explicit `--row-block` is always considered).
     pub row_block: usize,
+    /// Per-rank memory budget in f64 words (`--mem-limit`, converted
+    /// from MB by the CLI): candidates whose
+    /// [`crate::costmodel::Ledger::mem_per_rank`] exceeds it are marked
+    /// infeasible and ranked strictly after every feasible candidate —
+    /// never silently dropped, so the report can show *why* a faster
+    /// configuration was rejected. `None` disables the filter.
+    pub mem_limit_words: Option<u64>,
     /// Coordinate-stream seed used by measured cross-validation replays
-    /// ([`cross_validate`]); predictions themselves are seed-free.
+    /// ([`cross_validate`]) — and by the sharded-storage candidates'
+    /// fragment-exchange traffic replica, which replays the exact
+    /// sample stream (`coordinator::scaling::gram_call_samples`).
     pub seed: u64,
 }
 
@@ -95,8 +117,19 @@ impl TuneRequest {
             t_list: Vec::new(),
             algo: AllreduceAlgo::Rabenseifner,
             row_block: crate::gram::DEFAULT_ROW_BLOCK,
+            mem_limit_words: None,
             seed: 0x5EED,
         }
+    }
+
+    /// Resolved row-block candidates: [`ROW_BLOCK_CANDIDATES`] plus the
+    /// request's own `row_block`, sorted and deduplicated.
+    pub fn row_block_candidates(&self) -> Vec<usize> {
+        let mut out = ROW_BLOCK_CANDIDATES.to_vec();
+        out.push(self.row_block.max(1));
+        out.sort_unstable();
+        out.dedup();
+        out
     }
 
     /// Resolved `s` candidates: sorted, deduplicated, `1 ≤ s ≤ h`, and
@@ -167,6 +200,15 @@ pub struct Candidate {
     pub t: usize,
     /// s-step block size (`1` = classical).
     pub s: usize,
+    /// Grid-cell storage mode (`Replicated` for 1D candidates, where
+    /// the knob is meaningless).
+    pub storage: GridStorage,
+    /// Block-cyclic row-block size (the default for 1D candidates).
+    pub row_block: usize,
+    /// False when the request's `--mem-limit` budget is smaller than
+    /// this candidate's per-rank memory model — the candidate then ranks
+    /// after every feasible one.
+    pub mem_feasible: bool,
     /// Predicted time, split into compute / bandwidth / latency.
     pub predicted: Predicted,
     /// The analytic count replica backing the prediction — the same
@@ -225,6 +267,21 @@ impl Candidate {
         }
     }
 
+    /// Report tag for the storage mode: `-` for 1D candidates (the knob
+    /// does not apply), else [`GridStorage::name`].
+    pub fn storage_tag(&self) -> &'static str {
+        match self.grid() {
+            Some(_) => self.storage.name(),
+            None => "-",
+        }
+    }
+
+    /// Per-rank resident memory of this candidate in f64 words (the
+    /// ledger's model — identical to what a measured run reports).
+    pub fn mem_words(&self) -> u64 {
+        self.ledger.mem_per_rank()
+    }
+
     /// The equivalent `kcd` command line — the tune → train handoff.
     /// Carries the tuned *configuration* only; the `tune` CLI appends
     /// the data/problem context flags (dataset, scale, kernel, problem
@@ -237,6 +294,12 @@ impl Candidate {
         let mut out = format!("kcd {cmd} --p {}", self.ranks());
         if let Some((pr, pc)) = self.grid() {
             out.push_str(&format!(" --grid {pr}x{pc}"));
+            if self.storage != GridStorage::Replicated {
+                out.push_str(&format!(" --grid-storage {}", self.storage.name()));
+            }
+            if self.row_block != crate::gram::DEFAULT_ROW_BLOCK {
+                out.push_str(&format!(" --row-block {}", self.row_block));
+            }
         }
         if self.t > 1 {
             out.push_str(&format!(" --threads {}", self.t));
@@ -261,8 +324,9 @@ pub struct TunedPlan {
     pub problem: ProblemSpec,
     /// Dataset name (reports only).
     pub dataset: String,
-    /// All candidates, ranked by predicted total time (ties broken
-    /// deterministically by `(pr, t, s)` — the ranking is invariant
+    /// All candidates, memory-feasible ones first, then by predicted
+    /// total time (ties broken deterministically by
+    /// `(pr, storage, row_block, t, s)` — the ranking is invariant
     /// under candidate enumeration order).
     pub candidates: Vec<Candidate>,
 }
@@ -302,55 +366,83 @@ pub fn tune(
         ProblemSpec::Svm { .. } => 1usize,
         ProblemSpec::Krr { b, .. } => b,
     };
+    let rb_cands = req.row_block_candidates();
     let density = ds.a.density();
     let mu = kernel.mu();
     let mut candidates =
         Vec::with_capacity(factorizations(req.p).len() * s_cands.len() * t_cands.len());
     for (pr, pc) in factorizations(req.p) {
-        for &s in &s_cands {
-            // The count replica depends on (pr, s) only; threads are a
-            // pure wall-time knob, so score each ledger once per t.
-            let ledger = if pr == 1 {
-                analytic_ledger(ds, kernel, problem, s, req.h, req.p, req.algo)
-            } else {
-                grid_analytic_ledger(
-                    ds,
-                    kernel,
-                    problem,
-                    s,
-                    req.h,
-                    pr,
-                    pc,
-                    req.row_block,
-                    req.algo,
-                )
-            };
-            let dims = ProblemDims {
-                m: ds.m(),
-                n: ds.n(),
-                f: density,
-                mu,
-                p: req.p,
-                reduce_ranks: pc,
-                h: req.h,
-            };
-            let theorem = match (problem, s) {
-                (ProblemSpec::Svm { .. }, 1) => dcd_cost(&dims),
-                (ProblemSpec::Svm { .. }, s) => dcd_sstep_cost(&dims, s),
-                (ProblemSpec::Krr { .. }, 1) => bdcd_cost(&dims, b),
-                (ProblemSpec::Krr { .. }, s) => bdcd_sstep_cost(&dims, b, s),
-            };
-            for &t in &t_cands {
-                let predicted = machine.predict(&ledger, t);
-                candidates.push(Candidate {
-                    pr,
-                    pc,
-                    t,
-                    s,
-                    predicted,
-                    ledger: ledger.clone(),
-                    theorem,
-                });
+        // 1D candidates have no storage/row-block axes; grids enumerate
+        // both storage modes (the memory-vs-exchange-traffic trade this
+        // tuner now prices) and the small row-block set.
+        let storages: &[GridStorage] = if pr == 1 {
+            &[GridStorage::Replicated]
+        } else {
+            &[GridStorage::Replicated, GridStorage::Sharded]
+        };
+        let row_blocks: &[usize] = if pr == 1 {
+            std::slice::from_ref(&req.row_block)
+        } else {
+            &rb_cands
+        };
+        for &storage in storages {
+            for &row_block in row_blocks {
+                for &s in &s_cands {
+                    // The count replica depends on (pr, s, storage,
+                    // row_block) only; threads are a pure wall-time
+                    // knob, so score each ledger once per t.
+                    let ledger = if pr == 1 {
+                        analytic_ledger(ds, kernel, problem, s, req.h, req.p, req.algo)
+                    } else {
+                        grid_analytic_ledger(
+                            ds,
+                            kernel,
+                            problem,
+                            s,
+                            req.h,
+                            pr,
+                            pc,
+                            row_block,
+                            storage,
+                            req.seed,
+                            req.algo,
+                        )
+                    };
+                    let mem_feasible = match req.mem_limit_words {
+                        Some(limit) => ledger.mem_per_rank() <= limit,
+                        None => true,
+                    };
+                    let dims = ProblemDims {
+                        m: ds.m(),
+                        n: ds.n(),
+                        f: density,
+                        mu,
+                        p: req.p,
+                        reduce_ranks: pc,
+                        h: req.h,
+                    };
+                    let theorem = match (problem, s) {
+                        (ProblemSpec::Svm { .. }, 1) => dcd_cost(&dims),
+                        (ProblemSpec::Svm { .. }, s) => dcd_sstep_cost(&dims, s),
+                        (ProblemSpec::Krr { .. }, 1) => bdcd_cost(&dims, b),
+                        (ProblemSpec::Krr { .. }, s) => bdcd_sstep_cost(&dims, b, s),
+                    };
+                    for &t in &t_cands {
+                        let predicted = machine.predict(&ledger, t);
+                        candidates.push(Candidate {
+                            pr,
+                            pc,
+                            t,
+                            s,
+                            storage,
+                            row_block,
+                            mem_feasible,
+                            predicted,
+                            ledger: ledger.clone(),
+                            theorem,
+                        });
+                    }
+                }
             }
         }
     }
@@ -366,15 +458,28 @@ pub fn tune(
     }
 }
 
-/// Sort candidates by predicted total time, ties broken by
-/// `(pr, t, s)` ascending — a total order over the candidate keys, so
-/// the ranking cannot depend on enumeration order.
+/// Sort candidates: memory-feasible ones strictly first (the
+/// `--mem-limit` filter — infeasible candidates stay visible at the
+/// bottom instead of vanishing), then by predicted total time, ties
+/// broken by `(pr, storage, row_block, t, s)` ascending — a total order
+/// over the candidate keys, so the ranking cannot depend on enumeration
+/// order.
 fn rank_candidates(candidates: &mut [Candidate]) {
+    let storage_key = |c: &Candidate| match c.storage {
+        GridStorage::Replicated => 0u8,
+        GridStorage::Sharded => 1u8,
+    };
     candidates.sort_unstable_by(|a, b| {
-        a.predicted
-            .total_secs()
-            .total_cmp(&b.predicted.total_secs())
+        b.mem_feasible
+            .cmp(&a.mem_feasible)
+            .then_with(|| {
+                a.predicted
+                    .total_secs()
+                    .total_cmp(&b.predicted.total_secs())
+            })
             .then_with(|| a.pr.cmp(&b.pr))
+            .then_with(|| storage_key(a).cmp(&storage_key(b)))
+            .then_with(|| a.row_block.cmp(&b.row_block))
             .then_with(|| a.t.cmp(&b.t))
             .then_with(|| a.s.cmp(&b.s))
     });
@@ -438,12 +543,51 @@ mod tests {
         req.t_list = vec![1, 4];
         let machine = MachineProfile::cray_ex();
         let plan = tune(&ds, Kernel::paper_rbf(), &svm(), &req, &machine);
-        // 4 factorizations × {1, 4} s-candidates × {1, 4} t-candidates.
-        assert_eq!(plan.candidates.len(), 4 * 2 * 2);
+        // 1D: {1,4} s × {1,4} t = 4. Each of the 3 genuine grids adds
+        // 2 storage modes × 3 row blocks × 2 s × 2 t = 24.
+        assert_eq!(plan.candidates.len(), 4 + 3 * 24);
         let best = plan.best().predicted.total_secs();
         for c in &plan.candidates {
             assert!(c.predicted.total_secs() >= best);
             assert_eq!(c.ranks(), 6);
+            assert!(c.mem_feasible, "no --mem-limit ⇒ everything feasible");
+            if c.pr == 1 {
+                assert_eq!(c.storage, GridStorage::Replicated);
+                assert_eq!(c.storage_tag(), "-");
+            }
+            assert!(c.mem_words() > 0);
+        }
+        // Both storage modes are genuinely enumerated on grids.
+        assert!(plan
+            .candidates
+            .iter()
+            .any(|c| c.pr > 1 && c.storage == GridStorage::Sharded));
+        // Sharded grids at equal (pr, pc, row_block, s) never move fewer
+        // words than replicated (the exchange is pure extra traffic)…
+        for c in plan.candidates.iter().filter(|c| c.storage == GridStorage::Sharded) {
+            let rep = plan
+                .candidates
+                .iter()
+                .find(|r| {
+                    r.storage == GridStorage::Replicated
+                        && (r.pr, r.pc, r.row_block, r.t, r.s)
+                            == (c.pr, c.pc, c.row_block, c.t, c.s)
+                })
+                .expect("replicated twin exists");
+            assert!(c.ledger.comm.words >= rep.ledger.comm.words);
+            // …but need strictly less per-rank memory on genuine grids
+            // with meaningfully fewer rows per cell.
+            if c.pr > 1 {
+                assert!(
+                    c.mem_words() < rep.mem_words(),
+                    "pr={} pc={} rb={}: sharded {} !< replicated {}",
+                    c.pr,
+                    c.pc,
+                    c.row_block,
+                    c.mem_words(),
+                    rep.mem_words()
+                );
+            }
         }
         // Ranked ascending.
         for w in plan.candidates.windows(2) {
@@ -464,6 +608,8 @@ mod tests {
             assert_eq!(spec.seed, 7);
             assert_eq!(spec.threads, c.t);
             assert_eq!(spec.grid, c.grid());
+            assert_eq!(spec.grid_storage, c.storage);
+            assert_eq!(spec.row_block, c.row_block);
             if c.pr == 1 {
                 assert_eq!(spec.grid, None);
             }
@@ -472,8 +618,15 @@ mod tests {
             assert!(hint.contains(&format!("--s {}", c.s)), "{hint}");
             if let Some((pr, pc)) = c.grid() {
                 assert!(hint.contains(&format!("--grid {pr}x{pc}")), "{hint}");
+                if c.storage == GridStorage::Sharded {
+                    assert!(hint.contains("--grid-storage sharded"), "{hint}");
+                }
+                if c.row_block != crate::gram::DEFAULT_ROW_BLOCK {
+                    assert!(hint.contains(&format!("--row-block {}", c.row_block)), "{hint}");
+                }
             } else {
                 assert!(!hint.contains("--grid"), "{hint}");
+                assert!(!hint.contains("--row-block"), "{hint}");
             }
         }
         let krr_hint = plan.best().cli_hint(&ProblemSpec::Krr { lambda: 1.0, b: 2 }, 32);
@@ -517,6 +670,51 @@ mod tests {
         req1.t_list = vec![1];
         let plan1 = tune(&ds, Kernel::paper_rbf(), &svm(), &req1, &machine);
         assert_eq!(plan1.best().layout_for_rank(0), Layout::Full);
+    }
+
+    /// The `--mem-limit` feasibility filter: a budget between the
+    /// sharded and replicated footprints must rank every feasible
+    /// (sharded/small) candidate ahead of every infeasible one, while
+    /// keeping the infeasible ones visible; an unsatisfiable budget
+    /// leaves the ranking pure-time (all equally infeasible).
+    #[test]
+    fn mem_limit_ranks_feasible_candidates_first() {
+        let ds = crate::data::gen_dense_classification(24, 16, 0.05, 3);
+        let machine = MachineProfile::cray_ex();
+        let mut req = TuneRequest::new(6, 16);
+        req.s_list = vec![4];
+        req.t_list = vec![1];
+        let open = tune(&ds, Kernel::paper_rbf(), &svm(), &req, &machine);
+        let mems: Vec<u64> = open.candidates.iter().map(|c| c.mem_words()).collect();
+        let (lo, hi) = (*mems.iter().min().unwrap(), *mems.iter().max().unwrap());
+        assert!(lo < hi, "need a memory spread to test the filter");
+        let mid = (lo + hi) / 2;
+        req.mem_limit_words = Some(mid);
+        let filtered = tune(&ds, Kernel::paper_rbf(), &svm(), &req, &machine);
+        assert_eq!(filtered.candidates.len(), open.candidates.len(), "never dropped");
+        let first_infeasible = filtered
+            .candidates
+            .iter()
+            .position(|c| !c.mem_feasible)
+            .expect("mid-budget must exclude someone");
+        assert!(
+            filtered.candidates[..first_infeasible].iter().all(|c| c.mem_feasible)
+                && filtered.candidates[first_infeasible..].iter().all(|c| !c.mem_feasible),
+            "feasible candidates must come strictly first"
+        );
+        assert!(filtered.best().mem_feasible);
+        assert!(filtered.best().mem_words() <= mid);
+        // Unsatisfiable budget: nothing feasible, ranking intact.
+        req.mem_limit_words = Some(0);
+        let none = tune(&ds, Kernel::paper_rbf(), &svm(), &req, &machine);
+        assert!(none.candidates.iter().all(|c| !c.mem_feasible));
+        for (a, b) in none.candidates.iter().zip(&open.candidates) {
+            assert_eq!(
+                (a.pr, a.pc, a.storage, a.row_block, a.t, a.s),
+                (b.pr, b.pc, b.storage, b.row_block, b.t, b.s),
+                "all-infeasible ranking must match the unfiltered one"
+            );
+        }
     }
 
     #[test]

@@ -12,13 +12,15 @@ use super::{Candidate, CrossCheck, TunedPlan};
 /// compares against measured execution).
 pub fn tune_table(plan: &TunedPlan, top: usize) -> Table {
     let mut t = Table::new(vec![
-        "rank", "layout", "t", "s", "total (s)", "compute (s)", "bandwidth (s)", "latency (s)",
-        "bound", "words", "rounds",
+        "rank", "layout", "storage", "rb", "t", "s", "total (s)", "compute (s)",
+        "bandwidth (s)", "latency (s)", "bound", "words", "rounds", "mem (MB)", "fit",
     ]);
     for (i, c) in plan.candidates.iter().take(top.max(1)).enumerate() {
         t.row(vec![
             (i + 1).to_string(),
             c.layout_tag(),
+            c.storage_tag().to_string(),
+            c.row_block.to_string(),
             c.t.to_string(),
             c.s.to_string(),
             format!("{:.4e}", c.predicted.total_secs()),
@@ -28,6 +30,8 @@ pub fn tune_table(plan: &TunedPlan, top: usize) -> Table {
             c.predicted.dominant().to_string(),
             c.ledger.comm.words.to_string(),
             c.ledger.comm.rounds.to_string(),
+            format!("{:.2}", c.mem_words() as f64 * 8.0 / 1e6),
+            if c.mem_feasible { "yes" } else { "OVER" }.to_string(),
         ]);
     }
     t
@@ -73,14 +77,20 @@ pub fn tune_json(plan: &TunedPlan, top: usize, xval: Option<&CrossCheck>) -> Str
 fn candidate_json(c: &Candidate, rank: usize) -> String {
     format!(
         "{{\"rank\":{rank},\"pr\":{},\"pc\":{},\"t\":{},\"s\":{},\
+         \"storage\":{},\"row_block\":{},\"mem_words\":{},\"mem_feasible\":{},\
          \"predicted\":{{\"total_secs\":{},\"compute_secs\":{},\
          \"bandwidth_secs\":{},\"latency_secs\":{},\"bound\":{}}},\
-         \"traffic\":{{\"words\":{},\"rounds\":{},\"msgs\":{},\"allreduces\":{}}},\
+         \"traffic\":{{\"words\":{},\"rounds\":{},\"msgs\":{},\"allreduces\":{},\
+         \"exchange_words\":{},\"exchange_rounds\":{}}},\
          \"theorem\":{{\"flops\":{},\"words\":{},\"msgs\":{}}}}}",
         c.pr,
         c.pc,
         c.t,
         c.s,
+        json_str(c.storage.name()),
+        c.row_block,
+        c.mem_words(),
+        c.mem_feasible,
         json_f64(c.predicted.total_secs()),
         json_f64(c.predicted.compute_secs),
         json_f64(c.predicted.bandwidth_secs),
@@ -90,6 +100,8 @@ fn candidate_json(c: &Candidate, rank: usize) -> String {
         c.ledger.comm.rounds,
         c.ledger.comm.msgs,
         c.ledger.comm.allreduces,
+        c.ledger.comm_exch.words,
+        c.ledger.comm_exch.rounds,
         json_f64(c.theorem.flops),
         json_f64(c.theorem.words),
         json_f64(c.theorem.msgs),
@@ -191,6 +203,11 @@ mod tests {
             "\"latency_secs\":",
             "\"traffic\":",
             "\"theorem\":",
+            "\"storage\":",
+            "\"row_block\":",
+            "\"mem_words\":",
+            "\"mem_feasible\":",
+            "\"exchange_words\":",
         ] {
             assert!(js.contains(key), "missing {key} in {js}");
         }

@@ -35,6 +35,11 @@ pub struct CrossCheck {
     pub predicted_row: CommStats,
     /// Measured row-subcommunicator traffic.
     pub measured_row: CommStats,
+    /// Predicted fragment-exchange traffic (sharded grid storage; zero
+    /// for replicated and 1D candidates).
+    pub predicted_exch: CommStats,
+    /// Measured fragment-exchange traffic.
+    pub measured_exch: CommStats,
     /// Worst relative flop disagreement across phases (flop accounting
     /// is f64 arithmetic, so "equal" means ≲1e-6 relative, not bitwise).
     pub flops_rel_err: f64,
@@ -47,6 +52,7 @@ impl CrossCheck {
         self.predicted == self.measured
             && self.predicted_col == self.measured_col
             && self.predicted_row == self.measured_row
+            && self.predicted_exch == self.measured_exch
     }
 
     /// One-line human summary for the `tune` report.
@@ -104,6 +110,8 @@ pub fn cross_validate(
         measured_col: measured.comm_col,
         predicted_row: candidate.ledger.comm_row,
         measured_row: measured.comm_row,
+        predicted_exch: candidate.ledger.comm_exch,
+        measured_exch: measured.comm_exch,
         flops_rel_err,
     }
 }

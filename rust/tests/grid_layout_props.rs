@@ -16,6 +16,12 @@
 //!   replica over `pc` ranks, rank by rank, and the row allgather
 //!   matches `allgatherv_counts_per_rank`; the reduce payload therefore
 //!   scales with `pc` (not `P`).
+//! * **Sharded storage (`GridStorage::Sharded`)** — sharded ≡
+//!   replicated ≡ 1D@pc bitwise across the full factorization matrix ×
+//!   cache × threads; the fragment-exchange traffic matches its ring
+//!   replica rank by rank; and the per-rank memory model shrinks with
+//!   `pr` (the layout's reason to exist), identically in the measured
+//!   and analytic engines.
 
 use kcd::comm::{run_ranks, AllreduceAlgo, CommStats, Communicator};
 use kcd::coordinator::scaling::{allgatherv_counts_per_rank, allreduce_counts_per_rank};
@@ -23,7 +29,7 @@ use kcd::coordinator::{run_distributed, ProblemSpec, SolverSpec};
 use kcd::costmodel::{Ledger, MachineProfile};
 use kcd::data::{gen_dense_classification, gen_uniform_sparse, Dataset, SynthParams, Task};
 use kcd::dense::Mat;
-use kcd::gram::block_cyclic_rows;
+use kcd::gram::{block_cyclic_rows, GridStorage};
 use kcd::kernelfn::Kernel;
 use kcd::rng::Pcg;
 use kcd::solvers::{GramOracle, GridGram, SvmVariant};
@@ -56,7 +62,9 @@ fn alpha_1d(ds: &Dataset, problem: &ProblemSpec, solver: &SolverSpec, p: usize) 
 }
 
 /// The headline acceptance property: every factorization of every
-/// `P ∈ {2, …, 12}` replays the 1D bits of its `pc`, for both problems.
+/// `P ∈ {2, …, 12}` replays the 1D bits of its `pc`, for both problems
+/// and **both storage modes** — the sharded cells' fragment exchange
+/// must be bitwise-invisible (sharded ≡ replicated ≡ 1D@pc).
 #[test]
 fn prop_grid_solve_bitwise_equals_1d_over_pc_for_all_factorizations() {
     let ds = gen_dense_classification(24, 16, 0.05, 55);
@@ -69,6 +77,7 @@ fn prop_grid_solve_bitwise_equals_1d_over_pc_for_all_factorizations() {
             cache_rows: 0,
             threads: 1,
             grid: None,
+            ..Default::default()
         };
         // Memoize the 1D reference per pc (factorizations share them).
         let mut refs: Vec<Option<Vec<f64>>> = vec![None; 13];
@@ -78,15 +87,20 @@ fn prop_grid_solve_bitwise_equals_1d_over_pc_for_all_factorizations() {
                     refs[pc] = Some(alpha_1d(&ds, &problem, &base, pc));
                 }
                 let reference = refs[pc].as_ref().unwrap();
-                let grid_solver = SolverSpec {
-                    grid: Some((pr, pc)),
-                    ..base
-                };
-                let alpha = alpha_1d(&ds, &problem, &grid_solver, p);
-                assert_eq!(
-                    &alpha, reference,
-                    "{problem:?} Grid{{{pr},{pc}}} must replay 1D@{pc} bits"
-                );
+                for storage in [GridStorage::Replicated, GridStorage::Sharded] {
+                    let grid_solver = SolverSpec {
+                        grid: Some((pr, pc)),
+                        grid_storage: storage,
+                        ..base
+                    };
+                    let alpha = alpha_1d(&ds, &problem, &grid_solver, p);
+                    assert_eq!(
+                        &alpha,
+                        reference,
+                        "{problem:?} Grid{{{pr},{pc}}} {} must replay 1D@{pc} bits",
+                        storage.name()
+                    );
+                }
             }
         }
     }
@@ -106,6 +120,7 @@ fn prop_grid_solve_bitwise_with_cache_and_threads() {
         cache_rows: 0,
         threads: 1,
         grid: None,
+        ..Default::default()
     };
     let mut thread_counts = vec![1usize, 4];
     let env = testkit::env_threads();
@@ -122,21 +137,33 @@ fn prop_grid_solve_bitwise_with_cache_and_threads() {
     if !factorizations.contains(&(env_pr, 2)) {
         factorizations.push((env_pr, 2));
     }
+    // Storage composes with cache and threads bitwise too; the CI
+    // GRID_STORAGE lane re-runs the whole sub-matrix sharded.
+    let mut storages = vec![GridStorage::Replicated, GridStorage::Sharded];
+    let env_storage = testkit::env_grid_storage();
+    if !storages.contains(&env_storage) {
+        storages.push(env_storage);
+    }
     for (pr, pc) in factorizations {
         let reference = alpha_1d(&ds, &problem, &base, pc);
-        for &threads in &thread_counts {
-            for cache_rows in [0usize, 6] {
-                let solver = SolverSpec {
-                    cache_rows,
-                    threads,
-                    grid: Some((pr, pc)),
-                    ..base
-                };
-                let alpha = alpha_1d(&ds, &problem, &solver, pr * pc);
-                assert_eq!(
-                    alpha, reference,
-                    "Grid{{{pr},{pc}}} t={threads} cache={cache_rows}"
-                );
+        for &storage in &storages {
+            for &threads in &thread_counts {
+                for cache_rows in [0usize, 6] {
+                    let solver = SolverSpec {
+                        cache_rows,
+                        threads,
+                        grid: Some((pr, pc)),
+                        grid_storage: storage,
+                        ..base
+                    };
+                    let alpha = alpha_1d(&ds, &problem, &solver, pr * pc);
+                    assert_eq!(
+                        alpha,
+                        reference,
+                        "Grid{{{pr},{pc}}} {} t={threads} cache={cache_rows}",
+                        storage.name()
+                    );
+                }
             }
         }
     }
@@ -161,16 +188,25 @@ fn prop_grid_solve_bitwise_on_sparse_data() {
         cache_rows: 4,
         threads: 1,
         grid: None,
+        ..Default::default()
     };
     let problem = svm_problem();
     for (pr, pc) in [(2usize, 2usize), (3, 2), (2, 4), (5, 2)] {
         let reference = alpha_1d(&ds, &problem, &base, pc);
-        let solver = SolverSpec {
-            grid: Some((pr, pc)),
-            ..base
-        };
-        let alpha = alpha_1d(&ds, &problem, &solver, pr * pc);
-        assert_eq!(alpha, reference, "sparse Grid{{{pr},{pc}}}");
+        for storage in [GridStorage::Replicated, GridStorage::Sharded] {
+            let solver = SolverSpec {
+                grid: Some((pr, pc)),
+                grid_storage: storage,
+                ..base
+            };
+            let alpha = alpha_1d(&ds, &problem, &solver, pr * pc);
+            assert_eq!(
+                alpha,
+                reference,
+                "sparse Grid{{{pr},{pc}}} {}",
+                storage.name()
+            );
+        }
     }
 }
 
@@ -206,6 +242,7 @@ fn prop_grid_blocks_bitwise_invariant_in_row_block() {
                 pr,
                 pc,
                 row_block,
+                GridStorage::Replicated,
                 0,
                 1,
             );
@@ -254,7 +291,18 @@ fn prop_grid_subcomm_traffic_matches_count_replicas() {
             let stats = run_ranks(pr * pc, |c| {
                 let shard = shards[c.rank() % pc].clone();
                 let mut grid =
-                    GridGram::with_opts(shard, kernel, c, algo, pr, pc, row_block, 0, 1);
+                    GridGram::with_opts(
+                        shard,
+                        kernel,
+                        c,
+                        algo,
+                        pr,
+                        pc,
+                        row_block,
+                        GridStorage::Replicated,
+                        0,
+                        1,
+                    );
                 for sample in &samples {
                     let mut q = Mat::zeros(sample.len(), m);
                     grid.gram(sample, &mut q, &mut Ledger::new());
@@ -312,6 +360,7 @@ fn prop_reduce_traffic_shrinks_as_rows_grow() {
         cache_rows: 0,
         threads: 1,
         grid: None,
+        ..Default::default()
     };
     let serial = run_distributed(
         &ds,
@@ -376,6 +425,7 @@ fn prop_grid_cache_saves_measured_words_bitwise() {
                 cache_rows,
                 threads: 1,
                 grid: Some((2, 3)),
+                ..Default::default()
             },
             6,
             AllreduceAlgo::Rabenseifner,
@@ -391,6 +441,198 @@ fn prop_grid_cache_saves_measured_words_bitwise() {
         "cached grid run must send fewer words: {} !< {}",
         cached.critical.comm.words,
         plain.critical.comm.words
+    );
+}
+
+/// Rank-by-rank fragment-exchange traffic replica: the sharded cells'
+/// measured exchange counters (setup ring + one ring per gram call)
+/// must equal the message-free `allgatherv_counts_per_rank` composition
+/// exactly — per rank, not just on the max — with per-group counts
+/// `2·Σ nnz` of each call's deduplicated sampled rows in that cell's
+/// feature shard.
+#[test]
+fn prop_sharded_exchange_traffic_matches_ring_replica_per_rank() {
+    let ds = gen_uniform_sparse(
+        SynthParams {
+            m: 24,
+            n: 60,
+            density: 0.2,
+            seed: 13,
+        },
+        Task::Classification,
+    );
+    let m = ds.m();
+    let kernel = Kernel::Linear;
+    let row_block = 2usize;
+    // Duplicate-bearing samples: the exchange must dedup before ringing.
+    let samples = [vec![0usize, 5, 5, 9], vec![1usize, 2], vec![20usize, 3, 7, 3, 11]];
+    for (pr, pc) in [(2usize, 2usize), (3, 2), (2, 3), (4, 1), (1, 4)] {
+        let shards = ds.shard_cols(pc);
+        let owned_rows: Vec<Vec<usize>> = (0..pr)
+            .map(|g| block_cyclic_rows(m, pr, g, row_block))
+            .collect();
+        let owned_len: Vec<usize> = owned_rows.iter().map(|o| o.len()).collect();
+        let stats = run_ranks(pr * pc, |c| {
+            let shard = shards[c.rank() % pc].clone();
+            let mut grid = GridGram::with_opts(
+                shard,
+                kernel,
+                c,
+                AllreduceAlgo::Rabenseifner,
+                pr,
+                pc,
+                row_block,
+                GridStorage::Sharded,
+                0,
+                1,
+            );
+            for sample in &samples {
+                let mut q = Mat::zeros(sample.len(), m);
+                grid.gram(sample, &mut q, &mut Ledger::new());
+            }
+            (
+                grid.exch_stats(),
+                grid.col_stats(),
+                grid.row_stats(),
+                grid.comm_stats(),
+                grid.resident_nnz(),
+            )
+        });
+        // Pin the memory model's data source to the engine's reality: a
+        // sharded cell's resident entries are exactly its grid cell's
+        // nnz (the number `mem_words_per_rank` counts via
+        // `grid_cell_nnz`).
+        let cell_nnz = kcd::coordinator::scaling::grid_cell_nnz(&ds.a, pr, pc, row_block);
+        for (rank, (exch, col, row, total, resident)) in stats.iter().enumerate() {
+            let (i, j) = (rank / pc, rank % pc);
+            assert_eq!(
+                *resident, cell_nnz[i][j],
+                "{pr}x{pc} rank {rank}: sharded residency must equal its cell nnz"
+            );
+            // Setup ring: (norm, nnz) pairs, counts 2·|owned_g|.
+            let setup_counts: Vec<usize> = owned_len.iter().map(|&w| 2 * w).collect();
+            let ring = allgatherv_counts_per_rank(&setup_counts);
+            let (mut expect_words, mut expect_rounds) = ring[i];
+            // One ring per gram call with dedup'd per-group nnz counts.
+            for sample in &samples {
+                let mut uniq = sample.clone();
+                uniq.sort_unstable();
+                uniq.dedup();
+                let counts: Vec<usize> = (0..pr)
+                    .map(|g| {
+                        uniq.iter()
+                            .filter(|&&t| (t / row_block) % pr == g)
+                            .map(|&t| 2 * shards[j].row_nnz(t))
+                            .sum()
+                    })
+                    .collect();
+                let ring = allgatherv_counts_per_rank(&counts);
+                expect_words += ring[i].0;
+                expect_rounds += ring[i].1;
+            }
+            assert_eq!(exch.words, expect_words, "{pr}x{pc} rank {rank} exch words");
+            assert_eq!(exch.rounds, expect_rounds, "{pr}x{pc} rank {rank} exch rounds");
+            assert_eq!(exch.msgs, expect_rounds, "ring sends once per round");
+            assert_eq!(exch.allreduces, 0, "the exchange is not an allreduce");
+            // The oracle's total composes all three sequential stages.
+            assert_eq!(*total, col.plus(*row).plus(*exch), "{pr}x{pc} rank {rank}");
+            if pr == 1 {
+                assert_eq!(exch.words, 0, "single-group exchange is free");
+                assert_eq!(exch.rounds, 0);
+            }
+        }
+    }
+}
+
+/// The memory model behind the sharded storage's reason to exist: at a
+/// fixed feature-shard count `pc`, growing `pr` strictly shrinks a
+/// sharded cell's per-rank footprint (replicated cells stay flat — they
+/// hold the full shard regardless of `pr`), sharded is strictly below
+/// replicated on every genuine grid, and the measured engine reports
+/// exactly the same number as the analytic one.
+#[test]
+fn prop_sharded_mem_shrinks_with_pr_and_matches_measured() {
+    let ds = gen_dense_classification(48, 16, 0.05, 21);
+    let problem = svm_problem();
+    let machine = MachineProfile::cray_ex();
+    let pc = 2usize;
+    let mut sharded_mem = Vec::new();
+    let mut replicated_mem = Vec::new();
+    for pr in [1usize, 2, 4] {
+        let mut mems = [0u64; 2];
+        for (slot, storage) in [GridStorage::Replicated, GridStorage::Sharded]
+            .into_iter()
+            .enumerate()
+        {
+            let solver = SolverSpec {
+                s: 4,
+                h: 8,
+                seed: 3,
+                cache_rows: 0,
+                threads: 1,
+                grid: Some((pr, pc)),
+                grid_storage: storage,
+                ..Default::default()
+            };
+            let res = run_distributed(
+                &ds,
+                Kernel::paper_rbf(),
+                &problem,
+                &solver,
+                pr * pc,
+                AllreduceAlgo::Rabenseifner,
+                &machine,
+            );
+            let analytic = kcd::coordinator::scaling::grid_analytic_ledger(
+                &ds,
+                Kernel::paper_rbf(),
+                &problem,
+                4,
+                8,
+                pr,
+                pc,
+                solver.row_block,
+                storage,
+                3,
+                AllreduceAlgo::Rabenseifner,
+            );
+            assert_eq!(
+                res.critical.mem_per_rank(),
+                analytic.mem_per_rank(),
+                "pr={pr} {}: measured and analytic memory must agree",
+                storage.name()
+            );
+            mems[slot] = res.critical.mem_per_rank();
+        }
+        replicated_mem.push(mems[0]);
+        sharded_mem.push(mems[1]);
+        if pr > 1 {
+            assert!(
+                mems[1] < mems[0],
+                "pr={pr}: sharded {} must undercut replicated {}",
+                mems[1],
+                mems[0]
+            );
+        }
+    }
+    assert!(
+        sharded_mem[0] > sharded_mem[1] && sharded_mem[1] > sharded_mem[2],
+        "sharded per-rank memory must shrink as pr grows: {sharded_mem:?}"
+    );
+    // Replicated cells keep the full m×(n/pc) shard regardless of pr —
+    // a hard floor no pr can shave — while sharded cells drop below it
+    // once pr bites.
+    let shard_floor = 2 * ds.a.max_shard_nnz(pc) as u64;
+    for (idx, &mem) in replicated_mem.iter().enumerate() {
+        assert!(
+            mem >= shard_floor,
+            "replicated mem {mem} at index {idx} fell below the full-shard floor {shard_floor}"
+        );
+    }
+    assert!(
+        sharded_mem[2] < shard_floor,
+        "sharded at pr=4 ({}) must undercut the replicated full-shard floor {shard_floor}",
+        sharded_mem[2]
     );
 }
 

@@ -45,6 +45,7 @@ fn libsvm_roundtrip_through_distributed_solver() {
             cache_rows: 0,
             threads: 1,
             grid: None,
+            ..Default::default()
         },
         4,
         AllreduceAlgo::Rabenseifner,
@@ -101,6 +102,7 @@ fn solver_result_is_algorithm_invariant() {
         cache_rows: 0,
         threads: 1,
         grid: None,
+        ..Default::default()
     };
     let reference = run_serial(&ds, Kernel::paper_poly(), &problem, &solver, &machine).alpha;
     for algo in [
@@ -138,6 +140,7 @@ fn gap_series_final_point_matches_distributed_final_gap() {
             cache_rows: 0,
             threads: 1,
             grid: None,
+            ..Default::default()
         },
         4,
         AllreduceAlgo::Rabenseifner,

@@ -287,6 +287,7 @@ fn prop_distributed_sstep_solve_bitwise_with_threads() {
         cache_rows: 0,
         threads: 1,
         grid: None,
+        ..Default::default()
     };
     for p in [2usize, 3] {
         let reference = run_distributed(

@@ -59,14 +59,25 @@ fn prop_candidate_traffic_equals_analytic_ledgers_exactly() {
                         16,
                         c.pr,
                         c.pc,
-                        DEFAULT_ROW_BLOCK,
+                        c.row_block,
+                        c.storage,
+                        req.seed,
                         req.algo,
                     )
                 };
-                let tag = format!("{problem:?} p={p} pr={} pc={} s={}", c.pr, c.pc, c.s);
+                let tag = format!(
+                    "{problem:?} p={p} pr={} pc={} s={} {} rb={}",
+                    c.pr,
+                    c.pc,
+                    c.s,
+                    c.storage.name(),
+                    c.row_block
+                );
                 assert_eq!(c.ledger.comm, direct.comm, "{tag} total traffic");
                 assert_eq!(c.ledger.comm_col, direct.comm_col, "{tag} col traffic");
                 assert_eq!(c.ledger.comm_row, direct.comm_row, "{tag} row traffic");
+                assert_eq!(c.ledger.comm_exch, direct.comm_exch, "{tag} exch traffic");
+                assert_eq!(c.ledger.mem_per_rank(), direct.mem_per_rank(), "{tag} mem");
                 for ph in Phase::ALL {
                     assert_eq!(
                         c.ledger.flops(ph),
@@ -97,16 +108,26 @@ fn prop_tuner_predictions_cross_validate_bitwise_against_measured() {
             req.t_list = vec![1, 2];
             let machine = MachineProfile::cray_ex();
             let plan = tune(&ds, Kernel::paper_rbf(), &problem, &req, &machine);
-            for c in &plan.candidates {
+            // Replaying every (storage × row_block) variant on real
+            // ranks would dominate suite runtime; the default row block
+            // covers both storage modes, and one sharded non-default
+            // row block pins the rb axis (the scaling suite
+            // cross-validates the full matrix analytically).
+            for c in plan.candidates.iter().filter(|c| {
+                c.row_block == DEFAULT_ROW_BLOCK
+                    || (c.storage == kcd::gram::GridStorage::Sharded && c.row_block == 1)
+            }) {
                 let check =
                     cross_validate(&ds, Kernel::paper_rbf(), &problem, c, &req, &machine);
                 assert!(
                     check.traffic_exact(),
-                    "{problem:?} p={p} pr={} pc={} t={} s={}: {}",
+                    "{problem:?} p={p} pr={} pc={} t={} s={} {} rb={}: {}",
                     c.pr,
                     c.pc,
                     c.t,
                     c.s,
+                    c.storage.name(),
+                    c.row_block,
                     check.summary()
                 );
                 assert!(check.flops_rel_err < 1e-6);
@@ -133,11 +154,25 @@ fn prop_ranking_invariant_under_enumeration_order() {
     assert_eq!(a.candidates.len(), b.candidates.len());
     for (x, y) in a.candidates.iter().zip(&b.candidates) {
         assert_eq!(
-            (x.pr, x.pc, x.t, x.s),
-            (y.pr, y.pc, y.t, y.s),
+            (x.pr, x.pc, x.t, x.s, x.storage, x.row_block),
+            (y.pr, y.pc, y.t, y.s, y.storage, y.row_block),
             "ranking order must not depend on enumeration order"
         );
         assert_eq!(x.predicted.total_secs(), y.predicted.total_secs());
+    }
+    // The row_block satellite: the enumerated set covers the candidate
+    // row blocks {1, 4, 16} on genuine grids, both storage modes, and
+    // the (storage, row_block) tie-break keeps equal-time candidates in
+    // a deterministic order.
+    for rb in kcd::tune::ROW_BLOCK_CANDIDATES {
+        assert!(
+            a.candidates.iter().any(|c| c.pr > 1 && c.row_block == rb),
+            "row_block {rb} must be enumerated"
+        );
+    }
+    use kcd::gram::GridStorage;
+    for storage in [GridStorage::Replicated, GridStorage::Sharded] {
+        assert!(a.candidates.iter().any(|c| c.pr > 1 && c.storage == storage));
     }
 }
 
