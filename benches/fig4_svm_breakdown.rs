@@ -45,6 +45,7 @@ fn main() {
             AllreduceAlgo::Rabenseifner,
             &machine,
             0, // projected engine: P here exceeds one box
+            kcd::gram::OverlapMode::Off,
         );
         println!("\n### {} at P = {p} (H = {h})", ds.name);
         print!("{}", breakdown_table(&bars).markdown());

@@ -79,6 +79,7 @@ fn main() {
         AllreduceAlgo::Rabenseifner,
         &machine,
         0,
+        kcd::gram::OverlapMode::Off,
     );
     print!("{}", breakdown_table(&bars).markdown());
     println!("\nFig 5 shape reproduced ✓");

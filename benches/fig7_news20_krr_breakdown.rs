@@ -43,6 +43,7 @@ fn main() {
             AllreduceAlgo::Rabenseifner,
             &machine,
             0,
+            kcd::gram::OverlapMode::Off,
         );
         println!("\n### P = {p}");
         print!("{}", breakdown_table(&bars).markdown());

@@ -37,6 +37,7 @@ fn main() {
             AllreduceAlgo::Rabenseifner,
             &machine,
             if quick { 0 } else { 4 },
+            kcd::gram::OverlapMode::Off,
         );
         println!("\n### P = {p}");
         print!("{}", breakdown_table(&bars).markdown());

@@ -45,6 +45,7 @@ const KNOWN_FLAGS: &[(&str, bool /* takes a value */)] = &[
     ("grid-rows", true),
     ("grid-storage", true),
     ("row-block", true),
+    ("overlap", true),
     ("mem-limit", true),
     ("s-max", true),
     ("t-max", true),
@@ -217,6 +218,17 @@ COMMON FLAGS:
   --row-block <n>   Block-cyclic row-block size of the grid layout
                     (bitwise-invariant wall-time/traffic knob; also a
                     tuner candidate axis)     [4]
+  --overlap <m>     off | exchange | pipeline               [off]
+                    Nonblocking communication/compute overlap:
+                    exchange posts the sharded grid's fragment rings
+                    under the owned-rows partial product; pipeline
+                    posts gram call k+1's reduce under block k's s-step
+                    inner updates. Bitwise-identical results; the
+                    ledgers split posted vs exposed traffic and the
+                    projection credits the hidden fraction. Inert where
+                    it has no substrate (serial, s = 1 for pipeline,
+                    non-sharded for exchange). train-svm / train-krr /
+                    scaling / breakdown; also a tuner candidate axis.
   --mem-limit <MB>  tune: per-rank memory budget; candidates whose
                     modeled footprint exceeds it rank after every
                     feasible one (marked OVER, never hidden).
@@ -272,7 +284,7 @@ fn load_config(args: &Args) -> Result<Config> {
     for key in [
         "dataset", "scale", "kernel", "problem", "c", "lambda", "b", "h", "s", "p", "algo",
         "machine", "seed", "gram-cache-rows", "threads", "grid", "grid-rows", "grid-storage",
-        "row-block", "mem-limit", "every", "measured-limit", "s-max", "t-max", "top",
+        "row-block", "overlap", "mem-limit", "every", "measured-limit", "s-max", "t-max", "top",
     ] {
         if let Some(v) = args.flag(key) {
             cfg.set(key, v);
@@ -345,6 +357,18 @@ fn grid_storage_from(cfg: &Config) -> Result<crate::gram::GridStorage> {
         anyhow!(
             "invalid value for 'grid-storage': expected replicated or sharded, got '{raw}'"
         )
+    })
+}
+
+/// Strictly read the communication-overlap mode (`--overlap`, default
+/// off). A pure wall-time knob — results are bitwise identical in every
+/// mode, and a mode without a substrate on the launch's layout is inert.
+fn overlap_from(cfg: &Config) -> Result<crate::gram::OverlapMode> {
+    let Some(raw) = cfg_str(cfg, "overlap")? else {
+        return Ok(crate::gram::OverlapMode::Off);
+    };
+    crate::gram::OverlapMode::parse(raw).ok_or_else(|| {
+        anyhow!("invalid value for 'overlap': expected off, exchange or pipeline, got '{raw}'")
     })
 }
 
@@ -473,6 +497,7 @@ fn solver_from(cfg: &Config) -> Result<SolverSpec> {
         grid: None,
         grid_storage: grid_storage_from(cfg)?,
         row_block: row_block_from(cfg)?,
+        overlap: overlap_from(cfg)?,
     })
 }
 
@@ -516,7 +541,7 @@ fn cmd_train_svm(args: &Args) -> Result<String> {
     let obj = SvmObjective::new(&mut oracle, &ds.y, c, variant);
     let mut out = String::new();
     out.push_str(&format!(
-        "dataset={} m={} n={} kernel={} problem={} P={p} layout={} t={} s={} H={}\n",
+        "dataset={} m={} n={} kernel={} problem={} P={p} layout={} t={} s={} H={} overlap={}\n",
         ds.name,
         ds.m(),
         ds.n(),
@@ -525,7 +550,8 @@ fn cmd_train_svm(args: &Args) -> Result<String> {
         grid_tag(solver.grid, solver.grid_storage),
         solver.threads,
         solver.s,
-        solver.h
+        solver.h,
+        solver.overlap.name()
     ));
     out.push_str(&format!(
         "duality gap      = {:.6e}\ntrain accuracy   = {:.2}%\n",
@@ -571,7 +597,7 @@ fn cmd_train_krr(args: &Args) -> Result<String> {
     let astar = krr_exact(&mut oracle, &ds.y, lambda);
     let rel = crate::dense::rel_err(&res.alpha, &astar);
     Ok(format!(
-        "dataset={} m={} n={} kernel={} b={b} λ={lambda} P={p} layout={} s={} H={}\n\
+        "dataset={} m={} n={} kernel={} b={b} λ={lambda} P={p} layout={} s={} H={} overlap={}\n\
          relative solution error = {rel:.6e}\n\
          projected time = {:.4e} s on {} (local wall {:.3}s)\n",
         ds.name,
@@ -581,6 +607,7 @@ fn cmd_train_krr(args: &Args) -> Result<String> {
         grid_tag(solver.grid, solver.grid_storage),
         solver.s,
         solver.h,
+        solver.overlap.name(),
         res.projection.total_secs(),
         machine.name,
         res.wall_secs
@@ -762,6 +789,7 @@ fn cmd_scaling(args: &Args) -> Result<String> {
         pr: grid_rows_from(&cfg)?,
         grid_storage: grid_storage_from(&cfg)?,
         row_block: row_block_from(&cfg)?,
+        overlap: overlap_from(&cfg)?,
         h: cfg_usize(&cfg, "h")?.unwrap_or(256),
         seed: cfg_usize(&cfg, "seed")?.unwrap_or(0x5EED) as u64,
         algo: algo_from(&cfg)?,
@@ -806,6 +834,7 @@ fn cmd_breakdown(args: &Args) -> Result<String> {
         algo_from(&cfg)?,
         &machine,
         cfg_usize(&cfg, "measured-limit")?.unwrap_or(8),
+        overlap_from(&cfg)?,
     );
     let t = breakdown_table(&bars);
     let mut out = format!(
@@ -887,11 +916,12 @@ fn cmd_tune(args: &Args) -> Result<String> {
     let t = crate::tune::tune_table(&plan, top);
     out.push_str(&if args.bool_flag("csv") { t.csv() } else { t.markdown() });
     out.push_str(&format!(
-        "best: layout={}, storage={}, rb={}, t={}, s={} → {:.4e} s predicted ({}-bound, \
-         {:.2} MB/rank)\n",
+        "best: layout={}, storage={}, rb={}, overlap={}, t={}, s={} → {:.4e} s predicted \
+         ({}-bound, {:.2} MB/rank)\n",
         best.layout_tag(),
         best.storage_tag(),
         best.row_block,
+        best.overlap.name(),
         best.t,
         best.s,
         best.predicted.total_secs(),
@@ -1197,6 +1227,34 @@ mod tests {
         assert_eq!(gap(&rb), gap(&replicated));
     }
 
+    /// The overlap acceptance at the CLI level: every mode reports its
+    /// tag and reproduces the blocking run's bits exactly (identical
+    /// duality-gap line) on both the 1D pipeline substrate and the
+    /// sharded-grid exchange substrate.
+    #[test]
+    fn overlap_modes_run_and_match_blocking_bitwise() {
+        let gap = |out: &str| {
+            out.lines()
+                .find(|l| l.starts_with("duality gap"))
+                .unwrap()
+                .to_string()
+        };
+        let base = "train-svm --dataset diabetes --scale 0.1 --kernel rbf --h 120 --s 8 --p 4";
+        let off = run(argv(base)).unwrap();
+        assert!(off.contains("overlap=off"), "{off}");
+        let pipe = run(argv(&format!("{base} --overlap pipeline"))).unwrap();
+        assert!(pipe.contains("overlap=pipeline"), "{pipe}");
+        assert_eq!(gap(&off), gap(&pipe));
+        let sharded = format!("{base} --grid 2x2 --grid-storage sharded");
+        let exch = run(argv(&format!("{sharded} --overlap exchange"))).unwrap();
+        assert!(exch.contains("overlap=exchange"), "{exch}");
+        assert_eq!(gap(&off), gap(&exch));
+        // Inert substrate (replicated 1D has no fragment exchange) is
+        // accepted and still bitwise-identical, not an error.
+        let inert = run(argv(&format!("{base} --overlap exchange"))).unwrap();
+        assert_eq!(gap(&off), gap(&inert));
+    }
+
     #[test]
     fn grid_storage_row_block_and_mem_limit_are_strictly_validated() {
         for (bad, key) in [
@@ -1208,6 +1266,9 @@ mod tests {
             ("tune --mem-limit -3", "mem-limit"),
             ("tune --mem-limit big", "mem-limit"),
             ("scaling --grid-rows 2 --grid-storage shardd", "grid-storage"),
+            ("train-svm --p 2 --overlap sometimes", "overlap"),
+            ("scaling --overlap 1", "overlap"),
+            ("breakdown --overlap pipelined2", "overlap"),
         ] {
             let err = run(argv(bad)).expect_err(bad);
             let msg = format!("{err:#}");
@@ -1385,10 +1446,12 @@ mod tests {
         // The overridden coefficient is visible in the header (the tag
         // alone would misattribute the plan to the stock profile).
         assert!(out.contains("α=5.0e-3"), "{out}");
-        // 1D: s {1, 2, 8} × t {1, 2} = 6; each genuine grid of 8
-        // ((2,4), (4,2), (8,1)) adds 2 storage × 3 row-block × 3 s ×
-        // 2 t = 36.
-        assert!(out.contains("(114 candidates)"), "{out}");
+        // 1D: s {1, 2, 8} × t {1, 2} = 6, plus a pipelined twin for
+        // each s > 1 point = 10. Grids (2,4)/(4,2): 3 row-block ×
+        // (replicated s-ledgers {1, 2, 2} + sharded {2, 3, 3} counting
+        // overlap variants) × 2 t = 78 each. Grid (8,1) has no column
+        // peers, so pipeline is infeasible: 3 × (3 + 6) × 2 = 54.
+        assert!(out.contains("(220 candidates)"), "{out}");
         // And the handoff line reproduces the override spec.
         assert!(out.contains("--machine cray-ex:alpha=5e-3,cores=4"), "{out}");
     }

@@ -13,11 +13,13 @@
 //! traffic*, not computed from formulas.
 
 mod collectives;
+mod nonblocking;
 mod thread_comm;
 
 pub use collectives::{
     allgather, allgatherv, allreduce_sum, broadcast, reduce_to_root, AllreduceAlgo,
 };
+pub use nonblocking::CollectiveHandle;
 pub use thread_comm::{run_ranks, ThreadComm};
 
 /// Traffic statistics accumulated by a rank's communicator.
@@ -86,6 +88,12 @@ pub trait Communicator {
     /// Receive the next message from rank `from` (blocking).
     fn recv(&mut self, from: usize) -> Vec<f64>;
 
+    /// Receive the next message from rank `from` if one has already
+    /// arrived; `None` otherwise. The nonblocking collectives
+    /// ([`CollectiveHandle`]) use this to make progress without
+    /// stalling the compute they are overlapped with.
+    fn try_recv(&mut self, from: usize) -> Option<Vec<f64>>;
+
     /// Synchronize all ranks.
     fn barrier(&mut self);
 
@@ -124,6 +132,10 @@ impl Communicator for SelfComm {
 
     fn recv(&mut self, _from: usize) -> Vec<f64> {
         panic!("SelfComm: recv on a single-rank communicator");
+    }
+
+    fn try_recv(&mut self, _from: usize) -> Option<Vec<f64>> {
+        panic!("SelfComm: try_recv on a single-rank communicator");
     }
 
     fn barrier(&mut self) {}
@@ -202,6 +214,10 @@ impl<'a, C: Communicator> Communicator for SubComm<'a, C> {
 
     fn recv(&mut self, from: usize) -> Vec<f64> {
         self.parent.recv(self.members[from])
+    }
+
+    fn try_recv(&mut self, from: usize) -> Option<Vec<f64>> {
+        self.parent.try_recv(self.members[from])
     }
 
     fn barrier(&mut self) {

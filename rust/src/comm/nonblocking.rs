@@ -1,0 +1,698 @@
+//! Nonblocking collectives: `post`/`test`/`wait` handles over the same
+//! point-to-point transport as the blocking collectives.
+//!
+//! A posted collective is a *script* — the exact per-rank sequence of
+//! sends, receives, and round increments the blocking algorithm in
+//! [`super::collectives`] would execute — replayed lazily. `post` runs the
+//! script eagerly up to the first receive whose message has not arrived
+//! (sends are buffered, so they never block); `test` resumes it
+//! nonblockingly; `wait` resumes it with blocking receives and consumes
+//! the handle. Because the script is the blocking algorithm's own step
+//! sequence, a posted collective produces bitwise-identical results and
+//! word-for-word identical [`CommStats`] to its blocking counterpart, no
+//! matter how much compute the caller interleaves between `post` and
+//! `wait` — this is what lets the gram engine overlap the fragment
+//! exchange and the s-step reduce without touching the determinism
+//! contract.
+//!
+//! Handles are pure data: they do not borrow the communicator. Every
+//! `post`/`test`/`wait` call takes the communicator as an argument, so a
+//! stage that owns `&mut C` (e.g. the grid reduce) can stash an in-flight
+//! handle in a field and keep using its communicator for accounting.
+
+use super::{AllreduceAlgo, CommStats, Communicator};
+
+/// One step of a posted collective's per-rank script. Ranges index into
+/// the handle's buffer; only the *data* flowing through a `Recv` depends
+/// on other ranks, never the schedule itself.
+#[derive(Clone, Copy, Debug)]
+enum Step {
+    /// Send `buf[lo..hi]` to `to`.
+    Send { to: usize, lo: usize, hi: usize },
+    /// Receive from `from` into `buf[lo..hi]`; `add` accumulates (reduce
+    /// steps), otherwise the block is copied (gather/fold-back steps).
+    Recv {
+        from: usize,
+        lo: usize,
+        hi: usize,
+        add: bool,
+    },
+    /// One sequential step on this rank's critical path.
+    Round,
+}
+
+/// An in-flight nonblocking collective (allreduce or ring allgatherv).
+///
+/// Obtain one with [`CollectiveHandle::post_allreduce`] or
+/// [`CollectiveHandle::post_allgatherv`]; drive it with [`test`] and
+/// finish with [`wait`], passing the *same* communicator each time.
+/// Waiting twice panics; testing a completed handle keeps returning
+/// `true`.
+///
+/// [`test`]: CollectiveHandle::test
+/// [`wait`]: CollectiveHandle::wait
+pub struct CollectiveHandle {
+    buf: Vec<f64>,
+    steps: Vec<Step>,
+    cursor: usize,
+    consumed: bool,
+    posted: CommStats,
+}
+
+impl CollectiveHandle {
+    /// Post a nonblocking sum-allreduce of `buf` (same algorithm, message
+    /// order, and traffic accounting as [`super::allreduce_sum`]). The
+    /// reduced vector is returned by [`Self::wait`].
+    pub fn post_allreduce<C: Communicator>(
+        comm: &mut C,
+        buf: Vec<f64>,
+        algo: AllreduceAlgo,
+    ) -> CollectiveHandle {
+        comm.stats_mut().allreduces += 1;
+        let p = comm.size();
+        let steps = if p == 1 || buf.is_empty() {
+            Vec::new()
+        } else {
+            allreduce_script(comm.rank(), p, buf.len(), algo)
+        };
+        let mut h = CollectiveHandle::with_script(buf, steps);
+        h.posted.allreduces = 1;
+        h.advance(comm, false);
+        h
+    }
+
+    /// Post a nonblocking ring allgatherv (same schedule and accounting
+    /// as [`super::allgatherv`]): rank `r` contributes `counts[r]` words
+    /// and [`Self::wait`] returns the rank-ordered concatenation.
+    pub fn post_allgatherv<C: Communicator>(
+        comm: &mut C,
+        mine: &[f64],
+        counts: &[usize],
+    ) -> CollectiveHandle {
+        let p = comm.size();
+        let rank = comm.rank();
+        assert_eq!(counts.len(), p, "post_allgatherv: one count per rank");
+        assert_eq!(
+            mine.len(),
+            counts[rank],
+            "post_allgatherv: rank {rank} contributed {} words but counts[{rank}] = {}",
+            mine.len(),
+            counts[rank]
+        );
+        let mut offsets = Vec::with_capacity(p + 1);
+        let mut total = 0usize;
+        offsets.push(0);
+        for &c in counts {
+            total += c;
+            offsets.push(total);
+        }
+        let mut out = vec![0.0; total];
+        out[offsets[rank]..offsets[rank + 1]].copy_from_slice(mine);
+        let steps = if p == 1 {
+            Vec::new()
+        } else {
+            allgatherv_script(rank, p, &offsets)
+        };
+        let mut h = CollectiveHandle::with_script(out, steps);
+        h.advance(comm, false);
+        h
+    }
+
+    fn with_script(buf: Vec<f64>, steps: Vec<Step>) -> CollectiveHandle {
+        let mut posted = CommStats::default();
+        for s in &steps {
+            match *s {
+                Step::Send { lo, hi, .. } => {
+                    posted.msgs += 1;
+                    posted.words += (hi - lo) as u64;
+                }
+                Step::Round => posted.rounds += 1,
+                Step::Recv { .. } => {}
+            }
+        }
+        CollectiveHandle {
+            buf,
+            steps,
+            cursor: 0,
+            consumed: false,
+            posted,
+        }
+    }
+
+    /// Traffic this collective adds to the communicator's [`CommStats`]
+    /// across its whole post→wait lifetime — known at post time because
+    /// the schedule is deterministic. The engine charges this to the
+    /// ledger's *posted* (overlappable) column exactly once.
+    pub fn posted_stats(&self) -> CommStats {
+        self.posted
+    }
+
+    /// True once every step of the script has run.
+    pub fn is_done(&self) -> bool {
+        self.cursor == self.steps.len()
+    }
+
+    /// Make progress without blocking; returns completion.
+    ///
+    /// Ordering contract: the transport is FIFO per rank pair, so
+    /// collectives whose message streams share a rank pair must be
+    /// *completed in post order* on every rank (receiving out of order
+    /// would steal the earlier collective's messages). Handles over
+    /// disjoint rank pairs — e.g. different subcommunicator groups — may
+    /// complete in any order. The gram engine keeps at most one
+    /// collective in flight per communicator, which satisfies this
+    /// trivially.
+    pub fn test<C: Communicator>(&mut self, comm: &mut C) -> bool {
+        self.advance(comm, false)
+    }
+
+    /// Block until the collective completes and take the result buffer.
+    /// Panics if called twice (the result was already taken).
+    pub fn wait<C: Communicator>(&mut self, comm: &mut C) -> Vec<f64> {
+        assert!(
+            !self.consumed,
+            "CollectiveHandle: wait called twice on the same handle"
+        );
+        self.advance(comm, true);
+        self.consumed = true;
+        std::mem::take(&mut self.buf)
+    }
+
+    /// Run script steps in order; at a `Recv`, block or bail out
+    /// according to `block`. Returns completion.
+    fn advance<C: Communicator>(&mut self, comm: &mut C, block: bool) -> bool {
+        while self.cursor < self.steps.len() {
+            match self.steps[self.cursor] {
+                Step::Send { to, lo, hi } => comm.send(to, &self.buf[lo..hi]),
+                Step::Round => comm.stats_mut().rounds += 1,
+                Step::Recv { from, lo, hi, add } => {
+                    let got = if block {
+                        comm.recv(from)
+                    } else {
+                        match comm.try_recv(from) {
+                            Some(got) => got,
+                            None => return false,
+                        }
+                    };
+                    assert_eq!(
+                        got.len(),
+                        hi - lo,
+                        "nonblocking collective: rank {} received {} words where the \
+                         schedule expects {}; every rank must post identical shapes",
+                        comm.rank(),
+                        got.len(),
+                        hi - lo
+                    );
+                    let dst = &mut self.buf[lo..hi];
+                    if add {
+                        for (d, s) in dst.iter_mut().zip(&got) {
+                            *d += s;
+                        }
+                    } else {
+                        dst.copy_from_slice(&got);
+                    }
+                }
+            }
+            self.cursor += 1;
+        }
+        true
+    }
+}
+
+/// Per-rank script of [`super::allreduce_sum`] — the same step sequence
+/// the blocking code executes, with buffer ranges resolved a priori.
+fn allreduce_script(rank: usize, p: usize, w: usize, algo: AllreduceAlgo) -> Vec<Step> {
+    let mut steps = Vec::new();
+    match algo {
+        AllreduceAlgo::Linear => {
+            reduce_to_root_script(&mut steps, rank, p, w);
+            broadcast_script(&mut steps, rank, p, w);
+        }
+        AllreduceAlgo::RecursiveDoubling => {
+            pof2_fold_script(&mut steps, rank, p, w, |steps, group_rank, group, pof2| {
+                recursive_doubling_script(steps, group_rank, group, pof2, 0, w);
+            });
+        }
+        AllreduceAlgo::Rabenseifner => {
+            pof2_fold_script(&mut steps, rank, p, w, |steps, group_rank, group, pof2| {
+                rabenseifner_script(steps, group_rank, group, pof2, w);
+            });
+        }
+    }
+    steps
+}
+
+/// Script of `with_pof2_fold`: evens of the first `2·rem` ranks fold onto
+/// their odd neighbour and wait for the result; survivors run `core` and
+/// send folded results back.
+fn pof2_fold_script(
+    steps: &mut Vec<Step>,
+    rank: usize,
+    p: usize,
+    w: usize,
+    core: impl FnOnce(&mut Vec<Step>, usize, &[usize], usize),
+) {
+    let pof2 = p.next_power_of_two() / if p.is_power_of_two() { 1 } else { 2 };
+    let rem = p - pof2;
+    let survivors: Vec<usize> = (0..p)
+        .filter(|&r| (r < 2 * rem && r % 2 == 1) || r >= 2 * rem)
+        .collect();
+    if rank < 2 * rem && rank % 2 == 0 {
+        steps.push(Step::Send {
+            to: rank + 1,
+            lo: 0,
+            hi: w,
+        });
+        steps.push(Step::Round);
+        steps.push(Step::Recv {
+            from: rank + 1,
+            lo: 0,
+            hi: w,
+            add: false,
+        });
+        steps.push(Step::Round);
+        return;
+    }
+    if rank < 2 * rem {
+        steps.push(Step::Recv {
+            from: rank - 1,
+            lo: 0,
+            hi: w,
+            add: true,
+        });
+        steps.push(Step::Round);
+    }
+    let group_rank = survivors
+        .iter()
+        .position(|&r| r == rank)
+        .expect("survivor rank");
+    core(steps, group_rank, &survivors, pof2);
+    if rank < 2 * rem {
+        steps.push(Step::Send {
+            to: rank - 1,
+            lo: 0,
+            hi: w,
+        });
+        steps.push(Step::Round);
+    }
+}
+
+/// Recursive-doubling exchange-and-add over `buf[lo..lo+w]`.
+fn recursive_doubling_script(
+    steps: &mut Vec<Step>,
+    group_rank: usize,
+    group: &[usize],
+    pof2: usize,
+    lo: usize,
+    w: usize,
+) {
+    let mut mask = 1usize;
+    while mask < pof2 {
+        let partner = group[group_rank ^ mask];
+        steps.push(Step::Send {
+            to: partner,
+            lo,
+            hi: lo + w,
+        });
+        steps.push(Step::Recv {
+            from: partner,
+            lo,
+            hi: lo + w,
+            add: true,
+        });
+        steps.push(Step::Round);
+        mask <<= 1;
+    }
+}
+
+/// Reduce-scatter (recursive halving) + allgather (recursive doubling)
+/// over the survivor group — the script of `rabenseifner_core`.
+fn rabenseifner_script(
+    steps: &mut Vec<Step>,
+    group_rank: usize,
+    group: &[usize],
+    pof2: usize,
+    w: usize,
+) {
+    if w == 0 {
+        return;
+    }
+    if w < pof2 {
+        recursive_doubling_script(steps, group_rank, group, pof2, 0, w);
+        return;
+    }
+    let bounds: Vec<usize> = (0..=pof2).map(|i| i * w / pof2).collect();
+
+    let mut span_lo = 0usize;
+    let mut span_hi = pof2;
+    let mut mask = pof2 / 2;
+    while mask > 0 {
+        let partner = group[group_rank ^ mask];
+        let mid = (span_lo + span_hi) / 2;
+        let (keep_lo, keep_hi, send_lo, send_hi) = if group_rank & mask == 0 {
+            (span_lo, mid, mid, span_hi)
+        } else {
+            (mid, span_hi, span_lo, mid)
+        };
+        steps.push(Step::Send {
+            to: partner,
+            lo: bounds[send_lo],
+            hi: bounds[send_hi],
+        });
+        steps.push(Step::Recv {
+            from: partner,
+            lo: bounds[keep_lo],
+            hi: bounds[keep_hi],
+            add: true,
+        });
+        steps.push(Step::Round);
+        span_lo = keep_lo;
+        span_hi = keep_hi;
+        mask >>= 1;
+    }
+
+    let mut span_lo = group_rank;
+    let mut span_hi = group_rank + 1;
+    let mut mask = 1usize;
+    while mask < pof2 {
+        let partner = group[group_rank ^ mask];
+        steps.push(Step::Send {
+            to: partner,
+            lo: bounds[span_lo],
+            hi: bounds[span_hi],
+        });
+        let (new_lo, new_hi) = if group_rank & mask == 0 {
+            (span_lo, span_hi + (span_hi - span_lo))
+        } else {
+            (span_lo - (span_hi - span_lo), span_hi)
+        };
+        let (recv_lo, recv_hi) = if group_rank & mask == 0 {
+            (span_hi, new_hi)
+        } else {
+            (new_lo, span_lo)
+        };
+        steps.push(Step::Recv {
+            from: partner,
+            lo: bounds[recv_lo],
+            hi: bounds[recv_hi],
+            add: false,
+        });
+        steps.push(Step::Round);
+        span_lo = new_lo;
+        span_hi = new_hi;
+        mask <<= 1;
+    }
+}
+
+/// Script of [`super::reduce_to_root`] (binomial tree onto rank 0).
+fn reduce_to_root_script(steps: &mut Vec<Step>, rank: usize, p: usize, w: usize) {
+    let mut mask = 1usize;
+    while mask < p {
+        if rank & mask != 0 {
+            steps.push(Step::Send {
+                to: rank & !mask,
+                lo: 0,
+                hi: w,
+            });
+            steps.push(Step::Round);
+            return;
+        } else if rank | mask < p {
+            steps.push(Step::Recv {
+                from: rank | mask,
+                lo: 0,
+                hi: w,
+                add: true,
+            });
+            steps.push(Step::Round);
+        }
+        mask <<= 1;
+    }
+}
+
+/// Script of [`super::broadcast`] from root 0 (binomial tree).
+fn broadcast_script(steps: &mut Vec<Step>, rank: usize, p: usize, w: usize) {
+    let vrank = rank; // root 0: the rotated space is the identity.
+    if vrank != 0 {
+        let parent = vrank & (vrank - 1);
+        steps.push(Step::Recv {
+            from: parent,
+            lo: 0,
+            hi: w,
+            add: false,
+        });
+        steps.push(Step::Round);
+    }
+    let lowbit = if vrank == 0 {
+        p.next_power_of_two()
+    } else {
+        vrank & vrank.wrapping_neg()
+    };
+    let mut mask = lowbit >> 1;
+    while mask > 0 {
+        let child = vrank | mask;
+        if child != vrank && child < p {
+            steps.push(Step::Send {
+                to: child,
+                lo: 0,
+                hi: w,
+            });
+            steps.push(Step::Round);
+        }
+        mask >>= 1;
+    }
+}
+
+/// Script of [`super::allgatherv`] (ring): at step t, forward the block
+/// received at step t−1.
+fn allgatherv_script(rank: usize, p: usize, offsets: &[usize]) -> Vec<Step> {
+    let mut steps = Vec::new();
+    let next = (rank + 1) % p;
+    let prev = (rank + p - 1) % p;
+    let mut cur = rank;
+    for _ in 0..p - 1 {
+        steps.push(Step::Send {
+            to: next,
+            lo: offsets[cur],
+            hi: offsets[cur + 1],
+        });
+        cur = (cur + p - 1) % p;
+        steps.push(Step::Recv {
+            from: prev,
+            lo: offsets[cur],
+            hi: offsets[cur + 1],
+            add: false,
+        });
+        steps.push(Step::Round);
+    }
+    steps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{allgatherv, allreduce_sum, run_ranks};
+
+    const ALGOS: [AllreduceAlgo; 3] = [
+        AllreduceAlgo::Rabenseifner,
+        AllreduceAlgo::RecursiveDoubling,
+        AllreduceAlgo::Linear,
+    ];
+
+    /// A posted allreduce completed by `wait` matches the blocking
+    /// allreduce bitwise, and its measured traffic matches both the
+    /// blocking run's stats and the handle's own `posted_stats`.
+    #[test]
+    fn posted_allreduce_matches_blocking_bitwise_and_in_stats() {
+        for algo in ALGOS {
+            for p in [2usize, 3, 4, 5, 7, 8, 12] {
+                for w in [1usize, 3, 17, 64] {
+                    let blocking = run_ranks(p, |c| {
+                        let mut buf: Vec<f64> = (0..w)
+                            .map(|i| ((c.rank() + 1) * (i + 1)) as f64 * 0.25)
+                            .collect();
+                        allreduce_sum(c, &mut buf, algo);
+                        (buf, c.stats())
+                    });
+                    let posted = run_ranks(p, |c| {
+                        let buf: Vec<f64> = (0..w)
+                            .map(|i| ((c.rank() + 1) * (i + 1)) as f64 * 0.25)
+                            .collect();
+                        let mut h = CollectiveHandle::post_allreduce(c, buf, algo);
+                        let out = h.wait(c);
+                        (out, c.stats(), h.posted_stats())
+                    });
+                    for (rank, ((bbuf, bstats), (nbuf, nstats, planned))) in
+                        blocking.iter().zip(&posted).enumerate()
+                    {
+                        assert_eq!(bbuf, nbuf, "{algo:?} p={p} w={w} rank {rank}");
+                        assert_eq!(bstats, nstats, "{algo:?} p={p} w={w} rank {rank}");
+                        let mut with_count = *planned;
+                        with_count.allreduces = nstats.allreduces;
+                        assert_eq!(
+                            &with_count, nstats,
+                            "{algo:?} p={p} w={w} rank {rank}: posted_stats must \
+                             equal the traffic actually recorded"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Same contract for the ring allgatherv, including empty blocks.
+    #[test]
+    fn posted_allgatherv_matches_blocking_bitwise_and_in_stats() {
+        for p in [2usize, 3, 4, 6] {
+            let counts: Vec<usize> = (0..p).map(|r| [3, 0, 1, 2][r % 4]).collect();
+            let blocking = run_ranks(p, |c| {
+                let r = c.rank();
+                let mine: Vec<f64> = (0..counts[r]).map(|i| (10 * r + i) as f64).collect();
+                let out = allgatherv(c, &mine, &counts);
+                (out, c.stats())
+            });
+            let posted = run_ranks(p, |c| {
+                let r = c.rank();
+                let mine: Vec<f64> = (0..counts[r]).map(|i| (10 * r + i) as f64).collect();
+                let mut h = CollectiveHandle::post_allgatherv(c, &mine, &counts);
+                let out = h.wait(c);
+                (out, c.stats(), h.posted_stats())
+            });
+            for (rank, ((bbuf, bstats), (nbuf, nstats, planned))) in
+                blocking.iter().zip(&posted).enumerate()
+            {
+                assert_eq!(bbuf, nbuf, "p={p} rank {rank}");
+                assert_eq!(bstats, nstats, "p={p} rank {rank}");
+                assert_eq!(planned, nstats, "p={p} rank {rank}: posted-traffic once");
+            }
+        }
+    }
+
+    /// `test` may be polled any number of times, in any order relative to
+    /// other ranks' progress; it eventually reports done and never
+    /// re-executes traffic (stats equal the single-shot planned stats).
+    #[test]
+    fn test_polls_are_idempotent_and_converge() {
+        let p = 4;
+        let outs = run_ranks(p, |c| {
+            let buf = vec![c.rank() as f64 + 1.0; 8];
+            let mut h = CollectiveHandle::post_allreduce(c, buf, AllreduceAlgo::Rabenseifner);
+            // Poll a few times before committing to the blocking wait —
+            // rank 0 skips polling entirely (out-of-order completion).
+            if c.rank() != 0 {
+                for _ in 0..5 {
+                    if h.test(c) {
+                        break;
+                    }
+                }
+            }
+            let out = h.wait(c);
+            assert!(h.is_done());
+            assert!(h.test(c), "test after completion stays true");
+            (out, c.stats(), h.posted_stats())
+        });
+        let expect = (1..=p).map(|r| r as f64).sum::<f64>();
+        for (out, stats, planned) in &outs {
+            assert!(out.iter().all(|&v| v == expect));
+            let mut with_count = *planned;
+            with_count.allreduces = 1;
+            assert_eq!(&with_count, stats, "polling must not double-account traffic");
+        }
+    }
+
+    #[test]
+    fn double_wait_panics() {
+        let results = run_ranks(2, |c| {
+            let buf = vec![1.0; 4];
+            let mut h =
+                CollectiveHandle::post_allreduce(c, buf, AllreduceAlgo::RecursiveDoubling);
+            let _ = h.wait(c);
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let _ = h.wait(c);
+            }))
+            .is_err()
+        });
+        assert!(results.iter().all(|&panicked| panicked));
+    }
+
+    /// Handles do not borrow the communicator, so one rank can hold two
+    /// in-flight collectives over *disjoint* subgroups (disjoint rank
+    /// pairs) and complete them in reverse post order. The peers run the
+    /// plain blocking allreduce — posted and blocking collectives speak
+    /// the same wire protocol.
+    #[test]
+    fn disjoint_subgroup_handles_complete_out_of_order() {
+        use crate::comm::{CommStats, SubComm};
+        let g01 = [0usize, 1];
+        let g02 = [0usize, 2];
+        let outs = run_ranks(3, |c| {
+            let mine = vec![(c.rank() + 1) as f64; 4];
+            match c.rank() {
+                0 => {
+                    let (mut s1, mut s2) = (CommStats::default(), CommStats::default());
+                    let mut h1 = {
+                        let mut sub = SubComm::new(c, &g01, &mut s1);
+                        CollectiveHandle::post_allreduce(
+                            &mut sub,
+                            mine.clone(),
+                            AllreduceAlgo::Rabenseifner,
+                        )
+                    };
+                    let mut h2 = {
+                        let mut sub = SubComm::new(c, &g02, &mut s2);
+                        CollectiveHandle::post_allreduce(
+                            &mut sub,
+                            mine.clone(),
+                            AllreduceAlgo::Rabenseifner,
+                        )
+                    };
+                    // Reverse post order: wait the {0,2} collective first.
+                    let out2 = {
+                        let mut sub = SubComm::new(c, &g02, &mut s2);
+                        h2.wait(&mut sub)
+                    };
+                    let out1 = {
+                        let mut sub = SubComm::new(c, &g01, &mut s1);
+                        h1.wait(&mut sub)
+                    };
+                    (out1, out2)
+                }
+                r => {
+                    let members: &[usize] = if r == 1 { &g01 } else { &g02 };
+                    let mut stats = CommStats::default();
+                    let mut sub = SubComm::new(c, members, &mut stats);
+                    let mut buf = mine;
+                    allreduce_sum(&mut sub, &mut buf, AllreduceAlgo::Rabenseifner);
+                    (buf.clone(), buf)
+                }
+            }
+        });
+        // Group {0,1} sums to 3, group {0,2} sums to 4 — on every member.
+        assert!(outs[0].0.iter().all(|&v| v == 3.0), "{:?}", outs[0].0);
+        assert!(outs[0].1.iter().all(|&v| v == 4.0), "{:?}", outs[0].1);
+        assert!(outs[1].0.iter().all(|&v| v == 3.0), "{:?}", outs[1].0);
+        assert!(outs[2].0.iter().all(|&v| v == 4.0), "{:?}", outs[2].0);
+    }
+
+    /// Single-rank and empty-buffer posts complete immediately with the
+    /// same accounting as the blocking path (one allreduce, no traffic).
+    #[test]
+    fn degenerate_posts_complete_at_post_time() {
+        let outs = run_ranks(1, |c| {
+            let mut h = CollectiveHandle::post_allreduce(c, vec![5.0], AllreduceAlgo::Linear);
+            assert!(h.is_done());
+            let out = h.wait(c);
+            (out, c.stats())
+        });
+        assert_eq!(outs[0].0, vec![5.0]);
+        assert_eq!(outs[0].1.allreduces, 1);
+        assert_eq!(outs[0].1.words, 0);
+
+        let outs = run_ranks(2, |c| {
+            let mut h =
+                CollectiveHandle::post_allreduce(c, Vec::new(), AllreduceAlgo::Rabenseifner);
+            assert!(h.is_done());
+            h.wait(c).len()
+        });
+        assert_eq!(outs, vec![0, 0]);
+    }
+}

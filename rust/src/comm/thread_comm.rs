@@ -42,6 +42,15 @@ impl Communicator for ThreadComm {
         self.receivers[from].recv().expect("peer rank hung up")
     }
 
+    fn try_recv(&mut self, from: usize) -> Option<Vec<f64>> {
+        assert_ne!(from, self.rank, "recv from self");
+        match self.receivers[from].try_recv() {
+            Ok(buf) => Some(buf),
+            Err(std::sync::mpsc::TryRecvError::Empty) => None,
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => panic!("peer rank hung up"),
+        }
+    }
+
     fn barrier(&mut self) {
         self.barrier.wait();
     }

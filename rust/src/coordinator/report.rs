@@ -99,13 +99,13 @@ fn engine_tag(e: Engine) -> &'static str {
 /// Strong-scaling rows → markdown (the Figures 3/5/6 table form, plus
 /// the intra-rank thread count of each hybrid point, the process-grid
 /// factorization — `-` for the 1D layout, `PRxPC` for 2D points — the
-/// grid-cell storage mode, and the per-rank resident-memory model in
-/// MB: `Ledger::mem_per_rank` × 8 bytes/word, the column the sharded
-/// storage exists to shrink).
+/// grid-cell storage mode, the communication-overlap mode, and the
+/// per-rank resident-memory model in MB: `Ledger::mem_per_rank` × 8
+/// bytes/word, the column the sharded storage exists to shrink).
 pub fn scaling_table(rows: &[SweepRow]) -> Table {
     let mut t = Table::new(vec![
-        "P", "t", "grid", "storage", "mem (MB)", "engine", "tuned", "classical (s)",
-        "s-step best (s)", "best s", "speedup",
+        "P", "t", "grid", "storage", "overlap", "mem (MB)", "engine", "tuned",
+        "classical (s)", "s-step best (s)", "best s", "speedup",
     ]);
     for r in rows {
         t.row(vec![
@@ -119,6 +119,7 @@ pub fn scaling_table(rows: &[SweepRow]) -> Table {
             } else {
                 "-".to_string()
             },
+            r.overlap.name().to_string(),
             format!("{:.2}", r.mem_words as f64 * 8.0 / 1e6),
             engine_tag(r.engine).to_string(),
             if r.tuned { "auto" } else { "-" }.to_string(),

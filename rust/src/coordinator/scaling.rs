@@ -19,7 +19,7 @@
 use crate::comm::{AllreduceAlgo, CommStats};
 use crate::costmodel::{Ledger, MachineProfile, Phase, Projection};
 use crate::data::Dataset;
-use crate::gram::GridStorage;
+use crate::gram::{GridStorage, OverlapMode};
 use crate::kernelfn::Kernel;
 use crate::rng::Pcg;
 use crate::sparse::Csr;
@@ -82,6 +82,14 @@ pub struct SweepConfig {
     /// `pr = 1`). The auto-tuned rows override it with the tuner's
     /// choice.
     pub row_block: usize,
+    /// Communication-overlap mode ([`OverlapMode`]) of every sweep
+    /// point: `Exchange` overlaps the sharded grid's fragment exchange
+    /// with the owned-rows partial product, `Pipeline` posts the next
+    /// outer block's gram reduce under the current block's updates.
+    /// Results are bitwise identical in every mode; the ledgers grow a
+    /// posted-communication column the projection can credit. The
+    /// analytic engine replicates the posted/hidden split exactly.
+    pub overlap: OverlapMode,
     /// Inner iterations `H`.
     pub h: usize,
     /// Coordinate-stream seed shared by every point.
@@ -110,6 +118,7 @@ impl Default for SweepConfig {
             pr: 1,
             grid_storage: GridStorage::Replicated,
             row_block: crate::gram::DEFAULT_ROW_BLOCK,
+            overlap: OverlapMode::Off,
             h: 256,
             seed: 0x5CA1E,
             algo: AllreduceAlgo::Rabenseifner,
@@ -137,6 +146,9 @@ pub struct SweepRow {
     /// ([`Ledger::mem_per_rank`]): the max over this row's classical and
     /// s-step configurations (the s-step block enlarges the scratch).
     pub mem_words: u64,
+    /// Communication-overlap mode this point ran (the sweep's
+    /// [`SweepConfig::overlap`], or the tuner's pick on tuned rows).
+    pub overlap: OverlapMode,
     /// Which engine produced the point.
     pub engine: Engine,
     /// Classical (`s = 1`) projection.
@@ -247,6 +259,7 @@ pub fn sweep(
                 grid,
                 storage,
                 mem_words,
+                overlap: cfg.overlap,
                 engine,
                 classical,
                 best_sstep: best,
@@ -292,6 +305,7 @@ fn point_ledger(
                 grid,
                 grid_storage: cfg.grid_storage,
                 row_block: cfg.row_block,
+                overlap: cfg.overlap,
             };
             run_distributed(ds, kernel, problem, &solver, p, cfg.algo, machine).critical
         }
@@ -308,8 +322,9 @@ fn point_ledger(
                 cfg.grid_storage,
                 cfg.seed,
                 cfg.algo,
+                cfg.overlap,
             ),
-            None => analytic_ledger(ds, kernel, problem, s, cfg.h, p, cfg.algo),
+            None => analytic_ledger(ds, kernel, problem, s, cfg.h, p, cfg.algo, cfg.overlap),
         },
     }
 }
@@ -341,11 +356,12 @@ fn tuned_row(
     } else {
         Engine::Projected
     };
-    // The tuned row runs the tuner's chosen storage/row_block, not the
-    // sweep's — thread them through a config override.
+    // The tuned row runs the tuner's chosen storage/row_block/overlap,
+    // not the sweep's — thread them through a config override.
     let tuned_cfg = SweepConfig {
         grid_storage: best.storage,
         row_block: best.row_block,
+        overlap: best.overlap,
         ..cfg.clone()
     };
     let cfg = &tuned_cfg;
@@ -365,6 +381,7 @@ fn tuned_row(
         grid,
         storage: best.storage,
         mem_words,
+        overlap: best.overlap,
         engine,
         classical,
         best_sstep,
@@ -513,6 +530,15 @@ pub fn mem_words_per_rank(
 /// to the solvers and identical traffic accounting to the collectives —
 /// for any `p`, including non-powers-of-two (the collectives' pre-fold
 /// is replicated exactly by [`allreduce_max_counts`]).
+///
+/// `overlap` replicates the nonblocking engine's posted/hidden split on
+/// top of the (mode-invariant) totals: with [`OverlapMode::Pipeline`]
+/// and `s > 1` the pipelined drivers post every outer block's gram
+/// allreduce (`comm_posted`, the construction norm allreduce stays
+/// blocking) and run all but the last block's Solve / GradCorr / Update
+/// under it (hidden flops). [`OverlapMode::Exchange`] has no 1D
+/// substrate and is inert here, exactly like the measured engine.
+#[allow(clippy::too_many_arguments)]
 pub fn analytic_ledger(
     ds: &Dataset,
     kernel: Kernel,
@@ -521,6 +547,7 @@ pub fn analytic_ledger(
     h: usize,
     p: usize,
     algo: AllreduceAlgo,
+    overlap: OverlapMode,
 ) -> Ledger {
     assert!(p >= 1, "need at least one rank");
     let m = ds.m() as f64;
@@ -570,6 +597,21 @@ pub fn analytic_ledger(
         let max1 = |counts: &[(u64, u64)]| counts.iter().map(|c| c.1).max().unwrap_or(0).max(1);
         l.comm.msgs += max1(&norm) + outer * max1(&gram);
         l.comm.allreduces += 1 + outer;
+        // Posted replica: the pipelined drivers (dispatched only for
+        // s > 1) post every outer block's gram allreduce; per rank the
+        // posted counters are `outer` copies of that rank's blocking
+        // counts, maxed last like every other column. Rounds stand in
+        // for sends (exact for the ring allreduce).
+        if overlap == OverlapMode::Pipeline && s > 1 {
+            let max = |f: fn(&(u64, u64)) -> u64| gram.iter().map(f).max().unwrap_or(0);
+            l.comm_posted = CommStats {
+                msgs: outer * max(|g| g.1),
+                words: outer * max(|g| g.0),
+                rounds: outer * max(|g| g.1),
+                allreduces: outer,
+            };
+            add_pipeline_hidden_flops(&mut l, problem, s, h, m);
+        }
     }
     l.mem_words = mem_words_per_rank(
         ds,
@@ -636,6 +678,37 @@ fn add_layout_independent_flops(l: &mut Ledger, problem: &ProblemSpec, s: usize,
     }
 }
 
+/// Hidden-flop replica of the pipelined s-step drivers
+/// (`dcd_sstep_pipelined` / `bdcd_sstep_pipelined`): every outer block
+/// except the last runs its Solve / GradCorr / Update under the next
+/// block's posted gram reduce, and overlapped blocks are always
+/// full-size `s` (only the final block can be partial, and it has no
+/// successor to hide behind).
+fn add_pipeline_hidden_flops(l: &mut Ledger, problem: &ProblemSpec, s: usize, h: usize, m: f64) {
+    let outer = h.div_ceil(s);
+    if outer < 2 {
+        return;
+    }
+    let hb = (outer - 1) as f64;
+    let s_f = s as f64;
+    match *problem {
+        ProblemSpec::Svm { .. } => {
+            l.add_hidden_flops(Phase::Solve, hb * s_f * (2.0 * m + 4.0));
+            l.add_hidden_flops(Phase::GradCorr, hb * s_f * (s_f - 1.0));
+            l.add_hidden_flops(Phase::Update, hb * s_f);
+        }
+        ProblemSpec::Krr { b, .. } => {
+            let bf = b as f64;
+            l.add_hidden_flops(
+                Phase::Solve,
+                hb * s_f * (2.0 * bf * m + bf * bf + bf * bf * bf),
+            );
+            l.add_hidden_flops(Phase::GradCorr, hb * s_f * (s_f - 1.0) * bf * bf);
+            l.add_hidden_flops(Phase::Update, hb * s_f * bf);
+        }
+    }
+}
+
 /// Replicate the measured 2D-grid ledger analytically, the grid analog
 /// of [`analytic_ledger`]: per-cell partial-product flops from the grid
 /// cells' nnz, the column-subcommunicator reduce traffic from
@@ -654,6 +727,17 @@ fn add_layout_independent_flops(l: &mut Ledger, problem: &ProblemSpec, s: usize,
 /// each feature shard — which requires replaying the exact sample
 /// stream ([`gram_call_samples`] with `seed`). Replicated storage
 /// ignores `seed`.
+///
+/// `overlap` replicates the nonblocking engine's posted/hidden split on
+/// top of the (mode-invariant) totals. [`OverlapMode::Exchange`]
+/// (sharded storage only): the per-call fragment rings are posted (the
+/// construction setup ring stays blocking) and the owned-rows partial
+/// product runs under them — hidden `KernelCompute` flops of
+/// `2·(Σ owned sampled positions)·cell_nnz` per rank.
+/// [`OverlapMode::Pipeline`] (`s > 1` only): every outer block's column
+/// reduce is posted; the row allgather is the exposed tail of
+/// `reduce_finish` and stays out of `comm_posted`; all but the last
+/// block's Solve / GradCorr / Update flops are hidden.
 #[allow(clippy::too_many_arguments)]
 pub fn grid_analytic_ledger(
     ds: &Dataset,
@@ -667,6 +751,7 @@ pub fn grid_analytic_ledger(
     storage: GridStorage,
     seed: u64,
     algo: AllreduceAlgo,
+    overlap: OverlapMode,
 ) -> Ledger {
     assert!(pr >= 1 && pc >= 1, "grid dimensions must be positive");
     // Mirror the measured path's clamp (`run_distributed` passes
@@ -715,6 +800,13 @@ pub fn grid_analytic_ledger(
     // call with per-group counts 2·Σ nnz of that call's deduplicated
     // sampled rows — the exact counts the measured exchange's
     // `allgatherv` moves, which requires replaying the sample stream.
+    // The overlap overlay below needs the exchange totals split from the
+    // setup ring (only per-call rings are posted) and the per-group count
+    // of *sampled positions* owned — duplicates included, because the
+    // uncached engine computes every sampled row and `GridProduct`
+    // charges `2·k·cell_nnz` regardless of which rows the call names.
+    let mut exch_setup: Vec<(u64, u64)> = vec![(0, 0); pr];
+    let mut owned_hits = vec![0u64; pr];
     let exch: Vec<Vec<(u64, u64)>> = match storage {
         GridStorage::Replicated => vec![vec![(0, 0); pc]; pr],
         GridStorage::Sharded => {
@@ -736,10 +828,14 @@ pub fn grid_analytic_ledger(
                 .collect();
             let setup_counts: Vec<usize> = owned_len.iter().map(|&w| 2 * w).collect();
             let setup_ring = allgatherv_counts_per_rank(&setup_counts);
+            exch_setup.clone_from(&setup_ring);
             let mut exch: Vec<Vec<(u64, u64)>> = (0..pr)
                 .map(|i| vec![setup_ring[i]; pc])
                 .collect();
             for call in gram_call_samples(problem, s, h, ds.m(), seed) {
+                for &t in &call {
+                    owned_hits[(t / row_block) % pr] += 1;
+                }
                 let mut uniq = call;
                 uniq.sort_unstable();
                 uniq.dedup();
@@ -827,6 +923,58 @@ pub fn grid_analytic_ledger(
             rounds: max_exch.1,
             allreduces: 0,
         };
+    }
+    // --- Overlap overlay: the posted/hidden split of the nonblocking
+    //     engine, replicated per rank (i, j) and maxed last. The totals
+    //     above are mode-invariant — overlap only moves counters into
+    //     `comm_posted` / hidden flops. -----------------------------------
+    match overlap {
+        OverlapMode::Off => {}
+        OverlapMode::Exchange => {
+            // `product_into` posts each call's fragment ring and computes
+            // the owned-rows partial under it; the setup ring runs
+            // blocking at construction. Ring sends: msgs = rounds.
+            if storage == GridStorage::Sharded && (pc > 1 || pr > 1) {
+                let mut posted = (0u64, 0u64);
+                let mut hidden = 0f64;
+                for i in 0..pr {
+                    for j in 0..pc {
+                        posted.0 = posted.0.max(exch[i][j].0 - exch_setup[i].0);
+                        posted.1 = posted.1.max(exch[i][j].1 - exch_setup[i].1);
+                        hidden = hidden.max(2.0 * owned_hits[i] as f64 * cell_nnz[i][j] as f64);
+                    }
+                }
+                l.comm_posted = CommStats {
+                    msgs: posted.1,
+                    words: posted.0,
+                    rounds: posted.1,
+                    allreduces: 0,
+                };
+                l.add_hidden_flops(Phase::KernelCompute, hidden);
+            }
+        }
+        OverlapMode::Pipeline => {
+            // The pipelined drivers (dispatched only for s > 1) post
+            // every outer block's column reduce; the row allgather is
+            // the exposed tail of `reduce_finish`. Rounds stand in for
+            // sends (exact for the ring allreduce).
+            if s > 1 && (pc > 1 || pr > 1) {
+                let mut posted = (0u64, 0u64);
+                for i in 0..pr {
+                    for g in &allreduce_counts_per_rank(s * b * owned_len[i], pc, algo) {
+                        posted.0 = posted.0.max(outer_u * g.0);
+                        posted.1 = posted.1.max(outer_u * g.1);
+                    }
+                }
+                l.comm_posted = CommStats {
+                    msgs: posted.1,
+                    words: posted.0,
+                    rounds: posted.1,
+                    allreduces: outer_u,
+                };
+                add_pipeline_hidden_flops(&mut l, problem, s, h, m);
+            }
+        }
     }
     l.mem_words = mem_words_per_rank(
         ds,
@@ -1114,6 +1262,7 @@ mod tests {
                             h,
                             p,
                             algo,
+                            OverlapMode::Off,
                         );
                         for ph in Phase::ALL {
                             let a = analytic.flops(ph);
@@ -1315,6 +1464,7 @@ mod tests {
                                 storage,
                                 77,
                                 algo,
+                                OverlapMode::Off,
                             );
                             let tag = format!(
                                 "{problem:?} {algo:?} {pr}x{pc} {} s={s}",
@@ -1366,6 +1516,211 @@ mod tests {
         }
     }
 
+    /// The overlap overlay of both analytic replicas must agree with
+    /// measured overlapped execution word-for-word: the mode-invariant
+    /// totals stay equal to the blocking counters, and the posted split
+    /// and hidden flops match the nonblocking engine exactly. This is
+    /// the acceptance criterion's "analytic replicas cross-validate
+    /// against measured CommStats" for the overlapped modes.
+    #[test]
+    fn analytic_overlap_replicas_match_measured_counts() {
+        let machine = MachineProfile::cray_ex();
+        let ds = crate::data::gen_dense_classification(24, 16, 0.05, 12);
+        let problems = [svm_problem(), ProblemSpec::Krr { lambda: 1.0, b: 3 }];
+        let h = 16;
+        // 1D pipeline: every outer block's gram allreduce is posted; the
+        // construction norm allreduce stays blocking.
+        for problem in &problems {
+            for algo in [AllreduceAlgo::Rabenseifner, AllreduceAlgo::Linear] {
+                for p in [2usize, 3, 4] {
+                    for s in [4usize, 8] {
+                        let solver = SolverSpec {
+                            s,
+                            h,
+                            seed: 77,
+                            cache_rows: 0,
+                            threads: 1,
+                            grid: None,
+                            overlap: OverlapMode::Pipeline,
+                            ..Default::default()
+                        };
+                        let measured = run_distributed(
+                            &ds, Kernel::paper_rbf(), problem, &solver, p, algo, &machine,
+                        )
+                        .critical;
+                        let analytic = analytic_ledger(
+                            &ds,
+                            Kernel::paper_rbf(),
+                            problem,
+                            s,
+                            h,
+                            p,
+                            algo,
+                            OverlapMode::Pipeline,
+                        );
+                        let tag = format!("{problem:?} {algo:?} p={p} s={s} pipeline");
+                        assert_eq!(analytic.comm.words, measured.comm.words, "{tag} words");
+                        assert_eq!(analytic.comm.rounds, measured.comm.rounds, "{tag} rounds");
+                        assert_eq!(
+                            analytic.comm_posted.words, measured.comm_posted.words,
+                            "{tag} posted words"
+                        );
+                        assert_eq!(
+                            analytic.comm_posted.rounds, measured.comm_posted.rounds,
+                            "{tag} posted rounds"
+                        );
+                        assert_eq!(
+                            analytic.comm_posted.allreduces, measured.comm_posted.allreduces,
+                            "{tag} posted allreduces"
+                        );
+                        assert!(measured.comm_posted.words > 0, "{tag}");
+                        for ph in Phase::ALL {
+                            let a = analytic.hidden_flops(ph);
+                            let b = measured.hidden_flops(ph);
+                            assert!(
+                                (a - b).abs() <= 1e-6 * b.abs().max(1.0),
+                                "{tag} hidden {}: {a} vs {b}",
+                                ph.name()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        // Grid exchange: the per-call fragment rings are posted (setup
+        // ring excluded) and the owned-rows partial product is hidden.
+        // Rings send exactly once per round, so the whole posted replica
+        // — msgs included — is exact.
+        for problem in &problems {
+            for (pr, pc) in [(2usize, 2usize), (2, 3), (4, 1), (3, 2)] {
+                for s in [1usize, 4] {
+                    let solver = SolverSpec {
+                        s,
+                        h,
+                        seed: 77,
+                        cache_rows: 0,
+                        threads: 1,
+                        grid: Some((pr, pc)),
+                        grid_storage: GridStorage::Sharded,
+                        overlap: OverlapMode::Exchange,
+                        ..Default::default()
+                    };
+                    let measured = run_distributed(
+                        &ds,
+                        Kernel::paper_rbf(),
+                        problem,
+                        &solver,
+                        pr * pc,
+                        AllreduceAlgo::Rabenseifner,
+                        &machine,
+                    )
+                    .critical;
+                    let analytic = grid_analytic_ledger(
+                        &ds,
+                        Kernel::paper_rbf(),
+                        problem,
+                        s,
+                        h,
+                        pr,
+                        pc,
+                        crate::gram::DEFAULT_ROW_BLOCK,
+                        GridStorage::Sharded,
+                        77,
+                        AllreduceAlgo::Rabenseifner,
+                        OverlapMode::Exchange,
+                    );
+                    let tag = format!("{problem:?} {pr}x{pc} s={s} exchange");
+                    assert_eq!(analytic.comm.words, measured.comm.words, "{tag} words");
+                    assert_eq!(analytic.comm.rounds, measured.comm.rounds, "{tag} rounds");
+                    assert_eq!(
+                        analytic.comm_exch.words, measured.comm_exch.words,
+                        "{tag} exch words"
+                    );
+                    assert_eq!(analytic.comm_posted, measured.comm_posted, "{tag} posted");
+                    let a = analytic.hidden_flops(Phase::KernelCompute);
+                    let b = measured.hidden_flops(Phase::KernelCompute);
+                    assert!(
+                        (a - b).abs() <= 1e-6 * b.abs().max(1.0),
+                        "{tag} hidden kernel: {a} vs {b}"
+                    );
+                    assert!(b > 0.0, "{tag} expected hidden owned partial");
+                    if pr > 1 {
+                        assert!(measured.comm_posted.words > 0, "{tag}");
+                    }
+                }
+            }
+        }
+        // Grid pipeline: only the column reduce is posted — the row
+        // allgather is the exposed tail of `reduce_finish`.
+        for storage in [GridStorage::Replicated, GridStorage::Sharded] {
+            for (pr, pc) in [(2usize, 2usize), (2, 3), (1, 4)] {
+                let s = 4;
+                let solver = SolverSpec {
+                    s,
+                    h,
+                    seed: 77,
+                    cache_rows: 0,
+                    threads: 1,
+                    grid: Some((pr, pc)),
+                    grid_storage: storage,
+                    overlap: OverlapMode::Pipeline,
+                    ..Default::default()
+                };
+                let measured = run_distributed(
+                    &ds,
+                    Kernel::paper_rbf(),
+                    &svm_problem(),
+                    &solver,
+                    pr * pc,
+                    AllreduceAlgo::Rabenseifner,
+                    &machine,
+                )
+                .critical;
+                let analytic = grid_analytic_ledger(
+                    &ds,
+                    Kernel::paper_rbf(),
+                    &svm_problem(),
+                    s,
+                    h,
+                    pr,
+                    pc,
+                    crate::gram::DEFAULT_ROW_BLOCK,
+                    storage,
+                    77,
+                    AllreduceAlgo::Rabenseifner,
+                    OverlapMode::Pipeline,
+                );
+                let tag = format!("{pr}x{pc} {} pipeline", storage.name());
+                assert_eq!(analytic.comm.words, measured.comm.words, "{tag} words");
+                assert_eq!(analytic.comm.rounds, measured.comm.rounds, "{tag} rounds");
+                assert_eq!(
+                    analytic.comm_posted.words, measured.comm_posted.words,
+                    "{tag} posted words"
+                );
+                assert_eq!(
+                    analytic.comm_posted.rounds, measured.comm_posted.rounds,
+                    "{tag} posted rounds"
+                );
+                assert_eq!(
+                    analytic.comm_posted.allreduces, measured.comm_posted.allreduces,
+                    "{tag} posted allreduces"
+                );
+                if pc > 1 {
+                    assert!(measured.comm_posted.words > 0, "{tag}");
+                }
+                for ph in Phase::ALL {
+                    let a = analytic.hidden_flops(ph);
+                    let b = measured.hidden_flops(ph);
+                    assert!(
+                        (a - b).abs() <= 1e-6 * b.abs().max(1.0),
+                        "{tag} hidden {}: {a} vs {b}",
+                        ph.name()
+                    );
+                }
+            }
+        }
+    }
+
     /// With one row group the grid replica must degenerate to the 1D
     /// replica exactly (same flops, same total traffic).
     #[test]
@@ -1381,6 +1736,7 @@ mod tests {
                     16,
                     p,
                     AllreduceAlgo::Rabenseifner,
+                    OverlapMode::Off,
                 );
                 let grid = grid_analytic_ledger(
                     &ds,
@@ -1394,6 +1750,7 @@ mod tests {
                     GridStorage::Replicated,
                     0,
                     AllreduceAlgo::Rabenseifner,
+                    OverlapMode::Off,
                 );
                 for ph in Phase::ALL {
                     assert_eq!(one_d.flops(ph), grid.flops(ph), "p={p} s={s} {}", ph.name());
@@ -1421,6 +1778,7 @@ mod tests {
             h,
             8,
             AllreduceAlgo::Rabenseifner,
+            OverlapMode::Off,
         );
         let grid = grid_analytic_ledger(
             &ds,
@@ -1434,6 +1792,7 @@ mod tests {
             GridStorage::Replicated,
             0,
             AllreduceAlgo::Rabenseifner,
+            OverlapMode::Off,
         );
         // Reduce payload shrinks 4× (m/pr) and the tree shrinks from 8 to
         // 2 ranks: the grid's reduce words must be well under half of 1D.
@@ -1650,6 +2009,7 @@ mod tests {
                 h,
                 13,
                 AllreduceAlgo::Rabenseifner,
+                OverlapMode::Off,
             );
             assert_eq!(analytic.comm.words, measured.comm.words, "s={s} words");
             assert_eq!(analytic.comm.rounds, measured.comm.rounds, "s={s} rounds");

@@ -136,6 +136,10 @@ impl CacheStats {
 #[derive(Clone, Debug, Default)]
 pub struct Ledger {
     flops: [f64; NPHASE],
+    /// Flops that executed *under* a posted (in-flight) collective — the
+    /// overlap modes' hidden-compute budget. Always a subset of `flops`
+    /// (hidden work is recorded in both).
+    hidden_flops: [f64; NPHASE],
     wall: [PhaseTimer; NPHASE],
     /// Gram-oracle invocations — with [`Self::kernel_rows`], the
     /// projection uses the average rows/call to model the BLAS-1→BLAS-3
@@ -151,6 +155,14 @@ pub struct Ledger {
     pub iters: f64,
     /// Copied from the rank's communicator at the end of a run.
     pub comm: CommStats,
+    /// The share of the traffic that was *posted* (nonblocking) rather
+    /// than waited on inline — the collectives the overlap modes hide
+    /// under compute (`gram::OverlapMode`). Strictly a subset of the
+    /// totals: every posted word/round is also counted in `comm` (and in
+    /// the grid sub-stats), so the totals stay overlap-invariant; this
+    /// field only tells the projection how much of them *may* overlap
+    /// with [`Ledger::hidden_flops`]. Zero for blocking runs.
+    pub comm_posted: CommStats,
     /// Column-subcommunicator (gram reduce) traffic of a 2D grid run —
     /// the collective the grid shrinks from `P` to `pc` participants.
     /// Zero for local and 1D runs, where `comm` holds everything.
@@ -187,6 +199,28 @@ impl Ledger {
     #[inline]
     pub fn add_flops(&mut self, phase: Phase, n: f64) {
         self.flops[phase.idx()] += n;
+    }
+
+    /// Record `n` flop-equivalents of `phase` as having executed under a
+    /// posted collective (on top of, not instead of,
+    /// [`Ledger::add_flops`] — the caller records the work normally and
+    /// additionally marks it hidden).
+    #[inline]
+    pub fn add_hidden_flops(&mut self, phase: Phase, n: f64) {
+        self.hidden_flops[phase.idx()] += n;
+    }
+
+    /// Flop-equivalents of `phase` recorded as overlap-hidden.
+    pub fn hidden_flops(&self, phase: Phase) -> f64 {
+        self.hidden_flops[phase.idx()]
+    }
+
+    /// Record the traffic of a collective that was posted (nonblocking)
+    /// rather than waited on inline. The same traffic is also counted in
+    /// the blocking totals by the communicator — this marks it
+    /// overlappable, it does not move it.
+    pub fn add_posted(&mut self, stats: CommStats) {
+        self.comm_posted = self.comm_posted.plus(stats);
     }
 
     /// Record one gram-oracle call over `rows` sampled rows.
@@ -231,6 +265,7 @@ impl Ledger {
         for l in ledgers {
             for i in 0..NPHASE {
                 out.flops[i] = out.flops[i].max(l.flops[i]);
+                out.hidden_flops[i] = out.hidden_flops[i].max(l.hidden_flops[i]);
                 if l.wall[i].secs() > out.wall[i].secs() {
                     out.wall[i] = l.wall[i].clone();
                 }
@@ -239,6 +274,7 @@ impl Ledger {
             out.kernel_rows = out.kernel_rows.max(l.kernel_rows);
             out.iters = out.iters.max(l.iters);
             out.comm = out.comm.max(l.comm);
+            out.comm_posted = out.comm_posted.max(l.comm_posted);
             out.comm_col = out.comm_col.max(l.comm_col);
             out.comm_row = out.comm_row.max(l.comm_row);
             out.comm_exch = out.comm_exch.max(l.comm_exch);
@@ -442,7 +478,37 @@ impl MachineProfile {
         Projection {
             per_phase,
             comm: critical.comm,
+            overlap_saved_secs: self.overlap_saved(critical, 1),
         }
+    }
+
+    /// Seconds the overlap modes hide: the posted collectives' wire time
+    /// and the compute executed under them run concurrently, so the
+    /// model charges `max` of the two instead of their sum — i.e. it
+    /// subtracts `min(posted_comm, hidden_compute)` from the blocking
+    /// total. Zero for blocking runs (nothing posted). The hidden kernel
+    /// flops get the same BLAS-1 factor and thread split as the kernel
+    /// phase itself, keeping the subtraction consistent with the charge.
+    pub fn overlap_saved(&self, critical: &Ledger, threads: usize) -> f64 {
+        let posted = critical.comm_posted;
+        let posted_secs = self.beta * posted.words as f64 + self.phi * posted.rounds as f64;
+        if posted_secs == 0.0 {
+            return 0.0;
+        }
+        let mut hidden = 0.0;
+        for ph in Phase::ALL {
+            let mut secs = self.gamma * critical.hidden_flops(ph);
+            if ph == Phase::KernelCompute {
+                if critical.kernel_calls > 0.0 && critical.kernel_rows > 0.0 {
+                    let avg_rows = critical.kernel_rows / critical.kernel_calls;
+                    secs *= 1.0 + (self.blas1_penalty - 1.0) / avg_rows;
+                }
+                let t_eff = threads.min(self.cores_per_rank).max(1) as f64;
+                secs /= t_eff;
+            }
+            hidden += secs;
+        }
+        posted_secs.min(hidden)
     }
 
     /// Predict a configuration's running time from its critical-path
@@ -473,10 +539,31 @@ impl MachineProfile {
             compute += secs;
         }
         compute += self.iter_overhead * critical.iters;
+        let mut bandwidth = self.beta * critical.comm.words as f64;
+        let mut latency = self.phi * critical.comm.rounds as f64;
+        // The overlap subtraction, bucketed by what it actually hides:
+        // when the posted collectives fit under the hidden compute, the
+        // saved seconds are communication (posted words and rounds come
+        // off their own coefficients — `overlap_saved` = exactly that
+        // sum); otherwise the hidden compute is the smaller side and the
+        // saving comes off the compute term. Either way the total drops
+        // by the projection's `overlap_saved` scalar, keeping the 1e-12
+        // agreement with `project_hybrid`.
+        let posted = critical.comm_posted;
+        let posted_secs = self.beta * posted.words as f64 + self.phi * posted.rounds as f64;
+        if posted_secs > 0.0 {
+            let saved = self.overlap_saved(critical, threads);
+            if saved >= posted_secs {
+                bandwidth -= self.beta * posted.words as f64;
+                latency -= self.phi * posted.rounds as f64;
+            } else {
+                compute -= saved;
+            }
+        }
         Predicted {
             compute_secs: compute,
-            bandwidth_secs: self.beta * critical.comm.words as f64,
-            latency_secs: self.phi * critical.comm.rounds as f64,
+            bandwidth_secs: bandwidth,
+            latency_secs: latency,
         }
     }
 
@@ -496,6 +583,9 @@ impl MachineProfile {
         // degrades to serial instead of panicking.
         let t_eff = threads.min(self.cores_per_rank).max(1) as f64;
         p.per_phase[Phase::KernelCompute.idx()] /= t_eff;
+        // Hidden kernel compute shrinks with the thread split too, so
+        // the overlap saving must be re-derived at this `t`.
+        p.overlap_saved_secs = self.overlap_saved(critical, threads);
         p
     }
 }
@@ -545,6 +635,12 @@ pub struct Projection {
     per_phase: [f64; NPHASE],
     /// The measured traffic the projection weighted.
     pub comm: CommStats,
+    /// Seconds hidden by overlapped communication
+    /// (`min(posted comm, hidden compute)` — see
+    /// [`MachineProfile::overlap_saved`]); already *excluded* from
+    /// [`Projection::total_secs`] but not from the per-phase breakdown,
+    /// which keeps showing the blocking charge per phase.
+    pub overlap_saved_secs: f64,
 }
 
 impl Projection {
@@ -553,9 +649,9 @@ impl Projection {
         self.per_phase[phase.idx()]
     }
 
-    /// Projected seconds across all phases.
+    /// Projected seconds across all phases, net of the overlap saving.
     pub fn total_secs(&self) -> f64 {
-        self.per_phase.iter().sum()
+        self.per_phase.iter().sum::<f64>() - self.overlap_saved_secs
     }
 
     /// Markdown table row fragment: per-phase seconds in `Phase::ALL`
@@ -724,6 +820,85 @@ mod tests {
         assert!(p4.compute_secs < p1.compute_secs);
         assert_eq!(p4.bandwidth_secs, p1.bandwidth_secs);
         assert_eq!(p4.latency_secs, p1.latency_secs);
+    }
+
+    /// The overlap term charges `max(posted comm, hidden compute)`
+    /// instead of their sum: the projection subtracts the min, capped by
+    /// whichever side is smaller, and a blocking ledger (nothing posted)
+    /// saves nothing.
+    #[test]
+    fn overlap_saving_is_min_of_posted_and_hidden() {
+        let m = MachineProfile::cray_ex();
+        let mut blocking = Ledger::new();
+        blocking.add_flops(Phase::KernelCompute, 1e9);
+        blocking.comm.words = 1_000_000;
+        blocking.comm.rounds = 100;
+        let base = m.project(&blocking);
+        assert_eq!(base.overlap_saved_secs, 0.0);
+
+        // Comm-bound regime: plenty of hidden compute, the posted wire
+        // time is the smaller side — the whole posted share is hidden.
+        let mut l = blocking.clone();
+        l.comm_posted.words = 10_000;
+        l.comm_posted.rounds = 10;
+        l.add_hidden_flops(Phase::KernelCompute, 9e8);
+        let posted_secs = m.beta * 10_000.0 + m.phi * 10.0;
+        let p = m.project(&l);
+        assert!((p.overlap_saved_secs - posted_secs).abs() < 1e-15);
+        // Per-phase rows keep the blocking charge; only the total drops.
+        assert_eq!(p.phase_secs(Phase::Allreduce), base.phase_secs(Phase::Allreduce));
+        assert!((base.total_secs() - p.total_secs() - posted_secs).abs() < 1e-15);
+
+        // Compute-bound regime: a sliver of hidden compute under a big
+        // posted collective — the saving is capped at the hidden side.
+        let mut l2 = blocking.clone();
+        l2.comm_posted.words = 900_000;
+        l2.comm_posted.rounds = 90;
+        l2.add_hidden_flops(Phase::Solve, 1e6);
+        let hidden_secs = m.gamma * 1e6;
+        let p2 = m.project(&l2);
+        assert!((p2.overlap_saved_secs - hidden_secs).abs() < 1e-15);
+
+        // The saving can never exceed either side.
+        for p in [&p, &p2] {
+            let posted = p.comm; // totals; posted ⊆ totals by contract
+            let wire = m.beta * posted.words as f64 + m.phi * posted.rounds as f64;
+            assert!(p.overlap_saved_secs <= wire + 1e-15);
+        }
+    }
+
+    /// Prediction and hybrid projection stay pinned (1e-12 relative)
+    /// with the overlap term active, in both regimes, across threads —
+    /// and the hidden kernel compute shrinks with the thread split, so
+    /// the saving is re-derived per `t`.
+    #[test]
+    fn predict_matches_projection_with_overlap() {
+        let m = MachineProfile::cray_ex();
+        let mut l = Ledger::new();
+        l.add_flops(Phase::KernelCompute, 1e9);
+        l.add_flops(Phase::Solve, 1e6);
+        l.kernel_calls = 10.0;
+        l.kernel_rows = 80.0;
+        l.iters = 500.0;
+        l.comm.words = 123_456;
+        l.comm.rounds = 789;
+        l.comm_posted.words = 60_000;
+        l.comm_posted.rounds = 300;
+        l.add_hidden_flops(Phase::KernelCompute, 5e8);
+        for threads in [1usize, 3, 64] {
+            let pred = m.predict(&l, threads);
+            let proj = m.project_hybrid(&l, threads);
+            let (a, b) = (pred.total_secs(), proj.total_secs());
+            assert!(
+                (a - b).abs() <= 1e-12 * a.max(b),
+                "t={threads}: predicted {a} vs projected {b}"
+            );
+        }
+        // More threads shrink the hidden compute too: at high t the
+        // saving can flip from comm-bound to compute-bound.
+        let s1 = m.overlap_saved(&l, 1);
+        let s16 = m.overlap_saved(&l, 16);
+        assert!(s16 <= s1 + 1e-18);
     }
 
     #[test]

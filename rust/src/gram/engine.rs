@@ -9,8 +9,8 @@ use crate::kernelfn::Kernel;
 
 use super::cache::RowCache;
 use super::epilogue::Epilogue;
-use super::layout::Layout;
-use super::product::{BlockKind, ProductStage};
+use super::layout::{Layout, OverlapMode};
+use super::product::{BlockKind, ProductCost, ProductStage};
 use super::reduce::ReduceStage;
 
 /// Where a sampled position is served from in a cached call.
@@ -19,6 +19,21 @@ enum Src {
     Hit,
     /// Computed this call; the payload is the index into the miss block.
     Miss(usize),
+}
+
+/// State carried from [`GramEngine::gram_start`] to
+/// [`GramEngine::gram_finish`] while the posted reduction is in flight.
+struct PendingGram {
+    /// The sample the start was posted for (finish must match).
+    sample: Vec<usize>,
+    /// Deduplicated missed rows (the whole sample when the cache is off).
+    miss: Vec<usize>,
+    /// Staged miss block: partial product at start, reduced + mapped at
+    /// finish.
+    block: Mat,
+    /// False when every position was a cache hit — nothing was computed
+    /// or posted, finish only serves hits.
+    active: bool,
 }
 
 /// One gram pipeline: a product backend, a reduction, an optional
@@ -38,6 +53,11 @@ pub struct GramEngine<P: ProductStage, R: ReduceStage> {
     miss_rows: Vec<usize>,
     miss_pos: HashMap<usize, usize>,
     srcs: Vec<Src>,
+    /// How communication is overlapped with compute. Inert when the
+    /// configuration has nothing to overlap (see [`OverlapMode`]).
+    overlap: OverlapMode,
+    /// Split-phase call in flight ([`GramEngine::gram_start`]).
+    pending: Option<PendingGram>,
 }
 
 impl<P: ProductStage, R: ReduceStage> GramEngine<P, R> {
@@ -72,7 +92,28 @@ impl<P: ProductStage, R: ReduceStage> GramEngine<P, R> {
             miss_rows: Vec::new(),
             miss_pos: HashMap::new(),
             srcs: Vec::new(),
+            overlap: OverlapMode::Off,
+            pending: None,
         }
+    }
+
+    /// Select the overlap mode (default [`OverlapMode::Off`]). A pure
+    /// wall-time knob: every mode produces bitwise-identical blocks and
+    /// identical total traffic; modes the configuration cannot exploit
+    /// (no exchange to overlap, nothing to pipeline) degrade gracefully
+    /// to the blocking schedule. Must be identical on every rank — the
+    /// overlapped collectives are still collectives.
+    pub fn set_overlap(&mut self, mode: OverlapMode) {
+        assert!(
+            self.pending.is_none(),
+            "set_overlap: a split-phase gram call is in flight"
+        );
+        self.overlap = mode;
+    }
+
+    /// The configured overlap mode.
+    pub fn overlap(&self) -> OverlapMode {
+        self.overlap
     }
 
     /// Kernel-matrix dimension `m`.
@@ -124,6 +165,10 @@ impl<P: ProductStage, R: ReduceStage> GramEngine<P, R> {
 
     /// Fill `q[r][·]` with kernel row `sample[r]`, recording costs.
     pub fn gram(&mut self, sample: &[usize], q: &mut Mat, ledger: &mut Ledger) {
+        assert!(
+            self.pending.is_none(),
+            "gram: a split-phase gram call is in flight"
+        );
         assert_eq!(q.nrows(), sample.len());
         assert_eq!(q.ncols(), self.m);
         if self.cache.is_none() {
@@ -131,12 +176,115 @@ impl<P: ProductStage, R: ReduceStage> GramEngine<P, R> {
             return;
         }
 
-        // 1. Classify positions. Deterministic: pure function of the
-        //    sample stream and prior cache state (see module docs).
+        self.classify(sample, ledger);
+        // Serve hits out of the cache (before any insert can evict them).
+        self.serve_hits(sample, q, ledger);
+
+        // Compute the deduplicated miss block through the pipeline.
+        if self.miss_rows.is_empty() {
+            if self.reduce.is_active() {
+                ledger.cache.allreduces_saved += 1;
+            }
+            return;
+        }
+        let miss = std::mem::take(&mut self.miss_rows);
+        let mut scratch = self.take_scratch(miss.len());
+        self.compute_block(&miss, &mut scratch, ledger);
+        self.commit_block(&miss, &scratch, q);
+        self.scratch = scratch;
+        self.miss_rows = miss;
+    }
+
+    /// Split-phase gram, first half ([`OverlapMode::Pipeline`]):
+    /// classify, compute the partial product, and *post* the reduction.
+    /// The caller overlaps unrelated compute (the previous s-step
+    /// block's α updates), then calls [`GramEngine::gram_finish`] with
+    /// the same sample. The classify → product → post sequence is
+    /// exactly the blocking path's, so the cache stream and every bit of
+    /// arithmetic are unchanged — only the wait moves.
+    pub fn gram_start(&mut self, sample: &[usize], ledger: &mut Ledger) {
+        assert!(
+            self.pending.is_none(),
+            "gram_start: a gram call is already in flight"
+        );
+        let miss: Vec<usize> = if self.cache.is_some() {
+            self.classify(sample, ledger);
+            if self.miss_rows.is_empty() {
+                if self.reduce.is_active() {
+                    ledger.cache.allreduces_saved += 1;
+                }
+                self.pending = Some(PendingGram {
+                    sample: sample.to_vec(),
+                    miss: Vec::new(),
+                    block: Mat::zeros(0, 0),
+                    active: false,
+                });
+                return;
+            }
+            std::mem::take(&mut self.miss_rows)
+        } else {
+            sample.to_vec()
+        };
+        let mut block = self.take_scratch(miss.len());
+        let cost = self.product_into(&miss, &mut block, ledger);
+        if self.reduce.is_active() {
+            let posted = ledger.time(Phase::Allreduce, || self.reduce.reduce_start(block.data()));
+            ledger.add_posted(posted);
+        }
+        ledger.add_kernel_call(cost.rows_charged);
+        self.pending = Some(PendingGram {
+            sample: sample.to_vec(),
+            miss,
+            block,
+            active: true,
+        });
+    }
+
+    /// Split-phase gram, second half: wait for the posted reduction,
+    /// apply the epilogue, and fill `q` — the remaining (exposed) part
+    /// of the blocking call.
+    pub fn gram_finish(&mut self, sample: &[usize], q: &mut Mat, ledger: &mut Ledger) {
+        let mut pending = self
+            .pending
+            .take()
+            .expect("gram_finish without a matching gram_start");
+        assert_eq!(
+            pending.sample, sample,
+            "gram_finish: sample differs from the posted gram_start"
+        );
+        assert_eq!(q.nrows(), sample.len());
+        assert_eq!(q.ncols(), self.m);
+        if !pending.active {
+            // Every position was a cache hit: nothing was posted.
+            self.serve_hits(sample, q, ledger);
+            return;
+        }
+        if self.reduce.is_active() {
+            ledger.time(Phase::Allreduce, || {
+                self.reduce.reduce_finish(pending.block.data_mut())
+            });
+        }
+        self.apply_epilogue_stage(&pending.miss, &mut pending.block, ledger);
+        if self.cache.is_some() {
+            self.serve_hits(sample, q, ledger);
+            self.commit_block(&pending.miss, &pending.block, q);
+        } else {
+            q.data_mut().copy_from_slice(pending.block.data());
+        }
+        self.scratch = pending.block;
+        self.miss_rows = pending.miss;
+    }
+
+    /// Classify `sample` against the cache into hits and the
+    /// deduplicated miss set (`self.srcs` / `self.miss_rows`), updating
+    /// the cache counters. Deterministic: pure function of the sample
+    /// stream and prior cache state (see module docs). Caller must hold
+    /// a cache.
+    fn classify(&mut self, sample: &[usize], ledger: &mut Ledger) {
         self.miss_rows.clear();
         self.miss_pos.clear();
         self.srcs.clear();
-        let cache = self.cache.as_mut().expect("checked above");
+        let cache = self.cache.as_mut().expect("cached path");
         for &sr in sample {
             if let Some(&i) = self.miss_pos.get(&sr) {
                 // Duplicate of a row already missed in this call.
@@ -159,48 +307,46 @@ impl<P: ProductStage, R: ReduceStage> GramEngine<P, R> {
             // same row across its reduce + allgather collectives).
             ledger.cache.words_saved += served * self.m as u64;
         }
+    }
 
-        // 2. Serve hits out of the cache (before any insert can evict
-        //    them).
-        if served > 0 {
-            ledger.time(Phase::CacheHit, || {
-                for (pos, src) in self.srcs.iter().enumerate() {
-                    if matches!(src, Src::Hit) {
-                        let row = cache.peek(sample[pos]).expect("hit row present");
-                        q.row_mut(pos).copy_from_slice(row);
-                    }
-                }
-            });
-        }
-
-        // 3. Compute the deduplicated miss block through the pipeline.
-        if self.miss_rows.is_empty() {
-            if self.reduce.is_active() {
-                ledger.cache.allreduces_saved += 1;
-            }
+    /// Copy every `Src::Hit` position of `sample` out of the cache into
+    /// `q` (no-op, untimed, when there are none).
+    fn serve_hits(&mut self, sample: &[usize], q: &mut Mat, ledger: &mut Ledger) {
+        if !self.srcs.iter().any(|s| matches!(s, Src::Hit)) {
             return;
         }
-        let miss = std::mem::take(&mut self.miss_rows);
-        let mut scratch = std::mem::replace(&mut self.scratch, Mat::zeros(0, 0));
-        if scratch.nrows() != miss.len() || scratch.ncols() != self.m {
-            scratch = Mat::zeros(miss.len(), self.m);
-        }
-        self.compute_block(&miss, &mut scratch, ledger);
+        let cache = self.cache.as_ref().expect("cached path");
+        ledger.time(Phase::CacheHit, || {
+            for (pos, src) in self.srcs.iter().enumerate() {
+                if matches!(src, Src::Hit) {
+                    let row = cache.peek(sample[pos]).expect("hit row present");
+                    q.row_mut(pos).copy_from_slice(row);
+                }
+            }
+        });
+    }
 
-        // 4. Fill missed positions (duplicates included) from the block.
+    /// Fill the missed positions of `q` (duplicates included) from the
+    /// finished miss block, then remember the rows in the cache.
+    fn commit_block(&mut self, miss: &[usize], block: &Mat, q: &mut Mat) {
         for (pos, src) in self.srcs.iter().enumerate() {
             if let Src::Miss(i) = src {
-                q.row_mut(pos).copy_from_slice(scratch.row(*i));
+                q.row_mut(pos).copy_from_slice(block.row(*i));
             }
         }
-
-        // 5. Remember the finished rows.
-        let cache = self.cache.as_mut().expect("checked above");
+        let cache = self.cache.as_mut().expect("cached path");
         for (i, &r) in miss.iter().enumerate() {
-            cache.insert(r, scratch.row(i));
+            cache.insert(r, block.row(i));
         }
-        self.scratch = scratch;
-        self.miss_rows = miss;
+    }
+
+    /// The reusable miss-block buffer, sized `rows × m`.
+    fn take_scratch(&mut self, rows: usize) -> Mat {
+        let scratch = std::mem::replace(&mut self.scratch, Mat::zeros(0, 0));
+        if scratch.nrows() != rows || scratch.ncols() != self.m {
+            return Mat::zeros(rows, self.m);
+        }
+        scratch
     }
 
     /// The uncached pipeline: product → reduce → epilogue, with the same
@@ -208,23 +354,95 @@ impl<P: ProductStage, R: ReduceStage> GramEngine<P, R> {
     fn compute_block(&mut self, rows: &[usize], out: &mut Mat, ledger: &mut Ledger) {
         debug_assert_eq!(out.nrows(), rows.len());
         debug_assert_eq!(out.ncols(), self.m);
-        if self.reduce.has_exchange() {
-            // Sharded grid storage: assemble the sampled rows' fragments
-            // from the row subcommunicator before the product reads them.
-            ledger.time(Phase::FragmentExchange, || self.reduce.exchange(rows));
-        }
-        let cost = ledger.time(Phase::KernelCompute, || self.product.compute(rows, out));
-        ledger.add_flops(Phase::KernelCompute, cost.flops);
+        let cost = self.product_into(rows, out, ledger);
         if self.reduce.is_active() {
             // The per-iteration collective the s-step methods amortize.
             ledger.time(Phase::Allreduce, || self.reduce.reduce(out.data_mut()));
         }
+        self.apply_epilogue_stage(rows, out, ledger);
+        ledger.add_kernel_call(cost.rows_charged);
+    }
+
+    /// Fragment exchange (if any) + linear product into `out`. Under
+    /// [`OverlapMode::Exchange`] the ring is posted rather than waited
+    /// on: the rows whose fragments this rank already stores are
+    /// computed *under* the in-flight exchange (their flops are the
+    /// overlap's hidden-compute budget), the rest after the wait. Each
+    /// row is still computed by exactly one pass with the stage's fixed
+    /// per-entry order, so the block is bitwise identical to the
+    /// blocking schedule.
+    fn product_into(&mut self, rows: &[usize], out: &mut Mat, ledger: &mut Ledger) -> ProductCost {
+        if !self.reduce.has_exchange() {
+            let cost = ledger.time(Phase::KernelCompute, || self.product.compute(rows, out));
+            ledger.add_flops(Phase::KernelCompute, cost.flops);
+            return cost;
+        }
+        if self.overlap != OverlapMode::Exchange {
+            // Blocking: assemble the sampled rows' fragments from the
+            // row subcommunicator before the product reads them.
+            ledger.time(Phase::FragmentExchange, || self.reduce.exchange(rows));
+            let cost = ledger.time(Phase::KernelCompute, || self.product.compute(rows, out));
+            ledger.add_flops(Phase::KernelCompute, cost.flops);
+            return cost;
+        }
+
+        let posted = ledger.time(Phase::FragmentExchange, || self.reduce.exchange_start(rows));
+        ledger.add_posted(posted);
+        let mask = self.reduce.local_mask(rows);
+        let owned: Vec<usize> = (0..rows.len()).filter(|&i| mask[i]).collect();
+        let mut total = ProductCost {
+            flops: 0.0,
+            rows_charged: 0,
+        };
+        // Owned-rows pass, hidden under the in-flight ring.
+        if !owned.is_empty() {
+            let owned_rows: Vec<usize> = owned.iter().map(|&i| rows[i]).collect();
+            let mut sub = Mat::zeros(owned_rows.len(), self.m);
+            let cost = ledger.time(Phase::KernelCompute, || {
+                self.product.compute(&owned_rows, &mut sub)
+            });
+            ledger.add_flops(Phase::KernelCompute, cost.flops);
+            ledger.add_hidden_flops(Phase::KernelCompute, cost.flops);
+            for (j, &i) in owned.iter().enumerate() {
+                out.row_mut(i).copy_from_slice(sub.row(j));
+            }
+            total.flops += cost.flops;
+            total.rows_charged += cost.rows_charged;
+        }
+        ledger.time(Phase::FragmentExchange, || self.reduce.exchange_finish());
+        // Remote-rows pass, after the exchanged fragments landed.
+        let remote: Vec<usize> = (0..rows.len()).filter(|&i| !mask[i]).collect();
+        if remote.len() == rows.len() {
+            // Nothing owned locally: one full pass, directly into `out`.
+            let cost = ledger.time(Phase::KernelCompute, || self.product.compute(rows, out));
+            ledger.add_flops(Phase::KernelCompute, cost.flops);
+            total.flops += cost.flops;
+            total.rows_charged += cost.rows_charged;
+        } else if !remote.is_empty() {
+            let remote_rows: Vec<usize> = remote.iter().map(|&i| rows[i]).collect();
+            let mut sub = Mat::zeros(remote_rows.len(), self.m);
+            let cost = ledger.time(Phase::KernelCompute, || {
+                self.product.compute(&remote_rows, &mut sub)
+            });
+            ledger.add_flops(Phase::KernelCompute, cost.flops);
+            for (j, &i) in remote.iter().enumerate() {
+                out.row_mut(i).copy_from_slice(sub.row(j));
+            }
+            total.flops += cost.flops;
+            total.rows_charged += cost.rows_charged;
+        }
+        total
+    }
+
+    /// Redundant nonlinear map (identical on every rank), spread over
+    /// the product stage's worker split when it has one.
+    fn apply_epilogue_stage(&mut self, rows: &[usize], out: &mut Mat, ledger: &mut Ledger) {
         if let Some(ep) = &self.epilogue {
-            // Redundant nonlinear map (identical on every rank).
-            ledger.time(Phase::KernelCompute, || ep.apply(rows, out));
+            ledger.time(Phase::KernelCompute, || {
+                self.product.apply_epilogue(ep, rows, out)
+            });
             ledger.add_flops(Phase::KernelCompute, ep.flops(rows.len()));
         }
-        ledger.add_kernel_call(cost.rows_charged);
     }
 }
 

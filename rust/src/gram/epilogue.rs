@@ -30,8 +30,18 @@ impl Epilogue {
 
     /// Apply the kernel map in place to the `rows.len() × m` block `q`.
     pub fn apply(&self, rows: &[usize], q: &mut Mat) {
+        self.apply_chunk(rows, q.data_mut());
+    }
+
+    /// Apply the kernel map to a row-major `rows.len() × m` slice — the
+    /// worker-split entry point: [`crate::parallel::ParallelProduct`]
+    /// hands each worker a contiguous run of whole rows. The map is
+    /// per-element, so any whole-row split is bitwise identical to
+    /// [`Epilogue::apply`] over the full block.
+    pub fn apply_chunk(&self, rows: &[usize], chunk: &mut [f64]) {
         let sample_norms: Vec<f64> = rows.iter().map(|&i| self.row_norms[i]).collect();
-        self.kernel.apply_block(q, &sample_norms, &self.row_norms);
+        self.kernel
+            .apply_packed(chunk, &sample_norms, &self.row_norms);
     }
 
     /// Ledger cost of applying the map to a `rows × m` block.

@@ -57,6 +57,68 @@ impl GridStorage {
     }
 }
 
+/// Communication/compute overlap mode of a distributed gram engine.
+///
+/// * [`OverlapMode::Off`] — every stage is a blocking barrier (the
+///   pre-overlap engine): the measured critical path is comm + compute.
+/// * [`OverlapMode::Exchange`] — the sharded grid's fragment exchange is
+///   *posted* nonblocking and the product is split into an owned-rows
+///   pass (the sampled rows this cell's row group stores, computable
+///   under the in-flight exchange) and a remote-rows pass after `wait`.
+///   Inert unless the layout actually has an exchange (sharded grid
+///   with `pr > 1`).
+/// * [`OverlapMode::Pipeline`] — the s-step solvers post gram call
+///   k+1's reduce collective before running block k's local α/residual
+///   updates, so the reduce rides under the inner loop. Inert for
+///   serial oracles and for `s = 1` solvers (there is no inner loop to
+///   hide under).
+///
+/// Like `threads`, `row_block` and `GridStorage`, overlap is a pure
+/// wall-time knob: a posted collective replays the blocking algorithm's
+/// exact per-rank schedule ([`crate::comm::CollectiveHandle`]), and the
+/// split product passes compute each output row with identical
+/// arithmetic — so every solver bit and every `CommStats` counter is
+/// unchanged. It must be identical on every rank (post order is part of
+/// the collective schedule).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OverlapMode {
+    /// Blocking stages everywhere (the baseline critical path).
+    #[default]
+    Off,
+    /// Overlap the sharded fragment exchange with the owned-rows product
+    /// pass.
+    Exchange,
+    /// Post gram call k+1's reduce under block k's s-step inner updates.
+    Pipeline,
+}
+
+impl OverlapMode {
+    /// Canonical CLI/report name (`off`, `exchange`, `pipeline`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            OverlapMode::Off => "off",
+            OverlapMode::Exchange => "exchange",
+            OverlapMode::Pipeline => "pipeline",
+        }
+    }
+
+    /// Parse a [`Self::name`]-style string (plus the `exch`/`pipe`
+    /// shorthands); `None` for unknown names.
+    pub fn parse(s: &str) -> Option<OverlapMode> {
+        match s {
+            "off" => Some(OverlapMode::Off),
+            "exchange" | "exch" => Some(OverlapMode::Exchange),
+            "pipeline" | "pipe" => Some(OverlapMode::Pipeline),
+            _ => None,
+        }
+    }
+
+    /// All modes, in report order — the tuner's enumeration axis.
+    pub fn all() -> [OverlapMode; 3] {
+        [OverlapMode::Off, OverlapMode::Exchange, OverlapMode::Pipeline]
+    }
+}
+
 /// Data layout behind a gram engine. Purely descriptive — the product
 /// stage already operates on whatever slice it was built from — but
 /// carried explicitly so reports, assertions and the 2D grid pipeline
@@ -157,6 +219,17 @@ mod tests {
         assert_eq!(GridStorage::parse("rep"), Some(GridStorage::Replicated));
         assert_eq!(GridStorage::parse("nope"), None);
         assert_eq!(GridStorage::default(), GridStorage::Replicated);
+    }
+
+    #[test]
+    fn overlap_mode_parse_roundtrip_and_default() {
+        for o in OverlapMode::all() {
+            assert_eq!(OverlapMode::parse(o.name()), Some(o));
+        }
+        assert_eq!(OverlapMode::parse("exch"), Some(OverlapMode::Exchange));
+        assert_eq!(OverlapMode::parse("pipe"), Some(OverlapMode::Pipeline));
+        assert_eq!(OverlapMode::parse("nope"), None);
+        assert_eq!(OverlapMode::default(), OverlapMode::Off);
     }
 
     #[test]

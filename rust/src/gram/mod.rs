@@ -126,7 +126,7 @@ mod reduce;
 pub use cache::RowCache;
 pub use engine::GramEngine;
 pub use epilogue::Epilogue;
-pub use layout::{block_cyclic_rows, GridStorage, Layout, DEFAULT_ROW_BLOCK};
+pub use layout::{block_cyclic_rows, GridStorage, Layout, OverlapMode, DEFAULT_ROW_BLOCK};
 pub use product::{
     BlockKind, CsrProduct, FragmentSlot, GridProduct, LowRankProduct, ProductCost, ProductStage,
     TRANSPOSE_GRAM_MAX_DENSITY,
@@ -157,5 +157,33 @@ pub trait GramOracle {
     /// Communication statistics accumulated so far (zero for local).
     fn comm_stats(&self) -> crate::comm::CommStats {
         crate::comm::CommStats::default()
+    }
+
+    /// The overlap mode this oracle runs its communication under
+    /// ([`OverlapMode::Off`] unless the oracle supports overlap and was
+    /// configured otherwise). Solvers consult this to decide whether to
+    /// drive the split-phase `gram_start`/`gram_finish` pipeline.
+    fn overlap(&self) -> OverlapMode {
+        OverlapMode::Off
+    }
+
+    /// Split-phase gram, first half: classify the sample against the
+    /// cache, compute the partial product, and *post* the reduction
+    /// without waiting for it. The caller may then do unrelated compute
+    /// (the previous block's α updates) before calling
+    /// [`GramOracle::gram_finish`] with the same sample. Default: no-op
+    /// (the work happens in `gram_finish` via the blocking path), so
+    /// oracles without nonblocking support stay correct under pipelined
+    /// drivers.
+    ///
+    /// Exactly one `gram_finish` must follow each `gram_start`, in post
+    /// order, with no other gram call in between on this oracle.
+    fn gram_start(&mut self, _sample: &[usize], _ledger: &mut Ledger) {}
+
+    /// Split-phase gram, second half: wait for the posted reduction,
+    /// apply the epilogue, and fill `q`. Default: the blocking
+    /// [`GramOracle::gram`].
+    fn gram_finish(&mut self, sample: &[usize], q: &mut Mat, ledger: &mut Ledger) {
+        self.gram(sample, q, ledger);
     }
 }

@@ -42,6 +42,16 @@ pub trait ProductStage {
 
     /// Fill `q` with the block for `sample`; return the ledger cost.
     fn compute(&mut self, sample: &[usize], q: &mut Mat) -> ProductCost;
+
+    /// Apply the nonlinear epilogue to the assembled `rows × m` block.
+    /// Serial by default; [`crate::parallel::ParallelProduct`] overrides
+    /// this to spread the pointwise kernel map over the same worker
+    /// split as the product — the epilogue is the residual serial stage
+    /// once the reduce is overlapped. The map is per-element, so any
+    /// row split is bitwise identical to the serial pass.
+    fn apply_epilogue(&mut self, epilogue: &super::epilogue::Epilogue, rows: &[usize], q: &mut Mat) {
+        epilogue.apply(rows, q);
+    }
 }
 
 /// Density below which the transpose-based gram beats the blocked

@@ -3,7 +3,9 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use crate::comm::{allgatherv, allreduce_sum, AllreduceAlgo, CommStats, Communicator, SubComm};
+use crate::comm::{
+    allgatherv, allreduce_sum, AllreduceAlgo, CollectiveHandle, CommStats, Communicator, SubComm,
+};
 use crate::sparse::Csr;
 
 use super::layout::block_cyclic_rows;
@@ -33,6 +35,50 @@ pub trait ReduceStage {
     fn has_exchange(&self) -> bool {
         false
     }
+
+    /// Nonblocking variant of [`ReduceStage::exchange`]
+    /// ([`crate::gram::OverlapMode::Exchange`]): publish the fragments
+    /// this rank can serve locally, *post* the exchange ring, and return
+    /// the traffic the posted collective will account (the ledger's
+    /// posted/overlappable column). The engine runs the owned-rows
+    /// product pass under the in-flight ring, then calls
+    /// [`ReduceStage::exchange_finish`]. Default: run the blocking
+    /// exchange — nothing posted.
+    fn exchange_start(&mut self, rows: &[usize]) -> CommStats {
+        self.exchange(rows);
+        CommStats::default()
+    }
+
+    /// Complete an exchange opened by [`ReduceStage::exchange_start`]
+    /// (no-op when nothing was posted).
+    fn exchange_finish(&mut self) {}
+
+    /// For each of `rows`, whether this rank can serve the row's
+    /// fragment locally while an exchange is in flight (the sampled rows
+    /// its own row group stores). All-false by default — stages without
+    /// an exchange have nothing to split the product over.
+    fn local_mask(&self, rows: &[usize]) -> Vec<bool> {
+        vec![false; rows.len()]
+    }
+
+    /// Nonblocking variant of [`ReduceStage::reduce`]
+    /// ([`crate::gram::OverlapMode::Pipeline`]): *post* the reduction of
+    /// `buf` and return the posted collective's traffic. The s-step
+    /// driver runs the previous block's inner updates under the
+    /// in-flight reduce, then calls [`ReduceStage::reduce_finish`].
+    /// Default: post nothing and defer the whole reduction to the
+    /// finish.
+    fn reduce_start(&mut self, _buf: &[f64]) -> CommStats {
+        CommStats::default()
+    }
+
+    /// Complete a reduction opened by [`ReduceStage::reduce_start`],
+    /// writing the reduced block into `buf`. Default: the blocking
+    /// reduce (matching the default `reduce_start`, which posts
+    /// nothing).
+    fn reduce_finish(&mut self, buf: &mut [f64]) {
+        self.reduce(buf);
+    }
 }
 
 /// The local no-op reduction (full-matrix layouts).
@@ -56,12 +102,18 @@ impl ReduceStage for NoReduce {
 pub struct AllreduceSum<'c, C: Communicator> {
     comm: &'c mut C,
     algo: AllreduceAlgo,
+    /// In-flight posted allreduce (pipeline overlap), if any.
+    pending: Option<CollectiveHandle>,
 }
 
 impl<'c, C: Communicator> AllreduceSum<'c, C> {
     /// Wrap a communicator with the chosen allreduce algorithm.
     pub fn new(comm: &'c mut C, algo: AllreduceAlgo) -> Self {
-        AllreduceSum { comm, algo }
+        AllreduceSum {
+            comm,
+            algo,
+            pending: None,
+        }
     }
 
     /// This rank's id (exposed for the oracle wrappers).
@@ -86,6 +138,26 @@ impl<'c, C: Communicator> ReduceStage for AllreduceSum<'c, C> {
 
     fn stats(&self) -> CommStats {
         self.comm.stats()
+    }
+
+    fn reduce_start(&mut self, buf: &[f64]) -> CommStats {
+        assert!(
+            self.pending.is_none(),
+            "reduce_start: a reduction is already in flight"
+        );
+        let h = CollectiveHandle::post_allreduce(self.comm, buf.to_vec(), self.algo);
+        let posted = h.posted_stats();
+        self.pending = Some(h);
+        posted
+    }
+
+    fn reduce_finish(&mut self, buf: &mut [f64]) {
+        let mut h = self
+            .pending
+            .take()
+            .expect("reduce_finish without a matching reduce_start");
+        let out = h.wait(self.comm);
+        buf.copy_from_slice(&out);
     }
 }
 
@@ -138,6 +210,22 @@ pub struct GridReduce<'c, C: Communicator> {
     sharded: Option<ShardedExchange>,
     /// Reused `k×w` packed buffer.
     packed: Vec<f64>,
+    /// In-flight posted fragment exchange (exchange overlap), if any.
+    pending_exchange: Option<PendingExchange>,
+    /// In-flight posted column reduce (pipeline overlap) and its block
+    /// row count `k`, if any.
+    pending_reduce: Option<(CollectiveHandle, usize)>,
+}
+
+/// A fragment exchange between `exchange_start` and `exchange_finish`:
+/// the posted ring plus the group-major row order and per-row nnz needed
+/// to rebuild the fragments once the ring completes.
+struct PendingExchange {
+    handle: CollectiveHandle,
+    /// Deduplicated sampled rows in group-major (gathered) order.
+    order: Vec<usize>,
+    /// Stored-entry count of each row of `order`, for `Csr::from_packed`.
+    row_nnz: Vec<usize>,
 }
 
 /// State of the sharded-storage fragment exchange
@@ -193,6 +281,8 @@ impl<'c, C: Communicator> GridReduce<'c, C> {
             exch_stats: CommStats::default(),
             sharded: None,
             packed: Vec::new(),
+            pending_exchange: None,
+            pending_reduce: None,
         }
     }
 
@@ -278,6 +368,85 @@ impl<'c, C: Communicator> GridReduce<'c, C> {
         });
         full_norms
     }
+
+    /// Shared prologue of the blocking and posted fragment exchanges:
+    /// deduplicate the rows, partition them by owning group, compute the
+    /// a-priori ring counts, and pack this cell's fragments. `None` for
+    /// replicated cells (no exchange).
+    fn exchange_plan(&self, rows: &[usize]) -> Option<ExchangePlan> {
+        let sh = self.sharded.as_ref()?;
+        let pr = self.owned.len();
+        let mut uniq = rows.to_vec();
+        uniq.sort_unstable();
+        uniq.dedup();
+        let mut per_group: Vec<Vec<usize>> = vec![Vec::new(); pr];
+        for &t in &uniq {
+            per_group[(t / self.row_block) % pr].push(t);
+        }
+        let counts: Vec<usize> = per_group
+            .iter()
+            .map(|g| g.iter().map(|&t| 2 * sh.nnz_table[t]).sum())
+            .collect();
+        // My fragments: owned rows are ascending, so each global row's
+        // local index is its insertion point.
+        let my_rows = &self.owned[self.my_group];
+        let locals: Vec<usize> = per_group[self.my_group]
+            .iter()
+            .map(|&t| {
+                let u = my_rows.partition_point(|&r| r < t);
+                debug_assert_eq!(my_rows[u], t, "row {t} not owned by this group");
+                u
+            })
+            .collect();
+        let mine = sh.owned_src.pack_rows(&locals);
+        let mut order = Vec::with_capacity(uniq.len());
+        let mut row_nnz = Vec::with_capacity(uniq.len());
+        for g in &per_group {
+            for &t in g {
+                order.push(t);
+                row_nnz.push(sh.nnz_table[t]);
+            }
+        }
+        let my_group_rows = std::mem::take(&mut per_group[self.my_group]);
+        Some(ExchangePlan {
+            order,
+            row_nnz,
+            counts,
+            locals,
+            mine,
+            my_group_rows,
+        })
+    }
+
+    /// Rebuild the gathered fragments ([`Csr::from_packed`]) and publish
+    /// them through the [`FragmentSlot`] with the global-row → fragment
+    /// map.
+    fn publish_fragments(&self, order: Vec<usize>, row_nnz: Vec<usize>, gathered: &[f64]) {
+        let sh = self
+            .sharded
+            .as_ref()
+            .expect("publish_fragments on a replicated cell");
+        let fragments = Csr::from_packed(sh.owned_src.ncols(), &row_nnz, gathered);
+        let pos: HashMap<usize, usize> = order.iter().enumerate().map(|(i, &t)| (t, i)).collect();
+        sh.slot.fill(fragments, pos);
+    }
+}
+
+/// A planned fragment exchange: everything both the blocking and the
+/// posted paths need, computed before any traffic moves.
+struct ExchangePlan {
+    /// Deduplicated sampled rows in group-major (gathered) order.
+    order: Vec<usize>,
+    /// Stored-entry count of each row of `order`.
+    row_nnz: Vec<usize>,
+    /// Ring contribution counts per row group (words).
+    counts: Vec<usize>,
+    /// Local (owned-CSR) indices of this cell's sampled rows.
+    locals: Vec<usize>,
+    /// This cell's packed fragments (`Csr::pack_rows` of `locals`).
+    mine: Vec<f64>,
+    /// The global rows behind `locals`, in packed order.
+    my_group_rows: Vec<usize>,
 }
 
 impl<'c, C: Communicator> ReduceStage for GridReduce<'c, C> {
@@ -346,55 +515,141 @@ impl<'c, C: Communicator> ReduceStage for GridReduce<'c, C> {
     /// [`Self::exch_stats`], attributed by the engine to
     /// [`crate::costmodel::Phase::FragmentExchange`].
     fn exchange(&mut self, rows: &[usize]) {
-        let Some(sh) = &self.sharded else {
+        let Some(plan) = self.exchange_plan(rows) else {
             return;
         };
-        let pr = self.owned.len();
-        let mut uniq = rows.to_vec();
-        uniq.sort_unstable();
-        uniq.dedup();
-        let mut per_group: Vec<Vec<usize>> = vec![Vec::new(); pr];
-        for &t in &uniq {
-            per_group[(t / self.row_block) % pr].push(t);
-        }
-        let counts: Vec<usize> = per_group
-            .iter()
-            .map(|g| g.iter().map(|&t| 2 * sh.nnz_table[t]).sum())
-            .collect();
-        // My fragments: owned rows are ascending, so each global row's
-        // local index is its insertion point.
-        let my_rows = &self.owned[self.my_group];
-        let locals: Vec<usize> = per_group[self.my_group]
-            .iter()
-            .map(|&t| {
-                let u = my_rows.partition_point(|&r| r < t);
-                debug_assert_eq!(my_rows[u], t, "row {t} not owned by this group");
-                u
-            })
-            .collect();
-        let mine = sh.owned_src.pack_rows(&locals);
         let gathered = {
             let mut sub = SubComm::new(&mut *self.comm, &self.row_members, &mut self.exch_stats);
-            allgatherv(&mut sub, &mine, &counts)
+            allgatherv(&mut sub, &plan.mine, &plan.counts)
         };
         // Rebuild in group-major order (the gathered layout) and map
         // global rows to fragment positions.
-        let mut order = Vec::with_capacity(uniq.len());
-        let mut row_nnz = Vec::with_capacity(uniq.len());
-        for g in &per_group {
-            for &t in g {
-                order.push(t);
-                row_nnz.push(sh.nnz_table[t]);
-            }
-        }
-        let fragments = Csr::from_packed(sh.owned_src.ncols(), &row_nnz, &gathered);
-        let pos: HashMap<usize, usize> =
-            order.iter().enumerate().map(|(i, &t)| (t, i)).collect();
-        sh.slot.fill(fragments, pos);
+        self.publish_fragments(plan.order, plan.row_nnz, &gathered);
     }
 
     fn has_exchange(&self) -> bool {
         self.sharded.is_some()
+    }
+
+    /// Posted fragment exchange: publish this cell's *own* fragments
+    /// immediately (verbatim the same stored rows the blocking exchange
+    /// would deliver, so the owned-rows product pass is bitwise
+    /// unchanged), post the ring, and hand back its planned traffic.
+    fn exchange_start(&mut self, rows: &[usize]) -> CommStats {
+        let Some(plan) = self.exchange_plan(rows) else {
+            return CommStats::default();
+        };
+        assert!(
+            self.pending_exchange.is_none(),
+            "exchange_start: an exchange is already in flight"
+        );
+        {
+            let sh = self.sharded.as_ref().expect("exchange_plan implies sharded");
+            let local_frags = sh.owned_src.gather_rows(&plan.locals);
+            let local_pos: HashMap<usize, usize> = plan
+                .my_group_rows
+                .iter()
+                .enumerate()
+                .map(|(i, &t)| (t, i))
+                .collect();
+            sh.slot.fill(local_frags, local_pos);
+        }
+        let handle = {
+            let mut sub = SubComm::new(&mut *self.comm, &self.row_members, &mut self.exch_stats);
+            CollectiveHandle::post_allgatherv(&mut sub, &plan.mine, &plan.counts)
+        };
+        let posted = handle.posted_stats();
+        self.pending_exchange = Some(PendingExchange {
+            handle,
+            order: plan.order,
+            row_nnz: plan.row_nnz,
+        });
+        posted
+    }
+
+    fn exchange_finish(&mut self) {
+        let Some(mut pending) = self.pending_exchange.take() else {
+            return;
+        };
+        let gathered = {
+            let mut sub = SubComm::new(&mut *self.comm, &self.row_members, &mut self.exch_stats);
+            pending.handle.wait(&mut sub)
+        };
+        self.publish_fragments(pending.order, pending.row_nnz, &gathered);
+    }
+
+    fn local_mask(&self, rows: &[usize]) -> Vec<bool> {
+        if self.sharded.is_none() {
+            return vec![false; rows.len()];
+        }
+        let pr = self.owned.len();
+        rows.iter()
+            .map(|&t| (t / self.row_block) % pr == self.my_group)
+            .collect()
+    }
+
+    /// Posted column reduce (pipeline overlap): pack the partial
+    /// prefixes and post the column-subcommunicator allreduce. The row
+    /// allgather + scatter stay in [`Self::reduce_finish`] — they need
+    /// the reduced payload, so they are the *exposed* tail.
+    fn reduce_start(&mut self, buf: &[f64]) -> CommStats {
+        assert!(
+            self.pending_reduce.is_none(),
+            "reduce_start: a reduction is already in flight"
+        );
+        let m = self.m;
+        assert_eq!(buf.len() % m, 0, "grid reduce: buffer must be k x m");
+        let k = buf.len() / m;
+        let w = self.owned[self.my_group].len();
+        self.packed.clear();
+        self.packed.resize(k * w, 0.0);
+        for r in 0..k {
+            self.packed[r * w..(r + 1) * w].copy_from_slice(&buf[r * m..r * m + w]);
+        }
+        let packed = std::mem::take(&mut self.packed);
+        let handle = {
+            let mut sub = SubComm::new(&mut *self.comm, &self.col_members, &mut self.col_stats);
+            CollectiveHandle::post_allreduce(&mut sub, packed, self.algo)
+        };
+        let posted = handle.posted_stats();
+        self.pending_reduce = Some((handle, k));
+        posted
+    }
+
+    fn reduce_finish(&mut self, buf: &mut [f64]) {
+        let (mut handle, k) = self
+            .pending_reduce
+            .take()
+            .expect("reduce_finish without a matching reduce_start");
+        let m = self.m;
+        assert_eq!(
+            buf.len(),
+            k * m,
+            "reduce_finish: block shape changed since reduce_start"
+        );
+        let reduced = {
+            let mut sub = SubComm::new(&mut *self.comm, &self.col_members, &mut self.col_stats);
+            handle.wait(&mut sub)
+        };
+        // Exposed tail — identical to the blocking reduce's step 3.
+        let counts: Vec<usize> = self.owned.iter().map(|o| k * o.len()).collect();
+        let gathered = {
+            let mut sub = SubComm::new(&mut *self.comm, &self.row_members, &mut self.row_stats);
+            allgatherv(&mut sub, &reduced, &counts)
+        };
+        let mut off = 0usize;
+        for (g, rows) in self.owned.iter().enumerate() {
+            let wg = rows.len();
+            for r in 0..k {
+                let slice = &gathered[off + r * wg..off + (r + 1) * wg];
+                for (u, &t) in rows.iter().enumerate() {
+                    buf[r * m + t] = slice[u];
+                }
+            }
+            off += counts[g];
+        }
+        // Reclaim the packed buffer's allocation for the next call.
+        self.packed = reduced;
     }
 }
 
@@ -455,6 +710,52 @@ mod tests {
         let (_, _, col0, row0) = &outs[0];
         assert_eq!(col0.words, (k * 3) as u64);
         assert_eq!(row0.words, (k * 3) as u64);
+    }
+
+    /// The split reduce (`reduce_start` + interleaved "compute" +
+    /// `reduce_finish`) produces bitwise the same block and the same
+    /// per-subcommunicator traffic as the blocking `reduce`, with the
+    /// column-reduce share reported as posted.
+    #[test]
+    fn posted_grid_reduce_matches_blocking_bitwise_and_in_stats() {
+        let (pr, pc, m, k) = (2usize, 3usize, 7usize, 2usize);
+        let fill = |j: usize, owned: &[usize]| {
+            let mut buf = vec![f64::NAN; k * m];
+            for r in 0..k {
+                for (u, &t) in owned.iter().enumerate() {
+                    buf[r * m + u] = ((j + 1) * 100 + r * 10 + t) as f64;
+                }
+            }
+            buf
+        };
+        let blocking = run_ranks(pr * pc, |c| {
+            let j = c.rank() % pc;
+            let mut stage = GridReduce::new(c, AllreduceAlgo::Rabenseifner, pr, pc, m, 1);
+            let owned: Vec<usize> = stage.owned_rows().to_vec();
+            let mut buf = fill(j, &owned);
+            stage.reduce(&mut buf);
+            (buf, stage.col_stats(), stage.row_stats())
+        });
+        let posted = run_ranks(pr * pc, |c| {
+            let j = c.rank() % pc;
+            let mut stage = GridReduce::new(c, AllreduceAlgo::Rabenseifner, pr, pc, m, 1);
+            let owned: Vec<usize> = stage.owned_rows().to_vec();
+            let mut buf = fill(j, &owned);
+            let planned = stage.reduce_start(&buf);
+            stage.reduce_finish(&mut buf);
+            (buf, stage.col_stats(), stage.row_stats(), planned)
+        });
+        for (rank, ((bbuf, bcol, brow), (nbuf, ncol, nrow, planned))) in
+            blocking.iter().zip(&posted).enumerate()
+        {
+            assert_eq!(bbuf, nbuf, "rank {rank}: block bits");
+            assert_eq!(bcol, ncol, "rank {rank}: column traffic");
+            assert_eq!(brow, nrow, "rank {rank}: row traffic");
+            assert_eq!(
+                planned, ncol,
+                "rank {rank}: the posted share is exactly the column reduce"
+            );
+        }
     }
 
     #[test]

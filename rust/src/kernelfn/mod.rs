@@ -106,19 +106,27 @@ impl Kernel {
     /// `(r, i)` holds `<a_{S_r}, a_i>`; `sample_norms[r] = ‖a_{S_r}‖²`,
     /// `row_norms[i] = ‖a_i‖²` (only read for RBF).
     pub fn apply_block(&self, z: &mut Mat, sample_norms: &[f64], row_norms: &[f64]) {
+        assert_eq!(sample_norms.len(), z.nrows());
+        self.apply_packed(z.data_mut(), sample_norms, row_norms);
+    }
+
+    /// [`Kernel::apply_block`] on a row-major `sample_norms.len() × m`
+    /// slice (`m = row_norms.len()`) — the chunk form the threaded
+    /// epilogue hands each worker. Per-element map, so identical output
+    /// for any whole-row split.
+    pub fn apply_packed(&self, z: &mut [f64], sample_norms: &[f64], row_norms: &[f64]) {
         match *self {
             Kernel::Linear => {}
             Kernel::Poly { c, d } => {
-                for v in z.data_mut() {
+                for v in z.iter_mut() {
                     *v = (c + *v).powi(d);
                 }
             }
             Kernel::Rbf { sigma } => {
-                assert_eq!(sample_norms.len(), z.nrows());
-                assert_eq!(row_norms.len(), z.ncols());
-                for r in 0..z.nrows() {
+                let m = row_norms.len();
+                assert_eq!(z.len(), sample_norms.len() * m);
+                for (r, row) in z.chunks_exact_mut(m).enumerate() {
                     let nr = sample_norms[r];
-                    let row = z.row_mut(r);
                     for (i, v) in row.iter_mut().enumerate() {
                         let d2 = (nr + row_norms[i] - 2.0 * *v).max(0.0);
                         *v = (-sigma * d2).exp();

@@ -1,4 +1,4 @@
-//! Intra-rank threaded execution: a small deterministic scoped-thread
+//! Intra-rank threaded execution: a persistent deterministic worker
 //! pool and the [`ParallelProduct`] adapter that splits the sampled rows
 //! of any product stage across worker threads.
 //!
@@ -22,15 +22,27 @@
 //! partition itself is a pure function of `(rows, threads)` (contiguous
 //! near-equal ranges), no work stealing, no clock — a run with `t = 8`
 //! replays the bits of a run with `t = 1`. Pinned by
-//! `rust/tests/threaded_product_props.rs`.
+//! `rust/tests/threaded_product_props.rs`. The same split (and the same
+//! guarantee) now also covers the pointwise kernel epilogue via
+//! [`ProductStage::apply_epilogue`].
 //!
-//! The pool is built on `std::thread::scope` (rayon is unavailable in
-//! the offline build): workers borrow their inputs and output chunks
-//! directly from the caller's stack, and worker 0 runs on the calling
-//! thread, so `t = 1` never spawns.
+//! ### The pool
+//!
+//! [`WorkerPool`] spawns its threads once and reuses them for every
+//! `run` call — a solve issues thousands of gram calls, and respawning
+//! `t − 1` OS threads per call is pure per-iteration latency (the φ-like
+//! term the overlap work is trying to hide). Job 0 always runs on the
+//! calling thread, so `t = 1` never touches the pool, and job order is
+//! the partition order — results come back in job order, exactly like
+//! the scoped [`scoped_run`] it replaces on the hot path (which is kept
+//! for one-shot callers).
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
 
 use crate::dense::Mat;
-use crate::gram::{BlockKind, ProductCost, ProductStage};
+use crate::gram::{BlockKind, Epilogue, ProductCost, ProductStage};
 
 /// Contiguous near-equal partition bounds: `bounds[i]..bounds[i+1]` is
 /// worker `i`'s range. `parts + 1` entries, monotone, covering `0..n`.
@@ -42,6 +54,9 @@ pub fn partition_bounds(n: usize, parts: usize) -> Vec<usize> {
 /// Run one job per worker on scoped threads and return the results in
 /// worker order. Job 0 runs on the calling thread (no spawn for the
 /// single-worker case). Panics in any worker propagate.
+///
+/// One-shot helper; repeated callers should hold a [`WorkerPool`]
+/// instead and skip the per-call spawns.
 pub fn scoped_run<T, F>(mut jobs: Vec<F>) -> Vec<T>
 where
     T: Send,
@@ -64,6 +79,149 @@ where
     })
 }
 
+/// A job shipped to a persistent worker, with its borrows erased — see
+/// the safety argument in [`WorkerPool::run`].
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct WorkerHandle {
+    /// `None` once the pool is shutting down (dropping the sender is the
+    /// worker's exit signal).
+    job_tx: Option<Sender<Job>>,
+    done_rx: Receiver<std::thread::Result<()>>,
+    join: Option<JoinHandle<()>>,
+}
+
+/// Persistent worker threads, spawned once and reused across calls.
+///
+/// `run` dispatches jobs 1.. to the workers, runs job 0 on the calling
+/// thread, and blocks until every dispatched job has reported done — so
+/// jobs may freely borrow the caller's stack even though the worker
+/// threads themselves are `'static`. Panics inside any job are caught on
+/// the worker, relayed over the done channel, and re-raised on the
+/// caller *after* all jobs finish (the workers hold borrows into the
+/// caller's frame, so unwinding early would be unsound).
+pub struct WorkerPool {
+    workers: Vec<WorkerHandle>,
+}
+
+impl WorkerPool {
+    /// Spawn `extra_workers` persistent threads (`run` can then execute
+    /// up to `extra_workers + 1` jobs per call). Zero is fine: the pool
+    /// degenerates to running everything on the caller.
+    pub fn new(extra_workers: usize) -> WorkerPool {
+        let workers = (0..extra_workers)
+            .map(|i| {
+                let (job_tx, job_rx) = channel::<Job>();
+                let (done_tx, done_rx) = channel::<std::thread::Result<()>>();
+                let join = std::thread::Builder::new()
+                    .name(format!("kcd-worker-{i}"))
+                    .spawn(move || {
+                        while let Ok(job) = job_rx.recv() {
+                            let result = catch_unwind(AssertUnwindSafe(job));
+                            if done_tx.send(result).is_err() {
+                                break;
+                            }
+                        }
+                    })
+                    .expect("spawn pool worker");
+                WorkerHandle {
+                    job_tx: Some(job_tx),
+                    done_rx,
+                    join: Some(join),
+                }
+            })
+            .collect();
+        WorkerPool { workers }
+    }
+
+    /// Number of persistent worker threads (excluding the caller).
+    pub fn extra_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run `jobs` (at most `extra_workers + 1` of them): job 0 on the
+    /// calling thread, the rest on the persistent workers. Returns the
+    /// results in job order. Blocks until every job has finished, then
+    /// propagates any panic.
+    pub fn run<T, F>(&mut self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send,
+        F: FnOnce() -> T + Send,
+    {
+        assert!(!jobs.is_empty(), "WorkerPool::run needs at least one job");
+        assert!(
+            jobs.len() <= self.workers.len() + 1,
+            "WorkerPool::run: {} jobs but only {} workers + the caller",
+            jobs.len(),
+            self.workers.len()
+        );
+        let n = jobs.len();
+        let mut slots: Vec<Option<T>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        let (first_slot, rest_slots) = slots.split_at_mut(1);
+
+        let mut iter = jobs.into_iter();
+        let first = iter.next().expect("nonempty");
+        let mut dispatched: Vec<&WorkerHandle> = Vec::with_capacity(n - 1);
+        for ((job, slot), worker) in iter.zip(rest_slots.iter_mut()).zip(&self.workers) {
+            let boxed: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                *slot = Some(job());
+            });
+            // SAFETY: lifetime erasure only. `run` does not return (and
+            // does not unwind) until this worker reports the job done via
+            // `done_rx` below, so every borrow captured by the job — the
+            // result slot and whatever the caller's closure holds —
+            // strictly outlives its execution on the worker thread.
+            let boxed: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(boxed)
+            };
+            worker
+                .job_tx
+                .as_ref()
+                .expect("pool is shutting down")
+                .send(boxed)
+                .expect("pool worker died");
+            dispatched.push(worker);
+        }
+
+        // Job 0 on the calling thread. Catch its panic so we still drain
+        // every worker before unwinding (they borrow our frame).
+        let first_result = catch_unwind(AssertUnwindSafe(|| {
+            first_slot[0] = Some(first());
+        }));
+        let mut worker_panic = None;
+        for w in dispatched {
+            match w.done_rx.recv().expect("pool worker died") {
+                Ok(()) => {}
+                Err(p) => worker_panic = Some(p),
+            }
+        }
+        if let Err(p) = first_result {
+            resume_unwind(p);
+        }
+        if let Some(p) = worker_panic {
+            resume_unwind(p);
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("every job ran"))
+            .collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for w in &mut self.workers {
+            w.job_tx = None; // closes the channel; the worker loop exits
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.join.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
 /// Threaded adapter around any [`ProductStage`]: splits the sampled rows
 /// of each `compute` call across `threads` workers.
 ///
@@ -74,7 +232,11 @@ where
 /// Worker `i` computes the contiguous row range `bounds[i]..bounds[i+1]`
 /// into its own sub-block, which is then copied into the caller's output
 /// rows. With `threads = 1` (or a single sampled row) the call
-/// short-circuits to the inner stage — no spawn, no copy.
+/// short-circuits to the inner stage — no dispatch, no copy.
+///
+/// The `threads − 1` helper threads are spawned once (at construction)
+/// and pinned for the adapter's lifetime in a [`WorkerPool`]; each
+/// `compute` or `apply_epilogue` call reuses them.
 ///
 /// Cost accounting is the worker-order sum of the per-worker costs,
 /// which for every stage in the crate equals the serial cost exactly
@@ -82,6 +244,7 @@ where
 pub struct ParallelProduct<P> {
     /// One replica per worker; `workers[0]` doubles as the serial path.
     workers: Vec<P>,
+    pool: WorkerPool,
 }
 
 impl<P: ProductStage + Clone> ParallelProduct<P> {
@@ -93,7 +256,10 @@ impl<P: ProductStage + Clone> ParallelProduct<P> {
             workers.push(inner.clone());
         }
         workers.push(inner);
-        ParallelProduct { workers }
+        ParallelProduct {
+            workers,
+            pool: WorkerPool::new(threads - 1),
+        }
     }
 }
 
@@ -142,7 +308,7 @@ impl<P: ProductStage + Send> ProductStage for ParallelProduct<P> {
                 cost
             });
         }
-        let costs = scoped_run(jobs);
+        let costs = self.pool.run(jobs);
         let mut total = ProductCost {
             flops: 0.0,
             rows_charged: 0,
@@ -153,6 +319,30 @@ impl<P: ProductStage + Send> ProductStage for ParallelProduct<P> {
         }
         total
     }
+
+    /// The epilogue over the same worker split as the product: each
+    /// worker applies the pointwise kernel map to its contiguous run of
+    /// whole rows. Per-element map ⇒ bitwise identical to the serial
+    /// pass for every thread count.
+    fn apply_epilogue(&mut self, epilogue: &Epilogue, rows: &[usize], q: &mut Mat) {
+        let k = rows.len();
+        let t = self.workers.len().min(k).max(1);
+        if t == 1 {
+            epilogue.apply(rows, q);
+            return;
+        }
+        let m = q.ncols();
+        let bounds = partition_bounds(k, t);
+        let mut rest: &mut [f64] = q.data_mut();
+        let mut jobs = Vec::with_capacity(t);
+        for i in 0..t {
+            let rr = &rows[bounds[i]..bounds[i + 1]];
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(rr.len() * m);
+            rest = tail;
+            jobs.push(move || epilogue.apply_chunk(rr, chunk));
+        }
+        self.pool.run(jobs);
+    }
 }
 
 #[cfg(test)]
@@ -160,6 +350,7 @@ mod tests {
     use super::*;
     use crate::data::{gen_dense_classification, gen_uniform_sparse, SynthParams, Task};
     use crate::gram::CsrProduct;
+    use crate::kernelfn::Kernel;
     use crate::rng::Pcg;
 
     #[test]
@@ -185,6 +376,50 @@ mod tests {
         assert_eq!(scoped_run(jobs), vec![0, 10, 20, 30, 40, 50, 60]);
         let one = vec![|| 42];
         assert_eq!(scoped_run(one), vec![42]);
+    }
+
+    #[test]
+    fn worker_pool_reuses_threads_across_calls() {
+        let mut pool = WorkerPool::new(3);
+        assert_eq!(pool.extra_workers(), 3);
+        for round in 0..50 {
+            // Jobs borrow the caller's stack — the data below lives in
+            // this frame, not in a 'static.
+            let base = vec![round; 4];
+            let jobs: Vec<_> = (0..4).map(|i| {
+                let base = &base;
+                move || base[i] * 10 + i
+            }).collect();
+            let out = pool.run(jobs);
+            let expect: Vec<usize> = (0..4).map(|i| round * 10 + i).collect();
+            assert_eq!(out, expect);
+        }
+        // Fewer jobs than workers is fine, including the 1-job case.
+        assert_eq!(pool.run(vec![|| 7]), vec![7]);
+    }
+
+    #[test]
+    fn worker_pool_propagates_job_panics_and_survives() {
+        let mut pool = WorkerPool::new(2);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = vec![
+                Box::new(|| 1),
+                Box::new(|| panic!("worker job failed")),
+                Box::new(|| 3),
+            ];
+            pool.run(jobs)
+        }));
+        assert!(r.is_err(), "panic must propagate to the caller");
+        // The pool is still usable after a job panicked.
+        let out = pool.run(vec![|| 10, || 20, || 30]);
+        assert_eq!(out, vec![10, 20, 30]);
+    }
+
+    #[test]
+    #[should_panic(expected = "jobs but only")]
+    fn worker_pool_rejects_more_jobs_than_threads() {
+        let mut pool = WorkerPool::new(1);
+        let _ = pool.run(vec![|| 0, || 1, || 2]);
     }
 
     #[test]
@@ -224,6 +459,30 @@ mod tests {
                     assert_eq!(q.data(), q_ref.data(), "t={t} sample {sample:?}");
                     assert_eq!(cost.rows_charged, cost_ref.rows_charged);
                     assert_eq!(cost.flops, cost_ref.flops, "additive exact counts");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_epilogue_is_bitwise_identical_to_serial() {
+        let a = gen_dense_classification(24, 6, 0.0, 33).a;
+        let m = a.nrows();
+        let norms = a.row_norms_sq();
+        let mut rng = Pcg::seeded(17);
+        for kernel in [Kernel::Linear, Kernel::paper_poly(), Kernel::paper_rbf()] {
+            let ep = Epilogue::new(kernel, norms.clone());
+            for t in [1usize, 2, 3, 8] {
+                let mut par = ParallelProduct::new(CsrProduct::new(a.clone()), t);
+                for _ in 0..4 {
+                    let k = rng.gen_range(1, 9);
+                    let rows: Vec<usize> = (0..k).map(|_| rng.gen_below(m)).collect();
+                    let mut q = Mat::zeros(k, m);
+                    par.compute(&rows, &mut q);
+                    let mut q_ref = q.clone();
+                    ep.apply(&rows, &mut q_ref);
+                    par.apply_epilogue(&ep, &rows, &mut q);
+                    assert_eq!(q.data(), q_ref.data(), "{kernel:?} t={t}");
                 }
             }
         }

@@ -3,6 +3,7 @@
 
 use crate::costmodel::{Ledger, Phase};
 use crate::dense::{cholesky_solve, Mat};
+use crate::gram::OverlapMode;
 use crate::rng::Pcg;
 
 use super::{GramOracle, Trace};
@@ -116,6 +117,9 @@ pub fn bdcd_sstep<O: GramOracle>(
     mut trace: Trace,
 ) -> Vec<f64> {
     assert!(s >= 1);
+    if oracle.overlap() == OverlapMode::Pipeline {
+        return bdcd_sstep_pipelined(oracle, y, p, s, ledger, trace);
+    }
     let m = oracle.m();
     assert_eq!(y.len(), m);
     assert!(p.b >= 1 && p.b <= m, "block size must be in [1, m]");
@@ -207,6 +211,142 @@ pub fn bdcd_sstep<O: GramOracle>(
             q = q_view;
         }
         done += s_now;
+    }
+    ledger.iters += p.h as f64;
+    alpha
+}
+
+/// [`bdcd_sstep`] driven through the split-phase oracle
+/// ([`OverlapMode::Pipeline`]): outer block `k+1`'s coordinates are
+/// drawn and its gram reduction *posted* ([`GramOracle::gram_start`])
+/// before block `k`'s `s` block subproblems run, so the collective's
+/// wire time hides under the Cholesky solves and corrections. Hidden
+/// work is mirrored into [`Ledger::add_hidden_flops`] for the cost
+/// model. Bitwise identical to the blocking driver — same coordinate
+/// stream, same cache stream, same arithmetic; only the wait moves.
+fn bdcd_sstep_pipelined<O: GramOracle>(
+    oracle: &mut O,
+    y: &[f64],
+    p: &KrrParams,
+    s: usize,
+    ledger: &mut Ledger,
+    mut trace: Trace,
+) -> Vec<f64> {
+    let m = oracle.m();
+    assert_eq!(y.len(), m);
+    assert!(p.b >= 1 && p.b <= m, "block size must be in [1, m]");
+    let mf = m as f64;
+    let inv_lambda = 1.0 / p.lambda;
+    let mut rng = Pcg::new(p.seed, KRR_COORD_STREAM);
+    let mut alpha = vec![0.0; m];
+
+    let b = p.b;
+    let outer = p.h.div_ceil(s);
+    let mut q = Mat::zeros(s * b, m);
+    let mut samples: Vec<Vec<usize>> = vec![Vec::new(); s];
+    let mut next_samples: Vec<Vec<usize>> = vec![Vec::new(); s];
+    let mut deltas: Vec<Vec<f64>> = vec![vec![0.0; b]; s];
+    // Every outer block is full-size except possibly the last.
+    let size_of = |k: usize| s.min(p.h - k * s);
+
+    // Prologue: draw outer block 0 and post its gram. `samples`/`flat`
+    // always hold the in-flight (most recently posted) block.
+    for sample in samples.iter_mut().take(size_of(0)) {
+        *sample = rng.sample_without_replacement(m, b);
+    }
+    let mut flat: Vec<usize> = samples[..size_of(0)].iter().flatten().copied().collect();
+    let mut next_flat: Vec<usize> = Vec::new();
+    oracle.gram_start(&flat, ledger);
+
+    for k in 0..outer {
+        let s_now = size_of(k);
+        let mut q_view = if s_now == s {
+            std::mem::replace(&mut q, Mat::zeros(0, 0))
+        } else {
+            Mat::zeros(s_now * b, m)
+        };
+        oracle.gram_finish(&flat, &mut q_view, ledger);
+
+        // Draw and post block k+1 *before* block k's subproblems: its
+        // reduction is then in flight for the whole inner loop below.
+        let overlapped = k + 1 < outer;
+        if overlapped {
+            let s_next = size_of(k + 1);
+            for sample in next_samples.iter_mut().take(s_next) {
+                *sample = rng.sample_without_replacement(m, b);
+            }
+            next_flat = next_samples[..s_next].iter().flatten().copied().collect();
+            oracle.gram_start(&next_flat, ledger);
+        }
+
+        // Inner loop — identical arithmetic to the blocking driver.
+        for j in 0..s_now {
+            let sj = &samples[j];
+            let qj = |r: usize| q_view.row(j * b + r);
+
+            let delta_j = ledger.time(Phase::Solve, || {
+                let mut g = Mat::zeros(b, b);
+                for r in 0..b {
+                    for c in 0..b {
+                        g[(r, c)] = inv_lambda * q_view[(j * b + c, sj[r])];
+                    }
+                    g[(r, r)] += mf;
+                }
+                let mut rhs: Vec<f64> = (0..b)
+                    .map(|r| {
+                        y[sj[r]] - mf * alpha[sj[r]] - inv_lambda * crate::dense::dot(qj(r), &alpha)
+                    })
+                    .collect();
+                rhs_corrections(&mut rhs, j, sj, &samples, &deltas, &q_view, b, mf, inv_lambda);
+                cholesky_solve(&g, &rhs)
+            });
+            ledger.add_flops(
+                Phase::Solve,
+                (2 * b * m + b * b + b * b * b) as f64,
+            );
+            ledger.add_flops(Phase::GradCorr, (j * 2 * b * b) as f64);
+            if overlapped {
+                ledger.add_hidden_flops(
+                    Phase::Solve,
+                    (2 * b * m + b * b + b * b * b) as f64,
+                );
+                ledger.add_hidden_flops(Phase::GradCorr, (j * 2 * b * b) as f64);
+            }
+            deltas[j][..b].copy_from_slice(&delta_j);
+        }
+
+        ledger.time(Phase::Update, || {
+            if let Some(t) = trace.as_deref_mut() {
+                for j in 0..s_now {
+                    for (r, &i) in samples[j].iter().enumerate() {
+                        alpha[i] += deltas[j][r];
+                    }
+                    t(k * s + j + 1, &alpha);
+                }
+            } else {
+                for j in 0..s_now {
+                    for (r, &i) in samples[j].iter().enumerate() {
+                        alpha[i] += deltas[j][r];
+                    }
+                }
+            }
+        });
+        ledger.add_flops(Phase::Update, (s_now * b) as f64);
+        if overlapped {
+            ledger.add_hidden_flops(Phase::Update, (s_now * b) as f64);
+        }
+
+        if s_now == s {
+            ledger.time(Phase::MemReset, || {
+                q_view.fill(0.0);
+            });
+            ledger.add_flops(Phase::MemReset, (s_now * b * m) as f64);
+            q = q_view;
+        }
+        if overlapped {
+            std::mem::swap(&mut samples, &mut next_samples);
+            std::mem::swap(&mut flat, &mut next_flat);
+        }
     }
     ledger.iters += p.h as f64;
     alpha
@@ -402,6 +542,49 @@ mod tests {
         let a_ref = bdcd(&mut o1, &y, &p, &mut Ledger::new(), None);
         let a_s = bdcd_sstep(&mut o2, &y, &p, 256, &mut Ledger::new(), None);
         testkit::assert_close(&a_s, &a_ref, 1e-8, "s=256 stability");
+    }
+
+    /// The pipelined KRR driver must replay the blocking distributed
+    /// solve bit for bit — same α, same wire traffic — while actually
+    /// posting its gram reductions ahead of the block subproblems.
+    #[test]
+    fn pipelined_sstep_is_bitwise_equal_to_blocking_distributed() {
+        use crate::comm::{run_ranks, AllreduceAlgo};
+        use crate::solvers::DistGram;
+        let ds = gen_dense_regression(20, 6, 0.1, 4);
+        let p = KrrParams {
+            lambda: 1.0,
+            b: 3,
+            h: 20,
+            seed: 8,
+        };
+        for s in [2usize, 4, 7] {
+            let run = |mode: OverlapMode| {
+                let shards = ds.shard_cols(3);
+                let y = ds.y.clone();
+                run_ranks(3, move |c| {
+                    let shard = shards[c.rank()].clone();
+                    let mut o = DistGram::with_cache(
+                        shard,
+                        Kernel::paper_rbf(),
+                        c,
+                        AllreduceAlgo::Rabenseifner,
+                        8,
+                    );
+                    o.set_overlap(mode);
+                    let mut ledger = Ledger::new();
+                    let alpha = bdcd_sstep(&mut o, &y, &p, s, &mut ledger, None);
+                    (alpha, o.comm_stats(), ledger.comm_posted)
+                })
+            };
+            let blocking = run(OverlapMode::Off);
+            let piped = run(OverlapMode::Pipeline);
+            for ((a0, c0, _), (a1, c1, posted)) in blocking.iter().zip(&piped) {
+                assert_eq!(a0, a1, "s={s}: α must be bitwise identical");
+                assert_eq!(c0, c1, "s={s}: wire traffic must be identical");
+                assert!(posted.words > 0, "s={s}: reduces must actually be posted");
+            }
+        }
     }
 
     #[test]

@@ -2,6 +2,7 @@
 
 use crate::costmodel::{Ledger, Phase};
 use crate::dense::Mat;
+use crate::gram::OverlapMode;
 use crate::rng::Pcg;
 
 use super::{GramOracle, Trace};
@@ -154,6 +155,9 @@ pub fn dcd_sstep<O: GramOracle>(
     mut trace: Trace,
 ) -> Vec<f64> {
     assert!(s >= 1);
+    if oracle.overlap() == OverlapMode::Pipeline {
+        return dcd_sstep_pipelined(oracle, y, p, s, ledger, trace);
+    }
     let m = oracle.m();
     assert_eq!(y.len(), m);
     let (nu, omega) = p.variant.nu_omega(p.c);
@@ -245,6 +249,129 @@ pub fn dcd_sstep<O: GramOracle>(
             q = q_view;
         }
         done += s_now;
+    }
+    ledger.iters += p.h as f64;
+    alpha
+}
+
+/// [`dcd_sstep`] driven through the split-phase oracle
+/// ([`OverlapMode::Pipeline`]): block `k+1`'s coordinates are drawn and
+/// its gram reduction *posted* ([`GramOracle::gram_start`]) before block
+/// `k`'s inner subproblems run, so the collective's wire time hides
+/// under the Solve/GradCorr/Update compute of the previous block. The
+/// hidden work is mirrored into [`Ledger::add_hidden_flops`] so the cost
+/// model can credit the overlap.
+///
+/// Bitwise identical to the blocking driver: the coordinate stream is
+/// drawn in the same order from the same generator, the cache hit/miss
+/// stream is unchanged (`gram_finish(k)` completes before
+/// `gram_start(k+1)` classifies), and every gram block, scaling and α
+/// update replays the same arithmetic — only the wait moves.
+fn dcd_sstep_pipelined<O: GramOracle>(
+    oracle: &mut O,
+    y: &[f64],
+    p: &SvmParams,
+    s: usize,
+    ledger: &mut Ledger,
+    mut trace: Trace,
+) -> Vec<f64> {
+    let m = oracle.m();
+    assert_eq!(y.len(), m);
+    let (nu, omega) = p.variant.nu_omega(p.c);
+    let mut rng = Pcg::new(p.seed, SVM_COORD_STREAM);
+    let mut alpha = vec![0.0; m];
+
+    let outer = p.h.div_ceil(s);
+    let mut q = Mat::zeros(s, m);
+    let mut theta = vec![0.0; s];
+    // Every block is full-size except possibly the last.
+    let size_of = |k: usize| s.min(p.h - k * s);
+
+    // Prologue: draw block 0 and post its gram. `sample` always holds
+    // the in-flight (most recently posted) block's coordinates;
+    // `next_sample` is the staging buffer for the block after it.
+    let mut sample = vec![0usize; s];
+    let mut next_sample = vec![0usize; s];
+    for sj in sample.iter_mut().take(size_of(0)) {
+        *sj = rng.gen_below(m);
+    }
+    oracle.gram_start(&sample[..size_of(0)], ledger);
+
+    for k in 0..outer {
+        let s_now = size_of(k);
+        let sample_now = &sample[..s_now];
+        let mut q_view = if s_now == s {
+            std::mem::replace(&mut q, Mat::zeros(0, 0))
+        } else {
+            Mat::zeros(s_now, m)
+        };
+        oracle.gram_finish(sample_now, &mut q_view, ledger);
+        ledger.time(Phase::KernelCompute, || {
+            yscale_rows(&mut q_view, sample_now, y);
+        });
+        ledger.add_flops(Phase::KernelCompute, 2.0 * (s_now * m) as f64);
+
+        // Draw and post block k+1 *before* block k's subproblems: its
+        // reduction is then in flight for the whole inner loop below,
+        // whose flops are the overlap window the cost model credits.
+        let overlapped = k + 1 < outer;
+        if overlapped {
+            let s_next = size_of(k + 1);
+            for sj in next_sample.iter_mut().take(s_next) {
+                *sj = rng.gen_below(m);
+            }
+            oracle.gram_start(&next_sample[..s_next], ledger);
+        }
+
+        // Inner loop — identical arithmetic to the blocking driver.
+        ledger.time(Phase::Solve, || {
+            for j in 0..s_now {
+                let urow = q_view.row(j);
+                let ij = sample_now[j];
+                let eta = urow[ij] + omega;
+                let mut rho = alpha[ij];
+                let mut g = crate::dense::dot(urow, &alpha) - 1.0 + omega * alpha[ij];
+                for t in 0..j {
+                    let it = sample_now[t];
+                    g += urow[it] * theta[t];
+                    if it == ij {
+                        rho += theta[t];
+                        g += omega * theta[t];
+                    }
+                }
+                theta[j] = coordinate_step(rho, g, eta, nu);
+            }
+        });
+        ledger.add_flops(Phase::Solve, (s_now * (2 * m + 4)) as f64);
+        ledger.add_flops(Phase::GradCorr, (s_now * s_now.saturating_sub(1)) as f64);
+
+        ledger.time(Phase::Update, || {
+            if let Some(t) = trace.as_deref_mut() {
+                for j in 0..s_now {
+                    alpha[sample_now[j]] += theta[j];
+                    t(k * s + j + 1, &alpha);
+                }
+            } else {
+                for j in 0..s_now {
+                    alpha[sample_now[j]] += theta[j];
+                }
+            }
+        });
+        ledger.add_flops(Phase::Update, s_now as f64);
+        if overlapped {
+            ledger.add_hidden_flops(Phase::Solve, (s_now * (2 * m + 4)) as f64);
+            ledger.add_hidden_flops(Phase::GradCorr, (s_now * s_now.saturating_sub(1)) as f64);
+            ledger.add_hidden_flops(Phase::Update, s_now as f64);
+        }
+
+        if s_now == s {
+            ledger.time(Phase::MemReset, || {
+                q_view.fill(0.0);
+            });
+            ledger.add_flops(Phase::MemReset, (s_now * m) as f64);
+            q = q_view;
+        }
+        std::mem::swap(&mut sample, &mut next_sample);
     }
     ledger.iters += p.h as f64;
     alpha
@@ -404,6 +531,49 @@ mod tests {
             let a_s = dcd_sstep(&mut o2, &ds.y, &p, s, &mut Ledger::new(), None);
             testkit::assert_close(&a_s, &a_ref, 1e-9, "prop equivalence");
         });
+    }
+
+    /// The pipelined driver must replay the blocking distributed solve
+    /// bit for bit — same α, same wire traffic — while actually posting
+    /// its gram reductions ahead of the inner loop.
+    #[test]
+    fn pipelined_sstep_is_bitwise_equal_to_blocking_distributed() {
+        use crate::comm::{run_ranks, AllreduceAlgo};
+        use crate::solvers::DistGram;
+        let ds = gen_dense_classification(24, 8, 0.1, 5);
+        let p = SvmParams {
+            c: 1.0,
+            variant: SvmVariant::L1,
+            h: 50,
+            seed: 9,
+        };
+        for s in [2usize, 8, 13] {
+            let run = |mode: OverlapMode| {
+                let shards = ds.shard_cols(3);
+                let y = ds.y.clone();
+                run_ranks(3, move |c| {
+                    let shard = shards[c.rank()].clone();
+                    let mut o = DistGram::with_cache(
+                        shard,
+                        Kernel::paper_rbf(),
+                        c,
+                        AllreduceAlgo::Rabenseifner,
+                        6,
+                    );
+                    o.set_overlap(mode);
+                    let mut ledger = Ledger::new();
+                    let alpha = dcd_sstep(&mut o, &y, &p, s, &mut ledger, None);
+                    (alpha, o.comm_stats(), ledger.comm_posted)
+                })
+            };
+            let blocking = run(OverlapMode::Off);
+            let piped = run(OverlapMode::Pipeline);
+            for ((a0, c0, _), (a1, c1, posted)) in blocking.iter().zip(&piped) {
+                assert_eq!(a0, a1, "s={s}: α must be bitwise identical");
+                assert_eq!(c0, c1, "s={s}: wire traffic must be identical");
+                assert!(posted.words > 0, "s={s}: reduces must actually be posted");
+            }
+        }
     }
 
     #[test]

@@ -28,7 +28,7 @@ use crate::costmodel::Ledger;
 use crate::dense::Mat;
 use crate::gram::{
     AllreduceSum, CsrProduct, Epilogue, FragmentSlot, GramEngine, GridProduct, GridReduce,
-    GridStorage, Layout, NoReduce,
+    GridStorage, Layout, NoReduce, OverlapMode,
 };
 use crate::kernelfn::Kernel;
 use crate::parallel::ParallelProduct;
@@ -158,6 +158,16 @@ impl<'c, C: Communicator> DistGram<'c, C> {
     pub fn rank(&self) -> usize {
         self.engine.reduce_stage().rank()
     }
+
+    /// Select the communication-overlap mode (default
+    /// [`OverlapMode::Off`]). Must be identical on every rank.
+    /// [`OverlapMode::Exchange`] is inert here (the 1D layout has no
+    /// fragment exchange); [`OverlapMode::Pipeline`] makes the s-step
+    /// drivers post each block's gram allreduce under the previous
+    /// block's updates. Bitwise-invariant either way.
+    pub fn set_overlap(&mut self, mode: OverlapMode) {
+        self.engine.set_overlap(mode);
+    }
 }
 
 impl<'c, C: Communicator> GramOracle for DistGram<'c, C> {
@@ -175,6 +185,18 @@ impl<'c, C: Communicator> GramOracle for DistGram<'c, C> {
 
     fn comm_stats(&self) -> CommStats {
         self.engine.comm_stats()
+    }
+
+    fn overlap(&self) -> OverlapMode {
+        self.engine.overlap()
+    }
+
+    fn gram_start(&mut self, sample: &[usize], ledger: &mut Ledger) {
+        self.engine.gram_start(sample, ledger);
+    }
+
+    fn gram_finish(&mut self, sample: &[usize], q: &mut Mat, ledger: &mut Ledger) {
+        self.engine.gram_finish(sample, q, ledger);
     }
 }
 
@@ -313,6 +335,17 @@ impl<'c, C: Communicator> GridGram<'c, C> {
             None => inner.owned_nnz(),
         }
     }
+
+    /// Select the communication-overlap mode (default
+    /// [`OverlapMode::Off`]). Must be identical on every rank.
+    /// [`OverlapMode::Exchange`] overlaps the sharded storage's fragment
+    /// ring with the owned-rows product pass (inert for replicated
+    /// cells); [`OverlapMode::Pipeline`] makes the s-step drivers post
+    /// each block's column reduce under the previous block's updates.
+    /// Bitwise-invariant either way.
+    pub fn set_overlap(&mut self, mode: OverlapMode) {
+        self.engine.set_overlap(mode);
+    }
 }
 
 impl<'c, C: Communicator> GramOracle for GridGram<'c, C> {
@@ -330,6 +363,18 @@ impl<'c, C: Communicator> GramOracle for GridGram<'c, C> {
 
     fn comm_stats(&self) -> CommStats {
         self.engine.comm_stats()
+    }
+
+    fn overlap(&self) -> OverlapMode {
+        self.engine.overlap()
+    }
+
+    fn gram_start(&mut self, sample: &[usize], ledger: &mut Ledger) {
+        self.engine.gram_start(sample, ledger);
+    }
+
+    fn gram_finish(&mut self, sample: &[usize], q: &mut Mat, ledger: &mut Ledger) {
+        self.engine.gram_finish(sample, q, ledger);
     }
 }
 

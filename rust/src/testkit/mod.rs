@@ -140,6 +140,21 @@ pub fn env_grid_storage() -> crate::gram::GridStorage {
         .unwrap_or(crate::gram::GridStorage::Replicated)
 }
 
+/// Communication-overlap mode for overlap-aware tests: the `OVERLAP`
+/// environment variable (`off` / `exchange` / `pipeline`), defaulting
+/// to `Off` — the overlap analog of [`env_grid_storage`]. The CI matrix
+/// runs one lane with `OVERLAP=exchange` (paired with the sharded-grid
+/// lane, where the fragment exchange has a substrate), so every
+/// property that folds `env_overlap()` into its overlap sweep exercises
+/// the nonblocking collectives under real subcommunicator traffic.
+/// Results are bitwise overlap-invariant, so assertions are unchanged.
+pub fn env_overlap() -> crate::gram::OverlapMode {
+    std::env::var("OVERLAP")
+        .ok()
+        .and_then(|s| crate::gram::OverlapMode::parse(s.trim()))
+        .unwrap_or(crate::gram::OverlapMode::Off)
+}
+
 /// Assert two slices are elementwise close.
 #[track_caller]
 pub fn assert_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
@@ -206,6 +221,15 @@ mod tests {
             s,
             crate::gram::GridStorage::Replicated | crate::gram::GridStorage::Sharded
         ));
+    }
+
+    #[test]
+    fn env_overlap_yields_a_valid_mode() {
+        // Whatever the environment says (including the CI
+        // OVERLAP=exchange lane and malformed values), the result is
+        // one of the three real overlap modes.
+        let m = env_overlap();
+        assert!(crate::gram::OverlapMode::all().contains(&m));
     }
 
     #[test]

@@ -19,6 +19,12 @@
 //!   `1/pr` memory footprint, with an optional per-rank memory budget
 //!   (`--mem-limit`) ranking infeasible candidates strictly last,
 //! * `row_block` over [`ROW_BLOCK_CANDIDATES`] on grid layouts,
+//! * communication overlap over the applicable
+//!   [`crate::gram::OverlapMode`]s — `exchange` where a sharded grid
+//!   has a fragment exchange to hide, `pipeline` where an s-step inner
+//!   loop can run under a posted reduce; the analytic replicas price
+//!   the posted/hidden split through
+//!   [`MachineProfile::overlap_saved`](crate::costmodel::MachineProfile),
 //!
 //! scores every candidate with the *same analytic count replicas the
 //! scaling harness cross-validates against measured execution*
@@ -50,7 +56,7 @@ use crate::costmodel::{
     Predicted, ProblemDims,
 };
 use crate::data::Dataset;
-use crate::gram::{GridStorage, Layout};
+use crate::gram::{GridStorage, Layout, OverlapMode};
 use crate::kernelfn::Kernel;
 
 /// Block-cyclic row-block candidates for grid layouts (the ROADMAP
@@ -205,6 +211,10 @@ pub struct Candidate {
     pub storage: GridStorage,
     /// Block-cyclic row-block size (the default for 1D candidates).
     pub row_block: usize,
+    /// Communication-overlap mode. Only modes with a substrate on this
+    /// candidate's shape are enumerated (`Off` for the rest — an inert
+    /// mode scores identically and would just pad the report).
+    pub overlap: OverlapMode,
     /// False when the request's `--mem-limit` budget is smaller than
     /// this candidate's per-rank memory model — the candidate then ranks
     /// after every feasible one.
@@ -304,6 +314,9 @@ impl Candidate {
         if self.t > 1 {
             out.push_str(&format!(" --threads {}", self.t));
         }
+        if self.overlap != OverlapMode::Off {
+            out.push_str(&format!(" --overlap {}", self.overlap.name()));
+        }
         out.push_str(&format!(" --s {} --h {h}", self.s));
         out
     }
@@ -326,8 +339,8 @@ pub struct TunedPlan {
     pub dataset: String,
     /// All candidates, memory-feasible ones first, then by predicted
     /// total time (ties broken deterministically by
-    /// `(pr, storage, row_block, t, s)` — the ranking is invariant
-    /// under candidate enumeration order).
+    /// `(pr, storage, row_block, overlap, t, s)` — the ranking is
+    /// invariant under candidate enumeration order).
     pub candidates: Vec<Candidate>,
 }
 
@@ -345,6 +358,23 @@ pub fn factorizations(p: usize) -> Vec<(usize, usize)> {
         .filter(|pr| p % pr == 0)
         .map(|pr| (pr, p / pr))
         .collect()
+}
+
+/// Overlap modes worth scoring for a candidate shape: `Off` always;
+/// `Exchange` only where a sharded grid has a fragment exchange to hide
+/// (`pr > 1`); `Pipeline` only where the s-step drivers pipeline
+/// (`s > 1`) and the posted reduce collective has more than one
+/// participant (`pc > 1` — 1D candidates carry `pc = p`). Inert modes
+/// score identically to `Off` and are excluded rather than ranked.
+pub fn overlap_candidates(pr: usize, pc: usize, storage: GridStorage, s: usize) -> Vec<OverlapMode> {
+    let mut out = vec![OverlapMode::Off];
+    if pr > 1 && storage == GridStorage::Sharded {
+        out.push(OverlapMode::Exchange);
+    }
+    if s > 1 && pc > 1 {
+        out.push(OverlapMode::Pipeline);
+    }
+    out
 }
 
 /// Enumerate, score and rank the feasible configuration space (see the
@@ -388,30 +418,6 @@ pub fn tune(
         for &storage in storages {
             for &row_block in row_blocks {
                 for &s in &s_cands {
-                    // The count replica depends on (pr, s, storage,
-                    // row_block) only; threads are a pure wall-time
-                    // knob, so score each ledger once per t.
-                    let ledger = if pr == 1 {
-                        analytic_ledger(ds, kernel, problem, s, req.h, req.p, req.algo)
-                    } else {
-                        grid_analytic_ledger(
-                            ds,
-                            kernel,
-                            problem,
-                            s,
-                            req.h,
-                            pr,
-                            pc,
-                            row_block,
-                            storage,
-                            req.seed,
-                            req.algo,
-                        )
-                    };
-                    let mem_feasible = match req.mem_limit_words {
-                        Some(limit) => ledger.mem_per_rank() <= limit,
-                        None => true,
-                    };
                     let dims = ProblemDims {
                         m: ds.m(),
                         n: ds.n(),
@@ -427,20 +433,48 @@ pub fn tune(
                         (ProblemSpec::Krr { .. }, 1) => bdcd_cost(&dims, b),
                         (ProblemSpec::Krr { .. }, s) => bdcd_sstep_cost(&dims, b, s),
                     };
-                    for &t in &t_cands {
-                        let predicted = machine.predict(&ledger, t);
-                        candidates.push(Candidate {
-                            pr,
-                            pc,
-                            t,
-                            s,
-                            storage,
-                            row_block,
-                            mem_feasible,
-                            predicted,
-                            ledger: ledger.clone(),
-                            theorem,
-                        });
+                    // The count replica depends on (pr, s, storage,
+                    // row_block, overlap) only; threads are a pure
+                    // wall-time knob, so score each ledger once per t.
+                    for overlap in overlap_candidates(pr, pc, storage, s) {
+                        let ledger = if pr == 1 {
+                            analytic_ledger(ds, kernel, problem, s, req.h, req.p, req.algo, overlap)
+                        } else {
+                            grid_analytic_ledger(
+                                ds,
+                                kernel,
+                                problem,
+                                s,
+                                req.h,
+                                pr,
+                                pc,
+                                row_block,
+                                storage,
+                                req.seed,
+                                req.algo,
+                                overlap,
+                            )
+                        };
+                        let mem_feasible = match req.mem_limit_words {
+                            Some(limit) => ledger.mem_per_rank() <= limit,
+                            None => true,
+                        };
+                        for &t in &t_cands {
+                            let predicted = machine.predict(&ledger, t);
+                            candidates.push(Candidate {
+                                pr,
+                                pc,
+                                t,
+                                s,
+                                storage,
+                                row_block,
+                                overlap,
+                                mem_feasible,
+                                predicted,
+                                ledger: ledger.clone(),
+                                theorem,
+                            });
+                        }
                     }
                 }
             }
@@ -461,13 +495,19 @@ pub fn tune(
 /// Sort candidates: memory-feasible ones strictly first (the
 /// `--mem-limit` filter — infeasible candidates stay visible at the
 /// bottom instead of vanishing), then by predicted total time, ties
-/// broken by `(pr, storage, row_block, t, s)` ascending — a total order
-/// over the candidate keys, so the ranking cannot depend on enumeration
-/// order.
+/// broken by `(pr, storage, row_block, overlap, t, s)` ascending — a
+/// total order over the candidate keys, so the ranking cannot depend on
+/// enumeration order. `Off` sorts before the overlapped modes, so a
+/// zero-benefit overlap never displaces the simpler configuration.
 fn rank_candidates(candidates: &mut [Candidate]) {
     let storage_key = |c: &Candidate| match c.storage {
         GridStorage::Replicated => 0u8,
         GridStorage::Sharded => 1u8,
+    };
+    let overlap_key = |c: &Candidate| match c.overlap {
+        OverlapMode::Off => 0u8,
+        OverlapMode::Exchange => 1u8,
+        OverlapMode::Pipeline => 2u8,
     };
     candidates.sort_unstable_by(|a, b| {
         b.mem_feasible
@@ -480,6 +520,7 @@ fn rank_candidates(candidates: &mut [Candidate]) {
             .then_with(|| a.pr.cmp(&b.pr))
             .then_with(|| storage_key(a).cmp(&storage_key(b)))
             .then_with(|| a.row_block.cmp(&b.row_block))
+            .then_with(|| overlap_key(a).cmp(&overlap_key(b)))
             .then_with(|| a.t.cmp(&b.t))
             .then_with(|| a.s.cmp(&b.s))
     });
@@ -543,9 +584,13 @@ mod tests {
         req.t_list = vec![1, 4];
         let machine = MachineProfile::cray_ex();
         let plan = tune(&ds, Kernel::paper_rbf(), &svm(), &req, &machine);
-        // 1D: {1,4} s × {1,4} t = 4. Each of the 3 genuine grids adds
-        // 2 storage modes × 3 row blocks × 2 s × 2 t = 24.
-        assert_eq!(plan.candidates.len(), 4 + 3 * 24);
+        // 1D: (s=1 → off) + (s=4 → off, pipeline) = 3 ledgers × 2 t = 6.
+        // Grids 2x3 and 3x2: replicated 3 row blocks × (1 + 2)
+        // overlap-by-s = 9, sharded 3 × (2 + 3) = 15 (exchange joins
+        // the axis), so 24 ledgers × 2 t = 48 each. Grid 6x1 has a
+        // single-member reduce, so pipeline drops off the axis:
+        // replicated 3 × 2 + sharded 3 × 4 = 18 ledgers × 2 t = 36.
+        assert_eq!(plan.candidates.len(), 6 + 2 * 48 + 36);
         let best = plan.best().predicted.total_secs();
         for c in &plan.candidates {
             assert!(c.predicted.total_secs() >= best);
@@ -562,6 +607,36 @@ mod tests {
             .candidates
             .iter()
             .any(|c| c.pr > 1 && c.storage == GridStorage::Sharded));
+        // The overlap axis is enumerated where it has a substrate —
+        // exchange only on sharded grids, pipeline only on s > 1 — and
+        // an overlapped candidate never predicts slower than its
+        // blocking twin (the totals are identical; overlap only credits
+        // the hidden fraction).
+        assert!(plan.candidates.iter().any(|c| c.overlap == OverlapMode::Exchange));
+        assert!(plan.candidates.iter().any(|c| c.overlap == OverlapMode::Pipeline));
+        for c in &plan.candidates {
+            match c.overlap {
+                OverlapMode::Off => {}
+                OverlapMode::Exchange => {
+                    assert!(c.pr > 1 && c.storage == GridStorage::Sharded, "inert exchange");
+                }
+                OverlapMode::Pipeline => assert!(c.s > 1, "inert pipeline"),
+            }
+            if c.overlap != OverlapMode::Off {
+                let off = plan
+                    .candidates
+                    .iter()
+                    .find(|o| {
+                        o.overlap == OverlapMode::Off
+                            && (o.pr, o.pc, o.storage, o.row_block, o.t, o.s)
+                                == (c.pr, c.pc, c.storage, c.row_block, c.t, c.s)
+                    })
+                    .expect("blocking twin exists");
+                assert!(c.predicted.total_secs() <= off.predicted.total_secs());
+                assert_eq!(c.ledger.comm.words, off.ledger.comm.words);
+                assert!(c.ledger.comm_posted.words > 0, "enumerated overlap must post");
+            }
+        }
         // Sharded grids at equal (pr, pc, row_block, s) never move fewer
         // words than replicated (the exchange is pure extra traffic)…
         for c in plan.candidates.iter().filter(|c| c.storage == GridStorage::Sharded) {
@@ -610,6 +685,7 @@ mod tests {
             assert_eq!(spec.grid, c.grid());
             assert_eq!(spec.grid_storage, c.storage);
             assert_eq!(spec.row_block, c.row_block);
+            assert_eq!(spec.overlap, c.overlap);
             if c.pr == 1 {
                 assert_eq!(spec.grid, None);
             }
@@ -627,6 +703,14 @@ mod tests {
             } else {
                 assert!(!hint.contains("--grid"), "{hint}");
                 assert!(!hint.contains("--row-block"), "{hint}");
+            }
+            if c.overlap != OverlapMode::Off {
+                assert!(
+                    hint.contains(&format!("--overlap {}", c.overlap.name())),
+                    "{hint}"
+                );
+            } else {
+                assert!(!hint.contains("--overlap"), "{hint}");
             }
         }
         let krr_hint = plan.best().cli_hint(&ProblemSpec::Krr { lambda: 1.0, b: 2 }, 32);

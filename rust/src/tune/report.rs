@@ -12,7 +12,7 @@ use super::{Candidate, CrossCheck, TunedPlan};
 /// compares against measured execution).
 pub fn tune_table(plan: &TunedPlan, top: usize) -> Table {
     let mut t = Table::new(vec![
-        "rank", "layout", "storage", "rb", "t", "s", "total (s)", "compute (s)",
+        "rank", "layout", "storage", "rb", "overlap", "t", "s", "total (s)", "compute (s)",
         "bandwidth (s)", "latency (s)", "bound", "words", "rounds", "mem (MB)", "fit",
     ]);
     for (i, c) in plan.candidates.iter().take(top.max(1)).enumerate() {
@@ -21,6 +21,7 @@ pub fn tune_table(plan: &TunedPlan, top: usize) -> Table {
             c.layout_tag(),
             c.storage_tag().to_string(),
             c.row_block.to_string(),
+            c.overlap.name().to_string(),
             c.t.to_string(),
             c.s.to_string(),
             format!("{:.4e}", c.predicted.total_secs()),
@@ -77,11 +78,12 @@ pub fn tune_json(plan: &TunedPlan, top: usize, xval: Option<&CrossCheck>) -> Str
 fn candidate_json(c: &Candidate, rank: usize) -> String {
     format!(
         "{{\"rank\":{rank},\"pr\":{},\"pc\":{},\"t\":{},\"s\":{},\
-         \"storage\":{},\"row_block\":{},\"mem_words\":{},\"mem_feasible\":{},\
+         \"storage\":{},\"row_block\":{},\"overlap\":{},\"mem_words\":{},\"mem_feasible\":{},\
          \"predicted\":{{\"total_secs\":{},\"compute_secs\":{},\
          \"bandwidth_secs\":{},\"latency_secs\":{},\"bound\":{}}},\
          \"traffic\":{{\"words\":{},\"rounds\":{},\"msgs\":{},\"allreduces\":{},\
-         \"exchange_words\":{},\"exchange_rounds\":{}}},\
+         \"exchange_words\":{},\"exchange_rounds\":{},\
+         \"posted_words\":{},\"posted_rounds\":{}}},\
          \"theorem\":{{\"flops\":{},\"words\":{},\"msgs\":{}}}}}",
         c.pr,
         c.pc,
@@ -89,6 +91,7 @@ fn candidate_json(c: &Candidate, rank: usize) -> String {
         c.s,
         json_str(c.storage.name()),
         c.row_block,
+        json_str(c.overlap.name()),
         c.mem_words(),
         c.mem_feasible,
         json_f64(c.predicted.total_secs()),
@@ -102,6 +105,8 @@ fn candidate_json(c: &Candidate, rank: usize) -> String {
         c.ledger.comm.allreduces,
         c.ledger.comm_exch.words,
         c.ledger.comm_exch.rounds,
+        c.ledger.comm_posted.words,
+        c.ledger.comm_posted.rounds,
         json_f64(c.theorem.flops),
         json_f64(c.theorem.words),
         json_f64(c.theorem.msgs),
@@ -208,6 +213,8 @@ mod tests {
             "\"mem_words\":",
             "\"mem_feasible\":",
             "\"exchange_words\":",
+            "\"overlap\":",
+            "\"posted_words\":",
         ] {
             assert!(js.contains(key), "missing {key} in {js}");
         }

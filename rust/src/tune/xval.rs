@@ -40,19 +40,30 @@ pub struct CrossCheck {
     pub predicted_exch: CommStats,
     /// Measured fragment-exchange traffic.
     pub measured_exch: CommStats,
+    /// Predicted posted (nonblocking, overlappable) traffic — zero for
+    /// [`crate::gram::OverlapMode::Off`] candidates.
+    pub predicted_posted: CommStats,
+    /// Measured posted traffic.
+    pub measured_posted: CommStats,
     /// Worst relative flop disagreement across phases (flop accounting
     /// is f64 arithmetic, so "equal" means ≲1e-6 relative, not bitwise).
     pub flops_rel_err: f64,
 }
 
 impl CrossCheck {
-    /// True when every traffic counter — total, reduce, allgather —
-    /// matches the measured run exactly.
+    /// True when every traffic counter — total, reduce, allgather,
+    /// exchange, posted — matches the measured run exactly. Posted
+    /// `msgs` is the one excluded field: the analytic replica uses
+    /// rounds as a send-count proxy for the tree collectives (exact
+    /// only for rings), same as the blocking `msgs` convention.
     pub fn traffic_exact(&self) -> bool {
         self.predicted == self.measured
             && self.predicted_col == self.measured_col
             && self.predicted_row == self.measured_row
             && self.predicted_exch == self.measured_exch
+            && self.predicted_posted.words == self.measured_posted.words
+            && self.predicted_posted.rounds == self.measured_posted.rounds
+            && self.predicted_posted.allreduces == self.measured_posted.allreduces
     }
 
     /// One-line human summary for the `tune` report.
@@ -112,6 +123,8 @@ pub fn cross_validate(
         measured_row: measured.comm_row,
         predicted_exch: candidate.ledger.comm_exch,
         measured_exch: measured.comm_exch,
+        predicted_posted: candidate.ledger.comm_posted,
+        measured_posted: measured.comm_posted,
         flops_rel_err,
     }
 }

@@ -22,6 +22,12 @@
 //!   replica rank by rank; and the per-rank memory model shrinks with
 //!   `pr` (the layout's reason to exist), identically in the measured
 //!   and analytic engines.
+//! * **Overlapped communication (`OverlapMode`)** — the nonblocking
+//!   exchange/pipeline overlaps replay the blocking bits exactly:
+//!   every `(pr, pc)` factorization of `P ∈ {2, …, 12}` × storage ×
+//!   applicable overlap mode equals the 1D@pc reference, and overlap
+//!   composes bitwise with cache and threads on the sub-matrix (plus
+//!   the CI lane's `OVERLAP` value via `testkit::env_overlap`).
 
 use kcd::comm::{run_ranks, AllreduceAlgo, CommStats, Communicator};
 use kcd::coordinator::scaling::{allgatherv_counts_per_rank, allreduce_counts_per_rank};
@@ -29,7 +35,7 @@ use kcd::coordinator::{run_distributed, ProblemSpec, SolverSpec};
 use kcd::costmodel::{Ledger, MachineProfile};
 use kcd::data::{gen_dense_classification, gen_uniform_sparse, Dataset, SynthParams, Task};
 use kcd::dense::Mat;
-use kcd::gram::{block_cyclic_rows, GridStorage};
+use kcd::gram::{block_cyclic_rows, GridStorage, OverlapMode};
 use kcd::kernelfn::Kernel;
 use kcd::rng::Pcg;
 use kcd::solvers::{GramOracle, GridGram, SvmVariant};
@@ -106,9 +112,69 @@ fn prop_grid_solve_bitwise_equals_1d_over_pc_for_all_factorizations() {
     }
 }
 
-/// Cache and threads compose with the grid bitwise, including the CI
-/// lane's THREADS value — on a representative factorization sub-matrix
-/// (the full cross-product would dominate suite runtime).
+/// The overlap acceptance property: for every `(pr, pc)` factorization
+/// of every `P ∈ {2, …, 12}`, both storage modes and both problems, the
+/// nonblocking overlaps replay the 1D@pc reference bit for bit — the
+/// posted fragment rings (`Exchange`, sharded cells) and the pipelined
+/// s-step gram reduce (`Pipeline`) are pure wall-time knobs. Inert
+/// combinations (exchange on replicated cells) are skipped here; the
+/// CLI suite pins that they run and stay bitwise-identical too.
+#[test]
+fn prop_overlapped_solves_bitwise_equal_blocking_for_all_factorizations() {
+    let ds = gen_dense_classification(24, 16, 0.05, 55);
+    let problems = [svm_problem(), ProblemSpec::Krr { lambda: 1.0, b: 2 }];
+    for problem in problems {
+        let base = SolverSpec {
+            s: 4,
+            h: 16,
+            seed: 9,
+            cache_rows: 0,
+            threads: 1,
+            grid: None,
+            ..Default::default()
+        };
+        // Memoize the blocking 1D reference per pc, exactly like the
+        // blocking headline property above.
+        let mut refs: Vec<Option<Vec<f64>>> = vec![None; 13];
+        for p in 2..=12usize {
+            for (pr, pc) in factorizations(p) {
+                if refs[pc].is_none() {
+                    refs[pc] = Some(alpha_1d(&ds, &problem, &base, pc));
+                }
+                let reference = refs[pc].as_ref().unwrap();
+                for storage in [GridStorage::Replicated, GridStorage::Sharded] {
+                    let overlaps: &[OverlapMode] = match storage {
+                        GridStorage::Replicated => &[OverlapMode::Pipeline],
+                        GridStorage::Sharded => {
+                            &[OverlapMode::Exchange, OverlapMode::Pipeline]
+                        }
+                    };
+                    for &overlap in overlaps {
+                        let solver = SolverSpec {
+                            grid: Some((pr, pc)),
+                            grid_storage: storage,
+                            overlap,
+                            ..base
+                        };
+                        let alpha = alpha_1d(&ds, &problem, &solver, p);
+                        assert_eq!(
+                            &alpha,
+                            reference,
+                            "{problem:?} Grid{{{pr},{pc}}} {} {} must replay 1D@{pc} bits",
+                            storage.name(),
+                            overlap.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Cache, threads and overlap compose with the grid bitwise, including
+/// the CI lane's THREADS/OVERLAP values — on a representative
+/// factorization sub-matrix (the full cross-product would dominate
+/// suite runtime).
 #[test]
 fn prop_grid_solve_bitwise_with_cache_and_threads() {
     let ds = gen_dense_classification(24, 16, 0.05, 55);
@@ -144,25 +210,34 @@ fn prop_grid_solve_bitwise_with_cache_and_threads() {
     if !storages.contains(&env_storage) {
         storages.push(env_storage);
     }
+    // Overlap composes with everything above bitwise as well — the
+    // OVERLAP CI lane's mode is always one of the three, so the full
+    // mode set already folds `testkit::env_overlap()` in.
+    let overlaps = OverlapMode::all();
+    assert!(overlaps.contains(&testkit::env_overlap()));
     for (pr, pc) in factorizations {
         let reference = alpha_1d(&ds, &problem, &base, pc);
         for &storage in &storages {
             for &threads in &thread_counts {
                 for cache_rows in [0usize, 6] {
-                    let solver = SolverSpec {
-                        cache_rows,
-                        threads,
-                        grid: Some((pr, pc)),
-                        grid_storage: storage,
-                        ..base
-                    };
-                    let alpha = alpha_1d(&ds, &problem, &solver, pr * pc);
-                    assert_eq!(
-                        alpha,
-                        reference,
-                        "Grid{{{pr},{pc}}} {} t={threads} cache={cache_rows}",
-                        storage.name()
-                    );
+                    for overlap in overlaps {
+                        let solver = SolverSpec {
+                            cache_rows,
+                            threads,
+                            grid: Some((pr, pc)),
+                            grid_storage: storage,
+                            overlap,
+                            ..base
+                        };
+                        let alpha = alpha_1d(&ds, &problem, &solver, pr * pc);
+                        assert_eq!(
+                            alpha,
+                            reference,
+                            "Grid{{{pr},{pc}}} {} t={threads} cache={cache_rows} overlap={}",
+                            storage.name(),
+                            overlap.name()
+                        );
+                    }
                 }
             }
         }
@@ -595,6 +670,7 @@ fn prop_sharded_mem_shrinks_with_pr_and_matches_measured() {
                 storage,
                 3,
                 AllreduceAlgo::Rabenseifner,
+                OverlapMode::Off,
             );
             assert_eq!(
                 res.critical.mem_per_rank(),

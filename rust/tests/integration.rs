@@ -210,6 +210,7 @@ fn sweep_engines_agree_at_overlapping_p() {
         algo: AllreduceAlgo::Rabenseifner,
         measured_limit: 8, // forces measured
         auto_tune: false,
+        ..Default::default()
     };
     let measured = sweep(&ds, Kernel::paper_rbf(), &problem, &base, &machine);
     let projected_cfg = SweepConfig {
@@ -267,8 +268,26 @@ fn projection_sees_load_imbalance() {
         c: 1.0,
         variant: SvmVariant::L1,
     };
-    let l_news = analytic_ledger(&news, Kernel::Linear, &problem, 8, 64, 256, AllreduceAlgo::Rabenseifner);
-    let l_uni = analytic_ledger(&uniform, Kernel::Linear, &problem, 8, 64, 256, AllreduceAlgo::Rabenseifner);
+    let l_news = analytic_ledger(
+        &news,
+        Kernel::Linear,
+        &problem,
+        8,
+        64,
+        256,
+        AllreduceAlgo::Rabenseifner,
+        kcd::gram::OverlapMode::Off,
+    );
+    let l_uni = analytic_ledger(
+        &uniform,
+        Kernel::Linear,
+        &problem,
+        8,
+        64,
+        256,
+        AllreduceAlgo::Rabenseifner,
+        kcd::gram::OverlapMode::Off,
+    );
     assert!(
         l_news.flops(Phase::KernelCompute) > 1.3 * l_uni.flops(Phase::KernelCompute),
         "critical-path kernel flops must reflect imbalance: {} vs {}",

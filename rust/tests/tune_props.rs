@@ -49,7 +49,16 @@ fn prop_candidate_traffic_equals_analytic_ledgers_exactly() {
             let plan = tune(&ds, Kernel::paper_rbf(), &problem, &req, &machine);
             for c in &plan.candidates {
                 let direct = if c.pr == 1 {
-                    analytic_ledger(&ds, Kernel::paper_rbf(), &problem, c.s, 16, p, req.algo)
+                    analytic_ledger(
+                        &ds,
+                        Kernel::paper_rbf(),
+                        &problem,
+                        c.s,
+                        16,
+                        p,
+                        req.algo,
+                        c.overlap,
+                    )
                 } else {
                     grid_analytic_ledger(
                         &ds,
@@ -63,26 +72,35 @@ fn prop_candidate_traffic_equals_analytic_ledgers_exactly() {
                         c.storage,
                         req.seed,
                         req.algo,
+                        c.overlap,
                     )
                 };
                 let tag = format!(
-                    "{problem:?} p={p} pr={} pc={} s={} {} rb={}",
+                    "{problem:?} p={p} pr={} pc={} s={} {} rb={} overlap={}",
                     c.pr,
                     c.pc,
                     c.s,
                     c.storage.name(),
-                    c.row_block
+                    c.row_block,
+                    c.overlap.name()
                 );
                 assert_eq!(c.ledger.comm, direct.comm, "{tag} total traffic");
                 assert_eq!(c.ledger.comm_col, direct.comm_col, "{tag} col traffic");
                 assert_eq!(c.ledger.comm_row, direct.comm_row, "{tag} row traffic");
                 assert_eq!(c.ledger.comm_exch, direct.comm_exch, "{tag} exch traffic");
+                assert_eq!(c.ledger.comm_posted, direct.comm_posted, "{tag} posted traffic");
                 assert_eq!(c.ledger.mem_per_rank(), direct.mem_per_rank(), "{tag} mem");
                 for ph in Phase::ALL {
                     assert_eq!(
                         c.ledger.flops(ph),
                         direct.flops(ph),
                         "{tag} {} flops",
+                        ph.name()
+                    );
+                    assert_eq!(
+                        c.ledger.hidden_flops(ph),
+                        direct.hidden_flops(ph),
+                        "{tag} {} hidden flops",
                         ph.name()
                     );
                 }
@@ -154,8 +172,8 @@ fn prop_ranking_invariant_under_enumeration_order() {
     assert_eq!(a.candidates.len(), b.candidates.len());
     for (x, y) in a.candidates.iter().zip(&b.candidates) {
         assert_eq!(
-            (x.pr, x.pc, x.t, x.s, x.storage, x.row_block),
-            (y.pr, y.pc, y.t, y.s, y.storage, y.row_block),
+            (x.pr, x.pc, x.t, x.s, x.storage, x.row_block, x.overlap),
+            (y.pr, y.pc, y.t, y.s, y.storage, y.row_block, y.overlap),
             "ranking order must not depend on enumeration order"
         );
         assert_eq!(x.predicted.total_secs(), y.predicted.total_secs());
