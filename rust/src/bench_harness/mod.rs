@@ -7,6 +7,8 @@
 //! per-iteration times. A `--quick` CLI flag (or `KCD_BENCH_QUICK=1`)
 //! shrinks budgets so `cargo bench` stays fast in CI.
 
+#![forbid(unsafe_code)]
+
 use std::time::Instant;
 
 use crate::util::{fmt_secs, mean, median, stddev};
@@ -42,7 +44,7 @@ impl Default for BenchConfig {
 
 /// True when `KCD_BENCH_QUICK=1` or `--quick` is on the command line.
 pub fn quick_mode() -> bool {
-    std::env::var_os("KCD_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+    std::env::var_os("KCD_BENCH_QUICK").is_some_and(|v| v == "1")
         || std::env::args().any(|a| a == "--quick")
 }
 

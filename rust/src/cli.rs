@@ -1,6 +1,8 @@
 //! CLI argument parsing and the `kcd` subcommands (clap is unavailable in
 //! the offline build; this is a small, strict flag parser).
 
+#![forbid(unsafe_code)]
+
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, ensure, Context, Result};

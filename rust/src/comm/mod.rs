@@ -12,6 +12,8 @@
 //! implementation would, so the counts are *measured from real message
 //! traffic*, not computed from formulas.
 
+#![forbid(unsafe_code)]
+
 mod collectives;
 mod nonblocking;
 mod thread_comm;

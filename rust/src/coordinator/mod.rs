@@ -14,6 +14,8 @@
 //! * [`breakdown`] — the runtime-breakdown harness (Figures 4, 7, 8).
 //! * [`report`] — markdown / CSV table writers shared by benches.
 
+#![forbid(unsafe_code)]
+
 pub mod breakdown;
 pub mod config;
 pub mod experiment;

@@ -526,6 +526,27 @@ pub fn mem_words_per_rank(
     data + cache + scratch
 }
 
+/// How each [`Phase`] is replicated by the analytic ledgers — the
+/// structural-exhaustiveness anchor behind detlint's `phase-coverage`
+/// rule (see `docs/LINTS.md`). The match has no wildcard arm on
+/// purpose: adding a `Phase` variant fails compilation here until its
+/// analytic treatment is decided and documented, and deleting a
+/// variant's real replica from [`analytic_ledger`] /
+/// [`grid_analytic_ledger`] still leaves this note naming what must
+/// exist.
+pub fn analytic_phase_replica(ph: Phase) -> &'static str {
+    match ph {
+        Phase::KernelCompute => "flops: 2*k*nnz partial product + mu*k*m epilogue per gram call",
+        Phase::Allreduce => "traffic: comm/comm_col word+round replicas (allreduce_max_counts)",
+        Phase::GradCorr => "flops: s*(s-1)-term gradient correction per outer block",
+        Phase::Solve => "flops: per-iteration subproblem solves plus the iter-overhead floor",
+        Phase::MemReset => "flops: s*b*m buffer zeroing per full outer block",
+        Phase::Update => "flops: per-iteration alpha updates",
+        Phase::CacheHit => "zero by construction: the analytic replicas model the cache-off engine",
+        Phase::FragmentExchange => "traffic: comm_exch ring replicas (allgatherv_counts_per_rank)",
+    }
+}
+
 /// Replicate the measured ledger analytically: identical flop accounting
 /// to the solvers and identical traffic accounting to the collectives —
 /// for any `p`, including non-powers-of-two (the collectives' pre-fold
@@ -1220,6 +1241,19 @@ mod tests {
         ProblemSpec::Svm {
             c: 1.0,
             variant: SvmVariant::L1,
+        }
+    }
+
+    /// Every phase names its analytic treatment, and the notes are
+    /// distinct — a stale copy-paste (two phases claiming the same
+    /// replica) would silently weaken the exhaustiveness anchor.
+    #[test]
+    fn analytic_phase_replica_covers_every_phase() {
+        let mut seen = std::collections::BTreeSet::new();
+        for ph in Phase::ALL {
+            let note = analytic_phase_replica(ph);
+            assert!(!note.is_empty(), "{} has an empty replica note", ph.name());
+            assert!(seen.insert(note), "{} duplicates another note", ph.name());
         }
     }
 

@@ -15,6 +15,8 @@
 //!    cross-check the measured counts and to reason about the
 //!    computation–bandwidth–latency trade-off.
 
+#![forbid(unsafe_code)]
+
 mod theorems;
 
 pub use theorems::{bdcd_cost, bdcd_sstep_cost, dcd_cost, dcd_sstep_cost, AlgoCost, ProblemDims};

@@ -9,6 +9,8 @@
 //! `label idx:val ...` format and any registry entry can be overridden
 //! with a file on disk.
 
+#![forbid(unsafe_code)]
+
 mod libsvm;
 mod registry;
 mod synth;

@@ -7,6 +7,8 @@
 //! metrics. Everything is `f64`; the f32 fast path lives in the PJRT
 //! runtime (L1/L2 artifacts).
 
+#![forbid(unsafe_code)]
+
 mod mat;
 mod factor;
 

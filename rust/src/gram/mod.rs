@@ -116,6 +116,8 @@
 //! every `(pr, pc)` factorization of `P ∈ {2, …, 12}`, cache on/off, and
 //! threads {1, 4}.
 
+#![forbid(unsafe_code)]
+
 mod cache;
 mod engine;
 mod epilogue;

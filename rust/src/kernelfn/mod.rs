@@ -10,6 +10,8 @@
 //! shards (allreduce-able), the nonlinearity is applied redundantly after
 //! the reduction.
 
+#![forbid(unsafe_code)]
+
 use crate::dense::Mat;
 
 /// Kernel choice and parameters.
@@ -118,7 +120,7 @@ impl Kernel {
         match *self {
             Kernel::Linear => {}
             Kernel::Poly { c, d } => {
-                for v in z.iter_mut() {
+                for v in &mut *z {
                     *v = (c + *v).powi(d);
                 }
             }

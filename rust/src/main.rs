@@ -2,6 +2,8 @@
 //!
 //! See `kcd help` (or [`kcd::cli::USAGE`]) for the command reference.
 
+#![forbid(unsafe_code)]
+
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     match kcd::cli::run(argv) {

@@ -10,6 +10,8 @@
 //! Both serialize to a JSON document (via the in-crate [`crate::util::json`]
 //! writer) so models survive process restarts.
 
+#![forbid(unsafe_code)]
+
 use anyhow::{anyhow, Result};
 
 use crate::data::Dataset;

@@ -37,6 +37,8 @@
 //! the scoped [`scoped_run`] it replaces on the hot path (which is kept
 //! for one-shot callers).
 
+#![deny(unsafe_op_in_unsafe_fn)]
+
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;

@@ -8,6 +8,8 @@
 //! fully deterministic across platforms, which the equivalence tests
 //! (s-step ≡ classical) rely on.
 
+#![forbid(unsafe_code)]
+
 /// PCG-XSH-RR 64/32 pseudo-random generator.
 ///
 /// Deterministic, seedable, and cheap to fork into independent streams

@@ -24,6 +24,8 @@
 //! treat "no artifacts" as a skip, so every bench/example degrades
 //! gracefully.
 
+#![forbid(unsafe_code)]
+
 mod manifest;
 
 pub use manifest::{ArtifactSpec, Manifest};

@@ -31,6 +31,8 @@
 //! *after* the kernel map), which matches LIBSVM and the dual derivation;
 //! for the linear kernel the two coincide exactly.
 
+#![forbid(unsafe_code)]
+
 mod bdcd;
 mod cocoa;
 mod dcd;

@@ -7,6 +7,8 @@
 //! The matrix is partitioned in 1D-column layout across ranks, so we also
 //! provide column slicing with re-indexing.
 
+#![forbid(unsafe_code)]
+
 use crate::dense::Mat;
 
 /// Compressed Sparse Row matrix (`f64` values, `usize` indices).

@@ -6,6 +6,8 @@
 //! the property with the failing seed to confirm, then panics with the
 //! seed so the case can be replayed exactly (`Gen::replay(seed)`).
 
+#![forbid(unsafe_code)]
+
 use crate::rng::Pcg;
 
 /// Random input source handed to properties.

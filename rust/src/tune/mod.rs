@@ -42,6 +42,8 @@
 //! candidate's reduce-collective participant count `pc`) ride along on
 //! every candidate as an order-of-magnitude sanity anchor.
 
+#![forbid(unsafe_code)]
+
 mod report;
 mod xval;
 

@@ -1,5 +1,7 @@
 //! Small shared utilities: timers, formatting, simple stats, JSON.
 
+#![forbid(unsafe_code)]
+
 pub mod json;
 
 use std::time::Instant;

@@ -1,0 +1,5 @@
+// Fixture: wall-clock read inside an engine module.
+pub fn elapsed() -> f64 {
+    let t0 = std::time::Instant::now(); //~ ambient-nondet
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,5 @@
+// Fixture: system time and thread identity in a deterministic module.
+pub fn tag() -> u64 {
+    let _since = std::time::SystemTime::now(); //~ ambient-nondet
+    std::thread::current().id().as_u64().get() //~ ambient-nondet
+}

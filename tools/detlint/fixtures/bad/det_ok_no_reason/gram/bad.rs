@@ -1,0 +1,8 @@
+// Fixture: a reason-less waiver annotation does not waive anything and
+// is itself flagged.
+use std::collections::HashMap;
+
+pub fn total(m: &HashMap<u32, u32>) -> u32 {
+    // det-ok //~ det-ok-syntax
+    m.values().sum() //~ map-order
+}

@@ -1,0 +1,5 @@
+// Analytic side of the ledger_missing_replica fixture: only `comm` is
+// replicated (`mem_words` is not a CommStats field, so it is exempt).
+pub fn grid_analytic_ledger(l: &mut Ledger) {
+    l.comm.words = 1.0;
+}

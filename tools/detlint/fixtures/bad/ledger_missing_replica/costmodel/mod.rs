@@ -1,0 +1,11 @@
+// Fixture: `comm_row` is a CommStats counter the analytic ledger never
+// touches, so cross-validation cannot cover it.
+pub struct CommStats {
+    pub words: f64,
+}
+
+pub struct Ledger {
+    pub comm: CommStats,
+    pub comm_row: CommStats, //~ ledger-replica
+    pub mem_words: u64,
+}

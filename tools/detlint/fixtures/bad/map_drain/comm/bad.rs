@@ -1,0 +1,12 @@
+// Fixture: draining an untyped-constructor map in a deterministic module.
+use std::collections::HashMap;
+
+pub fn flush() -> Vec<(u64, u64)> {
+    let mut pending = HashMap::new();
+    pending.insert(1u64, 2u64);
+    let mut out = Vec::new();
+    for (k, v) in pending.drain() { //~ map-order
+        out.push((k, v));
+    }
+    out
+}

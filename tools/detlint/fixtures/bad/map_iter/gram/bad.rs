@@ -1,0 +1,15 @@
+// Fixture: HashMap iteration in a deterministic module (gram/).
+use std::collections::HashMap;
+
+pub fn sum_values(m: &HashMap<usize, f64>) -> f64 {
+    let mut total = 0.0;
+    for (_, v) in m.iter() { //~ map-order
+        total += v;
+    }
+    total
+}
+
+pub fn lookup(m: &HashMap<usize, f64>, k: usize) -> Option<f64> {
+    // Keyed access stays free.
+    m.get(&k).copied()
+}

@@ -1,0 +1,14 @@
+// Fixture: `.keys()` and a bare `for … in set` in a deterministic module.
+use std::collections::{HashMap, HashSet};
+
+pub fn xor_members(s: &HashSet<u32>) -> u32 {
+    let mut acc = 0;
+    for k in s { //~ map-order
+        acc ^= *k;
+    }
+    acc
+}
+
+pub fn min_key(m: &HashMap<u32, u32>) -> u32 {
+    m.keys().min().copied().unwrap_or(0) //~ map-order
+}

@@ -1,0 +1,7 @@
+// Analytic side of the phase_missing_all fixture: both variants are
+// replicated here, so only the ALL-table findings fire.
+pub fn analytic_ledger() -> f64 {
+    let a = Phase::Compute as usize as f64;
+    let b = Phase::Slack as usize as f64;
+    a + b
+}

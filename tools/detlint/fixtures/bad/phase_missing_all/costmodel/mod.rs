@@ -1,0 +1,29 @@
+// Fixture: `Slack` is a Phase variant but never made it into ALL (and
+// the declared length went stale with it).
+pub enum Phase {
+    Compute,
+    Slack, //~ phase-coverage
+}
+
+impl Phase {
+    pub const ALL: [Phase; 1] = [Phase::Compute]; //~ phase-coverage
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Compute => "compute",
+            Phase::Slack => "slack",
+        }
+    }
+}
+
+pub struct MachineProfile;
+
+impl MachineProfile {
+    pub fn predict(&self) -> f64 {
+        let mut acc = 0.0;
+        for ph in Phase::ALL {
+            acc += ph as usize as f64;
+        }
+        acc
+    }
+}

@@ -1,0 +1,13 @@
+// Analytic side of the phase_missing_analytic fixture: `Phase::Slack`
+// is only mentioned in the test region, which does not count.
+pub fn analytic_ledger() -> f64 {
+    Phase::Compute as usize as f64
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn slack_reference_in_tests_does_not_count() {
+        let _ = Phase::Slack;
+    }
+}

@@ -1,0 +1,29 @@
+// Fixture: the enum side is complete; the analytic ledger forgot to
+// replicate `Slack` (see coordinator/scaling.rs).
+pub enum Phase {
+    Compute,
+    Slack, //~ phase-coverage
+}
+
+impl Phase {
+    pub const ALL: [Phase; 2] = [Phase::Compute, Phase::Slack];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Compute => "compute",
+            Phase::Slack => "slack",
+        }
+    }
+}
+
+pub struct MachineProfile;
+
+impl MachineProfile {
+    pub fn predict(&self) -> f64 {
+        let mut acc = 0.0;
+        for ph in Phase::ALL {
+            acc += ph as usize as f64;
+        }
+        acc
+    }
+}

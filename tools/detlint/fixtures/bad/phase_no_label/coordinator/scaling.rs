@@ -1,0 +1,7 @@
+// Analytic side of the phase_no_label fixture: complete, so only the
+// missing label fires.
+pub fn analytic_ledger() -> f64 {
+    let a = Phase::Compute as usize as f64;
+    let b = Phase::Slack as usize as f64;
+    a + b
+}

@@ -1,0 +1,29 @@
+// Fixture: a wildcard arm swallowed `Slack`'s label — compiles fine,
+// but the report would print the wrong tag.
+pub enum Phase {
+    Compute,
+    Slack, //~ phase-coverage
+}
+
+impl Phase {
+    pub const ALL: [Phase; 2] = [Phase::Compute, Phase::Slack];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Compute => "compute",
+            _ => "unknown",
+        }
+    }
+}
+
+pub struct MachineProfile;
+
+impl MachineProfile {
+    pub fn predict(&self) -> f64 {
+        let mut acc = 0.0;
+        for ph in Phase::ALL {
+            acc += ph as usize as f64;
+        }
+        acc
+    }
+}

@@ -1,0 +1,5 @@
+// Fixture: `unsafe` with no SAFETY comment anywhere near it.
+pub fn first_byte(v: &[u8]) -> u8 {
+    assert!(!v.is_empty());
+    unsafe { *v.as_ptr() } //~ unsafe-safety
+}

@@ -1,0 +1,8 @@
+// Good fixture: util/ is a timing-wrapper module; clocks are its job.
+use std::time::Instant;
+
+pub fn time_it<F: FnOnce()>(f: F) -> f64 {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,17 @@
+// Good fixture: a clock in the trailing test module of a deterministic
+// module is fine — tests may time themselves.
+pub fn double(x: u64) -> u64 {
+    x * 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn doubles_quickly() {
+        let t0 = std::time::Instant::now();
+        assert_eq!(double(21), 42);
+        assert!(t0.elapsed().as_secs() < 60);
+    }
+}

@@ -1,0 +1,12 @@
+// Good fixture: map iteration waived by a reasoned waiver annotation,
+// in both same-line and preceding-line positions.
+use std::collections::HashMap;
+
+pub fn count(m: &HashMap<u32, u32>) -> usize {
+    m.keys().count() // det-ok: count() is order-independent
+}
+
+pub fn total(m: &HashMap<u32, u32>) -> u32 {
+    // det-ok: commutative sum — order cannot affect the result
+    m.values().sum()
+}

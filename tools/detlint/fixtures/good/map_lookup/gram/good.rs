@@ -1,0 +1,20 @@
+// Good fixture: keyed map access and Vec iteration in a deterministic
+// module are both free.
+use std::collections::HashMap;
+
+pub fn gather(pos: &HashMap<usize, usize>, order: &[usize], vals: &[f64]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(order.len());
+    for &row in order {
+        if let Some(&slot) = pos.get(&row) {
+            out.push(vals[slot]);
+        }
+    }
+    out
+}
+
+pub fn fill(pos: &mut HashMap<usize, usize>, order: &[usize]) {
+    pos.clear();
+    for (slot, &row) in order.iter().enumerate() {
+        pos.insert(row, slot);
+    }
+}

@@ -1,0 +1,13 @@
+// Good fixture: data/ is not a deterministic module, so map iteration
+// is out of the map-order rule's scope.
+use std::collections::HashMap;
+
+pub fn label_histogram(labels: &[i32]) -> Vec<(i32, usize)> {
+    let mut h: HashMap<i32, usize> = HashMap::new();
+    for &l in labels {
+        *h.entry(l).or_insert(0) += 1;
+    }
+    let mut out: Vec<(i32, usize)> = h.into_iter().collect();
+    out.sort_unstable();
+    out
+}

@@ -1,0 +1,11 @@
+// Analytic side of the phase_complete fixture: both variants and both
+// CommStats counters are replicated in non-test code.
+pub fn analytic_ledger(l: &mut Ledger) {
+    let _ = Phase::Compute;
+    l.comm.words = 1.0;
+}
+
+pub fn grid_analytic_ledger(l: &mut Ledger) {
+    let _ = Phase::Slack;
+    l.comm_posted.words = 2.0;
+}

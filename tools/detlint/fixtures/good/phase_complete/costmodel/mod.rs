@@ -1,0 +1,47 @@
+// Good fixture: a complete Phase/Ledger pair — every variant in ALL,
+// labeled, priced, and replicated; every CommStats field replicated.
+pub enum Phase {
+    Compute,
+    Slack,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 2] = [Phase::Compute, Phase::Slack];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Compute => "compute",
+            Phase::Slack => "slack",
+        }
+    }
+}
+
+pub struct CommStats {
+    pub words: f64,
+}
+
+pub struct Ledger {
+    pub comm: CommStats,
+    pub comm_posted: CommStats,
+    pub mem_words: u64,
+}
+
+pub struct MachineProfile;
+
+impl MachineProfile {
+    pub fn predict(&self) -> f64 {
+        let mut acc = 0.0;
+        for ph in Phase::ALL {
+            acc += ph as usize as f64;
+        }
+        acc
+    }
+
+    pub fn project(&self) -> f64 {
+        let mut acc = 0.0;
+        for ph in Phase::ALL {
+            acc += 2.0 * (ph as usize as f64);
+        }
+        acc
+    }
+}

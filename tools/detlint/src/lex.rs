@@ -1,0 +1,284 @@
+//! Comment/string-aware line splitter.
+//!
+//! The whole analyzer runs on a *line model*: every source line is split
+//! into the code that the compiler sees and the comment text attached to
+//! it, with string and char literal *contents* blanked out of the code
+//! side (so `"HashMap"` in a log message never trips a rule) and comment
+//! text preserved (so `// SAFETY:` and `// det-ok:` annotations are
+//! findable). The splitter is a small state machine that understands the
+//! token forms that matter for not mis-classifying a region:
+//!
+//! - line comments `//`, nested block comments `/* /* */ */`
+//! - string literals with escapes, byte strings `b"…"`
+//! - raw strings `r"…"`, `r#"…"#` (arbitrary `#` depth), `br#"…"#`
+//! - char literals `'x'`, `'\n'`, `'\''` vs. lifetimes `'a`, `'static`
+//!
+//! Everything else (macros, cfg, generics) is left to the token layer.
+
+/// One source line, split into compiler-visible code and comment text.
+#[derive(Debug, Default, Clone)]
+pub struct LineInfo {
+    /// Code with string/char contents removed (delimiters kept).
+    pub code: String,
+    /// Concatenated text of `//` and `/* */` comments on this line.
+    pub comment: String,
+}
+
+#[derive(Debug, PartialEq, Eq, Clone, Copy)]
+enum State {
+    Code,
+    LineComment,
+    /// Nested block comment with the current nesting depth.
+    BlockComment(u32),
+    /// Normal (escaped) string literal.
+    Str,
+    /// Raw string literal closed by `"` followed by this many `#`.
+    RawStr(u32),
+    /// Char literal (escape-aware).
+    CharLit,
+}
+
+/// Split `src` into per-line code/comment views.
+///
+/// The output has exactly one entry per source line (including a final
+/// line without a trailing newline).
+pub fn split_lines(src: &str) -> Vec<LineInfo> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut lines = Vec::new();
+    let mut cur = LineInfo::default();
+    let mut st = State::Code;
+    // True when the previous code char continues an identifier, so an
+    // `r` in e.g. `var` is never mistaken for a raw-string prefix.
+    let mut prev_ident = false;
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if st == State::LineComment {
+                st = State::Code;
+            }
+            lines.push(std::mem::take(&mut cur));
+            prev_ident = false;
+            i += 1;
+            continue;
+        }
+        match st {
+            State::Code => {
+                let n1 = chars.get(i + 1).copied();
+                if c == '/' && n1 == Some('/') {
+                    st = State::LineComment;
+                    i += 2;
+                } else if c == '/' && n1 == Some('*') {
+                    st = State::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    cur.code.push('"');
+                    st = State::Str;
+                    prev_ident = false;
+                    i += 1;
+                } else if c == '\'' {
+                    // `'x'`, `'\n'` are char literals; `'a` in `<'a>` is a
+                    // lifetime. A quote is a char literal iff the next
+                    // char is an escape, or the char after next closes it.
+                    let n2 = chars.get(i + 2).copied();
+                    let is_char = match n1 {
+                        Some('\\') => true,
+                        Some(ch) if ch != '\'' => n2 == Some('\''),
+                        _ => false,
+                    };
+                    cur.code.push('\'');
+                    if is_char {
+                        st = State::CharLit;
+                    }
+                    prev_ident = false;
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !prev_ident && raw_str_len(&chars, i) > 0 {
+                    let (skip, hashes) = raw_str_start(&chars, i);
+                    cur.code.push('"');
+                    st = State::RawStr(hashes);
+                    prev_ident = false;
+                    i += skip;
+                } else if c == 'b' && !prev_ident && n1 == Some('"') {
+                    cur.code.push('"');
+                    st = State::Str;
+                    prev_ident = false;
+                    i += 2;
+                } else {
+                    cur.code.push(c);
+                    prev_ident = c.is_alphanumeric() || c == '_';
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                let n1 = chars.get(i + 1).copied();
+                if c == '/' && n1 == Some('*') {
+                    st = State::BlockComment(depth + 1);
+                    i += 2;
+                } else if c == '*' && n1 == Some('/') {
+                    st = if depth == 1 {
+                        State::Code
+                    } else {
+                        State::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    // Never skip over a newline (string line-continuation
+                    // escape): the `\n` must reach the line accounting.
+                    i += if chars.get(i + 1) == Some(&'\n') { 1 } else { 2 };
+                } else if c == '"' {
+                    cur.code.push('"');
+                    st = State::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' && count_hashes(&chars, i + 1) >= hashes {
+                    cur.code.push('"');
+                    st = State::Code;
+                    i += 1 + hashes as usize;
+                } else {
+                    i += 1;
+                }
+            }
+            State::CharLit => {
+                if c == '\\' {
+                    i += if chars.get(i + 1) == Some(&'\n') { 1 } else { 2 };
+                } else if c == '\'' {
+                    cur.code.push('\'');
+                    st = State::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    lines.push(cur);
+    lines
+}
+
+/// If a raw string starts at `i` (`r"`, `r#"`, `br##"`, …), return
+/// `(chars to skip past the opening quote, number of hashes)`.
+fn raw_str_start(chars: &[char], i: usize) -> (usize, u32) {
+    let mut j = i + 1;
+    if chars.get(i) == Some(&'b') {
+        if chars.get(j) != Some(&'r') {
+            return (0, 0);
+        }
+        j += 1;
+    }
+    let hashes = count_hashes(chars, j);
+    j += hashes as usize;
+    if chars.get(j) == Some(&'"') {
+        (j + 1 - i, hashes)
+    } else {
+        (0, 0)
+    }
+}
+
+/// Length of the raw-string opener at `i`, or 0 if none.
+fn raw_str_len(chars: &[char], i: usize) -> usize {
+    raw_str_start(chars, i).0
+}
+
+fn count_hashes(chars: &[char], mut j: usize) -> u32 {
+    let mut n = 0u32;
+    while chars.get(j) == Some(&'#') {
+        n += 1;
+        j += 1;
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(src: &str) -> Vec<String> {
+        split_lines(src).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn strips_line_comments_but_keeps_text() {
+        let lines = split_lines("let x = 1; // SAFETY: fine\n");
+        assert_eq!(lines[0].code, "let x = 1; ");
+        assert!(lines[0].comment.contains("SAFETY: fine"));
+    }
+
+    #[test]
+    fn blanks_string_contents() {
+        let c = codes("let s = \"HashMap.iter()\";");
+        assert_eq!(c[0], "let s = \"\";");
+    }
+
+    #[test]
+    fn handles_escaped_quotes_in_strings() {
+        let c = codes("let s = \"a\\\"b\"; let y = 2;");
+        assert_eq!(c[0], "let s = \"\"; let y = 2;");
+    }
+
+    #[test]
+    fn handles_raw_strings_with_hashes() {
+        let c = codes("let s = r#\"multi \" quote Instant::now\"#; let z = 3;");
+        assert_eq!(c[0], "let s = \"\"; let z = 3;");
+    }
+
+    #[test]
+    fn handles_byte_and_raw_byte_strings() {
+        let c = codes("let a = b\"x\"; let b2 = br#\"y\"#; done");
+        assert_eq!(c[0], "let a = \"\"; let b2 = \"\"; done");
+    }
+
+    #[test]
+    fn ident_ending_in_r_is_not_raw_string() {
+        let c = codes("var\"s\"");
+        assert_eq!(c[0], "var\"\"");
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let c = codes("let q = '\"'; fn f<'a>(x: &'a str) { let n = '\\n'; }");
+        assert_eq!(c[0], "let q = ''; fn f<'a>(x: &'a str) { let n = ''; }");
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let lines = split_lines("a /* one /* two */ still */ b");
+        assert_eq!(lines[0].code, "a  b");
+        assert!(lines[0].comment.contains("one"));
+        assert!(lines[0].comment.contains("still"));
+    }
+
+    #[test]
+    fn multiline_block_comment_spans_lines() {
+        let lines = split_lines("a /* x\ny */ b\n");
+        assert_eq!(lines[0].code, "a ");
+        assert_eq!(lines[1].code, " b");
+        assert!(lines[1].comment.contains('y'));
+    }
+
+    #[test]
+    fn multiline_string_spans_lines() {
+        let lines = split_lines("let s = \"one\ntwo\"; let x = 1;\n");
+        assert_eq!(lines[0].code, "let s = \"");
+        assert_eq!(lines[1].code, "\"; let x = 1;");
+    }
+
+    #[test]
+    fn one_entry_per_line_including_last() {
+        assert_eq!(split_lines("a\nb").len(), 2);
+        assert_eq!(split_lines("a\nb\n").len(), 3);
+    }
+}

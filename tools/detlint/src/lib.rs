@@ -1,0 +1,355 @@
+//! detlint — determinism-contract static analysis for the `kcd` tree.
+//!
+//! The repo's bitwise contracts (sharded ≡ replicated ≡ 1D@`pc`,
+//! overlap ≡ blocking, thread/cache/row_block invariance) are enforced
+//! at runtime by property suites; this linter machine-checks their
+//! *preconditions*, which used to be prose in doc comments:
+//!
+//! - [`rules::map_order`] — no `HashMap`/`HashSet` iteration in the
+//!   deterministic modules (keyed lookups stay free);
+//! - [`rules::ambient_nondet`] — clocks, thread identity and ambient
+//!   RNG seeding confined to the timing wrappers
+//!   (`coordinator/`, `bench_harness/`, `util/`);
+//! - [`rules::phase_coverage`] — every `Phase` variant listed in
+//!   `Phase::ALL`, labeled, priced by the cost model, and replicated by
+//!   the analytic ledgers (cross-file);
+//! - [`rules::unsafe_safety`] — every `unsafe` carries `// SAFETY:`;
+//! - [`rules::ledger_replica`] — every `CommStats` counter field of
+//!   `Ledger` is referenced by the analytic-ledger replicas.
+//!
+//! A finding on a line that is genuinely order-independent can be
+//! waived in place with `// det-ok: <reason>` on the same or the
+//! preceding line (not honored by `unsafe-safety` or the cross-file
+//! rules). Zero dependencies by design: the analysis is a hand-rolled
+//! lexer ([`lex`]) plus a token/line model ([`tokens`]) — see
+//! `docs/LINTS.md` for the rule catalog and the model's limits.
+
+pub mod lex;
+pub mod rules;
+pub mod tokens;
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use lex::LineInfo;
+use tokens::{find_seq, Tok};
+
+/// Rule identifiers, used in diagnostics as `[rule-id]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// `HashMap`/`HashSet` iteration in a deterministic module.
+    MapOrder,
+    /// Clock / thread-identity / ambient-RNG use outside the timing
+    /// wrapper modules.
+    AmbientNondet,
+    /// A `Phase` variant missing from `ALL`, its label match, the cost
+    /// model's pricing loops, or the analytic-ledger replicas.
+    PhaseCoverage,
+    /// An `unsafe` token without a `// SAFETY:` comment.
+    UnsafeSafety,
+    /// A `Ledger` comm-counter field with no analytic replica.
+    LedgerReplica,
+    /// A malformed `det-ok` annotation (missing `:` or reason).
+    DetOkSyntax,
+}
+
+impl Rule {
+    /// Stable kebab-case id printed in diagnostics and used by fixture
+    /// markers.
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::MapOrder => "map-order",
+            Rule::AmbientNondet => "ambient-nondet",
+            Rule::PhaseCoverage => "phase-coverage",
+            Rule::UnsafeSafety => "unsafe-safety",
+            Rule::LedgerReplica => "ledger-replica",
+            Rule::DetOkSyntax => "det-ok-syntax",
+        }
+    }
+}
+
+/// One finding, addressed `file:line`.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Path as shown to the user (scan root joined with the relative
+    /// path, forward slashes).
+    pub file: String,
+    /// 1-based source line.
+    pub line: usize,
+    /// Which rule fired.
+    pub rule: Rule,
+    /// Human-readable explanation with the suggested fix.
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file,
+            self.line,
+            self.rule.id(),
+            self.message
+        )
+    }
+}
+
+/// Module classification, derived from the path below the scan root.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModuleClass {
+    /// Must be bitwise deterministic: map-order rule applies.
+    Deterministic,
+    /// Timing wrappers: ambient clocks/thread-ids are allowed here.
+    TimingOk,
+    /// Everything else: ambient rule applies, map-order does not.
+    Other,
+}
+
+/// Modules under the bitwise-determinism contract.
+const DET_MODULES: &[&str] = &[
+    "comm",
+    "costmodel",
+    "gram",
+    "parallel",
+    "solvers",
+    "sparse",
+    "tune",
+];
+
+/// Modules allowed to read clocks and thread identity.
+const TIMING_MODULES: &[&str] = &["bench_harness", "coordinator", "util"];
+
+fn classify(rel: &str) -> ModuleClass {
+    let mut parts: Vec<&str> = rel.split('/').collect();
+    if let Some(last) = parts.pop() {
+        parts.push(last.trim_end_matches(".rs"));
+    }
+    if parts.iter().any(|p| DET_MODULES.contains(p)) {
+        ModuleClass::Deterministic
+    } else if parts.iter().any(|p| TIMING_MODULES.contains(p)) {
+        ModuleClass::TimingOk
+    } else {
+        ModuleClass::Other
+    }
+}
+
+/// A lexed, tokenized source file plus the per-line annotation state the
+/// rules consult.
+pub struct FileCtx {
+    /// Display path for diagnostics.
+    pub display: String,
+    /// Path relative to the scan root (forward slashes).
+    pub rel: String,
+    /// Module classification of `rel`.
+    pub class: ModuleClass,
+    /// Per-line code/comment split.
+    pub lines: Vec<LineInfo>,
+    /// Flat token stream of the code side.
+    pub toks: Vec<Tok>,
+    /// 1-based line of the first `#[cfg(test)]`; `usize::MAX` if none.
+    /// Everything from there to EOF is treated as test code (every file
+    /// in this tree keeps its tests in one trailing `mod tests`).
+    pub test_start: usize,
+    det_ok: Vec<bool>,
+}
+
+impl FileCtx {
+    /// Lex and tokenize `src`, recording `det-ok` annotations (and
+    /// reporting malformed ones into `diags`).
+    pub fn build(display: String, rel: String, src: &str, diags: &mut Vec<Diagnostic>) -> Self {
+        let class = classify(&rel);
+        let lines = lex::split_lines(src);
+        let toks = tokens::tokenize(&lines);
+        let test_start = find_seq(&toks, &["#", "[", "cfg", "(", "test", ")", "]"], 0)
+            .map_or(usize::MAX, |i| toks[i].line);
+        let mut det_ok = vec![false; lines.len() + 1];
+        for (idx, li) in lines.iter().enumerate() {
+            match parse_det_ok(&li.comment) {
+                DetOkMark::None => {}
+                DetOkMark::Valid => det_ok[idx + 1] = true,
+                DetOkMark::Malformed => diags.push(Diagnostic {
+                    file: display.clone(),
+                    line: idx + 1,
+                    rule: Rule::DetOkSyntax,
+                    message: "`det-ok` annotation needs a reason: `// det-ok: <why this is \
+                              order-independent>`"
+                        .to_string(),
+                }),
+            }
+        }
+        FileCtx {
+            display,
+            rel,
+            class,
+            lines,
+            toks,
+            test_start,
+            det_ok,
+        }
+    }
+
+    /// True if `line` (1-based) is in the trailing `#[cfg(test)]` region.
+    pub fn is_test_line(&self, line: usize) -> bool {
+        line >= self.test_start
+    }
+
+    /// True if the finding on `line` is waived by a `det-ok:` annotation
+    /// on the same or the preceding line.
+    pub fn is_waived(&self, line: usize) -> bool {
+        self.det_ok.get(line).copied().unwrap_or(false)
+            || (line > 0 && self.det_ok.get(line - 1).copied().unwrap_or(false))
+    }
+
+    /// Emit a diagnostic against this file.
+    pub fn diag(&self, diags: &mut Vec<Diagnostic>, line: usize, rule: Rule, message: String) {
+        diags.push(Diagnostic {
+            file: self.display.clone(),
+            line,
+            rule,
+            message,
+        });
+    }
+}
+
+enum DetOkMark {
+    None,
+    Valid,
+    Malformed,
+}
+
+/// Scan a line's comment text for a `det-ok` annotation. Occurrences
+/// that are part of a longer word (`det-ok-syntax` in fixture markers)
+/// are ignored, as is anything after a `//~` fixture-expectation marker.
+fn parse_det_ok(comment: &str) -> DetOkMark {
+    let scan = comment.split("//~").next().unwrap_or("");
+    let mut best = DetOkMark::None;
+    for (pos, _) in scan.match_indices("det-ok") {
+        if pos > 0 {
+            let before = scan[..pos].chars().next_back().unwrap();
+            if before.is_alphanumeric() || before == '-' || before == '_' {
+                continue;
+            }
+        }
+        let rest = &scan[pos + "det-ok".len()..];
+        let next = rest.chars().next();
+        match next {
+            Some(c) if c.is_alphanumeric() || c == '-' || c == '_' => continue,
+            Some(':') if !rest[1..].trim().is_empty() => return DetOkMark::Valid,
+            _ => best = DetOkMark::Malformed,
+        }
+    }
+    best
+}
+
+/// Lint every `.rs` file under `root` (or `root` itself if it is a
+/// file). Returns diagnostics sorted by `(file, line, rule)`.
+pub fn lint_tree(root: &Path) -> Result<Vec<Diagnostic>, String> {
+    let mut paths = Vec::new();
+    if root.is_file() {
+        paths.push(root.to_path_buf());
+    } else if root.is_dir() {
+        collect_rs(root, &mut paths)?;
+    } else {
+        return Err(format!("{}: not a file or directory", root.display()));
+    }
+    let mut diags = Vec::new();
+    let mut ctxs = Vec::new();
+    for path in &paths {
+        let src = fs::read_to_string(path)
+            .map_err(|e| format!("{}: read failed: {e}", path.display()))?;
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path.as_path())
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect::<Vec<_>>()
+            .join("/");
+        let display = if rel.is_empty() {
+            slashes(root)
+        } else {
+            format!("{}/{}", slashes(root).trim_end_matches('/'), rel)
+        };
+        let rel = if rel.is_empty() {
+            root.file_name()
+                .map_or_else(|| slashes(root), |n| n.to_string_lossy().into_owned())
+        } else {
+            rel
+        };
+        ctxs.push(FileCtx::build(display, rel, &src, &mut diags));
+    }
+    for f in &ctxs {
+        rules::map_order(f, &mut diags);
+        rules::ambient_nondet(f, &mut diags);
+        rules::unsafe_safety(f, &mut diags);
+    }
+    rules::phase_coverage(&ctxs, &mut diags);
+    rules::ledger_replica(&ctxs, &mut diags);
+    diags.sort_by(|a, b| {
+        (&a.file, a.line, a.rule, &a.message).cmp(&(&b.file, b.line, b.rule, &b.message))
+    });
+    Ok(diags)
+}
+
+fn slashes(p: &Path) -> String {
+    p.components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let rd = fs::read_dir(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    let mut entries: Vec<PathBuf> = Vec::new();
+    for e in rd {
+        entries.push(e.map_err(|e| format!("{}: {e}", dir.display()))?.path());
+    }
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_paths() {
+        assert_eq!(classify("gram/engine.rs"), ModuleClass::Deterministic);
+        assert_eq!(classify("costmodel/mod.rs"), ModuleClass::Deterministic);
+        assert_eq!(classify("util/mod.rs"), ModuleClass::TimingOk);
+        assert_eq!(classify("coordinator/scaling.rs"), ModuleClass::TimingOk);
+        assert_eq!(classify("cli.rs"), ModuleClass::Other);
+        assert_eq!(classify("data/mod.rs"), ModuleClass::Other);
+    }
+
+    #[test]
+    fn det_ok_parsing() {
+        assert!(matches!(parse_det_ok(" det-ok: keys are sorted first"), DetOkMark::Valid));
+        assert!(matches!(parse_det_ok(" det-ok"), DetOkMark::Malformed));
+        assert!(matches!(parse_det_ok(" det-ok: "), DetOkMark::Malformed));
+        assert!(matches!(parse_det_ok(" det-ok missing colon"), DetOkMark::Malformed));
+        assert!(matches!(parse_det_ok(" nothing here"), DetOkMark::None));
+        // Fixture markers and longer words never count as annotations.
+        assert!(matches!(parse_det_ok("~ det-ok-syntax"), DetOkMark::None));
+        assert!(matches!(parse_det_ok(" x //~ det-ok-syntax"), DetOkMark::None));
+    }
+
+    #[test]
+    fn test_region_detection() {
+        let mut diags = Vec::new();
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {}\n";
+        let f = FileCtx::build("x.rs".into(), "x.rs".into(), src, &mut diags);
+        assert_eq!(f.test_start, 2);
+        assert!(!f.is_test_line(1));
+        assert!(f.is_test_line(2));
+        assert!(diags.is_empty());
+    }
+}

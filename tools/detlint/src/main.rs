@@ -1,0 +1,38 @@
+//! CLI: `cargo run -p detlint -- rust/src [more roots…]`.
+//!
+//! Prints one `path:line: [rule-id] message` diagnostic per finding and
+//! exits 1 if any fired, 2 on usage or I/O errors, 0 when clean.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let roots: Vec<String> = std::env::args().skip(1).collect();
+    if roots.is_empty() || roots.iter().any(|a| a == "-h" || a == "--help") {
+        eprintln!("usage: detlint <root>…  (e.g. `cargo run -p detlint -- rust/src`)");
+        eprintln!("Checks the determinism contract; see docs/LINTS.md for the rules.");
+        return ExitCode::from(2);
+    }
+    let mut total = 0usize;
+    for root in &roots {
+        match detlint::lint_tree(Path::new(root)) {
+            Ok(diags) => {
+                for d in &diags {
+                    println!("{d}");
+                }
+                total += diags.len();
+            }
+            Err(e) => {
+                eprintln!("detlint: {e}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    if total == 0 {
+        eprintln!("detlint: clean ({} root(s))", roots.len());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("detlint: {total} diagnostic(s)");
+        ExitCode::from(1)
+    }
+}

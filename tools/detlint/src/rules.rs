@@ -1,0 +1,700 @@
+//! The five determinism-contract rules.
+//!
+//! Per-file rules ([`map_order`], [`ambient_nondet`], [`unsafe_safety`])
+//! take one [`FileCtx`]; the cross-file rules ([`phase_coverage`],
+//! [`ledger_replica`]) take the whole tree because they relate the
+//! `Phase`/`Ledger` definitions in `costmodel/` to the analytic-ledger
+//! replicas in `coordinator/scaling.rs`.
+
+use std::collections::BTreeSet;
+
+use crate::tokens::{find_seq, is_ident, skip_balanced, Tok};
+use crate::{Diagnostic, FileCtx, ModuleClass, Rule};
+
+/// Iteration-order-observing methods on `HashMap`/`HashSet`.
+const ITER_METHODS: &[&str] = &[
+    "drain",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "iter",
+    "iter_mut",
+    "keys",
+    "retain",
+    "values",
+    "values_mut",
+];
+
+/// Ambient-nondeterminism sources: `(token sequence, display label)`.
+const AMBIENT: &[(&[&str], &str)] = &[
+    (&["Instant", "::", "now"], "Instant::now"),
+    (&["SystemTime"], "SystemTime"),
+    (&["thread", "::", "current"], "thread::current"),
+    (&["from_entropy"], "from_entropy"),
+    (&["thread_rng"], "thread_rng"),
+    (&["rand", "::", "random"], "rand::random"),
+    (&["RandomState"], "RandomState"),
+];
+
+const MAP_ORDER_HINT: &str = "observes HashMap/HashSet iteration order, which is nondeterministic; walk sorted keys or a Vec index instead, or annotate `// det-ok: <reason>`";
+const AMBIENT_HINT: &str = "is ambient nondeterminism; engine code must stay replayable — route timing through `util::PhaseTimer`, move this into coordinator/bench_harness/util, or annotate `// det-ok: <reason>`";
+const UNSAFE_MSG: &str = "`unsafe` without a `// SAFETY:` comment (same line or the 5 lines above) stating why the invariants hold";
+
+/// Rule `map-order`: in deterministic modules, flag iteration over any
+/// binding whose declared type (or same-statement constructor) is
+/// `HashMap`/`HashSet` — `.iter()`-family calls and `for … in map`.
+/// Keyed access (`get`/`insert`/`remove`/`contains_key`) stays free.
+pub fn map_order(f: &FileCtx, diags: &mut Vec<Diagnostic>) {
+    if f.class != ModuleClass::Deterministic {
+        return;
+    }
+    let maps = collect_map_bindings(f);
+    if maps.is_empty() {
+        return;
+    }
+    let t = &f.toks;
+    for i in 0..t.len() {
+        let line = t[i].line;
+        if f.is_test_line(line) || f.is_waived(line) {
+            continue;
+        }
+        // `map.iter()` / `self.map.drain(..)` / …
+        if t[i].text == "."
+            && i + 2 < t.len()
+            && t[i + 2].text == "("
+            && ITER_METHODS.contains(&t[i + 1].text.as_str())
+            && i > 0
+            && maps.contains(&t[i - 1].text)
+        {
+            let msg = format!(
+                "`.{}()` on `{}` {MAP_ORDER_HINT}",
+                t[i + 1].text,
+                t[i - 1].text
+            );
+            f.diag(diags, line, Rule::MapOrder, msg);
+        }
+        // `for pat in map { … }` / `for pat in &map { … }`
+        if t[i].text == "for" {
+            if let Some(name) = for_loop_over(t, i, &maps) {
+                let msg = format!("`for … in {name}` {MAP_ORDER_HINT}");
+                f.diag(diags, line, Rule::MapOrder, msg);
+            }
+        }
+    }
+}
+
+/// If the `for` at `t[i]` loops directly over a binding in `maps`
+/// (optionally through `&`/`&mut` or a `self.` prefix), return its name.
+fn for_loop_over(t: &[Tok], i: usize, maps: &BTreeSet<String>) -> Option<String> {
+    // Find the `in` keyword within the pattern window.
+    let limit = (i + 12).min(t.len());
+    let in_idx = (i + 1..limit).find(|&j| t[j].text == "in")?;
+    // Collect the iterated expression up to the loop body brace.
+    let mut expr: Vec<&str> = Vec::new();
+    for tok in t.iter().skip(in_idx + 1).take(8) {
+        if tok.text == "{" {
+            break;
+        }
+        expr.push(tok.text.as_str());
+    }
+    while let Some(first) = expr.first() {
+        if *first == "&" || *first == "mut" {
+            expr.remove(0);
+        } else {
+            break;
+        }
+    }
+    let name = match expr.as_slice() {
+        [id] if is_ident(id) => (*id).to_string(),
+        ["self", ".", id] if is_ident(id) => (*id).to_string(),
+        _ => return None,
+    };
+    maps.contains(&name).then_some(name)
+}
+
+/// Names bound to a `HashMap`/`HashSet` anywhere in the non-test region:
+/// typed bindings (`name: HashMap<…>` — fields, params, typed lets) and
+/// same-statement constructors (`let name = HashMap::new()`).
+fn collect_map_bindings(f: &FileCtx) -> BTreeSet<String> {
+    let t = &f.toks;
+    let mut out = BTreeSet::new();
+    for i in 0..t.len() {
+        if f.is_test_line(t[i].line) {
+            break;
+        }
+        if is_ident(&t[i].text) && i + 2 < t.len() && t[i + 1].text == ":" {
+            let mut j = i + 2;
+            let mut hops = 0;
+            while j < t.len() && hops < 10 {
+                let s = t[j].text.as_str();
+                if s == "HashMap" || s == "HashSet" {
+                    out.insert(t[i].text.clone());
+                    break;
+                }
+                // Skip through references, lifetimes, paths and wrappers:
+                // `&'a mut std::collections::HashMap`, `Option<HashMap<…>>`.
+                match s {
+                    "&" | "mut" | "std" | "::" | "collections" | "Option" | "Box" | "<" => j += 1,
+                    "'" => j += 2,
+                    _ => break,
+                }
+                hops += 1;
+            }
+        }
+        if t[i].text == "let" {
+            let mut j = i + 1;
+            if j < t.len() && t[j].text == "mut" {
+                j += 1;
+            }
+            if j < t.len() && is_ident(&t[j].text) {
+                let mut saw_eq = false;
+                for k in j + 1..(j + 48).min(t.len()) {
+                    match t[k].text.as_str() {
+                        ";" => break,
+                        "=" => saw_eq = true,
+                        "HashMap" | "HashSet" if saw_eq => {
+                            out.insert(t[j].text.clone());
+                            break;
+                        }
+                        _ => {}
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Rule `ambient-nondet`: clocks, thread identity and ambient RNG
+/// seeding are confined to `coordinator/`, `bench_harness/`, `util/`.
+pub fn ambient_nondet(f: &FileCtx, diags: &mut Vec<Diagnostic>) {
+    if f.class == ModuleClass::TimingOk {
+        return;
+    }
+    for (seq, label) in AMBIENT {
+        let mut from = 0;
+        while let Some(i) = find_seq(&f.toks, seq, from) {
+            let line = f.toks[i].line;
+            if !f.is_test_line(line) && !f.is_waived(line) {
+                let msg = format!("`{label}` {AMBIENT_HINT}");
+                f.diag(diags, line, Rule::AmbientNondet, msg);
+            }
+            from = i + 1;
+        }
+    }
+}
+
+/// Rule `unsafe-safety`: every `unsafe` token needs a `// SAFETY:`
+/// comment on its own or one of the five preceding lines. No `det-ok`
+/// escape — the safety argument itself is the annotation.
+pub fn unsafe_safety(f: &FileCtx, diags: &mut Vec<Diagnostic>) {
+    for tok in &f.toks {
+        if tok.text != "unsafe" {
+            continue;
+        }
+        let line = tok.line;
+        let lo = line.saturating_sub(5).max(1);
+        let documented = (lo..=line).any(|ln| {
+            f.lines
+                .get(ln - 1)
+                .is_some_and(|li| li.comment.contains("SAFETY:"))
+        });
+        if !documented {
+            f.diag(diags, line, Rule::UnsafeSafety, UNSAFE_MSG.to_string());
+        }
+    }
+}
+
+/// Rule `phase-coverage` (cross-file): every variant of `enum Phase`
+/// must appear in `Phase::ALL` (with a matching declared length), carry
+/// a `Phase::V =>` label arm, be priced by `MachineProfile::predict`
+/// (and `project`, when present), and be referenced from the analytic
+/// ledger file(s).
+pub fn phase_coverage(files: &[FileCtx], diags: &mut Vec<Diagnostic>) {
+    let Some(pf) = files
+        .iter()
+        .find(|f| find_seq(&f.toks, &["enum", "Phase", "{"], 0).is_some())
+    else {
+        return;
+    };
+    let t = &pf.toks;
+    let enum_idx = find_seq(t, &["enum", "Phase", "{"], 0).unwrap();
+    let enum_line = t[enum_idx].line;
+    let variants = parse_variants(t, enum_idx + 2);
+
+    // `const ALL: [Phase; N] = [ … ];`
+    let mut all_entries: Vec<(String, usize)> = Vec::new();
+    match find_seq(t, &["const", "ALL", ":", "[", "Phase", ";"], 0) {
+        None => {
+            let msg = "`Phase` has no `const ALL: [Phase; N]` table — reports and pricing loops cannot enumerate phases".to_string();
+            pf.diag(diags, enum_line, Rule::PhaseCoverage, msg);
+        }
+        Some(ci) => {
+            let declared = resolve_const(t, &t[ci + 6].text);
+            if let Some(eq) = find_seq(t, &["="], ci) {
+                if let Some(open) = find_seq(t, &["["], eq) {
+                    let close = skip_balanced(t, open);
+                    let mut j = open;
+                    while let Some(v) = find_seq(t, &["Phase", "::"], j) {
+                        if v + 2 >= close {
+                            break;
+                        }
+                        all_entries.push((t[v + 2].text.clone(), t[v + 2].line));
+                        j = v + 2;
+                    }
+                }
+            }
+            if let Some(n) = declared {
+                if n != variants.len() {
+                    let msg = format!(
+                        "`Phase::ALL` declares {n} phases but the enum has {} variants",
+                        variants.len()
+                    );
+                    pf.diag(diags, t[ci].line, Rule::PhaseCoverage, msg);
+                }
+            }
+        }
+    }
+    let all_names: BTreeSet<&str> = all_entries.iter().map(|(n, _)| n.as_str()).collect();
+    let variant_names: BTreeSet<&str> = variants.iter().map(|(n, _)| n.as_str()).collect();
+    for (name, line) in &all_entries {
+        if !variant_names.contains(name.as_str()) {
+            let msg = format!("`Phase::ALL` lists `{name}`, which is not a `Phase` variant");
+            pf.diag(diags, *line, Rule::PhaseCoverage, msg);
+        }
+    }
+
+    // Pricing loops: `predict` must exist and enumerate `Phase::ALL`
+    // (or every variant explicitly); `project` is checked when present.
+    for fname in ["predict", "project"] {
+        match fn_body(t, fname) {
+            None => {
+                if fname == "predict" {
+                    let msg = "no `fn predict` found in the `Phase`-defining file — phases are not priced by the cost model".to_string();
+                    pf.diag(diags, enum_line, Rule::PhaseCoverage, msg);
+                }
+            }
+            Some((lo, hi)) => {
+                let body = &t[lo..hi];
+                if find_seq(body, &["Phase", "::", "ALL"], 0).is_none() {
+                    for (name, line) in &variants {
+                        if find_seq(body, &["Phase", "::", name.as_str()], 0).is_none() {
+                            let msg = format!(
+                                "`Phase::{name}` is not priced by `fn {fname}` (no `Phase::ALL` loop and no explicit reference)"
+                            );
+                            pf.diag(diags, *line, Rule::PhaseCoverage, msg);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    for (name, line) in &variants {
+        if !all_names.contains(name.as_str()) {
+            let msg = format!("`Phase::{name}` is missing from `Phase::ALL`");
+            pf.diag(diags, *line, Rule::PhaseCoverage, msg);
+        }
+        if find_seq(t, &["Phase", "::", name.as_str(), "=>"], 0).is_none() {
+            let msg = format!(
+                "`Phase::{name}` has no `Phase::{name} => …` match arm (label) in the defining file"
+            );
+            pf.diag(diags, *line, Rule::PhaseCoverage, msg);
+        }
+    }
+
+    // Analytic replica: each variant must appear in the non-test region
+    // of a file defining `analytic_ledger` / `grid_analytic_ledger`.
+    let analytic: Vec<&FileCtx> = files.iter().filter(|f| is_analytic_file(f)).collect();
+    if analytic.is_empty() {
+        return;
+    }
+    for (name, line) in &variants {
+        let replicated = analytic
+            .iter()
+            .any(|f| has_nontest_seq(f, &["Phase", "::", name.as_str()]));
+        if !replicated {
+            let msg = format!(
+                "`Phase::{name}` is not replicated by the analytic ledgers (`analytic_ledger`/`grid_analytic_ledger`): add its analytic treatment (see `analytic_phase_replica`)"
+            );
+            pf.diag(diags, *line, Rule::PhaseCoverage, msg);
+        }
+    }
+}
+
+/// Rule `ledger-replica` (cross-file): every `CommStats`-typed field of
+/// `struct Ledger` must be referenced (`.field`) in the non-test region
+/// of an analytic-ledger file.
+pub fn ledger_replica(files: &[FileCtx], diags: &mut Vec<Diagnostic>) {
+    let Some(lf) = files
+        .iter()
+        .find(|f| find_seq(&f.toks, &["struct", "Ledger", "{"], 0).is_some())
+    else {
+        return;
+    };
+    let open = find_seq(&lf.toks, &["struct", "Ledger", "{"], 0).unwrap() + 2;
+    let fields = parse_comm_fields(&lf.toks, open);
+    let analytic: Vec<&FileCtx> = files.iter().filter(|f| is_analytic_file(f)).collect();
+    if fields.is_empty() || analytic.is_empty() {
+        return;
+    }
+    for (name, line) in fields {
+        let replicated = analytic
+            .iter()
+            .any(|f| has_nontest_seq(f, &[".", name.as_str()]));
+        if !replicated {
+            let msg = format!(
+                "`Ledger.{name}` is a CommStats counter with no analytic replica: `analytic_ledger`/`grid_analytic_ledger` never assign or read it, so ledger cross-validation cannot cover it"
+            );
+            lf.diag(diags, line, Rule::LedgerReplica, msg);
+        }
+    }
+}
+
+/// True if `seq` occurs in `f`'s non-test region.
+fn has_nontest_seq(f: &FileCtx, seq: &[&str]) -> bool {
+    let mut from = 0;
+    while let Some(i) = find_seq(&f.toks, seq, from) {
+        if !f.is_test_line(f.toks[i].line) {
+            return true;
+        }
+        from = i + 1;
+    }
+    false
+}
+
+/// True for files that *define* the analytic replicas.
+fn is_analytic_file(f: &FileCtx) -> bool {
+    find_seq(&f.toks, &["fn", "analytic_ledger"], 0).is_some()
+        || find_seq(&f.toks, &["fn", "grid_analytic_ledger"], 0).is_some()
+}
+
+/// Depth-1 variant names (with lines) of the enum whose `{` is at
+/// `open`. Skips `#[…]` attributes and variant payloads.
+fn parse_variants(t: &[Tok], open: usize) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    let mut depth = 1i64;
+    let mut expect = true;
+    let mut i = open + 1;
+    while i < t.len() && depth > 0 {
+        let s = t[i].text.as_str();
+        match s {
+            "{" | "(" | "[" => {
+                depth += 1;
+                i += 1;
+            }
+            "}" | ")" | "]" => {
+                depth -= 1;
+                i += 1;
+            }
+            "#" if depth == 1 && i + 1 < t.len() && t[i + 1].text == "[" => {
+                i = skip_balanced(t, i + 1);
+            }
+            "," if depth == 1 => {
+                expect = true;
+                i += 1;
+            }
+            _ => {
+                if depth == 1 && expect && is_ident(s) {
+                    out.push((s.to_string(), t[i].line));
+                    expect = false;
+                }
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Depth-1 fields of the struct whose `{` is at `open` whose type
+/// mentions `CommStats`.
+fn parse_comm_fields(t: &[Tok], open: usize) -> Vec<(String, usize)> {
+    let close = skip_balanced(t, open) - 1;
+    let mut out = Vec::new();
+    let mut depth = 1i64;
+    let mut i = open + 1;
+    while i < close {
+        let s = t[i].text.as_str();
+        match s {
+            "{" | "(" | "[" => depth += 1,
+            "}" | ")" | "]" => depth -= 1,
+            _ if depth == 1 && is_ident(s) && i + 1 < close && t[i + 1].text == ":" => {
+                let name = s.to_string();
+                let line = t[i].line;
+                let mut j = i + 2;
+                let mut d2 = 0i64;
+                let mut has = false;
+                while j < close {
+                    match t[j].text.as_str() {
+                        "{" | "(" | "[" | "<" => d2 += 1,
+                        "}" | ")" | "]" | ">" => d2 -= 1,
+                        "," if d2 <= 0 => break,
+                        "CommStats" => has = true,
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                if has {
+                    out.push((name, line));
+                }
+                i = j;
+                continue;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Token range `(start, end)` of the body of the first `fn name` in `t`.
+fn fn_body(t: &[Tok], name: &str) -> Option<(usize, usize)> {
+    let fi = find_seq(t, &["fn", name], 0)?;
+    let open = find_seq(t, &["{"], fi)?;
+    Some((open + 1, skip_balanced(t, open) - 1))
+}
+
+/// Resolve an array-length token: a numeric literal, or a `const NAME:
+/// usize = <number>;` defined in the same file.
+fn resolve_const(t: &[Tok], text: &str) -> Option<usize> {
+    if let Ok(n) = text.parse::<usize>() {
+        return Some(n);
+    }
+    let ci = find_seq(t, &["const", text, ":", "usize", "="], 0)?;
+    t[ci + 5].text.parse::<usize>().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::FileCtx;
+
+    fn ctx(rel: &str, src: &str) -> FileCtx {
+        let mut diags = Vec::new();
+        FileCtx::build(rel.to_string(), rel.to_string(), src, &mut diags)
+    }
+
+    fn run_single(rel: &str, src: &str) -> Vec<Diagnostic> {
+        let mut diags = Vec::new();
+        let f = ctx(rel, src);
+        map_order(&f, &mut diags);
+        ambient_nondet(&f, &mut diags);
+        unsafe_safety(&f, &mut diags);
+        diags
+    }
+
+    #[test]
+    fn map_iteration_flagged_in_det_module() {
+        let src = "use std::collections::HashMap;\n\
+                   fn f(m: &HashMap<u32, u32>) -> u32 {\n\
+                   \x20   m.values().sum()\n\
+                   }\n";
+        let d = run_single("gram/x.rs", src);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, Rule::MapOrder);
+        assert_eq!(d[0].line, 3);
+    }
+
+    #[test]
+    fn keyed_lookup_is_free() {
+        let src = "use std::collections::HashMap;\n\
+                   fn f(m: &HashMap<u32, u32>) -> Option<&u32> {\n\
+                   \x20   m.get(&1)\n\
+                   }\n";
+        assert!(run_single("gram/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn for_loop_over_map_flagged() {
+        let src = "use std::collections::HashSet;\n\
+                   fn f(s: &HashSet<u32>) -> u32 {\n\
+                   \x20   let mut acc = 0;\n\
+                   \x20   for k in s {\n\
+                   \x20       acc ^= *k;\n\
+                   \x20   }\n\
+                   \x20   acc\n\
+                   }\n";
+        let d = run_single("solvers/x.rs", src);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].line, 4);
+    }
+
+    #[test]
+    fn det_ok_waives_map_order() {
+        let src = "use std::collections::HashMap;\n\
+                   fn f(m: &HashMap<u32, u32>) -> u32 {\n\
+                   \x20   // det-ok: summation is order-independent\n\
+                   \x20   m.values().sum()\n\
+                   }\n";
+        assert!(run_single("gram/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn vec_iteration_is_free() {
+        let src = "fn f(v: &[u32]) -> u32 {\n\
+                   \x20   v.iter().sum()\n\
+                   }\n";
+        assert!(run_single("gram/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn untyped_constructor_let_is_tracked() {
+        let src = "use std::collections::HashMap;\n\
+                   fn f() -> u32 {\n\
+                   \x20   let mut m = HashMap::new();\n\
+                   \x20   m.insert(1u32, 2u32);\n\
+                   \x20   m.keys().sum()\n\
+                   }\n";
+        let d = run_single("comm/x.rs", src);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].line, 5);
+    }
+
+    #[test]
+    fn non_det_module_map_iteration_is_free() {
+        let src = "use std::collections::HashMap;\n\
+                   fn f(m: &HashMap<u32, u32>) -> u32 {\n\
+                   \x20   m.values().sum()\n\
+                   }\n";
+        assert!(run_single("data/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn ambient_clock_flagged_outside_timing_modules() {
+        let src = "fn f() -> std::time::Instant {\n\
+                   \x20   std::time::Instant::now()\n\
+                   }\n";
+        let d = run_single("sparse/x.rs", src);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, Rule::AmbientNondet);
+        assert!(run_single("util/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn ambient_in_test_region_is_free() {
+        let src = "fn f() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   \x20   fn t() { let _ = std::time::Instant::now(); }\n\
+                   }\n";
+        assert!(run_single("sparse/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_requires_safety_comment() {
+        let bad = "fn f(p: *const u8) -> u8 {\n\
+                   \x20   unsafe { *p }\n\
+                   }\n";
+        let d = run_single("parallel/x.rs", bad);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, Rule::UnsafeSafety);
+        let good = "fn f(p: *const u8) -> u8 {\n\
+                    \x20   // SAFETY: caller guarantees p is valid.\n\
+                    \x20   unsafe { *p }\n\
+                    }\n";
+        assert!(run_single("parallel/x.rs", good).is_empty());
+    }
+
+    const MINI_COSTMODEL: &str = "pub enum Phase {\n\
+                                  \x20   A,\n\
+                                  \x20   B,\n\
+                                  }\n\
+                                  impl Phase {\n\
+                                  \x20   pub const ALL: [Phase; 2] = [Phase::A, Phase::B];\n\
+                                  \x20   pub fn name(&self) -> &'static str {\n\
+                                  \x20       match self {\n\
+                                  \x20           Phase::A => \"a\",\n\
+                                  \x20           Phase::B => \"b\",\n\
+                                  \x20       }\n\
+                                  \x20   }\n\
+                                  }\n\
+                                  pub struct CommStats;\n\
+                                  pub struct Ledger {\n\
+                                  \x20   pub comm: CommStats,\n\
+                                  \x20   pub comm_posted: CommStats,\n\
+                                  }\n\
+                                  impl M {\n\
+                                  \x20   pub fn predict(&self) {\n\
+                                  \x20       for ph in Phase::ALL {}\n\
+                                  \x20   }\n\
+                                  }\n";
+
+    #[test]
+    fn phase_and_ledger_rules_clean_on_complete_tree() {
+        let scaling = "pub fn analytic_ledger() {\n\
+                       \x20   l.add(Phase::A, 1.0);\n\
+                       \x20   l.add(Phase::B, 1.0);\n\
+                       \x20   l.comm = x;\n\
+                       \x20   l.comm_posted = y;\n\
+                       }\n";
+        let files = vec![
+            ctx("costmodel/mod.rs", MINI_COSTMODEL),
+            ctx("coordinator/scaling.rs", scaling),
+        ];
+        let mut diags = Vec::new();
+        phase_coverage(&files, &mut diags);
+        ledger_replica(&files, &mut diags);
+        assert!(diags.is_empty(), "unexpected: {diags:?}");
+    }
+
+    #[test]
+    fn missing_replicas_are_flagged() {
+        // No Phase::B reference and no comm_posted assignment.
+        let scaling = "pub fn analytic_ledger() {\n\
+                       \x20   l.add(Phase::A, 1.0);\n\
+                       \x20   l.comm = x;\n\
+                       }\n";
+        let files = vec![
+            ctx("costmodel/mod.rs", MINI_COSTMODEL),
+            ctx("coordinator/scaling.rs", scaling),
+        ];
+        let mut diags = Vec::new();
+        phase_coverage(&files, &mut diags);
+        ledger_replica(&files, &mut diags);
+        assert_eq!(diags.len(), 2, "{diags:?}");
+        let phase_hit = diags
+            .iter()
+            .any(|d| d.rule == Rule::PhaseCoverage && d.message.contains("Phase::B"));
+        let ledger_hit = diags
+            .iter()
+            .any(|d| d.rule == Rule::LedgerReplica && d.message.contains("comm_posted"));
+        assert!(phase_hit && ledger_hit, "{diags:?}");
+    }
+
+    #[test]
+    fn variant_missing_from_all_is_flagged() {
+        let src = "pub enum Phase { A, B }\n\
+                   impl Phase {\n\
+                   \x20   pub const ALL: [Phase; 1] = [Phase::A];\n\
+                   \x20   pub fn name(&self) -> &'static str {\n\
+                   \x20       match self { Phase::A => \"a\", Phase::B => \"b\" }\n\
+                   \x20   }\n\
+                   \x20   pub fn predict(&self) { for ph in Phase::ALL {} }\n\
+                   }\n";
+        let files = vec![ctx("costmodel/mod.rs", src)];
+        let mut diags = Vec::new();
+        phase_coverage(&files, &mut diags);
+        let missing = diags
+            .iter()
+            .any(|d| d.message.contains("missing from `Phase::ALL`"));
+        let count = diags.iter().any(|d| d.message.contains("declares 1 phases"));
+        assert!(missing && count, "{diags:?}");
+    }
+
+    #[test]
+    fn nphase_const_indirection_resolves() {
+        let src = "pub enum Phase { A, B }\n\
+                   const NPHASE: usize = 2;\n\
+                   impl Phase {\n\
+                   \x20   pub const ALL: [Phase; NPHASE] = [Phase::A, Phase::B];\n\
+                   \x20   pub fn name(&self) -> &'static str {\n\
+                   \x20       match self { Phase::A => \"a\", Phase::B => \"b\" }\n\
+                   \x20   }\n\
+                   \x20   pub fn predict(&self) { for ph in Phase::ALL {} }\n\
+                   }\n";
+        let files = vec![ctx("costmodel/mod.rs", src)];
+        let mut diags = Vec::new();
+        phase_coverage(&files, &mut diags);
+        assert!(diags.is_empty(), "unexpected: {diags:?}");
+    }
+}

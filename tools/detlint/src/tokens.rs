@@ -1,0 +1,149 @@
+//! Flat token stream over the code side of the line model.
+//!
+//! Tokens are identifiers/numbers (maximal `[A-Za-z0-9_]+` runs), the
+//! two-char sequences `::` and `=>`, and single punctuation chars. String
+//! and char literal contents were already blanked by [`crate::lex`], so
+//! only their delimiters appear here. Each token remembers its 1-based
+//! source line, which is all the rules need for diagnostics.
+
+use crate::lex::LineInfo;
+
+/// One token with its 1-based source line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Tok {
+    /// 1-based line the token starts on.
+    pub line: usize,
+    /// Token text (identifier, number, `::`, or one punctuation char).
+    pub text: String,
+}
+
+/// Tokenize the code side of every line.
+pub fn tokenize(lines: &[LineInfo]) -> Vec<Tok> {
+    let mut toks = Vec::new();
+    for (idx, li) in lines.iter().enumerate() {
+        let line = idx + 1;
+        let chars: Vec<char> = li.code.chars().collect();
+        let mut i = 0usize;
+        while i < chars.len() {
+            let c = chars[i];
+            if c.is_whitespace() {
+                i += 1;
+            } else if c.is_alphanumeric() || c == '_' {
+                let start = i;
+                while i < chars.len() && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                    i += 1;
+                }
+                toks.push(Tok {
+                    line,
+                    text: chars[start..i].iter().collect(),
+                });
+            } else if c == ':' && chars.get(i + 1) == Some(&':') {
+                toks.push(Tok {
+                    line,
+                    text: "::".to_string(),
+                });
+                i += 2;
+            } else if c == '=' && chars.get(i + 1) == Some(&'>') {
+                toks.push(Tok {
+                    line,
+                    text: "=>".to_string(),
+                });
+                i += 2;
+            } else {
+                toks.push(Tok {
+                    line,
+                    text: c.to_string(),
+                });
+                i += 1;
+            }
+        }
+    }
+    toks
+}
+
+/// True if `text` looks like an identifier (starts with a letter or `_`).
+pub fn is_ident(text: &str) -> bool {
+    text.chars()
+        .next()
+        .is_some_and(|c| c.is_alphabetic() || c == '_')
+}
+
+/// Find the first occurrence of `seq` (by token text) at or after
+/// `from`, returning the index of its first token.
+pub fn find_seq(toks: &[Tok], seq: &[&str], from: usize) -> Option<usize> {
+    if seq.is_empty() || toks.len() < seq.len() {
+        return None;
+    }
+    for i in from..=toks.len() - seq.len() {
+        if seq.iter().enumerate().all(|(j, s)| toks[i + j].text == *s) {
+            return Some(i);
+        }
+    }
+    None
+}
+
+/// Index just past the bracket that closes the opener at `open` (which
+/// must be `(`, `[` or `{`). Brackets of all three kinds nest together.
+pub fn skip_balanced(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0i64;
+    let mut i = open;
+    while i < toks.len() {
+        match toks[i].text.as_str() {
+            "(" | "[" | "{" => depth += 1,
+            ")" | "]" | "}" => {
+                depth -= 1;
+                if depth == 0 {
+                    return i + 1;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    toks.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lex::split_lines;
+
+    fn toks(src: &str) -> Vec<Tok> {
+        tokenize(&split_lines(src))
+    }
+
+    fn texts(src: &str) -> Vec<String> {
+        toks(src).into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn joins_path_separator() {
+        assert_eq!(texts("Instant::now()"), vec!["Instant", "::", "now", "(", ")"]);
+    }
+
+    #[test]
+    fn splits_single_colon() {
+        assert_eq!(texts("m: HashMap"), vec!["m", ":", "HashMap"]);
+    }
+
+    #[test]
+    fn tracks_line_numbers() {
+        let t = toks("a\nb c\n");
+        assert_eq!((t[0].line, t[1].line, t[2].line), (1, 2, 2));
+    }
+
+    #[test]
+    fn string_contents_do_not_tokenize() {
+        assert_eq!(texts("f(\"Instant::now\")"), vec!["f", "(", "\"", "\"", ")"]);
+    }
+
+    #[test]
+    fn find_seq_and_skip_balanced() {
+        let t = toks("fn f(a: [u8; 3]) { g(1); }");
+        let open = find_seq(&t, &["("], 0).unwrap();
+        let close = skip_balanced(&t, open);
+        assert_eq!(t[close].text, "{");
+        assert!(find_seq(&t, &["fn", "f"], 0).is_some());
+        assert!(find_seq(&t, &["fn", "g"], 0).is_none());
+    }
+}

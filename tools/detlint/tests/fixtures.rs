@@ -1,0 +1,156 @@
+//! Fixture corpus + self-run coverage.
+//!
+//! Every directory under `fixtures/bad/` is a miniature source tree
+//! whose expected findings are marked in-line with `//~ <rule-id>`
+//! trailers; the linter must produce exactly those `(file, line, rule)`
+//! triples. Every directory under `fixtures/good/` must lint clean.
+//! Finally, the real `rust/src` tree must be diagnostic-free — the
+//! self-run that CI's `lint` lane repeats via the binary.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+type Finding = (String, usize, String);
+
+fn manifest_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn slashes(p: &Path) -> String {
+    p.components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+fn case_dirs(kind: &str) -> Vec<PathBuf> {
+    let root = manifest_dir().join("fixtures").join(kind);
+    let mut dirs: Vec<PathBuf> = fs::read_dir(&root)
+        .unwrap_or_else(|e| panic!("{}: {e}", root.display()))
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.is_dir())
+        .collect();
+    dirs.sort();
+    assert!(!dirs.is_empty(), "no fixture cases under {}", root.display());
+    dirs
+}
+
+fn rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            rs_files(&p, out);
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+/// Expected findings for one fixture case, parsed from `//~ <rule-id>`
+/// markers. The display path matches `lint_tree`'s joined form.
+fn expected_findings(case: &Path) -> Vec<Finding> {
+    let case_str = slashes(case);
+    let mut files = Vec::new();
+    rs_files(case, &mut files);
+    let mut out = Vec::new();
+    for path in files {
+        let rel = slashes(path.strip_prefix(case).unwrap());
+        let display = format!("{case_str}/{rel}");
+        let src = fs::read_to_string(&path).unwrap();
+        for (idx, line) in src.lines().enumerate() {
+            let mut rest = line;
+            while let Some(pos) = rest.find("//~") {
+                rest = &rest[pos + 3..];
+                let id = rest.split_whitespace().next().unwrap_or_else(|| {
+                    panic!("{display}:{}: bare //~ marker", idx + 1)
+                });
+                out.push((display.clone(), idx + 1, id.to_string()));
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+fn actual_findings(case: &Path) -> Vec<Finding> {
+    let mut out: Vec<Finding> = detlint::lint_tree(case)
+        .unwrap_or_else(|e| panic!("lint_tree({}): {e}", case.display()))
+        .into_iter()
+        .map(|d| (d.file, d.line, d.rule.id().to_string()))
+        .collect();
+    out.sort();
+    out
+}
+
+#[test]
+fn bad_fixtures_produce_exactly_the_marked_diagnostics() {
+    for case in case_dirs("bad") {
+        let expected = expected_findings(&case);
+        assert!(
+            !expected.is_empty(),
+            "bad fixture {} has no //~ markers",
+            case.display()
+        );
+        let actual = actual_findings(&case);
+        assert_eq!(
+            actual,
+            expected,
+            "diagnostic mismatch in fixture {}",
+            case.display()
+        );
+    }
+}
+
+#[test]
+fn good_fixtures_are_clean() {
+    for case in case_dirs("good") {
+        let actual = actual_findings(&case);
+        assert!(
+            actual.is_empty(),
+            "good fixture {} raised: {actual:?}",
+            case.display()
+        );
+    }
+}
+
+#[test]
+fn every_rule_has_bad_and_good_coverage() {
+    // Keep the corpus honest: each rule id must appear in at least one
+    // bad-fixture marker, and the good corpus must exercise the waiver
+    // and scoping paths (it is asserted clean above).
+    let mut marked: Vec<String> = Vec::new();
+    for case in case_dirs("bad") {
+        for (_, _, id) in expected_findings(&case) {
+            marked.push(id);
+        }
+    }
+    for rule in [
+        "map-order",
+        "ambient-nondet",
+        "phase-coverage",
+        "unsafe-safety",
+        "ledger-replica",
+        "det-ok-syntax",
+    ] {
+        assert!(
+            marked.iter().any(|m| m == rule),
+            "no bad fixture covers rule `{rule}`"
+        );
+    }
+}
+
+#[test]
+fn self_run_over_rust_src_is_clean() {
+    let src = manifest_dir().join("..").join("..").join("rust").join("src");
+    let diags = detlint::lint_tree(&src).expect("lint rust/src");
+    let rendered: Vec<String> = diags.iter().map(ToString::to_string).collect();
+    assert!(
+        rendered.is_empty(),
+        "determinism contract violations in rust/src:\n{}",
+        rendered.join("\n")
+    );
+}
