@@ -1,0 +1,122 @@
+//! Serve-side latency/throughput microbenchmarks: batched prediction
+//! through the gram engine (`kcd::serve::Predictor`) under the knobs the
+//! serve loop exposes — threads, kernel-row cache, batch size — plus the
+//! `.kcd` save/load path. The cache case uses a skewed (80/20) request
+//! stream, the regime the query-index LRU is built for; all knobs are
+//! wall-time-only, so every variant returns the same bits (pinned by
+//! `rust/tests/serve_props.rs`) and the interesting number is seconds.
+//!
+//! Run: `cargo bench --bench serve_latency` (`--quick` for CI sizing).
+
+use kcd::bench_harness::{bench, black_box, quick_mode, section, BenchConfig};
+use kcd::costmodel::Ledger;
+use kcd::data::{gen_dense_classification, gen_uniform_sparse, SynthParams, Task};
+use kcd::kernelfn::Kernel;
+use kcd::model::SvmModel;
+use kcd::rng::Pcg;
+use kcd::serve::{PredictOptions, Predictor};
+
+fn main() {
+    let quick = quick_mode();
+    let cfg = BenchConfig::default();
+    let (m, q) = if quick { (200, 48) } else { (2000, 256) };
+
+    // Model: dense training rows with a dual that keeps ~2/3 of them.
+    let ds = gen_dense_classification(m, 32, 0.02, 7);
+    let alpha: Vec<f64> = (0..m)
+        .map(|i| if i % 3 == 0 { 0.0 } else { ((i * 5) % 11) as f64 / 11.0 })
+        .collect();
+    let model = SvmModel::from_dual(&ds, &alpha, Kernel::paper_rbf());
+    let queries = gen_uniform_sparse(
+        SynthParams {
+            m: q,
+            n: 32,
+            density: 0.5,
+            seed: 11,
+        },
+        Task::Classification,
+    )
+    .a;
+
+    // Skewed stream: 80% of requests hit 20% of the query rows.
+    let hot = (q / 5).max(1);
+    let mut rng = Pcg::new(0xbeef, 0);
+    let stream: Vec<usize> = (0..4 * q)
+        .map(|_| {
+            if rng.next_f64() < 0.8 {
+                rng.gen_range(0, hot)
+            } else {
+                rng.gen_range(0, queries.nrows())
+            }
+        })
+        .collect();
+
+    section("serve latency — engine-routed batched prediction");
+    for threads in [1, 4] {
+        for (tag, cache_rows) in [("cold", 0), ("lru-64", 64)] {
+            let opts = PredictOptions {
+                threads,
+                cache_rows,
+                batch: 16,
+            };
+            let r = bench(
+                &format!(
+                    "predict_stream {} reqs t={threads} {tag} batch=16",
+                    stream.len()
+                ),
+                &cfg,
+                || {
+                    let mut p = Predictor::new(
+                        model.support_vectors(),
+                        model.coefficients(),
+                        model.kernel(),
+                        &queries,
+                        &opts,
+                    );
+                    black_box(p.predict_stream(&stream, opts.batch, &mut Ledger::new()))
+                },
+            );
+            println!(
+                "    → {:.0} req/s end to end",
+                stream.len() as f64 / r.median()
+            );
+        }
+    }
+
+    section("serve latency — batch-size sweep (t=1, warm cache)");
+    for batch in [1, 16, 0] {
+        let opts = PredictOptions {
+            threads: 1,
+            cache_rows: 64,
+            batch,
+        };
+        let mut p = Predictor::new(
+            model.support_vectors(),
+            model.coefficients(),
+            model.kernel(),
+            &queries,
+            &opts,
+        );
+        // Prime the cache once so the sweep measures the steady state.
+        black_box(p.predict_stream(&stream, opts.batch, &mut Ledger::new()));
+        bench(
+            &format!("predict_stream batch={batch} (0 = single batch)"),
+            &cfg,
+            || black_box(p.predict_stream(&stream, opts.batch, &mut Ledger::new())),
+        );
+    }
+
+    section("serve latency — .kcd save/load roundtrip");
+    let path = std::env::temp_dir().join("kcd_serve_latency_bench.kcd");
+    bench("save_kcd", &cfg, || model.save_kcd(&path).unwrap());
+    let r = bench("load_kcd", &cfg, || {
+        black_box(SvmModel::load_kcd(&path).unwrap().n_support())
+    });
+    let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "    → {bytes} bytes, {:.1} MB/s load",
+        bytes as f64 / r.median() / 1e6
+    );
+
+    println!("\nserve_latency done ✓");
+}

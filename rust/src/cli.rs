@@ -53,6 +53,10 @@ const KNOWN_FLAGS: &[(&str, bool /* takes a value */)] = &[
     ("t-max", true),
     ("top", true),
     ("config", true),
+    ("save", true),
+    ("model", true),
+    ("requests", true),
+    ("batch", true),
     ("csv", false),
     ("json", false),
     ("auto-tune", false),
@@ -177,6 +181,11 @@ COMMANDS:
   tune          Auto-tune (pr, pc, t, s) for a machine profile from the
                 cost model; ranked plan with a latency/bandwidth/compute
                 split per candidate.
+  predict       Score a request stream against a saved .kcd model once.
+  serve         Request/response loop over a saved .kcd model: LIBSVM-style
+                request lines in (file or stdin), response lines plus a
+                latency/throughput report out; batches route through the
+                same gram engine (threads + kernel-row cache) as training.
   datasets      List the paper dataset registry.
   artifacts-check  Verify PJRT artifacts load and execute.
 
@@ -242,6 +251,19 @@ COMMON FLAGS:
   --json            tune: emit the machine-readable JSON report.
   --auto-tune       scaling: append the tuner's predicted-best
                     (pr, pc, t, s) row per sweep point.
+  --save <file>     train-svm / train-krr: persist the trained model to
+                    a versioned binary .kcd file (bitwise-preserving;
+                    K-SVM saves keep only the support vectors, and
+                    sharded-grid runs reassemble the retained rows from
+                    their block-cyclic cells first).
+  --model <file>    predict / serve: the .kcd model to score against.
+  --requests <file> predict / serve: line-delimited request stream —
+                    optional label, then 1-based ascending index:value
+                    features ('-' or absent = stdin; blank lines and
+                    '#' comments skipped).
+  --batch <n>       predict / serve: requests per engine batch; a pure
+                    wall-time knob, responses are bitwise-invariant to
+                    the split (0 = one batch)   [predict 0, serve 64]
   --csv             Emit CSV instead of markdown tables.
   --config <file>   TOML-subset config (flags override).
 
@@ -264,6 +286,8 @@ pub fn run(argv: Vec<String>) -> Result<String> {
         "datasets" => cmd_datasets(),
         "train-svm" => cmd_train_svm(&args),
         "train-krr" => cmd_train_krr(&args),
+        "predict" => cmd_predict(&args),
+        "serve" => cmd_serve(&args),
         "convergence" => cmd_convergence(&args),
         "scaling" => cmd_scaling(&args),
         "breakdown" => cmd_breakdown(&args),
@@ -287,6 +311,7 @@ fn load_config(args: &Args) -> Result<Config> {
         "dataset", "scale", "kernel", "problem", "c", "lambda", "b", "h", "s", "p", "algo",
         "machine", "seed", "gram-cache-rows", "threads", "grid", "grid-rows", "grid-storage",
         "row-block", "overlap", "mem-limit", "every", "measured-limit", "s-max", "t-max", "top",
+        "save", "model", "requests", "batch",
     ] {
         if let Some(v) = args.flag(key) {
             cfg.set(key, v);
@@ -578,6 +603,17 @@ fn cmd_train_svm(args: &Args) -> Result<String> {
             cs.bytes_saved()
         ));
     }
+    if let Some(path) = cfg_str(&cfg, "save")? {
+        let save_ds = save_dataset(&ds, &solver)?;
+        let model = crate::model::SvmModel::from_dual(&save_ds, &res.alpha, kernel);
+        model.save_kcd(std::path::Path::new(path))?;
+        out.push_str(&format!(
+            "model saved      = {path} ({} of {} rows kept as support vectors{})\n",
+            model.n_support(),
+            ds.m(),
+            save_tag(&solver),
+        ));
+    }
     Ok(out)
 }
 
@@ -598,7 +634,7 @@ fn cmd_train_krr(args: &Args) -> Result<String> {
     let mut oracle = LocalGram::new(ds.a.clone(), kernel);
     let astar = krr_exact(&mut oracle, &ds.y, lambda);
     let rel = crate::dense::rel_err(&res.alpha, &astar);
-    Ok(format!(
+    let mut out = format!(
         "dataset={} m={} n={} kernel={} b={b} λ={lambda} P={p} layout={} s={} H={} overlap={}\n\
          relative solution error = {rel:.6e}\n\
          projected time = {:.4e} s on {} (local wall {:.3}s)\n",
@@ -613,7 +649,59 @@ fn cmd_train_krr(args: &Args) -> Result<String> {
         res.projection.total_secs(),
         machine.name,
         res.wall_secs
-    ))
+    );
+    if let Some(path) = cfg_str(&cfg, "save")? {
+        let save_ds = save_dataset(&ds, &solver)?;
+        let model = crate::model::KrrModel::from_dual(&save_ds, &res.alpha, kernel, lambda);
+        model.save_kcd(std::path::Path::new(path))?;
+        out.push_str(&format!(
+            "model saved = {path} (all {} training rows retained{})\n",
+            ds.m(),
+            save_tag(&solver),
+        ));
+    }
+    Ok(out)
+}
+
+/// The training matrix a `--save` sees: replicated layouts hand back the
+/// dataset as-is; a sharded grid run reassembles the matrix from the
+/// block-cyclic cell shards each rank actually stores (bitwise-equal to
+/// the original — pinned in `serve::format` and
+/// `rust/tests/serve_props.rs`), so persistence exercises the same
+/// extraction path a real sharded deployment needs.
+fn save_dataset(ds: &Dataset, solver: &SolverSpec) -> Result<Dataset> {
+    let a = match solver.grid {
+        Some((pr, pc))
+            if matches!(solver.grid_storage, crate::gram::GridStorage::Sharded) =>
+        {
+            let cells = crate::serve::format::shard_cells(&ds.a, pr, pc, solver.row_block);
+            crate::serve::format::assemble_cells(
+                ds.m(),
+                ds.n(),
+                pr,
+                pc,
+                solver.row_block,
+                &cells,
+            )?
+        }
+        _ => ds.a.clone(),
+    };
+    Ok(Dataset {
+        name: ds.name.clone(),
+        a,
+        y: ds.y.clone(),
+        task: ds.task,
+    })
+}
+
+/// Suffix for the "model saved" line naming the extraction path.
+fn save_tag(solver: &SolverSpec) -> &'static str {
+    match solver.grid {
+        Some(_) if matches!(solver.grid_storage, crate::gram::GridStorage::Sharded) => {
+            ", rows reassembled from sharded grid cells"
+        }
+        _ => "",
+    }
 }
 
 /// Report tag for the layout: `1d`, `grid-PRxPC` (replicated cells) or
@@ -626,6 +714,118 @@ fn grid_tag(grid: Option<(usize, usize)>, storage: crate::gram::GridStorage) -> 
         },
         None => "1d".to_string(),
     }
+}
+
+/// Strictly read the serving knobs shared by `predict` and `serve`
+/// (threads, cache, batch). All three are pure wall-time knobs — the
+/// responses are bitwise identical for every combination.
+fn predict_opts_from(cfg: &Config, default_batch: usize) -> Result<crate::serve::PredictOptions> {
+    Ok(crate::serve::PredictOptions {
+        threads: threads_from(cfg)?,
+        cache_rows: cfg_usize(cfg, "gram-cache-rows")?.unwrap_or(0),
+        batch: cfg_usize(cfg, "batch")?.unwrap_or(default_batch),
+    })
+}
+
+/// The `--model` path (required for `predict` / `serve`).
+fn model_from(cfg: &Config) -> Result<&str> {
+    cfg_str(cfg, "model")?
+        .ok_or_else(|| anyhow!("invalid value for 'model': pass --model <file.kcd>"))
+}
+
+/// Read the request stream: `--requests <file>`, or stdin when the flag
+/// is absent or `-` (so `kcd serve` pipes without touching the network).
+fn read_requests(cfg: &Config) -> Result<String> {
+    match cfg_str(cfg, "requests")? {
+        Some(path) if path != "-" => std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("invalid value for 'requests': cannot read '{path}': {e}")),
+        _ => {
+            use std::io::Read;
+            let mut buf = String::new();
+            std::io::stdin()
+                .read_to_string(&mut buf)
+                .map_err(|e| anyhow!("invalid value for 'requests': stdin: {e}"))?;
+            Ok(buf)
+        }
+    }
+}
+
+fn cmd_predict(args: &Args) -> Result<String> {
+    let cfg = load_config(args)?;
+    let path = model_from(&cfg)?;
+    let model = crate::serve::LoadedModel::load(std::path::Path::new(path))?;
+    let reqs = crate::serve::parse_requests(&read_requests(&cfg)?, model.ncols())?;
+    let opts = predict_opts_from(&cfg, 0)?;
+    let mut ledger = crate::costmodel::Ledger::new();
+    let mut timer = crate::util::PhaseTimer::new();
+    let scores = timer.time(|| model.score(&reqs, &opts, &mut ledger));
+    let mut out = String::new();
+    for s in &scores {
+        out.push_str(&model.response_line(*s));
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "scored {} requests ({} unique) against {} model '{path}' in {:.4e} s\n",
+        reqs.len(),
+        reqs.unique(),
+        model.kind().name(),
+        timer.secs(),
+    ));
+    Ok(out)
+}
+
+fn cmd_serve(args: &Args) -> Result<String> {
+    let cfg = load_config(args)?;
+    let path = model_from(&cfg)?;
+    let model = crate::serve::LoadedModel::load(std::path::Path::new(path))?;
+    let reqs = crate::serve::parse_requests(&read_requests(&cfg)?, model.ncols())?;
+    let opts = predict_opts_from(&cfg, 64)?;
+    let mut out = format!(
+        "serving {} model '{path}': {} retained rows × {} features, {} kernel, \
+         batch={}, t={}, cache={}\n",
+        model.kind().name(),
+        model.nrows(),
+        model.ncols(),
+        model.kernel().name(),
+        opts.batch,
+        opts.threads,
+        opts.cache_rows,
+    );
+    // One predictor for the whole loop: the kernel-row cache carries
+    // hits across batches, exactly as a long-lived server would.
+    let mut predictor = model.predictor(&reqs.queries, &opts);
+    let mut ledger = crate::costmodel::Ledger::new();
+    let mut timer = crate::util::PhaseTimer::new();
+    let step = if opts.batch == 0 {
+        reqs.len().max(1)
+    } else {
+        opts.batch
+    };
+    for chunk in reqs.stream.chunks(step) {
+        let scores = timer.time(|| predictor.predict_indices(chunk, &mut ledger));
+        for s in scores {
+            out.push_str(&model.response_line(s));
+            out.push('\n');
+        }
+    }
+    let report = crate::coordinator::report::ServeReport {
+        requests: reqs.len(),
+        unique: reqs.unique(),
+        batches: timer.count() as usize,
+        batch: opts.batch,
+        kernel_flops: ledger.total_flops(),
+        cache: ledger.cache,
+        wall_secs: timer.secs(),
+    };
+    let t = crate::coordinator::report::serve_table(&report);
+    out.push_str(&if args.bool_flag("csv") { t.csv() } else { t.markdown() });
+    out.push_str(&format!(
+        "engine rate = {:.3} Gflop/s over {} kernel calls ({} rows)\n",
+        ledger.flops_per_sec(timer.secs()) / 1e9,
+        ledger.kernel_calls,
+        ledger.kernel_rows,
+    ));
+    Ok(out)
 }
 
 fn cmd_convergence(args: &Args) -> Result<String> {
@@ -1540,6 +1740,204 @@ mod tests {
                 "docs/CLI.md documents unknown flag --{name}"
             );
         }
+    }
+
+    /// The tentpole acceptance: `train-svm --save` persists a .kcd
+    /// model, `predict` scores it, and a sharded-grid save of the same
+    /// problem (rows reassembled from its cells) serves identical bits.
+    #[test]
+    fn train_save_then_predict_end_to_end() {
+        let dir = std::env::temp_dir().join("kcd_cli_serve_e2e");
+        std::fs::create_dir_all(&dir).unwrap();
+        let model = dir.join("svm.kcd");
+        let reqf = dir.join("req.txt");
+        std::fs::write(&reqf, "1:0.5 3:-0.25\n2:1.0\n# comment\n\n1:0.5 3:-0.25\n").unwrap();
+        let out = run(argv(&format!(
+            "train-svm --dataset diabetes --scale 0.1 --kernel rbf --h 200 --s 8 --p 2 \
+             --save {}",
+            model.display()
+        )))
+        .unwrap();
+        assert!(out.contains("model saved"), "{out}");
+        assert!(out.contains("support vectors"), "{out}");
+        let pred = run(argv(&format!(
+            "predict --model {} --requests {}",
+            model.display(),
+            reqf.display()
+        )))
+        .unwrap();
+        assert!(pred.contains("scored 3 requests (2 unique)"), "{pred}");
+        let labels: Vec<&str> = pred.lines().take(3).collect();
+        assert!(
+            labels.iter().all(|l| l.starts_with("+1 ") || l.starts_with("-1 ")),
+            "{pred}"
+        );
+        // Duplicate request lines score bitwise-identically.
+        assert_eq!(labels[0], labels[2], "{pred}");
+
+        // Grid 2x2 over P = 4 matches the 1D run over pc = 2 ranks
+        // bitwise, so the sharded-extraction save must serve the same
+        // responses as the replicated one.
+        let sharded = dir.join("svm_sharded.kcd");
+        let out2 = run(argv(&format!(
+            "train-svm --dataset diabetes --scale 0.1 --kernel rbf --h 200 --s 8 --p 4 \
+             --grid 2x2 --grid-storage sharded --save {}",
+            sharded.display()
+        )))
+        .unwrap();
+        assert!(out2.contains("reassembled from sharded grid cells"), "{out2}");
+        let pred2 = run(argv(&format!(
+            "predict --model {} --requests {}",
+            sharded.display(),
+            reqf.display()
+        )))
+        .unwrap();
+        assert_eq!(
+            labels,
+            pred2.lines().take(3).collect::<Vec<_>>(),
+            "sharded save must serve identical bits\n{pred}\n{pred2}"
+        );
+    }
+
+    #[test]
+    fn train_krr_save_then_predict() {
+        let dir = std::env::temp_dir().join("kcd_cli_serve_krr");
+        std::fs::create_dir_all(&dir).unwrap();
+        let model = dir.join("krr.kcd");
+        let reqf = dir.join("req.txt");
+        std::fs::write(&reqf, "1:0.5 2:0.25\n3:1.0\n").unwrap();
+        let out = run(argv(&format!(
+            "train-krr --dataset bodyfat --scale 0.3 --kernel linear --h 60 --b 4 --s 4 \
+             --save {}",
+            model.display()
+        )))
+        .unwrap();
+        assert!(out.contains("model saved"), "{out}");
+        assert!(out.contains("training rows retained"), "{out}");
+        let pred = run(argv(&format!(
+            "predict --model {} --requests {}",
+            model.display(),
+            reqf.display()
+        )))
+        .unwrap();
+        assert!(
+            pred.contains("scored 2 requests (2 unique) against krr model"),
+            "{pred}"
+        );
+        // K-RR responses are bare predicted targets, no ±1 label.
+        let first = pred.lines().next().unwrap();
+        assert!(first.parse::<f64>().is_ok(), "{pred}");
+    }
+
+    /// `kcd serve` drains the request loop through one predictor (the
+    /// cache carries across batches), reports the latency/throughput
+    /// table, and its responses are bitwise-invariant to the batch
+    /// split, the thread count and the cache.
+    #[test]
+    fn serve_reports_latency_table_and_is_batch_invariant() {
+        let dir = std::env::temp_dir().join("kcd_cli_serve_loop");
+        std::fs::create_dir_all(&dir).unwrap();
+        let model = dir.join("svm.kcd");
+        run(argv(&format!(
+            "train-svm --dataset diabetes --scale 0.1 --kernel rbf --h 200 --s 8 --p 2 \
+             --save {}",
+            model.display()
+        )))
+        .unwrap();
+        let reqf = dir.join("req.txt");
+        std::fs::write(&reqf, "1:0.5\n2:1.0\n1:0.5\n3:-1.5\n2:1.0\n1:0.5\n").unwrap();
+        let a = run(argv(&format!(
+            "serve --model {} --requests {} --batch 2 --gram-cache-rows 8",
+            model.display(),
+            reqf.display()
+        )))
+        .unwrap();
+        assert!(a.contains("serving svm model"), "{a}");
+        assert!(a.contains("req/s"), "{a}");
+        assert!(a.contains("engine rate"), "{a}");
+        let lines = |out: &str| {
+            out.lines()
+                .filter(|l| l.starts_with("+1 ") || l.starts_with("-1 "))
+                .map(String::from)
+                .collect::<Vec<_>>()
+        };
+        let la = lines(&a);
+        assert_eq!(la.len(), 6, "{a}");
+        // Repeats are bitwise copies (served from the cache).
+        assert_eq!(la[0], la[2]);
+        assert_eq!(la[2], la[5]);
+        assert_eq!(la[1], la[4]);
+        // Batch split, threads and cache are invisible in the bits.
+        let b = run(argv(&format!(
+            "serve --model {} --requests {} --batch 4 --threads 3",
+            model.display(),
+            reqf.display()
+        )))
+        .unwrap();
+        assert_eq!(la, lines(&b));
+        // CSV mode renders the same counters.
+        let c = run(argv(&format!(
+            "serve --model {} --requests {} --csv",
+            model.display(),
+            reqf.display()
+        )))
+        .unwrap();
+        assert!(c.contains("requests,unique"), "{c}");
+    }
+
+    #[test]
+    fn predict_and_serve_flags_are_strictly_validated() {
+        // Missing --model names the key (both commands).
+        for cmd in ["predict", "serve"] {
+            let err = run(argv(cmd)).unwrap_err();
+            assert!(format!("{err:#}").contains("'model'"), "{cmd}: {err:#}");
+        }
+        let dir = std::env::temp_dir().join("kcd_cli_serve_strict");
+        std::fs::create_dir_all(&dir).unwrap();
+        let model = dir.join("svm.kcd");
+        run(argv(&format!(
+            "train-svm --dataset diabetes --scale 0.1 --kernel rbf --h 120 --s 8 --p 2 \
+             --save {}",
+            model.display()
+        )))
+        .unwrap();
+        let reqf = dir.join("req.txt");
+        std::fs::write(&reqf, "1:0.5\n").unwrap();
+        let err = run(argv(&format!(
+            "predict --model {} --requests {} --batch 2.5",
+            model.display(),
+            reqf.display()
+        )))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("'batch'"), "{err:#}");
+        let err = run(argv(&format!(
+            "predict --model {} --requests {}/does-not-exist",
+            model.display(),
+            dir.display()
+        )))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("'requests'"), "{err:#}");
+        // A malformed request line names its line number.
+        let bad = dir.join("bad_req.txt");
+        std::fs::write(&bad, "1:0.5\n0:1\n").unwrap();
+        let err = run(argv(&format!(
+            "predict --model {} --requests {}",
+            model.display(),
+            bad.display()
+        )))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("request line 2"), "{err:#}");
+        // A truncated model file is a named hard error, never garbage.
+        let bytes = std::fs::read(&model).unwrap();
+        let trunc = dir.join("trunc.kcd");
+        std::fs::write(&trunc, &bytes[..bytes.len() - 5]).unwrap();
+        let err = run(argv(&format!(
+            "predict --model {} --requests {}",
+            trunc.display(),
+            reqf.display()
+        )))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
     }
 
     #[test]

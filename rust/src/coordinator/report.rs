@@ -1,7 +1,7 @@
 //! Report writers: markdown tables and CSV, shared by the CLI, the
 //! examples and the paper-figure benches.
 
-use crate::costmodel::Phase;
+use crate::costmodel::{CacheStats, Phase};
 
 use super::breakdown::BreakdownBar;
 use super::scaling::{Engine, SweepRow};
@@ -157,9 +157,112 @@ pub fn breakdown_table(bars: &[BreakdownBar]) -> Table {
     t
 }
 
+/// Counters collected by one `kcd serve` / `kcd predict` run, rendered
+/// through the same [`Table`] machinery as the training reports.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeReport {
+    /// Requests scored (stream length, counting repeats).
+    pub requests: usize,
+    /// Distinct query rows after request dedup.
+    pub unique: usize,
+    /// Engine batches issued.
+    pub batches: usize,
+    /// Requested batch size (0 = one batch for the whole stream).
+    pub batch: usize,
+    /// Flop-equivalents charged by the gram engine.
+    pub kernel_flops: f64,
+    /// Kernel-row cache counters from the prediction ledger.
+    pub cache: CacheStats,
+    /// Wall-clock seconds spent inside the prediction calls.
+    pub wall_secs: f64,
+}
+
+impl ServeReport {
+    /// Scored requests per wall-clock second (0 when degenerate).
+    pub fn requests_per_sec(&self) -> f64 {
+        if self.wall_secs > 0.0 {
+            self.requests as f64 / self.wall_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean per-batch latency in seconds (0 when no batch ran).
+    pub fn batch_latency_secs(&self) -> f64 {
+        if self.batches > 0 {
+            self.wall_secs / self.batches as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Serve counters → the one-row latency/throughput table printed after
+/// the request loop drains.
+pub fn serve_table(r: &ServeReport) -> Table {
+    let mut t = Table::new(vec![
+        "requests", "unique", "batch", "batches", "wall (s)", "req/s",
+        "batch lat (s)", "Gflop/s", "cache hit", "words saved",
+    ]);
+    t.row(vec![
+        r.requests.to_string(),
+        r.unique.to_string(),
+        if r.batch == 0 {
+            "all".to_string()
+        } else {
+            r.batch.to_string()
+        },
+        r.batches.to_string(),
+        format!("{:.4e}", r.wall_secs),
+        format!("{:.1}", r.requests_per_sec()),
+        format!("{:.4e}", r.batch_latency_secs()),
+        format!(
+            "{:.3}",
+            if r.wall_secs > 0.0 {
+                r.kernel_flops / r.wall_secs / 1e9
+            } else {
+                0.0
+            }
+        ),
+        format!("{:.1}%", r.cache.hit_rate() * 100.0),
+        r.cache.words_saved.to_string(),
+    ]);
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn serve_table_has_one_row_and_sane_rates() {
+        let r = ServeReport {
+            requests: 10,
+            unique: 7,
+            batches: 5,
+            batch: 2,
+            kernel_flops: 4.0e9,
+            cache: CacheStats::default(),
+            wall_secs: 2.0,
+        };
+        assert!((r.requests_per_sec() - 5.0).abs() < 1e-12);
+        assert!((r.batch_latency_secs() - 0.4).abs() < 1e-12);
+        let md = serve_table(&r).markdown();
+        assert_eq!(md.lines().count(), 3);
+        assert!(md.contains("req/s"));
+        let zero = ServeReport {
+            requests: 0,
+            unique: 0,
+            batches: 0,
+            batch: 0,
+            kernel_flops: 0.0,
+            cache: CacheStats::default(),
+            wall_secs: 0.0,
+        };
+        assert_eq!(zero.requests_per_sec(), 0.0);
+        assert_eq!(zero.batch_latency_secs(), 0.0);
+        assert!(serve_table(&zero).markdown().contains("all"));
+    }
 
     #[test]
     fn markdown_is_aligned_and_complete() {

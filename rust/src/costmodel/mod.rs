@@ -248,6 +248,18 @@ impl Ledger {
         self.flops.iter().sum()
     }
 
+    /// Achieved compute rate over an externally measured wall-clock
+    /// interval (the serve loop reports Gflop/s from this; training
+    /// reports use the per-phase projections instead). Zero when the
+    /// interval is degenerate.
+    pub fn flops_per_sec(&self, wall_secs: f64) -> f64 {
+        if wall_secs > 0.0 {
+            self.total_flops() / wall_secs
+        } else {
+            0.0
+        }
+    }
+
     /// Measured wall-clock seconds of `phase` on this rank.
     pub fn wall_secs(&self, phase: Phase) -> f64 {
         self.wall[phase.idx()].secs()

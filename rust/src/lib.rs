@@ -34,8 +34,14 @@
 //!   solver, and the convergence metrics (duality gap, relative error).
 //! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
 //!   gram-block artifacts (`artifacts/*.hlo.txt`).
-//! * [`model`] — trained-model API: prediction, evaluation, JSON
-//!   persistence.
+//! * [`model`] — trained-model API: prediction, evaluation, JSON and
+//!   binary `.kcd` persistence.
+//! * [`serve`] — model serving: the versioned `.kcd` format
+//!   (support-vector-compacted K-SVM saves, extraction from sharded
+//!   grid cells) and batched prediction routed through the gram engine
+//!   (`ProductStage` + `ParallelProduct` + the kernel-row cache), with
+//!   predictions bitwise identical to the naive reference and invariant
+//!   to threads, cache, and batch split.
 //! * [`coordinator`] — experiment configs, the launcher, phase timers, and
 //!   the strong-scaling / runtime-breakdown harnesses behind the CLI and
 //!   the paper-figure benches.
@@ -62,6 +68,7 @@ pub mod model;
 pub mod parallel;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod solvers;
 pub mod sparse;
 pub mod testkit;

@@ -7,15 +7,30 @@
 //!   `(1/λ) Σ α_i K(a_i, x)` (from the dual stationarity
 //!   `x* = (1/λ)Aᵀα*` of the paper's K-RR formulation (2)).
 //!
-//! Both serialize to a JSON document (via the in-crate [`crate::util::json`]
-//! writer) so models survive process restarts.
+//! Both serialize two ways: a JSON document (via the in-crate
+//! [`crate::util::json`] writer — human-inspectable, value-preserving to
+//! shortest-roundtrip precision) and the versioned binary `.kcd` format
+//! ([`crate::serve::format`] — *bitwise*-preserving, which is what the
+//! serving determinism contract requires). K-SVM saves are
+//! support-vector-compacted (α = 0 rows never reach the model); K-RR
+//! models always retain every training row.
+//!
+//! Prediction comes in two equivalent flavors: the naive rowwise
+//! reference ([`SvmModel::decision_function`] / [`KrrModel::predict`])
+//! and the engine-routed [`SvmModel::predict_batch`] /
+//! [`KrrModel::predict_batch`], which push query batches through
+//! [`crate::serve::Predictor`] (threads + kernel-row cache) and are
+//! bitwise identical to the reference for every options combination.
 
 #![forbid(unsafe_code)]
 
 use anyhow::{anyhow, Result};
 
+use crate::costmodel::Ledger;
 use crate::data::Dataset;
 use crate::kernelfn::Kernel;
+use crate::serve::format::{self, ModelKind, RawModel};
+use crate::serve::{PredictOptions, Predictor};
 use crate::sparse::Csr;
 use crate::util::json::Json;
 
@@ -54,6 +69,16 @@ impl SvmModel {
     /// The kernel the model was trained with.
     pub fn kernel(&self) -> Kernel {
         self.kernel
+    }
+
+    /// The retained support-vector rows.
+    pub fn support_vectors(&self) -> &Csr {
+        &self.sv
+    }
+
+    /// `α_i y_i` per support vector (ascending original-row order).
+    pub fn coefficients(&self) -> &[f64] {
+        &self.coef
     }
 
     /// Decision values `f(x_r)` for each row of `x`.
@@ -121,6 +146,45 @@ impl SvmModel {
         let text = std::fs::read_to_string(path).map_err(|e| anyhow!("load: {e}"))?;
         Self::from_json(&Json::parse(&text).map_err(|e| anyhow!("parse: {e}"))?)
     }
+
+    /// Save to the binary `.kcd` format (bitwise round trip; the rows
+    /// are already support-vector-compacted by [`SvmModel::from_dual`]).
+    pub fn save_kcd(&self, path: &std::path::Path) -> Result<()> {
+        format::write_model(path, ModelKind::Svm, self.kernel, 0.0, &self.sv, &self.coef)
+    }
+
+    /// Load a `.kcd` model file, rejecting non-SVM kinds.
+    pub fn load_kcd(path: &std::path::Path) -> Result<SvmModel> {
+        let raw = format::read_model(path)?;
+        anyhow::ensure!(
+            raw.kind == ModelKind::Svm,
+            "invalid value for 'model.kind': expected an svm model, got {}",
+            raw.kind.name()
+        );
+        Ok(Self::from_kcd(raw))
+    }
+
+    /// Assemble from a validated `.kcd` payload.
+    pub(crate) fn from_kcd(raw: RawModel) -> SvmModel {
+        let sv_norms = raw.mat.row_norms_sq();
+        SvmModel {
+            sv: raw.mat,
+            coef: raw.coef,
+            kernel: raw.kernel,
+            sv_norms,
+        }
+    }
+
+    /// Engine-routed decision values: bitwise identical to
+    /// [`SvmModel::decision_function`] for every [`PredictOptions`]
+    /// combination, but computed through the gram engine — worker
+    /// threads split the batch and repeated queries hit the kernel-row
+    /// cache. Costs land in `ledger` under the training phases.
+    pub fn predict_batch(&self, x: &Csr, opts: &PredictOptions, ledger: &mut Ledger) -> Vec<f64> {
+        let mut p = Predictor::new(&self.sv, &self.coef, self.kernel, x, opts);
+        let stream: Vec<usize> = (0..x.nrows()).collect();
+        p.predict_stream(&stream, opts.batch, ledger)
+    }
 }
 
 /// A trained kernel-ridge-regression model.
@@ -153,6 +217,22 @@ impl KrrModel {
     /// The ridge penalty the model was trained with.
     pub fn lambda(&self) -> f64 {
         self.lambda
+    }
+
+    /// The kernel the model was trained with.
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
+    }
+
+    /// The full retained training matrix (K-RR duals are dense — rows
+    /// are **never** compacted, even when some `α_i` are zero).
+    pub fn train_matrix(&self) -> &Csr {
+        &self.train
+    }
+
+    /// `α_i / λ` per training row.
+    pub fn coefficients(&self) -> &[f64] {
+        &self.coef
     }
 
     /// Predicted targets for each row of `x`.
@@ -212,6 +292,51 @@ impl KrrModel {
     pub fn load(path: &std::path::Path) -> Result<KrrModel> {
         let text = std::fs::read_to_string(path).map_err(|e| anyhow!("load: {e}"))?;
         Self::from_json(&Json::parse(&text).map_err(|e| anyhow!("parse: {e}"))?)
+    }
+
+    /// Save to the binary `.kcd` format (bitwise round trip; all
+    /// training rows retained).
+    pub fn save_kcd(&self, path: &std::path::Path) -> Result<()> {
+        format::write_model(
+            path,
+            ModelKind::Krr,
+            self.kernel,
+            self.lambda,
+            &self.train,
+            &self.coef,
+        )
+    }
+
+    /// Load a `.kcd` model file, rejecting non-KRR kinds.
+    pub fn load_kcd(path: &std::path::Path) -> Result<KrrModel> {
+        let raw = format::read_model(path)?;
+        anyhow::ensure!(
+            raw.kind == ModelKind::Krr,
+            "invalid value for 'model.kind': expected a krr model, got {}",
+            raw.kind.name()
+        );
+        Ok(Self::from_kcd(raw))
+    }
+
+    /// Assemble from a validated `.kcd` payload.
+    pub(crate) fn from_kcd(raw: RawModel) -> KrrModel {
+        let train_norms = raw.mat.row_norms_sq();
+        KrrModel {
+            train: raw.mat,
+            coef: raw.coef,
+            kernel: raw.kernel,
+            train_norms,
+            lambda: raw.lambda,
+        }
+    }
+
+    /// Engine-routed predictions: bitwise identical to
+    /// [`KrrModel::predict`] for every [`PredictOptions`] combination
+    /// (threads, cache, batch split) — see [`crate::serve`].
+    pub fn predict_batch(&self, x: &Csr, opts: &PredictOptions, ledger: &mut Ledger) -> Vec<f64> {
+        let mut p = Predictor::new(&self.train, &self.coef, self.kernel, x, opts);
+        let stream: Vec<usize> = (0..x.nrows()).collect();
+        p.predict_stream(&stream, opts.batch, ledger)
     }
 }
 

@@ -1,0 +1,532 @@
+//! The versioned `.kcd` on-disk model format.
+//!
+//! A trained model is exactly the data the serving path needs: the kernel
+//! configuration, the coefficient vector, and the retained training rows
+//! (support vectors for K-SVM, the full training set for K-RR). The rows
+//! are serialized with the same fragment kernels the sharded grid layout
+//! exchanges at runtime — [`crate::sparse::Csr::pack_rows`] writes the
+//! `(column, value)` stream and [`crate::sparse::Csr::from_packed`]
+//! rebuilds it *bitwise verbatim* — so a save → load round trip cannot
+//! perturb a single prediction bit.
+//!
+//! Layout (all integers and floats little-endian; one flat byte stream):
+//!
+//! | field     | type        | meaning                                   |
+//! |-----------|-------------|-------------------------------------------|
+//! | magic     | 8 bytes     | `KCDMODEL`                                |
+//! | version   | u32         | format version (currently 1)              |
+//! | kind      | u32         | 0 = K-SVM, 1 = K-RR                       |
+//! | kernel    | u32         | 0 = linear, 1 = poly, 2 = rbf             |
+//! | kparam1   | f64         | poly `c` / rbf `sigma` (0 for linear)     |
+//! | kparam2   | f64         | poly degree `d` (0 otherwise)             |
+//! | lambda    | f64         | K-RR ridge penalty (0 for K-SVM)          |
+//! | rows      | u64         | retained training rows                    |
+//! | cols      | u64         | feature dimension                         |
+//! | nnz       | u64         | total stored entries                      |
+//! | coef      | rows × f64  | `α_i y_i` (K-SVM) / `α_i / λ` (K-RR)      |
+//! | row_nnz   | rows × u64  | per-row entry counts (`from_packed` header)|
+//! | packed    | 2·nnz × f64 | the `pack_rows` `(column, value)` stream  |
+//!
+//! Every header inconsistency — truncation, version or kind mismatch,
+//! `nnz` vs `row_nnz` disagreement, an out-of-range packed column — is a
+//! hard error naming the offending field in the `Config::try_*` style
+//! (`invalid value for 'model.<field>': …`), never silent garbage:
+//! [`Csr::from_packed`] would *panic* on a malformed stream, so the
+//! reader re-validates every promise before handing bytes to it.
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::kernelfn::Kernel;
+use crate::sparse::Csr;
+
+/// Magic prefix of every `.kcd` model file.
+pub const MAGIC: &[u8; 8] = b"KCDMODEL";
+
+/// Current (and only) format version.
+pub const VERSION: u32 = 1;
+
+/// Which estimator a model file holds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    /// Kernel SVM classifier (support vectors + `α_i y_i`).
+    Svm,
+    /// Kernel ridge regressor (all training rows + `α_i / λ`).
+    Krr,
+}
+
+impl ModelKind {
+    /// Report / error-message name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelKind::Svm => "svm",
+            ModelKind::Krr => "krr",
+        }
+    }
+
+    fn tag(self) -> u32 {
+        match self {
+            ModelKind::Svm => 0,
+            ModelKind::Krr => 1,
+        }
+    }
+
+    fn from_tag(tag: u32) -> Option<ModelKind> {
+        match tag {
+            0 => Some(ModelKind::Svm),
+            1 => Some(ModelKind::Krr),
+            _ => None,
+        }
+    }
+}
+
+/// A decoded model file: everything [`write_model`] persisted, validated.
+#[derive(Clone, Debug)]
+pub struct RawModel {
+    /// Estimator kind.
+    pub kind: ModelKind,
+    /// Kernel configuration.
+    pub kernel: Kernel,
+    /// K-RR ridge penalty (0.0 in K-SVM files).
+    pub lambda: f64,
+    /// Retained training rows (bitwise identical to what was saved).
+    pub mat: Csr,
+    /// Per-row prediction coefficients.
+    pub coef: Vec<f64>,
+}
+
+fn kernel_tags(k: Kernel) -> (u32, f64, f64) {
+    match k {
+        Kernel::Linear => (0, 0.0, 0.0),
+        Kernel::Poly { c, d } => (1, c, f64::from(d)),
+        Kernel::Rbf { sigma } => (2, sigma, 0.0),
+    }
+}
+
+/// Serialize a model to the `.kcd` byte stream.
+pub fn model_bytes(kind: ModelKind, kernel: Kernel, lambda: f64, mat: &Csr, coef: &[f64]) -> Vec<u8> {
+    assert_eq!(coef.len(), mat.nrows(), "one coefficient per retained row");
+    let rows: Vec<usize> = (0..mat.nrows()).collect();
+    let packed = mat.pack_rows(&rows);
+    let (ktag, kp1, kp2) = kernel_tags(kernel);
+    let mut out = Vec::with_capacity(64 + 16 * mat.nrows() + 8 * packed.len());
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&kind.tag().to_le_bytes());
+    out.extend_from_slice(&ktag.to_le_bytes());
+    out.extend_from_slice(&kp1.to_le_bytes());
+    out.extend_from_slice(&kp2.to_le_bytes());
+    out.extend_from_slice(&lambda.to_le_bytes());
+    out.extend_from_slice(&(mat.nrows() as u64).to_le_bytes());
+    out.extend_from_slice(&(mat.ncols() as u64).to_le_bytes());
+    out.extend_from_slice(&(mat.nnz() as u64).to_le_bytes());
+    for &c in coef {
+        out.extend_from_slice(&c.to_le_bytes());
+    }
+    for i in 0..mat.nrows() {
+        out.extend_from_slice(&(mat.row_nnz(i) as u64).to_le_bytes());
+    }
+    for &w in &packed {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    out
+}
+
+/// Write a model file (see the module docs for the layout).
+pub fn write_model(
+    path: &std::path::Path,
+    kind: ModelKind,
+    kernel: Kernel,
+    lambda: f64,
+    mat: &Csr,
+    coef: &[f64],
+) -> Result<()> {
+    std::fs::write(path, model_bytes(kind, kernel, lambda, mat, coef))
+        .map_err(|e| anyhow!("writing model to {path:?}: {e}"))
+}
+
+/// A strict little-endian cursor: every read names the field it was
+/// reading, so truncation errors point at the first missing byte's
+/// meaning instead of a generic "unexpected EOF".
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize, field: &str) -> Result<&'a [u8]> {
+        ensure!(
+            self.pos + n <= self.bytes.len(),
+            "invalid value for 'model.{field}': file truncated at byte {} \
+             ({} bytes needed, {} remain)",
+            self.pos,
+            n,
+            self.bytes.len() - self.pos
+        );
+        let out = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u32(&mut self, field: &str) -> Result<u32> {
+        let b = self.take(4, field)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, field: &str) -> Result<u64> {
+        let b = self.take(8, field)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("8-byte slice")))
+    }
+
+    fn f64(&mut self, field: &str) -> Result<f64> {
+        Ok(f64::from_bits(self.u64(field)?))
+    }
+}
+
+/// Decode and validate a `.kcd` byte stream.
+pub fn parse_model(bytes: &[u8]) -> Result<RawModel> {
+    let mut cur = Cursor { bytes, pos: 0 };
+    let magic = cur.take(MAGIC.len(), "magic")?;
+    ensure!(
+        magic == MAGIC,
+        "invalid value for 'model.magic': not a .kcd model file \
+         (expected the KCDMODEL prefix)"
+    );
+    let version = cur.u32("version")?;
+    ensure!(
+        version == VERSION,
+        "invalid value for 'model.version': this build reads format \
+         version {VERSION}, got {version}"
+    );
+    let kind_tag = cur.u32("kind")?;
+    let kind = ModelKind::from_tag(kind_tag).ok_or_else(|| {
+        anyhow!("invalid value for 'model.kind': expected 0 (svm) or 1 (krr), got {kind_tag}")
+    })?;
+    let ktag = cur.u32("kernel")?;
+    let kp1 = cur.f64("kernel")?;
+    let kp2 = cur.f64("kernel")?;
+    let kernel = match ktag {
+        0 => Kernel::Linear,
+        1 => {
+            ensure!(
+                kp2.is_finite() && kp2 >= 1.0 && kp2.fract() == 0.0 && kp2 <= f64::from(i32::MAX),
+                "invalid value for 'model.kernel': poly degree must be a \
+                 positive integer, got {kp2}"
+            );
+            ensure!(
+                kp1.is_finite(),
+                "invalid value for 'model.kernel': poly offset must be finite, got {kp1}"
+            );
+            Kernel::Poly {
+                c: kp1,
+                // Range-checked above; the cast is exact.
+                d: kp2 as i32,
+            }
+        }
+        2 => {
+            ensure!(
+                kp1.is_finite() && kp1 > 0.0,
+                "invalid value for 'model.kernel': rbf sigma must be positive, got {kp1}"
+            );
+            Kernel::Rbf { sigma: kp1 }
+        }
+        other => bail!(
+            "invalid value for 'model.kernel': expected 0 (linear), 1 (poly) \
+             or 2 (rbf), got {other}"
+        ),
+    };
+    let lambda = cur.f64("lambda")?;
+    if kind == ModelKind::Krr {
+        ensure!(
+            lambda.is_finite() && lambda > 0.0,
+            "invalid value for 'model.lambda': krr models need a positive \
+             ridge penalty, got {lambda}"
+        );
+    }
+    let rows = cur.u64("rows")? as usize;
+    let cols = cur.u64("cols")? as usize;
+    let nnz = cur.u64("nnz")? as usize;
+    // The three length headers promise the exact remaining byte count;
+    // check it up front so a truncated tail or an inflated nnz is caught
+    // as the header lie it is, before any per-entry work.
+    let body = rows
+        .checked_mul(16)
+        .and_then(|c| nnz.checked_mul(16).map(|p| (c, p)))
+        .ok_or_else(|| {
+            anyhow!("invalid value for 'model.rows': {rows} rows / {nnz} entries overflow")
+        })?;
+    let promised = cur.pos + body.0 + body.1;
+    ensure!(
+        bytes.len() == promised,
+        "invalid value for 'model.nnz': header promises {rows} rows and \
+         {nnz} entries ({promised} bytes), but the file holds {} bytes",
+        bytes.len()
+    );
+    ensure!(
+        nnz <= rows.saturating_mul(cols),
+        "invalid value for 'model.nnz': {nnz} entries cannot fit in a \
+         {rows}x{cols} matrix"
+    );
+    let mut coef = Vec::with_capacity(rows);
+    for i in 0..rows {
+        let c = cur.f64("coef")?;
+        ensure!(
+            c.is_finite(),
+            "invalid value for 'model.coef': coefficient {i} is not finite ({c})"
+        );
+        coef.push(c);
+    }
+    let mut row_nnz = Vec::with_capacity(rows);
+    let mut total = 0usize;
+    for i in 0..rows {
+        let n = cur.u64("row_nnz")? as usize;
+        ensure!(
+            n <= cols,
+            "invalid value for 'model.row_nnz': row {i} claims {n} entries \
+             in {cols} columns"
+        );
+        total += n;
+        row_nnz.push(n);
+    }
+    ensure!(
+        total == nnz,
+        "invalid value for 'model.row_nnz': per-row counts sum to {total}, \
+         but the header nnz is {nnz}"
+    );
+    let mut packed = Vec::with_capacity(2 * nnz);
+    for _ in 0..nnz {
+        let j = cur.f64("packed")?;
+        let v = cur.f64("packed")?;
+        // `from_packed` asserts (panics) on a bad column; re-state its
+        // preconditions as load errors.
+        ensure!(
+            j.is_finite() && j >= 0.0 && j.fract() == 0.0 && (j as usize) < cols,
+            "invalid value for 'model.packed': column index {j} is not a \
+             valid column of a {cols}-column matrix"
+        );
+        packed.push(j);
+        packed.push(v);
+    }
+    // Ascending-column order within each row is what `pack_rows` wrote
+    // and what the merge-join prediction kernels assume.
+    let mut off = 0usize;
+    for (i, &n) in row_nnz.iter().enumerate() {
+        for k in 1..n {
+            let prev = packed[2 * (off + k - 1)];
+            let here = packed[2 * (off + k)];
+            ensure!(
+                here > prev,
+                "invalid value for 'model.packed': row {i} columns are not \
+                 strictly ascending ({prev} then {here})"
+            );
+        }
+        off += n;
+    }
+    let mat = Csr::from_packed(cols, &row_nnz, &packed);
+    Ok(RawModel {
+        kind,
+        kernel,
+        lambda,
+        mat,
+        coef,
+    })
+}
+
+/// Read and validate a `.kcd` model file.
+pub fn read_model(path: &std::path::Path) -> Result<RawModel> {
+    let bytes = std::fs::read(path).map_err(|e| anyhow!("reading model {path:?}: {e}"))?;
+    parse_model(&bytes)
+}
+
+/// What one grid cell `(group, col)` of a [`GridStorage::Sharded`] run
+/// keeps resident: the block-cyclic row group of one feature shard
+/// (`≈m/pr × ≈n/pc`). [`shard_cells`] produces them and
+/// [`assemble_cells`] reassembles the full matrix — through the same
+/// `pack_rows`/`from_packed` kernels the save path uses — so model
+/// extraction works from sharded storage without ever materializing the
+/// replicated matrix on a single cell first.
+///
+/// [`GridStorage::Sharded`]: crate::gram::GridStorage::Sharded
+#[derive(Clone, Debug)]
+pub struct CellShard {
+    /// Block-cyclic row-group index in `[0, pr)`.
+    pub group: usize,
+    /// Feature-shard index in `[0, pc)`.
+    pub col: usize,
+    /// The resident rows (columns re-indexed to the shard).
+    pub rows: Csr,
+}
+
+/// Split a training matrix into the `pr × pc` cell shards a
+/// `GridStorage::Sharded` grid run stores, exactly as the grid layout
+/// builds them: feature shard `col` of [`Csr::partition_cols`], rows
+/// filtered to block-cyclic group `group` ([`crate::gram::block_cyclic_rows`]).
+pub fn shard_cells(a: &Csr, pr: usize, pc: usize, row_block: usize) -> Vec<CellShard> {
+    assert!(pr >= 1 && pc >= 1 && row_block >= 1);
+    let shards = a.partition_cols(pc);
+    let mut cells = Vec::with_capacity(pr * pc);
+    for (col, shard) in shards.iter().enumerate() {
+        for group in 0..pr {
+            let rows = crate::gram::block_cyclic_rows(a.nrows(), pr, group, row_block);
+            cells.push(CellShard {
+                group,
+                col,
+                rows: shard.gather_rows(&rows),
+            });
+        }
+    }
+    cells
+}
+
+/// Reassemble the full `m × n` training matrix from sharded grid cells,
+/// routing every cell's rows through the `pack_rows` → `from_packed`
+/// serialization kernels (the rebuilt rows are bitwise identical to the
+/// stored ones, so the assembled matrix is bitwise identical to the
+/// replicated original). The cells may arrive in any order; each stored
+/// entry has a unique global position, so the triplet assembly cannot
+/// merge or reorder values.
+pub fn assemble_cells(
+    m: usize,
+    n: usize,
+    pr: usize,
+    pc: usize,
+    row_block: usize,
+    cells: &[CellShard],
+) -> Result<Csr> {
+    ensure!(
+        cells.len() == pr * pc,
+        "invalid value for 'model.cells': a {pr}x{pc} grid stores {} cells, got {}",
+        pr * pc,
+        cells.len()
+    );
+    let width = n.div_ceil(pc);
+    let mut trips: Vec<(usize, usize, f64)> = Vec::new();
+    for cell in cells {
+        ensure!(
+            cell.group < pr && cell.col < pc,
+            "invalid value for 'model.cells': cell ({}, {}) is outside the {pr}x{pc} grid",
+            cell.group,
+            cell.col
+        );
+        let owned = crate::gram::block_cyclic_rows(m, pr, cell.group, row_block);
+        ensure!(
+            cell.rows.nrows() == owned.len(),
+            "invalid value for 'model.cells': cell ({}, {}) holds {} rows, \
+             but its block-cyclic group owns {}",
+            cell.group,
+            cell.col,
+            cell.rows.nrows(),
+            owned.len()
+        );
+        let c0 = (cell.col * width).min(n);
+        // The serialization kernels: pack the cell's resident rows and
+        // rebuild them verbatim, exactly what a sharded rank would send.
+        let all: Vec<usize> = (0..cell.rows.nrows()).collect();
+        let packed = cell.rows.pack_rows(&all);
+        let row_nnz: Vec<usize> = all.iter().map(|&i| cell.rows.row_nnz(i)).collect();
+        let rebuilt = Csr::from_packed(cell.rows.ncols(), &row_nnz, &packed);
+        for (local, &global) in owned.iter().enumerate() {
+            for (j, v) in rebuilt.row_iter(local) {
+                trips.push((global, c0 + j, v));
+            }
+        }
+    }
+    Ok(Csr::from_triplets(m, n, &trips))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{gen_uniform_sparse, SynthParams, Task};
+
+    fn sample_matrix() -> Csr {
+        gen_uniform_sparse(
+            SynthParams {
+                m: 23,
+                n: 17,
+                density: 0.2,
+                seed: 42,
+            },
+            Task::Classification,
+        )
+        .a
+    }
+
+    fn bits(m: &Csr) -> (Vec<usize>, Vec<u64>) {
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        for i in 0..m.nrows() {
+            let (c, v) = m.row_parts(i);
+            cols.extend_from_slice(c);
+            vals.extend(v.iter().map(|x| x.to_bits()));
+        }
+        (cols, vals)
+    }
+
+    #[test]
+    fn byte_roundtrip_is_bitwise() {
+        let a = sample_matrix();
+        let coef: Vec<f64> = (0..a.nrows()).map(|i| (i as f64) * 0.137 - 1.0).collect();
+        let kernel = Kernel::Poly { c: 0.5, d: 3 };
+        let bytes = model_bytes(ModelKind::Svm, kernel, 0.0, &a, &coef);
+        let raw = parse_model(&bytes).unwrap();
+        assert_eq!(raw.kind, ModelKind::Svm);
+        assert_eq!(raw.kernel, kernel);
+        assert_eq!(raw.mat.nrows(), a.nrows());
+        assert_eq!(raw.mat.ncols(), a.ncols());
+        assert_eq!(bits(&raw.mat), bits(&a));
+        let cb: Vec<u64> = coef.iter().map(|c| c.to_bits()).collect();
+        let rb: Vec<u64> = raw.coef.iter().map(|c| c.to_bits()).collect();
+        assert_eq!(cb, rb);
+    }
+
+    #[test]
+    fn truncation_and_header_lies_are_named_errors() {
+        let a = sample_matrix();
+        let coef = vec![1.0; a.nrows()];
+        let bytes = model_bytes(ModelKind::Krr, Kernel::Linear, 2.0, &a, &coef);
+
+        // Truncation anywhere in the stream is a hard error.
+        for cut in [4, 11, 20, bytes.len() - 3] {
+            let err = parse_model(&bytes[..cut]).unwrap_err().to_string();
+            assert!(err.contains("invalid value for 'model."), "{err}");
+        }
+
+        // Version mismatch names the field.
+        let mut v = bytes.clone();
+        v[8] = 9;
+        let err = parse_model(&v).unwrap_err().to_string();
+        assert!(err.contains("'model.version'"), "{err}");
+
+        // A corrupt kind tag names the field.
+        let mut k = bytes.clone();
+        k[12] = 7;
+        let err = parse_model(&k).unwrap_err().to_string();
+        assert!(err.contains("'model.kind'"), "{err}");
+
+        // Inflating the nnz header makes the byte count a lie.
+        let mut z = bytes.clone();
+        let nnz_off = 8 + 4 + 4 + 4 + 8 + 8 + 8 + 8 + 8;
+        let bad = (a.nnz() as u64 + 1).to_le_bytes();
+        z[nnz_off..nnz_off + 8].copy_from_slice(&bad);
+        let err = parse_model(&z).unwrap_err().to_string();
+        assert!(err.contains("'model.nnz'"), "{err}");
+    }
+
+    #[test]
+    fn sharded_cells_reassemble_bitwise() {
+        let a = sample_matrix();
+        for (pr, pc) in [(1, 2), (2, 2), (3, 1), (2, 3)] {
+            for rb in [1, 4] {
+                let cells = shard_cells(&a, pr, pc, rb);
+                let b = assemble_cells(a.nrows(), a.ncols(), pr, pc, rb, &cells).unwrap();
+                assert_eq!(bits(&b), bits(&a), "grid {pr}x{pc} rb {rb}");
+            }
+        }
+        // Wrong cell count is a named hard error.
+        let cells = shard_cells(&a, 2, 2, 2);
+        let err = assemble_cells(a.nrows(), a.ncols(), 2, 3, 2, &cells)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("'model.cells'"), "{err}");
+    }
+}

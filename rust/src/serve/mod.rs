@@ -1,0 +1,580 @@
+//! Model serving: batched prediction through the gram engine, plus the
+//! request parsing behind `kcd serve` / `kcd predict`.
+//!
+//! A query batch against a trained kernel model *is* a sampled-row gram
+//! product: `f(x_r) = Σ_i coef_i · K(x_r, a_i)` needs the cross-set
+//! kernel block `K(X_S, A)` — the same shape the training solvers pull
+//! from [`crate::gram::GramEngine`] every iteration. Serving therefore
+//! reuses the whole engine stack instead of growing a second kernel
+//! path:
+//!
+//! * [`ServeProduct`] is a [`ProductStage`] over the *query* rows whose
+//!   `m` is the retained-training-row count: `compute(sample, q)` fills
+//!   `q[r][i] = K(x_{sample_r}, a_i)` (a finished-kernel block,
+//!   [`BlockKind::Kernel`] — the kernel map runs inside the product via
+//!   [`Kernel::apply_packed`], the cross-set twin of the training
+//!   epilogue).
+//! * [`crate::parallel::ParallelProduct`] splits a batch's rows across
+//!   worker threads exactly as in training — bitwise-invariant in the
+//!   thread count.
+//! * The engine's kernel-row LRU cache keys on *query indices*: a
+//!   skewed or repeat-heavy request stream (the regime where serving
+//!   cost is dominated by kernel evaluation against stored training
+//!   rows) turns repeats into row copies that skip the product
+//!   entirely, with hits attributed to
+//!   [`crate::costmodel::Phase::CacheHit`] as in training.
+//!
+//! ### Determinism contract
+//!
+//! Predictions are **bitwise identical** to the naive reference
+//! evaluation ([`crate::model::SvmModel::decision_function`] /
+//! [`crate::model::KrrModel::predict`]) and **bitwise invariant** to
+//! the worker-thread count, the cache capacity (including off), and how
+//! the request stream is split into batches. The proof obligations are
+//! the same three the training contract rests on: every product path
+//! sums each output entry in ascending stored-column order (identical
+//! to [`Csr::row_dot`]'s merge join), [`Kernel::apply_packed`] is
+//! elementwise identical to [`Kernel::apply_scalar`], and cached rows
+//! are verbatim copies of computed rows. `rust/tests/serve_props.rs`
+//! pins all three; `tools/detlint` checks this module's preconditions
+//! statically (`serve` is a deterministic-core module: no map-order
+//! dependence, no ambient clocks — wall-clock serving counters live in
+//! the CLI layer via `util::PhaseTimer`).
+//!
+//! Model persistence (the `.kcd` format) lives in [`format`]; the
+//! sharded-grid extraction helpers ([`format::shard_cells`] /
+//! [`format::assemble_cells`]) reassemble training rows from
+//! `GridStorage::Sharded` cells through the same `pack_rows` /
+//! `from_packed` kernels the save path serializes with.
+
+#![forbid(unsafe_code)]
+
+pub mod format;
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::costmodel::Ledger;
+use crate::dense::Mat;
+use crate::gram::{
+    BlockKind, GramEngine, Layout, NoReduce, ProductCost, ProductStage,
+    TRANSPOSE_GRAM_MAX_DENSITY,
+};
+use crate::kernelfn::Kernel;
+use crate::model::{KrrModel, SvmModel};
+use crate::parallel::ParallelProduct;
+use crate::sparse::Csr;
+
+use format::ModelKind;
+
+/// Cross-set kernel product: `q[r][i] = K(x_{sample_r}, a_i)` for query
+/// rows `x` against retained training rows `a`. A [`ProductStage`] whose
+/// sample space is the *query* set while `m` is the training-row count —
+/// which is exactly what lets [`GramEngine`]'s row cache key on query
+/// indices. Emits finished kernel values ([`BlockKind::Kernel`]); the
+/// kernel map runs inside `compute` so every engine configuration
+/// (cached, threaded) sees the same bits.
+///
+/// `Clone` replicates the stage per worker thread: the matrices and norm
+/// vectors are `Arc`-shared, so a clone costs refcounts plus an empty
+/// scratch buffer.
+#[derive(Clone)]
+pub struct ServeProduct {
+    queries: Arc<Csr>,
+    train: Arc<Csr>,
+    /// Cached transpose of `train` for the sparse path (None for dense
+    /// training data) — the same density crossover as training's
+    /// `CsrProduct`.
+    train_t: Option<Arc<Csr>>,
+    q_norms: Arc<Vec<f64>>,
+    t_norms: Arc<Vec<f64>>,
+    kernel: Kernel,
+    /// Dense gathered-query scratch for the blocked path (private per
+    /// clone — the only `&mut` state).
+    scratch: Vec<f64>,
+}
+
+impl ServeProduct {
+    /// Wrap a query set against retained training rows. Panics on a
+    /// feature-dimension mismatch (the model API layers report that as a
+    /// load/validation error before construction).
+    pub fn new(queries: Arc<Csr>, train: Arc<Csr>, kernel: Kernel) -> ServeProduct {
+        assert_eq!(
+            queries.ncols(),
+            train.ncols(),
+            "feature dimension mismatch: queries {} vs model {}",
+            queries.ncols(),
+            train.ncols()
+        );
+        let train_t =
+            (train.density() < TRANSPOSE_GRAM_MAX_DENSITY).then(|| Arc::new(train.transpose()));
+        let q_norms = Arc::new(queries.row_norms_sq());
+        let t_norms = Arc::new(train.row_norms_sq());
+        ServeProduct {
+            queries,
+            train,
+            train_t,
+            q_norms,
+            t_norms,
+            kernel,
+            scratch: Vec::new(),
+        }
+    }
+
+    /// `K(a_i, a_i)` over the retained training rows (the engine's diag).
+    pub fn train_diag(&self) -> Vec<f64> {
+        self.t_norms
+            .iter()
+            .map(|&n| self.kernel.apply_scalar(n, n, n))
+            .collect()
+    }
+}
+
+impl ProductStage for ServeProduct {
+    fn m(&self) -> usize {
+        self.train.nrows()
+    }
+
+    fn kind(&self) -> BlockKind {
+        BlockKind::Kernel
+    }
+
+    fn compute(&mut self, sample: &[usize], q: &mut Mat) -> ProductCost {
+        match &self.train_t {
+            Some(tt) => self.queries.sampled_gram_t_against(tt.as_ref(), sample, q),
+            None => {
+                self.queries
+                    .sampled_gram_blocked_against(sample, &self.train, q, &mut self.scratch);
+            }
+        }
+        // The cross-set epilogue: elementwise identical to
+        // `apply_scalar(dot, ‖x_r‖², ‖a_i‖²)` over the k × m block.
+        let sample_norms: Vec<f64> = sample.iter().map(|&r| self.q_norms[r]).collect();
+        self.kernel
+            .apply_packed(q.data_mut(), &sample_norms, &self.t_norms);
+        let k = sample.len();
+        ProductCost {
+            flops: 2.0 * k as f64 * self.train.nnz() as f64
+                + self.kernel.epilogue_flops(k, self.train.nrows()),
+            rows_charged: k,
+        }
+    }
+}
+
+/// Engine-routed prediction knobs. All three are pure wall-time knobs:
+/// results are bitwise identical for every combination (pinned by
+/// `rust/tests/serve_props.rs`).
+#[derive(Clone, Copy, Debug)]
+pub struct PredictOptions {
+    /// Worker threads for the batch product (≥ 1).
+    pub threads: usize,
+    /// Kernel-row LRU capacity, keyed on query indices (0 = off).
+    pub cache_rows: usize,
+    /// Requests per engine call (0 = the whole stream in one batch).
+    pub batch: usize,
+}
+
+impl Default for PredictOptions {
+    fn default() -> Self {
+        PredictOptions {
+            threads: 1,
+            cache_rows: 0,
+            batch: 0,
+        }
+    }
+}
+
+/// A prediction session over one query set: the gram engine configured
+/// for serving ([`ServeProduct`] + `ParallelProduct` + row cache), plus
+/// the model's coefficient vector. Reused across batches so the cache
+/// carries hits between them.
+pub struct Predictor {
+    /// None exactly when the model retained zero rows (an all-zero-α
+    /// K-SVM save): the engine would be a `k × 0` pipeline, so predict
+    /// short-circuits to zeros instead of building one.
+    engine: Option<GramEngine<ParallelProduct<ServeProduct>, NoReduce>>,
+    coef: Arc<Vec<f64>>,
+    m: usize,
+}
+
+impl Predictor {
+    /// Build a session for `queries` against a model's retained rows.
+    pub fn new(
+        train: &Csr,
+        coef: &[f64],
+        kernel: Kernel,
+        queries: &Csr,
+        opts: &PredictOptions,
+    ) -> Predictor {
+        assert_eq!(coef.len(), train.nrows(), "one coefficient per row");
+        assert!(opts.threads >= 1, "need at least one worker thread");
+        let m = train.nrows();
+        let engine = (m > 0).then(|| {
+            let product = ServeProduct::new(
+                Arc::new(queries.clone()),
+                Arc::new(train.clone()),
+                kernel,
+            );
+            let diag = product.train_diag();
+            GramEngine::new(
+                Layout::Full,
+                ParallelProduct::new(product, opts.threads),
+                NoReduce,
+                None,
+                diag,
+                opts.cache_rows,
+            )
+        });
+        Predictor {
+            engine,
+            coef: Arc::new(coef.to_vec()),
+            m,
+        }
+    }
+
+    /// Retained-training-row count (`0` for an empty model).
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Score one batch of query indices: `out[r] = Σ_i coef_i ·
+    /// K(x_{sample_r}, a_i)`, summed in ascending retained-row order —
+    /// the exact summation of the naive reference evaluation.
+    pub fn predict_indices(&mut self, sample: &[usize], ledger: &mut Ledger) -> Vec<f64> {
+        let Some(engine) = self.engine.as_mut() else {
+            // Empty model: the decision sum has no terms.
+            return vec![0.0; sample.len()];
+        };
+        if sample.is_empty() {
+            return Vec::new();
+        }
+        let mut q = Mat::zeros(sample.len(), self.m);
+        engine.gram(sample, &mut q, ledger);
+        let coef = &self.coef;
+        (0..sample.len())
+            .map(|r| {
+                let mut f = 0.0;
+                for (c, v) in coef.iter().zip(q.row(r)) {
+                    f += c * v;
+                }
+                f
+            })
+            .collect()
+    }
+
+    /// Score a request stream in batches of `batch` indices (0 = one
+    /// batch). The split is invisible in the bits: every output row is
+    /// computed independently, and the cache serves verbatim copies.
+    pub fn predict_stream(
+        &mut self,
+        stream: &[usize],
+        batch: usize,
+        ledger: &mut Ledger,
+    ) -> Vec<f64> {
+        let step = if batch == 0 { stream.len().max(1) } else { batch };
+        let mut out = Vec::with_capacity(stream.len());
+        for chunk in stream.chunks(step) {
+            out.extend(self.predict_indices(chunk, ledger));
+        }
+        out
+    }
+}
+
+/// A parsed request stream: the deduplicated query matrix plus the
+/// per-request row stream into it. Duplicate request lines map to one
+/// query row, so the engine's within-batch dedup and the cross-batch LRU
+/// cache both see real repeats.
+#[derive(Clone, Debug)]
+pub struct RequestSet {
+    /// Unique query rows, in first-appearance order.
+    pub queries: Csr,
+    /// One entry per request line: its row in [`RequestSet::queries`].
+    pub stream: Vec<usize>,
+}
+
+impl RequestSet {
+    /// Total request count (duplicates included).
+    pub fn len(&self) -> usize {
+        self.stream.len()
+    }
+
+    /// True when the stream holds no requests.
+    pub fn is_empty(&self) -> bool {
+        self.stream.is_empty()
+    }
+
+    /// Distinct query-row count.
+    pub fn unique(&self) -> usize {
+        self.queries.nrows()
+    }
+}
+
+/// Parse one request line: an optional leading label token (any token
+/// without `:`, ignored for scoring) followed by 1-based,
+/// strictly-ascending `index:value` pairs — the LIBSVM feature syntax,
+/// checked against the model's feature dimension. Returns 0-based
+/// `(column, value)` pairs.
+pub fn parse_request_line(line: &str, line_no: usize, ncols: usize) -> Result<Vec<(usize, f64)>> {
+    let mut feats: Vec<(usize, f64)> = Vec::new();
+    for (pos, tok) in line.split_whitespace().enumerate() {
+        let Some((idx, val)) = tok.split_once(':') else {
+            ensure!(
+                pos == 0,
+                "request line {line_no}: expected index:value, got '{tok}'"
+            );
+            // Leading label token (echoed convention from LIBSVM files).
+            continue;
+        };
+        let idx: usize = idx.parse().map_err(|_| {
+            anyhow!("request line {line_no}: bad feature index in '{tok}'")
+        })?;
+        ensure!(
+            idx >= 1,
+            "request line {line_no}: feature indices are 1-based, got {idx}"
+        );
+        ensure!(
+            idx <= ncols,
+            "request line {line_no}: feature index {idx} exceeds the \
+             model's {ncols} features"
+        );
+        let val: f64 = val.parse().map_err(|_| {
+            anyhow!("request line {line_no}: bad feature value in '{tok}'")
+        })?;
+        ensure!(
+            val.is_finite(),
+            "request line {line_no}: feature value in '{tok}' is not finite"
+        );
+        if let Some(&(last, _)) = feats.last() {
+            ensure!(
+                idx - 1 > last,
+                "request line {line_no}: feature indices must be strictly \
+                 ascending ({} then {idx})",
+                last + 1
+            );
+        }
+        feats.push((idx - 1, val));
+    }
+    Ok(feats)
+}
+
+/// Parse a line-delimited request stream into a deduplicated
+/// [`RequestSet`]. Blank lines and `#` comments are skipped; any
+/// malformed line is a hard error naming its line number. Deduplication
+/// keys on the *parsed* feature vector (bit-exact values), so two lines
+/// differing only in whitespace or label share a query row.
+pub fn parse_requests(text: &str, ncols: usize) -> Result<RequestSet> {
+    // BTreeMap: deterministic and never iterated — lookups only.
+    let mut seen: BTreeMap<Vec<(usize, u64)>, usize> = BTreeMap::new();
+    let mut trips: Vec<(usize, usize, f64)> = Vec::new();
+    let mut stream = Vec::new();
+    let mut unique = 0usize;
+    for (i, line) in text.lines().enumerate() {
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') {
+            continue;
+        }
+        let feats = parse_request_line(trimmed, i + 1, ncols)?;
+        let key: Vec<(usize, u64)> = feats.iter().map(|&(j, v)| (j, v.to_bits())).collect();
+        let row = *seen.entry(key).or_insert_with(|| {
+            for &(j, v) in &feats {
+                trips.push((unique, j, v));
+            }
+            unique += 1;
+            unique - 1
+        });
+        stream.push(row);
+    }
+    Ok(RequestSet {
+        queries: Csr::from_triplets(unique, ncols, &trips),
+        stream,
+    })
+}
+
+/// A model loaded for serving: either estimator behind one scoring
+/// interface (both predict `Σ coef_i · K(x, a_i)`; only the response
+/// rendering differs).
+pub enum LoadedModel {
+    /// Kernel SVM classifier.
+    Svm(SvmModel),
+    /// Kernel ridge regressor.
+    Krr(KrrModel),
+}
+
+impl LoadedModel {
+    /// Load a `.kcd` model file, dispatching on its kind header.
+    pub fn load(path: &std::path::Path) -> Result<LoadedModel> {
+        let raw = format::read_model(path)?;
+        Ok(match raw.kind {
+            ModelKind::Svm => LoadedModel::Svm(SvmModel::from_kcd(raw)),
+            ModelKind::Krr => LoadedModel::Krr(KrrModel::from_kcd(raw)),
+        })
+    }
+
+    /// Estimator kind.
+    pub fn kind(&self) -> ModelKind {
+        match self {
+            LoadedModel::Svm(_) => ModelKind::Svm,
+            LoadedModel::Krr(_) => ModelKind::Krr,
+        }
+    }
+
+    /// Feature dimension queries must match.
+    pub fn ncols(&self) -> usize {
+        match self {
+            LoadedModel::Svm(m) => m.support_vectors().ncols(),
+            LoadedModel::Krr(m) => m.train_matrix().ncols(),
+        }
+    }
+
+    /// Retained training rows (support vectors / full training set).
+    pub fn nrows(&self) -> usize {
+        match self {
+            LoadedModel::Svm(m) => m.support_vectors().nrows(),
+            LoadedModel::Krr(m) => m.train_matrix().nrows(),
+        }
+    }
+
+    /// The kernel the model was trained with.
+    pub fn kernel(&self) -> Kernel {
+        match self {
+            LoadedModel::Svm(m) => m.kernel(),
+            LoadedModel::Krr(m) => m.kernel(),
+        }
+    }
+
+    /// Build a prediction session over a query set.
+    pub fn predictor(&self, queries: &Csr, opts: &PredictOptions) -> Predictor {
+        match self {
+            LoadedModel::Svm(m) => {
+                Predictor::new(m.support_vectors(), m.coefficients(), m.kernel(), queries, opts)
+            }
+            LoadedModel::Krr(m) => {
+                Predictor::new(m.train_matrix(), m.coefficients(), m.kernel(), queries, opts)
+            }
+        }
+    }
+
+    /// Score a parsed request stream in `opts.batch`-sized batches.
+    pub fn score(&self, reqs: &RequestSet, opts: &PredictOptions, ledger: &mut Ledger) -> Vec<f64> {
+        let mut p = self.predictor(&reqs.queries, opts);
+        p.predict_stream(&reqs.stream, opts.batch, ledger)
+    }
+
+    /// Render one response line: `±1 <decision value>` for K-SVM (the
+    /// sign convention of [`SvmModel::predict`]), the predicted target
+    /// for K-RR.
+    pub fn response_line(&self, score: f64) -> String {
+        match self {
+            LoadedModel::Svm(_) => {
+                let label = if score >= 0.0 { "+1" } else { "-1" };
+                format!("{label} {score:e}")
+            }
+            LoadedModel::Krr(_) => format!("{score:e}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gen_dense_classification;
+
+    fn toy() -> (Csr, Vec<f64>) {
+        let ds = gen_dense_classification(30, 6, 0.02, 7);
+        let coef: Vec<f64> = (0..30).map(|i| (i as f64).sin()).collect();
+        (ds.a, coef)
+    }
+
+    #[test]
+    fn predictor_matches_rowwise_reference() {
+        let (train, coef) = toy();
+        let queries = gen_dense_classification(12, 6, 0.02, 8).a;
+        let kernel = Kernel::paper_rbf();
+        // Naive reference: ascending-row scalar sum.
+        let qn = queries.row_norms_sq();
+        let tn = train.row_norms_sq();
+        let reference: Vec<f64> = (0..queries.nrows())
+            .map(|r| {
+                let mut f = 0.0;
+                for (j, &c) in coef.iter().enumerate() {
+                    let dot = queries.row_dot(r, &train, j);
+                    f += c * kernel.apply_scalar(dot, qn[r], tn[j]);
+                }
+                f
+            })
+            .collect();
+        let sample: Vec<usize> = (0..queries.nrows()).collect();
+        for threads in [1, 3] {
+            for cache in [0, 5] {
+                let opts = PredictOptions {
+                    threads,
+                    cache_rows: cache,
+                    batch: 0,
+                };
+                let mut p = Predictor::new(&train, &coef, kernel, &queries, &opts);
+                let got = p.predict_indices(&sample, &mut Ledger::new());
+                let gb: Vec<u64> = got.iter().map(|v| v.to_bits()).collect();
+                let rb: Vec<u64> = reference.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(gb, rb, "threads {threads} cache {cache}");
+            }
+        }
+    }
+
+    #[test]
+    fn repeated_queries_hit_the_cache() {
+        let (train, coef) = toy();
+        let queries = gen_dense_classification(4, 6, 0.02, 9).a;
+        let opts = PredictOptions {
+            threads: 1,
+            cache_rows: 8,
+            batch: 2,
+        };
+        let mut p = Predictor::new(&train, &coef, Kernel::paper_rbf(), &queries, &opts);
+        let stream = [0, 1, 0, 1, 2, 0, 3, 2];
+        let mut ledger = Ledger::new();
+        let out = p.predict_stream(&stream, opts.batch, &mut ledger);
+        assert_eq!(out.len(), stream.len());
+        // 4 unique rows miss once each; the other 4 positions hit.
+        assert_eq!(ledger.cache.misses, 4, "{:?}", ledger.cache);
+        assert_eq!(ledger.cache.hits, 4, "{:?}", ledger.cache);
+        // Repeats are bitwise copies.
+        assert_eq!(out[0].to_bits(), out[2].to_bits());
+        assert_eq!(out[1].to_bits(), out[3].to_bits());
+    }
+
+    #[test]
+    fn request_parsing_dedups_and_validates() {
+        let text = "+1 1:0.5 3:1.25\n\n# comment\n-1 1:0.5 3:1.25\n2:7\n";
+        let reqs = parse_requests(text, 4).unwrap();
+        assert_eq!(reqs.len(), 3);
+        assert_eq!(reqs.unique(), 2);
+        assert_eq!(reqs.stream, vec![0, 0, 1]);
+        assert_eq!(reqs.queries.nrows(), 2);
+        assert_eq!(reqs.queries.row_parts(0), (&[0usize, 2][..], &[0.5, 1.25][..]));
+
+        for (bad, what) in [
+            ("1:0.5 1:0.6", "ascending"),
+            ("0:1.0", "1-based"),
+            ("9:1.0", "exceeds"),
+            ("1:abc", "bad feature value"),
+            ("1:2 x", "index:value"),
+            ("y:1 2:0.5", "bad feature index"),
+            ("1:inf", "finite"),
+        ] {
+            let err = parse_requests(bad, 4).unwrap_err().to_string();
+            assert!(err.contains("request line 1"), "{bad}: {err}");
+            assert!(err.contains(what), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn empty_model_predicts_zeros() {
+        let queries = gen_dense_classification(5, 6, 0.02, 10).a;
+        let empty = Csr::empty(0, 6);
+        let mut p = Predictor::new(&empty, &[], Kernel::paper_rbf(), &queries, &PredictOptions::default());
+        let out = p.predict_stream(&[0, 1, 2, 3, 4], 2, &mut Ledger::new());
+        assert_eq!(out, vec![0.0; 5]);
+    }
+}

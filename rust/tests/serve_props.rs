@@ -1,0 +1,428 @@
+//! Property suite for the serving path (`kcd::serve`, `kcd::model`),
+//! pinning the serving determinism contract (see `crate::serve`):
+//!
+//! * **Engine ≡ reference bitwise** — `predict_batch` routed through
+//!   `ServeProduct` + `ParallelProduct` + the kernel-row cache returns
+//!   the naive rowwise reference's bits for every kernel × thread count
+//!   (1, 4, and the CI lane's `THREADS`) × cache capacity × batch
+//!   split, on both the sparse (transpose) and dense (blocked) product
+//!   paths.
+//! * **Save → load → predict roundtrip** — a `.kcd` save reproduces the
+//!   pre-save predictions bitwise, including when the training rows are
+//!   first extracted from `GridStorage::Sharded` cells at every
+//!   `(pr, pc)` factorization of `P ∈ {2, …, 8}` (and the CI lane's
+//!   `GRID` row count): the sharded-assembled save is *byte*-identical
+//!   to the replicated one.
+//! * **Support-vector compaction edges** — an all-zero-α K-SVM model
+//!   saves, loads, and predicts zeros without panicking; bound-α rows
+//!   are retained; K-RR models are never compacted; and the compacted
+//!   model's predictions equal the uncompacted full-coefficient sum
+//!   bitwise (`f += 0 · k` preserves bits).
+//! * **Corruption is loud** — truncation, version/kind mismatches, and
+//!   header inconsistencies are hard errors naming the offending field,
+//!   never silent garbage.
+//! * **CLI end to end** — `kcd train-svm --save` + `kcd predict` work
+//!   through `cli::run`, and a sharded-grid save serves the same
+//!   response bits as the 1D run it is contracted to reproduce.
+
+use kcd::costmodel::Ledger;
+use kcd::data::{gen_dense_classification, gen_uniform_sparse, Dataset, SynthParams, Task};
+use kcd::kernelfn::Kernel;
+use kcd::model::{KrrModel, SvmModel};
+use kcd::serve::format::{assemble_cells, shard_cells, ModelKind};
+use kcd::serve::{parse_requests, LoadedModel, PredictOptions, Predictor};
+use kcd::sparse::Csr;
+use kcd::testkit;
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// A synthetic dual with zeros (compacted away), interior values, and a
+/// bound coordinate — the three α regimes a save must handle.
+fn synth_alpha(m: usize) -> Vec<f64> {
+    (0..m)
+        .map(|i| {
+            if i % 3 == 0 {
+                0.0
+            } else if i % 7 == 0 {
+                1.0 // at the box bound C = 1: must be retained
+            } else {
+                ((i * 5) % 11) as f64 / 11.0
+            }
+        })
+        .collect()
+}
+
+fn kernels() -> [Kernel; 3] {
+    [Kernel::Linear, Kernel::paper_poly(), Kernel::paper_rbf()]
+}
+
+/// Every (pr, pc) with pr·pc == p, in deterministic order.
+fn factorizations(p: usize) -> Vec<(usize, usize)> {
+    (1..=p).filter(|pr| p % pr == 0).map(|pr| (pr, p / pr)).collect()
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("kcd_serve_props");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Engine-routed prediction ≡ naive reference, bitwise, across kernels
+/// × threads × cache × batch split, on sparse and dense training data.
+#[test]
+fn prop_predict_batch_bitwise_equals_reference() {
+    let sparse = gen_uniform_sparse(
+        SynthParams {
+            m: 40,
+            n: 18,
+            density: 0.15,
+            seed: 21,
+        },
+        Task::Classification,
+    );
+    let dense = gen_dense_classification(40, 10, 0.02, 22);
+    let threads = {
+        let mut t = vec![1, 4];
+        let env = testkit::env_threads();
+        if !t.contains(&env) {
+            t.push(env);
+        }
+        t
+    };
+    for ds in [&sparse, &dense] {
+        let alpha = synth_alpha(ds.m());
+        let queries = gen_uniform_sparse(
+            SynthParams {
+                m: 13,
+                n: ds.n(),
+                density: 0.4,
+                seed: 23,
+            },
+            Task::Classification,
+        )
+        .a;
+        for kernel in kernels() {
+            let svm = SvmModel::from_dual(ds, &alpha, kernel);
+            let krr = KrrModel::from_dual(ds, &alpha, kernel, 0.5);
+            let svm_ref = bits(&svm.decision_function(&queries));
+            let krr_ref = bits(&krr.predict(&queries));
+            for &t in &threads {
+                for cache in [0, 8] {
+                    for batch in [0, 1, 7] {
+                        let opts = PredictOptions {
+                            threads: t,
+                            cache_rows: cache,
+                            batch,
+                        };
+                        let got = svm.predict_batch(&queries, &opts, &mut Ledger::new());
+                        assert_eq!(
+                            bits(&got),
+                            svm_ref,
+                            "svm {} t={t} cache={cache} batch={batch}",
+                            kernel.name()
+                        );
+                        let got = krr.predict_batch(&queries, &opts, &mut Ledger::new());
+                        assert_eq!(
+                            bits(&got),
+                            krr_ref,
+                            "krr {} t={t} cache={cache} batch={batch}",
+                            kernel.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Save → load → predict reproduces the pre-save bits for both model
+/// kinds, and the sharded-cell extraction path produces byte-identical
+/// files at every factorization of P ∈ {2, …, 8} (plus the CI lane's
+/// GRID point) × row-block.
+#[test]
+fn prop_kcd_roundtrip_and_sharded_extraction_are_bitwise() {
+    let ds = gen_uniform_sparse(
+        SynthParams {
+            m: 30,
+            n: 12,
+            density: 0.25,
+            seed: 31,
+        },
+        Task::Classification,
+    );
+    let alpha = synth_alpha(ds.m());
+    let queries = gen_dense_classification(9, 12, 0.02, 32).a;
+    let kernel = Kernel::paper_rbf();
+
+    // Replicated-path roundtrip, both kinds.
+    let svm = SvmModel::from_dual(&ds, &alpha, kernel);
+    let path = tmp("roundtrip_svm.kcd");
+    svm.save_kcd(&path).unwrap();
+    let back = SvmModel::load_kcd(&path).unwrap();
+    assert_eq!(back.n_support(), svm.n_support());
+    assert_eq!(
+        bits(&back.decision_function(&queries)),
+        bits(&svm.decision_function(&queries)),
+        "svm roundtrip must be bitwise"
+    );
+    let krr = KrrModel::from_dual(&ds, &alpha, kernel, 0.5);
+    let kpath = tmp("roundtrip_krr.kcd");
+    krr.save_kcd(&kpath).unwrap();
+    let kback = KrrModel::load_kcd(&kpath).unwrap();
+    assert_eq!(kback.lambda(), 0.5);
+    assert_eq!(
+        bits(&kback.predict(&queries)),
+        bits(&krr.predict(&queries)),
+        "krr roundtrip must be bitwise"
+    );
+    let replicated_bytes = std::fs::read(&path).unwrap();
+
+    // Sharded extraction: reassembling the training matrix from its
+    // block-cyclic cells then saving must produce the same file bytes.
+    let mut grids: Vec<(usize, usize)> = (2..=8).flat_map(factorizations).collect();
+    let env_pr = testkit::env_grid_rows();
+    if env_pr > 1 {
+        grids.push((env_pr, 2));
+    }
+    for (pr, pc) in grids {
+        for rb in [1, 4] {
+            let cells = shard_cells(&ds.a, pr, pc, rb);
+            let assembled = assemble_cells(ds.m(), ds.n(), pr, pc, rb, &cells).unwrap();
+            let save_ds = Dataset {
+                name: ds.name.clone(),
+                a: assembled,
+                y: ds.y.clone(),
+                task: ds.task,
+            };
+            let sharded = SvmModel::from_dual(&save_ds, &alpha, kernel);
+            let spath = tmp("sharded_svm.kcd");
+            sharded.save_kcd(&spath).unwrap();
+            assert_eq!(
+                std::fs::read(&spath).unwrap(),
+                replicated_bytes,
+                "sharded save at grid {pr}x{pc} rb={rb} must be byte-identical"
+            );
+        }
+    }
+}
+
+/// Compaction edge cases: all-zero α, bound α, K-RR exemption, and the
+/// compacted ≡ uncompacted bitwise identity.
+#[test]
+fn prop_support_vector_compaction_edges() {
+    let ds = gen_dense_classification(24, 8, 0.02, 41);
+    let queries = gen_dense_classification(7, 8, 0.02, 42).a;
+    let kernel = Kernel::paper_rbf();
+
+    // All-zero α: the model is empty but must save, load, and predict
+    // zeros — never panic.
+    let empty = SvmModel::from_dual(&ds, &vec![0.0; ds.m()], kernel);
+    assert_eq!(empty.n_support(), 0);
+    let path = tmp("empty_svm.kcd");
+    empty.save_kcd(&path).unwrap();
+    let back = SvmModel::load_kcd(&path).unwrap();
+    assert_eq!(back.n_support(), 0);
+    for opts in [
+        PredictOptions::default(),
+        PredictOptions {
+            threads: 3,
+            cache_rows: 4,
+            batch: 2,
+        },
+    ] {
+        let got = back.predict_batch(&queries, &opts, &mut Ledger::new());
+        assert_eq!(got, vec![0.0; queries.nrows()], "empty model predicts zeros");
+    }
+
+    // Bound-α rows (α = C) are support vectors and must be retained.
+    let mut alpha = vec![0.0; ds.m()];
+    alpha[3] = 1.0;
+    alpha[17] = 1.0;
+    let bound = SvmModel::from_dual(&ds, &alpha, kernel);
+    assert_eq!(bound.n_support(), 2, "bound alpha rows must be retained");
+
+    // K-RR is never compacted, in memory or through a save.
+    let sparse_alpha = synth_alpha(ds.m());
+    let krr = KrrModel::from_dual(&ds, &sparse_alpha, kernel, 1.0);
+    assert_eq!(krr.train_matrix().nrows(), ds.m());
+    let kpath = tmp("uncompacted_krr.kcd");
+    krr.save_kcd(&kpath).unwrap();
+    assert_eq!(
+        KrrModel::load_kcd(&kpath).unwrap().train_matrix().nrows(),
+        ds.m(),
+        "krr saves must retain every training row"
+    );
+
+    // Compacted ≡ uncompacted bitwise: dropping α = 0 rows removes
+    // exactly the `f += 0 · k` terms, which cannot change the bits
+    // (+0.0 + ±0.0 = +0.0, and every partial sum is reproduced).
+    let compacted = SvmModel::from_dual(&ds, &sparse_alpha, kernel);
+    assert!(compacted.n_support() < ds.m(), "alpha must have zeros");
+    let full_coef: Vec<f64> = sparse_alpha
+        .iter()
+        .zip(&ds.y)
+        .map(|(&a, &y)| a * y)
+        .collect();
+    for threads in [1, 4] {
+        let opts = PredictOptions {
+            threads,
+            cache_rows: 0,
+            batch: 0,
+        };
+        let mut uncompacted = Predictor::new(&ds.a, &full_coef, kernel, &queries, &opts);
+        let stream: Vec<usize> = (0..queries.nrows()).collect();
+        let full = uncompacted.predict_stream(&stream, 0, &mut Ledger::new());
+        let got = compacted.predict_batch(&queries, &opts, &mut Ledger::new());
+        assert_eq!(
+            bits(&got),
+            bits(&full),
+            "compacted vs uncompacted t={threads}"
+        );
+    }
+}
+
+/// Corrupt model files are hard errors naming the offending field.
+#[test]
+fn prop_model_corruption_is_a_named_error() {
+    let ds = gen_dense_classification(12, 6, 0.02, 51);
+    let model = SvmModel::from_dual(&ds, &synth_alpha(ds.m()), Kernel::paper_rbf());
+    let path = tmp("corrupt_base.kcd");
+    model.save_kcd(&path).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    let load = |bytes: &[u8]| {
+        let p = tmp("corrupt_case.kcd");
+        std::fs::write(&p, bytes).unwrap();
+        LoadedModel::load(&p).map(|_| ()).unwrap_err().to_string()
+    };
+
+    // Header-region truncation: the cursor names the field it was
+    // reading and says "truncated".
+    for cut in [4, 11, 20, 55] {
+        let err = load(&good[..cut]);
+        assert!(err.contains("model."), "cut at {cut}: {err}");
+        assert!(err.contains("truncated"), "cut at {cut}: {err}");
+    }
+    // Body truncation: caught up front as a header-promise lie naming
+    // the length field, before any per-entry parsing.
+    let err = load(&good[..good.len() - 3]);
+    assert!(err.contains("model.nnz"), "{err}");
+    // Version bump.
+    let mut v = good.clone();
+    v[8] = 9;
+    let err = load(&v);
+    assert!(err.contains("model.version"), "{err}");
+    // Unknown kind tag.
+    let mut k = good.clone();
+    k[12] = 7;
+    let err = load(&k);
+    assert!(err.contains("model.kind"), "{err}");
+    // Header lies: inflate nnz (offset 60 = magic 8 + version 4 + kind 4
+    // + kernel tag 4 + 3 kernel/λ f64s + rows 8 + cols 8).
+    let mut n = good.clone();
+    n[60] = n[60].wrapping_add(1);
+    let err = load(&n);
+    assert!(err.contains("model.nnz"), "{err}");
+    // The pristine bytes still load, so every failure above is the
+    // mutation's doing.
+    let p = tmp("corrupt_case.kcd");
+    std::fs::write(&p, &good).unwrap();
+    assert_eq!(LoadedModel::load(&p).unwrap().kind(), ModelKind::Svm);
+}
+
+/// Request parsing feeds the predictor exactly the reference bits:
+/// dedup maps repeats onto one query row, and scoring the parsed set
+/// matches scoring the rows directly.
+#[test]
+fn prop_parsed_requests_score_like_raw_rows() {
+    let ds = gen_dense_classification(20, 5, 0.02, 61);
+    let model = SvmModel::from_dual(&ds, &synth_alpha(ds.m()), Kernel::paper_rbf());
+    let text = "1:0.5 3:-1.25\n2:2.0\n1:0.5 3:-1.25\n# note\n\n5:0.75\n";
+    let reqs = parse_requests(text, 5).unwrap();
+    assert_eq!(reqs.len(), 4);
+    assert_eq!(reqs.unique(), 3);
+    let raw = Csr::from_triplets(
+        3,
+        5,
+        &[(0, 0, 0.5), (0, 2, -1.25), (1, 1, 2.0), (2, 4, 0.75)],
+    );
+    let reference = model.decision_function(&raw);
+    let expected: Vec<f64> = reqs.stream.iter().map(|&r| reference[r]).collect();
+    let opts = PredictOptions {
+        threads: 2,
+        cache_rows: 4,
+        batch: 2,
+    };
+    let mut p = Predictor::new(
+        model.support_vectors(),
+        model.coefficients(),
+        model.kernel(),
+        &reqs.queries,
+        &opts,
+    );
+    let got = p.predict_stream(&reqs.stream, opts.batch, &mut Ledger::new());
+    assert_eq!(bits(&got), bits(&expected));
+}
+
+/// CLI end to end, honoring the CI matrix knobs: train with --save
+/// (threads from THREADS, storage from GRID_STORAGE on a GRIDx2 grid),
+/// predict from the saved file, and match the plain 1D run's response
+/// bits (the grid contract: GRxPC ≡ 1D over pc ranks).
+#[test]
+fn cli_save_predict_roundtrip_under_env_matrix() {
+    let argv = |s: &str| -> Vec<String> { s.split_whitespace().map(String::from).collect() };
+    let base_model = tmp("cli_base.kcd");
+    let reqf = tmp("cli_req.txt");
+    std::fs::write(&reqf, "1:0.5 2:-0.75\n3:1.0\n1:0.5 2:-0.75\n").unwrap();
+    let t = testkit::env_threads();
+    let base = kcd::cli::run(argv(&format!(
+        "train-svm --dataset diabetes --scale 0.1 --kernel rbf --h 160 --s 8 --p 2 \
+         --threads {t} --save {}",
+        base_model.display()
+    )))
+    .unwrap();
+    assert!(base.contains("model saved"), "{base}");
+    let responses = |out: &str| -> Vec<String> {
+        out.lines()
+            .filter(|l| l.starts_with("+1 ") || l.starts_with("-1 "))
+            .map(String::from)
+            .collect()
+    };
+    let pred = kcd::cli::run(argv(&format!(
+        "predict --model {} --requests {}",
+        base_model.display(),
+        reqf.display()
+    )))
+    .unwrap();
+    let base_resp = responses(&pred);
+    assert_eq!(base_resp.len(), 3, "{pred}");
+    assert_eq!(base_resp[0], base_resp[2], "duplicate requests score identically");
+
+    // The matrix point: a GRIDx2 grid over 2·GRID ranks with the lane's
+    // storage mode must save a model that serves the same bits.
+    let pr = testkit::env_grid_rows();
+    let storage = testkit::env_grid_storage();
+    let grid_model = tmp("cli_grid.kcd");
+    let out = kcd::cli::run(argv(&format!(
+        "train-svm --dataset diabetes --scale 0.1 --kernel rbf --h 160 --s 8 \
+         --p {} --grid {pr}x2 --grid-storage {} --threads {t} --save {}",
+        pr * 2,
+        storage.name(),
+        grid_model.display()
+    )))
+    .unwrap();
+    assert!(out.contains("model saved"), "{out}");
+    let pred2 = kcd::cli::run(argv(&format!(
+        "predict --model {} --requests {}",
+        grid_model.display(),
+        reqf.display()
+    )))
+    .unwrap();
+    assert_eq!(
+        base_resp,
+        responses(&pred2),
+        "grid save must serve the 1D bits\n{pred}\n{pred2}"
+    );
+}

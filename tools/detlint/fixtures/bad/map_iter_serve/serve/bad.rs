@@ -1,0 +1,16 @@
+// Fixture: HashMap iteration in the serving core (serve/ is a
+// deterministic module — response bits must not depend on map order).
+use std::collections::HashMap;
+
+pub fn drain_responses(pending: &HashMap<usize, f64>) -> Vec<f64> {
+    let mut out = Vec::with_capacity(pending.len());
+    for (_, score) in pending.iter() { //~ map-order
+        out.push(*score);
+    }
+    out
+}
+
+pub fn score_of(pending: &HashMap<usize, f64>, req: usize) -> Option<f64> {
+    // Keyed access stays free.
+    pending.get(&req).copied()
+}

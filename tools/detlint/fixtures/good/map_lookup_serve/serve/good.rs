@@ -1,0 +1,21 @@
+// Good fixture: the serving core dedups requests through keyed map
+// access only and iterates the ordered stream — no map-order dependence.
+use std::collections::HashMap;
+
+pub fn dedup_stream(reqs: &[u64]) -> (Vec<u64>, Vec<usize>) {
+    let mut seen: HashMap<u64, usize> = HashMap::new();
+    let mut unique = Vec::new();
+    let mut stream = Vec::with_capacity(reqs.len());
+    for &k in reqs {
+        let row = *seen.entry(k).or_insert_with(|| {
+            unique.push(k);
+            unique.len() - 1
+        });
+        stream.push(row);
+    }
+    (unique, stream)
+}
+
+pub fn replay(stream: &[usize], scores: &[f64]) -> Vec<f64> {
+    stream.iter().map(|&row| scores[row]).collect()
+}

@@ -113,6 +113,7 @@ const DET_MODULES: &[&str] = &[
     "costmodel",
     "gram",
     "parallel",
+    "serve",
     "solvers",
     "sparse",
     "tune",
