@@ -3,7 +3,9 @@
 //! kernel maps, allreduce algorithms, small solves, and PJRT artifact
 //! execution.
 
-use kcd::bench_harness::{bench, black_box, section, BenchConfig};
+use kcd::bench_harness::{
+    bench, black_box, section, smoke_mode, BenchConfig, BenchLog, BenchRecord,
+};
 use kcd::comm::{allreduce_sum, run_ranks, AllreduceAlgo};
 use kcd::costmodel::Ledger;
 use kcd::dense::{gemm_nt, Cholesky, Mat};
@@ -21,6 +23,16 @@ fn rand_mat(rng: &mut Pcg, m: usize, n: usize) -> Mat {
 fn main() {
     let cfg = BenchConfig::default();
     let mut rng = Pcg::seeded(1);
+    // Perf-tracking records for the CI smoke lane (BENCH_SMOKE=1 →
+    // BENCH_<date>.json artifact; a no-op for plain `cargo bench`).
+    let mut log = BenchLog::new();
+    // The smoke lane shrinks the big sparse substrate so the whole
+    // suite stays in CI budget; local full runs keep the paper shape.
+    let (sg_m, sg_n, sg_stride) = if smoke_mode() {
+        (400usize, 1600usize, 12usize)
+    } else {
+        (2000, 8000, 60)
+    };
 
     section("dense substrate");
     let a = rand_mat(&mut rng, 256, 128);
@@ -32,6 +44,13 @@ fn main() {
     });
     let flops = 2.0 * 256.0 * 256.0 * 128.0;
     println!("  → {:.2} GF/s", flops / r.median() / 1e9);
+    log.push(BenchRecord {
+        bench: "gemm_nt".into(),
+        config: "m=256 n=128 k=256".into(),
+        wall_secs: r.median(),
+        flops,
+        words: 0.0,
+    });
 
     let spd = {
         let mut g = Mat::zeros(128, 128);
@@ -50,22 +69,33 @@ fn main() {
     section("sparse substrate");
     let ds = kcd::data::gen_uniform_sparse(
         kcd::data::SynthParams {
-            m: 2000,
-            n: 8000,
+            m: sg_m,
+            n: sg_n,
             density: 0.01,
             seed: 3,
         },
         kcd::data::Task::Classification,
     );
-    let sample: Vec<usize> = (0..32).map(|i| i * 60).collect();
-    let mut q = Mat::zeros(32, 2000);
+    let sample: Vec<usize> = (0..32).map(|i| i * sg_stride).collect();
+    let mut q = Mat::zeros(32, sg_m);
     let mut scratch = Vec::new();
-    let r = bench("sampled_gram (scatter) 32 rows 2000x8000 @1%", &cfg, || {
-        ds.a.sampled_gram(&sample, &mut q, &mut scratch);
-        q.data()[0]
-    });
+    let r = bench(
+        &format!("sampled_gram (scatter) 32 rows {sg_m}x{sg_n} @1%"),
+        &cfg,
+        || {
+            ds.a.sampled_gram(&sample, &mut q, &mut scratch);
+            q.data()[0]
+        },
+    );
     let eff_flops = 2.0 * 32.0 * ds.a.nnz() as f64;
     println!("  → {:.2} GF/s effective", eff_flops / r.median() / 1e9);
+    log.push(BenchRecord {
+        bench: "sampled_gram/scatter".into(),
+        config: format!("m={sg_m} n={sg_n} density=0.01 k=32"),
+        wall_secs: r.median(),
+        flops: eff_flops,
+        words: 0.0,
+    });
     let at = ds.a.transpose();
     let rt = bench("sampled_gram_t (transpose) same shape", &cfg, || {
         ds.a.sampled_gram_t(&at, &sample, &mut q);
@@ -75,9 +105,16 @@ fn main() {
         "  → {:.1}x over scatter variant (the sparse-oracle fast path)",
         r.median() / rt.median()
     );
+    log.push(BenchRecord {
+        bench: "sampled_gram/transpose".into(),
+        config: format!("m={sg_m} n={sg_n} density=0.01 k=32"),
+        wall_secs: rt.median(),
+        flops: eff_flops,
+        words: 0.0,
+    });
 
-    section("kernel maps (epilogue over 32x2000 block)");
-    let norms = vec![1.0; 2000];
+    section(&format!("kernel maps (epilogue over 32x{sg_m} block)"));
+    let norms = vec![1.0; sg_m];
     let snorms = vec![1.0; 32];
     for kernel in [Kernel::Linear, Kernel::paper_poly(), Kernel::paper_rbf()] {
         let mut z = q.clone();
@@ -89,10 +126,17 @@ fn main() {
 
     section("gram oracle end-to-end (rbf, 32 sampled rows)");
     let mut oracle = LocalGram::new(ds.a.clone(), Kernel::paper_rbf());
-    bench("LocalGram::gram 32x2000", &cfg, || {
+    let rg = bench(&format!("LocalGram::gram 32x{sg_m}"), &cfg, || {
         let mut ledger = Ledger::new();
         oracle.gram(&sample, &mut q, &mut ledger);
         q.data()[0]
+    });
+    log.push(BenchRecord {
+        bench: "local_gram/rbf".into(),
+        config: format!("m={sg_m} n={sg_n} density=0.01 k=32"),
+        wall_secs: rg.median(),
+        flops: eff_flops,
+        words: 0.0,
     });
 
     section("gram engine row cache (rbf, DCD-like with-replacement stream)");
@@ -107,7 +151,7 @@ fn main() {
     };
     for cache_rows in [0usize, 64, 256] {
         let mut oracle = LocalGram::with_cache(ds.a.clone(), Kernel::paper_rbf(), cache_rows);
-        let mut qq = Mat::zeros(8, 2000);
+        let mut qq = Mat::zeros(8, sg_m);
         let mut stats = kcd::costmodel::CacheStats::default();
         let r = bench(
             &format!("gram stream 64x8 rows, cache={cache_rows}"),
@@ -168,12 +212,19 @@ fn main() {
         AllreduceAlgo::RecursiveDoubling,
         AllreduceAlgo::Linear,
     ] {
-        bench(&format!("allreduce {} p=8 w=4096", algo.name()), &cfg, || {
+        let ra = bench(&format!("allreduce {} p=8 w=4096", algo.name()), &cfg, || {
             run_ranks(8, |c| {
                 let mut buf = vec![1.0f64; 4096];
                 allreduce_sum(c, &mut buf, algo);
                 buf[0]
             })
+        });
+        log.push(BenchRecord {
+            bench: format!("allreduce/{}", algo.name()),
+            config: "p=8 payload=4096".into(),
+            wall_secs: ra.median(),
+            flops: 0.0,
+            words: 4096.0,
         });
     }
 
@@ -254,13 +305,29 @@ fn main() {
     }
 
     section("CSR ops");
-    let x: Vec<f64> = (0..8000).map(|_| rng.next_gaussian()).collect();
-    let mut y = vec![0.0; 2000];
-    bench("spmv 2000x8000 @1%", &cfg, || {
+    let x: Vec<f64> = (0..sg_n).map(|_| rng.next_gaussian()).collect();
+    let mut y = vec![0.0; sg_m];
+    let rs = bench(&format!("spmv {sg_m}x{sg_n} @1%"), &cfg, || {
         ds.a.spmv(&x, &mut y);
         y[0]
     });
-    bench("transpose 2000x8000 @1%", &cfg, || ds.a.transpose().nnz());
+    log.push(BenchRecord {
+        bench: "spmv".into(),
+        config: format!("m={sg_m} n={sg_n} density=0.01"),
+        wall_secs: rs.median(),
+        flops: 2.0 * ds.a.nnz() as f64,
+        words: 0.0,
+    });
+    let rtp = bench(&format!("transpose {sg_m}x{sg_n} @1%"), &cfg, || {
+        ds.a.transpose().nnz()
+    });
+    log.push(BenchRecord {
+        bench: "csr_transpose".into(),
+        config: format!("m={sg_m} n={sg_n} density=0.01"),
+        wall_secs: rtp.median(),
+        flops: 0.0,
+        words: ds.a.nnz() as f64,
+    });
     bench("partition_cols p=16", &cfg, || {
         ds.a.partition_cols(16).len()
     });
@@ -295,6 +362,7 @@ fn main() {
         Err(e) => println!("skipped: {e:#} (run `make artifacts`)"),
     }
 
+    log.write_if_enabled();
     black_box(());
     println!("\nmicrobench done");
 }

@@ -9,7 +9,9 @@
 //! and the cloud profile — two orders of magnitude worse latency —
 //! should push every dataset's chosen `s` up.
 
-use kcd::bench_harness::{bench, black_box, quick_mode, section, BenchConfig};
+use kcd::bench_harness::{
+    bench, black_box, quick_mode, section, BenchConfig, BenchLog, BenchRecord,
+};
 use kcd::coordinator::ProblemSpec;
 use kcd::costmodel::MachineProfile;
 use kcd::data::paper_dataset;
@@ -76,6 +78,7 @@ fn main() {
         variant: SvmVariant::L1,
     };
     let cfg = BenchConfig::default();
+    let mut log = BenchLog::new();
     for p in [64usize, 512] {
         let req = TuneRequest::new(p, h);
         let machine = MachineProfile::cray_ex();
@@ -84,5 +87,13 @@ fn main() {
             black_box(plan.candidates.len())
         });
         println!("{}", r.line());
+        log.push(BenchRecord {
+            bench: "tune/full-plan".into(),
+            config: format!("dataset=colon-cancer scale=0.5 P={p} H={h}"),
+            wall_secs: r.median(),
+            flops: 0.0,
+            words: 0.0,
+        });
     }
+    log.write_if_enabled();
 }

@@ -13,6 +13,11 @@ use std::time::Instant;
 
 use crate::util::{fmt_secs, mean, median, stddev};
 
+pub mod calibrate;
+mod record;
+
+pub use record::{BenchLog, BenchRecord};
+
 /// Measurement settings.
 #[derive(Clone, Copy, Debug)]
 pub struct BenchConfig {
@@ -43,9 +48,19 @@ impl Default for BenchConfig {
 }
 
 /// True when `KCD_BENCH_QUICK=1` or `--quick` is on the command line.
+/// [`smoke_mode`] implies quick: the CI smoke lane wants small budgets
+/// *and* the JSON artifact, without setting two variables.
 pub fn quick_mode() -> bool {
     std::env::var_os("KCD_BENCH_QUICK").is_some_and(|v| v == "1")
         || std::env::args().any(|a| a == "--quick")
+        || smoke_mode()
+}
+
+/// True when `BENCH_SMOKE=1`: the CI perf-tracking lane. Benches then
+/// run a bounded subset at quick budgets and write their records to a
+/// `BENCH_<date>.json` artifact ([`BenchLog::write_if_enabled`]).
+pub fn smoke_mode() -> bool {
+    std::env::var_os("BENCH_SMOKE").is_some_and(|v| v == "1")
 }
 
 /// One benchmark's statistics (seconds per iteration).

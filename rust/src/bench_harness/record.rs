@@ -1,0 +1,212 @@
+//! Machine-readable bench records for the CI perf-tracking lane.
+//!
+//! Each bench that opts in pushes one [`BenchRecord`] per measured
+//! configuration into a [`BenchLog`]; at exit the log is written as a
+//! `BENCH_<date>.json` artifact when the smoke lane asks for it
+//! (`BENCH_SMOKE=1`, or an explicit `KCD_BENCH_JSON=<path>`). The
+//! schema is deliberately flat — one array of
+//! `{bench, config, wall_secs, flops, words}` objects — so a tracking
+//! dashboard can diff artifacts across commits without a parser beyond
+//! JSON itself.
+
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// One measured configuration of one bench.
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    /// Bench label, e.g. `"sampled_gram/sparse"`.
+    pub bench: String,
+    /// Free-form configuration tag, e.g. `"m=2000 n=8000 k=64"`.
+    pub config: String,
+    /// Median wall-clock seconds per iteration.
+    pub wall_secs: f64,
+    /// Analytic flop count per iteration (the cost model's count — the
+    /// same number the calibration fit regresses against).
+    pub flops: f64,
+    /// Analytic communication words per iteration (zero for pure
+    /// compute benches).
+    pub words: f64,
+}
+
+/// An append-only collection of [`BenchRecord`]s with a JSON writer.
+#[derive(Default)]
+pub struct BenchLog {
+    records: Vec<BenchRecord>,
+}
+
+impl BenchLog {
+    /// Empty log.
+    pub fn new() -> BenchLog {
+        BenchLog::default()
+    }
+
+    /// Append one record.
+    pub fn push(&mut self, record: BenchRecord) {
+        self.records.push(record);
+    }
+
+    /// Number of records collected.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Serialize every record as a JSON array (stable field order,
+    /// `{:e}` floats so values roundtrip bitwise through a reader).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("[\n");
+        for (i, r) in self.records.iter().enumerate() {
+            out.push_str(&format!(
+                "  {{\"bench\": \"{}\", \"config\": \"{}\", \"wall_secs\": {:e}, \
+                 \"flops\": {:e}, \"words\": {:e}}}{}\n",
+                json_escape(&r.bench),
+                json_escape(&r.config),
+                r.wall_secs,
+                r.flops,
+                r.words,
+                if i + 1 < self.records.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("]\n");
+        out
+    }
+
+    /// The artifact path: `KCD_BENCH_JSON` verbatim when set, else
+    /// `BENCH_<yyyy-mm-dd>.json` (UTC) in the working directory.
+    pub fn default_path() -> std::path::PathBuf {
+        match std::env::var_os("KCD_BENCH_JSON") {
+            Some(p) => std::path::PathBuf::from(p),
+            None => {
+                let (y, m, d) = today_utc();
+                std::path::PathBuf::from(format!("BENCH_{y:04}-{m:02}-{d:02}.json"))
+            }
+        }
+    }
+
+    /// Write the log to `path`.
+    pub fn write(&self, path: &std::path::Path) -> Result<(), String> {
+        std::fs::write(path, self.to_json())
+            .map_err(|e| format!("cannot write bench log '{}': {e}", path.display()))
+    }
+
+    /// Write to [`Self::default_path`] when the smoke lane (or an
+    /// explicit `KCD_BENCH_JSON`) asks for an artifact; otherwise a
+    /// no-op, so plain `cargo bench` leaves no files behind. Prints the
+    /// path on success, panics on an I/O failure — in CI a silently
+    /// missing artifact would read as "bench lane passed".
+    pub fn write_if_enabled(&self) {
+        if !(super::smoke_mode() || std::env::var_os("KCD_BENCH_JSON").is_some()) {
+            return;
+        }
+        let path = Self::default_path();
+        if let Err(e) = self.write(&path) {
+            panic!("{e}");
+        }
+        println!("wrote {} bench records to {}", self.len(), path.display());
+    }
+}
+
+/// Escape a string for inclusion inside a JSON string literal.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Today's UTC civil date (year, month, day) from the system clock.
+fn today_utc() -> (i64, u32, u32) {
+    let secs = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs() as i64)
+        .unwrap_or(0);
+    civil_from_days(secs.div_euclid(86_400))
+}
+
+/// Days-since-epoch → proleptic Gregorian civil date (Howard Hinnant's
+/// `civil_from_days` algorithm, exact over the whole i64 day range we
+/// can reach from a `SystemTime`).
+fn civil_from_days(z: i64) -> (i64, u32, u32) {
+    let z = z + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097); // [0, 146096]
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365; // [0, 399]
+    let y = yoe + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100); // [0, 365]
+    let mp = (5 * doy + 2) / 153; // [0, 11]
+    let d = (doy - (153 * mp + 2) / 5 + 1) as u32; // [1, 31]
+    let m = if mp < 10 { mp + 3 } else { mp - 9 } as u32; // [1, 12]
+    (if m <= 2 { y + 1 } else { y }, m, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn civil_date_known_values() {
+        assert_eq!(civil_from_days(0), (1970, 1, 1));
+        assert_eq!(civil_from_days(19_723), (2024, 1, 1));
+        assert_eq!(civil_from_days(19_723 + 366), (2025, 1, 1)); // 2024 is a leap year
+        assert_eq!(civil_from_days(-1), (1969, 12, 31));
+    }
+
+    #[test]
+    fn json_has_schema_fields_and_escapes() {
+        let mut log = BenchLog::new();
+        log.push(BenchRecord {
+            bench: "gram \"q\"".into(),
+            config: "m=10\tn=20".into(),
+            wall_secs: 0.5,
+            flops: 1e9,
+            words: 0.0,
+        });
+        log.push(BenchRecord {
+            bench: "comm".into(),
+            config: "p=4".into(),
+            wall_secs: 1e-3,
+            flops: 0.0,
+            words: 4096.0,
+        });
+        let json = log.to_json();
+        for field in ["\"bench\"", "\"config\"", "\"wall_secs\"", "\"flops\"", "\"words\""] {
+            assert!(json.contains(field), "missing {field} in {json}");
+        }
+        assert!(json.contains("gram \\\"q\\\""));
+        assert!(json.contains("m=10\\tn=20"));
+        assert!(json.trim_start().starts_with('['));
+        assert!(json.trim_end().ends_with(']'));
+        // One comma between the two records, none after the last.
+        assert_eq!(json.matches("},").count(), 1);
+    }
+
+    #[test]
+    fn write_roundtrips_to_disk() {
+        let mut log = BenchLog::new();
+        log.push(BenchRecord {
+            bench: "b".into(),
+            config: "c".into(),
+            wall_secs: 2.0,
+            flops: 3.0,
+            words: 4.0,
+        });
+        let path = std::env::temp_dir().join("kcd_bench_record_roundtrip.json");
+        log.write(&path).unwrap();
+        let back = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(back, log.to_json());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -57,9 +57,11 @@ const KNOWN_FLAGS: &[(&str, bool /* takes a value */)] = &[
     ("model", true),
     ("requests", true),
     ("batch", true),
+    ("profile-out", true),
     ("csv", false),
     ("json", false),
     ("auto-tune", false),
+    ("calibrate", false),
     ("quick", false),
     ("force", false),
     ("verbose", false),
@@ -202,7 +204,7 @@ COMMON FLAGS:
   --measured-limit <n>  scaling / breakdown: ranks up to this bound
                     run the measured engine; beyond it, projected  [8]
   --algo <a>        rabenseifner | rd | linear                  [rabenseifner]
-  --machine <m>     cray-ex | cloud                             [cray-ex]
+  --machine <m>     cray-ex | cloud | profile:<path>            [cray-ex]
   --seed <n>        Coordinate-stream seed.
   --gram-cache-rows <n>  Kernel-row LRU cache capacity (0 = off)  [0]
                     train-svm / train-krr / convergence only; the
@@ -248,6 +250,15 @@ COMMON FLAGS:
   --t-max <n>       tune: bound on thread candidates (always also
                     capped at the machine's cores-per-rank)  [cores]
   --top <n>         tune: candidates shown in the ranked report  [10]
+  --calibrate       tune: skip planning and instead *measure* this
+                    machine — time a deterministic microbench suite
+                    (sampled-gram kernels, loopback collectives), fit
+                    (alpha, beta, gamma) by least squares against the
+                    cost model's own counts, and save the result as a
+                    machine profile. --quick shrinks the suite for CI
+                    smoke runs (noisier fit).
+  --profile-out <file>  tune --calibrate: where the fitted profile is
+                    written            [machine-profile.toml]
   --json            tune: emit the machine-readable JSON report.
   --auto-tune       scaling: append the tuner's predicted-best
                     (pr, pc, t, s) row per sweep point.
@@ -270,7 +281,9 @@ COMMON FLAGS:
 --machine accepts per-parameter overrides for your own machine, e.g.
 cray-ex:alpha=1e-5,beta=4e-9,gamma=2.5e-10,cores=32 (alpha = seconds
 per message, beta = per word, gamma = per flop); malformed or
-non-positive values are hard errors naming the key.
+non-positive values are hard errors naming the key. `profile:<path>`
+loads a saved profile file instead — the handoff from
+`kcd tune --calibrate`, which measures the coefficients and writes one.
 
 Every value flag may also be given as a config-file key (lists as
 `p-list = [1, 2, 4]`); flags override the file. A key that is present
@@ -311,7 +324,7 @@ fn load_config(args: &Args) -> Result<Config> {
         "dataset", "scale", "kernel", "problem", "c", "lambda", "b", "h", "s", "p", "algo",
         "machine", "seed", "gram-cache-rows", "threads", "grid", "grid-rows", "grid-storage",
         "row-block", "overlap", "mem-limit", "every", "measured-limit", "s-max", "t-max", "top",
-        "save", "model", "requests", "batch",
+        "save", "model", "requests", "batch", "profile-out",
     ] {
         if let Some(v) = args.flag(key) {
             cfg.set(key, v);
@@ -1051,6 +1064,9 @@ fn cmd_breakdown(args: &Args) -> Result<String> {
 }
 
 fn cmd_tune(args: &Args) -> Result<String> {
+    if args.bool_flag("calibrate") {
+        return cmd_calibrate(args);
+    }
     let cfg = load_config(args)?;
     let problem = problem_from(&cfg)?;
     let task = match problem {
@@ -1141,6 +1157,72 @@ fn cmd_tune(args: &Args) -> Result<String> {
              predictions rest on the count replicas pinned in `cargo test`)\n"
         )),
     }
+    Ok(out)
+}
+
+/// `kcd tune --calibrate`: measure this machine's Hockney coefficients
+/// and persist them as a profile for `--machine profile:<path>`.
+///
+/// Division of labor: the wall-clock sampling lives in
+/// [`crate::bench_harness::calibrate`] (the detlint-allowlisted timing
+/// module); the least-squares fit in [`crate::tune::calibrate`] is pure
+/// and unit-tested on planted coefficients. This command strings them
+/// together, enforces a loose sanity band, and writes the profile.
+fn cmd_calibrate(args: &Args) -> Result<String> {
+    let cfg = load_config(args)?;
+    // The base contributes the unmeasured shape parameters (mu-scale,
+    // blas1 penalty, iteration overhead, cores); `--machine cloud
+    // --calibrate` grafts the measurements onto cloud's shape.
+    let base = machine_from(&cfg)?;
+    let quick = args.bool_flag("quick");
+    let path_s = cfg_str(&cfg, "profile-out")?
+        .unwrap_or("machine-profile.toml")
+        .to_string();
+
+    let obs = crate::bench_harness::calibrate::run_suite(quick);
+    let fitted = crate::tune::calibrate::fit(&obs).map_err(|e| anyhow!(e))?;
+    let profile = crate::tune::calibrate::apply(&base, &fitted);
+    // Loose sanity band: a reference mix of 1e9 flops + 1e6 words +
+    // 1e3 rounds must land between 100 ns and an hour. Outside that the
+    // fit is garbage (a paused VM, a clock glitch) and is not saved.
+    let ref_secs = profile.gamma * 1e9 + profile.beta * 1e6 + profile.phi * 1e3;
+    ensure!(
+        ref_secs.is_finite() && ref_secs > 1e-7 && ref_secs < 3600.0,
+        "calibration failed its sanity band: the fitted profile prices the \
+         reference mix (1e9 flops + 1e6 words + 1e3 rounds) at {ref_secs:.3e} s; \
+         rerun without --quick, or on a quieter machine"
+    );
+    profile
+        .save(std::path::Path::new(&path_s))
+        .map_err(|e| anyhow!(e))?;
+
+    let mut out = format!(
+        "calibration: {} observations ({} suite), base shape '{}'\n",
+        obs.len(),
+        if quick { "quick" } else { "full" },
+        base.name,
+    );
+    out.push_str(&format!(
+        "{:<24} {:>11} {:>11} {:>7} {:>11} {:>11}\n",
+        "bench", "flops", "words", "rounds", "measured", "fitted"
+    ));
+    for o in &obs {
+        let pred = fitted.gamma * o.flops + fitted.beta * o.words + fitted.alpha * o.rounds;
+        out.push_str(&format!(
+            "{:<24} {:>11.3e} {:>11.3e} {:>7.1} {:>10.3e}s {:>10.3e}s\n",
+            o.name, o.flops, o.words, o.rounds, o.secs, pred
+        ));
+    }
+    out.push_str(&format!(
+        "fit: alpha={:.3e} s/msg, beta={:.3e} s/word, gamma={:.3e} s/flop \
+         (rms relative residual {:.1}%)\n",
+        fitted.alpha,
+        fitted.beta,
+        fitted.gamma,
+        fitted.rel_residual * 100.0
+    ));
+    out.push_str(&format!("wrote machine profile to {path_s}\n"));
+    out.push_str(&format!("use it: kcd tune --machine profile:{path_s}\n"));
     Ok(out)
 }
 
@@ -1656,6 +1738,40 @@ mod tests {
         assert!(out.contains("(220 candidates)"), "{out}");
         // And the handoff line reproduces the override spec.
         assert!(out.contains("--machine cray-ex:alpha=5e-3,cores=4"), "{out}");
+    }
+
+    /// End-to-end `tune --calibrate --quick` through the library entry:
+    /// the suite runs, and the fit either succeeds — then the written
+    /// profile must load back through `--machine profile:<path>` with
+    /// positive finite coefficients — or fails with the calibration
+    /// error naming its cause (legal on a noisy builder: the quick
+    /// suite is deliberately small; CI's calibrate-smoke step enforces
+    /// success on a quiet runner). A wiring bug surfaces as any *other*
+    /// error and still fails the test.
+    #[test]
+    fn tune_calibrate_quick_end_to_end() {
+        let path = std::env::temp_dir().join("kcd_cli_calibrate_profile.toml");
+        std::fs::remove_file(&path).ok();
+        match run(argv(&format!(
+            "tune --calibrate --quick --profile-out {}",
+            path.display()
+        ))) {
+            Ok(out) => {
+                assert!(out.contains("wrote machine profile"), "{out}");
+                assert!(out.contains("use it: kcd tune --machine profile:"), "{out}");
+                let p =
+                    MachineProfile::parse(&format!("profile:{}", path.display())).unwrap();
+                assert_eq!(p.name, "calibrated");
+                for v in [p.gamma, p.beta, p.phi] {
+                    assert!(v.is_finite() && v > 0.0, "bad coefficient {v:e}");
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(msg.contains("calibration"), "unexpected error: {msg}");
+            }
+        }
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -373,8 +373,10 @@ impl MachineProfile {
 
     /// Parse a machine spec: a named profile (`cray-ex`, `cloud`),
     /// optionally followed by `:key=value,key=value` overrides — e.g.
-    /// `cray-ex:alpha=1e-5,beta=4e-9,gamma=2.5e-10,cores=32`. Override
-    /// keys use the communication-model spelling: `alpha` is seconds per
+    /// `cray-ex:alpha=1e-5,beta=4e-9,gamma=2.5e-10,cores=32` — or a
+    /// saved calibration, `profile:<path>` (see [`Self::load`] and
+    /// `kcd tune --calibrate`). Override keys use the
+    /// communication-model spelling: `alpha` is seconds per
     /// message (Hockney `φ`), `beta` seconds per f64 word, `gamma`
     /// seconds per flop, and `cores` the per-rank core budget the
     /// auto-tuner may spend on threads.
@@ -384,6 +386,9 @@ impl MachineProfile {
     /// hard error naming the key (`'machine.alpha'`), never a silent
     /// fallback to the base profile's value.
     pub fn parse(spec: &str) -> Result<MachineProfile, String> {
+        if let Some(path) = spec.strip_prefix("profile:") {
+            return MachineProfile::load(std::path::Path::new(path.trim()));
+        }
         let (base, overrides) = match spec.split_once(':') {
             Some((b, o)) => (b.trim(), Some(o)),
             None => (spec.trim(), None),
@@ -394,7 +399,7 @@ impl MachineProfile {
             other => {
                 return Err(format!(
                     "invalid value for 'machine': unknown profile '{other}' \
-                     (known: cray-ex, cloud; overrides: \
+                     (known: cray-ex, cloud, profile:<path>; overrides: \
                      :alpha=..,beta=..,gamma=..,cores=..)"
                 ))
             }
@@ -454,6 +459,110 @@ impl MachineProfile {
             }
         }
         Ok(profile)
+    }
+
+    /// Serialize to the TOML-subset profile format [`Self::load`]
+    /// reads (the same `key = value` grammar as `--config` files,
+    /// parsed by `coordinator::Config`). Floats are printed with `{:e}`
+    /// — Rust's shortest-round-trip representation — so a save → load
+    /// cycle reproduces every field bit for bit (pinned by a test).
+    pub fn to_profile_string(&self) -> String {
+        format!(
+            "# kcd machine profile (written by `kcd tune --calibrate`)\n\
+             # load with: --machine profile:<this file>\n\
+             profile = \"{}\"\n\
+             alpha = {:e}\n\
+             beta = {:e}\n\
+             gamma = {:e}\n\
+             mu-scale = {:e}\n\
+             blas1-penalty = {:e}\n\
+             iter-overhead = {:e}\n\
+             cores = {}\n",
+            self.name,
+            self.phi,
+            self.beta,
+            self.gamma,
+            self.mu_scale,
+            self.blas1_penalty,
+            self.iter_overhead,
+            self.cores_per_rank,
+        )
+    }
+
+    /// Write the profile to `path` in the [`Self::load`] format.
+    pub fn save(&self, path: &std::path::Path) -> Result<(), String> {
+        std::fs::write(path, self.to_profile_string())
+            .map_err(|e| format!("cannot write machine profile '{}': {e}", path.display()))
+    }
+
+    /// Load a saved profile (`--machine profile:<path>`; written by
+    /// [`Self::save`] from `kcd tune --calibrate`, or by hand).
+    pub fn load(path: &std::path::Path) -> Result<MachineProfile, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read machine profile '{}': {e}", path.display()))?;
+        Self::from_profile_string(&text)
+            .map_err(|e| format!("machine profile '{}': {e}", path.display()))
+    }
+
+    /// Parse the profile file format: TOML-subset `key = value` with
+    /// required `alpha` / `beta` / `gamma` / `cores` and optional
+    /// `mu-scale` / `blas1-penalty` / `iter-overhead` (defaulting to
+    /// the [`Self::cray_ex`] shape parameters) plus an optional
+    /// `profile` name tag. Strict `Config::try_*` semantics: an absent
+    /// optional key falls back, but a present-and-malformed, missing
+    /// required, non-finite, or non-positive value is a hard error
+    /// naming the key.
+    pub fn from_profile_string(text: &str) -> Result<MachineProfile, String> {
+        let cfg = crate::coordinator::Config::parse(text)?;
+        let base = MachineProfile::cray_ex();
+        let require = |key: &str| -> Result<f64, String> {
+            let v = cfg
+                .try_f64(key)?
+                .ok_or_else(|| format!("missing required key '{key}'"))?;
+            if !v.is_finite() || v <= 0.0 {
+                return Err(format!(
+                    "invalid value for '{key}': expected a positive number of \
+                     seconds, got {v}"
+                ));
+            }
+            Ok(v)
+        };
+        let optional = |key: &str, default: f64| -> Result<f64, String> {
+            match cfg.try_f64(key)? {
+                None => Ok(default),
+                Some(v) if v.is_finite() && v > 0.0 => Ok(v),
+                Some(v) => Err(format!(
+                    "invalid value for '{key}': expected a positive number, got {v}"
+                )),
+            }
+        };
+        let phi = require("alpha")?;
+        let beta = require("beta")?;
+        let gamma = require("gamma")?;
+        let cores_per_rank = cfg
+            .try_usize("cores")?
+            .ok_or_else(|| "missing required key 'cores'".to_string())?;
+        if cores_per_rank == 0 {
+            return Err("invalid value for 'cores': expected a positive integer, got 0".into());
+        }
+        // `name` stays `&'static str` (the profile is `Copy` and shared
+        // by value throughout the tuner): known tags map back to their
+        // static names, anything else is a calibrated profile.
+        let name = match cfg.try_str("profile")?.unwrap_or("calibrated") {
+            "cray-ex" => "cray-ex",
+            "cloud" => "cloud",
+            _ => "calibrated",
+        };
+        Ok(MachineProfile {
+            name,
+            gamma,
+            beta,
+            phi,
+            mu_scale: optional("mu-scale", base.mu_scale)?,
+            blas1_penalty: optional("blas1-penalty", base.blas1_penalty)?,
+            iter_overhead: optional("iter-overhead", base.iter_overhead)?,
+            cores_per_rank,
+        })
     }
 
     /// Words per message at which latency and bandwidth costs are equal —
@@ -996,5 +1105,104 @@ mod tests {
         assert!(m.balance_words() < 100_000.0);
         // The cloud profile is far more latency-dominated.
         assert!(MachineProfile::cloud().balance_words() > m.balance_words());
+    }
+
+    /// Every field — including coefficients with no short decimal form —
+    /// survives a serialize → parse cycle bit for bit (`{:e}` prints
+    /// the shortest representation that round-trips through
+    /// `str::parse::<f64>`).
+    #[test]
+    fn profile_roundtrip_is_bitwise() {
+        let p = MachineProfile {
+            name: "calibrated",
+            gamma: 2.5e-10 * (1.0 + f64::EPSILON),
+            beta: 1.0 / 3.0 * 1e-8,
+            phi: 5.000000000000001e-6,
+            mu_scale: 1.7,
+            blas1_penalty: 3.9999999999999996,
+            iter_overhead: 4.9e-6,
+            cores_per_rank: 48,
+        };
+        let q = MachineProfile::from_profile_string(&p.to_profile_string())
+            .expect("own output must parse");
+        assert_eq!(p.name, q.name);
+        assert_eq!(p.gamma.to_bits(), q.gamma.to_bits());
+        assert_eq!(p.beta.to_bits(), q.beta.to_bits());
+        assert_eq!(p.phi.to_bits(), q.phi.to_bits());
+        assert_eq!(p.mu_scale.to_bits(), q.mu_scale.to_bits());
+        assert_eq!(p.blas1_penalty.to_bits(), q.blas1_penalty.to_bits());
+        assert_eq!(p.iter_overhead.to_bits(), q.iter_overhead.to_bits());
+        assert_eq!(p.cores_per_rank, q.cores_per_rank);
+    }
+
+    /// `save` → `parse("profile:<path>")` is the full CLI loop: the file
+    /// written by `--calibrate` is what `--machine profile:` consumes.
+    #[test]
+    fn profile_save_load_through_machine_spec() {
+        let dir = std::env::temp_dir().join("kcd_costmodel_profile");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.toml");
+        let mut p = MachineProfile::cloud();
+        p.name = "calibrated";
+        p.gamma = 3.141592653589793e-10;
+        p.save(&path).expect("save");
+        let spec = format!("profile:{}", path.display());
+        let q = MachineProfile::parse(&spec).expect("load through parse");
+        std::fs::remove_file(&path).ok();
+        assert_eq!(q.name, "calibrated");
+        assert_eq!(q.gamma.to_bits(), p.gamma.to_bits());
+        assert_eq!(q.beta.to_bits(), p.beta.to_bits());
+        assert_eq!(q.phi.to_bits(), p.phi.to_bits());
+        assert_eq!(q.cores_per_rank, p.cores_per_rank);
+    }
+
+    /// Known name tags map back to their static names; anything else is
+    /// `calibrated`.
+    #[test]
+    fn profile_name_tags_map_to_static_names() {
+        for (tag, want) in [
+            ("cray-ex", "cray-ex"),
+            ("cloud", "cloud"),
+            ("my-workstation", "calibrated"),
+        ] {
+            let text = format!(
+                "profile = \"{tag}\"\nalpha = 1e-6\nbeta = 1e-9\ngamma = 1e-10\ncores = 4\n"
+            );
+            let p = MachineProfile::from_profile_string(&text).expect(tag);
+            assert_eq!(p.name, want);
+        }
+        // Absent tag defaults to calibrated, absent shape params to cray-ex's.
+        let p = MachineProfile::from_profile_string(
+            "alpha = 1e-6\nbeta = 1e-9\ngamma = 1e-10\ncores = 4\n",
+        )
+        .unwrap();
+        assert_eq!(p.name, "calibrated");
+        assert_eq!(p.blas1_penalty, MachineProfile::cray_ex().blas1_penalty);
+    }
+
+    /// The strict-accessor convention: missing required keys and
+    /// malformed or non-positive values are hard errors naming the key.
+    #[test]
+    fn profile_file_errors_name_the_key() {
+        let base = "alpha = 1e-6\nbeta = 1e-9\ngamma = 1e-10\ncores = 4\n";
+        for (text, key) in [
+            ("beta = 1e-9\ngamma = 1e-10\ncores = 4\n", "alpha"),
+            ("alpha = 1e-6\ngamma = 1e-10\ncores = 4\n", "beta"),
+            ("alpha = 1e-6\nbeta = 1e-9\ncores = 4\n", "gamma"),
+            ("alpha = 1e-6\nbeta = 1e-9\ngamma = 1e-10\n", "cores"),
+            ("alpha = -1e-6\nbeta = 1e-9\ngamma = 1e-10\ncores = 4\n", "alpha"),
+            ("alpha = \"fast\"\nbeta = 1e-9\ngamma = 1e-10\ncores = 4\n", "alpha"),
+            ("alpha = 1e-6\nbeta = 1e-9\ngamma = 1e-10\ncores = 0\n", "cores"),
+        ] {
+            let err = MachineProfile::from_profile_string(text).expect_err(text);
+            assert!(err.contains(key), "{text:?}: error must name {key}, got: {err}");
+        }
+        // mu-scale is optional, but present-and-broken is still an error.
+        let text = format!("{base}mu-scale = 0\n");
+        let err = MachineProfile::from_profile_string(&text).unwrap_err();
+        assert!(err.contains("mu-scale"), "{err}");
+        // A missing file through the machine spec names the path.
+        let err = MachineProfile::parse("profile:/nonexistent/kcd.toml").unwrap_err();
+        assert!(err.contains("/nonexistent/kcd.toml"), "{err}");
     }
 }

@@ -52,6 +52,22 @@ pub trait ProductStage {
     fn apply_epilogue(&mut self, epilogue: &super::epilogue::Epilogue, rows: &[usize], q: &mut Mat) {
         epilogue.apply(rows, q);
     }
+
+    /// Optional per-sampled-row work estimates for the threaded split:
+    /// `Some(w)` (one weight per `sample` entry, arbitrary relative
+    /// units) lets [`crate::parallel::ParallelProduct`] place its
+    /// contiguous range boundaries by accumulated weight
+    /// (`partition_by_weight`) instead of row count, which balances
+    /// skewed sparse matrices. Purely a *layout* hint: every row is
+    /// still computed exactly once with the serial arithmetic, so the
+    /// assembled block is bitwise independent of the weights. An
+    /// implementation must return a pure function of the stage's
+    /// matrix and `sample` — never of threads, cache state, or timing
+    /// (the bitwise-determinism contract covers layout decisions too).
+    /// Default `None`: row-count-balanced ranges.
+    fn sample_cost(&self, _sample: &[usize]) -> Option<Vec<u64>> {
+        None
+    }
 }
 
 /// Density below which the transpose-based gram beats the blocked
@@ -83,8 +99,25 @@ impl CsrProduct {
     /// its density.
     pub fn new(a: Csr) -> CsrProduct {
         let at = (a.density() < TRANSPOSE_GRAM_MAX_DENSITY).then(|| Arc::new(a.transpose()));
+        Self::with_transpose(Arc::new(a), at)
+    }
+
+    /// Wrap a matrix with a caller-built transpose — the construction
+    /// path for oracles that build `at` on a worker pool
+    /// ([`crate::parallel::transpose_with_pool`]) before the stage
+    /// exists. `at` must equal `a.transpose()` when `Some` (shape and
+    /// nnz are asserted; the bitwise contract requires value equality
+    /// too), and must be `Some` exactly when `a.density()` is below
+    /// [`TRANSPOSE_GRAM_MAX_DENSITY`] to reproduce [`Self::new`]'s
+    /// path decision.
+    pub fn with_transpose(a: Arc<Csr>, at: Option<Arc<Csr>>) -> CsrProduct {
+        if let Some(at) = &at {
+            assert_eq!(at.nrows(), a.ncols(), "transpose row count");
+            assert_eq!(at.ncols(), a.nrows(), "transpose column count");
+            assert_eq!(at.nnz(), a.nnz(), "transpose nnz");
+        }
         CsrProduct {
-            a: Arc::new(a),
+            a,
             at,
             scratch: Vec::new(),
         }
@@ -115,6 +148,30 @@ impl ProductStage for CsrProduct {
             rows_charged: sample.len(),
         }
     }
+
+    /// nnz-balanced weights for the transpose path: sampled row `i`
+    /// costs one column walk per stored entry, `Σ_j nnz(Aᵀ row j)` over
+    /// its columns `j` — a pure function of the matrix and the sample.
+    /// The blocked scatter-dot path streams all of `A` per sampled row
+    /// (uniform cost), so it keeps the row-count split.
+    fn sample_cost(&self, sample: &[usize]) -> Option<Vec<u64>> {
+        let at = self.at.as_deref()?;
+        Some(row_walk_weights(&self.a, sample, at))
+    }
+}
+
+/// Per-sampled-row column-walk cost of the transpose-based gram: for
+/// each sampled row of `rows`, one unit per visit of a transpose row —
+/// `1 + Σ_{j ∈ cols(i)} at.row_nnz(j)` (the `1` keeps empty rows from
+/// collapsing the weight vector to all zeros).
+fn row_walk_weights(rows: &Csr, sample: &[usize], at: &Csr) -> Vec<u64> {
+    sample
+        .iter()
+        .map(|&i| {
+            let (cols, _) = rows.row_parts(i);
+            1 + cols.iter().map(|&j| at.row_nnz(j) as u64).sum::<u64>()
+        })
+        .collect()
 }
 
 /// Low-rank (Nyström) product: `K̂(S, ·) = (C W⁻¹)[S, :] · Cᵀ`, a
@@ -217,6 +274,24 @@ impl FragmentSlot {
         inner.pos = pos;
     }
 
+    /// Per-sampled-row weights for the threaded split (see
+    /// [`ProductStage::sample_cost`]): the fragment rows' column-walk
+    /// cost against `at`. `None` when any sampled row has not been
+    /// exchanged yet — a layout hint must degrade to the row-count
+    /// split rather than panic (only `gather`, on the compute path
+    /// proper, treats a missing fragment as a bug).
+    fn weigh(&self, sample: &[usize], at: &Csr) -> Option<Vec<u64>> {
+        let inner = self.inner.read().expect("fragment slot poisoned");
+        sample
+            .iter()
+            .map(|t| {
+                let &idx = inner.pos.get(t)?;
+                let (cols, _) = inner.rows.row_parts(idx);
+                Some(1 + cols.iter().map(|&j| at.row_nnz(j) as u64).sum::<u64>())
+            })
+            .collect()
+    }
+
     /// Gather the fragments of `sample` (global row ids, duplicates
     /// allowed) in sample order. Panics if the exchange for this call
     /// has not run — the engine always exchanges before the product.
@@ -317,14 +392,35 @@ impl GridProduct {
     /// [`crate::gram::block_cyclic_rows`]).
     pub fn new(shard: Csr, owned_rows: &[usize]) -> GridProduct {
         assert_owned_ascending(owned_rows);
-        let owned = shard.gather_rows(owned_rows);
+        let owned = Arc::new(shard.gather_rows(owned_rows));
         // Path choice by the FULL shard's density — identical to the 1D
         // CsrProduct on this shard, so grid partials replay its bits.
         let owned_t = (shard.density() < TRANSPOSE_GRAM_MAX_DENSITY)
             .then(|| Arc::new(owned.transpose()));
+        Self::replicated_from_parts(Arc::new(shard), owned, owned_t)
+    }
+
+    /// Replicated-storage cell from pre-gathered parts — the
+    /// construction path for oracles that build the transpose on a
+    /// worker pool ([`crate::parallel::transpose_with_pool`]). `owned`
+    /// must be `shard.gather_rows(owned_rows)` for a strictly
+    /// ascending row group, and `owned_t` its transpose exactly when
+    /// the *full shard's* density is below
+    /// [`TRANSPOSE_GRAM_MAX_DENSITY`] — the same decisions
+    /// [`Self::new`] makes, which the bitwise contract requires.
+    pub fn replicated_from_parts(
+        shard: Arc<Csr>,
+        owned: Arc<Csr>,
+        owned_t: Option<Arc<Csr>>,
+    ) -> GridProduct {
+        if let Some(at) = &owned_t {
+            assert_eq!(at.nrows(), owned.ncols(), "owned transpose row count");
+            assert_eq!(at.ncols(), owned.nrows(), "owned transpose column count");
+            assert_eq!(at.nnz(), owned.nnz(), "owned transpose nnz");
+        }
         GridProduct {
-            source: SampleSource::Replicated(Arc::new(shard)),
-            owned: Arc::new(owned),
+            source: SampleSource::Replicated(shard),
+            owned,
             owned_t,
             scratch: Vec::new(),
             block: Mat::zeros(0, 0),
@@ -347,6 +443,26 @@ impl GridProduct {
     ) -> GridProduct {
         let owned_t = (full_density < TRANSPOSE_GRAM_MAX_DENSITY)
             .then(|| Arc::new(owned.transpose()));
+        Self::sharded_from_parts(owned, owned_t, m, slot)
+    }
+
+    /// Sharded-storage cell with a caller-built transpose of the owned
+    /// row group (see [`Self::sharded`] for the field meanings, and
+    /// [`Self::replicated_from_parts`] for why oracles pass the
+    /// transpose in: it is built on the product's own worker pool).
+    /// `owned_t` must be `owned.transpose()` exactly when the full
+    /// shard's density is below [`TRANSPOSE_GRAM_MAX_DENSITY`].
+    pub fn sharded_from_parts(
+        owned: Arc<Csr>,
+        owned_t: Option<Arc<Csr>>,
+        m: usize,
+        slot: Arc<FragmentSlot>,
+    ) -> GridProduct {
+        if let Some(at) = &owned_t {
+            assert_eq!(at.nrows(), owned.ncols(), "owned transpose row count");
+            assert_eq!(at.ncols(), owned.nrows(), "owned transpose column count");
+            assert_eq!(at.nnz(), owned.nnz(), "owned transpose nnz");
+        }
         GridProduct {
             source: SampleSource::Sharded { slot, m },
             owned,
@@ -399,6 +515,19 @@ impl ProductStage for GridProduct {
 
     fn kind(&self) -> BlockKind {
         BlockKind::Linear
+    }
+
+    /// Per-sampled-row flop weights for the transpose fast path: the
+    /// column walk over the owned transpose that `compute` performs for
+    /// that row. Pure in (matrices, sample) — the dense/blocked path
+    /// (and a sharded cell before its first exchange) reports `None`,
+    /// falling back to row-count splits.
+    fn sample_cost(&self, sample: &[usize]) -> Option<Vec<u64>> {
+        let at = self.owned_t.as_deref()?;
+        match &self.source {
+            SampleSource::Replicated(shard) => Some(row_walk_weights(shard, sample, at)),
+            SampleSource::Sharded { slot, .. } => slot.weigh(sample, at),
+        }
     }
 
     fn compute(&mut self, sample: &[usize], q: &mut Mat) -> ProductCost {

@@ -45,12 +45,50 @@ use std::thread::JoinHandle;
 
 use crate::dense::Mat;
 use crate::gram::{BlockKind, Epilogue, ProductCost, ProductStage};
+use crate::sparse::Csr;
 
 /// Contiguous near-equal partition bounds: `bounds[i]..bounds[i+1]` is
 /// worker `i`'s range. `parts + 1` entries, monotone, covering `0..n`.
 pub fn partition_bounds(n: usize, parts: usize) -> Vec<usize> {
     assert!(parts >= 1, "partition into at least one part");
     (0..=parts).map(|i| i * n / parts).collect()
+}
+
+/// Contiguous *weighted* partition bounds: split `0..weights.len()`
+/// into `parts` ranges whose weight sums are near-equal — the
+/// nnz-balanced row split for skewed sparse matrices, where equal
+/// *counts* leave one worker holding all the heavy rows.
+///
+/// Boundary `i` is the smallest index whose weight prefix reaches
+/// `total·i/parts` (exact integer arithmetic, no float), so the result
+/// is monotone, covers `0..n`, and is a **pure function of
+/// `(weights, parts)`** — invariant to threads, cache state, and
+/// everything else ambient, as the bitwise-determinism contract
+/// requires of a layout decision. No range's weight exceeds
+/// `total/parts + max(weights)` (each boundary overshoots its target
+/// by less than one row). All-zero weights fall back to
+/// [`partition_bounds`].
+pub fn partition_by_weight(weights: &[u64], parts: usize) -> Vec<usize> {
+    assert!(parts >= 1, "partition into at least one part");
+    let n = weights.len();
+    let total: u128 = weights.iter().map(|&w| u128::from(w)).sum();
+    if total == 0 {
+        return partition_bounds(n, parts);
+    }
+    let mut bounds = Vec::with_capacity(parts + 1);
+    bounds.push(0usize);
+    let mut prefix: u128 = 0;
+    let mut idx = 0usize;
+    for part in 1..parts {
+        let target = total * part as u128 / parts as u128;
+        while idx < n && prefix < target {
+            prefix += u128::from(weights[idx]);
+            idx += 1;
+        }
+        bounds.push(idx);
+    }
+    bounds.push(n);
+    bounds
 }
 
 /// Run one job per worker on scoped threads and return the results in
@@ -224,6 +262,119 @@ impl Drop for WorkerPool {
     }
 }
 
+/// Below this nnz the threaded transpose falls back to the serial
+/// counting sort: each worker allocates an `O(ncols)` count array, so
+/// tiny matrices pay more in setup than the scatter costs.
+const PARALLEL_TRANSPOSE_MIN_NNZ: usize = 1 << 13;
+
+/// Transpose `a` on the pool's workers, **bitwise identical to
+/// [`Csr::transpose`]** for every worker count — the construction-time
+/// half of ROADMAP item 5's compute overheads (the per-call half being
+/// the nnz-balanced product split).
+///
+/// Three phases, all deterministic:
+///
+/// 1. each worker counting-sorts a contiguous, nnz-balanced range of
+///    input rows into a private sub-transpose (own counts / row-ids /
+///    values, ascending source row within each column);
+/// 2. the caller sums the per-worker column counts into the global
+///    `indptr` (serial, `O(t·ncols)`);
+/// 3. workers own contiguous, nnz-balanced output *column* ranges —
+///    disjoint `indices`/`data` spans split at `indptr` boundaries —
+///    and concatenate each column's per-range slabs in range order.
+///
+/// Row ranges ascend in source row and each worker scatters its rows
+/// ascending, so every output column lists source rows in ascending
+/// order — exactly the serial counting sort's order, hence equal
+/// `indptr` / `indices` / `data` arrays (pinned by tests at every
+/// worker count).
+pub fn transpose_with_pool(a: &Csr, pool: &mut WorkerPool) -> Csr {
+    let t = pool.extra_workers() + 1;
+    if t == 1 || a.nnz() < PARALLEL_TRANSPOSE_MIN_NNZ {
+        return a.transpose();
+    }
+    let (nrows, ncols, nnz) = (a.nrows(), a.ncols(), a.nnz());
+    // Phase 1: per-worker sub-transposes over nnz-balanced row ranges.
+    let row_w: Vec<u64> = (0..nrows).map(|i| a.row_nnz(i) as u64).collect();
+    let rb = partition_by_weight(&row_w, t);
+    let locals: Vec<(Vec<usize>, Vec<usize>, Vec<f64>)> = {
+        let jobs: Vec<_> = (0..t)
+            .map(|w| {
+                let (r0, r1) = (rb[w], rb[w + 1]);
+                move || {
+                    let mut counts = vec![0usize; ncols + 1];
+                    for i in r0..r1 {
+                        let (cols, _) = a.row_parts(i);
+                        for &j in cols {
+                            counts[j + 1] += 1;
+                        }
+                    }
+                    for j in 0..ncols {
+                        counts[j + 1] += counts[j];
+                    }
+                    let sub_nnz = counts[ncols];
+                    let mut rows = vec![0usize; sub_nnz];
+                    let mut vals = vec![0.0f64; sub_nnz];
+                    let mut cursor = counts.clone();
+                    for i in r0..r1 {
+                        for (j, v) in a.row_iter(i) {
+                            let dst = cursor[j];
+                            rows[dst] = i;
+                            vals[dst] = v;
+                            cursor[j] += 1;
+                        }
+                    }
+                    (counts, rows, vals)
+                }
+            })
+            .collect();
+        pool.run(jobs)
+    };
+    // Phase 2: global column counts → indptr.
+    let mut indptr = vec![0usize; ncols + 1];
+    for j in 0..ncols {
+        let col: usize = locals.iter().map(|(c, _, _)| c[j + 1] - c[j]).sum();
+        indptr[j + 1] = indptr[j] + col;
+    }
+    debug_assert_eq!(indptr[ncols], nnz);
+    // Phase 3: concatenate slabs into nnz-balanced output column ranges.
+    let col_w: Vec<u64> = (0..ncols)
+        .map(|j| (indptr[j + 1] - indptr[j]) as u64)
+        .collect();
+    let cb = partition_by_weight(&col_w, t);
+    let mut indices = vec![0usize; nnz];
+    let mut data = vec![0.0f64; nnz];
+    {
+        let mut idx_rest: &mut [usize] = &mut indices;
+        let mut val_rest: &mut [f64] = &mut data;
+        let mut jobs = Vec::with_capacity(t);
+        for w in 0..t {
+            let (c0, c1) = (cb[w], cb[w + 1]);
+            let span = indptr[c1] - indptr[c0];
+            let (idx_chunk, idx_tail) = std::mem::take(&mut idx_rest).split_at_mut(span);
+            let (val_chunk, val_tail) = std::mem::take(&mut val_rest).split_at_mut(span);
+            idx_rest = idx_tail;
+            val_rest = val_tail;
+            let locals = &locals;
+            jobs.push(move || {
+                let mut out = 0usize;
+                for j in c0..c1 {
+                    for (counts, rows, vals) in locals {
+                        let (lo, hi) = (counts[j], counts[j + 1]);
+                        let len = hi - lo;
+                        idx_chunk[out..out + len].copy_from_slice(&rows[lo..hi]);
+                        val_chunk[out..out + len].copy_from_slice(&vals[lo..hi]);
+                        out += len;
+                    }
+                }
+                debug_assert_eq!(out, span);
+            });
+        }
+        pool.run(jobs);
+    }
+    Csr::new(ncols, nrows, indptr, indices, data)
+}
+
 /// Threaded adapter around any [`ProductStage`]: splits the sampled rows
 /// of each `compute` call across `threads` workers.
 ///
@@ -253,15 +404,23 @@ impl<P: ProductStage + Clone> ParallelProduct<P> {
     /// Wrap `inner` with `threads` workers (`threads >= 1`).
     pub fn new(inner: P, threads: usize) -> ParallelProduct<P> {
         assert!(threads >= 1, "ParallelProduct needs at least one thread");
+        Self::with_pool(inner, WorkerPool::new(threads - 1))
+    }
+
+    /// Wrap `inner` around an already-spawned pool (worker count
+    /// `pool.extra_workers() + 1`). This is the construction path for
+    /// oracles that first use the pool to build the stage's cached
+    /// transpose ([`transpose_with_pool`]) — the same threads then
+    /// serve every `compute` call, so the one-off construction cost
+    /// parallelizes like the solve itself.
+    pub fn with_pool(inner: P, pool: WorkerPool) -> ParallelProduct<P> {
+        let threads = pool.extra_workers() + 1;
         let mut workers = Vec::with_capacity(threads);
         for _ in 1..threads {
             workers.push(inner.clone());
         }
         workers.push(inner);
-        ParallelProduct {
-            workers,
-            pool: WorkerPool::new(threads - 1),
-        }
+        ParallelProduct { workers, pool }
     }
 }
 
@@ -294,7 +453,18 @@ impl<P: ProductStage + Send> ProductStage for ParallelProduct<P> {
             return self.workers[0].compute(sample, q);
         }
         let m = q.ncols();
-        let bounds = partition_bounds(k, t);
+        // nnz-balanced split when the stage can price its sampled rows
+        // ([`ProductStage::sample_cost`]); row-count-balanced otherwise.
+        // Pure layout: each row is still computed once, serially, by
+        // exactly one worker, so the assembled block is bitwise
+        // independent of which split was chosen.
+        let bounds = match self.workers[0].sample_cost(sample) {
+            Some(w) => {
+                debug_assert_eq!(w.len(), k, "one weight per sampled row");
+                partition_by_weight(&w, t)
+            }
+            None => partition_bounds(k, t),
+        };
         // Hand each worker its row range and the matching contiguous
         // slice of the row-major output (disjoint by construction).
         let mut rest: &mut [f64] = q.data_mut();
@@ -507,5 +677,173 @@ mod tests {
     fn zero_threads_is_rejected() {
         let a = gen_dense_classification(4, 2, 0.0, 1).a;
         let _ = ParallelProduct::new(CsrProduct::new(a), 0);
+    }
+
+    #[test]
+    fn partition_by_weight_covers_and_is_monotone() {
+        let mut rng = Pcg::seeded(71);
+        for n in [0usize, 1, 5, 64, 257] {
+            let weights: Vec<u64> = (0..n).map(|_| rng.gen_below(100) as u64).collect();
+            for parts in [1usize, 2, 3, 8, 11] {
+                let b = partition_by_weight(&weights, parts);
+                assert_eq!(b.len(), parts + 1);
+                assert_eq!(b[0], 0);
+                assert_eq!(b[parts], n);
+                for i in 0..parts {
+                    assert!(b[i] <= b[i + 1]);
+                }
+                // Balance: no range exceeds the perfect share by more
+                // than one row's weight.
+                let total: u64 = weights.iter().sum();
+                let max_w = weights.iter().copied().max().unwrap_or(0);
+                for i in 0..parts {
+                    let w: u64 = weights[b[i]..b[i + 1]].iter().sum();
+                    assert!(
+                        w <= total / parts as u64 + max_w + 1,
+                        "part {i} weight {w} vs share {} + max {max_w}",
+                        total / parts as u64
+                    );
+                }
+            }
+        }
+        // All-zero weights fall back to the count split.
+        assert_eq!(partition_by_weight(&[0, 0, 0, 0], 2), partition_bounds(4, 2));
+    }
+
+    /// The ISSUE acceptance property: on a skewed matrix the weighted
+    /// split's worst-loaded worker is strictly better than the
+    /// row-count split's, at every worker count 2..=8.
+    #[test]
+    fn weighted_split_strictly_improves_skewed_imbalance() {
+        // One pathologically heavy head row + a light tail.
+        let mut weights = vec![1u64; 64];
+        weights[0] = 1000;
+        weights[1] = 500;
+        let max_load = |bounds: &[usize]| -> u64 {
+            bounds
+                .windows(2)
+                .map(|w| weights[w[0]..w[1]].iter().sum())
+                .max()
+                .unwrap()
+        };
+        for parts in 2..=8usize {
+            let uniform = max_load(&partition_bounds(weights.len(), parts));
+            let weighted = max_load(&partition_by_weight(&weights, parts));
+            assert!(
+                weighted < uniform,
+                "parts={parts}: weighted {weighted} !< uniform {uniform}"
+            );
+        }
+    }
+
+    fn assert_csr_equal(a: &Csr, b: &Csr, tag: &str) {
+        assert_eq!(a.nrows(), b.nrows(), "{tag}: nrows");
+        assert_eq!(a.ncols(), b.ncols(), "{tag}: ncols");
+        assert_eq!(a.nnz(), b.nnz(), "{tag}: nnz");
+        for i in 0..a.nrows() {
+            let (ci, vi) = a.row_parts(i);
+            let (cj, vj) = b.row_parts(i);
+            assert_eq!(ci, cj, "{tag}: row {i} indices");
+            // Bitwise, not approximate: the stored arrays must be equal.
+            let vi_bits: Vec<u64> = vi.iter().map(|v| v.to_bits()).collect();
+            let vj_bits: Vec<u64> = vj.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(vi_bits, vj_bits, "{tag}: row {i} values");
+        }
+    }
+
+    /// The pooled transpose replays the serial counting sort's arrays
+    /// exactly — above the serial-fallback threshold (so the 3-phase
+    /// path actually runs) and below it, at every worker count.
+    #[test]
+    fn pooled_transpose_is_bitwise_identical_to_serial() {
+        // ~12k nnz: well above PARALLEL_TRANSPOSE_MIN_NNZ.
+        let big = gen_uniform_sparse(
+            SynthParams {
+                m: 200,
+                n: 300,
+                density: 0.2,
+                seed: 77,
+            },
+            Task::Classification,
+        )
+        .a;
+        assert!(big.nnz() >= PARALLEL_TRANSPOSE_MIN_NNZ, "test must hit the threaded path");
+        // Small: exercises the serial fallback.
+        let small = gen_uniform_sparse(
+            SynthParams {
+                m: 30,
+                n: 50,
+                density: 0.1,
+                seed: 78,
+            },
+            Task::Classification,
+        )
+        .a;
+        for a in [big, small] {
+            let want = a.transpose();
+            for extra in [0usize, 1, 2, 3, 7] {
+                let mut pool = WorkerPool::new(extra);
+                let got = transpose_with_pool(&a, &mut pool);
+                assert_csr_equal(&got, &want, &format!("t={}", extra + 1));
+            }
+        }
+    }
+
+    /// A skewed matrix (heavy head rows, empty columns) through the
+    /// threaded path: the nnz-balanced row ranges and column ranges
+    /// must still reproduce the serial arrays bit for bit.
+    #[test]
+    fn pooled_transpose_handles_skew_and_empty_columns() {
+        let mut rng = Pcg::seeded(91);
+        let mut trips = Vec::new();
+        // Two dense head rows over the first half of the columns...
+        for i in 0..2usize {
+            for j in 0..3000usize {
+                trips.push((i, j, rng.next_gaussian()));
+            }
+        }
+        // ...then a sparse tail; columns 6000.. stay empty.
+        for i in 2..400usize {
+            for _ in 0..10 {
+                trips.push((i, rng.gen_below(6000), rng.next_gaussian()));
+            }
+        }
+        let a = Csr::from_triplets(400, 7000, &trips);
+        assert!(a.nnz() >= PARALLEL_TRANSPOSE_MIN_NNZ);
+        let want = a.transpose();
+        for extra in [1usize, 3, 7] {
+            let mut pool = WorkerPool::new(extra);
+            let got = transpose_with_pool(&a, &mut pool);
+            assert_csr_equal(&got, &want, &format!("skew t={}", extra + 1));
+        }
+    }
+
+    /// `with_pool` + a pool-built transpose is the oracle construction
+    /// path; its compute must replay `new`'s bits (which replays
+    /// serial's, per the tests above).
+    #[test]
+    fn with_pool_construction_matches_new() {
+        let a = gen_uniform_sparse(
+            SynthParams {
+                m: 24,
+                n: 100,
+                density: 0.08,
+                seed: 13,
+            },
+            Task::Classification,
+        )
+        .a;
+        let mut reference = ParallelProduct::new(CsrProduct::new(a.clone()), 3);
+        let mut pool = WorkerPool::new(2);
+        let at = Some(std::sync::Arc::new(transpose_with_pool(&a, &mut pool)));
+        let mut pooled =
+            ParallelProduct::with_pool(CsrProduct::with_transpose(std::sync::Arc::new(a), at), pool);
+        assert_eq!(pooled.threads(), 3);
+        let sample = vec![1usize, 7, 7, 20, 3];
+        let mut q_ref = Mat::zeros(sample.len(), reference.m());
+        reference.compute(&sample, &mut q_ref);
+        let mut q = Mat::zeros(sample.len(), pooled.m());
+        pooled.compute(&sample, &mut q);
+        assert_eq!(q.data(), q_ref.data());
     }
 }

@@ -28,10 +28,10 @@ use crate::costmodel::Ledger;
 use crate::dense::Mat;
 use crate::gram::{
     AllreduceSum, CsrProduct, Epilogue, FragmentSlot, GramEngine, GridProduct, GridReduce,
-    GridStorage, Layout, NoReduce, OverlapMode,
+    GridStorage, Layout, NoReduce, OverlapMode, TRANSPOSE_GRAM_MAX_DENSITY,
 };
 use crate::kernelfn::Kernel;
-use crate::parallel::ParallelProduct;
+use crate::parallel::{transpose_with_pool, ParallelProduct, WorkerPool};
 use crate::sparse::Csr;
 
 pub use crate::gram::GramOracle;
@@ -58,7 +58,15 @@ impl LocalGram {
     pub fn with_opts(a: Csr, kernel: Kernel, cache_rows: usize, threads: usize) -> Self {
         let epilogue = Epilogue::new(kernel, a.row_norms_sq());
         let diag = epilogue.diag();
-        let product = ParallelProduct::new(CsrProduct::new(a), threads);
+        // Pool first: the same worker threads that will serve every gram
+        // call also build the one-off cached transpose (bitwise equal to
+        // the serial build at every thread count).
+        assert!(threads >= 1, "ParallelProduct needs at least one thread");
+        let mut pool = WorkerPool::new(threads - 1);
+        let a = Arc::new(a);
+        let at = (a.density() < TRANSPOSE_GRAM_MAX_DENSITY)
+            .then(|| Arc::new(transpose_with_pool(&a, &mut pool)));
+        let product = ParallelProduct::with_pool(CsrProduct::with_transpose(a, at), pool);
         LocalGram {
             engine: GramEngine::new(
                 Layout::Full,
@@ -140,7 +148,14 @@ impl<'c, C: Communicator> DistGram<'c, C> {
         allreduce_sum(comm, &mut row_norms, algo);
         let epilogue = Epilogue::new(kernel, row_norms);
         let diag = epilogue.diag();
-        let product = ParallelProduct::new(CsrProduct::new(shard), threads);
+        // Pool-first construction, as in LocalGram: the product's own
+        // workers build the shard transpose before serving gram calls.
+        assert!(threads >= 1, "ParallelProduct needs at least one thread");
+        let mut pool = WorkerPool::new(threads - 1);
+        let shard = Arc::new(shard);
+        let at = (shard.density() < TRANSPOSE_GRAM_MAX_DENSITY)
+            .then(|| Arc::new(transpose_with_pool(&shard, &mut pool)));
+        let product = ParallelProduct::with_pool(CsrProduct::with_transpose(shard, at), pool);
         let reduce = AllreduceSum::new(comm, algo);
         DistGram {
             engine: GramEngine::new(
@@ -275,10 +290,22 @@ impl<'c, C: Communicator> GridGram<'c, C> {
         // the row subcommunicator (verbatim values — bitwise what the
         // full shard would compute locally), so the column allreduce
         // runs on identical inputs in both storage modes.
+        // Pool-first construction, as in LocalGram: the product's own
+        // workers build the owned-rows transpose before serving gram
+        // calls. The path decision stays on the FULL shard's density in
+        // both storage modes (the bitwise contract with the 1D product).
+        assert!(threads >= 1, "ParallelProduct needs at least one thread");
+        let mut pool = WorkerPool::new(threads - 1);
         let (mut row_norms, inner) = match storage {
             GridStorage::Replicated => {
                 let norms = shard.row_norms_sq();
-                (norms, GridProduct::new(shard, &owned_rows))
+                let owned = Arc::new(shard.gather_rows(&owned_rows));
+                let owned_t = (shard.density() < TRANSPOSE_GRAM_MAX_DENSITY)
+                    .then(|| Arc::new(transpose_with_pool(&owned, &mut pool)));
+                (
+                    norms,
+                    GridProduct::replicated_from_parts(Arc::new(shard), owned, owned_t),
+                )
             }
             GridStorage::Sharded => {
                 // Keep only the owned row group; the full shard is
@@ -291,13 +318,15 @@ impl<'c, C: Communicator> GridGram<'c, C> {
                 drop(shard);
                 let slot = Arc::new(FragmentSlot::new(owned.ncols()));
                 let norms = reduce.enable_sharded(owned.clone(), slot.clone());
-                (norms, GridProduct::sharded(owned, density, m, slot))
+                let owned_t = (density < TRANSPOSE_GRAM_MAX_DENSITY)
+                    .then(|| Arc::new(transpose_with_pool(&owned, &mut pool)));
+                (norms, GridProduct::sharded_from_parts(owned, owned_t, m, slot))
             }
         };
         reduce.allreduce_col(&mut row_norms);
         let epilogue = Epilogue::new(kernel, row_norms);
         let diag = epilogue.diag();
-        let product = ParallelProduct::new(inner, threads);
+        let product = ParallelProduct::with_pool(inner, pool);
         GridGram {
             engine: GramEngine::new(layout, product, reduce, Some(epilogue), diag, cache_rows),
         }

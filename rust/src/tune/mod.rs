@@ -44,6 +44,7 @@
 
 #![forbid(unsafe_code)]
 
+pub mod calibrate;
 mod report;
 mod xval;
 

@@ -1,0 +1,194 @@
+//! Property suite for the nnz-balanced sampled-row partition
+//! (`parallel::partition_by_weight` + `ProductStage::sample_cost`).
+//!
+//! The bitwise-determinism contract says the threaded product's row
+//! split is a pure *layout* decision: every output row is computed
+//! independently with a fixed summation order, so ANY partition of the
+//! sampled rows — row-count or nnz-balanced — must reproduce the serial
+//! bits exactly. These tests pin that claim on a deliberately skewed
+//! matrix (a few dense head rows, a long sparse tail) where the
+//! weighted and uniform splits genuinely differ, for every worker count
+//! the solve paths use, and check that the weighted split actually
+//! improves the load balance it exists for.
+
+use kcd::comm::{run_ranks, AllreduceAlgo, Communicator};
+use kcd::costmodel::Ledger;
+use kcd::data::{Dataset, Task};
+use kcd::dense::Mat;
+use kcd::gram::{CsrProduct, GridStorage, ProductStage};
+use kcd::kernelfn::Kernel;
+use kcd::parallel::{partition_bounds, partition_by_weight};
+use kcd::rng::Pcg;
+use kcd::solvers::{GramOracle, GridGram, LocalGram};
+use kcd::sparse::Csr;
+
+/// A skewed CSR matrix: `heavy` dense rows over all `n` columns, then a
+/// sparse tail (a handful of entries per row). Row costs then span two
+/// orders of magnitude, so row-count and nnz-balanced splits disagree.
+fn skewed(m: usize, n: usize, heavy: usize, seed: u64) -> Csr {
+    let mut rng = Pcg::seeded(seed);
+    let mut trips = Vec::new();
+    for i in 0..heavy {
+        for j in 0..n {
+            trips.push((i, j, rng.next_gaussian()));
+        }
+    }
+    for i in heavy..m {
+        for _ in 0..4 {
+            trips.push((i, rng.gen_below(n), rng.next_gaussian()));
+        }
+    }
+    Csr::from_triplets(m, n, &trips)
+}
+
+/// The product must expose nnz weights on the sparse (transpose) path,
+/// and the weighted split must differ from the row-count split on the
+/// skewed sample — otherwise the bitwise-equality tests below would be
+/// comparing identical layouts and prove nothing.
+#[test]
+fn weighted_layout_differs_from_uniform_on_skew() {
+    let a = skewed(96, 400, 3, 5);
+    let product = CsrProduct::new(a);
+    // Head rows first: their weights dwarf the tail's.
+    let sample: Vec<usize> = (0..48).collect();
+    let w = product
+        .sample_cost(&sample)
+        .expect("sparse path must expose nnz weights");
+    assert_eq!(w.len(), sample.len());
+    assert!(w.iter().all(|&x| x > 0), "weights must be positive: {w:?}");
+    let mut differs = 0;
+    for parts in 2..=8 {
+        if partition_by_weight(&w, parts) != partition_bounds(w.len(), parts) {
+            differs += 1;
+        }
+    }
+    assert!(differs > 0, "skewed weights never changed a split: {w:?}");
+}
+
+/// The load-balance claim itself: on the skewed sample, the weighted
+/// split's max per-part weight is strictly below the row-count split's
+/// for every worker count in the solve range.
+#[test]
+fn weighted_split_strictly_improves_skewed_max_load() {
+    let a = skewed(96, 400, 3, 7);
+    let product = CsrProduct::new(a);
+    let sample: Vec<usize> = (0..48).collect();
+    let w = product.sample_cost(&sample).expect("sparse path");
+    let max_load = |bounds: &[usize]| -> u64 {
+        bounds
+            .windows(2)
+            .map(|r| w[r[0]..r[1]].iter().sum::<u64>())
+            .max()
+            .unwrap()
+    };
+    for parts in 2..=8 {
+        let weighted = max_load(&partition_by_weight(&w, parts));
+        let uniform = max_load(&partition_bounds(w.len(), parts));
+        assert!(
+            weighted < uniform,
+            "parts={parts}: weighted max load {weighted} must beat uniform {uniform}"
+        );
+    }
+}
+
+/// Bitwise solve equality through the serial full oracle: every worker
+/// count (and hence every nnz-balanced layout) replays the t=1 bits on
+/// the skewed matrix, across a stream of random samples with repeats.
+#[test]
+fn local_gram_is_bitwise_invariant_across_thread_counts() {
+    let a = skewed(120, 500, 4, 11);
+    let stream: Vec<Vec<usize>> = {
+        let mut rng = Pcg::seeded(23);
+        (0..12)
+            .map(|_| {
+                let k = rng.gen_range(1, 9);
+                (0..k).map(|_| rng.gen_below(120)).collect()
+            })
+            .collect()
+    };
+    let run = |threads: usize| -> Vec<f64> {
+        let mut oracle = LocalGram::with_opts(a.clone(), Kernel::paper_rbf(), 0, threads);
+        let mut out = Vec::new();
+        for sample in &stream {
+            let mut q = Mat::zeros(sample.len(), 120);
+            oracle.gram(sample, &mut q, &mut Ledger::new());
+            out.extend_from_slice(q.data());
+        }
+        out
+    };
+    let reference = run(1);
+    for threads in 2..=8 {
+        let got = run(threads);
+        assert_eq!(got.len(), reference.len());
+        for (i, (x, y)) in got.iter().zip(&reference).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "t={threads}: entry {i} diverged from serial"
+            );
+        }
+    }
+}
+
+/// The same invariance through the grid oracle's sharded storage, where
+/// the weights come from the per-call fragment slot (`FragmentSlot::
+/// weigh`) instead of a resident shard: a threaded 2x2 sharded grid on
+/// the skewed matrix replays the all-serial grid bits.
+#[test]
+fn sharded_grid_is_bitwise_invariant_across_thread_counts() {
+    let a = skewed(64, 320, 3, 31);
+    let stream: Vec<Vec<usize>> = {
+        let mut rng = Pcg::seeded(41);
+        (0..6)
+            .map(|_| (0..6).map(|_| rng.gen_below(64)).collect())
+            .collect()
+    };
+    let (pr, pc) = (2usize, 2usize);
+    let run = |threads: usize| -> Vec<Vec<f64>> {
+        let stream = stream.clone();
+        let a = a.clone();
+        run_ranks(pr * pc, move |c| {
+            let shards = Dataset {
+                name: "skewed".to_string(),
+                a: a.clone(),
+                y: vec![1.0; 64],
+                task: Task::Classification,
+            }
+            .shard_cols(pc);
+            let shard = shards[c.rank() % pc].clone();
+            let mut grid = GridGram::with_opts(
+                shard,
+                Kernel::paper_rbf(),
+                c,
+                AllreduceAlgo::Rabenseifner,
+                pr,
+                pc,
+                4,
+                GridStorage::Sharded,
+                0,
+                threads,
+            );
+            let mut out = Vec::new();
+            for sample in &stream {
+                let mut q = Mat::zeros(sample.len(), 64);
+                grid.gram(sample, &mut q, &mut Ledger::new());
+                out.extend_from_slice(q.data());
+            }
+            out
+        })
+    };
+    let reference = run(1);
+    for threads in [2usize, 3, 4] {
+        let got = run(threads);
+        for (rank, (g, r)) in got.iter().zip(&reference).enumerate() {
+            assert_eq!(g.len(), r.len());
+            for (x, y) in g.iter().zip(r) {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "t={threads} rank={rank} diverged from serial grid"
+                );
+            }
+        }
+    }
+}

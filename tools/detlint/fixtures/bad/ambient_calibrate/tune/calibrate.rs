@@ -1,0 +1,7 @@
+// Fixture: the calibration *fit* (tune/calibrate) is pure arithmetic
+// on already-collected timings; reading a clock here breaks the
+// division of labor — sampling belongs in bench_harness/calibrate.
+pub fn fit_with_clock(counts: &[f64]) -> f64 {
+    let t0 = std::time::Instant::now(); //~ ambient-nondet
+    counts.iter().sum::<f64>() / t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,10 @@
+// Good fixture: the calibration *sampler* lives in bench_harness/ —
+// the allowlisted timing module — so wall-clock reads are its job
+// (the paired bad fixture flags the same read in tune/calibrate).
+use std::time::Instant;
+
+pub fn sample_once<F: FnOnce()>(f: F) -> f64 {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed().as_secs_f64()
+}
