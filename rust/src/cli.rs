@@ -48,6 +48,7 @@ const KNOWN_FLAGS: &[(&str, bool /* takes a value */)] = &[
     ("grid-storage", true),
     ("row-block", true),
     ("overlap", true),
+    ("schedule", true),
     ("mem-limit", true),
     ("s-max", true),
     ("t-max", true),
@@ -242,6 +243,17 @@ COMMON FLAGS:
                     it has no substrate (serial, s = 1 for pipeline,
                     non-sharded for exchange). train-svm / train-krr /
                     scaling / breakdown; also a tuner candidate axis.
+  --schedule <k>    uniform | shuffle | locality             [uniform]
+                    Coordinate schedule. uniform replays the legacy
+                    seeded sampling bit for bit; shuffle walks seeded
+                    Fisher–Yates epoch permutations; locality draws a
+                    seeded candidate pool per block and packs greedily
+                    for cache overlap and minimal fragment-exchange
+                    words. Every kind is bitwise-deterministic for a
+                    fixed spec — invariant to threads, cache capacity,
+                    row-block, storage and overlap. train-svm /
+                    train-krr / convergence / scaling; also a tuner
+                    candidate axis.
   --mem-limit <MB>  tune: per-rank memory budget; candidates whose
                     modeled footprint exceeds it rank after every
                     feasible one (marked OVER, never hidden).
@@ -323,8 +335,8 @@ fn load_config(args: &Args) -> Result<Config> {
     for key in [
         "dataset", "scale", "kernel", "problem", "c", "lambda", "b", "h", "s", "p", "algo",
         "machine", "seed", "gram-cache-rows", "threads", "grid", "grid-rows", "grid-storage",
-        "row-block", "overlap", "mem-limit", "every", "measured-limit", "s-max", "t-max", "top",
-        "save", "model", "requests", "batch", "profile-out",
+        "row-block", "overlap", "schedule", "mem-limit", "every", "measured-limit", "s-max",
+        "t-max", "top", "save", "model", "requests", "batch", "profile-out",
     ] {
         if let Some(v) = args.flag(key) {
             cfg.set(key, v);
@@ -410,6 +422,19 @@ fn overlap_from(cfg: &Config) -> Result<crate::gram::OverlapMode> {
     crate::gram::OverlapMode::parse(raw).ok_or_else(|| {
         anyhow!("invalid value for 'overlap': expected off, exchange or pipeline, got '{raw}'")
     })
+}
+
+/// Strictly read the coordinate schedule (`--schedule`, default
+/// uniform). Every kind is bitwise-deterministic for a fixed spec; only
+/// `uniform` replays the pre-schedule sampling stream bit for bit.
+fn schedule_from(cfg: &Config) -> Result<crate::schedule::ScheduleSpec> {
+    let Some(raw) = cfg_str(cfg, "schedule")? else {
+        return Ok(crate::schedule::ScheduleSpec::default());
+    };
+    let kind = crate::schedule::ScheduleKind::parse(raw).ok_or_else(|| {
+        anyhow!("invalid value for 'schedule': expected uniform, shuffle or locality, got '{raw}'")
+    })?;
+    Ok(crate::schedule::ScheduleSpec::of(kind))
 }
 
 /// Strictly read the block-cyclic row-block size (`--row-block`,
@@ -538,6 +563,7 @@ fn solver_from(cfg: &Config) -> Result<SolverSpec> {
         grid_storage: grid_storage_from(cfg)?,
         row_block: row_block_from(cfg)?,
         overlap: overlap_from(cfg)?,
+        schedule: schedule_from(cfg)?,
     })
 }
 
@@ -581,7 +607,8 @@ fn cmd_train_svm(args: &Args) -> Result<String> {
     let obj = SvmObjective::new(&mut oracle, &ds.y, c, variant);
     let mut out = String::new();
     out.push_str(&format!(
-        "dataset={} m={} n={} kernel={} problem={} P={p} layout={} t={} s={} H={} overlap={}\n",
+        "dataset={} m={} n={} kernel={} problem={} P={p} layout={} t={} s={} H={} overlap={} \
+         schedule={}\n",
         ds.name,
         ds.m(),
         ds.n(),
@@ -591,7 +618,8 @@ fn cmd_train_svm(args: &Args) -> Result<String> {
         solver.threads,
         solver.s,
         solver.h,
-        solver.overlap.name()
+        solver.overlap.name(),
+        solver.schedule.kind.name()
     ));
     out.push_str(&format!(
         "duality gap      = {:.6e}\ntrain accuracy   = {:.2}%\n",
@@ -648,7 +676,8 @@ fn cmd_train_krr(args: &Args) -> Result<String> {
     let astar = krr_exact(&mut oracle, &ds.y, lambda);
     let rel = crate::dense::rel_err(&res.alpha, &astar);
     let mut out = format!(
-        "dataset={} m={} n={} kernel={} b={b} λ={lambda} P={p} layout={} s={} H={} overlap={}\n\
+        "dataset={} m={} n={} kernel={} b={b} λ={lambda} P={p} layout={} s={} H={} overlap={} \
+         schedule={}\n\
          relative solution error = {rel:.6e}\n\
          projected time = {:.4e} s on {} (local wall {:.3}s)\n",
         ds.name,
@@ -659,6 +688,7 @@ fn cmd_train_krr(args: &Args) -> Result<String> {
         solver.s,
         solver.h,
         solver.overlap.name(),
+        solver.schedule.kind.name(),
         res.projection.total_secs(),
         machine.name,
         res.wall_secs
@@ -850,14 +880,31 @@ fn cmd_convergence(args: &Args) -> Result<String> {
     let every = cfg_usize(&cfg, "every")?.unwrap_or(16);
     ensure!(every >= 1, "invalid value for 'every': must be at least 1");
     let mut out = String::new();
+    // Footer shared by both problems: the run-total counters the
+    // locality-aware schedule trades against each other, per series —
+    // the convergence-vs-traffic ablation reads off these lines (wall
+    // profile only; the series table above them stays bitwise-invariant
+    // to threads, cache and schedule-inert knobs).
+    let ledger_line = |tag: &str, l: &crate::costmodel::Ledger| -> String {
+        format!(
+            "{tag}: schedule={}, cache hit={:.1}% ({} hits / {} misses), exchange words={}\n",
+            solver.schedule.kind.name(),
+            100.0 * l.cache.hit_rate(),
+            l.cache.hits,
+            l.cache.misses,
+            l.comm_exch.words,
+        )
+    };
     match problem {
         ProblemSpec::Svm { c, variant } => {
             let ds = dataset_from(&cfg, "duke", Task::Classification)?;
             let mut oracle = LocalGram::new(ds.a.clone(), kernel);
             let obj = SvmObjective::new(&mut oracle, &ds.y, c, variant);
-            let series = |s: usize| -> Vec<(usize, f64)> {
+            let row_cost = crate::schedule::packed_row_costs(&ds.a);
+            let series = |s: usize| -> (Vec<(usize, f64)>, crate::costmodel::Ledger) {
                 let solver = SolverSpec { s, ..solver };
                 let mut pts = Vec::new();
+                let mut ledger = crate::costmodel::Ledger::new();
                 let mut cb = |k: usize, a: &[f64]| {
                     if k % every == 0 {
                         pts.push((k, obj.duality_gap(a)));
@@ -865,37 +912,42 @@ fn cmd_convergence(args: &Args) -> Result<String> {
                 };
                 let mut o =
                     LocalGram::with_opts(ds.a.clone(), kernel, solver.cache_rows, solver.threads);
+                let mut sched = crate::schedule::build_schedule(
+                    &solver.schedule,
+                    ds.m(),
+                    solver.seed,
+                    crate::solvers::SVM_COORD_STREAM,
+                    &row_cost,
+                );
+                let params = crate::solvers::SvmParams {
+                    c,
+                    variant,
+                    h: solver.h,
+                    seed: solver.seed,
+                };
                 let _ = match s {
-                    1 => crate::solvers::dcd(
+                    1 => crate::solvers::dcd_with_schedule(
                         &mut o,
                         &ds.y,
-                        &crate::solvers::SvmParams {
-                            c,
-                            variant,
-                            h: solver.h,
-                            seed: solver.seed,
-                        },
-                        &mut crate::costmodel::Ledger::new(),
+                        &params,
+                        sched.as_mut(),
+                        &mut ledger,
                         Some(&mut cb),
                     ),
-                    s => crate::solvers::dcd_sstep(
+                    s => crate::solvers::dcd_sstep_with_schedule(
                         &mut o,
                         &ds.y,
-                        &crate::solvers::SvmParams {
-                            c,
-                            variant,
-                            h: solver.h,
-                            seed: solver.seed,
-                        },
+                        &params,
                         s,
-                        &mut crate::costmodel::Ledger::new(),
+                        sched.as_mut(),
+                        &mut ledger,
                         Some(&mut cb),
                     ),
                 };
-                pts
+                (pts, ledger)
             };
-            let classical = series(1);
-            let sstep = series(solver.s.max(2));
+            let (classical, classical_ledger) = series(1);
+            let (sstep, sstep_ledger) = series(solver.s.max(2));
             let mut t = Table::new(vec!["iter", "gap (classical)", "gap (s-step)", "|Δ|"]);
             for (a, b) in classical.iter().zip(&sstep) {
                 t.row(vec![
@@ -906,23 +958,28 @@ fn cmd_convergence(args: &Args) -> Result<String> {
                 ]);
             }
             out.push_str(&format!(
-                "K-SVM-{} duality gap, {} kernel, dataset {} (s = {})\n",
+                "K-SVM-{} duality gap, {} kernel, dataset {} (s = {}, schedule = {})\n",
                 match variant {
                     SvmVariant::L1 => "L1",
                     SvmVariant::L2 => "L2",
                 },
                 kernel.name(),
                 ds.name,
-                solver.s.max(2)
+                solver.s.max(2),
+                solver.schedule.kind.name()
             ));
             out.push_str(&if args.bool_flag("csv") { t.csv() } else { t.markdown() });
+            out.push_str(&ledger_line("classical", &classical_ledger));
+            out.push_str(&ledger_line("s-step   ", &sstep_ledger));
         }
         ProblemSpec::Krr { lambda, b } => {
             let ds = dataset_from(&cfg, "bodyfat", Task::Regression)?;
             let mut oracle = LocalGram::new(ds.a.clone(), kernel);
             let astar = krr_exact(&mut oracle, &ds.y, lambda);
-            let series = |s: usize| -> Vec<(usize, f64)> {
+            let row_cost = crate::schedule::packed_row_costs(&ds.a);
+            let series = |s: usize| -> (Vec<(usize, f64)>, crate::costmodel::Ledger) {
                 let mut pts = Vec::new();
+                let mut ledger = crate::costmodel::Ledger::new();
                 let mut cb = |k: usize, a: &[f64]| {
                     if k % every == 0 {
                         pts.push((k, crate::dense::rel_err(a, &astar)));
@@ -930,6 +987,13 @@ fn cmd_convergence(args: &Args) -> Result<String> {
                 };
                 let mut o =
                     LocalGram::with_opts(ds.a.clone(), kernel, solver.cache_rows, solver.threads);
+                let mut sched = crate::schedule::build_schedule(
+                    &solver.schedule,
+                    ds.m(),
+                    solver.seed,
+                    crate::solvers::KRR_COORD_STREAM,
+                    &row_cost,
+                );
                 let params = crate::solvers::KrrParams {
                     lambda,
                     b,
@@ -937,26 +1001,28 @@ fn cmd_convergence(args: &Args) -> Result<String> {
                     seed: solver.seed,
                 };
                 let _ = match s {
-                    1 => crate::solvers::bdcd(
+                    1 => crate::solvers::bdcd_with_schedule(
                         &mut o,
                         &ds.y,
                         &params,
-                        &mut crate::costmodel::Ledger::new(),
+                        sched.as_mut(),
+                        &mut ledger,
                         Some(&mut cb),
                     ),
-                    s => crate::solvers::bdcd_sstep(
+                    s => crate::solvers::bdcd_sstep_with_schedule(
                         &mut o,
                         &ds.y,
                         &params,
                         s,
-                        &mut crate::costmodel::Ledger::new(),
+                        sched.as_mut(),
+                        &mut ledger,
                         Some(&mut cb),
                     ),
                 };
-                pts
+                (pts, ledger)
             };
-            let classical = series(1);
-            let sstep = series(solver.s.max(2));
+            let (classical, classical_ledger) = series(1);
+            let (sstep, sstep_ledger) = series(solver.s.max(2));
             let mut t = Table::new(vec!["iter", "relerr (classical)", "relerr (s-step)", "|Δ|"]);
             for (a, bb) in classical.iter().zip(&sstep) {
                 t.row(vec![
@@ -967,12 +1033,16 @@ fn cmd_convergence(args: &Args) -> Result<String> {
                 ]);
             }
             out.push_str(&format!(
-                "K-RR relative solution error, {} kernel, dataset {} (b = {b}, s = {})\n",
+                "K-RR relative solution error, {} kernel, dataset {} (b = {b}, s = {}, \
+                 schedule = {})\n",
                 kernel.name(),
                 ds.name,
-                solver.s.max(2)
+                solver.s.max(2),
+                solver.schedule.kind.name()
             ));
             out.push_str(&if args.bool_flag("csv") { t.csv() } else { t.markdown() });
+            out.push_str(&ledger_line("classical", &classical_ledger));
+            out.push_str(&ledger_line("s-step   ", &sstep_ledger));
         }
     }
     let _ = machine;
@@ -1005,6 +1075,7 @@ fn cmd_scaling(args: &Args) -> Result<String> {
         grid_storage: grid_storage_from(&cfg)?,
         row_block: row_block_from(&cfg)?,
         overlap: overlap_from(&cfg)?,
+        schedule: schedule_from(&cfg)?,
         h: cfg_usize(&cfg, "h")?.unwrap_or(256),
         seed: cfg_usize(&cfg, "seed")?.unwrap_or(0x5EED) as u64,
         algo: algo_from(&cfg)?,
@@ -1134,12 +1205,13 @@ fn cmd_tune(args: &Args) -> Result<String> {
     let t = crate::tune::tune_table(&plan, top);
     out.push_str(&if args.bool_flag("csv") { t.csv() } else { t.markdown() });
     out.push_str(&format!(
-        "best: layout={}, storage={}, rb={}, overlap={}, t={}, s={} → {:.4e} s predicted \
-         ({}-bound, {:.2} MB/rank)\n",
+        "best: layout={}, storage={}, rb={}, overlap={}, schedule={}, t={}, s={} → {:.4e} s \
+         predicted ({}-bound, {:.2} MB/rank)\n",
         best.layout_tag(),
         best.storage_tag(),
         best.row_block,
         best.overlap.name(),
+        best.schedule.kind.name(),
         best.t,
         best.s,
         best.predicted.total_secs(),
@@ -1553,6 +1625,9 @@ mod tests {
             ("train-svm --p 2 --overlap sometimes", "overlap"),
             ("scaling --overlap 1", "overlap"),
             ("breakdown --overlap pipelined2", "overlap"),
+            ("train-svm --p 2 --schedule random", "schedule"),
+            ("scaling --schedule 1", "schedule"),
+            ("convergence --schedule greedy", "schedule"),
         ] {
             let err = run(argv(bad)).expect_err(bad);
             let msg = format!("{err:#}");
@@ -1733,9 +1808,10 @@ mod tests {
         // 1D: s {1, 2, 8} × t {1, 2} = 6, plus a pipelined twin for
         // each s > 1 point = 10. Grids (2,4)/(4,2): 3 row-block ×
         // (replicated s-ledgers {1, 2, 2} + sharded {2, 3, 3} counting
-        // overlap variants) × 2 t = 78 each. Grid (8,1) has no column
-        // peers, so pipeline is infeasible: 3 × (3 + 6) × 2 = 54.
-        assert!(out.contains("(220 candidates)"), "{out}");
+        // overlap variants, doubled by the uniform/locality schedule
+        // axis → {4, 6, 6}) × 2 t = 126 each. Grid (8,1) has no column
+        // peers, so pipeline is infeasible: 3 × (3 + 6 × 2) × 2 = 90.
+        assert!(out.contains("(352 candidates)"), "{out}");
         // And the handoff line reproduces the override spec.
         assert!(out.contains("--machine cray-ex:alpha=5e-3,cores=4"), "{out}");
     }
@@ -1798,8 +1874,60 @@ mod tests {
              --every 16 --threads 3 --gram-cache-rows 16",
         ))
         .unwrap();
-        // Threads + cache are bitwise-transparent: identical tables.
-        assert_eq!(base, threaded);
+        // Threads + cache are bitwise-transparent: identical series
+        // tables (the footer deliberately reports the wall profile —
+        // cache hit rate — and is the one part allowed to differ).
+        let table = |out: &str| {
+            out.lines()
+                .filter(|l| l.starts_with('|'))
+                .map(String::from)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(table(&base), table(&threaded));
+        // The cached run's ablation footer shows real hits; the
+        // uncached one reports a 0.0% rate.
+        assert!(base.contains("cache hit=0.0%"), "{base}");
+        assert!(threaded.contains("hits"), "{threaded}");
+        assert!(!threaded.contains("cache hit=0.0%"), "{threaded}");
+    }
+
+    /// The schedule axis at the CLI level: the default is the uniform
+    /// replay (bitwise-identical output to not passing the flag at
+    /// all), every kind reports its tag, and non-uniform kinds draw a
+    /// genuinely different coordinate stream (different gap trace) while
+    /// staying bitwise-invariant to threads and cache capacity.
+    #[test]
+    fn schedule_flag_runs_and_uniform_is_the_default_stream() {
+        let base = "train-svm --dataset diabetes --scale 0.1 --kernel rbf --h 120 --s 8 --p 2";
+        let default_run = run(argv(base)).unwrap();
+        assert!(default_run.contains("schedule=uniform"), "{default_run}");
+        let uniform = run(argv(&format!("{base} --schedule uniform"))).unwrap();
+        assert_eq!(default_run, uniform, "explicit uniform must replay the default bits");
+        let gap = |out: &str| {
+            out.lines()
+                .find(|l| l.starts_with("duality gap"))
+                .unwrap()
+                .to_string()
+        };
+        for kind in ["shuffle", "locality"] {
+            let out = run(argv(&format!("{base} --schedule {kind}"))).unwrap();
+            assert!(out.contains(&format!("schedule={kind}")), "{out}");
+            // A different schedule is a different solve path — but
+            // threads/cache stay bitwise-transparent under it.
+            let threaded = run(argv(&format!(
+                "{base} --schedule {kind} --threads 3 --gram-cache-rows 16"
+            )))
+            .unwrap();
+            assert_eq!(gap(&out), gap(&threaded), "{kind}");
+        }
+        // convergence takes the flag too and reports it in the header.
+        let conv = run(argv(
+            "convergence --dataset diabetes --scale 0.08 --problem svm-l1 --h 64 --s 8 \
+             --every 16 --schedule locality --gram-cache-rows 16",
+        ))
+        .unwrap();
+        assert!(conv.contains("schedule = locality"), "{conv}");
+        assert!(conv.contains("exchange words="), "{conv}");
     }
 
     /// Extract every `--flag` name mentioned in `text` as an exact token:

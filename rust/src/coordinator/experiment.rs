@@ -6,9 +6,11 @@ use crate::costmodel::{Ledger, MachineProfile, Projection};
 use crate::data::Dataset;
 use crate::gram::{GridStorage, OverlapMode};
 use crate::kernelfn::Kernel;
+use crate::schedule::{build_schedule, packed_row_costs, Schedule, ScheduleSpec};
 use crate::solvers::{
-    bdcd, bdcd_sstep, dcd, dcd_sstep, DistGram, GramOracle, GridGram, KrrParams, LocalGram,
-    SvmParams, SvmVariant,
+    bdcd_sstep_with_schedule, bdcd_with_schedule, dcd_sstep_with_schedule, dcd_with_schedule,
+    DistGram, GramOracle, GridGram, KrrParams, LocalGram, SvmParams, SvmVariant,
+    KRR_COORD_STREAM, SVM_COORD_STREAM,
 };
 
 use super::scaling::mem_words_per_rank;
@@ -33,6 +35,26 @@ pub enum ProblemSpec {
 }
 
 impl ProblemSpec {
+    /// PCG stream id of this problem's coordinate-selection sequence
+    /// ([`SVM_COORD_STREAM`] / [`KRR_COORD_STREAM`]): the stream every
+    /// [`crate::schedule::Schedule`] for this problem must draw from so
+    /// analytic replicas replay the solvers bitwise.
+    pub fn coord_stream(&self) -> u64 {
+        match self {
+            ProblemSpec::Svm { .. } => SVM_COORD_STREAM,
+            ProblemSpec::Krr { .. } => KRR_COORD_STREAM,
+        }
+    }
+
+    /// Coordinate-block size per schedule draw: `1` for DCD, the K-RR
+    /// block size `b` for BDCD.
+    pub fn block_size(&self) -> usize {
+        match self {
+            ProblemSpec::Svm { .. } => 1,
+            ProblemSpec::Krr { b, .. } => *b,
+        }
+    }
+
     /// Report tag (`k-svm-l1`, `k-svm-l2`, `k-rr`).
     pub fn name(&self) -> &'static str {
         match self {
@@ -96,6 +118,15 @@ pub struct SolverSpec {
     /// identical wire traffic in every mode. Must be identical on every
     /// rank. Tunable via `--overlap` and the auto-tuner.
     pub overlap: OverlapMode,
+    /// Coordinate schedule ([`ScheduleSpec`]): which seeded sampler the
+    /// solver draws its coordinate stream through. Must be identical on
+    /// every rank (the stream is replicated, exactly like the paper's
+    /// shared-seed sampling). For a fixed spec, results are bitwise
+    /// invariant to `threads`, `cache_rows`, `row_block`, `grid_storage`
+    /// and `overlap`; the default [`crate::schedule::ScheduleKind::Uniform`]
+    /// replays the legacy per-problem PCG stream bit for bit. Tunable via
+    /// `--schedule` and the auto-tuner's candidate grid.
+    pub schedule: ScheduleSpec,
 }
 
 impl Default for SolverSpec {
@@ -110,6 +141,7 @@ impl Default for SolverSpec {
             grid_storage: GridStorage::Replicated,
             row_block: crate::gram::DEFAULT_ROW_BLOCK,
             overlap: OverlapMode::Off,
+            schedule: ScheduleSpec::default(),
         }
     }
 }
@@ -136,6 +168,7 @@ impl SolverSpec {
             grid_storage: candidate.storage,
             row_block: candidate.row_block,
             overlap: candidate.overlap,
+            schedule: candidate.schedule,
         }
     }
 }
@@ -159,6 +192,7 @@ fn run_solver<O: crate::solvers::GramOracle>(
     y: &[f64],
     problem: &ProblemSpec,
     solver: &SolverSpec,
+    sched: &mut dyn Schedule,
     ledger: &mut Ledger,
 ) -> Vec<f64> {
     match *problem {
@@ -170,9 +204,9 @@ fn run_solver<O: crate::solvers::GramOracle>(
                 seed: solver.seed,
             };
             if solver.s <= 1 {
-                dcd(oracle, y, &p, ledger, None)
+                dcd_with_schedule(oracle, y, &p, sched, ledger, None)
             } else {
-                dcd_sstep(oracle, y, &p, solver.s, ledger, None)
+                dcd_sstep_with_schedule(oracle, y, &p, solver.s, sched, ledger, None)
             }
         }
         ProblemSpec::Krr { lambda, b } => {
@@ -183,12 +217,33 @@ fn run_solver<O: crate::solvers::GramOracle>(
                 seed: solver.seed,
             };
             if solver.s <= 1 {
-                bdcd(oracle, y, &p, ledger, None)
+                bdcd_with_schedule(oracle, y, &p, sched, ledger, None)
             } else {
-                bdcd_sstep(oracle, y, &p, solver.s, ledger, None)
+                bdcd_sstep_with_schedule(oracle, y, &p, solver.s, sched, ledger, None)
             }
         }
     }
+}
+
+/// Build the replicated coordinate schedule a run draws through: the
+/// spec's sampler on the problem's coordinate stream, with packed-
+/// fragment row costs from the *full* dataset (every rank computes the
+/// identical costs from the replicated row structure, so the stream is
+/// rank-invariant — and layout-invariant, since the costs never depend
+/// on how the run shards columns).
+fn build_run_schedule(
+    ds: &Dataset,
+    problem: &ProblemSpec,
+    solver: &SolverSpec,
+) -> Box<dyn Schedule> {
+    let row_cost = packed_row_costs(&ds.a);
+    build_schedule(
+        &solver.schedule,
+        ds.a.nrows(),
+        solver.seed,
+        problem.coord_stream(),
+        &row_cost,
+    )
 }
 
 /// Run on a single rank with a [`LocalGram`] oracle.
@@ -203,7 +258,8 @@ pub fn run_serial(
     let mut ledger = Ledger::new();
     let mut oracle =
         LocalGram::with_opts(ds.a.clone(), kernel, solver.cache_rows, solver.threads.max(1));
-    let alpha = run_solver(&mut oracle, &ds.y, problem, solver, &mut ledger);
+    let mut sched = build_run_schedule(ds, problem, solver);
+    let alpha = run_solver(&mut oracle, &ds.y, problem, solver, sched.as_mut(), &mut ledger);
     ledger.mem_words = mem_words_per_rank(ds, problem, solver, 1);
     let mut comm = SelfComm::new();
     let _ = &mut comm;
@@ -252,6 +308,9 @@ pub fn run_distributed(
     };
     let outs: Vec<(Vec<f64>, Ledger)> = run_ranks(p, |comm| {
         let mut ledger = Ledger::new();
+        // Every rank draws the identical replicated coordinate stream
+        // (shared seed), exactly like the paper's MPI implementation.
+        let mut sched = build_run_schedule(ds, problem, solver);
         let alpha = match solver.grid {
             Some((pr, pc)) => {
                 let shard = shards[comm.rank() % pc].clone();
@@ -268,7 +327,8 @@ pub fn run_distributed(
                     solver.threads.max(1),
                 );
                 oracle.set_overlap(solver.overlap);
-                let alpha = run_solver(&mut oracle, &ds.y, problem, solver, &mut ledger);
+                let alpha =
+                    run_solver(&mut oracle, &ds.y, problem, solver, sched.as_mut(), &mut ledger);
                 ledger.comm = oracle.comm_stats();
                 ledger.comm_col = oracle.col_stats();
                 ledger.comm_row = oracle.row_stats();
@@ -286,7 +346,8 @@ pub fn run_distributed(
                     solver.threads.max(1),
                 );
                 oracle.set_overlap(solver.overlap);
-                let alpha = run_solver(&mut oracle, &ds.y, problem, solver, &mut ledger);
+                let alpha =
+                    run_solver(&mut oracle, &ds.y, problem, solver, sched.as_mut(), &mut ledger);
                 ledger.comm = oracle.comm_stats();
                 alpha
             }

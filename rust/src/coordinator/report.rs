@@ -99,13 +99,17 @@ fn engine_tag(e: Engine) -> &'static str {
 /// Strong-scaling rows → markdown (the Figures 3/5/6 table form, plus
 /// the intra-rank thread count of each hybrid point, the process-grid
 /// factorization — `-` for the 1D layout, `PRxPC` for 2D points — the
-/// grid-cell storage mode, the communication-overlap mode, and the
-/// per-rank resident-memory model in MB: `Ledger::mem_per_rank` × 8
-/// bytes/word, the column the sharded storage exists to shrink).
+/// grid-cell storage mode, the communication-overlap mode, the
+/// per-rank resident-memory model in MB (`Ledger::mem_per_rank` × 8
+/// bytes/word, the column the sharded storage exists to shrink), the
+/// kernel-row cache hit rate and the fragment-exchange words of the
+/// best s-step point — the two counters the locality-aware schedule
+/// trades against each other, so a schedule ablation reads off this
+/// one table).
 pub fn scaling_table(rows: &[SweepRow]) -> Table {
     let mut t = Table::new(vec![
-        "P", "t", "grid", "storage", "overlap", "mem (MB)", "engine", "tuned",
-        "classical (s)", "s-step best (s)", "best s", "speedup",
+        "P", "t", "grid", "storage", "overlap", "mem (MB)", "cache hit", "exch words",
+        "engine", "tuned", "classical (s)", "s-step best (s)", "best s", "speedup",
     ]);
     for r in rows {
         t.row(vec![
@@ -121,6 +125,8 @@ pub fn scaling_table(rows: &[SweepRow]) -> Table {
             },
             r.overlap.name().to_string(),
             format!("{:.2}", r.mem_words as f64 * 8.0 / 1e6),
+            format!("{:.1}%", r.cache_hit_rate * 100.0),
+            r.exch_words.to_string(),
             engine_tag(r.engine).to_string(),
             if r.tuned { "auto" } else { "-" }.to_string(),
             format!("{:.4e}", r.classical.total_secs()),

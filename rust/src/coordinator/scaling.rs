@@ -21,7 +21,7 @@ use crate::costmodel::{Ledger, MachineProfile, Phase, Projection};
 use crate::data::Dataset;
 use crate::gram::{GridStorage, OverlapMode};
 use crate::kernelfn::Kernel;
-use crate::rng::Pcg;
+use crate::schedule::{packed_row_costs, ScheduleSpec};
 use crate::sparse::Csr;
 
 use super::experiment::{run_distributed, ProblemSpec, SolverSpec};
@@ -90,6 +90,13 @@ pub struct SweepConfig {
     /// posted-communication column the projection can credit. The
     /// analytic engine replicates the posted/hidden split exactly.
     pub overlap: OverlapMode,
+    /// Coordinate schedule ([`ScheduleSpec`]) of every sweep point: the
+    /// seeded sampler the solvers draw their coordinate stream through.
+    /// The analytic engine replays the same schedule
+    /// ([`gram_call_samples`]), so measured and projected rows stay
+    /// count-identical for every kind. The default `Uniform` reproduces
+    /// the legacy per-problem PCG stream bit for bit.
+    pub schedule: ScheduleSpec,
     /// Inner iterations `H`.
     pub h: usize,
     /// Coordinate-stream seed shared by every point.
@@ -119,6 +126,7 @@ impl Default for SweepConfig {
             grid_storage: GridStorage::Replicated,
             row_block: crate::gram::DEFAULT_ROW_BLOCK,
             overlap: OverlapMode::Off,
+            schedule: ScheduleSpec::default(),
             h: 256,
             seed: 0x5CA1E,
             algo: AllreduceAlgo::Rabenseifner,
@@ -159,6 +167,16 @@ pub struct SweepRow {
     pub best_s: usize,
     /// All (s → projection) points, for the breakdown-style detail plots.
     pub sstep_points: Vec<(usize, Projection)>,
+    /// Kernel-row cache hit rate of the best-s configuration's critical
+    /// ledger ([`crate::costmodel::CacheStats::hit_rate`]); `0` when the
+    /// point ran cache-off (the sweep engines' default) or never
+    /// consulted the cache.
+    pub cache_hit_rate: f64,
+    /// Fragment-exchange words of the best-s configuration's critical
+    /// ledger (`comm_exch.words`; non-zero only for sharded grid
+    /// points) — the traffic column the locality-aware schedule
+    /// ablation compares.
+    pub exch_words: u64,
     /// True when this row is the auto-tuner's predicted-best
     /// configuration ([`SweepConfig::auto_tune`]) rather than a point
     /// of the user's sweep grid.
@@ -244,12 +262,14 @@ pub fn sweep(
             let classical = machine.project_hybrid(&classical_ledger, t);
             let mut best_s = 1;
             let mut best = classical;
+            let mut best_ledger = &classical_ledger;
             let mut sstep_points = Vec::with_capacity(sstep_ledgers.len());
             for (s, ledger) in &sstep_ledgers {
                 let proj = machine.project_hybrid(ledger, t);
                 if proj.total_secs() < best.total_secs() {
                     best = proj;
                     best_s = *s;
+                    best_ledger = ledger;
                 }
                 sstep_points.push((*s, proj));
             }
@@ -265,6 +285,8 @@ pub fn sweep(
                 best_sstep: best,
                 best_s,
                 sstep_points,
+                cache_hit_rate: best_ledger.cache.hit_rate(),
+                exch_words: best_ledger.comm_exch.words,
                 tuned: false,
             });
         }
@@ -306,6 +328,7 @@ fn point_ledger(
                 grid_storage: cfg.grid_storage,
                 row_block: cfg.row_block,
                 overlap: cfg.overlap,
+                schedule: cfg.schedule,
             };
             run_distributed(ds, kernel, problem, &solver, p, cfg.algo, machine).critical
         }
@@ -320,6 +343,7 @@ fn point_ledger(
                 pc,
                 cfg.row_block,
                 cfg.grid_storage,
+                &cfg.schedule,
                 cfg.seed,
                 cfg.algo,
                 cfg.overlap,
@@ -362,18 +386,24 @@ fn tuned_row(
         grid_storage: best.storage,
         row_block: best.row_block,
         overlap: best.overlap,
+        schedule: best.schedule,
         ..cfg.clone()
     };
     let cfg = &tuned_cfg;
     let classical_ledger = point_ledger(ds, kernel, problem, cfg, machine, engine, grid, p, 1);
     let classical = machine.project_hybrid(&classical_ledger, best.t);
-    let (best_sstep, sstep_points, mem_words) = if best.s > 1 {
+    let (best_sstep, sstep_points, mem_words, best_ledger) = if best.s > 1 {
         let ledger = point_ledger(ds, kernel, problem, cfg, machine, engine, grid, p, best.s);
         let proj = machine.project_hybrid(&ledger, best.t);
         let mem = ledger.mem_per_rank().max(classical_ledger.mem_per_rank());
-        (proj, vec![(best.s, proj)], mem)
+        (proj, vec![(best.s, proj)], mem, ledger)
     } else {
-        (classical, Vec::new(), classical_ledger.mem_per_rank())
+        (
+            classical,
+            Vec::new(),
+            classical_ledger.mem_per_rank(),
+            classical_ledger.clone(),
+        )
     };
     SweepRow {
         p,
@@ -387,54 +417,45 @@ fn tuned_row(
         best_sstep,
         best_s: best.s,
         sstep_points,
+        cache_hit_rate: best_ledger.cache.hit_rate(),
+        exch_words: best_ledger.comm_exch.words,
         tuned: true,
     }
 }
 
 /// Replay the solvers' per-gram-call sample streams without running a
 /// solver: one `Vec` of (duplicate-allowed) global row indices per gram
-/// call, exactly as `dcd`/`dcd_sstep` (`s_now` coordinates from the
-/// `SVM_COORD_STREAM` PCG) and `bdcd`/`bdcd_sstep` (`s_now` blocks of
-/// `b` without replacement from `KRR_COORD_STREAM`) would pass to the
-/// oracle. The sharded grid storage's exchange traffic depends on
-/// *which* rows each call samples (their owning row groups and per-shard
-/// nnz), so the analytic replica must replay the exact stream — pinned
-/// against measured execution in `grid_analytic_ledger_matches_measured_counts`.
+/// call, exactly as `dcd`/`dcd_sstep` (`s_now` coordinates per call on
+/// `SVM_COORD_STREAM`) and `bdcd`/`bdcd_sstep` (`s_now` blocks of `b`
+/// on `KRR_COORD_STREAM`) would pass to the oracle — drawn through the
+/// same [`ScheduleSpec`] the run configures, so every schedule kind
+/// replays bitwise ([`crate::schedule::call_samples`]). The sharded
+/// grid storage's exchange traffic depends on *which* rows each call
+/// samples (their owning row groups and per-shard nnz), so the analytic
+/// replica must replay the exact stream — pinned against measured
+/// execution in `grid_analytic_ledger_matches_measured_counts`.
+/// `row_cost` feeds the locality-aware scoring (ignored by the other
+/// kinds; pass the run's [`crate::schedule::packed_row_costs`]).
 /// Models the uncached schedule, like every analytic replica.
 pub fn gram_call_samples(
     problem: &ProblemSpec,
+    schedule: &ScheduleSpec,
     s: usize,
     h: usize,
     m: usize,
     seed: u64,
+    row_cost: &[u64],
 ) -> Vec<Vec<usize>> {
-    assert!(s >= 1, "need a positive block size");
-    let mut out = Vec::with_capacity(h.div_ceil(s));
-    match *problem {
-        ProblemSpec::Svm { .. } => {
-            let mut rng = Pcg::new(seed, crate::solvers::SVM_COORD_STREAM);
-            let mut done = 0usize;
-            while done < h {
-                let s_now = s.min(h - done);
-                out.push((0..s_now).map(|_| rng.gen_below(m)).collect());
-                done += s_now;
-            }
-        }
-        ProblemSpec::Krr { b, .. } => {
-            let mut rng = Pcg::new(seed, crate::solvers::KRR_COORD_STREAM);
-            let mut done = 0usize;
-            while done < h {
-                let s_now = s.min(h - done);
-                let mut call = Vec::with_capacity(s_now * b);
-                for _ in 0..s_now {
-                    call.extend(rng.sample_without_replacement(m, b));
-                }
-                out.push(call);
-                done += s_now;
-            }
-        }
-    }
-    out
+    crate::schedule::call_samples(
+        schedule,
+        m,
+        seed,
+        problem.coord_stream(),
+        s,
+        h,
+        problem.block_size(),
+        row_cost,
+    )
 }
 
 /// Per-rank resident-memory model in f64 words — the number behind
@@ -746,8 +767,9 @@ fn add_pipeline_hidden_flops(l: &mut Ledger, problem: &ProblemSpec, s: usize, h:
 /// per-row `(norm, nnz)` pairs) plus one per-call ring whose per-group
 /// counts are `2·Σ nnz` of the call's deduplicated sampled rows within
 /// each feature shard — which requires replaying the exact sample
-/// stream ([`gram_call_samples`] with `seed`). Replicated storage
-/// ignores `seed`.
+/// stream ([`gram_call_samples`] with `schedule` and `seed`; every
+/// schedule kind replays bitwise, locality-aware scoring included).
+/// Replicated storage ignores `schedule` and `seed`.
 ///
 /// `overlap` replicates the nonblocking engine's posted/hidden split on
 /// top of the (mode-invariant) totals. [`OverlapMode::Exchange`]
@@ -770,6 +792,7 @@ pub fn grid_analytic_ledger(
     pc: usize,
     row_block: usize,
     storage: GridStorage,
+    schedule: &ScheduleSpec,
     seed: u64,
     algo: AllreduceAlgo,
     overlap: OverlapMode,
@@ -853,7 +876,8 @@ pub fn grid_analytic_ledger(
             let mut exch: Vec<Vec<(u64, u64)>> = (0..pr)
                 .map(|i| vec![setup_ring[i]; pc])
                 .collect();
-            for call in gram_call_samples(problem, s, h, ds.m(), seed) {
+            let row_cost = packed_row_costs(&ds.a);
+            for call in gram_call_samples(problem, schedule, s, h, ds.m(), seed, &row_cost) {
                 for &t in &call {
                     owned_hits[(t / row_block) % pr] += 1;
                 }
@@ -1496,6 +1520,7 @@ mod tests {
                                 pc,
                                 crate::gram::DEFAULT_ROW_BLOCK,
                                 storage,
+                                &ScheduleSpec::default(),
                                 77,
                                 algo,
                                 OverlapMode::Off,
@@ -1659,6 +1684,7 @@ mod tests {
                         pc,
                         crate::gram::DEFAULT_ROW_BLOCK,
                         GridStorage::Sharded,
+                        &ScheduleSpec::default(),
                         77,
                         AllreduceAlgo::Rabenseifner,
                         OverlapMode::Exchange,
@@ -1720,6 +1746,7 @@ mod tests {
                     pc,
                     crate::gram::DEFAULT_ROW_BLOCK,
                     storage,
+                    &ScheduleSpec::default(),
                     77,
                     AllreduceAlgo::Rabenseifner,
                     OverlapMode::Pipeline,
@@ -1782,6 +1809,7 @@ mod tests {
                     p,
                     1,
                     GridStorage::Replicated,
+                    &ScheduleSpec::default(),
                     0,
                     AllreduceAlgo::Rabenseifner,
                     OverlapMode::Off,
@@ -1824,6 +1852,7 @@ mod tests {
             2,
             1,
             GridStorage::Replicated,
+            &ScheduleSpec::default(),
             0,
             AllreduceAlgo::Rabenseifner,
             OverlapMode::Off,

@@ -142,6 +142,15 @@ impl<P: ProductStage, R: ReduceStage> GramEngine<P, R> {
         self.cache.as_ref().map_or(0, |c| c.capacity())
     }
 
+    /// Whether `row` is currently resident in the kernel-row cache.
+    ///
+    /// Read-only probe — recency is *not* refreshed, so probing never
+    /// perturbs the cache stream. Schedules use it to cross-check their
+    /// shadow replica against the real cache.
+    pub fn cache_resident(&self, row: usize) -> bool {
+        self.cache.as_ref().is_some_and(|c| c.peek(row).is_some())
+    }
+
     /// Traffic accumulated by the reduction stage.
     pub fn comm_stats(&self) -> CommStats {
         self.reduce.stats()

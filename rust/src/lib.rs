@@ -34,6 +34,10 @@
 //!   solver, and the convergence metrics (duality gap, relative error).
 //! * [`runtime`] — PJRT loader/executor for the AOT-compiled JAX/Pallas
 //!   gram-block artifacts (`artifacts/*.hlo.txt`).
+//! * [`schedule`] — pluggable, seeded coordinate schedules (uniform /
+//!   shuffled epochs / locality-aware) the solvers draw through; the
+//!   locality-aware schedule packs blocks to maximize cache re-hits and
+//!   minimize fragment-exchange words, bitwise-deterministically.
 //! * [`model`] — trained-model API: prediction, evaluation, JSON and
 //!   binary `.kcd` persistence.
 //! * [`serve`] — model serving: the versioned `.kcd` format
@@ -68,6 +72,7 @@ pub mod model;
 pub mod parallel;
 pub mod rng;
 pub mod runtime;
+pub mod schedule;
 pub mod serve;
 pub mod solvers;
 pub mod sparse;

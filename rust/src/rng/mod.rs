@@ -105,6 +105,18 @@ impl Pcg {
     /// replacement (Floyd's algorithm; O(k) expected, order then shuffled).
     pub fn sample_without_replacement(&mut self, m: usize, k: usize) -> Vec<usize> {
         assert!(k <= m, "cannot sample {k} from {m} without replacement");
+        // Full-range fast path: Floyd degenerates to selecting every
+        // index, so the set-dedup pass only burns RNG draws producing an
+        // order the final shuffle immediately redoes — one Fisher–Yates
+        // pass over the identity is the same uniform permutation at half
+        // the draws. Guarded to m > 1 because a 1-element sample must
+        // still consume exactly one draw (`gen_below(1)`), the identity
+        // the Uniform schedule's `b = 1` stream replay depends on.
+        if k == m && m > 1 {
+            let mut chosen: Vec<usize> = (0..m).collect();
+            self.shuffle(&mut chosen);
+            return chosen;
+        }
         // Floyd's algorithm produces a set; we collect then Fisher–Yates
         // shuffle so block order is also uniform (matters for BDCD blocks).
         let mut chosen: Vec<usize> = Vec::with_capacity(k);
@@ -200,6 +212,68 @@ mod tests {
         let mut s = r.sample_without_replacement(50, 50);
         s.sort_unstable();
         assert_eq!(s, (0..50).collect::<Vec<_>>());
+    }
+
+    /// The `k == m` fast path is exactly one Fisher–Yates pass over the
+    /// identity: same output and same post-call RNG state as calling
+    /// `shuffle` directly — no Floyd draws are burnt first.
+    #[test]
+    fn sample_full_range_is_single_fisher_yates_pass() {
+        for m in [2usize, 3, 7, 50] {
+            let mut a = Pcg::new(13, 5);
+            let mut b = Pcg::new(13, 5);
+            let got = a.sample_without_replacement(m, m);
+            let mut expect: Vec<usize> = (0..m).collect();
+            b.shuffle(&mut expect);
+            assert_eq!(got, expect, "m={m}");
+            assert_eq!(a.next_u64(), b.next_u64(), "m={m} post-call state");
+        }
+    }
+
+    /// A 1-element sample still consumes exactly one `gen_below(m)` draw
+    /// (the fast path is guarded to `m > 1`): the identity the Uniform
+    /// schedule's `b = 1` replay of the DCD coordinate stream relies on.
+    #[test]
+    fn sample_single_consumes_exactly_one_draw() {
+        for m in [1usize, 2, 9] {
+            let mut a = Pcg::new(29, 3);
+            let mut b = Pcg::new(29, 3);
+            let got = a.sample_without_replacement(m, 1);
+            assert_eq!(got, vec![b.gen_below(m)], "m={m}");
+            assert_eq!(a.next_u64(), b.next_u64(), "m={m} post-call state");
+        }
+    }
+
+    /// Partial-range (`k < m`) streams are bitwise-unchanged by the
+    /// full-range fast path: pinned against a verbatim copy of the
+    /// pre-fast-path implementation, output and post-call state both.
+    #[test]
+    fn sample_partial_range_stream_is_unchanged() {
+        fn legacy(rng: &mut Pcg, m: usize, k: usize) -> Vec<usize> {
+            let mut chosen: Vec<usize> = Vec::with_capacity(k);
+            let mut set = std::collections::HashSet::with_capacity(k * 2);
+            for j in (m - k)..m {
+                let t = rng.gen_below(j + 1);
+                if set.insert(t) {
+                    chosen.push(t);
+                } else {
+                    set.insert(j);
+                    chosen.push(j);
+                }
+            }
+            rng.shuffle(&mut chosen);
+            chosen
+        }
+        for (m, k) in [(10usize, 3usize), (10, 9), (50, 25), (3, 2)] {
+            let mut a = Pcg::new(41, 9);
+            let mut b = Pcg::new(41, 9);
+            assert_eq!(
+                a.sample_without_replacement(m, k),
+                legacy(&mut b, m, k),
+                "m={m} k={k}"
+            );
+            assert_eq!(a.next_u64(), b.next_u64(), "m={m} k={k} post-call state");
+        }
     }
 
     #[test]

@@ -1,0 +1,724 @@
+//! Pluggable, seeded, bitwise-deterministic coordinate schedules.
+//!
+//! The paper samples coordinates uniformly at random, so every s-step
+//! gram call touches an essentially fresh set of kernel rows — the
+//! kernel-row LRU cache, the sharded grid's fragment exchange and the
+//! overlap credit all leave traffic on the table that a smarter (still
+//! fully deterministic) schedule can recover. This module owns that
+//! policy: the solvers draw every coordinate through a [`Schedule`]
+//! instead of calling `Pcg` directly.
+//!
+//! Three implementations:
+//!
+//! * [`Uniform`] — bitwise-identical replay of the pre-schedule
+//!   `SVM_COORD_STREAM` / `KRR_COORD_STREAM` sampling (the default):
+//!   `b = 1` blocks consume exactly one `gen_below(m)` draw each, and
+//!   `b > 1` blocks are one `sample_without_replacement(m, b)` each —
+//!   precisely what `dcd`/`dcd_sstep` and `bdcd`/`bdcd_sstep` drew
+//!   before schedules existed, so every existing property suite and
+//!   analytic replica passes unchanged.
+//! * [`ShuffledEpochs`] — Fisher–Yates epoch permutations: each epoch
+//!   visits every coordinate exactly once in a freshly shuffled order,
+//!   blocks taking consecutive permutation entries (the large-scale
+//!   block-coordinate-descent regime of arXiv:1602.05310).
+//! * [`LocalityAware`] — the headline: every block is chosen greedily
+//!   from a seeded candidate pool to (a) maximize overlap with the
+//!   kernel-row LRU's contents via a deterministic *shadow* of the
+//!   `RowCache` hit/miss/commit semantics, (b) minimize sharded
+//!   fragment-exchange words, scoring rows with the same packed
+//!   `2·Σnnz` counts the analytic exchange replica moves and balancing
+//!   the per-row-group ring critical path, and (c) under overlapped
+//!   communication, order the selected blocks so the largest posted
+//!   transfers sit under the largest hidden-compute windows.
+//!
+//! ### Determinism contract
+//!
+//! A schedule's output stream is a pure function of its
+//! [`ScheduleSpec`], `(seed, stream)`, `m`, its row-cost table and the
+//! sequence of `next_call(count, b)` shapes — never of engine state.
+//! In particular the [`LocalityAware`] shadow LRU has its *own*
+//! capacity ([`ScheduleSpec::shadow_rows`]) rather than reading the
+//! real cache, so for a fixed spec the solve stays bitwise-invariant
+//! to threads, engine cache capacity, `row_block`, storage mode and
+//! overlap mode — the same contract every other engine knob obeys.
+//! [`ScheduleKind::Uniform`] is additionally bitwise-identical to
+//! every pre-schedule solve. The analytic traffic replicas
+//! ([`crate::coordinator::scaling::gram_call_samples`]) replay the
+//! exact same streams via [`call_samples`], cross-validated against
+//! measured `CommStats` rank by rank.
+
+#![forbid(unsafe_code)]
+
+use std::cmp::Reverse;
+
+use crate::rng::Pcg;
+use crate::sparse::Csr;
+
+/// Which coordinate schedule a solver runs ([`ScheduleSpec::kind`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScheduleKind {
+    /// The paper's uniform sampling, bitwise-identical to the
+    /// pre-schedule coordinate streams (the default).
+    Uniform,
+    /// Fisher–Yates epoch permutations: every coordinate exactly once
+    /// per epoch, in a freshly shuffled order.
+    ShuffledEpochs,
+    /// Greedy cache-affine, exchange-minimizing, overlap-ordering
+    /// selection from a seeded candidate pool.
+    LocalityAware,
+}
+
+impl ScheduleKind {
+    /// All kinds, in ranking order (`Uniform` first — the tuner's
+    /// tie-break prefers the paper's schedule on equal cost).
+    pub const ALL: [ScheduleKind; 3] = [
+        ScheduleKind::Uniform,
+        ScheduleKind::ShuffledEpochs,
+        ScheduleKind::LocalityAware,
+    ];
+
+    /// CLI / report name (`uniform` / `shuffle` / `locality`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScheduleKind::Uniform => "uniform",
+            ScheduleKind::ShuffledEpochs => "shuffle",
+            ScheduleKind::LocalityAware => "locality",
+        }
+    }
+
+    /// Parse a CLI name (inverse of [`Self::name`]).
+    pub fn parse(s: &str) -> Option<ScheduleKind> {
+        match s {
+            "uniform" => Some(ScheduleKind::Uniform),
+            "shuffle" => Some(ScheduleKind::ShuffledEpochs),
+            "locality" => Some(ScheduleKind::LocalityAware),
+            _ => None,
+        }
+    }
+}
+
+/// Full schedule configuration — the *fixed point* of the determinism
+/// contract: two solves with equal specs (and equal seed/problem) are
+/// bitwise identical regardless of every engine knob.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScheduleSpec {
+    /// Which policy draws the coordinates.
+    pub kind: ScheduleKind,
+    /// Capacity of the [`LocalityAware`] shadow LRU (rows). Set it to
+    /// the engine's `cache_rows` to track the real cache exactly; it is
+    /// a spec field (not read from the engine) so the stream cannot
+    /// depend on engine configuration.
+    pub shadow_rows: usize,
+    /// Candidate blocks drawn per selected block (`>= 1`); `1` makes
+    /// [`LocalityAware`] selection-free (pure uniform draws).
+    pub pool: usize,
+    /// Row-group count of the exchange-balance score (`0` disables it).
+    /// Mirrors the sharded grid's `pr`: rows are grouped block-cyclically
+    /// and per-call exchange words are balanced across groups to
+    /// minimize the fragment ring's critical path.
+    pub groups: usize,
+    /// Block-cyclic block size of the group map (the grid's `row_block`).
+    pub group_block: usize,
+    /// Emit each call's selected blocks largest-transfer-first, so under
+    /// `OverlapMode::{Exchange, Pipeline}` every posted transfer fits
+    /// under its predecessor block's (at least as large) compute window.
+    pub overlap_order: bool,
+}
+
+impl Default for ScheduleSpec {
+    fn default() -> Self {
+        ScheduleSpec {
+            kind: ScheduleKind::Uniform,
+            shadow_rows: 64,
+            pool: 4,
+            groups: 0,
+            group_block: crate::gram::DEFAULT_ROW_BLOCK,
+            overlap_order: false,
+        }
+    }
+}
+
+impl ScheduleSpec {
+    /// Spec of the given kind with default locality parameters.
+    pub fn of(kind: ScheduleKind) -> Self {
+        ScheduleSpec {
+            kind,
+            ..ScheduleSpec::default()
+        }
+    }
+
+    /// Compact report tag: the kind name, plus the locality parameters
+    /// when they matter (`locality[shadow=64,pool=4,groups=2]`).
+    pub fn label(&self) -> String {
+        match self.kind {
+            ScheduleKind::LocalityAware => format!(
+                "locality[shadow={},pool={},groups={}]",
+                self.shadow_rows, self.pool, self.groups
+            ),
+            kind => kind.name().to_string(),
+        }
+    }
+}
+
+/// A deterministic coordinate source for the (s-step) solvers.
+///
+/// One *gram call* is `count` blocks of `b` coordinates each
+/// (`count = s_now` outer-block steps, `b = 1` for DCD / the K-RR block
+/// size for BDCD), emitted flat — `count·b` indices appended to `out`
+/// in block order. Coordinates within one block are distinct;
+/// duplicates across blocks of a call are allowed (the solvers'
+/// gradient-correction terms and the engine's in-call dedup both handle
+/// them, exactly as under uniform sampling).
+pub trait Schedule {
+    /// Number of coordinates (kernel matrix rows) being scheduled.
+    fn m(&self) -> usize;
+
+    /// Clear `out` and fill it with the next gram call's `count·b`
+    /// coordinates.
+    fn next_call(&mut self, count: usize, b: usize, out: &mut Vec<usize>);
+}
+
+/// The paper's uniform sampling — bitwise replay of the pre-schedule
+/// coordinate streams (see the module docs).
+pub struct Uniform {
+    m: usize,
+    rng: Pcg,
+}
+
+impl Uniform {
+    /// Seeded on the same `(seed, stream)` pair the solvers used before
+    /// schedules existed, so the draw sequence is bit-for-bit identical.
+    pub fn new(m: usize, seed: u64, stream: u64) -> Self {
+        Uniform {
+            m,
+            rng: Pcg::new(seed, stream),
+        }
+    }
+}
+
+impl Schedule for Uniform {
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn next_call(&mut self, count: usize, b: usize, out: &mut Vec<usize>) {
+        out.clear();
+        for _ in 0..count {
+            if b == 1 {
+                // Exactly the one `gen_below(m)` draw `dcd` made per
+                // iteration (no allocation, same bits).
+                out.push(self.rng.gen_below(self.m));
+            } else {
+                out.extend(self.rng.sample_without_replacement(self.m, b));
+            }
+        }
+    }
+}
+
+/// Fisher–Yates epoch permutations (arXiv:1602.05310's regime): each
+/// epoch is one shuffled pass over all `m` coordinates; blocks take
+/// `b` consecutive permutation entries. A partial tail (fewer than `b`
+/// entries left) is discarded and a fresh epoch shuffled, so every
+/// block stays distinct-within-block.
+pub struct ShuffledEpochs {
+    m: usize,
+    rng: Pcg,
+    perm: Vec<usize>,
+    cursor: usize,
+}
+
+impl ShuffledEpochs {
+    /// Seeded like [`Uniform::new`]; the first epoch is shuffled lazily
+    /// on the first draw.
+    pub fn new(m: usize, seed: u64, stream: u64) -> Self {
+        ShuffledEpochs {
+            m,
+            rng: Pcg::new(seed, stream),
+            perm: Vec::new(),
+            cursor: 0,
+        }
+    }
+
+    fn refill(&mut self) {
+        if self.perm.is_empty() {
+            self.perm = (0..self.m).collect();
+        }
+        self.rng.shuffle(&mut self.perm);
+        self.cursor = 0;
+    }
+}
+
+impl Schedule for ShuffledEpochs {
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn next_call(&mut self, count: usize, b: usize, out: &mut Vec<usize>) {
+        assert!(
+            b <= self.m,
+            "shuffled-epoch blocks of {b} need at least {b} coordinates, have {}",
+            self.m
+        );
+        out.clear();
+        for _ in 0..count {
+            if self.cursor + b > self.perm.len() {
+                self.refill();
+            }
+            out.extend_from_slice(&self.perm[self.cursor..self.cursor + b]);
+            self.cursor += b;
+        }
+    }
+}
+
+/// Greedy locality-aware selection (see the module docs for the three
+/// objectives). Every `next_call` draws `count·pool` candidate blocks
+/// uniformly (so the RNG consumption is shape-determined, never
+/// state-dependent), then greedily keeps the `count` best.
+pub struct LocalityAware {
+    m: usize,
+    rng: Pcg,
+    spec: ScheduleSpec,
+    /// Shadow LRU of kernel-row residency, front = least recent — a
+    /// deterministic replay of `RowCache`'s classify/commit semantics
+    /// with its own capacity (`spec.shadow_rows`).
+    shadow: Vec<usize>,
+    /// Per-row exchange cost (packed-fragment words, `2·nnz`); empty ⇒
+    /// unit cost per row.
+    row_cost: Vec<u64>,
+}
+
+impl LocalityAware {
+    /// Seeded like [`Uniform::new`]. `row_cost` is the per-row
+    /// fragment-exchange word count ([`packed_row_costs`]; pass `&[]`
+    /// for unit costs).
+    pub fn new(m: usize, seed: u64, stream: u64, spec: &ScheduleSpec, row_cost: &[u64]) -> Self {
+        assert!(
+            row_cost.is_empty() || row_cost.len() == m,
+            "row-cost table length {} must match m = {m}",
+            row_cost.len()
+        );
+        LocalityAware {
+            m,
+            rng: Pcg::new(seed, stream),
+            spec: *spec,
+            shadow: Vec::new(),
+            row_cost: row_cost.to_vec(),
+        }
+    }
+
+    /// Whether `row` is currently resident in the shadow LRU (read-only;
+    /// used by the property suites to pin shadow ≡ real cache).
+    pub fn shadow_resident(&self, row: usize) -> bool {
+        self.shadow.contains(&row)
+    }
+
+    fn cost_of(&self, row: usize) -> u64 {
+        if self.row_cost.is_empty() {
+            1
+        } else {
+            self.row_cost[row]
+        }
+    }
+
+    fn owner_of(&self, row: usize) -> usize {
+        (row / self.spec.group_block.max(1)) % self.spec.groups.max(1)
+    }
+
+    /// Score one candidate block against the shadow and the coordinates
+    /// already selected this call: `(warm, miss_cost, per-group added
+    /// exchange words)`. Warm coordinates (shadow-resident, already
+    /// selected this call, or repeated earlier in this block) are served
+    /// from cache and exchange nothing — the same in-call dedup the
+    /// engine's classify stage performs.
+    fn score(&self, block: &[usize], selected: &[usize], group_add: &mut [u64]) -> (usize, u64) {
+        for g in group_add.iter_mut() {
+            *g = 0;
+        }
+        let mut warm = 0usize;
+        let mut miss_cost = 0u64;
+        for (i, &t) in block.iter().enumerate() {
+            let dup_in_block = block[..i].contains(&t);
+            if dup_in_block || self.shadow.contains(&t) || selected.contains(&t) {
+                warm += 1;
+            } else {
+                let c = self.cost_of(t);
+                miss_cost += c;
+                if !group_add.is_empty() {
+                    group_add[self.owner_of(t)] += c;
+                }
+            }
+        }
+        (warm, miss_cost)
+    }
+
+    /// Replay the engine's classify/commit semantics over one emitted
+    /// call: hits touch to most-recent, first-occurrence misses are
+    /// committed in order afterwards, each insert evicting the
+    /// least-recent row at capacity.
+    fn commit(&mut self, call: &[usize]) {
+        if self.spec.shadow_rows == 0 {
+            return;
+        }
+        let mut pending: Vec<usize> = Vec::new();
+        for &t in call {
+            if let Some(pos) = self.shadow.iter().position(|&r| r == t) {
+                self.shadow.remove(pos);
+                self.shadow.push(t);
+            } else if !pending.contains(&t) {
+                pending.push(t);
+            }
+        }
+        for t in pending {
+            if self.shadow.len() == self.spec.shadow_rows {
+                self.shadow.remove(0);
+            }
+            self.shadow.push(t);
+        }
+    }
+}
+
+impl Schedule for LocalityAware {
+    fn m(&self) -> usize {
+        self.m
+    }
+
+    fn next_call(&mut self, count: usize, b: usize, out: &mut Vec<usize>) {
+        out.clear();
+        let pool = self.spec.pool.max(1);
+        let npool = count * pool;
+        let cands: Vec<Vec<usize>> = (0..npool)
+            .map(|_| self.rng.sample_without_replacement(self.m, b))
+            .collect();
+
+        let groups = if self.spec.groups > 1 {
+            self.spec.groups
+        } else {
+            0
+        };
+        let mut group_words = vec![0u64; groups];
+        let mut group_add = vec![0u64; groups];
+        let mut total_words = 0u64;
+        let mut selected_coords: Vec<usize> = Vec::with_capacity(count * b);
+        // (miss_cost, block) in selection order, re-ordered for overlap
+        // below.
+        let mut selected: Vec<(u64, Vec<usize>)> = Vec::with_capacity(count);
+        let mut used = vec![false; npool];
+        for _ in 0..count {
+            let mut best: Option<(Reverse<usize>, u64, u64, usize)> = None;
+            for (ci, cand) in cands.iter().enumerate() {
+                if used[ci] {
+                    continue;
+                }
+                let (warm, miss_cost) = self.score(cand, &selected_coords, &mut group_add);
+                // Ring critical path after adding this block: rank `g`
+                // forwards `total − counts[successor]` words, so the max
+                // over ranks is `total − min_g counts[g]` — identical on
+                // every rank, so the stream stays rank-invariant.
+                let crit = if groups > 0 {
+                    let blk: u64 = group_add.iter().sum();
+                    let min_g = group_words
+                        .iter()
+                        .zip(&group_add)
+                        .map(|(w, a)| w + a)
+                        .min()
+                        .unwrap_or(0);
+                    (total_words + blk) - min_g
+                } else {
+                    0
+                };
+                // Maximize warm hits; tie-break by cheapest exchange,
+                // then flattest ring, then candidate index (stable ⇒
+                // deterministic).
+                let key = (Reverse(warm), miss_cost, crit, ci);
+                if best.map_or(true, |bk| key < bk) {
+                    best = Some(key);
+                }
+            }
+            let (_, miss_cost, _, ci) = best.expect("pool >= 1 candidate per slot");
+            used[ci] = true;
+            // Recompute the winner's per-group contribution (the scan
+            // above reused the scratch buffer).
+            let _ = self.score(&cands[ci], &selected_coords, &mut group_add);
+            for (w, a) in group_words.iter_mut().zip(&group_add) {
+                *w += a;
+            }
+            total_words += miss_cost;
+            selected_coords.extend_from_slice(&cands[ci]);
+            selected.push((miss_cost, cands[ci].clone()));
+        }
+        if self.spec.overlap_order {
+            // Largest-transfer-first: block k+1's posted transfer then
+            // never exceeds block k's compute window (stable sort keeps
+            // equal-cost blocks in selection order — deterministic).
+            selected.sort_by(|a, b| b.0.cmp(&a.0));
+        }
+        for (_, block) in &selected {
+            out.extend_from_slice(block);
+        }
+        self.commit(out);
+    }
+}
+
+/// Build the schedule a [`ScheduleSpec`] names, seeded on the solver's
+/// `(seed, stream)` pair. `row_cost` feeds the [`LocalityAware`]
+/// exchange score ([`packed_row_costs`]; pass `&[]` for unit costs —
+/// the other kinds ignore it).
+pub fn build_schedule(
+    spec: &ScheduleSpec,
+    m: usize,
+    seed: u64,
+    stream: u64,
+    row_cost: &[u64],
+) -> Box<dyn Schedule> {
+    match spec.kind {
+        ScheduleKind::Uniform => Box::new(Uniform::new(m, seed, stream)),
+        ScheduleKind::ShuffledEpochs => Box::new(ShuffledEpochs::new(m, seed, stream)),
+        ScheduleKind::LocalityAware => Box::new(LocalityAware::new(m, seed, stream, spec, row_cost)),
+    }
+}
+
+/// Per-row packed-fragment exchange cost: `2·nnz(row)` words (column
+/// index + value per stored entry) — exactly the per-row counts the
+/// sharded grid's fragment ring moves and `grid_analytic_ledger`
+/// replicates, so the [`LocalityAware`] score optimizes the same
+/// quantity the measured `CommStats` records.
+pub fn packed_row_costs(a: &Csr) -> Vec<u64> {
+    (0..a.nrows())
+        .map(|t| {
+            let (cols, _) = a.row_parts(t);
+            2 * cols.len() as u64
+        })
+        .collect()
+}
+
+/// Replay the per-gram-call coordinate stream of a schedule without
+/// running a solver: one `Vec` per call, `s_now` blocks of `b` each —
+/// exactly what the (s-step) solvers pass to the oracle. The analytic
+/// exchange replica is built on this ([`crate::coordinator::scaling::gram_call_samples`]),
+/// cross-validated bitwise against measured execution.
+#[allow(clippy::too_many_arguments)]
+pub fn call_samples(
+    spec: &ScheduleSpec,
+    m: usize,
+    seed: u64,
+    stream: u64,
+    s: usize,
+    h: usize,
+    b: usize,
+    row_cost: &[u64],
+) -> Vec<Vec<usize>> {
+    assert!(s >= 1, "need a positive block size");
+    let mut sched = build_schedule(spec, m, seed, stream, row_cost);
+    let mut out = Vec::with_capacity(h.div_ceil(s));
+    let mut buf = Vec::with_capacity(s * b);
+    let mut done = 0usize;
+    while done < h {
+        let s_now = s.min(h - done);
+        sched.next_call(s_now, b, &mut buf);
+        out.push(buf.clone());
+        done += s_now;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names_round_trip() {
+        for kind in ScheduleKind::ALL {
+            assert_eq!(ScheduleKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(ScheduleKind::parse("bogus"), None);
+    }
+
+    /// The Uniform schedule replays the raw PCG streams bit for bit:
+    /// `b = 1` blocks are single `gen_below(m)` draws and `b > 1`
+    /// blocks are `sample_without_replacement(m, b)` — the exact draws
+    /// the solvers made before schedules existed.
+    #[test]
+    fn uniform_replays_raw_streams_bitwise() {
+        let (m, seed) = (23usize, 0x5EEDu64);
+        let mut sched = Uniform::new(m, seed, 0x5D);
+        let mut rng = Pcg::new(seed, 0x5D);
+        let mut buf = Vec::new();
+        for count in [1usize, 3, 8, 1, 5] {
+            sched.next_call(count, 1, &mut buf);
+            let expect: Vec<usize> = (0..count).map(|_| rng.gen_below(m)).collect();
+            assert_eq!(buf, expect);
+        }
+        let mut sched = Uniform::new(m, seed, 0xBD);
+        let mut rng = Pcg::new(seed, 0xBD);
+        for count in [1usize, 4, 2] {
+            sched.next_call(count, 5, &mut buf);
+            let expect: Vec<usize> = (0..count)
+                .flat_map(|_| rng.sample_without_replacement(m, 5))
+                .collect();
+            assert_eq!(buf, expect);
+        }
+    }
+
+    #[test]
+    fn shuffled_epochs_visits_every_coordinate_once_per_epoch() {
+        let m = 12usize;
+        let mut sched = ShuffledEpochs::new(m, 7, 1);
+        let mut buf = Vec::new();
+        // b = 3 divides m: one epoch = 4 blocks, a permutation of 0..m.
+        sched.next_call(4, 3, &mut buf);
+        let mut seen = buf.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..m).collect::<Vec<_>>());
+        // Next epoch is a different permutation (overwhelmingly likely).
+        let first = buf.clone();
+        sched.next_call(4, 3, &mut buf);
+        let mut seen = buf.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..m).collect::<Vec<_>>());
+        assert_ne!(buf, first, "epochs should reshuffle");
+    }
+
+    #[test]
+    fn shuffled_epochs_discards_partial_tails() {
+        let m = 10usize;
+        let mut sched = ShuffledEpochs::new(m, 9, 1);
+        let mut buf = Vec::new();
+        // b = 4: each epoch yields 2 blocks, the 2-entry tail is dropped.
+        for _ in 0..5 {
+            sched.next_call(1, 4, &mut buf);
+            assert_eq!(buf.len(), 4);
+            let mut uniq = buf.clone();
+            uniq.sort_unstable();
+            uniq.dedup();
+            assert_eq!(uniq.len(), 4, "blocks must be distinct-within-block");
+        }
+    }
+
+    #[test]
+    fn schedules_are_deterministic_replicas() {
+        let spec = ScheduleSpec {
+            kind: ScheduleKind::LocalityAware,
+            shadow_rows: 8,
+            pool: 3,
+            groups: 2,
+            group_block: 4,
+            overlap_order: true,
+        };
+        let costs: Vec<u64> = (0..20).map(|i| 2 * (i as u64 % 5 + 1)).collect();
+        for kind in ScheduleKind::ALL {
+            let spec = ScheduleSpec { kind, ..spec };
+            let mut a = build_schedule(&spec, 20, 42, 7, &costs);
+            let mut b = build_schedule(&spec, 20, 42, 7, &costs);
+            let (mut ba, mut bb) = (Vec::new(), Vec::new());
+            for (count, blk) in [(3usize, 2usize), (1, 4), (5, 1), (2, 2)] {
+                a.next_call(count, blk, &mut ba);
+                b.next_call(count, blk, &mut bb);
+                assert_eq!(ba, bb, "{kind:?}");
+                assert_eq!(ba.len(), count * blk, "{kind:?}");
+                assert!(ba.iter().all(|&t| t < 20), "{kind:?}");
+            }
+        }
+    }
+
+    /// The locality schedule's coordinate stream is a function of the
+    /// spec alone — two instances fed different call shapes diverge, but
+    /// replaying the same shapes (as the analytic replica does via
+    /// [`call_samples`]) reproduces the stream exactly.
+    #[test]
+    fn call_samples_replays_solver_shapes() {
+        let spec = ScheduleSpec {
+            kind: ScheduleKind::LocalityAware,
+            shadow_rows: 6,
+            pool: 4,
+            groups: 2,
+            group_block: 4,
+            overlap_order: false,
+        };
+        let (m, seed, stream, s, h, b) = (16usize, 5u64, 0xBDu64, 4usize, 18usize, 2usize);
+        let calls = call_samples(&spec, m, seed, stream, s, h, b, &[]);
+        let mut sched = build_schedule(&spec, m, seed, stream, &[]);
+        let mut buf = Vec::new();
+        let mut done = 0usize;
+        for call in &calls {
+            let s_now = s.min(h - done);
+            sched.next_call(s_now, b, &mut buf);
+            assert_eq!(&buf, call);
+            done += s_now;
+        }
+        assert_eq!(done, h);
+    }
+
+    /// On a shadow-sized working set the locality schedule re-draws
+    /// cached rows far more often than uniform: strictly more warm
+    /// coordinates over a repeat-heavy run (the schedule-level half of
+    /// the acceptance benchmark; the measured-engine half lives in
+    /// `rust/tests/schedule_props.rs`).
+    #[test]
+    fn locality_warms_more_coordinates_than_uniform() {
+        let (m, seed, stream) = (64usize, 11u64, 0x5Du64);
+        let count_warm = |spec: &ScheduleSpec| -> usize {
+            let mut sched = build_schedule(spec, m, seed, stream, &[]);
+            // An *independent* shadow replica tracks what an
+            // equally-sized real cache would hold.
+            let mut mirror = LocalityAware::new(m, 1, 1, spec, &[]);
+            let mut warm = 0usize;
+            let mut buf = Vec::new();
+            for _ in 0..32 {
+                sched.next_call(8, 1, &mut buf);
+                for (i, &t) in buf.iter().enumerate() {
+                    if mirror.shadow_resident(t) || buf[..i].contains(&t) {
+                        warm += 1;
+                    }
+                }
+                mirror.commit(&buf);
+            }
+            warm
+        };
+        let uniform = count_warm(&ScheduleSpec {
+            shadow_rows: 16,
+            ..ScheduleSpec::default()
+        });
+        let locality = count_warm(&ScheduleSpec {
+            kind: ScheduleKind::LocalityAware,
+            shadow_rows: 16,
+            pool: 4,
+            groups: 0,
+            group_block: 4,
+            overlap_order: false,
+        });
+        assert!(
+            locality > uniform,
+            "locality should rehit the cache more: {locality} vs {uniform}"
+        );
+    }
+
+    #[test]
+    fn overlap_order_emits_largest_transfers_first() {
+        let spec = ScheduleSpec {
+            kind: ScheduleKind::LocalityAware,
+            shadow_rows: 0, // no warm hits: pure cost ordering
+            pool: 1,        // selection-free: ordering is the only effect
+            groups: 0,
+            group_block: 4,
+            overlap_order: true,
+        };
+        let costs: Vec<u64> = (0..32).map(|i| i as u64).collect();
+        let mut sched = LocalityAware::new(32, 3, 9, &spec, &costs);
+        let mut buf = Vec::new();
+        sched.next_call(6, 1, &mut buf);
+        let block_costs: Vec<u64> = buf.iter().map(|&t| costs[t]).collect();
+        for w in block_costs.windows(2) {
+            assert!(w[0] >= w[1], "descending transfer order: {block_costs:?}");
+        }
+    }
+
+    #[test]
+    fn packed_row_costs_are_twice_row_nnz() {
+        let a = Csr::from_dense(&crate::dense::Mat::from_vec(
+            3,
+            3,
+            vec![1.0, 0.0, 2.0, 0.0, 0.0, 0.0, 3.0, 4.0, 5.0],
+        ));
+        assert_eq!(packed_row_costs(&a), vec![4, 0, 6]);
+    }
+}

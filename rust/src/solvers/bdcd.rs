@@ -4,7 +4,7 @@
 use crate::costmodel::{Ledger, Phase};
 use crate::dense::{cholesky_solve, Mat};
 use crate::gram::OverlapMode;
-use crate::rng::Pcg;
+use crate::schedule::{Schedule, Uniform};
 
 use super::{GramOracle, Trace};
 
@@ -50,19 +50,35 @@ pub fn bdcd<O: GramOracle>(
     y: &[f64],
     p: &KrrParams,
     ledger: &mut Ledger,
+    trace: Trace,
+) -> Vec<f64> {
+    let mut sched = Uniform::new(oracle.m(), p.seed, KRR_COORD_STREAM);
+    bdcd_with_schedule(oracle, y, p, &mut sched, ledger, trace)
+}
+
+/// [`bdcd`] drawing its blocks through an explicit [`Schedule`] (one
+/// `next_call(1, b)` per iteration). Bitwise identical to [`bdcd`]
+/// under a [`Uniform`] schedule on `(p.seed, KRR_COORD_STREAM)`.
+pub fn bdcd_with_schedule<O: GramOracle>(
+    oracle: &mut O,
+    y: &[f64],
+    p: &KrrParams,
+    sched: &mut dyn Schedule,
+    ledger: &mut Ledger,
     mut trace: Trace,
 ) -> Vec<f64> {
     let m = oracle.m();
     assert_eq!(y.len(), m);
     assert!(p.b >= 1 && p.b <= m, "block size must be in [1, m]");
+    assert_eq!(sched.m(), m, "schedule must cover the oracle's rows");
     let mf = m as f64;
     let inv_lambda = 1.0 / p.lambda;
-    let mut rng = Pcg::new(p.seed, KRR_COORD_STREAM);
     let mut alpha = vec![0.0; m];
     let mut q = Mat::zeros(p.b, m);
+    let mut sample = Vec::with_capacity(p.b);
 
     for k in 0..p.h {
-        let sample = rng.sample_without_replacement(m, p.b);
+        sched.next_call(1, p.b, &mut sample);
         oracle.gram(&sample, &mut q, ledger);
 
         let delta = ledger.time(Phase::Solve, || {
@@ -114,18 +130,35 @@ pub fn bdcd_sstep<O: GramOracle>(
     p: &KrrParams,
     s: usize,
     ledger: &mut Ledger,
+    trace: Trace,
+) -> Vec<f64> {
+    let mut sched = Uniform::new(oracle.m(), p.seed, KRR_COORD_STREAM);
+    bdcd_sstep_with_schedule(oracle, y, p, s, &mut sched, ledger, trace)
+}
+
+/// [`bdcd_sstep`] drawing its blocks through an explicit [`Schedule`]
+/// (one `next_call(s_now, b)` per outer iteration). Bitwise identical
+/// to [`bdcd_sstep`] under a [`Uniform`] schedule on
+/// `(p.seed, KRR_COORD_STREAM)`.
+pub fn bdcd_sstep_with_schedule<O: GramOracle>(
+    oracle: &mut O,
+    y: &[f64],
+    p: &KrrParams,
+    s: usize,
+    sched: &mut dyn Schedule,
+    ledger: &mut Ledger,
     mut trace: Trace,
 ) -> Vec<f64> {
     assert!(s >= 1);
     if oracle.overlap() == OverlapMode::Pipeline {
-        return bdcd_sstep_pipelined(oracle, y, p, s, ledger, trace);
+        return bdcd_sstep_pipelined(oracle, y, p, s, sched, ledger, trace);
     }
     let m = oracle.m();
     assert_eq!(y.len(), m);
     assert!(p.b >= 1 && p.b <= m, "block size must be in [1, m]");
+    assert_eq!(sched.m(), m, "schedule must cover the oracle's rows");
     let mf = m as f64;
     let inv_lambda = 1.0 / p.lambda;
-    let mut rng = Pcg::new(p.seed, KRR_COORD_STREAM);
     let mut alpha = vec![0.0; m];
 
     let b = p.b;
@@ -133,15 +166,18 @@ pub fn bdcd_sstep<O: GramOracle>(
     let mut q = Mat::zeros(s * b, m);
     let mut samples: Vec<Vec<usize>> = vec![Vec::new(); s];
     let mut deltas: Vec<Vec<f64>> = vec![vec![0.0; b]; s];
+    let mut flat: Vec<usize> = Vec::with_capacity(s * b);
     let mut done = 0usize;
 
     for k in 0..outer {
         let s_now = s.min(p.h - done);
-        // Draw s blocks from the same stream BDCD uses.
-        for sample in samples.iter_mut().take(s_now) {
-            *sample = rng.sample_without_replacement(m, b);
+        // Draw s blocks from the schedule (the Uniform schedule replays
+        // the stream BDCD uses, draw for draw).
+        sched.next_call(s_now, b, &mut flat);
+        for (j, sample) in samples.iter_mut().take(s_now).enumerate() {
+            sample.clear();
+            sample.extend_from_slice(&flat[j * b..(j + 1) * b]);
         }
-        let flat: Vec<usize> = samples[..s_now].iter().flatten().copied().collect();
 
         // Q_k = K(A, Ω_kᵀA): sb kernel rows in one oracle call.
         let mut q_view = if s_now == s {
@@ -229,15 +265,16 @@ fn bdcd_sstep_pipelined<O: GramOracle>(
     y: &[f64],
     p: &KrrParams,
     s: usize,
+    sched: &mut dyn Schedule,
     ledger: &mut Ledger,
     mut trace: Trace,
 ) -> Vec<f64> {
     let m = oracle.m();
     assert_eq!(y.len(), m);
     assert!(p.b >= 1 && p.b <= m, "block size must be in [1, m]");
+    assert_eq!(sched.m(), m, "schedule must cover the oracle's rows");
     let mf = m as f64;
     let inv_lambda = 1.0 / p.lambda;
-    let mut rng = Pcg::new(p.seed, KRR_COORD_STREAM);
     let mut alpha = vec![0.0; m];
 
     let b = p.b;
@@ -248,14 +285,19 @@ fn bdcd_sstep_pipelined<O: GramOracle>(
     let mut deltas: Vec<Vec<f64>> = vec![vec![0.0; b]; s];
     // Every outer block is full-size except possibly the last.
     let size_of = |k: usize| s.min(p.h - k * s);
+    let split = |flat: &[usize], samples: &mut [Vec<usize>], s_now: usize| {
+        for (j, sample) in samples.iter_mut().take(s_now).enumerate() {
+            sample.clear();
+            sample.extend_from_slice(&flat[j * b..(j + 1) * b]);
+        }
+    };
 
     // Prologue: draw outer block 0 and post its gram. `samples`/`flat`
     // always hold the in-flight (most recently posted) block.
-    for sample in samples.iter_mut().take(size_of(0)) {
-        *sample = rng.sample_without_replacement(m, b);
-    }
-    let mut flat: Vec<usize> = samples[..size_of(0)].iter().flatten().copied().collect();
-    let mut next_flat: Vec<usize> = Vec::new();
+    let mut flat: Vec<usize> = Vec::with_capacity(s * b);
+    let mut next_flat: Vec<usize> = Vec::with_capacity(s * b);
+    sched.next_call(size_of(0), b, &mut flat);
+    split(&flat, &mut samples, size_of(0));
     oracle.gram_start(&flat, ledger);
 
     for k in 0..outer {
@@ -272,10 +314,8 @@ fn bdcd_sstep_pipelined<O: GramOracle>(
         let overlapped = k + 1 < outer;
         if overlapped {
             let s_next = size_of(k + 1);
-            for sample in next_samples.iter_mut().take(s_next) {
-                *sample = rng.sample_without_replacement(m, b);
-            }
-            next_flat = next_samples[..s_next].iter().flatten().copied().collect();
+            sched.next_call(s_next, b, &mut next_flat);
+            split(&next_flat, &mut next_samples, s_next);
             oracle.gram_start(&next_flat, ledger);
         }
 

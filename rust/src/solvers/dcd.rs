@@ -3,7 +3,7 @@
 use crate::costmodel::{Ledger, Phase};
 use crate::dense::Mat;
 use crate::gram::OverlapMode;
-use crate::rng::Pcg;
+use crate::schedule::{Schedule, Uniform};
 
 use super::{GramOracle, Trace};
 
@@ -103,17 +103,37 @@ pub fn dcd<O: GramOracle>(
     y: &[f64],
     p: &SvmParams,
     ledger: &mut Ledger,
+    trace: Trace,
+) -> Vec<f64> {
+    let mut sched = Uniform::new(oracle.m(), p.seed, SVM_COORD_STREAM);
+    dcd_with_schedule(oracle, y, p, &mut sched, ledger, trace)
+}
+
+/// [`dcd`] drawing its coordinates through an explicit [`Schedule`]
+/// instead of the built-in uniform stream. With a
+/// [`Uniform`] schedule on `(p.seed, SVM_COORD_STREAM)` this is
+/// bitwise-identical to [`dcd`]; other schedules change *which*
+/// coordinates are visited (and therefore the iterates), never the
+/// update arithmetic.
+pub fn dcd_with_schedule<O: GramOracle>(
+    oracle: &mut O,
+    y: &[f64],
+    p: &SvmParams,
+    sched: &mut dyn Schedule,
+    ledger: &mut Ledger,
     mut trace: Trace,
 ) -> Vec<f64> {
     let m = oracle.m();
     assert_eq!(y.len(), m);
+    assert_eq!(sched.m(), m, "schedule must cover the oracle's rows");
     let (nu, omega) = p.variant.nu_omega(p.c);
-    let mut rng = Pcg::new(p.seed, SVM_COORD_STREAM);
     let mut alpha = vec![0.0; m];
     let mut u = Mat::zeros(1, m);
+    let mut sample = Vec::with_capacity(1);
 
     for k in 0..p.h {
-        let ik = rng.gen_below(m);
+        sched.next_call(1, 1, &mut sample);
+        let ik = sample[0];
         // u_k = K(A, a_ik), then y-scaled.
         oracle.gram(&[ik], &mut u, ledger);
         ledger.time(Phase::KernelCompute, || {
@@ -152,30 +172,46 @@ pub fn dcd_sstep<O: GramOracle>(
     p: &SvmParams,
     s: usize,
     ledger: &mut Ledger,
+    trace: Trace,
+) -> Vec<f64> {
+    let mut sched = Uniform::new(oracle.m(), p.seed, SVM_COORD_STREAM);
+    dcd_sstep_with_schedule(oracle, y, p, s, &mut sched, ledger, trace)
+}
+
+/// [`dcd_sstep`] drawing its coordinate blocks through an explicit
+/// [`Schedule`] (one `next_call(s_now, 1)` per outer block). Bitwise
+/// identical to [`dcd_sstep`] under a [`Uniform`] schedule on
+/// `(p.seed, SVM_COORD_STREAM)`.
+pub fn dcd_sstep_with_schedule<O: GramOracle>(
+    oracle: &mut O,
+    y: &[f64],
+    p: &SvmParams,
+    s: usize,
+    sched: &mut dyn Schedule,
+    ledger: &mut Ledger,
     mut trace: Trace,
 ) -> Vec<f64> {
     assert!(s >= 1);
     if oracle.overlap() == OverlapMode::Pipeline {
-        return dcd_sstep_pipelined(oracle, y, p, s, ledger, trace);
+        return dcd_sstep_pipelined(oracle, y, p, s, sched, ledger, trace);
     }
     let m = oracle.m();
     assert_eq!(y.len(), m);
+    assert_eq!(sched.m(), m, "schedule must cover the oracle's rows");
     let (nu, omega) = p.variant.nu_omega(p.c);
-    let mut rng = Pcg::new(p.seed, SVM_COORD_STREAM);
     let mut alpha = vec![0.0; m];
 
     let outer = p.h.div_ceil(s);
     let mut q = Mat::zeros(s, m);
-    let mut sample = vec![0usize; s];
+    let mut sample = Vec::with_capacity(s);
     let mut theta = vec![0.0; s];
     let mut done = 0usize;
 
     for k in 0..outer {
         let s_now = s.min(p.h - done);
-        // Draw the next s coordinates from the same stream DCD uses.
-        for sj in sample.iter_mut().take(s_now) {
-            *sj = rng.gen_below(m);
-        }
+        // Draw the next s coordinates from the schedule (the Uniform
+        // schedule replays the stream DCD uses, draw for draw).
+        sched.next_call(s_now, 1, &mut sample);
         let sample_now = &sample[..s_now];
 
         // U_k = K(A, A_S): s rows in one oracle call (one allreduce when
@@ -272,13 +308,14 @@ fn dcd_sstep_pipelined<O: GramOracle>(
     y: &[f64],
     p: &SvmParams,
     s: usize,
+    sched: &mut dyn Schedule,
     ledger: &mut Ledger,
     mut trace: Trace,
 ) -> Vec<f64> {
     let m = oracle.m();
     assert_eq!(y.len(), m);
+    assert_eq!(sched.m(), m, "schedule must cover the oracle's rows");
     let (nu, omega) = p.variant.nu_omega(p.c);
-    let mut rng = Pcg::new(p.seed, SVM_COORD_STREAM);
     let mut alpha = vec![0.0; m];
 
     let outer = p.h.div_ceil(s);
@@ -290,11 +327,9 @@ fn dcd_sstep_pipelined<O: GramOracle>(
     // Prologue: draw block 0 and post its gram. `sample` always holds
     // the in-flight (most recently posted) block's coordinates;
     // `next_sample` is the staging buffer for the block after it.
-    let mut sample = vec![0usize; s];
-    let mut next_sample = vec![0usize; s];
-    for sj in sample.iter_mut().take(size_of(0)) {
-        *sj = rng.gen_below(m);
-    }
+    let mut sample = Vec::with_capacity(s);
+    let mut next_sample = Vec::with_capacity(s);
+    sched.next_call(size_of(0), 1, &mut sample);
     oracle.gram_start(&sample[..size_of(0)], ledger);
 
     for k in 0..outer {
@@ -317,9 +352,7 @@ fn dcd_sstep_pipelined<O: GramOracle>(
         let overlapped = k + 1 < outer;
         if overlapped {
             let s_next = size_of(k + 1);
-            for sj in next_sample.iter_mut().take(s_next) {
-                *sj = rng.gen_below(m);
-            }
+            sched.next_call(s_next, 1, &mut next_sample);
             oracle.gram_start(&next_sample[..s_next], ledger);
         }
 

@@ -41,9 +41,14 @@ mod nystrom;
 pub mod objective;
 mod oracle;
 
-pub use bdcd::{bdcd, bdcd_sstep, KrrParams, KRR_COORD_STREAM};
+pub use bdcd::{
+    bdcd, bdcd_sstep, bdcd_sstep_with_schedule, bdcd_with_schedule, KrrParams, KRR_COORD_STREAM,
+};
 pub use cocoa::{cocoa_svm, CocoaParams, CocoaResult};
-pub use dcd::{dcd, dcd_sstep, SvmParams, SvmVariant, SVM_COORD_STREAM};
+pub use dcd::{
+    dcd, dcd_sstep, dcd_sstep_with_schedule, dcd_with_schedule, SvmParams, SvmVariant,
+    SVM_COORD_STREAM,
+};
 pub use krr_exact::{full_kernel_matrix, krr_exact};
 pub use nystrom::NystromGram;
 pub use oracle::{DistGram, GridGram, LocalGram};

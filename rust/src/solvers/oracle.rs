@@ -83,6 +83,12 @@ impl LocalGram {
     pub fn kernel(&self) -> Kernel {
         self.engine.kernel().expect("local pipeline has an epilogue")
     }
+
+    /// Read-only kernel-row cache residency probe (never touches
+    /// recency); schedules cross-check their shadow replica with it.
+    pub fn cache_resident(&self, row: usize) -> bool {
+        self.engine.cache_resident(row)
+    }
 }
 
 impl GramOracle for LocalGram {
@@ -172,6 +178,12 @@ impl<'c, C: Communicator> DistGram<'c, C> {
     /// This rank's id.
     pub fn rank(&self) -> usize {
         self.engine.reduce_stage().rank()
+    }
+
+    /// Read-only kernel-row cache residency probe (never touches
+    /// recency); schedules cross-check their shadow replica with it.
+    pub fn cache_resident(&self, row: usize) -> bool {
+        self.engine.cache_resident(row)
     }
 
     /// Select the communication-overlap mode (default
@@ -363,6 +375,12 @@ impl<'c, C: Communicator> GridGram<'c, C> {
             Some(shard) => shard.nnz(),
             None => inner.owned_nnz(),
         }
+    }
+
+    /// Read-only kernel-row cache residency probe (never touches
+    /// recency); schedules cross-check their shadow replica with it.
+    pub fn cache_resident(&self, row: usize) -> bool {
+        self.engine.cache_resident(row)
     }
 
     /// Select the communication-overlap mode (default

@@ -157,6 +157,24 @@ pub fn env_overlap() -> crate::gram::OverlapMode {
         .unwrap_or(crate::gram::OverlapMode::Off)
 }
 
+/// Coordinate-schedule kind for schedule-aware tests: the `SCHEDULE`
+/// environment variable (`uniform` / `shuffle` / `locality`),
+/// defaulting to `Uniform` — the schedule analog of [`env_overlap`].
+/// The CI matrix runs one lane with `SCHEDULE=locality` (on the
+/// sharded-grid lane, where the exchange-minimizing scoring has a
+/// substrate), so every property that folds `env_schedule()` into its
+/// schedule sweep exercises the locality-aware sampler under real
+/// cache and fragment-exchange pressure. A fixed schedule spec is
+/// bitwise invariant to threads/cache/storage/overlap, so assertions
+/// are unchanged.
+pub fn env_schedule() -> crate::schedule::ScheduleSpec {
+    std::env::var("SCHEDULE")
+        .ok()
+        .and_then(|s| crate::schedule::ScheduleKind::parse(s.trim()))
+        .map(crate::schedule::ScheduleSpec::of)
+        .unwrap_or_default()
+}
+
 /// Assert two slices are elementwise close.
 #[track_caller]
 pub fn assert_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
@@ -232,6 +250,18 @@ mod tests {
         // one of the three real overlap modes.
         let m = env_overlap();
         assert!(crate::gram::OverlapMode::all().contains(&m));
+    }
+
+    #[test]
+    fn env_schedule_yields_a_valid_spec() {
+        // Whatever the environment says (including the CI
+        // SCHEDULE=locality lane and malformed values), the result is
+        // a spec whose kind round-trips through the CLI name set.
+        let spec = env_schedule();
+        assert_eq!(
+            crate::schedule::ScheduleKind::parse(spec.kind.name()),
+            Some(spec.kind)
+        );
     }
 
     #[test]

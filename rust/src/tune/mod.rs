@@ -61,6 +61,7 @@ use crate::costmodel::{
 use crate::data::Dataset;
 use crate::gram::{GridStorage, Layout, OverlapMode};
 use crate::kernelfn::Kernel;
+use crate::schedule::{ScheduleKind, ScheduleSpec};
 
 /// Block-cyclic row-block candidates for grid layouts (the ROADMAP
 /// `row_block` follow-on): a small deterministic set spanning pure
@@ -218,6 +219,13 @@ pub struct Candidate {
     /// candidate's shape are enumerated (`Off` for the rest — an inert
     /// mode scores identically and would just pad the report).
     pub overlap: OverlapMode,
+    /// Coordinate schedule ([`ScheduleSpec`]). The locality-aware kind
+    /// is enumerated only where it has traffic to save — sharded grid
+    /// candidates, whose fragment-exchange replica replays the
+    /// schedule's exact sample stream (its `groups`/`group_block` are
+    /// preset to the candidate's `pr`/`row_block`); everywhere else the
+    /// count replica is schedule-invariant and only `Uniform` is scored.
+    pub schedule: ScheduleSpec,
     /// False when the request's `--mem-limit` budget is smaller than
     /// this candidate's per-rank memory model — the candidate then ranks
     /// after every feasible one.
@@ -320,6 +328,9 @@ impl Candidate {
         if self.overlap != OverlapMode::Off {
             out.push_str(&format!(" --overlap {}", self.overlap.name()));
         }
+        if self.schedule.kind != ScheduleKind::Uniform {
+            out.push_str(&format!(" --schedule {}", self.schedule.kind.name()));
+        }
         out.push_str(&format!(" --s {} --h {h}", self.s));
         out
     }
@@ -342,8 +353,8 @@ pub struct TunedPlan {
     pub dataset: String,
     /// All candidates, memory-feasible ones first, then by predicted
     /// total time (ties broken deterministically by
-    /// `(pr, storage, row_block, overlap, t, s)` — the ranking is
-    /// invariant under candidate enumeration order).
+    /// `(pr, storage, row_block, overlap, schedule, t, s)` — the ranking
+    /// is invariant under candidate enumeration order).
     pub candidates: Vec<Candidate>,
 }
 
@@ -376,6 +387,27 @@ pub fn overlap_candidates(pr: usize, pc: usize, storage: GridStorage, s: usize) 
     }
     if s > 1 && pc > 1 {
         out.push(OverlapMode::Pipeline);
+    }
+    out
+}
+
+/// Coordinate schedules worth scoring for a candidate shape: `Uniform`
+/// always; `LocalityAware` only where the analytic count replica can
+/// tell the difference — sharded grids (`pr > 1`), whose fragment
+/// exchange replays the schedule's exact sample stream. Elsewhere the
+/// replica is sample-count–only, so a non-uniform schedule scores
+/// identically to `Uniform` and is excluded rather than ranked (the
+/// same inert-axis rule as [`overlap_candidates`]). The locality spec
+/// is preset to the candidate's shape: `groups = pr` (one exchange
+/// group per row band) and `group_block = row_block` (pack blocks the
+/// engine tiles by).
+pub fn schedule_candidates(pr: usize, row_block: usize, storage: GridStorage) -> Vec<ScheduleSpec> {
+    let mut out = vec![ScheduleSpec::default()];
+    if pr > 1 && storage == GridStorage::Sharded {
+        let mut locality = ScheduleSpec::of(ScheduleKind::LocalityAware);
+        locality.groups = pr;
+        locality.group_block = row_block;
+        out.push(locality);
     }
     out
 }
@@ -437,46 +469,53 @@ pub fn tune(
                         (ProblemSpec::Krr { .. }, s) => bdcd_sstep_cost(&dims, b, s),
                     };
                     // The count replica depends on (pr, s, storage,
-                    // row_block, overlap) only; threads are a pure
-                    // wall-time knob, so score each ledger once per t.
+                    // row_block, overlap, schedule) only; threads are a
+                    // pure wall-time knob, so score each ledger once
+                    // per t.
                     for overlap in overlap_candidates(pr, pc, storage, s) {
-                        let ledger = if pr == 1 {
-                            analytic_ledger(ds, kernel, problem, s, req.h, req.p, req.algo, overlap)
-                        } else {
-                            grid_analytic_ledger(
-                                ds,
-                                kernel,
-                                problem,
-                                s,
-                                req.h,
-                                pr,
-                                pc,
-                                row_block,
-                                storage,
-                                req.seed,
-                                req.algo,
-                                overlap,
-                            )
-                        };
-                        let mem_feasible = match req.mem_limit_words {
-                            Some(limit) => ledger.mem_per_rank() <= limit,
-                            None => true,
-                        };
-                        for &t in &t_cands {
-                            let predicted = machine.predict(&ledger, t);
-                            candidates.push(Candidate {
-                                pr,
-                                pc,
-                                t,
-                                s,
-                                storage,
-                                row_block,
-                                overlap,
-                                mem_feasible,
-                                predicted,
-                                ledger: ledger.clone(),
-                                theorem,
-                            });
+                        for schedule in schedule_candidates(pr, row_block, storage) {
+                            let ledger = if pr == 1 {
+                                analytic_ledger(
+                                    ds, kernel, problem, s, req.h, req.p, req.algo, overlap,
+                                )
+                            } else {
+                                grid_analytic_ledger(
+                                    ds,
+                                    kernel,
+                                    problem,
+                                    s,
+                                    req.h,
+                                    pr,
+                                    pc,
+                                    row_block,
+                                    storage,
+                                    &schedule,
+                                    req.seed,
+                                    req.algo,
+                                    overlap,
+                                )
+                            };
+                            let mem_feasible = match req.mem_limit_words {
+                                Some(limit) => ledger.mem_per_rank() <= limit,
+                                None => true,
+                            };
+                            for &t in &t_cands {
+                                let predicted = machine.predict(&ledger, t);
+                                candidates.push(Candidate {
+                                    pr,
+                                    pc,
+                                    t,
+                                    s,
+                                    storage,
+                                    row_block,
+                                    overlap,
+                                    schedule,
+                                    mem_feasible,
+                                    predicted,
+                                    ledger: ledger.clone(),
+                                    theorem,
+                                });
+                            }
                         }
                     }
                 }
@@ -498,10 +537,11 @@ pub fn tune(
 /// Sort candidates: memory-feasible ones strictly first (the
 /// `--mem-limit` filter — infeasible candidates stay visible at the
 /// bottom instead of vanishing), then by predicted total time, ties
-/// broken by `(pr, storage, row_block, overlap, t, s)` ascending — a
-/// total order over the candidate keys, so the ranking cannot depend on
-/// enumeration order. `Off` sorts before the overlapped modes, so a
-/// zero-benefit overlap never displaces the simpler configuration.
+/// broken by `(pr, storage, row_block, overlap, schedule, t, s)`
+/// ascending — a total order over the candidate keys, so the ranking
+/// cannot depend on enumeration order. `Off` sorts before the
+/// overlapped modes and `Uniform` before the locality-aware schedule,
+/// so a zero-benefit mode never displaces the simpler configuration.
 fn rank_candidates(candidates: &mut [Candidate]) {
     let storage_key = |c: &Candidate| match c.storage {
         GridStorage::Replicated => 0u8,
@@ -511,6 +551,11 @@ fn rank_candidates(candidates: &mut [Candidate]) {
         OverlapMode::Off => 0u8,
         OverlapMode::Exchange => 1u8,
         OverlapMode::Pipeline => 2u8,
+    };
+    let schedule_key = |c: &Candidate| match c.schedule.kind {
+        ScheduleKind::Uniform => 0u8,
+        ScheduleKind::ShuffledEpochs => 1u8,
+        ScheduleKind::LocalityAware => 2u8,
     };
     candidates.sort_unstable_by(|a, b| {
         b.mem_feasible
@@ -524,6 +569,7 @@ fn rank_candidates(candidates: &mut [Candidate]) {
             .then_with(|| storage_key(a).cmp(&storage_key(b)))
             .then_with(|| a.row_block.cmp(&b.row_block))
             .then_with(|| overlap_key(a).cmp(&overlap_key(b)))
+            .then_with(|| schedule_key(a).cmp(&schedule_key(b)))
             .then_with(|| a.t.cmp(&b.t))
             .then_with(|| a.s.cmp(&b.s))
     });
@@ -589,11 +635,13 @@ mod tests {
         let plan = tune(&ds, Kernel::paper_rbf(), &svm(), &req, &machine);
         // 1D: (s=1 → off) + (s=4 → off, pipeline) = 3 ledgers × 2 t = 6.
         // Grids 2x3 and 3x2: replicated 3 row blocks × (1 + 2)
-        // overlap-by-s = 9, sharded 3 × (2 + 3) = 15 (exchange joins
-        // the axis), so 24 ledgers × 2 t = 48 each. Grid 6x1 has a
-        // single-member reduce, so pipeline drops off the axis:
-        // replicated 3 × 2 + sharded 3 × 4 = 18 ledgers × 2 t = 36.
-        assert_eq!(plan.candidates.len(), 6 + 2 * 48 + 36);
+        // overlap-by-s = 9 (uniform only), sharded 3 × (2 + 3) = 15
+        // (exchange joins the axis) × 2 schedules (the locality-aware
+        // schedule joins on sharded grids) = 30, so 39 ledgers × 2 t =
+        // 78 each. Grid 6x1 has a single-member reduce, so pipeline
+        // drops off the axis: replicated 3 × 2 = 6 + sharded
+        // 3 × 4 × 2 schedules = 24, so 30 ledgers × 2 t = 60.
+        assert_eq!(plan.candidates.len(), 6 + 2 * 78 + 60);
         let best = plan.best().predicted.total_secs();
         for c in &plan.candidates {
             assert!(c.predicted.total_secs() >= best);
@@ -631,6 +679,7 @@ mod tests {
                     .iter()
                     .find(|o| {
                         o.overlap == OverlapMode::Off
+                            && o.schedule == c.schedule
                             && (o.pr, o.pc, o.storage, o.row_block, o.t, o.s)
                                 == (c.pr, c.pc, c.storage, c.row_block, c.t, c.s)
                     })
@@ -638,6 +687,33 @@ mod tests {
                 assert!(c.predicted.total_secs() <= off.predicted.total_secs());
                 assert_eq!(c.ledger.comm.words, off.ledger.comm.words);
                 assert!(c.ledger.comm_posted.words > 0, "enumerated overlap must post");
+            }
+        }
+        // The schedule axis is enumerated where the count replica can
+        // tell the difference — the locality-aware schedule appears on
+        // sharded grids only, preset to the candidate's shape, and its
+        // uniform twin stays in the plan alongside it.
+        assert!(plan
+            .candidates
+            .iter()
+            .any(|c| c.schedule.kind == ScheduleKind::LocalityAware));
+        for c in &plan.candidates {
+            if c.schedule.kind == ScheduleKind::Uniform {
+                assert_eq!(c.schedule, ScheduleSpec::default());
+            } else {
+                assert_eq!(c.schedule.kind, ScheduleKind::LocalityAware);
+                assert!(c.pr > 1 && c.storage == GridStorage::Sharded, "inert schedule");
+                assert_eq!(c.schedule.groups, c.pr);
+                assert_eq!(c.schedule.group_block, c.row_block);
+                plan.candidates
+                    .iter()
+                    .find(|u| {
+                        u.schedule.kind == ScheduleKind::Uniform
+                            && u.overlap == c.overlap
+                            && (u.pr, u.pc, u.storage, u.row_block, u.t, u.s)
+                                == (c.pr, c.pc, c.storage, c.row_block, c.t, c.s)
+                    })
+                    .expect("uniform twin exists");
             }
         }
         // Sharded grids at equal (pr, pc, row_block, s) never move fewer
@@ -689,6 +765,7 @@ mod tests {
             assert_eq!(spec.grid_storage, c.storage);
             assert_eq!(spec.row_block, c.row_block);
             assert_eq!(spec.overlap, c.overlap);
+            assert_eq!(spec.schedule, c.schedule);
             if c.pr == 1 {
                 assert_eq!(spec.grid, None);
             }
@@ -714,6 +791,14 @@ mod tests {
                 );
             } else {
                 assert!(!hint.contains("--overlap"), "{hint}");
+            }
+            if c.schedule.kind != ScheduleKind::Uniform {
+                assert!(
+                    hint.contains(&format!("--schedule {}", c.schedule.kind.name())),
+                    "{hint}"
+                );
+            } else {
+                assert!(!hint.contains("--schedule"), "{hint}");
             }
         }
         let krr_hint = plan.best().cli_hint(&ProblemSpec::Krr { lambda: 1.0, b: 2 }, 32);

@@ -12,8 +12,9 @@ use super::{Candidate, CrossCheck, TunedPlan};
 /// compares against measured execution).
 pub fn tune_table(plan: &TunedPlan, top: usize) -> Table {
     let mut t = Table::new(vec![
-        "rank", "layout", "storage", "rb", "overlap", "t", "s", "total (s)", "compute (s)",
-        "bandwidth (s)", "latency (s)", "bound", "words", "rounds", "mem (MB)", "fit",
+        "rank", "layout", "storage", "rb", "overlap", "sched", "t", "s", "total (s)",
+        "compute (s)", "bandwidth (s)", "latency (s)", "bound", "words", "rounds", "mem (MB)",
+        "fit",
     ]);
     for (i, c) in plan.candidates.iter().take(top.max(1)).enumerate() {
         t.row(vec![
@@ -22,6 +23,7 @@ pub fn tune_table(plan: &TunedPlan, top: usize) -> Table {
             c.storage_tag().to_string(),
             c.row_block.to_string(),
             c.overlap.name().to_string(),
+            c.schedule.kind.name().to_string(),
             c.t.to_string(),
             c.s.to_string(),
             format!("{:.4e}", c.predicted.total_secs()),
@@ -78,7 +80,8 @@ pub fn tune_json(plan: &TunedPlan, top: usize, xval: Option<&CrossCheck>) -> Str
 fn candidate_json(c: &Candidate, rank: usize) -> String {
     format!(
         "{{\"rank\":{rank},\"pr\":{},\"pc\":{},\"t\":{},\"s\":{},\
-         \"storage\":{},\"row_block\":{},\"overlap\":{},\"mem_words\":{},\"mem_feasible\":{},\
+         \"storage\":{},\"row_block\":{},\"overlap\":{},\"schedule\":{},\
+         \"mem_words\":{},\"mem_feasible\":{},\
          \"predicted\":{{\"total_secs\":{},\"compute_secs\":{},\
          \"bandwidth_secs\":{},\"latency_secs\":{},\"bound\":{}}},\
          \"traffic\":{{\"words\":{},\"rounds\":{},\"msgs\":{},\"allreduces\":{},\
@@ -92,6 +95,7 @@ fn candidate_json(c: &Candidate, rank: usize) -> String {
         json_str(c.storage.name()),
         c.row_block,
         json_str(c.overlap.name()),
+        json_str(c.schedule.label().as_str()),
         c.mem_words(),
         c.mem_feasible,
         json_f64(c.predicted.total_secs()),
@@ -214,6 +218,7 @@ mod tests {
             "\"mem_feasible\":",
             "\"exchange_words\":",
             "\"overlap\":",
+            "\"schedule\":",
             "\"posted_words\":",
         ] {
             assert!(js.contains(key), "missing {key} in {js}");

@@ -155,11 +155,12 @@ mod tests {
             let check = cross_validate(&ds, Kernel::paper_rbf(), &problem, c, &req, &machine);
             assert!(
                 check.traffic_exact(),
-                "pr={} pc={} t={} s={}: {}",
+                "pr={} pc={} t={} s={} sched={}: {}",
                 c.pr,
                 c.pc,
                 c.t,
                 c.s,
+                c.schedule.label(),
                 check.summary()
             );
             assert!(

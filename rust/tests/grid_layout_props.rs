@@ -668,6 +668,7 @@ fn prop_sharded_mem_shrinks_with_pr_and_matches_measured() {
                 pc,
                 solver.row_block,
                 storage,
+                &kcd::schedule::ScheduleSpec::default(),
                 3,
                 AllreduceAlgo::Rabenseifner,
                 OverlapMode::Off,

@@ -1,0 +1,510 @@
+//! Property suite for the coordinate-schedule subsystem
+//! (`kcd::schedule`), pinning the acceptance matrix of the schedule
+//! determinism contract (see the module docs):
+//!
+//! * **Uniform ≡ pre-schedule bitwise** — the `Uniform` schedule
+//!   replays the raw `SVM_COORD_STREAM` / `KRR_COORD_STREAM` PCG draws
+//!   bit for bit, so every legacy entry point (`dcd`, `dcd_sstep`,
+//!   `bdcd`, `bdcd_sstep`) equals its `*_with_schedule` form under an
+//!   explicitly-built `Uniform` — the default schedule changes nothing.
+//! * **Bitwise invariance to engine knobs** — for a *fixed*
+//!   `ScheduleSpec`, the solve is bitwise-invariant to threads, cache
+//!   capacity, `row_block`, grid storage mode and overlap mode, for
+//!   every schedule kind (the locality-aware shadow LRU reads its own
+//!   `shadow_rows`, never the engine), plus the CI lane's `SCHEDULE`
+//!   value via `testkit::env_schedule`.
+//! * **Locality beats uniform where it aims to** — on a repeat-heavy
+//!   cached sharded-grid workload the locality-aware schedule delivers
+//!   a strictly higher measured kernel-row cache hit rate AND strictly
+//!   fewer measured fragment-exchange words than uniform sampling.
+//! * **Analytic ≡ measured for every schedule** — the analytic grid
+//!   ledger replays the schedule's exact sample stream, so its
+//!   exchange/traffic counters equal measured `CommStats` for the
+//!   non-uniform kinds too.
+//! * **Shadow ≡ real cache** — the locality-aware schedule's shadow
+//!   LRU tracks the real engine cache's residency row for row when
+//!   both are sized equally (`cache_resident` probe).
+
+use kcd::comm::AllreduceAlgo;
+use kcd::coordinator::scaling::grid_analytic_ledger;
+use kcd::coordinator::{run_distributed, ProblemSpec, SolverSpec};
+use kcd::costmodel::{Ledger, MachineProfile};
+use kcd::data::gen_dense_classification;
+use kcd::dense::Mat;
+use kcd::gram::{GridStorage, OverlapMode};
+use kcd::kernelfn::Kernel;
+use kcd::rng::Pcg;
+use kcd::schedule::{
+    build_schedule, call_samples, packed_row_costs, LocalityAware, Schedule, ScheduleKind,
+    ScheduleSpec, Uniform,
+};
+use kcd::solvers::{
+    bdcd, bdcd_sstep, bdcd_sstep_with_schedule, bdcd_with_schedule, dcd, dcd_sstep,
+    dcd_sstep_with_schedule, dcd_with_schedule, GramOracle, KrrParams, LocalGram, SvmParams,
+    SvmVariant, KRR_COORD_STREAM, SVM_COORD_STREAM,
+};
+use kcd::testkit;
+
+fn svm_problem() -> ProblemSpec {
+    ProblemSpec::Svm {
+        c: 1.0,
+        variant: SvmVariant::L1,
+    }
+}
+
+/// A locality-aware spec shaped like the tuner's sharded-grid
+/// candidates: shadow sized to the cache under test, grid-shaped
+/// exchange balancing.
+fn locality_spec(shadow: usize, groups: usize, group_block: usize) -> ScheduleSpec {
+    let mut spec = ScheduleSpec::of(ScheduleKind::LocalityAware);
+    spec.shadow_rows = shadow;
+    spec.pool = 4;
+    spec.groups = groups;
+    spec.group_block = group_block;
+    spec
+}
+
+/// The schedule specs the invariance matrix sweeps: one per kind (the
+/// locality spec with non-trivial grouping), plus the CI lane's
+/// `SCHEDULE` value so the `SCHEDULE=locality` lane genuinely extends
+/// coverage.
+fn spec_matrix() -> Vec<ScheduleSpec> {
+    let mut specs = vec![
+        ScheduleSpec::default(),
+        ScheduleSpec::of(ScheduleKind::ShuffledEpochs),
+        locality_spec(16, 2, 4),
+    ];
+    let env = testkit::env_schedule();
+    if !specs.contains(&env) {
+        specs.push(env);
+    }
+    specs
+}
+
+/// The Uniform schedule IS the pre-schedule sampler: the legacy entry
+/// points equal their `*_with_schedule` forms under an explicit
+/// `Uniform`, and `call_samples` replays the raw PCG draw sequence the
+/// solvers consumed before schedules existed — both coordinate streams
+/// (`b = 1` single draws and `b > 1` without-replacement blocks).
+#[test]
+fn uniform_schedule_is_bitwise_identical_to_pre_schedule_solves() {
+    let ds = gen_dense_classification(26, 8, 0.1, 41);
+    let m = ds.m();
+
+    // Raw stream replay, independent of any solver.
+    let uniform = ScheduleSpec::default();
+    for (stream, b) in [(SVM_COORD_STREAM, 1usize), (KRR_COORD_STREAM, 4)] {
+        let (s, h) = (5usize, 23usize);
+        let calls = call_samples(&uniform, m, 0xFEED, stream, s, h, b, &[]);
+        let mut rng = Pcg::new(0xFEED, stream);
+        let mut done = 0usize;
+        for call in &calls {
+            let s_now = s.min(h - done);
+            assert_eq!(call.len(), s_now * b);
+            let expect: Vec<usize> = if b == 1 {
+                (0..s_now).map(|_| rng.gen_below(m)).collect()
+            } else {
+                (0..s_now)
+                    .flat_map(|_| rng.sample_without_replacement(m, b))
+                    .collect()
+            };
+            assert_eq!(call, &expect, "stream {stream:#x}");
+            done += s_now;
+        }
+        assert_eq!(done, h);
+    }
+
+    // Solver-level equality: legacy wrapper ≡ explicit Uniform schedule.
+    let svm = SvmParams {
+        c: 1.0,
+        variant: SvmVariant::L1,
+        h: 48,
+        seed: 3,
+    };
+    let krr = KrrParams {
+        lambda: 1.0,
+        b: 3,
+        h: 24,
+        seed: 3,
+    };
+    let oracle = || LocalGram::with_cache(ds.a.clone(), Kernel::paper_rbf(), 8);
+    let legacy = dcd(&mut oracle(), &ds.y, &svm, &mut Ledger::new(), None);
+    let mut sched = Uniform::new(m, svm.seed, SVM_COORD_STREAM);
+    let explicit = dcd_with_schedule(
+        &mut oracle(),
+        &ds.y,
+        &svm,
+        &mut sched,
+        &mut Ledger::new(),
+        None,
+    );
+    assert_eq!(legacy, explicit, "dcd");
+
+    let legacy = dcd_sstep(&mut oracle(), &ds.y, &svm, 6, &mut Ledger::new(), None);
+    let mut sched = Uniform::new(m, svm.seed, SVM_COORD_STREAM);
+    let explicit = dcd_sstep_with_schedule(
+        &mut oracle(),
+        &ds.y,
+        &svm,
+        6,
+        &mut sched,
+        &mut Ledger::new(),
+        None,
+    );
+    assert_eq!(legacy, explicit, "dcd_sstep");
+
+    let legacy = bdcd(&mut oracle(), &ds.y, &krr, &mut Ledger::new(), None);
+    let mut sched = Uniform::new(m, krr.seed, KRR_COORD_STREAM);
+    let explicit = bdcd_with_schedule(
+        &mut oracle(),
+        &ds.y,
+        &krr,
+        &mut sched,
+        &mut Ledger::new(),
+        None,
+    );
+    assert_eq!(legacy, explicit, "bdcd");
+
+    let legacy = bdcd_sstep(&mut oracle(), &ds.y, &krr, 4, &mut Ledger::new(), None);
+    let mut sched = Uniform::new(m, krr.seed, KRR_COORD_STREAM);
+    let explicit = bdcd_sstep_with_schedule(
+        &mut oracle(),
+        &ds.y,
+        &krr,
+        4,
+        &mut sched,
+        &mut Ledger::new(),
+        None,
+    );
+    assert_eq!(legacy, explicit, "bdcd_sstep");
+}
+
+/// The headline determinism contract: for a fixed `ScheduleSpec` the
+/// solve is bitwise-invariant to every engine knob — threads, cache
+/// capacity, `row_block`, grid storage and overlap mode — for every
+/// schedule kind. The locality-aware spec keeps its own `shadow_rows`
+/// and `group_block`, so varying the *engine's* cache and row block
+/// must not move a bit.
+#[test]
+fn prop_solves_are_bitwise_invariant_to_engine_knobs_for_every_schedule() {
+    let ds = gen_dense_classification(18, 6, 0.1, 55);
+    let problems = [svm_problem(), ProblemSpec::Krr { lambda: 1.0, b: 3 }];
+    let machine = MachineProfile::cray_ex();
+    for spec in spec_matrix() {
+        for problem in &problems {
+            let base = SolverSpec {
+                s: 5,
+                h: 24,
+                seed: 9,
+                schedule: spec,
+                ..Default::default()
+            };
+            // Serial knobs: threads and cache capacity.
+            let reference = run_distributed(
+                &ds,
+                Kernel::paper_rbf(),
+                problem,
+                &base,
+                1,
+                AllreduceAlgo::Rabenseifner,
+                &machine,
+            )
+            .alpha;
+            for (threads, cache_rows) in [(3usize, 16usize), (testkit::env_threads(), 8)] {
+                let solver = SolverSpec {
+                    threads,
+                    cache_rows,
+                    ..base
+                };
+                let alpha = run_distributed(
+                    &ds,
+                    Kernel::paper_rbf(),
+                    problem,
+                    &solver,
+                    1,
+                    AllreduceAlgo::Rabenseifner,
+                    &machine,
+                )
+                .alpha;
+                assert_eq!(
+                    alpha,
+                    reference,
+                    "{} {}: t={threads} cache={cache_rows}",
+                    spec.label(),
+                    problem.name()
+                );
+            }
+            // Grid knobs: the 2x2 grid over 4 ranks must replay the 1D
+            // solve over pc = 2 ranks for both storage modes, several
+            // row blocks and every applicable overlap mode.
+            let ref_1d = run_distributed(
+                &ds,
+                Kernel::paper_rbf(),
+                problem,
+                &base,
+                2,
+                AllreduceAlgo::Rabenseifner,
+                &machine,
+            )
+            .alpha;
+            for storage in [GridStorage::Replicated, GridStorage::Sharded] {
+                for row_block in [2usize, 5] {
+                    for overlap in [OverlapMode::Off, OverlapMode::Exchange, OverlapMode::Pipeline]
+                    {
+                        let solver = SolverSpec {
+                            grid: Some((2, 2)),
+                            grid_storage: storage,
+                            row_block,
+                            overlap,
+                            cache_rows: 16,
+                            threads: 2,
+                            ..base
+                        };
+                        let alpha = run_distributed(
+                            &ds,
+                            Kernel::paper_rbf(),
+                            problem,
+                            &solver,
+                            4,
+                            AllreduceAlgo::Rabenseifner,
+                            &machine,
+                        )
+                        .alpha;
+                        assert_eq!(
+                            alpha,
+                            ref_1d,
+                            "{} {}: {} rb={row_block} overlap={}",
+                            spec.label(),
+                            problem.name(),
+                            storage.name(),
+                            overlap.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The perf acceptance criterion: on a repeat-heavy cached sharded 2x2
+/// workload the locality-aware schedule is *strictly* better than
+/// uniform sampling on both counters it optimizes — measured kernel-row
+/// cache hit rate up, measured fragment-exchange words down. (The
+/// shadow is sized to the real cache, pool 4, groups matching `pr`,
+/// exactly like the tuner's sharded-grid candidates.)
+#[test]
+fn locality_schedule_beats_uniform_on_repeat_heavy_sharded_cached_grid() {
+    let ds = gen_dense_classification(64, 12, 0.1, 23);
+    let machine = MachineProfile::cray_ex();
+    let (row_block, cache_rows) = (4usize, 16usize);
+    let run = |schedule: ScheduleSpec| {
+        let solver = SolverSpec {
+            s: 8,
+            h: 256,
+            seed: 5,
+            cache_rows,
+            grid: Some((2, 2)),
+            grid_storage: GridStorage::Sharded,
+            row_block,
+            schedule,
+            ..Default::default()
+        };
+        let out = run_distributed(
+            &ds,
+            Kernel::paper_rbf(),
+            &svm_problem(),
+            &solver,
+            4,
+            AllreduceAlgo::Rabenseifner,
+            &machine,
+        );
+        assert!(out.alpha.iter().all(|a| a.is_finite()));
+        // The sample stream (and so every hit/miss decision) is
+        // replicated across ranks; exchange words are summed because
+        // the ring's per-rank share varies with group ownership.
+        for l in &out.per_rank {
+            assert_eq!(l.cache.hits, out.per_rank[0].cache.hits);
+            assert_eq!(l.cache.misses, out.per_rank[0].cache.misses);
+        }
+        let words: u64 = out.per_rank.iter().map(|l| l.comm_exch.words).sum();
+        (out.critical.cache, words)
+    };
+    let (uni_cache, uni_words) = run(ScheduleSpec::default());
+    let (loc_cache, loc_words) = run(locality_spec(cache_rows, 2, row_block));
+    assert!(
+        loc_cache.hit_rate() > uni_cache.hit_rate(),
+        "locality must strictly raise the cache hit rate: {:.3} vs {:.3}",
+        loc_cache.hit_rate(),
+        uni_cache.hit_rate()
+    );
+    assert!(
+        loc_words < uni_words,
+        "locality must strictly cut exchange words: {loc_words} vs {uni_words}"
+    );
+    // Sanity on the magnitude: uniform's hit rate on a 16-row cache
+    // over 64 rows hovers near 1/4; greedy best-of-4 selection should
+    // clear it by a wide margin, not by luck of a tie-break.
+    assert!(
+        loc_cache.hit_rate() - uni_cache.hit_rate() > 0.1,
+        "expected a decisive gap, got {:.3} vs {:.3}",
+        loc_cache.hit_rate(),
+        uni_cache.hit_rate()
+    );
+}
+
+/// The analytic grid ledger replays the *schedule's* sample stream, so
+/// its traffic counters must equal measured execution for the
+/// non-uniform kinds too (uniform is pinned in
+/// `coordinator::scaling::tests`): total/col/row/exchange words and
+/// rounds, exchange msgs, kernel call/row counts and the memory model,
+/// for both problems on a sharded grid.
+#[test]
+fn analytic_replicas_match_measured_for_non_uniform_schedules() {
+    let machine = MachineProfile::cray_ex();
+    let ds = gen_dense_classification(24, 16, 0.05, 12);
+    let problems = [svm_problem(), ProblemSpec::Krr { lambda: 1.0, b: 3 }];
+    let row_block = 3usize;
+    let specs = [
+        ScheduleSpec::of(ScheduleKind::ShuffledEpochs),
+        locality_spec(16, 2, row_block),
+    ];
+    for spec in specs {
+        for problem in &problems {
+            for (pr, pc) in [(2usize, 2usize), (2, 3)] {
+                for s in [1usize, 4] {
+                    let h = 16;
+                    let solver = SolverSpec {
+                        s,
+                        h,
+                        seed: 77,
+                        grid: Some((pr, pc)),
+                        grid_storage: GridStorage::Sharded,
+                        row_block,
+                        schedule: spec,
+                        ..Default::default()
+                    };
+                    let measured = run_distributed(
+                        &ds,
+                        Kernel::paper_rbf(),
+                        problem,
+                        &solver,
+                        pr * pc,
+                        AllreduceAlgo::Rabenseifner,
+                        &machine,
+                    )
+                    .critical;
+                    let analytic = grid_analytic_ledger(
+                        &ds,
+                        Kernel::paper_rbf(),
+                        problem,
+                        s,
+                        h,
+                        pr,
+                        pc,
+                        row_block,
+                        GridStorage::Sharded,
+                        &spec,
+                        77,
+                        AllreduceAlgo::Rabenseifner,
+                        OverlapMode::Off,
+                    );
+                    let tag = format!("{} {} {pr}x{pc} s={s}", spec.label(), problem.name());
+                    for (which, a, m) in [
+                        ("total", analytic.comm, measured.comm),
+                        ("col", analytic.comm_col, measured.comm_col),
+                        ("row", analytic.comm_row, measured.comm_row),
+                        ("exch", analytic.comm_exch, measured.comm_exch),
+                    ] {
+                        assert_eq!(a.words, m.words, "{tag} {which} words");
+                        assert_eq!(a.rounds, m.rounds, "{tag} {which} rounds");
+                    }
+                    assert_eq!(
+                        analytic.comm_exch.msgs, measured.comm_exch.msgs,
+                        "{tag} exch msgs"
+                    );
+                    assert_eq!(analytic.kernel_calls, measured.kernel_calls, "{tag}");
+                    assert_eq!(analytic.kernel_rows, measured.kernel_rows, "{tag}");
+                    assert_eq!(analytic.mem_per_rank(), measured.mem_per_rank(), "{tag}");
+                    assert!(analytic.comm_exch.words > 0, "{tag}");
+                }
+            }
+        }
+    }
+}
+
+/// The locality-aware shadow LRU replays the real `RowCache`'s
+/// classify/commit semantics exactly: drive a cached `LocalGram` with
+/// the schedule's own stream and, after every call, the shadow's
+/// residency must equal the engine's (`cache_resident`) for all rows —
+/// including with-replacement repeats and within-call duplicates.
+#[test]
+fn shadow_lru_tracks_real_cache_residency_row_for_row() {
+    let ds = gen_dense_classification(40, 8, 0.1, 66);
+    let m = ds.m();
+    for capacity in [4usize, 8, 16] {
+        let mut spec = locality_spec(capacity, 0, 4);
+        spec.pool = 3;
+        let mut sched = LocalityAware::new(m, 0xCAFE, SVM_COORD_STREAM, &spec, &[]);
+        let mut oracle = LocalGram::with_cache(ds.a.clone(), Kernel::paper_rbf(), capacity);
+        let mut sample = Vec::new();
+        let mut q = Mat::zeros(4, m);
+        let mut ledger = Ledger::new();
+        for call in 0..48 {
+            sched.next_call(4, 1, &mut sample);
+            oracle.gram(&sample, &mut q, &mut ledger);
+            for row in 0..m {
+                assert_eq!(
+                    sched.shadow_resident(row),
+                    oracle.cache_resident(row),
+                    "capacity={capacity} call={call} row={row}"
+                );
+            }
+        }
+        assert!(ledger.cache.hits > 0, "capacity={capacity}: stream must re-hit");
+    }
+}
+
+/// `call_samples` is the single replay primitive the analytic ledgers
+/// build on: replaying it twice (or via `build_schedule` driven by
+/// hand) yields identical streams, every call has the exact `s_now · b`
+/// shape, all indices are in range, and within-block draws are
+/// distinct for every schedule kind.
+#[test]
+fn call_samples_replays_exactly_and_respects_block_shape() {
+    let ds = gen_dense_classification(30, 6, 0.1, 19);
+    let m = ds.m();
+    let row_cost = packed_row_costs(&ds.a);
+    assert_eq!(row_cost.len(), m);
+    for spec in spec_matrix() {
+        for (stream, b) in [(SVM_COORD_STREAM, 1usize), (KRR_COORD_STREAM, 3)] {
+            let (s, h) = (4usize, 18usize);
+            let a = call_samples(&spec, m, 7, stream, s, h, b, &row_cost);
+            let bb = call_samples(&spec, m, 7, stream, s, h, b, &row_cost);
+            assert_eq!(a, bb, "{}: replay must be bitwise", spec.label());
+            // Hand-driven schedule sees the identical stream.
+            let mut sched = build_schedule(&spec, m, 7, stream, &row_cost);
+            let mut buf = Vec::new();
+            let mut done = 0usize;
+            for call in &a {
+                let s_now = s.min(h - done);
+                sched.next_call(s_now, b, &mut buf);
+                assert_eq!(&buf, call, "{}", spec.label());
+                assert_eq!(call.len(), s_now * b);
+                for block in call.chunks(b) {
+                    for (i, &t) in block.iter().enumerate() {
+                        assert!(t < m);
+                        if b > 1 {
+                            assert!(
+                                !block[..i].contains(&t),
+                                "{}: within-block duplicate",
+                                spec.label()
+                            );
+                        }
+                    }
+                }
+                done += s_now;
+            }
+            assert_eq!(done, h);
+        }
+    }
+}

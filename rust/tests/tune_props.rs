@@ -70,6 +70,7 @@ fn prop_candidate_traffic_equals_analytic_ledgers_exactly() {
                         c.pc,
                         c.row_block,
                         c.storage,
+                        &c.schedule,
                         req.seed,
                         req.algo,
                         c.overlap,

@@ -113,6 +113,7 @@ const DET_MODULES: &[&str] = &[
     "costmodel",
     "gram",
     "parallel",
+    "schedule",
     "serve",
     "solvers",
     "sparse",
@@ -325,6 +326,7 @@ mod tests {
     fn classify_paths() {
         assert_eq!(classify("gram/engine.rs"), ModuleClass::Deterministic);
         assert_eq!(classify("costmodel/mod.rs"), ModuleClass::Deterministic);
+        assert_eq!(classify("schedule/mod.rs"), ModuleClass::Deterministic);
         assert_eq!(classify("util/mod.rs"), ModuleClass::TimingOk);
         assert_eq!(classify("coordinator/scaling.rs"), ModuleClass::TimingOk);
         assert_eq!(classify("cli.rs"), ModuleClass::Other);
